@@ -1,0 +1,107 @@
+//! Bench: solver-feature ablations (DESIGN.md "Ablations").
+//!
+//! Measures time-to-optimal (or best-found-within-budget) with each
+//! feature disabled in turn: objective bound, capacity bound, hints,
+//! best-fit ordering, symmetry skipping, LNS. The paper reports
+//! symmetry-breaking "did not improve the solving time" — compare the
+//! `no-symmetry` row.
+
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::SolverConfig;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::workload::{GenParams, Instance};
+
+fn main() {
+    let params = GenParams {
+        nodes: 8,
+        pods_per_node: 4,
+        priority_tiers: 2,
+        usage: 1.0,
+    };
+    let insts = Instance::generate_challenging(params, 3, 123, 300);
+    if insts.is_empty() {
+        println!("no challenging instances; nothing to ablate");
+        return;
+    }
+    let states: Vec<_> = insts
+        .iter()
+        .map(|inst| {
+            let mut sim = KwokSimulator::new(inst.params.p_max());
+            let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            state
+        })
+        .collect();
+
+    let variants: Vec<(&str, SolverConfig)> = vec![
+        ("full", SolverConfig::default()),
+        (
+            "no-bound",
+            SolverConfig {
+                use_bound: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "no-capacity-bound",
+            SolverConfig {
+                use_capacity_bound: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "no-hints",
+            SolverConfig {
+                use_hints: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "no-best-fit",
+            SolverConfig {
+                use_best_fit: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "no-symmetry",
+            SolverConfig {
+                use_symmetry: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "no-lns",
+            SolverConfig {
+                use_lns: false,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    let b = Bencher::new(0, 3, std::time::Duration::from_secs(60));
+    for (name, solver) in variants {
+        let cfg = OptimizerConfig {
+            total_timeout: std::time::Duration::from_millis(400),
+            alpha: 0.8,
+            solver,
+        };
+        let mut improved = 0usize;
+        let mut proved = 0usize;
+        b.run(&format!("ablation/{name}"), || {
+            for (inst, state) in insts.iter().zip(&states) {
+                if let Some(res) = optimize(state, inst.params.p_max(), &cfg) {
+                    let base = state.placed_per_priority(inst.params.p_max());
+                    if kube_packd::metrics::lex_better(&res.placed_per_priority, &base) {
+                        improved += 1;
+                    }
+                    if res.proved_optimal {
+                        proved += 1;
+                    }
+                    black_box(&res.target);
+                }
+            }
+        });
+        println!("  -> improved={improved} proved-optimal={proved} (across iterations)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Figure 3 (scaled grid). `cargo bench --bench fig3`.
+//!
+//! Full-scale run: `cargo run --release -- fig3` (see README). Here a
+//! reduced grid keeps `cargo bench` within minutes while exercising the
+//! identical code path and printing the same stacked-bar report.
+
+use kube_packd::harness::figures;
+use kube_packd::harness::grid::GridConfig;
+use kube_packd::util::bench::Bencher;
+
+fn main() {
+    let cfg = GridConfig {
+        nodes: vec![4, 8],
+        pods_per_node: vec![4],
+        priority_tiers: vec![1, 2],
+        usage: vec![1.0, 1.05],
+        timeouts: vec![0.1, 0.3],
+        instances: 4,
+        max_gen_attempts: 200,
+        verbose: false,
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("kp-bench-fig3");
+    std::fs::create_dir_all(&out).unwrap();
+    let out = out.to_str().unwrap().to_string();
+
+    let b = Bencher::heavy();
+    let mut last = String::new();
+    b.run("fig3/reduced-grid", || {
+        last = figures::fig3(&cfg, &out).unwrap();
+    });
+    println!("{last}");
+}

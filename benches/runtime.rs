@@ -1,0 +1,47 @@
+//! Bench: PJRT scorer latency — single-row vs whole-batch execution,
+//! against the native scorer. Quantifies the amortisation the batch
+//! formulation buys (DESIGN.md §Perf, Runtime).
+
+use kube_packd::cluster::ClusterState;
+use kube_packd::runtime::{NativeScorer, XlaScorer};
+use kube_packd::scheduler::default::BatchScorer;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::workload::{GenParams, Instance};
+
+fn main() {
+    let b = Bencher::new(3, 20, std::time::Duration::from_secs(20));
+
+    let inst = Instance::generate(
+        GenParams {
+            nodes: 32,
+            pods_per_node: 8,
+            priority_tiers: 1,
+            usage: 1.0,
+        },
+        11,
+    );
+    let state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+    let pending = state.pending_pods();
+    println!("cluster: {} nodes, {} pending pods", inst.nodes.len(), pending.len());
+
+    let mut native = NativeScorer;
+    b.run("scorer/native-row", || {
+        black_box(native.score_row(&state, pending[0]))
+    });
+    b.run("scorer/native-matrix-256", || {
+        black_box(native.score_matrix(&state, &pending))
+    });
+
+    match XlaScorer::from_artifacts() {
+        Ok(mut xla) => {
+            b.run("scorer/xla-row (1 pod padded to 64)", || {
+                black_box(xla.score_row(&state, pending[0]))
+            });
+            b.run("scorer/xla-matrix-256 (one execute)", || {
+                black_box(xla.score_matrix(&state, &pending))
+            });
+            println!("  total PJRT executions: {}", xla.executions);
+        }
+        Err(e) => println!("skipping XLA benches: {e:#}"),
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: default-scheduler throughput (scheduling cycles per second).
+//!
+//! The paper's design requires the default path to dwarf solver cost;
+//! this bench verifies the L3 scheduler is nowhere near the bottleneck.
+
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::workload::{GenParams, Instance};
+
+fn main() {
+    let b = Bencher::new(2, 10, std::time::Duration::from_secs(30));
+
+    for (nodes, ppn) in [(8usize, 8usize), (32, 8), (32, 16)] {
+        let inst = Instance::generate(
+            GenParams {
+                nodes,
+                pods_per_node: ppn,
+                priority_tiers: 4,
+                usage: 0.95,
+            },
+            7,
+        );
+        let pods = inst.pods.len();
+        let m = b.run(&format!("scheduler/drain-n{nodes}-p{pods}"), || {
+            let mut sim = KwokSimulator::new(3);
+            let (state, res) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            black_box((state.placed_count(), res.bound))
+        });
+        println!(
+            "  -> ~{:.0} scheduling cycles/sec",
+            pods as f64 / m.median_s
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Bench: CP solver micro-benchmarks — time-to-optimal on packing models
+//! of increasing size, plus propagation throughput.
+
+use kube_packd::cluster::ClusterState;
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::{solve_max, LinearExpr, Model, SolverConfig};
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::util::rng::Rng;
+use kube_packd::util::timer::Deadline;
+use kube_packd::workload::{GenParams, Instance};
+
+/// Build a pure packing model (pods × nodes) from a generated instance.
+fn packing_model(inst: &Instance) -> (Model, LinearExpr) {
+    let mut m = Model::new();
+    let mut vars = Vec::new();
+    for _ in &inst.pods {
+        let xs = m.new_vars(inst.nodes.len());
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        vars.push(xs);
+    }
+    let mut cpu_class = Vec::new();
+    let mut ram_class = Vec::new();
+    for (j, n) in inst.nodes.iter().enumerate() {
+        cpu_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&inst.pods).map(|(xs, p)| (xs[j], p.request.cpu))),
+            n.capacity.cpu,
+        );
+        ram_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&inst.pods).map(|(xs, p)| (xs[j], p.request.ram))),
+            n.capacity.ram,
+        );
+    }
+    m.add_resource_class(cpu_class);
+    m.add_resource_class(ram_class);
+    let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+    (m, obj)
+}
+
+fn main() {
+    let b = Bencher::new(1, 8, std::time::Duration::from_secs(30));
+    let mut rng = Rng::new(42);
+
+    for (nodes, ppn) in [(4, 4), (8, 4), (8, 8), (16, 4)] {
+        let inst = Instance::generate(
+            GenParams {
+                nodes,
+                pods_per_node: ppn,
+                priority_tiers: 1,
+                usage: 1.0,
+            },
+            rng.next_u64(),
+        );
+        let (m, obj) = packing_model(&inst);
+        b.run(&format!("solver/pack-n{nodes}-p{}", inst.pods.len()), || {
+            let sol = solve_max(
+                &m,
+                &obj,
+                Deadline::after(std::time::Duration::from_millis(500)),
+                &SolverConfig::default(),
+            );
+            black_box(sol.objective)
+        });
+    }
+
+    // Full Algorithm 1 on a challenging instance (the paper's real unit).
+    for (nodes, tiers) in [(4usize, 2u32), (8, 2), (8, 4)] {
+        let insts = Instance::generate_challenging(
+            GenParams {
+                nodes,
+                pods_per_node: 4,
+                priority_tiers: tiers,
+                usage: 1.0,
+            },
+            1,
+            rng.next_u64(),
+            200,
+        );
+        let Some(inst) = insts.into_iter().next() else { continue };
+        let mut sim = KwokSimulator::new(inst.params.p_max());
+        let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+        let state: ClusterState = state;
+        b.run(&format!("optimize/n{nodes}-t{tiers}-T0.5s"), || {
+            black_box(optimize(
+                &state,
+                inst.params.p_max(),
+                &OptimizerConfig::with_timeout(0.5),
+            ))
+        });
+    }
+}

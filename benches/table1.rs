@@ -1,0 +1,29 @@
+//! Bench: regenerate Table 1 (scaled). `cargo bench --bench table1`.
+
+use kube_packd::harness::figures;
+use kube_packd::harness::grid::GridConfig;
+use kube_packd::util::bench::Bencher;
+
+fn main() {
+    let cfg = GridConfig {
+        nodes: vec![4, 8],
+        pods_per_node: vec![4, 8],
+        priority_tiers: vec![4],
+        usage: vec![0.95, 1.00],
+        timeouts: vec![0.5],
+        instances: 4,
+        max_gen_attempts: 200,
+        verbose: false,
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("kp-bench-table1");
+    std::fs::create_dir_all(&out).unwrap();
+    let out = out.to_str().unwrap().to_string();
+
+    let b = Bencher::heavy();
+    let mut last = String::new();
+    b.run("table1/duration-and-deltas", || {
+        last = figures::table1(&cfg, &out).unwrap();
+    });
+    println!("{last}");
+}

@@ -1,0 +1,130 @@
+//! End-to-end driver: all three layers composed on a realistic workload.
+//!
+//! This is the repo's full-system proof:
+//!
+//! * **L1/L2** — the scheduler's scoring phase executes the AOT-compiled
+//!   XLA artifact (Pallas kernel + JAX graph, built by `make artifacts`)
+//!   through the PJRT runtime — no Python anywhere in this process.
+//! * **L3** — the Rust coordinator: KWOK-style simulator, scheduling
+//!   framework, and the paper's constraint-solver fallback with
+//!   cross-node pre-emption.
+//!
+//! Workload: three tenant waves (batch / web / critical) of ReplicaSets
+//! on a 95–105% loaded 8-node cluster, scheduled wave by wave. Reports
+//! the paper's headline metrics: placements improved, utilisation
+//! delta, solver latency, and scheduler throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_cluster`
+
+use std::time::Instant;
+
+use kube_packd::cluster::{ClusterState, Event};
+use kube_packd::metrics::lex_better;
+use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+use kube_packd::runtime::XlaScorer;
+use kube_packd::scheduler::default::BatchScorer;
+use kube_packd::util::stats;
+use kube_packd::workload::{GenParams, Instance};
+
+fn main() -> anyhow::Result<()> {
+    // --- runtime: load the AOT artifacts (L1+L2) -------------------------
+    let mut xla = match XlaScorer::from_artifacts() {
+        Ok(s) => {
+            println!("PJRT runtime up — scoring on the compiled XLA/Pallas artifact");
+            Some(s)
+        }
+        Err(e) => {
+            println!("(artifacts unavailable: {e:#} — falling back to native scorer)");
+            None
+        }
+    };
+
+    let params = GenParams {
+        nodes: 8,
+        pods_per_node: 6,
+        priority_tiers: 3, // batch=2, web=1, critical=0
+        usage: 1.0,
+    };
+    let waves = 6usize;
+    // Challenging waves: ones the default scheduler cannot fully place
+    // (the paper's dataset construction).
+    let instances = Instance::generate_challenging(params, waves, 4242, waves * 60);
+    let mut improved_count = 0usize;
+    let mut solver_calls = 0usize;
+    let mut solver_latencies = Vec::new();
+    let mut util_before = Vec::new();
+    let mut util_after = Vec::new();
+    let mut total_cycles = 0usize;
+    let mut scorer_checks = 0usize;
+    let t0 = Instant::now();
+
+    for (wave, inst) in instances.iter().enumerate() {
+        let mut state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+
+        // Cross-check a scoring row on the real XLA artifact against the
+        // native formula for this live state (L1/L2 ↔ L3 parity, on the
+        // actual request path data).
+        if let Some(x) = xla.as_mut() {
+            let pending = state.pending_pods();
+            let rows = x.score_matrix(&state, &pending);
+            for (k, &pod) in pending.iter().enumerate() {
+                let native = kube_packd::runtime::NativeScorer.score_row(&state, pod);
+                for (a, b) in rows[k].iter().zip(&native) {
+                    assert!((a - b).abs() < 1e-4, "XLA/native scorer divergence");
+                }
+                scorer_checks += rows[k].len();
+            }
+        }
+
+        let mut sched = OptimizingScheduler::new(params.p_max(), OptimizerConfig::with_timeout(1.0));
+        let report = sched.run(&mut state);
+        state.check_invariants().expect("state corrupt");
+
+        total_cycles += report.default_stats.cycles;
+        let (cpu_b, _) = {
+            // baseline utilisation = utilisation the default pass achieved
+            // (reconstructed from placed_before on an untouched clone)
+            let mut base = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+            let mut k = kube_packd::simulator::KwokSimulator::new(params.p_max());
+            k.run_on(&mut base);
+            base.utilization()
+        };
+        let (cpu_a, _) = state.utilization();
+        util_before.push(cpu_b * 100.0);
+        util_after.push(cpu_a * 100.0);
+
+        if report.solver_invoked {
+            solver_calls += 1;
+            solver_latencies.push(report.solver_wall.as_secs_f64());
+            if report.improved {
+                improved_count += 1;
+                assert!(lex_better(&report.placed_after, &report.placed_before));
+            }
+        }
+        println!(
+            "wave {wave}: placed {:?} -> {:?}  (solver={} improved={} moves={} evictions={})",
+            report.placed_before,
+            report.placed_after,
+            report.solver_invoked,
+            report.improved,
+            report.disruptions,
+            state.events.count(|e| matches!(e, Event::Evict { .. })),
+        );
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n=== end-to-end summary ({waves} waves, {} pods each) ===", params.pod_count());
+    println!("scheduling cycles          : {total_cycles} ({:.0} cycles/s overall wall)", total_cycles as f64 / wall);
+    println!("solver invoked             : {solver_calls}/{waves} waves");
+    println!("placements improved        : {improved_count}/{solver_calls} solver calls");
+    println!("mean solver latency        : {:.3}s (p95 {:.3}s)",
+        stats::mean(&solver_latencies), stats::percentile(&solver_latencies, 95.0));
+    println!("mean cpu util (default)    : {:.1}%", stats::mean(&util_before));
+    println!("mean cpu util (optimised)  : {:.1}%", stats::mean(&util_after));
+    println!("Δ cpu util                 : {:+.1} pp", stats::mean(&util_after) - stats::mean(&util_before));
+    if let Some(x) = &xla {
+        println!("XLA scorer                 : {} PJRT executions, {scorer_checks} scores parity-checked", x.executions);
+    }
+    println!("\ne2e_cluster OK");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Cross-node pre-emption: the capability Kubernetes itself lacks.
+//!
+//! Kubernetes pre-emption operates within a single node; the paper's
+//! plugin performs *cross-node* pre-emption — relocating lower-priority
+//! pods across nodes to admit a pending high-priority pod. This example
+//! builds a cluster where no single-node eviction helps, but a
+//! coordinated two-node shuffle does.
+//!
+//! Run: `cargo run --release --example priority_preemption`
+
+use kube_packd::cluster::{identical_nodes, ClusterState, Event, NodeId, Pod, PodId, Priority, Resources};
+use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+
+fn main() {
+    // Two nodes of 10 CPU. Low-priority pods occupy 6+6 and 5+4 split so
+    // that the pending high-priority pod (9 CPU) fits on neither node,
+    // and no single eviction on one node frees 9 — but moving the 4-CPU
+    // pod from node B to node A (4+6=10) leaves 9 free on B... which is
+    // exactly the coordinated move the solver finds.
+    let nodes = identical_nodes(2, Resources::new(10_000, 10_000));
+    let pods = vec![
+        Pod::new(0, "web-a", Resources::new(6_000, 1_000), Priority(2)),
+        Pod::new(1, "web-b", Resources::new(5_000, 1_000), Priority(2)),
+        Pod::new(2, "web-c", Resources::new(4_000, 1_000), Priority(2)),
+        Pod::new(3, "db-primary", Resources::new(9_000, 2_000), Priority(0)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    state.bind(PodId(0), NodeId(0)).unwrap(); // node A: 6
+    state.bind(PodId(1), NodeId(1)).unwrap(); // node B: 5
+    state.bind(PodId(2), NodeId(1)).unwrap(); // node B: 5+4 = 9
+
+    println!("before: A={:?} B={:?} pending=db-primary(9c, priority 0)\n",
+        state.pods_on(NodeId(0)).len(), state.pods_on(NodeId(1)).len());
+
+    let mut scheduler = OptimizingScheduler::new(2, OptimizerConfig::with_timeout(3.0));
+    let report = scheduler.run(&mut state);
+
+    assert!(report.solver_invoked, "db-primary must pend first");
+    assert!(report.improved, "solver must admit the high-priority pod");
+    assert!(
+        state.assignment_of(PodId(3)).is_some(),
+        "db-primary placed via cross-node pre-emption"
+    );
+
+    println!("placement after cross-node pre-emption:");
+    for pod in state.pods() {
+        println!(
+            "  {:12} prio={} -> {}",
+            pod.name,
+            pod.priority.0,
+            state
+                .assignment_of(pod.id)
+                .map(|n| state.node(n).name.clone())
+                .unwrap_or_else(|| "<pending>".into())
+        );
+    }
+
+    let moves = state.events.count(|e| matches!(e, Event::Evict { .. }));
+    println!("\nevictions performed : {moves}");
+    println!("placed vector       : {:?} (was {:?})", report.placed_after, report.placed_before);
+    println!("priority_preemption OK");
+}

@@ -1,0 +1,71 @@
+"""L1/L2 performance analysis (DESIGN.md §Perf).
+
+Static analysis of the lowered scorer — no execution:
+
+* XLA HLO cost analysis (flops / bytes accessed / peak memory) of the
+  L2 graph per (P, N) variant;
+* Pallas kernel VMEM footprint per grid step and the arithmetic
+  intensity, from which the TPU roofline position is argued (this kernel
+  is bandwidth-bound VPU work; MXU is idle by design).
+
+Usage:  python -m compile.analysis   (from python/)
+"""
+
+import jax
+
+from .aot import SHAPE_VARIANTS
+from .kernels.scoring import DEFAULT_TILE_P
+from .model import scorer_fn
+
+
+def analyze(p: int, n: int) -> dict:
+    f32 = jax.ShapeDtypeStruct((p, 2), jax.numpy.float32)
+    nf = jax.ShapeDtypeStruct((n, 2), jax.numpy.float32)
+    lowered = jax.jit(scorer_fn).lower(f32, nf, nf)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    # jax returns either a dict or a list of dicts depending on version
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+
+    tile_p = min(DEFAULT_TILE_P, p)
+    # VMEM residency per grid step (f32 = 4 bytes):
+    #   pod block (tile_p, 2) + node free/cap (n, 2) x2 + out (tile_p, n)
+    vmem_bytes = 4 * (tile_p * 2 + 2 * n * 2 + tile_p * n)
+    hbm_bytes = 4 * (p * 2 + 2 * n * 2 + p * n + 2 * p)  # in + out + best/feasible
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", hbm_bytes))
+    return {
+        "P": p,
+        "N": n,
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "arith_intensity": flops / max(bytes_accessed, 1.0),
+        "vmem_per_step_bytes": vmem_bytes,
+        "vmem_budget_fraction": vmem_bytes / (16 * 2**20),  # 16 MiB VMEM
+        "grid_steps": p // tile_p,
+    }
+
+
+def main() -> None:
+    print(f"{'variant':>12} {'flops':>10} {'bytes':>10} {'AI':>6} "
+          f"{'VMEM/step':>10} {'%VMEM':>7} {'steps':>5}")
+    for p, n in SHAPE_VARIANTS:
+        a = analyze(p, n)
+        print(
+            f"  p{p:<4} n{n:<4} {a['flops']:>10.0f} {a['bytes_accessed']:>10.0f} "
+            f"{a['arith_intensity']:>6.2f} {a['vmem_per_step_bytes']:>10} "
+            f"{a['vmem_budget_fraction']*100:>6.2f}% {a['grid_steps']:>5}"
+        )
+    print(
+        "\ninterpretation: arithmetic intensity << 1 flop/byte ⇒ the kernel\n"
+        "is memory-bandwidth-bound on any backend; VMEM per grid step is\n"
+        "<1% of a TPU core's ~16 MiB ⇒ single-pass schedule, no double\n"
+        "buffering needed; the batch formulation reads each node vector\n"
+        "once per tile instead of once per (pod, node) pair."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the batch scoring kernel.
+
+This module is the CORRECTNESS REFERENCE for the Pallas kernel in
+``scoring.py`` and, transitively, for the Rust native scorer
+(``rust/src/runtime/scorer.rs``), which mirrors the same arithmetic in f32.
+
+Semantics (kube-scheduler ``NodeResourcesFit`` + ``LeastAllocated``):
+
+  For pod *i* with resource request ``req[i] = (cpu, ram)`` and node *j*
+  with free (unallocated) capacity ``free[j]`` and total capacity
+  ``cap[j]``:
+
+    remaining[i, j] = free[j] - req[i]                       (per resource)
+    feasible[i, j]  = all(remaining[i, j] >= 0)
+    score[i, j]     = 100 * mean_r(remaining[i, j, r] / max(cap[j, r], 1))
+                      if feasible else -1.0
+
+  ``score`` is kube-scheduler's LeastAllocated score in [0, 100]; -1 marks
+  an infeasible (filtered-out) node. ``best[i]`` is the index of the first
+  maximal score — with nodes pre-sorted lexicographically by name this is
+  exactly the paper's deterministic tie-break plugin.
+"""
+
+import jax.numpy as jnp
+
+INFEASIBLE = -1.0
+
+
+def score_ref(pod_req, node_free, node_cap):
+    """Reference score matrix.
+
+    Args:
+      pod_req:   f32[P, 2] resource requests (cpu_milli, ram_mib).
+      node_free: f32[N, 2] free capacity per node.
+      node_cap:  f32[N, 2] total capacity per node.
+
+    Returns:
+      f32[P, N] LeastAllocated scores, ``INFEASIBLE`` where the pod does
+      not fit.
+    """
+    rem = node_free[None, :, :] - pod_req[:, None, :]  # [P, N, 2]
+    feasible = jnp.all(rem >= 0.0, axis=-1)  # [P, N]
+    denom = jnp.maximum(node_cap[None, :, :], 1.0)
+    score = 100.0 * jnp.mean(rem / denom, axis=-1)
+    return jnp.where(feasible, score, INFEASIBLE)
+
+
+def best_node_ref(scores):
+    """Index of the first maximal score per pod (deterministic tie-break)."""
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""L1 — Pallas batch scoring kernel.
+
+Computes the (pods x nodes) feasibility-masked LeastAllocated score matrix
+used by the L3 rust scheduler's scoring phase. See ``ref.py`` for the exact
+semantics; this file is the tiled Pallas realisation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the matrix is tiled over the
+pod axis with ``BlockSpec``s — each grid step stages a (TP, 2) block of pod
+requests plus the full (N, 2) node vectors into VMEM and emits a (TP, N)
+output tile. All arithmetic is element-wise VPU work; VMEM footprint per
+step is (TP*2 + N*4 + TP*N) * 4 bytes (~33 KiB at TP=128, N=32), far under
+the ~16 MiB VMEM budget, so a single pass with no double buffering is the
+right schedule. ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INFEASIBLE
+
+# Default pod-axis tile. P must be padded to a multiple of this by callers
+# (aot.py bakes padded shapes; the rust runtime pads before execute).
+DEFAULT_TILE_P = 64
+
+
+def _score_kernel(pod_ref, free_ref, cap_ref, out_ref):
+    """One grid step: score a (TP, 2) pod block against all N nodes."""
+    pod = pod_ref[...]  # [TP, 2]
+    free = free_ref[...]  # [N, 2]
+    cap = cap_ref[...]  # [N, 2]
+    rem = free[None, :, :] - pod[:, None, :]  # [TP, N, 2]
+    feasible = jnp.all(rem >= 0.0, axis=-1)  # [TP, N]
+    denom = jnp.maximum(cap[None, :, :], 1.0)
+    score = 100.0 * jnp.mean(rem / denom, axis=-1)
+    out_ref[...] = jnp.where(feasible, score, INFEASIBLE)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p",))
+def score_pallas(pod_req, node_free, node_cap, *, tile_p=DEFAULT_TILE_P):
+    """Pallas-tiled score matrix; numerics identical to ``ref.score_ref``.
+
+    Args:
+      pod_req:   f32[P, 2], P a multiple of ``tile_p`` (pad with zeros).
+      node_free: f32[N, 2].
+      node_cap:  f32[N, 2].
+      tile_p:    pod-axis tile size.
+
+    Returns:
+      f32[P, N] score matrix.
+    """
+    p, _ = pod_req.shape
+    n, _ = node_free.shape
+    tile_p = min(tile_p, p)
+    if p % tile_p != 0:
+        raise ValueError(f"P={p} not a multiple of tile_p={tile_p}")
+    grid = (p // tile_p,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            # Pod block marches down the P axis with the grid index;
+            # node vectors are re-staged whole each step (tiny: N*2 f32).
+            pl.BlockSpec((tile_p, 2), lambda i: (i, 0)),
+            pl.BlockSpec((n, 2), lambda i: (0, 0)),
+            pl.BlockSpec((n, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_p, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.float32),
+        interpret=True,
+    )(pod_req, node_free, node_cap)

@@ -1,0 +1,39 @@
+"""L2 — JAX compute graph for the scheduler's scoring phase.
+
+``scorer_fn`` is the function AOT-lowered to HLO text by ``aot.py`` and
+executed by the rust runtime (``rust/src/runtime/``) on the request path.
+It wraps the L1 Pallas kernel (``kernels/scoring.py``) with the
+post-processing the scheduler needs:
+
+  * the full (P, N) score matrix (LeastAllocated, -1 = infeasible), and
+  * per-pod best-node selection with the paper's deterministic
+    lexicographic tie-break (first argmax over name-sorted nodes), and
+  * per-pod feasibility count (how many nodes passed filtering — the rust
+    side uses it for queue/metrics decisions without a second pass).
+
+Outputs are returned as a tuple so the HLO root is a tuple (the xla crate
+unwraps with ``to_tuple``; see /opt/xla-example/load_hlo).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.scoring import score_pallas
+
+
+def scorer_fn(pod_req, node_free, node_cap):
+    """Batch scorer: the L2 graph lowered into artifacts/*.hlo.txt.
+
+    Args:
+      pod_req:   f32[P, 2] pending-pod resource requests (padded rows = 0).
+      node_free: f32[N, 2] free capacity (padded nodes = -1 → infeasible).
+      node_cap:  f32[N, 2] total capacity (padded nodes = 1).
+
+    Returns:
+      scores:   f32[P, N]
+      best:     i32[P]  first-argmax node index (lexicographic tie-break)
+      feasible: i32[P]  number of feasible nodes per pod
+    """
+    scores = score_pallas(pod_req, node_free, node_cap)
+    best = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    feasible = jnp.sum(scores >= 0.0, axis=-1).astype(jnp.int32)
+    return scores, best, feasible

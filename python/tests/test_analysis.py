@@ -1,0 +1,17 @@
+"""Sanity checks on the static perf analysis (keeps §Perf claims honest)."""
+
+from compile.analysis import analyze
+
+
+def test_analysis_small_variant():
+    a = analyze(64, 8)
+    assert a["grid_steps"] == 1
+    assert a["vmem_per_step_bytes"] < 16 * 2**20 * 0.01  # < 1% of VMEM
+    assert a["flops"] > 0
+    assert a["arith_intensity"] < 5.0  # memory-bound, not compute-bound
+
+
+def test_analysis_large_variant_tiles():
+    a = analyze(256, 32)
+    assert a["grid_steps"] == 4  # 256 / DEFAULT_TILE_P
+    assert a["vmem_per_step_bytes"] == 4 * (64 * 2 + 2 * 32 * 2 + 64 * 32)

@@ -1,0 +1,93 @@
+"""L1 correctness: Pallas scoring kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel: hypothesis sweeps
+shapes and value ranges; every case must match ``ref.score_ref`` to f32
+tolerance (the kernel and the oracle use the same ops, so we can demand
+exact equality in practice — we assert allclose with tight atol).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import INFEASIBLE, best_node_ref, score_ref
+from compile.kernels.scoring import score_pallas
+
+
+def _rand_inputs(rng, p, n, lo=0.0, hi=1000.0):
+    pod = rng.uniform(lo, hi, size=(p, 2)).astype(np.float32)
+    cap = rng.uniform(1000.0, 8000.0, size=(n, 2)).astype(np.float32)
+    alloc = rng.uniform(0.0, 1.0, size=(n, 2)).astype(np.float32) * cap
+    free = (cap - alloc).astype(np.float32)
+    return pod, free, cap
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p_tiles=st.integers(min_value=1, max_value=4),
+    tile_p=st.sampled_from([8, 16, 64]),
+    n=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref_hypothesis(p_tiles, tile_p, n, seed):
+    rng = np.random.default_rng(seed)
+    p = p_tiles * tile_p
+    pod, free, cap = _rand_inputs(rng, p, n)
+    got = score_pallas(jnp.asarray(pod), jnp.asarray(free), jnp.asarray(cap), tile_p=tile_p)
+    want = score_ref(jnp.asarray(pod), jnp.asarray(free), jnp.asarray(cap))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-6)
+
+
+def test_infeasible_marked():
+    pod = jnp.asarray([[500.0, 500.0], [9000.0, 100.0]], dtype=jnp.float32)
+    pod = jnp.pad(pod, ((0, 62), (0, 0)))  # pad to tile
+    free = jnp.asarray([[600.0, 600.0]], dtype=jnp.float32)
+    cap = jnp.asarray([[1000.0, 1000.0]], dtype=jnp.float32)
+    s = score_pallas(pod, free, cap)
+    assert s[0, 0] > 0.0
+    assert s[1, 0] == INFEASIBLE  # cpu 9000 > free 600
+
+
+def test_exact_fit_scores_zero_remaining():
+    """A pod consuming all free capacity is feasible; zero surplus -> score 0."""
+    pod = jnp.zeros((64, 2), dtype=jnp.float32).at[0].set(jnp.asarray([1000.0, 2000.0]))
+    free = jnp.asarray([[1000.0, 2000.0]], dtype=jnp.float32)
+    cap = jnp.asarray([[4000.0, 4000.0]], dtype=jnp.float32)
+    s = score_pallas(pod, free, cap)
+    assert s[0, 0] == 0.0  # rem == 0 on both axes -> score 0, still feasible
+
+
+def test_zero_capacity_denominator_guard():
+    """cap=0 nodes must not produce NaN/inf (denominator clamped to 1)."""
+    pod = jnp.zeros((64, 2), dtype=jnp.float32)
+    free = jnp.zeros((3, 2), dtype=jnp.float32)
+    cap = jnp.zeros((3, 2), dtype=jnp.float32)
+    s = score_pallas(pod, free, cap)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    assert bool(jnp.all(s == 0.0))  # rem = 0, feasible, score 0
+
+
+def test_padding_semantics():
+    """Rust runtime pads pods with req=0 and nodes with free=-1/cap=1."""
+    pod = jnp.zeros((64, 2), dtype=jnp.float32)  # all padded pods
+    free = jnp.full((4, 2), -1.0, dtype=jnp.float32)  # all padded nodes
+    cap = jnp.ones((4, 2), dtype=jnp.float32)
+    s = score_pallas(pod, free, cap)
+    assert bool(jnp.all(s == INFEASIBLE))  # padded nodes never selectable
+
+
+def test_tile_mismatch_raises():
+    pod = jnp.zeros((65, 2), dtype=jnp.float32)
+    free = jnp.ones((2, 2), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        score_pallas(pod, free, free, tile_p=64)
+
+
+def test_best_node_lexicographic_tie_break():
+    """Equal scores -> first (lexicographically smallest) node index wins."""
+    pod = jnp.zeros((64, 2), dtype=jnp.float32).at[0].set(jnp.asarray([100.0, 100.0]))
+    free = jnp.asarray([[500.0, 500.0]] * 3, dtype=jnp.float32)
+    cap = jnp.asarray([[1000.0, 1000.0]] * 3, dtype=jnp.float32)
+    s = score_pallas(pod, free, cap)
+    assert int(best_node_ref(s)[0]) == 0

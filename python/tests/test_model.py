@@ -1,0 +1,54 @@
+"""L2 correctness: scorer_fn shapes, outputs, and AOT round-trip.
+
+Pins down the contract the rust runtime relies on:
+  * output tuple ordering (scores, best, feasible),
+  * dtypes (f32 / i32 / i32),
+  * padding semantics for both axes,
+  * the HLO text artifact parses and mentions the expected parameter shapes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import artifact_name, lower_scorer
+from compile.kernels.ref import score_ref
+from compile.model import scorer_fn
+
+
+def test_scorer_outputs():
+    rng = np.random.default_rng(7)
+    pod = rng.uniform(100, 1000, size=(64, 2)).astype(np.float32)
+    cap = np.full((8, 2), 4000.0, dtype=np.float32)
+    free = rng.uniform(0, 4000, size=(8, 2)).astype(np.float32)
+    scores, best, feas = scorer_fn(jnp.asarray(pod), jnp.asarray(free), jnp.asarray(cap))
+    assert scores.shape == (64, 8) and scores.dtype == jnp.float32
+    assert best.shape == (64,) and best.dtype == jnp.int32
+    assert feas.shape == (64,) and feas.dtype == jnp.int32
+    want = np.asarray(score_ref(jnp.asarray(pod), jnp.asarray(free), jnp.asarray(cap)))
+    np.testing.assert_allclose(np.asarray(scores), want, atol=1e-5)
+    # best = first argmax; feasible = count of non-negative scores
+    np.testing.assert_array_equal(np.asarray(best), want.argmax(axis=1).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(feas), (want >= 0).sum(axis=1).astype(np.int32))
+
+
+def test_all_infeasible_pod_has_negative_best_score():
+    pod = jnp.zeros((64, 2), dtype=jnp.float32).at[0].set(jnp.asarray([1e9, 1e9]))
+    free = jnp.full((4, 2), 1000.0, dtype=jnp.float32)
+    cap = jnp.full((4, 2), 4000.0, dtype=jnp.float32)
+    scores, best, feas = scorer_fn(pod, free, cap)
+    assert int(feas[0]) == 0
+    # argmax over all -1 rows returns 0; consumer must check scores[best] < 0
+    assert float(scores[0, int(best[0])]) < 0.0
+
+
+@pytest.mark.parametrize("p,n", [(64, 8)])
+def test_hlo_text_artifact(p, n):
+    text = lower_scorer(p, n)
+    assert text.startswith("HloModule")
+    # Parameters appear with the expected shapes in the entry computation.
+    assert f"f32[{p},2]" in text
+    assert f"f32[{n},2]" in text
+    assert f"f32[{p},{n}]" in text  # scores output
+    assert f"s32[{p}]" in text  # best / feasible outputs
+    assert artifact_name(p, n) == f"scorer_p{p}_n{n}.hlo.txt"

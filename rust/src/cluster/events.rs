@@ -1,0 +1,98 @@
+//! Append-only cluster event log.
+//!
+//! Mirrors (a small slice of) the Kubernetes event stream: every binding,
+//! eviction, and optimiser invocation is recorded so tests can assert on
+//! *how* a state was reached and examples can narrate what happened.
+
+use super::node::NodeId;
+use super::pod::PodId;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Pod bound to a node by the default scheduler.
+    Bind { pod: PodId, node: NodeId },
+    /// Pod bound to a node chosen by the optimiser's plan.
+    PlanBind { pod: PodId, node: NodeId },
+    /// Pod evicted (cross-node pre-emption on behalf of the optimiser).
+    Evict { pod: PodId, node: NodeId },
+    /// Pod marked unschedulable by the scheduling cycle.
+    Unschedulable { pod: PodId },
+    /// Optimiser invoked over the current cluster state.
+    SolverInvoked { pending: usize },
+    /// Optimiser finished; `improved` = strictly better than before.
+    SolverFinished {
+        improved: bool,
+        proved_optimal: bool,
+        duration_ms: u64,
+    },
+    /// A queued pod was paused while the solver ran.
+    QueuePaused { pod: PodId },
+}
+
+/// Growable event log. Cheap to clone for snapshots in tests.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn all(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Count events matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+
+    /// Number of evictions recorded (disruption metric).
+    pub fn evictions(&self) -> usize {
+        self.count(|e| matches!(e, Event::Evict { .. }))
+    }
+
+    /// Number of binds (default + planned).
+    pub fn binds(&self) -> usize {
+        self.count(|e| matches!(e, Event::Bind { .. } | Event::PlanBind { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting() {
+        let mut log = EventLog::new();
+        log.push(Event::Bind {
+            pod: PodId(0),
+            node: NodeId(0),
+        });
+        log.push(Event::Evict {
+            pod: PodId(0),
+            node: NodeId(0),
+        });
+        log.push(Event::PlanBind {
+            pod: PodId(0),
+            node: NodeId(1),
+        });
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.evictions(), 1);
+        assert_eq!(log.binds(), 2);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cluster model: the Kubernetes objects the scheduler operates on.
+//!
+//! * [`resources`] — 2-dimensional resource vectors (milli-CPU, MiB RAM).
+//! * [`node`]      — cluster nodes with identical-capacity support.
+//! * [`pod`]       — pods with resource requests and priorities
+//!                   (0 = highest, per the paper's convention).
+//! * [`replicaset`]— ReplicaSet requests expanded into pods.
+//! * [`state`]     — the mutable allocation state (bindings, residuals)
+//!                   with invariant checking.
+//! * [`events`]    — append-only event log (bind/evict/move/solver)
+//!                   for observability and tests.
+
+pub mod events;
+pub mod node;
+pub mod pod;
+pub mod replicaset;
+pub mod resources;
+pub mod state;
+
+pub use events::{Event, EventLog};
+pub use node::{identical_nodes, Node, NodeId};
+pub use pod::{Pod, PodId, Priority};
+pub use replicaset::ReplicaSet;
+pub use resources::Resources;
+pub use state::{ClusterState, StateError};

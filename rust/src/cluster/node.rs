@@ -1,0 +1,77 @@
+//! Cluster nodes.
+
+use super::resources::Resources;
+
+/// Dense node index. Nodes are kept sorted by `name`, so `NodeId` order is
+/// exactly lexicographic name order — the paper's deterministic
+/// tie-breaking plugin falls out of that invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A worker node. The paper assumes identical capacities across nodes
+/// ("to reflect typical cloud deployments"), but nothing here requires it.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub capacity: Resources,
+    /// Optional labels for (anti-)affinity extensions (paper future work).
+    pub labels: Vec<(String, String)>,
+}
+
+impl Node {
+    pub fn new(id: u32, name: impl Into<String>, capacity: Resources) -> Self {
+        Node {
+            id: NodeId(id),
+            name: name.into(),
+            capacity,
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn with_label(mut self, key: &str, value: &str) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn has_label(&self, key: &str, value: &str) -> bool {
+        self.labels.iter().any(|(k, v)| k == key && v == value)
+    }
+}
+
+/// Build `count` identical nodes named `node-000`, `node-001`, … —
+/// zero-padded so lexicographic order equals index order.
+pub fn identical_nodes(count: usize, capacity: Resources) -> Vec<Node> {
+    (0..count)
+        .map(|i| Node::new(i as u32, format!("node-{i:03}"), capacity))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_nodes_sorted_by_name() {
+        let nodes = identical_nodes(12, Resources::new(1000, 1000));
+        for w in nodes.windows(2) {
+            assert!(w[0].name < w[1].name);
+            assert!(w[0].id < w[1].id);
+        }
+        assert_eq!(nodes[10].name, "node-010");
+    }
+
+    #[test]
+    fn labels() {
+        let n = Node::new(0, "n", Resources::ZERO).with_label("disk", "ssd");
+        assert!(n.has_label("disk", "ssd"));
+        assert!(!n.has_label("disk", "hdd"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Pods: the smallest deployable unit.
+
+use super::resources::Resources;
+
+/// Dense pod index within an instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u32);
+
+impl PodId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Pod priority. Follows the paper's convention: `0` is the *highest*
+/// priority and `p_max` the lowest (note this is inverted w.r.t. the
+/// Kubernetes API's PriorityClass values; the paper's algorithm iterates
+/// `pr = 0..=p_max` from highest to lowest, which this ordering makes a
+/// plain ascending loop).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Priority(pub u32);
+
+impl Priority {
+    pub const HIGHEST: Priority = Priority(0);
+}
+
+/// A pod with its resource request, priority, and (optional) owning
+/// ReplicaSet. `node_selector` supports the paper's future-work
+/// affinity extension — empty for all paper workloads.
+#[derive(Clone, Debug)]
+pub struct Pod {
+    pub id: PodId,
+    pub name: String,
+    pub request: Resources,
+    pub priority: Priority,
+    /// Owning ReplicaSet index, if created through one.
+    pub owner: Option<u32>,
+    /// Required node labels (AND semantics), e.g. `[("disk","ssd")]`.
+    pub node_selector: Vec<(String, String)>,
+}
+
+impl Pod {
+    pub fn new(id: u32, name: impl Into<String>, request: Resources, priority: Priority) -> Self {
+        Pod {
+            id: PodId(id),
+            name: name.into(),
+            request,
+            priority,
+            owner: None,
+            node_selector: Vec::new(),
+        }
+    }
+
+    pub fn with_owner(mut self, rs: u32) -> Self {
+        self.owner = Some(rs);
+        self
+    }
+
+    pub fn with_selector(mut self, key: &str, value: &str) -> Self {
+        self.node_selector.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Whether this pod's node selector admits `node`.
+    pub fn selector_matches(&self, node: &super::node::Node) -> bool {
+        self.node_selector
+            .iter()
+            .all(|(k, v)| node.has_label(k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::Node;
+
+    #[test]
+    fn priority_zero_is_highest() {
+        assert!(Priority(0) < Priority(1));
+        assert_eq!(Priority::HIGHEST, Priority(0));
+    }
+
+    #[test]
+    fn selector_semantics() {
+        let pod = Pod::new(0, "p", Resources::ZERO, Priority(0)).with_selector("disk", "ssd");
+        let ssd = Node::new(0, "a", Resources::ZERO).with_label("disk", "ssd");
+        let hdd = Node::new(1, "b", Resources::ZERO);
+        assert!(pod.selector_matches(&ssd));
+        assert!(!pod.selector_matches(&hdd));
+        // empty selector matches everything
+        let any = Pod::new(1, "q", Resources::ZERO, Priority(0));
+        assert!(any.selector_matches(&hdd));
+    }
+}

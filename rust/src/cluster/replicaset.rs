@@ -1,0 +1,85 @@
+//! ReplicaSets: a request to deploy `replicas` identical pods.
+//!
+//! The paper's workload generator creates random ReplicaSet requests of
+//! 1–4 replicas each; pods inherit the template's resource request and
+//! priority.
+
+use super::pod::{Pod, Priority};
+use super::resources::Resources;
+
+#[derive(Clone, Debug)]
+pub struct ReplicaSet {
+    pub id: u32,
+    pub name: String,
+    pub replicas: u32,
+    pub template_request: Resources,
+    pub priority: Priority,
+}
+
+impl ReplicaSet {
+    pub fn new(
+        id: u32,
+        name: impl Into<String>,
+        replicas: u32,
+        template_request: Resources,
+        priority: Priority,
+    ) -> Self {
+        ReplicaSet {
+            id,
+            name: name.into(),
+            replicas,
+            template_request,
+            priority,
+        }
+    }
+
+    /// Expand into pods, continuing the given dense id counter. Pod names
+    /// follow the `<rs>-<ordinal>` convention.
+    pub fn expand(&self, next_pod_id: &mut u32) -> Vec<Pod> {
+        (0..self.replicas)
+            .map(|i| {
+                let id = *next_pod_id;
+                *next_pod_id += 1;
+                Pod::new(
+                    id,
+                    format!("{}-{i}", self.name),
+                    self.template_request,
+                    self.priority,
+                )
+                .with_owner(self.id)
+            })
+            .collect()
+    }
+
+    /// Total resources this ReplicaSet demands.
+    pub fn total_request(&self) -> Resources {
+        self.template_request.scaled(self.replicas as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion() {
+        let rs = ReplicaSet::new(3, "web", 3, Resources::new(200, 300), Priority(1));
+        let mut next = 10;
+        let pods = rs.expand(&mut next);
+        assert_eq!(next, 13);
+        assert_eq!(pods.len(), 3);
+        assert_eq!(pods[0].name, "web-0");
+        assert_eq!(pods[2].name, "web-2");
+        for p in &pods {
+            assert_eq!(p.request, Resources::new(200, 300));
+            assert_eq!(p.priority, Priority(1));
+            assert_eq!(p.owner, Some(3));
+        }
+    }
+
+    #[test]
+    fn total_request() {
+        let rs = ReplicaSet::new(0, "db", 4, Resources::new(100, 250), Priority(0));
+        assert_eq!(rs.total_request(), Resources::new(400, 1000));
+    }
+}

@@ -1,0 +1,172 @@
+//! Two-dimensional resource vectors.
+//!
+//! Kubernetes expresses CPU in milli-cores ("500m") and memory in bytes;
+//! the paper draws both uniformly from `[100, 1000]` abstract units. We
+//! keep integer arithmetic throughout (`i64`) — the solver needs exact
+//! capacity accounting; floats only appear at the scoring boundary (the
+//! L1 kernel contract, f32).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A (cpu, ram) request or capacity. Units: milli-CPU and MiB by
+/// convention, but the code is unit-agnostic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Resources {
+    pub cpu: i64,
+    pub ram: i64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: 0, ram: 0 };
+
+    pub fn new(cpu: i64, ram: i64) -> Self {
+        Resources { cpu, ram }
+    }
+
+    /// Whether a request of `self` fits within `avail` on every dimension.
+    #[inline]
+    pub fn fits_in(&self, avail: &Resources) -> bool {
+        self.cpu <= avail.cpu && self.ram <= avail.ram
+    }
+
+    /// Component-wise min / max.
+    pub fn min(&self, o: &Resources) -> Resources {
+        Resources::new(self.cpu.min(o.cpu), self.ram.min(o.ram))
+    }
+
+    pub fn max(&self, o: &Resources) -> Resources {
+        Resources::new(self.cpu.max(o.cpu), self.ram.max(o.ram))
+    }
+
+    /// True if any dimension is negative (capacity violation marker).
+    pub fn any_negative(&self) -> bool {
+        self.cpu < 0 || self.ram < 0
+    }
+
+    /// Dominant fractional share of `cap` — the solver's branching key
+    /// (larger = harder to place).
+    pub fn dominant_share(&self, cap: &Resources) -> f64 {
+        let c = if cap.cpu > 0 {
+            self.cpu as f64 / cap.cpu as f64
+        } else {
+            f64::INFINITY
+        };
+        let r = if cap.ram > 0 {
+            self.ram as f64 / cap.ram as f64
+        } else {
+            f64::INFINITY
+        };
+        c.max(r)
+    }
+
+    /// Saturating subtraction (never below zero) — for display only.
+    pub fn saturating_sub(&self, o: &Resources) -> Resources {
+        Resources::new((self.cpu - o.cpu).max(0), (self.ram - o.ram).max(0))
+    }
+
+    /// Scale by an integer factor.
+    pub fn scaled(&self, k: i64) -> Resources {
+        Resources::new(self.cpu * k, self.ram * k)
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources::new(self.cpu + o.cpu, self.ram + o.ram)
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        self.cpu += o.cpu;
+        self.ram += o.ram;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, o: Resources) -> Resources {
+        Resources::new(self.cpu - o.cpu, self.ram - o.ram)
+    }
+}
+
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, o: Resources) {
+        self.cpu -= o.cpu;
+        self.ram -= o.ram;
+    }
+}
+
+impl Sum for Resources {
+    fn sum<I: Iterator<Item = Resources>>(iter: I) -> Resources {
+        iter.fold(Resources::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cpu={}m ram={}Mi", self.cpu, self.ram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits() {
+        let cap = Resources::new(1000, 2000);
+        assert!(Resources::new(1000, 2000).fits_in(&cap));
+        assert!(Resources::new(0, 0).fits_in(&cap));
+        assert!(!Resources::new(1001, 0).fits_in(&cap));
+        assert!(!Resources::new(0, 2001).fits_in(&cap));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(100, 200);
+        let b = Resources::new(30, 50);
+        assert_eq!(a + b, Resources::new(130, 250));
+        assert_eq!(a - b, Resources::new(70, 150));
+        let mut c = a;
+        c += b;
+        c -= b;
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn sum_over_iter() {
+        let total: Resources = [Resources::new(1, 2), Resources::new(3, 4)]
+            .into_iter()
+            .sum();
+        assert_eq!(total, Resources::new(4, 6));
+    }
+
+    #[test]
+    fn dominant_share_picks_max_dim() {
+        let cap = Resources::new(1000, 1000);
+        assert_eq!(Resources::new(500, 100).dominant_share(&cap), 0.5);
+        assert_eq!(Resources::new(100, 900).dominant_share(&cap), 0.9);
+        assert!(Resources::new(1, 1)
+            .dominant_share(&Resources::new(0, 10))
+            .is_infinite());
+    }
+
+    #[test]
+    fn negatives_detected() {
+        assert!((Resources::new(1, 1) - Resources::new(2, 0)).any_negative());
+        assert!(!(Resources::new(1, 1) - Resources::new(1, 1)).any_negative());
+    }
+
+    #[test]
+    fn scaled_and_saturating() {
+        assert_eq!(Resources::new(2, 3).scaled(4), Resources::new(8, 12));
+        assert_eq!(
+            Resources::new(1, 5).saturating_sub(&Resources::new(3, 2)),
+            Resources::new(0, 3)
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! Single-instance experiment: the paper's measurement protocol.
+//!
+//! "We evaluate our scheduling approach by running the default scheduler
+//! (as-is) in KWOK and then our optimisation algorithm, if the default
+//! scheduler failed to place all pods. We record the placements of pods
+//! and whether the optimiser found an optimal solution or achieved a
+//! better allocation than the KWOK baseline (i.e., higher number of
+//! higher-priority pods)."
+
+use crate::metrics::categories::{classify, Outcome};
+use crate::metrics::utilization_delta;
+use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+use crate::optimizer::plan::MovePlan;
+use crate::simulator::KwokSimulator;
+use crate::solver::SolverConfig;
+use crate::util::timer::Stopwatch;
+use crate::workload::Instance;
+
+/// Everything recorded about one (instance, timeout) run.
+#[derive(Clone, Debug)]
+pub struct InstanceRun {
+    pub outcome: Outcome,
+    /// Wall-clock of the whole optimisation incl. model building and
+    /// solution extraction — the paper's "solver duration" ("the time
+    /// here is the total duration including extraction of the solution
+    /// and I/O, which may slightly be above the solver timeout").
+    pub solver_duration_s: f64,
+    /// Utilisation improvement over the KWOK baseline, in percentage
+    /// points (0 when the plan was not applied).
+    pub delta_cpu: f64,
+    pub delta_mem: f64,
+    /// Pods placed per priority: baseline vs optimised.
+    pub kwok_placed: Vec<usize>,
+    pub opt_placed: Vec<usize>,
+    /// Pods whose node changed to realise the improvement.
+    pub disruptions: usize,
+}
+
+/// Run one instance at one timeout.
+pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> InstanceRun {
+    let p_max = inst.params.p_max();
+
+    // 1. KWOK baseline (deterministic profile).
+    let mut sim = KwokSimulator::new(p_max);
+    let (state, base) = sim.run(inst.nodes.clone(), inst.pods.clone());
+    let base_util = state.utilization();
+
+    if base.all_placed {
+        // Deterministic generation makes this unreachable for challenging
+        // datasets, but the paper's yellow category exists because *its*
+        // evaluation re-runs a nondeterministic scheduler; keep the path.
+        return InstanceRun {
+            outcome: Outcome::NoCalls,
+            solver_duration_s: 0.0,
+            delta_cpu: 0.0,
+            delta_mem: 0.0,
+            kwok_placed: base.placed_per_priority.clone(),
+            opt_placed: base.placed_per_priority,
+            disruptions: 0,
+        };
+    }
+
+    // 2. Optimiser fallback.
+    let cfg = OptimizerConfig {
+        total_timeout: std::time::Duration::from_secs_f64(timeout_s),
+        alpha: 0.8,
+        solver: solver.clone(),
+    };
+    let sw = Stopwatch::start();
+    let result = optimize(&state, p_max, &cfg);
+    let solver_duration_s = sw.elapsed_secs();
+
+    let (outcome, opt_placed, delta, disruptions) = match &result {
+        None => (
+            Outcome::Failure,
+            base.placed_per_priority.clone(),
+            (0.0, 0.0),
+            0,
+        ),
+        Some(res) => {
+            let outcome = classify(
+                true,
+                Some((&res.placed_per_priority, res.proved_optimal)),
+                &base.placed_per_priority,
+            );
+            match outcome {
+                Outcome::Better | Outcome::BetterOptimal => {
+                    let plan = MovePlan::build(&state, &res.target);
+                    let after_util = plan
+                        .validate(&state)
+                        .expect("solver target must be executable");
+                    (
+                        outcome,
+                        res.placed_per_priority.clone(),
+                        utilization_delta(base_util, after_util),
+                        plan.disruptions(),
+                    )
+                }
+                _ => (outcome, base.placed_per_priority.clone(), (0.0, 0.0), 0),
+            }
+        }
+    };
+
+    InstanceRun {
+        outcome,
+        solver_duration_s,
+        delta_cpu: delta.0,
+        delta_mem: delta.1,
+        kwok_placed: base.placed_per_priority,
+        opt_placed,
+        disruptions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::GenParams;
+
+    #[test]
+    fn challenging_instance_classified() {
+        let params = GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 1.0,
+        };
+        let insts = Instance::generate_challenging(params, 3, 11, 300);
+        assert!(!insts.is_empty());
+        for inst in &insts {
+            let run = run_instance(inst, 2.0, &SolverConfig::default());
+            // challenging → solver invoked → never NoCalls
+            assert_ne!(run.outcome, Outcome::NoCalls);
+            if matches!(run.outcome, Outcome::Better | Outcome::BetterOptimal) {
+                // improvement must be real: lexicographically more pods
+                assert!(crate::metrics::lex_better(&run.opt_placed, &run.kwok_placed));
+                // deltas are usually positive but may dip negative when a
+                // higher-priority (smaller) pod displaces a bigger one
+                assert!(run.delta_cpu.is_finite() && run.delta_mem.is_finite());
+                assert!(run.delta_cpu.abs() <= 100.0 && run.delta_mem.abs() <= 100.0);
+                assert!(run.disruptions > 0 || run.kwok_placed.iter().sum::<usize>() == 0 ||
+                        run.opt_placed.iter().sum::<usize>() > run.kwok_placed.iter().sum::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn solver_duration_bounded_by_timeout_plus_overhead() {
+        let params = GenParams {
+            nodes: 8,
+            pods_per_node: 8,
+            priority_tiers: 4,
+            usage: 1.05,
+        };
+        let insts = Instance::generate_challenging(params, 1, 21, 200);
+        if let Some(inst) = insts.first() {
+            let run = run_instance(inst, 0.3, &SolverConfig::default());
+            // paper: duration may slightly exceed the timeout (extraction,
+            // model building) but must stay in the same ballpark.
+            assert!(
+                run.solver_duration_s < 0.3 * 3.0 + 0.5,
+                "duration {} way past timeout",
+                run.solver_duration_s
+            );
+        }
+    }
+}

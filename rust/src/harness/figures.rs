@@ -1,0 +1,275 @@
+//! Figure/table drivers: each regenerates one artefact of the paper's
+//! evaluation section and returns a rendered report (also written to
+//! `results/` by the CLI).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::categories::Outcome;
+use crate::util::stats;
+use crate::workload::GenParams;
+
+use super::grid::{run_grid, CellResult, GridConfig};
+use super::report::{fmt_pct, fmt_secs, legend, md_header, md_row, save_cells, section, stacked_bar};
+
+/// Aggregate cells over usage levels, keyed by (nodes, ppn, tiers, timeout)
+/// — Figure 3 "aggregating across target usage levels".
+fn aggregate_over_usage(cells: &[CellResult]) -> Vec<CellResult> {
+    let mut out: Vec<CellResult> = Vec::new();
+    for c in cells {
+        let k = c.key;
+        match out.iter_mut().find(|o| {
+            o.key.params.nodes == k.params.nodes
+                && o.key.params.pods_per_node == k.params.pods_per_node
+                && o.key.params.priority_tiers == k.params.priority_tiers
+                && o.key.timeout_s == k.timeout_s
+        }) {
+            Some(existing) => existing.merge(c),
+            None => {
+                let mut fresh = c.clone();
+                fresh.key.params.usage = 0.0; // aggregated marker
+                out.push(fresh);
+            }
+        }
+    }
+    out
+}
+
+/// **Figure 3**: distribution of solved instances by cluster size, three
+/// grouped bars per size (one per timeout), collated by priority tiers
+/// (columns) and pods-per-node (rows), aggregated across usage levels.
+pub fn fig3(cfg: &GridConfig, out_dir: &str) -> Result<String> {
+    let cells = run_grid(cfg);
+    save_cells(&cells, &format!("{out_dir}/fig3_cells.json"))?;
+    let agg = aggregate_over_usage(&cells);
+
+    let mut s = String::new();
+    let _ = write!(s, "{}", section("Figure 3 — outcome distribution by cluster size × solver timeout"));
+    let _ = writeln!(s, "{}\n", legend());
+
+    for &ppn in &cfg.pods_per_node {
+        for &tiers in &cfg.priority_tiers {
+            let _ = writeln!(s, "--- priorities={tiers}  pods-per-node={ppn} ---");
+            let _ = writeln!(
+                s,
+                "{:>6} {:>7}  {:<44} {:>7} {:>7} {:>7} {:>7} {:>7}",
+                "nodes", "T_total", "distribution", "Bet&Opt", "Better", "KwokOpt", "NoCalls", "Fail"
+            );
+            for &nodes in &cfg.nodes {
+                for &t in &cfg.timeouts {
+                    let Some(cell) = agg.iter().find(|c| {
+                        c.key.params.nodes == nodes
+                            && c.key.params.pods_per_node == ppn
+                            && c.key.params.priority_tiers == tiers
+                            && c.key.timeout_s == t
+                    }) else {
+                        continue;
+                    };
+                    let _ = writeln!(
+                        s,
+                        "{:>6} {:>7} [{}] {:>7} {:>7} {:>7} {:>7} {:>7}",
+                        nodes,
+                        fmt_secs(t),
+                        stacked_bar(cell, 44),
+                        fmt_pct(cell.pct(Outcome::BetterOptimal)),
+                        fmt_pct(cell.pct(Outcome::Better)),
+                        fmt_pct(cell.pct(Outcome::KwokOptimal)),
+                        fmt_pct(cell.pct(Outcome::NoCalls)),
+                        fmt_pct(cell.pct(Outcome::Failure)),
+                    );
+                }
+                let _ = writeln!(s);
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// **Figure 4**: distribution by target usage level (fixed ppn=4,
+/// 4 priorities, one timeout).
+pub fn fig4(cfg: &GridConfig, out_dir: &str) -> Result<String> {
+    let mut sub = cfg.clone();
+    sub.pods_per_node = vec![4];
+    sub.priority_tiers = vec![4];
+    sub.timeouts = vec![cfg
+        .timeouts
+        .get(cfg.timeouts.len() / 2)
+        .copied()
+        .unwrap_or(1.0)];
+    let cells = run_grid(&sub);
+    save_cells(&cells, &format!("{out_dir}/fig4_cells.json"))?;
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{}",
+        section(&format!(
+            "Figure 4 — outcome distribution by target usage (ppn=4, 4 priorities, T={})",
+            fmt_secs(sub.timeouts[0])
+        ))
+    );
+    let _ = writeln!(s, "{}\n", legend());
+    let _ = writeln!(
+        s,
+        "{:>6} {:>6}  {:<44} {:>7} {:>7} {:>7} {:>7} {:>7}",
+        "usage", "nodes", "distribution", "Bet&Opt", "Better", "KwokOpt", "NoCalls", "Fail"
+    );
+    for &usage in &sub.usage {
+        for &nodes in &sub.nodes {
+            let Some(cell) = cells.iter().find(|c| {
+                c.key.params.usage == usage && c.key.params.nodes == nodes
+            }) else {
+                continue;
+            };
+            let _ = writeln!(
+                s,
+                "{:>5.0}% {:>6} [{}] {:>7} {:>7} {:>7} {:>7} {:>7}",
+                usage * 100.0,
+                nodes,
+                stacked_bar(cell, 44),
+                fmt_pct(cell.pct(Outcome::BetterOptimal)),
+                fmt_pct(cell.pct(Outcome::Better)),
+                fmt_pct(cell.pct(Outcome::KwokOptimal)),
+                fmt_pct(cell.pct(Outcome::NoCalls)),
+                fmt_pct(cell.pct(Outcome::Failure)),
+            );
+        }
+        let _ = writeln!(s);
+    }
+    Ok(s)
+}
+
+/// **Table 1**: solver duration and Δcpu/Δmem utilisation vs the default
+/// scheduler (4 priorities, one timeout, ppn ∈ {4, 8}).
+pub fn table1(cfg: &GridConfig, out_dir: &str) -> Result<String> {
+    let mut sub = cfg.clone();
+    sub.priority_tiers = vec![4];
+    sub.timeouts = vec![cfg
+        .timeouts
+        .get(cfg.timeouts.len() / 2)
+        .copied()
+        .unwrap_or(1.0)];
+    let cells = run_grid(&sub);
+    save_cells(&cells, &format!("{out_dir}/table1_cells.json"))?;
+
+    let find = |usage: f64, ppn: usize, nodes: usize| -> Option<&CellResult> {
+        cells.iter().find(|c| {
+            c.key.params.usage == usage
+                && c.key.params.pods_per_node == ppn
+                && c.key.params.nodes == nodes
+        })
+    };
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{}",
+        section(&format!(
+            "Table 1 — solver performance (4 priorities, T={})",
+            fmt_secs(sub.timeouts[0])
+        ))
+    );
+    let mut cols: Vec<String> = vec!["util".into(), "metric".into()];
+    for &ppn in &sub.pods_per_node {
+        for &n in &sub.nodes {
+            cols.push(format!("ppn{ppn}/n{n}"));
+        }
+    }
+    let colrefs: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let _ = writeln!(s, "{}", md_header(&colrefs));
+
+    for &usage in &sub.usage {
+        for (metric, f) in [
+            (
+                "solver duration (s)",
+                Box::new(|c: &CellResult| format!("{:.2}", stats::mean(&c.solver_durations)))
+                    as Box<dyn Fn(&CellResult) -> String>,
+            ),
+            (
+                "Δ cpu util (pp)",
+                Box::new(|c: &CellResult| format!("{:.1}", stats::mean(&c.delta_cpu))),
+            ),
+            (
+                "Δ mem util (pp)",
+                Box::new(|c: &CellResult| format!("{:.1}", stats::mean(&c.delta_mem))),
+            ),
+        ] {
+            let mut row: Vec<String> = vec![format!("{:.0}%", usage * 100.0), metric.to_string()];
+            for &ppn in &sub.pods_per_node {
+                for &n in &sub.nodes {
+                    row.push(match find(usage, ppn, n) {
+                        Some(c) if c.instances > 0 => f(c),
+                        _ => "—".into(),
+                    });
+                }
+            }
+            let _ = writeln!(s, "{}", md_row(&row));
+        }
+    }
+    Ok(s)
+}
+
+/// Quick driver used by unit/integration tests: a minimal grid that
+/// exercises all three figure paths in seconds.
+pub fn tiny_grid() -> GridConfig {
+    GridConfig {
+        nodes: vec![4],
+        pods_per_node: vec![4],
+        priority_tiers: vec![1, 4],
+        usage: vec![1.0, 1.05],
+        timeouts: vec![0.15],
+        instances: 2,
+        max_gen_attempts: 120,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+/// Default per-cell parameters for one usage-aggregated Figure-3 slot,
+/// exposed for the examples.
+pub fn default_params() -> GenParams {
+    GenParams {
+        nodes: 4,
+        pods_per_node: 4,
+        priority_tiers: 2,
+        usage: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_three_figures_render() {
+        let dir = std::env::temp_dir().join("kube-packd-figs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_str().unwrap();
+        let cfg = tiny_grid();
+        let f3 = fig3(&cfg, out).unwrap();
+        assert!(f3.contains("Figure 3"));
+        assert!(f3.contains("priorities=1"));
+        let f4 = fig4(&cfg, out).unwrap();
+        assert!(f4.contains("Figure 4"));
+        let t1 = table1(&cfg, out).unwrap();
+        assert!(t1.contains("Table 1"));
+        assert!(t1.contains("solver duration"));
+        // machine-readable dumps exist
+        assert!(dir.join("fig3_cells.json").is_file());
+        assert!(dir.join("fig4_cells.json").is_file());
+        assert!(dir.join("table1_cells.json").is_file());
+    }
+
+    #[test]
+    fn aggregation_merges_usage_levels() {
+        let cfg = tiny_grid();
+        let cells = run_grid(&cfg);
+        let agg = aggregate_over_usage(&cells);
+        // 1 node x 1 ppn x 2 tiers x 1 timeout = 2 aggregated rows
+        assert_eq!(agg.len(), 2);
+        let total_before: usize = cells.iter().map(|c| c.instances).sum();
+        let total_after: usize = agg.iter().map(|c| c.instances).sum();
+        assert_eq!(total_before, total_after);
+    }
+}

@@ -1,0 +1,212 @@
+//! Parameter-grid sweeps with per-cell tallies.
+
+use crate::metrics::categories::Outcome;
+use crate::solver::SolverConfig;
+use crate::util::rng::Rng;
+use crate::workload::{GenParams, Instance};
+
+use super::experiment::{run_instance, InstanceRun};
+
+/// Sweep configuration. Defaults mirror the paper's grid; the driver
+/// binaries scale `instances` and `timeouts` to this testbed (see
+/// EXPERIMENTS.md "Scaling").
+#[derive(Clone, Debug)]
+pub struct GridConfig {
+    pub nodes: Vec<usize>,
+    pub pods_per_node: Vec<usize>,
+    pub priority_tiers: Vec<u32>,
+    pub usage: Vec<f64>,
+    /// `T_total` values, seconds, per instance.
+    pub timeouts: Vec<f64>,
+    /// Challenging instances per parameter combination.
+    pub instances: usize,
+    pub seed: u64,
+    pub solver: SolverConfig,
+    /// Cap on generation attempts per cell (low-usage cells may not
+    /// yield `instances` failures).
+    pub max_gen_attempts: usize,
+    /// Print per-cell progress to stderr.
+    pub verbose: bool,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            nodes: vec![4, 8, 16, 32],
+            pods_per_node: vec![4, 8],
+            priority_tiers: vec![1, 2, 4],
+            usage: vec![0.90, 0.95, 1.00, 1.05],
+            timeouts: vec![0.1, 0.5, 1.0],
+            instances: 12,
+            seed: 0xC0FFEE,
+            solver: SolverConfig::default(),
+            max_gen_attempts: 400,
+            verbose: true,
+        }
+    }
+}
+
+/// Identifies one (params, timeout) cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellKey {
+    pub params: GenParams,
+    pub timeout_s: f64,
+}
+
+/// Aggregated results for one cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub key: CellKey,
+    /// Outcome counts indexed as `Outcome::ALL`.
+    pub counts: [usize; 5],
+    pub solver_durations: Vec<f64>,
+    pub delta_cpu: Vec<f64>,
+    pub delta_mem: Vec<f64>,
+    pub disruptions: Vec<usize>,
+    pub instances: usize,
+}
+
+impl CellResult {
+    fn new(key: CellKey) -> Self {
+        CellResult {
+            key,
+            counts: [0; 5],
+            solver_durations: Vec::new(),
+            delta_cpu: Vec::new(),
+            delta_mem: Vec::new(),
+            disruptions: Vec::new(),
+            instances: 0,
+        }
+    }
+
+    pub fn record(&mut self, run: &InstanceRun) {
+        let idx = Outcome::ALL.iter().position(|&o| o == run.outcome).unwrap();
+        self.counts[idx] += 1;
+        self.instances += 1;
+        self.solver_durations.push(run.solver_duration_s);
+        self.delta_cpu.push(run.delta_cpu);
+        self.delta_mem.push(run.delta_mem);
+        self.disruptions.push(run.disruptions);
+    }
+
+    pub fn pct(&self, o: Outcome) -> f64 {
+        if self.instances == 0 {
+            return 0.0;
+        }
+        let idx = Outcome::ALL.iter().position(|&x| x == o).unwrap();
+        self.counts[idx] as f64 * 100.0 / self.instances as f64
+    }
+
+    /// Merge another cell (used to aggregate usage levels in Figure 3).
+    pub fn merge(&mut self, other: &CellResult) {
+        for i in 0..5 {
+            self.counts[i] += other.counts[i];
+        }
+        self.instances += other.instances;
+        self.solver_durations.extend(&other.solver_durations);
+        self.delta_cpu.extend(&other.delta_cpu);
+        self.delta_mem.extend(&other.delta_mem);
+        self.disruptions.extend(&other.disruptions);
+    }
+}
+
+/// Run the full grid: per parameter combination, generate the
+/// challenging dataset once, then evaluate it at every timeout.
+pub fn run_grid(cfg: &GridConfig) -> Vec<CellResult> {
+    let mut out = Vec::new();
+    let mut seed_stream = Rng::new(cfg.seed);
+    let total_cells =
+        cfg.nodes.len() * cfg.pods_per_node.len() * cfg.priority_tiers.len() * cfg.usage.len();
+    let mut done = 0usize;
+
+    for &nodes in &cfg.nodes {
+        for &ppn in &cfg.pods_per_node {
+            for &tiers in &cfg.priority_tiers {
+                for &usage in &cfg.usage {
+                    let params = GenParams {
+                        nodes,
+                        pods_per_node: ppn,
+                        priority_tiers: tiers,
+                        usage,
+                    };
+                    let ds_seed = seed_stream.next_u64();
+                    let insts = Instance::generate_challenging(
+                        params,
+                        cfg.instances,
+                        ds_seed,
+                        cfg.max_gen_attempts,
+                    );
+                    done += 1;
+                    if cfg.verbose {
+                        eprintln!(
+                            "[grid {done}/{total_cells}] {} — {} challenging instances",
+                            params.label(),
+                            insts.len()
+                        );
+                    }
+                    for &timeout_s in &cfg.timeouts {
+                        let key = CellKey { params, timeout_s };
+                        let mut cell = CellResult::new(key);
+                        for inst in &insts {
+                            let run = run_instance(inst, timeout_s, &cfg.solver);
+                            cell.record(&run);
+                        }
+                        out.push(cell);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_grid_runs() {
+        let cfg = GridConfig {
+            nodes: vec![4],
+            pods_per_node: vec![4],
+            priority_tiers: vec![1],
+            usage: vec![1.05],
+            timeouts: vec![0.2],
+            instances: 2,
+            max_gen_attempts: 120,
+            verbose: false,
+            ..Default::default()
+        };
+        let cells = run_grid(&cfg);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.instances >= 1);
+        assert_eq!(c.counts.iter().sum::<usize>(), c.instances);
+        // percentages sum to 100
+        let total: f64 = Outcome::ALL.iter().map(|&o| c.pct(o)).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let key = CellKey {
+            params: GenParams {
+                nodes: 4,
+                pods_per_node: 4,
+                priority_tiers: 1,
+                usage: 1.0,
+            },
+            timeout_s: 1.0,
+        };
+        let mut a = CellResult::new(key);
+        let mut b = CellResult::new(key);
+        a.counts[0] = 3;
+        a.instances = 3;
+        b.counts[2] = 2;
+        b.instances = 2;
+        a.merge(&b);
+        assert_eq!(a.instances, 5);
+        assert_eq!(a.counts[0], 3);
+        assert_eq!(a.counts[2], 2);
+    }
+}

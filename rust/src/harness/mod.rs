@@ -1,0 +1,18 @@
+//! Benchmark harness: regenerate every table and figure of the paper.
+//!
+//! * [`experiment`] — run one instance end-to-end (KWOK baseline →
+//!   optimiser at a timeout) and classify the outcome.
+//! * [`grid`]       — sweep parameter grids, with per-cell tallies.
+//! * [`figures`]    — the drivers: Figure 3 (outcome distribution by
+//!   cluster size × timeout, collated by priority × pods-per-node),
+//!   Figure 4 (by usage level), Table 1 (solver duration and
+//!   Δcpu/Δmem utilisation).
+//! * [`report`]     — ASCII stacked bars, markdown tables, JSON dumps.
+
+pub mod experiment;
+pub mod figures;
+pub mod grid;
+pub mod report;
+
+pub use experiment::{run_instance, InstanceRun};
+pub use grid::{CellKey, CellResult, GridConfig};

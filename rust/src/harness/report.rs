@@ -1,0 +1,194 @@
+//! Report rendering: ASCII stacked bars, markdown tables, JSON dumps.
+
+use std::fmt::Write as _;
+
+use crate::metrics::categories::Outcome;
+use crate::util::json::Json;
+
+use super::grid::CellResult;
+
+/// Legend glyph per category (stacked-bar fill characters).
+pub fn glyph(o: Outcome) -> char {
+    match o {
+        Outcome::BetterOptimal => '#', // paper: green
+        Outcome::Better => '+',        // orange
+        Outcome::KwokOptimal => '=',   // blue
+        Outcome::NoCalls => '.',       // yellow
+        Outcome::Failure => 'x',       // grey
+    }
+}
+
+/// Render one stacked bar of `width` chars from category percentages.
+pub fn stacked_bar(cell: &CellResult, width: usize) -> String {
+    let mut bar = String::with_capacity(width);
+    let mut acc = 0.0;
+    let mut drawn = 0usize;
+    for &o in &Outcome::ALL {
+        acc += cell.pct(o);
+        let upto = ((acc / 100.0) * width as f64).round() as usize;
+        for _ in drawn..upto.min(width) {
+            bar.push(glyph(o));
+        }
+        drawn = drawn.max(upto.min(width));
+    }
+    while bar.len() < width {
+        bar.push(' ');
+    }
+    bar
+}
+
+/// Legend line for figures.
+pub fn legend() -> String {
+    Outcome::ALL
+        .iter()
+        .map(|&o| format!("{}={}", glyph(o), o.label()))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Markdown header + separator for an N-column table.
+pub fn md_header(cols: &[&str]) -> String {
+    format!(
+        "| {} |\n|{}|",
+        cols.join(" | "),
+        cols.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    )
+}
+
+/// One markdown row.
+pub fn md_row(cells: &[String]) -> String {
+    format!("| {} |", cells.join(" | "))
+}
+
+/// Serialize a cell to JSON (for machine-readable results files).
+pub fn cell_to_json(cell: &CellResult) -> Json {
+    let mut j = Json::obj();
+    j.set("nodes", cell.key.params.nodes)
+        .set("pods_per_node", cell.key.params.pods_per_node)
+        .set("priority_tiers", cell.key.params.priority_tiers)
+        .set("usage", cell.key.params.usage)
+        .set("timeout_s", cell.key.timeout_s)
+        .set("instances", cell.instances);
+    let mut counts = Json::obj();
+    for &o in &Outcome::ALL {
+        let idx = Outcome::ALL.iter().position(|&x| x == o).unwrap();
+        counts.set(o.label(), cell.counts[idx]);
+    }
+    j.set("counts", counts);
+    j.set(
+        "mean_solver_duration_s",
+        crate::util::stats::mean(&cell.solver_durations),
+    );
+    j.set("mean_delta_cpu_pp", crate::util::stats::mean(&cell.delta_cpu));
+    j.set("mean_delta_mem_pp", crate::util::stats::mean(&cell.delta_mem));
+    j
+}
+
+/// Dump a result set to a JSON file.
+pub fn save_cells(cells: &[CellResult], path: &str) -> anyhow::Result<()> {
+    let arr = Json::Arr(cells.iter().map(cell_to_json).collect());
+    std::fs::create_dir_all(
+        std::path::Path::new(path)
+            .parent()
+            .unwrap_or(std::path::Path::new(".")),
+    )?;
+    std::fs::write(path, arr.to_string_pretty())?;
+    Ok(())
+}
+
+/// Percentage with one decimal, right-aligned to 6 chars.
+pub fn fmt_pct(p: f64) -> String {
+    format!("{p:5.1}%")
+}
+
+/// Human duration (seconds with sub-second precision).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.001 {
+        format!("{:.1}ms", s * 1000.0)
+    } else if s < 1.0 {
+        format!("{:.0}ms", s * 1000.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// A titled section box for terminal reports.
+pub fn section(title: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "\n{}", "=".repeat(title.len().max(60)));
+    let _ = writeln!(s, "{title}");
+    let _ = writeln!(s, "{}", "=".repeat(title.len().max(60)));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::grid::CellKey;
+    use crate::workload::GenParams;
+
+    fn cell_with(counts: [usize; 5]) -> CellResult {
+        let mut c = CellResult {
+            key: CellKey {
+                params: GenParams {
+                    nodes: 4,
+                    pods_per_node: 4,
+                    priority_tiers: 1,
+                    usage: 1.0,
+                },
+                timeout_s: 1.0,
+            },
+            counts,
+            solver_durations: vec![],
+            delta_cpu: vec![],
+            delta_mem: vec![],
+            disruptions: vec![],
+            instances: counts.iter().sum(),
+        };
+        c.solver_durations.push(0.5);
+        c
+    }
+
+    #[test]
+    fn bar_width_and_composition() {
+        let c = cell_with([5, 3, 2, 0, 0]);
+        let bar = stacked_bar(&c, 20);
+        assert_eq!(bar.len(), 20);
+        assert_eq!(bar.chars().filter(|&ch| ch == '#').count(), 10); // 50%
+        assert_eq!(bar.chars().filter(|&ch| ch == '+').count(), 6); // 30%
+        assert_eq!(bar.chars().filter(|&ch| ch == '=').count(), 4); // 20%
+    }
+
+    #[test]
+    fn bar_handles_empty_cell() {
+        let c = cell_with([0, 0, 0, 0, 0]);
+        let bar = stacked_bar(&c, 10);
+        assert_eq!(bar, "          ");
+    }
+
+    #[test]
+    fn markdown_helpers() {
+        let h = md_header(&["a", "b"]);
+        assert!(h.contains("| a | b |"));
+        assert!(h.contains("|---|---|"));
+        assert_eq!(md_row(&["1".into(), "2".into()]), "| 1 | 2 |");
+    }
+
+    #[test]
+    fn json_cell_counts() {
+        let c = cell_with([1, 2, 3, 4, 0]);
+        let j = cell_to_json(&c);
+        assert_eq!(
+            j.get("counts").unwrap().get("Better").unwrap().as_i64(),
+            Some(2)
+        );
+        assert_eq!(j.get("instances").unwrap().as_i64(), Some(10));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_secs(0.0004), "0.4ms");
+        assert_eq!(fmt_secs(0.25), "250ms");
+        assert_eq!(fmt_secs(2.5), "2.5s");
+    }
+}

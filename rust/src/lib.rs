@@ -1,0 +1,42 @@
+//! # kube-packd
+//!
+//! Reproduction of *"Priority Matters: Optimising Kubernetes Clusters
+//! Usage with Constraint-Based Pod Packing"* (Christensen, Giallorenzo,
+//! Mauro — 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The library layers, bottom up:
+//!
+//! * [`util`]      — offline-environment substrates (PRNG, JSON, CLI,
+//!                   timers, stats, property testing, bench harness).
+//! * [`cluster`]   — Kubernetes object model: nodes, pods, ReplicaSets,
+//!                   allocation state, event log.
+//! * [`scheduler`] — kube-scheduler re-implementation: scheduling
+//!                   framework with extension points, queue, default
+//!                   plugins (NodeResourcesFit, LeastAllocated,
+//!                   lexicographic tie-break).
+//! * [`simulator`] — KWOK-like deterministic cluster simulator.
+//! * [`solver`]    — from-scratch CP solver (CP-SAT substitute): binary
+//!                   variables, linear constraints, branch-and-bound with
+//!                   propagation, fractional bounds, hints, timeouts.
+//! * [`optimizer`] — the paper's contribution: Algorithm 1 per-priority
+//!                   optimisation loop + fallback scheduler plugin with
+//!                   cross-node pre-emption planning.
+//! * [`runtime`]   — PJRT (XLA) execution of the AOT-compiled L1/L2
+//!                   batch scorer, with a bit-exact native fallback.
+//! * [`workload`]  — the paper's random workload generator and dataset
+//!                   (de)serialization.
+//! * [`metrics`]   — utilisation metrics and the paper's five outcome
+//!                   categories.
+//! * [`harness`]   — experiment drivers regenerating Figure 3, Figure 4,
+//!                   and Table 1.
+
+pub mod cluster;
+pub mod harness;
+pub mod metrics;
+pub mod optimizer;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod solver;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,211 @@
+//! `kube-packd` — CLI for the constraint-based pod-packing reproduction.
+//!
+//! Subcommands:
+//!
+//! * `demo`      — walk through the paper's Figure 1 scenario.
+//! * `generate`  — emit a challenging dataset as JSON.
+//! * `solve`     — run the optimiser over a dataset file.
+//! * `fig3` / `fig4` / `table1` — regenerate the paper's evaluation
+//!   artefacts (reports under `results/`).
+//! * `all`       — fig3 + fig4 + table1.
+//! * `info`      — runtime/artifact status (PJRT platform, variants).
+
+use std::time::Duration;
+
+use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
+use kube_packd::harness::figures;
+use kube_packd::harness::grid::GridConfig;
+use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+use kube_packd::runtime::XlaEngine;
+use kube_packd::solver::SolverConfig;
+use kube_packd::util::cli::Args;
+use kube_packd::workload::{dataset, GenParams, Instance};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("demo") => demo(),
+        Some("generate") => generate(&args),
+        Some("solve") => solve(&args),
+        Some("fig3") => figure(&args, "fig3"),
+        Some("fig4") => figure(&args, "fig4"),
+        Some("table1") => figure(&args, "table1"),
+        Some("all") => {
+            figure(&args, "fig3")?;
+            figure(&args, "fig4")?;
+            figure(&args, "table1")
+        }
+        Some("info") => info(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command: {cmd}\n");
+            }
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "kube-packd — priority-aware constraint-based pod packing (AAAI'25 reproduction)
+
+USAGE: kube-packd <command> [options]
+
+COMMANDS
+  demo                     Figure 1 walk-through (fragmentation -> repack)
+  generate                 emit a challenging dataset (JSON)
+      --nodes N --ppn N --tiers N --usage F --count N --seed N --out FILE
+  solve                    run the optimiser over a dataset file
+      --dataset FILE --timeout SECS
+  fig3 | fig4 | table1     regenerate the paper's figures/tables
+      --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
+      --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
+  all                      fig3 + fig4 + table1
+  info                     PJRT platform + artifact status"
+    );
+}
+
+/// Shared grid config from CLI flags.
+fn grid_config(args: &Args) -> GridConfig {
+    let mut cfg = GridConfig {
+        nodes: args.get_usize_list("nodes", &[4, 8, 16, 32]),
+        pods_per_node: args.get_usize_list("ppn", &[4, 8]),
+        priority_tiers: args
+            .get_usize_list("tiers", &[1, 2, 4])
+            .into_iter()
+            .map(|t| t as u32)
+            .collect(),
+        usage: args
+            .get_f64_list("usage", &[90.0, 95.0, 100.0, 105.0])
+            .into_iter()
+            .map(|u| if u > 2.0 { u / 100.0 } else { u })
+            .collect(),
+        timeouts: args.get_f64_list("timeouts", &[0.1, 0.5, 1.0]),
+        instances: args.get_usize("instances", 12),
+        seed: args.get_u64("seed", 0xC0FFEE),
+        solver: SolverConfig::default(),
+        max_gen_attempts: args.get_usize("max-gen-attempts", 400),
+        verbose: !args.flag("quiet"),
+    };
+    if args.flag("quick") {
+        cfg.nodes = vec![4, 8];
+        cfg.instances = cfg.instances.min(4);
+        cfg.timeouts = vec![0.1, 0.3];
+    }
+    cfg
+}
+
+fn figure(args: &Args, which: &str) -> anyhow::Result<()> {
+    let cfg = grid_config(args);
+    let out_dir = args.get_str("out", "results").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+    let report = match which {
+        "fig3" => figures::fig3(&cfg, &out_dir)?,
+        "fig4" => figures::fig4(&cfg, &out_dir)?,
+        "table1" => figures::table1(&cfg, &out_dir)?,
+        _ => unreachable!(),
+    };
+    println!("{report}");
+    let path = format!("{out_dir}/{which}.md");
+    std::fs::write(&path, &report)?;
+    eprintln!("report written to {path}");
+    Ok(())
+}
+
+fn generate(args: &Args) -> anyhow::Result<()> {
+    let params = GenParams {
+        nodes: args.get_usize("nodes", 8),
+        pods_per_node: args.get_usize("ppn", 4),
+        priority_tiers: args.get_usize("tiers", 2) as u32,
+        usage: {
+            let u = args.get_f64("usage", 1.0);
+            if u > 2.0 {
+                u / 100.0
+            } else {
+                u
+            }
+        },
+    };
+    let count = args.get_usize("count", 10);
+    let seed = args.get_u64("seed", 1);
+    let out = args.get_str("out", "dataset.json");
+    let insts = Instance::generate_challenging(params, count, seed, count * 50);
+    dataset::save(&insts, out)?;
+    println!(
+        "wrote {} challenging instances ({}) to {out}",
+        insts.len(),
+        params.label()
+    );
+    Ok(())
+}
+
+fn solve(args: &Args) -> anyhow::Result<()> {
+    let path = args.get_str("dataset", "dataset.json");
+    let timeout = args.get_f64("timeout", 1.0);
+    let insts = dataset::load(path)?;
+    println!("instance       outcome          solver(s)  kwok-placed -> opt-placed   moves");
+    for (i, inst) in insts.iter().enumerate() {
+        let run = kube_packd::harness::run_instance(inst, timeout, &SolverConfig::default());
+        println!(
+            "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}",
+            i,
+            inst.params.label(),
+            run.outcome.label(),
+            run.solver_duration_s,
+            run.kwok_placed,
+            run.opt_placed,
+            run.disruptions
+        );
+    }
+    Ok(())
+}
+
+/// The paper's Figure 1, narrated.
+fn demo() -> anyhow::Result<()> {
+    println!("Figure 1 demo — 2 nodes x 4Gi; pods of 2Gi, 2Gi, 3Gi\n");
+    let nodes = identical_nodes(2, Resources::new(4000, 4096));
+    let pods = vec![
+        Pod::new(0, "pod-1", Resources::new(100, 2048), Priority(0)),
+        Pod::new(1, "pod-2", Resources::new(100, 2048), Priority(0)),
+        Pod::new(2, "pod-3", Resources::new(100, 3072), Priority(0)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    let mut sched = OptimizingScheduler::new(
+        0,
+        OptimizerConfig {
+            total_timeout: Duration::from_secs(2),
+            ..Default::default()
+        },
+    );
+    let report = sched.run(&mut state);
+    println!(
+        "default scheduler placed {:?} pods; solver invoked: {}",
+        report.placed_before, report.solver_invoked
+    );
+    println!(
+        "after optimisation: {:?} pods placed (improved={}, optimal={}, moves={})",
+        report.placed_after, report.improved, report.proved_optimal, report.disruptions
+    );
+    for (i, a) in state.assignment().iter().enumerate() {
+        println!(
+            "  {} -> {}",
+            state.pods()[i].name,
+            a.map(|n| state.node(n).name.clone())
+                .unwrap_or_else(|| "<pending>".into())
+        );
+    }
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("kube-packd {}", env!("CARGO_PKG_VERSION"));
+    match XlaEngine::load_default() {
+        Ok(engine) => {
+            println!("PJRT platform : {}", engine.platform());
+            println!("AOT variants  : {}", engine.num_variants());
+        }
+        Err(e) => println!("runtime unavailable: {e:#}"),
+    }
+    Ok(())
+}

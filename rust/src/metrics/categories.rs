@@ -1,0 +1,122 @@
+//! The paper's five outcome categories (Figure 3/4 stacked bars).
+//!
+//! An allocation A is *better* than B iff A places more higher-priority
+//! pods: the per-priority placement vectors (index 0 = highest priority)
+//! are compared lexicographically.
+
+/// Outcome of running the optimiser against the default scheduler on one
+/// instance. Display names match the paper's legend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    /// Solver proved optimality and strictly beat the default scheduler.
+    BetterOptimal,
+    /// Solver improved on the default scheduler but could not prove
+    /// optimality before the timeout.
+    Better,
+    /// Solver proved the default scheduler's placement already optimal.
+    KwokOptimal,
+    /// Default scheduler placed everything; the solver was never invoked.
+    NoCalls,
+    /// Solver produced no (improving) solution within the time limit.
+    Failure,
+}
+
+impl Outcome {
+    pub const ALL: [Outcome; 5] = [
+        Outcome::BetterOptimal,
+        Outcome::Better,
+        Outcome::KwokOptimal,
+        Outcome::NoCalls,
+        Outcome::Failure,
+    ];
+
+    /// Paper legend name.
+    pub fn label(self) -> &'static str {
+        match self {
+            Outcome::BetterOptimal => "Better&Optimal",
+            Outcome::Better => "Better",
+            Outcome::KwokOptimal => "KWOK Optimal",
+            Outcome::NoCalls => "No Calls",
+            Outcome::Failure => "Failures",
+        }
+    }
+}
+
+/// Lexicographic comparison of placement vectors: `a` beats `b` iff `a`
+/// places strictly more pods at the highest priority where they differ.
+pub fn lex_better(a: &[usize], b: &[usize]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        if x != y {
+            return x > y;
+        }
+    }
+    false
+}
+
+/// Classify one instance run (see DESIGN.md for the mapping rules; the
+/// only judgement call is feasible-but-not-better, which we conservatively
+/// count as Failure — the solver did not deliver an improving solution).
+pub fn classify(
+    solver_invoked: bool,
+    solver_solution: Option<(&[usize], bool)>, // (placement vector, proved optimal)
+    kwok_vector: &[usize],
+) -> Outcome {
+    if !solver_invoked {
+        return Outcome::NoCalls;
+    }
+    match solver_solution {
+        None => Outcome::Failure,
+        Some((vec, proved)) => {
+            if lex_better(vec, kwok_vector) {
+                if proved {
+                    Outcome::BetterOptimal
+                } else {
+                    Outcome::Better
+                }
+            } else if proved {
+                // not better and provably can't be: KWOK was optimal
+                Outcome::KwokOptimal
+            } else {
+                Outcome::Failure
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicographic_priority_comparison() {
+        assert!(lex_better(&[3, 0], &[2, 9])); // more high-priority wins
+        assert!(!lex_better(&[2, 9], &[3, 0]));
+        assert!(lex_better(&[2, 3], &[2, 2]));
+        assert!(!lex_better(&[2, 2], &[2, 2])); // equal is not better
+    }
+
+    #[test]
+    fn classification_matrix() {
+        let kwok = vec![2, 2];
+        assert_eq!(classify(false, None, &kwok), Outcome::NoCalls);
+        assert_eq!(classify(true, None, &kwok), Outcome::Failure);
+        assert_eq!(
+            classify(true, Some((&[3, 1], true)), &kwok),
+            Outcome::BetterOptimal
+        );
+        assert_eq!(classify(true, Some((&[2, 3], false)), &kwok), Outcome::Better);
+        assert_eq!(
+            classify(true, Some((&[2, 2], true)), &kwok),
+            Outcome::KwokOptimal
+        );
+        // feasible, no improvement, no proof -> Failure (documented)
+        assert_eq!(classify(true, Some((&[2, 2], false)), &kwok), Outcome::Failure);
+    }
+
+    #[test]
+    fn labels_match_paper_legend() {
+        assert_eq!(Outcome::BetterOptimal.label(), "Better&Optimal");
+        assert_eq!(Outcome::ALL.len(), 5);
+    }
+}

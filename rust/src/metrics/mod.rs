@@ -1,0 +1,28 @@
+//! Evaluation metrics: placement-vector comparison, utilisation deltas,
+//! and the paper's five outcome categories.
+
+pub mod categories;
+
+pub use categories::{lex_better, Outcome};
+
+/// Mean utilisation improvement between two states, in percentage points
+/// (Table 1's Δcpu/Δmem util columns).
+pub fn utilization_delta(
+    before: (f64, f64),
+    after: (f64, f64),
+) -> (f64, f64) {
+    (
+        (after.0 - before.0) * 100.0,
+        (after.1 - before.1) * 100.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn delta_in_percentage_points() {
+        let d = super::utilization_delta((0.80, 0.75), (0.83, 0.79));
+        assert!((d.0 - 3.0).abs() < 1e-9);
+        assert!((d.1 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,508 @@
+//! Algorithm 1 — the per-priority optimisation loop.
+//!
+//! Pseudocode line numbers from the paper are cross-referenced in
+//! comments. For each priority tier `pr = 0..=p_max` (0 = highest):
+//!
+//! 1. add the tier's multi-knapsack constraints (L3),
+//! 2. **maximise the number of placed pods** with priority ≤ pr (L5–6),
+//!    then lock the metric: `=` if proven optimal, `≥` otherwise (L7–10),
+//! 3. **minimise disruption**: maximise Σ (Σ_j x_ij + 2·x_i,where) over
+//!    currently-placed pods (L12–14), lock `=` / `≤` (L15–18).
+//!
+//! Our solver, like CP-SAT, has no incremental push/pop, so the model is
+//! rebuilt for every solve with all accumulated lock constraints — and,
+//! as the paper does, the previous solution is installed as a **hint**
+//! to warm-start the next solve.
+//!
+//! Time accounting is the paper's: every solve gets
+//! `α·T_total/(p_max+1)/2 + unused` (see [`crate::util::timer::TimeBudget`]).
+
+use std::time::Duration;
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::solver::{
+    solve_max, CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig, VarId,
+};
+use crate::util::timer::{Deadline, Stopwatch, TimeBudget};
+
+/// Configuration for one optimisation run.
+#[derive(Clone, Debug)]
+pub struct OptimizerConfig {
+    /// `T_total`: overall wall-clock limit across all tiers and phases.
+    pub total_timeout: Duration,
+    /// `α`: fraction of `T_total` pre-partitioned across priority tiers.
+    pub alpha: f64,
+    /// Underlying CP solver feature toggles.
+    pub solver: SolverConfig,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            total_timeout: Duration::from_secs(10),
+            alpha: 0.8,
+            solver: SolverConfig::default(),
+        }
+    }
+}
+
+impl OptimizerConfig {
+    pub fn with_timeout(secs: f64) -> Self {
+        OptimizerConfig {
+            total_timeout: Duration::from_secs_f64(secs),
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-tier solve outcome (both phases).
+#[derive(Clone, Debug)]
+pub struct TierReport {
+    pub priority: u32,
+    pub phase1_status: SolveStatus,
+    /// Number of pods (priority ≤ tier) placed by phase 1.
+    pub phase1_placed: i64,
+    pub phase2_status: SolveStatus,
+    pub phase2_metric: i64,
+    pub phase1_time: Duration,
+    pub phase2_time: Duration,
+}
+
+/// Result of the full Algorithm 1 loop.
+#[derive(Clone, Debug)]
+pub struct OptimizeResult {
+    /// Target assignment for every pod (index = pod id).
+    pub target: Vec<Option<NodeId>>,
+    /// Placed pods per priority tier under `target`.
+    pub placed_per_priority: Vec<usize>,
+    /// True iff *every* phase-1 solve proved optimality — then `target`
+    /// provably maximises the per-priority placement vector.
+    pub proved_optimal: bool,
+    pub tiers: Vec<TierReport>,
+    /// Total wall-clock of the optimisation (incl. model builds).
+    pub duration: Duration,
+    pub stats: SearchStats,
+}
+
+/// Tier-filtered variable table: `vars[pod] = Some(per-node VarIds)` for
+/// pods with priority ≤ the tier (and only selector-feasible nodes get a
+/// variable — labels are the paper's future-work extension, free here).
+struct VarTable {
+    vars: Vec<Option<Vec<Option<VarId>>>>,
+}
+
+impl VarTable {
+    fn var(&self, pod: usize, node: usize) -> Option<VarId> {
+        self.vars[pod].as_ref().and_then(|ns| ns[node])
+    }
+
+    fn eligible_pods(&self) -> impl Iterator<Item = usize> + '_ {
+        self.vars
+            .iter()
+            .enumerate()
+            .filter_map(|(i, v)| v.is_some().then_some(i))
+    }
+}
+
+/// Locked metric from an earlier phase, rebuilt against fresh VarIds on
+/// every model reconstruction.
+#[derive(Clone, Debug)]
+enum LockMetric {
+    /// Phase 1 of `tier`: Σ x over pods with priority ≤ tier.
+    Placed { tier: u32 },
+    /// Phase 2 of `tier`: Σ (Σ_j x_ij + 2 x_i,home) over placed pods ≤ tier.
+    Stay { tier: u32 },
+}
+
+#[derive(Clone, Debug)]
+struct Lock {
+    metric: LockMetric,
+    op: CmpOp,
+    value: i64,
+}
+
+/// Build the model for tier `pr` with all accumulated locks.
+fn build_model(
+    state: &ClusterState,
+    pr: u32,
+    locks: &[Lock],
+) -> (Model, VarTable) {
+    let mut m = Model::new();
+    let nodes = state.nodes();
+    let mut vars: Vec<Option<Vec<Option<VarId>>>> = vec![None; state.pods().len()];
+
+    // Variables + at-most-one per pod (constraint (3)).
+    for pod in state.pods() {
+        if pod.priority.0 > pr {
+            continue;
+        }
+        let per_node: Vec<Option<VarId>> = nodes
+            .iter()
+            .map(|n| pod.selector_matches(n).then(|| m.new_var()))
+            .collect();
+        let amo = LinearExpr::of(per_node.iter().flatten().map(|&v| (v, 1)));
+        if !amo.terms.is_empty() {
+            m.add_le(amo, 1);
+        }
+        vars[pod.id.idx()] = Some(per_node);
+    }
+    let table = VarTable { vars };
+
+    // Knapsack constraints (1) and (2): per node, CPU and RAM. The two
+    // dimensions are declared as resource classes so the solver can apply
+    // its aggregate capacity bound (see solver::search).
+    let mut cpu_class = Vec::with_capacity(nodes.len());
+    let mut ram_class = Vec::with_capacity(nodes.len());
+    for (j, node) in nodes.iter().enumerate() {
+        let mut cpu = LinearExpr::new();
+        let mut ram = LinearExpr::new();
+        for i in table.eligible_pods() {
+            if let Some(v) = table.var(i, j) {
+                let req = state.pods()[i].request;
+                cpu.add(v, req.cpu);
+                ram.add(v, req.ram);
+            }
+        }
+        if !cpu.terms.is_empty() {
+            cpu_class.push(m.next_constraint_index());
+            m.add_le(cpu, node.capacity.cpu);
+            ram_class.push(m.next_constraint_index());
+            m.add_le(ram, node.capacity.ram);
+        }
+    }
+    if !cpu_class.is_empty() {
+        m.add_resource_class(cpu_class);
+        m.add_resource_class(ram_class);
+    }
+
+    // Accumulated phase locks (L8/L10/L16/L18).
+    for lock in locks {
+        let expr = metric_expr(state, &table, &lock.metric);
+        m.add_constraint(expr, lock.op, lock.value);
+    }
+
+    (m, table)
+}
+
+/// Materialise a metric over the current var table.
+fn metric_expr(state: &ClusterState, table: &VarTable, metric: &LockMetric) -> LinearExpr {
+    let mut e = LinearExpr::new();
+    match *metric {
+        LockMetric::Placed { tier } => {
+            for i in table.eligible_pods() {
+                if state.pods()[i].priority.0 > tier {
+                    continue;
+                }
+                for j in 0..state.nodes().len() {
+                    if let Some(v) = table.var(i, j) {
+                        e.add(v, 1);
+                    }
+                }
+            }
+        }
+        LockMetric::Stay { tier } => {
+            for i in table.eligible_pods() {
+                let pod = &state.pods()[i];
+                if pod.priority.0 > tier {
+                    continue;
+                }
+                let Some(home) = state.assignment_of(PodId(i as u32)) else {
+                    continue; // paper: only pods with where ≠ 0
+                };
+                for j in 0..state.nodes().len() {
+                    if let Some(v) = table.var(i, j) {
+                        // weight 1 for any placement + extra 2 for staying home
+                        e.add(v, if j == home.idx() { 3 } else { 1 });
+                    }
+                }
+            }
+        }
+    }
+    e.normalized()
+}
+
+/// Install warm-start hints: prefer the running assignment / the previous
+/// tier's solution (CP-SAT hint per the paper's "Solver" subsection).
+fn install_hints(
+    m: &mut Model,
+    state: &ClusterState,
+    table: &VarTable,
+    previous: &[Option<NodeId>],
+) {
+    for i in table.eligible_pods() {
+        let hint_node = previous[i].or_else(|| state.assignment_of(PodId(i as u32)));
+        if let Some(n) = hint_node {
+            if let Some(v) = table.var(i, n.idx()) {
+                m.hint(v, true);
+            }
+        }
+    }
+}
+
+/// Extract the assignment a solution encodes.
+fn extract_assignment(
+    state: &ClusterState,
+    table: &VarTable,
+    values: &[bool],
+    into: &mut [Option<NodeId>],
+) {
+    for i in table.eligible_pods() {
+        into[i] = None;
+        for j in 0..state.nodes().len() {
+            if let Some(v) = table.var(i, j) {
+                if values[v.idx()] {
+                    into[i] = Some(NodeId(j as u32));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run Algorithm 1 over the cluster. Returns `None` when the solver
+/// produced no usable solution within the budget (the paper's *Failures*
+/// category).
+pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Option<OptimizeResult> {
+    let sw = Stopwatch::start();
+    let mut budget = TimeBudget::new(cfg.total_timeout, cfg.alpha, p_max + 1);
+    let overall = budget.overall_deadline();
+    let mut locks: Vec<Lock> = Vec::new();
+    let mut tiers = Vec::new();
+    let mut stats = SearchStats::default();
+    let mut target: Vec<Option<NodeId>> = vec![None; state.pods().len()];
+    let mut have_solution = false;
+    let mut proved_optimal = true;
+
+    for pr in 0..=p_max {
+        // ---- phase 1: maximise placed pods up to priority pr (L5–L10) ----
+        let (mut m, table) = build_model(state, pr, &locks);
+        install_hints(&mut m, state, &table, &target);
+        let metric1 = metric_expr(state, &table, &LockMetric::Placed { tier: pr });
+
+        let grant = budget.grant_phase().max(Duration::from_millis(2));
+        let t = Stopwatch::start();
+        let sol1 = solve_max(&m, &metric1, Deadline::after(grant).min(overall), &cfg.solver);
+        let phase1_time = t.elapsed();
+        budget.report_used(grant, phase1_time);
+        merge_stats(&mut stats, &sol1.stats);
+
+        if std::env::var_os("KUBE_PACKD_DEBUG").is_some() {
+            eprintln!(
+                "[optimize] tier {pr} phase1: {:?} obj={} grant={:?} used={:?} dec={} prunes={}",
+                sol1.status,
+                sol1.objective,
+                grant,
+                phase1_time,
+                sol1.stats.decisions,
+                sol1.stats.bound_prunes
+            );
+        }
+        if !sol1.status.has_solution() {
+            // No feasible packing surfaced in time for this tier: the run
+            // is a Failure (the paper's grey bar).
+            return None;
+        }
+        locks.push(Lock {
+            metric: LockMetric::Placed { tier: pr },
+            op: if sol1.status == SolveStatus::Optimal {
+                CmpOp::Eq // L8
+            } else {
+                CmpOp::Ge // L10
+            },
+            value: sol1.objective,
+        });
+        proved_optimal &= sol1.status == SolveStatus::Optimal;
+        extract_assignment(state, &table, &sol1.values, &mut target);
+        have_solution = true;
+
+        // ---- phase 2: minimise disruption (L12–L18) -----------------------
+        let (mut m2, table2) = build_model(state, pr, &locks);
+        install_hints(&mut m2, state, &table2, &target);
+        let metric2 = metric_expr(state, &table2, &LockMetric::Stay { tier: pr });
+
+        let grant2 = budget.grant_phase().max(Duration::from_millis(2));
+        let t2 = Stopwatch::start();
+        let sol2 = solve_max(&m2, &metric2, Deadline::after(grant2).min(overall), &cfg.solver);
+        let phase2_time = t2.elapsed();
+        budget.report_used(grant2, phase2_time);
+        merge_stats(&mut stats, &sol2.stats);
+
+        if std::env::var_os("KUBE_PACKD_DEBUG").is_some() {
+            eprintln!(
+                "[optimize] tier {pr} phase2: {:?} obj={} grant={:?} used={:?}",
+                sol2.status, sol2.objective, grant2, phase2_time
+            );
+        }
+        let (phase2_status, phase2_metric) = if sol2.status.has_solution() {
+            locks.push(Lock {
+                metric: LockMetric::Stay { tier: pr },
+                op: if sol2.status == SolveStatus::Optimal {
+                    CmpOp::Eq // L16
+                } else {
+                    CmpOp::Le // L18 (as printed in the paper)
+                },
+                value: sol2.objective,
+            });
+            extract_assignment(state, &table2, &sol2.values, &mut target);
+            (sol2.status, sol2.objective)
+        } else {
+            // Keep phase 1's assignment; the tier is still placed-maximal.
+            (sol2.status, 0)
+        };
+
+        tiers.push(TierReport {
+            priority: pr,
+            phase1_status: sol1.status,
+            phase1_placed: sol1.objective,
+            phase2_status,
+            phase2_metric,
+            phase1_time,
+            phase2_time,
+        });
+    }
+
+    if !have_solution {
+        return None;
+    }
+
+    // Per-priority placement vector of the target.
+    let mut placed = vec![0usize; p_max as usize + 1];
+    for (i, t) in target.iter().enumerate() {
+        if t.is_some() {
+            placed[state.pods()[i].priority.0 as usize] += 1;
+        }
+    }
+
+    Some(OptimizeResult {
+        target,
+        placed_per_priority: placed,
+        proved_optimal,
+        tiers,
+        duration: sw.elapsed(),
+        stats,
+    })
+}
+
+fn merge_stats(into: &mut SearchStats, from: &SearchStats) {
+    into.decisions += from.decisions;
+    into.propagations += from.propagations;
+    into.conflicts += from.conflicts;
+    into.bound_prunes += from.bound_prunes;
+    into.symmetry_skips += from.symmetry_skips;
+    into.max_depth = into.max_depth.max(from.max_depth);
+    into.lns_rounds += from.lns_rounds;
+    into.lns_improvements += from.lns_improvements;
+    into.solve_time_s += from.solve_time_s;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    fn figure1() -> ClusterState {
+        // Default scheduler already spread pods 0,1 over both nodes.
+        let nodes = identical_nodes(2, Resources::new(4000, 4096));
+        let pods = vec![
+            Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+            Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+            Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        st
+    }
+
+    #[test]
+    fn figure1_repacked_optimally() {
+        let st = figure1();
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert!(res.proved_optimal);
+        assert_eq!(res.placed_per_priority, vec![3]); // all three pods fit
+        // pods 0 and 1 now share one node, pod 2 takes the other
+        let a = res.target[0].unwrap();
+        let b = res.target[1].unwrap();
+        let c = res.target[2].unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn respects_priorities_over_counts() {
+        // One node; a high-priority hog vs two small low-priority pods.
+        // Placed-count maximisation per tier must keep the hog (tier 0)
+        // even though evicting it would fit two tier-1 pods.
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "hog", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "s1", Resources::new(500, 500), Priority(1)),
+            Pod::new(2, "s2", Resources::new(500, 500), Priority(1)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let res = optimize(&st, 1, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert_eq!(res.placed_per_priority, vec![1, 0]);
+        assert_eq!(res.target[0], Some(NodeId(0)));
+    }
+
+    #[test]
+    fn minimises_moves_among_optimal_packings() {
+        // Two nodes, two pods already placed apart; a third does not exist.
+        // Any single-node packing is also "optimal" for placed-count; the
+        // stay metric must keep both pods where they are.
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(400, 400), Priority(0)),
+            Pod::new(1, "b", Resources::new(400, 400), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert_eq!(res.target[0], Some(NodeId(0)));
+        assert_eq!(res.target[1], Some(NodeId(1)));
+        assert!(res.proved_optimal);
+        // stay metric: both pods at home = 2 * 3
+        assert_eq!(res.tiers[0].phase2_metric, 6);
+    }
+
+    #[test]
+    fn multi_tier_locks_keep_higher_tiers_intact() {
+        // Tier 0 fills the cluster; tier 1 cannot displace it.
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "h1", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(1, "h2", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(2, "lo", Resources::new(100, 100), Priority(1)),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 1, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert_eq!(res.placed_per_priority, vec![2, 0]);
+        assert_eq!(res.target[2], None);
+        assert_eq!(res.tiers.len(), 2);
+    }
+
+    #[test]
+    fn selector_restricts_candidate_nodes() {
+        let mut nodes = identical_nodes(2, Resources::new(1000, 1000));
+        nodes[1] = nodes[1].clone().with_label("disk", "ssd");
+        let pods = vec![
+            Pod::new(0, "p", Resources::new(100, 100), Priority(0)).with_selector("disk", "ssd"),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert_eq!(res.target[0], Some(NodeId(1)));
+    }
+
+    #[test]
+    fn infeasible_pod_left_unplaced_not_failure() {
+        let nodes = identical_nodes(1, Resources::new(100, 100));
+        let pods = vec![Pod::new(0, "xl", Resources::new(1000, 1000), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(2.0)).unwrap();
+        assert_eq!(res.placed_per_priority, vec![0]);
+        assert_eq!(res.target[0], None);
+        assert!(res.proved_optimal);
+    }
+}

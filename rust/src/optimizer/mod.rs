@@ -1,0 +1,22 @@
+//! The paper's contribution: constraint-based pod packing as a fallback
+//! to the default scheduler.
+//!
+//! * [`algorithm`] — Algorithm 1: the per-priority two-phase optimisation
+//!   loop (maximise placements, then minimise moves) with the α time
+//!   budget and phase-locking constraints.
+//! * [`plan`]      — diff a solver target against the live assignment
+//!   into an executable eviction/placement plan (cross-node pre-emption
+//!   with separate scheduling events, per the paper's Kubernetes-API
+//!   workaround).
+//! * [`plugin`]    — the scheduler-framework integration: queue pausing,
+//!   PreFilter node pinning, PostFilter failure tracking, Reserve
+//!   bookkeeping, PostBind plan completion — the five extension points
+//!   the paper's Go plugin uses.
+
+pub mod algorithm;
+pub mod plan;
+pub mod plugin;
+
+pub use algorithm::{optimize, OptimizeResult, OptimizerConfig, TierReport};
+pub use plan::MovePlan;
+pub use plugin::OptimizingScheduler;

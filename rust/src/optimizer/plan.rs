@@ -1,0 +1,185 @@
+//! Move plans: from a solver target to executable scheduling events.
+//!
+//! Kubernetes has no atomic multi-pod rebind (cross-node pre-emption API
+//! is still under discussion — paper, "Kubernetes Plugin"). The paper's
+//! plugin therefore executes the optimiser's placement as *separate
+//! scheduling events*: evictions first, then (re)placements. Because the
+//! target assignment is globally capacity-feasible, evicting every pod
+//! that moves or leaves before binding anything guarantees each
+//! subsequent bind fits.
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+
+/// One pod's transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PodMove {
+    /// Pending → placed.
+    Place { pod: PodId, to: NodeId },
+    /// Placed → placed elsewhere (evict + rebind).
+    Move { pod: PodId, from: NodeId, to: NodeId },
+    /// Placed → pending (displaced by higher-priority packing).
+    Displace { pod: PodId, from: NodeId },
+}
+
+/// An executable plan. `evictions` must run before `placements`.
+#[derive(Clone, Debug, Default)]
+pub struct MovePlan {
+    /// Pods to evict first (moves + displacements).
+    pub evictions: Vec<(PodId, NodeId)>,
+    /// Pods to bind afterwards, with their target node, in priority order.
+    pub placements: Vec<(PodId, NodeId)>,
+    /// Full transition list (reporting / events).
+    pub transitions: Vec<PodMove>,
+}
+
+impl MovePlan {
+    /// Diff the live assignment against the solver target.
+    pub fn build(state: &ClusterState, target: &[Option<NodeId>]) -> MovePlan {
+        assert_eq!(target.len(), state.pods().len());
+        let mut plan = MovePlan::default();
+        for (i, pod) in state.pods().iter().enumerate() {
+            let cur = state.assignment_of(pod.id);
+            let tgt = target[i];
+            match (cur, tgt) {
+                (None, Some(to)) => {
+                    plan.placements.push((pod.id, to));
+                    plan.transitions.push(PodMove::Place { pod: pod.id, to });
+                }
+                (Some(from), Some(to)) if from != to => {
+                    plan.evictions.push((pod.id, from));
+                    plan.placements.push((pod.id, to));
+                    plan.transitions.push(PodMove::Move { pod: pod.id, from, to });
+                }
+                (Some(from), None) => {
+                    plan.evictions.push((pod.id, from));
+                    plan.transitions.push(PodMove::Displace { pod: pod.id, from });
+                }
+                _ => {} // unchanged
+            }
+        }
+        // Bind order: priority first (0 = highest), then id — determinism
+        // and "higher priorities first" if anything goes wrong mid-plan.
+        plan.placements
+            .sort_by_key(|&(p, _)| (state.pod(p).priority, p));
+        plan
+    }
+
+    /// Number of pods whose node changes (the paper's disruption metric).
+    pub fn disruptions(&self) -> usize {
+        self.transitions
+            .iter()
+            .filter(|t| matches!(t, PodMove::Move { .. } | PodMove::Displace { .. }))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    /// Dry-run the plan on a clone, verifying every step. Returns the
+    /// final utilisation on success.
+    pub fn validate(&self, state: &ClusterState) -> Result<(f64, f64), String> {
+        let mut sim = state.clone();
+        self.execute(&mut sim)?;
+        Ok(sim.utilization())
+    }
+
+    /// Execute against a state: all evictions, then all placements.
+    pub fn execute(&self, state: &mut ClusterState) -> Result<(), String> {
+        for &(pod, _) in &self.evictions {
+            state.evict(pod).map_err(|e| format!("evict {pod:?}: {e}"))?;
+        }
+        for &(pod, node) in &self.placements {
+            state
+                .bind(pod, node)
+                .map_err(|e| format!("bind {pod:?}->{node:?}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    fn figure1_spread() -> ClusterState {
+        let nodes = identical_nodes(2, Resources::new(4000, 4096));
+        let pods = vec![
+            Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+            Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(1)),
+            Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        st
+    }
+
+    #[test]
+    fn builds_and_executes_figure1_plan() {
+        let st = figure1_spread();
+        // target: pods 0,1 together on node 0; pod 2 on node 1
+        let target = vec![Some(NodeId(0)), Some(NodeId(0)), Some(NodeId(1))];
+        let plan = MovePlan::build(&st, &target);
+        assert_eq!(plan.evictions, vec![(PodId(1), NodeId(1))]);
+        // placements sorted by priority: pod 2 (prio 0) before pod 1 (prio 1)
+        assert_eq!(
+            plan.placements,
+            vec![(PodId(2), NodeId(1)), (PodId(1), NodeId(0))]
+        );
+        assert_eq!(plan.disruptions(), 1);
+        let mut live = st.clone();
+        plan.execute(&mut live).unwrap();
+        live.check_invariants().unwrap();
+        assert_eq!(live.assignment_of(PodId(1)), Some(NodeId(0)));
+        assert_eq!(live.assignment_of(PodId(2)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn evictions_always_precede_placements() {
+        // Swap two pods across full nodes: only valid evict-first.
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(1, "b", Resources::new(1000, 1000), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        let target = vec![Some(NodeId(1)), Some(NodeId(0))];
+        let plan = MovePlan::build(&st, &target);
+        assert_eq!(plan.disruptions(), 2);
+        plan.validate(&st).unwrap(); // would fail if binds ran first
+    }
+
+    #[test]
+    fn empty_plan_for_identical_target() {
+        let st = figure1_spread();
+        let target: Vec<_> = st.assignment().to_vec();
+        let plan = MovePlan::build(&st, &target);
+        assert!(plan.is_empty());
+        assert_eq!(plan.disruptions(), 0);
+    }
+
+    #[test]
+    fn displacement_recorded() {
+        let st = figure1_spread();
+        let target = vec![None, Some(NodeId(1)), None];
+        let plan = MovePlan::build(&st, &target);
+        assert_eq!(plan.evictions.len(), 1);
+        assert!(plan
+            .transitions
+            .iter()
+            .any(|t| matches!(t, PodMove::Displace { pod, .. } if *pod == PodId(0))));
+    }
+
+    #[test]
+    fn validate_rejects_bogus_target() {
+        let st = figure1_spread();
+        // Node 0 cannot hold all three pods' RAM (2048+2048+3072 > 4096).
+        let target = vec![Some(NodeId(0)), Some(NodeId(0)), Some(NodeId(0))];
+        let plan = MovePlan::build(&st, &target);
+        assert!(plan.validate(&st).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Scheduler-framework integration of the optimiser — the paper's
+//! "Kubernetes Plugin" section, one extension point at a time:
+//!
+//! * **PreEnqueue** — while a plan is in flight, pods that are part of it
+//!   are admitted; unrelated new arrivals are buffered by the paused
+//!   queue (the paper's "temporarily paused ... re-queued once the
+//!   solver execution completes").
+//! * **PreFilter** — plan pods are pinned to their solver-chosen node, so
+//!   the default scheduling cycle binds them exactly where the optimiser
+//!   decided ("assigns the affected pods to their target nodes, allowing
+//!   the default scheduler to bind them accordingly").
+//! * **PostFilter** — pods that fail filtering are recorded; they are the
+//!   trigger signal for the optimiser (pre-emption hook in Kubernetes).
+//! * **Reserve/Unreserve** — per-pod reservation bookkeeping (the paper
+//!   reserves by resource since pod names change on rescheduling; our
+//!   simulator keeps stable ids, so this tracks reservations for
+//!   observability and rollback symmetry).
+//! * **PostBind** — marks plan entries done and completes the plan when
+//!   every intended allocation realised.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::cluster::{ClusterState, Event, NodeId, PodId};
+use crate::metrics::lex_better;
+use crate::scheduler::default::RunStats;
+use crate::scheduler::framework::{
+    CycleContext, PluginDecision, PostBindPlugin, PostFilterPlugin, PreEnqueuePlugin,
+    PreFilterPlugin, ReservePlugin,
+};
+use crate::scheduler::DefaultScheduler;
+use crate::util::timer::Stopwatch;
+
+use super::algorithm::{optimize, OptimizeResult, OptimizerConfig};
+use super::plan::MovePlan;
+
+/// Shared plan state between the five plugin instances and the driver.
+#[derive(Debug, Default)]
+pub struct PlanState {
+    pub active: bool,
+    /// Solver-chosen node per plan pod.
+    pub targets: BTreeMap<PodId, NodeId>,
+    /// Plan pods already bound.
+    pub done: Vec<PodId>,
+    /// Outstanding reservations (Reserve ran, PostBind pending).
+    pub reserved: BTreeMap<PodId, NodeId>,
+    /// Pods PostFilter saw fail (the optimiser trigger signal).
+    pub filter_failures: Vec<PodId>,
+}
+
+impl PlanState {
+    fn remaining(&self) -> usize {
+        self.targets.len() - self.done.len()
+    }
+}
+
+/// The five-extension-point plugin (one struct registered five times).
+pub struct PackdPlugin {
+    state: Rc<RefCell<PlanState>>,
+}
+
+impl PreEnqueuePlugin for PackdPlugin {
+    fn pre_enqueue(&mut self, _state: &ClusterState, _pod: PodId) -> PluginDecision {
+        // All pods may enqueue; non-plan arrivals during a solve are held
+        // by the queue's pause, not rejected here.
+        PluginDecision::Allow
+    }
+    fn name(&self) -> &'static str {
+        "PackdPreEnqueue"
+    }
+}
+
+impl PreFilterPlugin for PackdPlugin {
+    fn pre_filter(
+        &mut self,
+        _state: &ClusterState,
+        pod: PodId,
+        ctx: &mut CycleContext,
+    ) -> PluginDecision {
+        let ps = self.state.borrow();
+        if ps.active {
+            if let Some(&target) = ps.targets.get(&pod) {
+                ctx.pinned_node = Some(target);
+            }
+        }
+        PluginDecision::Allow
+    }
+    fn name(&self) -> &'static str {
+        "PackdPreFilter"
+    }
+}
+
+impl PostFilterPlugin for PackdPlugin {
+    fn post_filter(&mut self, _state: &ClusterState, pod: PodId) {
+        self.state.borrow_mut().filter_failures.push(pod);
+    }
+    fn name(&self) -> &'static str {
+        "PackdPostFilter"
+    }
+}
+
+impl ReservePlugin for PackdPlugin {
+    fn reserve(&mut self, _state: &ClusterState, pod: PodId, node: NodeId, ctx: &mut CycleContext) {
+        ctx.reserved = Some(node);
+        let mut ps = self.state.borrow_mut();
+        if ps.active && ps.targets.contains_key(&pod) {
+            ps.reserved.insert(pod, node);
+        }
+    }
+    fn unreserve(&mut self, _state: &ClusterState, pod: PodId, ctx: &mut CycleContext) {
+        ctx.reserved = None;
+        self.state.borrow_mut().reserved.remove(&pod);
+    }
+    fn name(&self) -> &'static str {
+        "PackdReserve"
+    }
+}
+
+impl PostBindPlugin for PackdPlugin {
+    fn post_bind(&mut self, _state: &ClusterState, pod: PodId, _node: NodeId) {
+        let mut ps = self.state.borrow_mut();
+        ps.reserved.remove(&pod);
+        if ps.active && ps.targets.contains_key(&pod) && !ps.done.contains(&pod) {
+            ps.done.push(pod);
+            if ps.remaining() == 0 {
+                ps.active = false; // plan complete
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "PackdPostBind"
+    }
+}
+
+/// Report of one `OptimizingScheduler::run` pass.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub default_stats: RunStats,
+    pub solver_invoked: bool,
+    /// Solver result (None if not invoked or failed).
+    pub optimize: Option<OptimizeResult>,
+    pub improved: bool,
+    pub proved_optimal: bool,
+    /// Pods whose node changed to realise the plan.
+    pub disruptions: usize,
+    /// Placement vector before / after the full pass.
+    pub placed_before: Vec<usize>,
+    pub placed_after: Vec<usize>,
+    pub solver_wall: std::time::Duration,
+}
+
+/// Default scheduler + optimiser fallback, wired through the plugin.
+pub struct OptimizingScheduler {
+    pub scheduler: DefaultScheduler,
+    plan: Rc<RefCell<PlanState>>,
+    pub cfg: OptimizerConfig,
+    pub p_max: u32,
+}
+
+impl OptimizingScheduler {
+    pub fn new(p_max: u32, cfg: OptimizerConfig) -> Self {
+        let plan = Rc::new(RefCell::new(PlanState::default()));
+        let mut scheduler = DefaultScheduler::kwok_default();
+        // Register the plugin at its five extension points.
+        scheduler.framework.pre_enqueue.push(Box::new(PackdPlugin { state: plan.clone() }));
+        scheduler.framework.pre_filter.push(Box::new(PackdPlugin { state: plan.clone() }));
+        scheduler.framework.post_filter.push(Box::new(PackdPlugin { state: plan.clone() }));
+        scheduler.framework.reserve.push(Box::new(PackdPlugin { state: plan.clone() }));
+        scheduler.framework.post_bind.push(Box::new(PackdPlugin { state: plan.clone() }));
+        OptimizingScheduler {
+            scheduler,
+            plan,
+            cfg,
+            p_max,
+        }
+    }
+
+    /// Full pass: default scheduling, then — if pods went pending — the
+    /// solver fallback with plan execution (cross-node pre-emption).
+    pub fn run(&mut self, state: &mut ClusterState) -> RunReport {
+        self.scheduler.enqueue_pending(state);
+        let default_stats = self.scheduler.run_queue(state);
+        let placed_before = state.placed_per_priority(self.p_max);
+
+        if self.scheduler.queue.unschedulable_len() == 0 {
+            return RunReport {
+                default_stats,
+                solver_invoked: false,
+                optimize: None,
+                improved: false,
+                proved_optimal: false,
+                disruptions: 0,
+                placed_after: placed_before.clone(),
+                placed_before,
+                solver_wall: std::time::Duration::ZERO,
+            };
+        }
+
+        // --- fallback path -------------------------------------------------
+        self.scheduler.queue.pause();
+        state.events.push(Event::SolverInvoked {
+            pending: self.scheduler.queue.unschedulable_len(),
+        });
+        let sw = Stopwatch::start();
+        let result = optimize(state, self.p_max, &self.cfg);
+        let solver_wall = sw.elapsed();
+
+        let mut improved = false;
+        let mut proved = false;
+        let mut disruptions = 0;
+
+        if let Some(res) = &result {
+            proved = res.proved_optimal;
+            improved = lex_better(&res.placed_per_priority, &placed_before);
+            if improved {
+                let plan = MovePlan::build(state, &res.target);
+                disruptions = plan.disruptions();
+                // Evictions run as direct pre-emption events ...
+                for &(pod, _) in &plan.evictions {
+                    state.evict(pod).expect("plan eviction must apply");
+                }
+                // ... then placements go through the scheduling framework,
+                // pinned to their targets by PackdPreFilter.
+                {
+                    let mut ps = self.plan.borrow_mut();
+                    ps.active = true;
+                    ps.targets = plan.placements.iter().copied().collect();
+                    ps.done.clear();
+                }
+                // Plan pods are scheduled FIRST, while every other pending
+                // pod stays parked (the paper's plugin keeps an internal
+                // list and re-queues it only after the plan completes) —
+                // otherwise a non-plan pod could race into capacity the
+                // plan needs.
+                self.scheduler.queue.resume();
+                for &(pod, _) in &plan.placements {
+                    if state.assignment_of(pod).is_none() {
+                        // evicted movers + pending placements re-enter here
+                        self.scheduler.enqueue(state, pod);
+                    }
+                }
+                let stats2 = self.scheduler.run_queue(state);
+                // Every plan pod must have bound (the target is feasible
+                // and nothing else was allowed to run).
+                assert!(
+                    !self.plan.borrow().active,
+                    "plan incomplete after drain: {stats2:?}"
+                );
+                for &(pod, node) in &plan.placements {
+                    debug_assert_eq!(state.assignment_of(pod), Some(node));
+                    state.events.push(Event::PlanBind { pod, node });
+                }
+                // Now the held-back pods get their ordinary retry.
+                self.scheduler.queue.flush_unschedulable();
+                self.scheduler.run_queue(state);
+            } else {
+                self.scheduler.queue.resume();
+            }
+        } else {
+            self.scheduler.queue.resume();
+        }
+
+        state.events.push(Event::SolverFinished {
+            improved,
+            proved_optimal: proved,
+            duration_ms: solver_wall.as_millis() as u64,
+        });
+
+        RunReport {
+            default_stats,
+            solver_invoked: true,
+            optimize: result,
+            improved,
+            proved_optimal: proved,
+            disruptions,
+            placed_after: state.placed_per_priority(self.p_max),
+            placed_before,
+            solver_wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    fn figure1_pods() -> Vec<Pod> {
+        vec![
+            Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+            Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+            Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+        ]
+    }
+
+    #[test]
+    fn end_to_end_figure1_fallback() {
+        let mut state = ClusterState::new(identical_nodes(2, Resources::new(4000, 4096)), figure1_pods());
+        let mut osched = OptimizingScheduler::new(0, OptimizerConfig::with_timeout(5.0));
+        let report = osched.run(&mut state);
+
+        assert!(report.solver_invoked);
+        assert!(report.improved);
+        assert!(report.proved_optimal);
+        assert_eq!(report.placed_before, vec![2]);
+        assert_eq!(report.placed_after, vec![3]);
+        assert_eq!(report.disruptions, 1); // one pod moved across nodes
+        state.check_invariants().unwrap();
+        // event trail tells the story
+        assert!(state.events.evictions() >= 1);
+        assert!(state
+            .events
+            .all()
+            .iter()
+            .any(|e| matches!(e, Event::SolverFinished { improved: true, .. })));
+    }
+
+    #[test]
+    fn no_call_when_default_suffices() {
+        let mut state = ClusterState::new(
+            identical_nodes(2, Resources::new(8000, 8192)),
+            figure1_pods(),
+        );
+        let mut osched = OptimizingScheduler::new(0, OptimizerConfig::with_timeout(1.0));
+        let report = osched.run(&mut state);
+        assert!(!report.solver_invoked);
+        assert_eq!(report.placed_after, vec![3]);
+        assert_eq!(state.events.count(|e| matches!(e, Event::SolverInvoked { .. })), 0);
+    }
+
+    #[test]
+    fn kwok_optimal_when_no_improvement_possible() {
+        // One node, two pods that can never fit together.
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "b", Resources::new(900, 900), Priority(0)),
+        ];
+        let mut state = ClusterState::new(identical_nodes(1, Resources::new(1000, 1000)), pods);
+        let mut osched = OptimizingScheduler::new(0, OptimizerConfig::with_timeout(2.0));
+        let report = osched.run(&mut state);
+        assert!(report.solver_invoked);
+        assert!(!report.improved);
+        assert!(report.proved_optimal); // proves KWOK's placement optimal
+        assert_eq!(report.placed_after, vec![1]);
+    }
+
+    #[test]
+    fn priorities_respected_in_fallback() {
+        // Low-priority pods already run on both nodes; a high-priority pod
+        // arrives pending. The optimiser must place the high-priority pod
+        // even at the cost of displacing a low one (cross-node pre-emption
+        // that the default scheduler, with DefaultPreemption disabled,
+        // cannot perform).
+        let pods = vec![
+            Pod::new(0, "lo-1", Resources::new(600, 600), Priority(1)),
+            Pod::new(1, "lo-2", Resources::new(600, 600), Priority(1)),
+            Pod::new(2, "hi", Resources::new(900, 900), Priority(0)),
+        ];
+        let mut state = ClusterState::new(identical_nodes(2, Resources::new(1000, 1000)), pods);
+        state.bind(PodId(0), crate::cluster::NodeId(0)).unwrap();
+        state.bind(PodId(1), crate::cluster::NodeId(1)).unwrap();
+        let mut osched = OptimizingScheduler::new(1, OptimizerConfig::with_timeout(5.0));
+        let report = osched.run(&mut state);
+        assert!(report.solver_invoked);
+        assert!(report.improved);
+        // hi placed; exactly one lo survives (the other node can't fit two lo)
+        assert!(state.assignment_of(PodId(2)).is_some());
+        assert_eq!(report.placed_after, vec![1, 1]);
+    }
+}

@@ -1,0 +1,119 @@
+//! XLA engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* (not a
+//! serialized `HloModuleProto` — jax ≥ 0.5 emits 64-bit instruction ids
+//! the bundled xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids). One `PjRtLoadedExecutable` per (P, N) shape variant; inputs are
+//! padded to the smallest variant that fits (see
+//! [`super::scorer::XlaScorer`] for the padding semantics).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Shape variants baked by `python/compile/aot.py` (keep in sync with
+/// `SHAPE_VARIANTS` there).
+pub const SHAPE_VARIANTS: [(usize, usize); 2] = [(64, 8), (256, 32)];
+
+/// One compiled scorer executable.
+struct ScorerExe {
+    p: usize,
+    n: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client plus the compiled scorer variants.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    scorers: Vec<ScorerExe>,
+}
+
+impl XlaEngine {
+    /// Create a client and compile every artifact found in `dir`.
+    /// Missing individual artifacts are skipped (callers can check
+    /// [`XlaEngine::num_variants`]); a missing directory is an error.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        let dir = dir.as_ref();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} not found — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut scorers = Vec::new();
+        for &(p, n) in &SHAPE_VARIANTS {
+            let path: PathBuf = dir.join(format!("scorer_p{p}_n{n}.hlo.txt"));
+            if !path.is_file() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            scorers.push(ScorerExe { p, n, exe });
+        }
+        Ok(XlaEngine { client, scorers })
+    }
+
+    /// Standard artifact location relative to the repo root.
+    pub fn load_default() -> Result<XlaEngine> {
+        XlaEngine::load("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn num_variants(&self) -> usize {
+        self.scorers.len()
+    }
+
+    /// Smallest variant with `p ≥ pods` and `n ≥ nodes`.
+    pub fn pick_variant(&self, pods: usize, nodes: usize) -> Option<(usize, usize)> {
+        self.scorers
+            .iter()
+            .filter(|s| s.p >= pods && s.n >= nodes)
+            .map(|s| (s.p, s.n))
+            .min()
+    }
+
+    /// Execute the (P, N) scorer variant. Inputs are row-major flattened
+    /// and must already be padded to exactly (P·2, N·2, N·2) elements.
+    /// Returns (scores[P·N], best[P], feasible[P]).
+    pub fn execute_scorer(
+        &self,
+        (p, n): (usize, usize),
+        pod_req: &[f32],
+        node_free: &[f32],
+        node_cap: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<i32>)> {
+        assert_eq!(pod_req.len(), p * 2, "pod_req padding mismatch");
+        assert_eq!(node_free.len(), n * 2, "node_free padding mismatch");
+        assert_eq!(node_cap.len(), n * 2, "node_cap padding mismatch");
+        let s = self
+            .scorers
+            .iter()
+            .find(|s| s.p == p && s.n == n)
+            .context("unknown scorer variant")?;
+
+        let x = xla::Literal::vec1(pod_req).reshape(&[p as i64, 2])?;
+        let f = xla::Literal::vec1(node_free).reshape(&[n as i64, 2])?;
+        let c = xla::Literal::vec1(node_cap).reshape(&[n as i64, 2])?;
+        let result = s.exe.execute::<xla::Literal>(&[x, f, c])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (scores, best, feasible).
+        let (scores, best, feasible) = result.to_tuple3()?;
+        Ok((
+            scores.to_vec::<f32>()?,
+            best.to_vec::<i32>()?,
+            feasible.to_vec::<i32>()?,
+        ))
+    }
+}
+
+// NOTE: engine tests live in `rust/tests/runtime_parity.rs` (they need
+// built artifacts, which unit tests must not assume).

@@ -1,0 +1,19 @@
+//! PJRT runtime: execute the AOT-compiled L1/L2 batch scorer from Rust.
+//!
+//! `make artifacts` lowers the JAX scoring graph (which wraps the Pallas
+//! kernel) to HLO text; [`engine::XlaEngine`] loads those artifacts,
+//! compiles them once on the PJRT CPU client, and serves `execute` calls
+//! from the scheduler's hot path. Python never runs at request time.
+//!
+//! [`scorer`] provides the two interchangeable [`BatchScorer`] backends:
+//! the XLA one and a bit-exact native mirror (also the fallback when no
+//! artifacts are present). `rust/tests/runtime_parity.rs` pins their
+//! equality.
+//!
+//! [`BatchScorer`]: crate::scheduler::default::BatchScorer
+
+pub mod engine;
+pub mod scorer;
+
+pub use engine::XlaEngine;
+pub use scorer::{NativeScorer, XlaScorer, INFEASIBLE};

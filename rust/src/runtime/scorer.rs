@@ -1,0 +1,181 @@
+//! The two [`BatchScorer`] backends.
+//!
+//! * [`NativeScorer`] — pure-Rust mirror of the L1 kernel's arithmetic
+//!   (f32 exactly, same operation order): the fallback when artifacts are
+//!   absent and the oracle in parity tests.
+//! * [`XlaScorer`] — pads inputs to an AOT variant and executes the
+//!   compiled HLO through [`super::engine::XlaEngine`].
+//!
+//! Padding contract (pinned on the python side by
+//! `python/tests/test_kernel.py::test_padding_semantics`):
+//! pod rows pad with `req = 0` (harmless, rows ignored), node rows pad
+//! with `free = -1, cap = 1` (infeasible everywhere, never selected).
+//!
+//! [`BatchScorer`]: crate::scheduler::default::BatchScorer
+
+use crate::cluster::{ClusterState, PodId};
+use crate::scheduler::default::BatchScorer;
+use crate::scheduler::plugins::LeastAllocated;
+
+use super::engine::XlaEngine;
+
+/// Score marking an infeasible (filtered-out) node — the kernel contract.
+pub const INFEASIBLE: f32 = -1.0;
+
+/// Pure-Rust scorer, numerically identical to the Pallas kernel.
+#[derive(Default)]
+pub struct NativeScorer;
+
+impl NativeScorer {
+    /// Score a request row against every node of `state`.
+    pub fn row(state: &ClusterState, req_cpu: f32, req_ram: f32) -> Vec<f32> {
+        state
+            .nodes()
+            .iter()
+            .map(|node| {
+                let free = state.free(node.id);
+                LeastAllocated::formula(
+                    free.cpu as f32,
+                    free.ram as f32,
+                    node.capacity.cpu as f32,
+                    node.capacity.ram as f32,
+                    req_cpu,
+                    req_ram,
+                )
+            })
+            .collect()
+    }
+}
+
+impl BatchScorer for NativeScorer {
+    fn score_row(&mut self, state: &ClusterState, pod: PodId) -> Vec<f32> {
+        let req = state.pod(pod).request;
+        NativeScorer::row(state, req.cpu as f32, req.ram as f32)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// XLA-backed scorer: one PJRT execute per invocation, all nodes (and,
+/// for `score_matrix`, all pods) in a single device call.
+pub struct XlaScorer {
+    engine: XlaEngine,
+    /// Executions performed (exposed for benches).
+    pub executions: u64,
+}
+
+impl XlaScorer {
+    pub fn new(engine: XlaEngine) -> Self {
+        XlaScorer {
+            engine,
+            executions: 0,
+        }
+    }
+
+    /// Load from the default `artifacts/` directory.
+    pub fn from_artifacts() -> anyhow::Result<Self> {
+        let engine = XlaEngine::load_default()?;
+        anyhow::ensure!(
+            engine.num_variants() > 0,
+            "no scorer artifacts found — run `make artifacts`"
+        );
+        Ok(XlaScorer::new(engine))
+    }
+
+    /// Pad + execute for an arbitrary set of pods. Returns one score row
+    /// per requested pod (each row truncated to the real node count).
+    pub fn score_pods(&mut self, state: &ClusterState, pods: &[PodId]) -> Vec<Vec<f32>> {
+        let n_nodes = state.nodes().len();
+        let (p, n) = self
+            .engine
+            .pick_variant(pods.len().max(1), n_nodes)
+            .unwrap_or_else(|| {
+                panic!(
+                    "no AOT variant fits {} pods x {} nodes",
+                    pods.len(),
+                    n_nodes
+                )
+            });
+
+        // Pod rows: requests, padded with zeros.
+        let mut pod_req = vec![0f32; p * 2];
+        for (i, &pod) in pods.iter().enumerate() {
+            let r = state.pod(pod).request;
+            pod_req[i * 2] = r.cpu as f32;
+            pod_req[i * 2 + 1] = r.ram as f32;
+        }
+        // Node rows: free/cap, padded with (-1, 1) = never feasible.
+        let mut node_free = vec![-1f32; n * 2];
+        let mut node_cap = vec![1f32; n * 2];
+        for (j, node) in state.nodes().iter().enumerate() {
+            let free = state.free(node.id);
+            node_free[j * 2] = free.cpu as f32;
+            node_free[j * 2 + 1] = free.ram as f32;
+            node_cap[j * 2] = node.capacity.cpu as f32;
+            node_cap[j * 2 + 1] = node.capacity.ram as f32;
+        }
+
+        let (scores, _best, _feasible) = self
+            .engine
+            .execute_scorer((p, n), &pod_req, &node_free, &node_cap)
+            .expect("scorer execution failed");
+        self.executions += 1;
+
+        pods.iter()
+            .enumerate()
+            .map(|(i, _)| scores[i * n..i * n + n_nodes].to_vec())
+            .collect()
+    }
+}
+
+impl BatchScorer for XlaScorer {
+    fn score_row(&mut self, state: &ClusterState, pod: PodId) -> Vec<f32> {
+        self.score_pods(state, &[pod]).pop().unwrap()
+    }
+
+    fn score_matrix(&mut self, state: &ClusterState, pods: &[PodId]) -> Vec<Vec<f32>> {
+        self.score_pods(state, pods)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, ClusterState, NodeId, Pod, Priority, Resources};
+
+    #[test]
+    fn native_row_matches_plugin_scores() {
+        let nodes = identical_nodes(3, Resources::new(4000, 4000));
+        let pods = vec![Pod::new(0, "p", Resources::new(500, 1500), Priority(0))];
+        let mut st = ClusterState::new(nodes, pods);
+        let extra = st.add_pod(Pod::new(0, "q", Resources::new(1000, 1000), Priority(0)));
+        st.bind(extra, NodeId(1)).unwrap();
+
+        let mut scorer = NativeScorer;
+        let row = scorer.score_row(&st, PodId(0));
+        use crate::scheduler::framework::ScorePlugin;
+        let plugin = LeastAllocated;
+        for (j, &s) in row.iter().enumerate() {
+            let want = plugin.score(&st, PodId(0), NodeId(j as u32)) as f32;
+            assert!((s - want).abs() < 1e-6, "node {j}: {s} vs {want}");
+        }
+        // node 1 is fuller -> lower score than empty nodes
+        assert!(row[1] < row[0]);
+        assert_eq!(row[0], row[2]);
+    }
+
+    #[test]
+    fn native_marks_infeasible() {
+        let nodes = identical_nodes(1, Resources::new(100, 100));
+        let pods = vec![Pod::new(0, "xl", Resources::new(200, 50), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let row = NativeScorer.score_row(&st, PodId(0));
+        assert_eq!(row, vec![INFEASIBLE]);
+    }
+}

@@ -1,0 +1,106 @@
+//! The binding "cycle".
+//!
+//! In Kubernetes, binding is asynchronous (the scheduler posts a Binding
+//! object; kubelet eventually runs the pod). Under KWOK there is no
+//! kubelet, so binding is synchronous: reserve → permit → pre-bind →
+//! bind → post-bind collapse into one call that mutates [`ClusterState`].
+
+use crate::cluster::{ClusterState, NodeId, PodId, StateError};
+use crate::scheduler::framework::{CycleContext, Framework, PluginDecision};
+
+/// Outcome of one binding attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BindResult {
+    Bound,
+    /// A gate plugin (Permit/PreBind) rejected, or the state refused the
+    /// bind (capacity raced away). The cycle must unreserve and requeue.
+    Rejected(String),
+}
+
+/// Run the binding half of the cycle for an already-selected host.
+pub fn bind_cycle(
+    fw: &mut Framework,
+    state: &mut ClusterState,
+    pod: PodId,
+    node: NodeId,
+    ctx: &mut CycleContext,
+) -> BindResult {
+    fw.run_reserve(state, pod, node, ctx);
+
+    if let PluginDecision::Reject(r) = fw.run_permit(state, pod, node) {
+        fw.run_unreserve(state, pod, ctx);
+        return BindResult::Rejected(format!("permit: {r}"));
+    }
+    if let PluginDecision::Reject(r) = fw.run_pre_bind(state, pod, node) {
+        fw.run_unreserve(state, pod, ctx);
+        return BindResult::Rejected(format!("prebind: {r}"));
+    }
+    match state.bind(pod, node) {
+        Ok(()) => {
+            fw.run_post_bind(state, pod, node);
+            BindResult::Bound
+        }
+        Err(e @ StateError::InsufficientCapacity { .. })
+        | Err(e @ StateError::AlreadyBound(_))
+        | Err(e @ StateError::SelectorMismatch { .. })
+        | Err(e @ StateError::NotBound(_)) => {
+            fw.run_unreserve(state, pod, ctx);
+            BindResult::Rejected(format!("bind: {e}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+    use crate::scheduler::framework::PermitPlugin;
+
+    struct DenyPermit;
+    impl PermitPlugin for DenyPermit {
+        fn permit(&mut self, _: &ClusterState, _: PodId, _: NodeId) -> PluginDecision {
+            PluginDecision::Reject("testing".into())
+        }
+        fn name(&self) -> &'static str {
+            "DenyPermit"
+        }
+    }
+
+    fn setup() -> (Framework, ClusterState) {
+        let st = ClusterState::new(
+            identical_nodes(1, Resources::new(1000, 1000)),
+            vec![Pod::new(0, "p", Resources::new(100, 100), Priority(0))],
+        );
+        (Framework::new(), st)
+    }
+
+    #[test]
+    fn successful_bind_mutates_state() {
+        let (mut fw, mut st) = setup();
+        let mut ctx = CycleContext::default();
+        let r = bind_cycle(&mut fw, &mut st, PodId(0), NodeId(0), &mut ctx);
+        assert_eq!(r, BindResult::Bound);
+        assert_eq!(st.assignment_of(PodId(0)), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn permit_rejection_rolls_back() {
+        let (mut fw, mut st) = setup();
+        fw.permit.push(Box::new(DenyPermit));
+        let mut ctx = CycleContext::default();
+        let r = bind_cycle(&mut fw, &mut st, PodId(0), NodeId(0), &mut ctx);
+        assert!(matches!(r, BindResult::Rejected(_)));
+        assert_eq!(st.assignment_of(PodId(0)), None);
+        assert_eq!(st.free(NodeId(0)), Resources::new(1000, 1000));
+    }
+
+    #[test]
+    fn capacity_race_is_rejected_not_panicked() {
+        let (mut fw, mut st) = setup();
+        let fat = st.add_pod(Pod::new(0, "fat", Resources::new(1000, 1000), Priority(0)));
+        st.bind(fat, NodeId(0)).unwrap();
+        let mut ctx = CycleContext::default();
+        let r = bind_cycle(&mut fw, &mut st, PodId(0), NodeId(0), &mut ctx);
+        assert!(matches!(r, BindResult::Rejected(_)));
+    }
+}

@@ -1,0 +1,263 @@
+//! The default scheduler: the scheduling cycle over the framework.
+//!
+//! One `schedule_one` call is one scheduling cycle of Fig. 2: PreFilter →
+//! Filter → (PostFilter on total failure) → Score → NormalizeScore →
+//! select host (lexicographic tie-break) → binding cycle. `run_queue`
+//! drains the scheduling queue with `parallelism = 1` — the paper's
+//! deterministic configuration.
+//!
+//! The scoring phase is pluggable between two *numerically identical*
+//! backends (parity pinned by `rust/tests/runtime_parity.rs`):
+//!
+//! * the [`plugins::LeastAllocated`] Score plugin (pure rust), or
+//! * a [`BatchScorer`] — the PJRT-executed XLA/Pallas artifact
+//!   (`runtime::XlaScorer`), scoring the pod against all nodes in one
+//!   device call. Python is never involved at runtime; the artifact was
+//!   AOT-compiled by `make artifacts`.
+
+use crate::cluster::{ClusterState, Event, NodeId, PodId};
+
+use super::binder::{bind_cycle, BindResult};
+use super::framework::{CycleContext, Framework, PluginDecision};
+use super::queue::SchedulingQueue;
+
+/// Batch scoring backend (implemented by `runtime::XlaScorer` and
+/// `runtime::NativeScorer`). Returns one score per node, `-1.0` marking
+/// infeasible nodes — the L1 kernel's contract.
+pub trait BatchScorer {
+    fn score_row(&mut self, state: &ClusterState, pod: PodId) -> Vec<f32>;
+    /// Score many pods at once (the optimiser and benches use this).
+    fn score_matrix(&mut self, state: &ClusterState, pods: &[PodId]) -> Vec<Vec<f32>> {
+        pods.iter().map(|&p| self.score_row(state, p)).collect()
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// Outcome of a single scheduling cycle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleOutcome {
+    Bound(NodeId),
+    Unschedulable(String),
+}
+
+/// Counters for a queue-drain run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunStats {
+    pub cycles: usize,
+    pub bound: usize,
+    pub unschedulable: usize,
+}
+
+/// The default scheduler: framework + queue + optional batch scorer.
+pub struct DefaultScheduler {
+    pub framework: Framework,
+    pub queue: SchedulingQueue,
+    batch_scorer: Option<Box<dyn BatchScorer>>,
+}
+
+impl DefaultScheduler {
+    /// The paper's deterministic profile: NodeResourcesFit filter,
+    /// LeastAllocated scoring, PrioritySort queue order, no pre-emption.
+    pub fn kwok_default() -> Self {
+        use super::plugins::{LeastAllocated, NodeResourcesFit, PrioritySort};
+        let mut fw = Framework::new();
+        fw.set_queue_sort(Box::new(PrioritySort));
+        fw.filter.push(Box::new(NodeResourcesFit));
+        fw.score.push(Box::new(LeastAllocated));
+        DefaultScheduler {
+            framework: fw,
+            queue: SchedulingQueue::new(),
+            batch_scorer: None,
+        }
+    }
+
+    /// Same profile, but the scoring phase executes on the XLA runtime
+    /// (or any other [`BatchScorer`]). Score plugins are bypassed; the
+    /// backend must be numerically identical to `LeastAllocated`.
+    pub fn with_batch_scorer(mut self, scorer: Box<dyn BatchScorer>) -> Self {
+        self.batch_scorer = Some(scorer);
+        self
+    }
+
+    pub fn scorer_name(&self) -> &'static str {
+        self.batch_scorer
+            .as_ref()
+            .map(|s| s.name())
+            .unwrap_or("plugin:LeastAllocated")
+    }
+
+    /// Enqueue every pending pod of `state` (respecting PreEnqueue gates).
+    pub fn enqueue_pending(&mut self, state: &ClusterState) {
+        for pod in state.pending_pods() {
+            self.enqueue(state, pod);
+        }
+    }
+
+    /// Enqueue one pod through the PreEnqueue extension point.
+    pub fn enqueue(&mut self, state: &ClusterState, pod: PodId) {
+        match self.framework.run_pre_enqueue(state, pod) {
+            PluginDecision::Allow => {
+                self.queue.push(pod, state.pod(pod).priority);
+            }
+            PluginDecision::Reject(_) => {
+                // Kubernetes parks such pods in a special queue; the
+                // optimiser plugin uses this to hold pods while a plan is
+                // in flight. They re-enter via `enqueue` later.
+            }
+        }
+    }
+
+    /// One scheduling cycle for `pod`.
+    pub fn schedule_one(&mut self, state: &mut ClusterState, pod: PodId) -> ScheduleOutcome {
+        let mut ctx = CycleContext::default();
+
+        if let PluginDecision::Reject(r) = self.framework.run_pre_filter(state, pod, &mut ctx) {
+            state.events.push(Event::Unschedulable { pod });
+            return ScheduleOutcome::Unschedulable(format!("prefilter: {r}"));
+        }
+
+        let feasible = self.framework.run_filter(state, pod, &ctx);
+        if feasible.is_empty() {
+            self.framework.run_post_filter(state, pod);
+            state.events.push(Event::Unschedulable { pod });
+            return ScheduleOutcome::Unschedulable("no feasible node".into());
+        }
+
+        let mut scores: Vec<(NodeId, f64)> = match &mut self.batch_scorer {
+            Some(backend) => {
+                // Hot path: one PJRT execute scores all nodes; keep only
+                // the feasible ones (the kernel marks the rest -1).
+                let row = backend.score_row(state, pod);
+                feasible
+                    .iter()
+                    .map(|&n| (n, row[n.idx()] as f64))
+                    .collect()
+            }
+            None => self.framework.run_score(state, pod, &feasible),
+        };
+        if self.batch_scorer.is_some() {
+            for p in &self.framework.normalize {
+                p.normalize(&mut scores);
+            }
+        }
+
+        let host = match Framework::select_host(&scores) {
+            Some(n) => n,
+            None => {
+                state.events.push(Event::Unschedulable { pod });
+                return ScheduleOutcome::Unschedulable("no scored node".into());
+            }
+        };
+
+        match bind_cycle(&mut self.framework, state, pod, host, &mut ctx) {
+            BindResult::Bound => ScheduleOutcome::Bound(host),
+            BindResult::Rejected(r) => {
+                state.events.push(Event::Unschedulable { pod });
+                ScheduleOutcome::Unschedulable(r)
+            }
+        }
+    }
+
+    /// Drain the queue (parallelism = 1). Unschedulable pods are parked;
+    /// they do NOT retry within one drain (no cluster event can unblock
+    /// them — the cluster only changes through this scheduler).
+    pub fn run_queue(&mut self, state: &mut ClusterState) -> RunStats {
+        let mut stats = RunStats::default();
+        while let Some(pod) = self.queue.pop() {
+            stats.cycles += 1;
+            match self.schedule_one(state, pod) {
+                ScheduleOutcome::Bound(_) => stats.bound += 1,
+                ScheduleOutcome::Unschedulable(_) => {
+                    stats.unschedulable += 1;
+                    self.queue.mark_unschedulable(pod, state.pod(pod).priority);
+                }
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    /// The paper's Figure 1: two 4 GB nodes; pods of 2, 2, 3 GB. The
+    /// LeastAllocated heuristic spreads the first two pods and strands
+    /// the third — the motivating suboptimality.
+    fn figure1_state() -> ClusterState {
+        let nodes = identical_nodes(2, Resources::new(4000, 4096));
+        let pods = vec![
+            Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+            Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+            Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+        ];
+        ClusterState::new(nodes, pods)
+    }
+
+    #[test]
+    fn figure1_fragmentation_reproduced() {
+        let mut st = figure1_state();
+        let mut sched = DefaultScheduler::kwok_default();
+        sched.enqueue_pending(&st);
+        let stats = sched.run_queue(&mut st);
+        assert_eq!(stats.bound, 2);
+        assert_eq!(stats.unschedulable, 1);
+        // pods 1 and 2 were spread over both nodes (the suboptimal move)
+        assert_ne!(st.assignment_of(PodId(0)), st.assignment_of(PodId(1)));
+        assert_eq!(st.assignment_of(PodId(2)), None);
+        // ... although total capacity would have sufficed:
+        let total_free: Resources = st.free_all().iter().copied().sum();
+        assert!(st.pod(PodId(2)).request.fits_in(&total_free));
+    }
+
+    #[test]
+    fn priority_order_respected() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "lo", Resources::new(800, 800), Priority(2)),
+            Pod::new(1, "hi", Resources::new(800, 800), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        let mut sched = DefaultScheduler::kwok_default();
+        sched.enqueue_pending(&st);
+        sched.run_queue(&mut st);
+        // Only one fits; the high-priority pod is scheduled first and wins.
+        assert!(st.assignment_of(PodId(1)).is_some());
+        assert_eq!(st.assignment_of(PodId(0)), None);
+    }
+
+    #[test]
+    fn lexicographic_tie_break_on_equal_scores() {
+        let nodes = identical_nodes(3, Resources::new(1000, 1000));
+        let pods = vec![Pod::new(0, "p", Resources::new(100, 100), Priority(0))];
+        let mut st = ClusterState::new(nodes, pods);
+        let mut sched = DefaultScheduler::kwok_default();
+        sched.enqueue_pending(&st);
+        sched.run_queue(&mut st);
+        // all nodes empty and identical -> first name wins
+        assert_eq!(st.assignment_of(PodId(0)), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut st = figure1_state();
+            let mut sched = DefaultScheduler::kwok_default();
+            sched.enqueue_pending(&st);
+            sched.run_queue(&mut st);
+            st.assignment().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn unschedulable_pods_parked_in_queue() {
+        let mut st = figure1_state();
+        let mut sched = DefaultScheduler::kwok_default();
+        sched.enqueue_pending(&st);
+        sched.run_queue(&mut st);
+        assert_eq!(sched.queue.unschedulable_len(), 1);
+        assert_eq!(sched.queue.unschedulable_pods(), vec![PodId(2)]);
+    }
+}

@@ -1,0 +1,335 @@
+//! The scheduling framework: extension points and plugin registry.
+//!
+//! Faithful (single-threaded) model of the Kubernetes scheduling
+//! framework described in the paper's Preliminaries. Each extension point
+//! is a trait; the [`Framework`] owns one ordered list of plugins per
+//! point and runs them in registration order. The scheduling cycle itself
+//! lives in [`super::default::DefaultScheduler`]; the binding "cycle" is
+//! immediate (KWOK-style — no kubelet to wait for).
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+
+/// Verdict returned by gate-style plugins (PreEnqueue, PreFilter, Permit,
+/// PreBind).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PluginDecision {
+    Allow,
+    /// Reject with a human-readable reason (surfaced in events/logs).
+    Reject(String),
+}
+
+impl PluginDecision {
+    pub fn allowed(&self) -> bool {
+        matches!(self, PluginDecision::Allow)
+    }
+}
+
+/// Mutable per-cycle scratch shared between extension points.
+///
+/// The optimiser's plugin uses `pinned_node` at PreFilter to steer a pod
+/// to the node the solver chose for it (paper: "at the PreEnqueue and
+/// PreFilter points, it assigns the affected pods to their target
+/// nodes"), and `reserved` to carry Reserve bookkeeping to Unreserve.
+#[derive(Clone, Debug, Default)]
+pub struct CycleContext {
+    pub pinned_node: Option<NodeId>,
+    pub reserved: Option<NodeId>,
+}
+
+// ---- extension-point traits ----------------------------------------------
+
+/// Orders the scheduling queue. Exactly one may be active (enforced by
+/// [`Framework::set_queue_sort`]).
+pub trait QueueSortPlugin {
+    /// `true` if `a` should be scheduled before `b`. Ties broken by
+    /// enqueue sequence in the queue itself.
+    fn less(
+        &self,
+        state: &ClusterState,
+        a: PodId,
+        b: PodId,
+    ) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+pub trait PreEnqueuePlugin {
+    fn pre_enqueue(&mut self, state: &ClusterState, pod: PodId) -> PluginDecision;
+    fn name(&self) -> &'static str;
+}
+
+pub trait PreFilterPlugin {
+    fn pre_filter(
+        &mut self,
+        state: &ClusterState,
+        pod: PodId,
+        ctx: &mut CycleContext,
+    ) -> PluginDecision;
+    fn name(&self) -> &'static str;
+}
+
+pub trait FilterPlugin {
+    /// `true` iff `node` is feasible for `pod`.
+    fn filter(&self, state: &ClusterState, pod: PodId, node: NodeId, ctx: &CycleContext) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+/// Runs only when *all* nodes were filtered out ("mainly for pre-emption
+/// purposes" — the optimiser's hook).
+pub trait PostFilterPlugin {
+    fn post_filter(&mut self, state: &ClusterState, pod: PodId);
+    fn name(&self) -> &'static str;
+}
+
+pub trait ScorePlugin {
+    /// Higher is better. Only called on nodes that passed filtering.
+    fn score(&self, state: &ClusterState, pod: PodId, node: NodeId) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+pub trait NormalizeScorePlugin {
+    fn normalize(&self, scores: &mut [(NodeId, f64)]);
+    fn name(&self) -> &'static str;
+}
+
+pub trait ReservePlugin {
+    fn reserve(&mut self, state: &ClusterState, pod: PodId, node: NodeId, ctx: &mut CycleContext);
+    /// Roll back a failed cycle's reservation.
+    fn unreserve(&mut self, state: &ClusterState, pod: PodId, ctx: &mut CycleContext);
+    fn name(&self) -> &'static str;
+}
+
+pub trait PermitPlugin {
+    fn permit(&mut self, state: &ClusterState, pod: PodId, node: NodeId) -> PluginDecision;
+    fn name(&self) -> &'static str;
+}
+
+pub trait PreBindPlugin {
+    fn pre_bind(&mut self, state: &ClusterState, pod: PodId, node: NodeId) -> PluginDecision;
+    fn name(&self) -> &'static str;
+}
+
+pub trait PostBindPlugin {
+    fn post_bind(&mut self, state: &ClusterState, pod: PodId, node: NodeId);
+    fn name(&self) -> &'static str;
+}
+
+// ---- registry --------------------------------------------------------------
+
+/// Ordered plugin registry, one slot/list per extension point.
+#[derive(Default)]
+pub struct Framework {
+    pub queue_sort: Option<Box<dyn QueueSortPlugin>>,
+    pub pre_enqueue: Vec<Box<dyn PreEnqueuePlugin>>,
+    pub pre_filter: Vec<Box<dyn PreFilterPlugin>>,
+    pub filter: Vec<Box<dyn FilterPlugin>>,
+    pub post_filter: Vec<Box<dyn PostFilterPlugin>>,
+    pub score: Vec<Box<dyn ScorePlugin>>,
+    pub normalize: Vec<Box<dyn NormalizeScorePlugin>>,
+    pub reserve: Vec<Box<dyn ReservePlugin>>,
+    pub permit: Vec<Box<dyn PermitPlugin>>,
+    pub pre_bind: Vec<Box<dyn PreBindPlugin>>,
+    pub post_bind: Vec<Box<dyn PostBindPlugin>>,
+}
+
+impl Framework {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install the (single) QueueSort plugin; replaces any previous one.
+    pub fn set_queue_sort(&mut self, p: Box<dyn QueueSortPlugin>) {
+        self.queue_sort = Some(p);
+    }
+
+    // -- run helpers, in framework order -----------------------------------
+
+    pub fn run_pre_enqueue(&mut self, state: &ClusterState, pod: PodId) -> PluginDecision {
+        for p in &mut self.pre_enqueue {
+            let d = p.pre_enqueue(state, pod);
+            if !d.allowed() {
+                return d;
+            }
+        }
+        PluginDecision::Allow
+    }
+
+    pub fn run_pre_filter(
+        &mut self,
+        state: &ClusterState,
+        pod: PodId,
+        ctx: &mut CycleContext,
+    ) -> PluginDecision {
+        for p in &mut self.pre_filter {
+            let d = p.pre_filter(state, pod, ctx);
+            if !d.allowed() {
+                return d;
+            }
+        }
+        PluginDecision::Allow
+    }
+
+    /// Feasible nodes after all Filter plugins (and the PreFilter pin).
+    pub fn run_filter(
+        &self,
+        state: &ClusterState,
+        pod: PodId,
+        ctx: &CycleContext,
+    ) -> Vec<NodeId> {
+        state
+            .nodes()
+            .iter()
+            .map(|n| n.id)
+            .filter(|&n| {
+                if let Some(pinned) = ctx.pinned_node {
+                    if n != pinned {
+                        return false;
+                    }
+                }
+                self.filter.iter().all(|p| p.filter(state, pod, n, ctx))
+            })
+            .collect()
+    }
+
+    pub fn run_post_filter(&mut self, state: &ClusterState, pod: PodId) {
+        for p in &mut self.post_filter {
+            p.post_filter(state, pod);
+        }
+    }
+
+    /// Sum of Score plugins per feasible node, then NormalizeScore.
+    pub fn run_score(
+        &self,
+        state: &ClusterState,
+        pod: PodId,
+        feasible: &[NodeId],
+    ) -> Vec<(NodeId, f64)> {
+        let mut scores: Vec<(NodeId, f64)> = feasible
+            .iter()
+            .map(|&n| {
+                let s: f64 = self.score.iter().map(|p| p.score(state, pod, n)).sum();
+                (n, s)
+            })
+            .collect();
+        for p in &self.normalize {
+            p.normalize(&mut scores);
+        }
+        scores
+    }
+
+    pub fn run_reserve(
+        &mut self,
+        state: &ClusterState,
+        pod: PodId,
+        node: NodeId,
+        ctx: &mut CycleContext,
+    ) {
+        for p in &mut self.reserve {
+            p.reserve(state, pod, node, ctx);
+        }
+    }
+
+    pub fn run_unreserve(&mut self, state: &ClusterState, pod: PodId, ctx: &mut CycleContext) {
+        for p in &mut self.reserve {
+            p.unreserve(state, pod, ctx);
+        }
+    }
+
+    pub fn run_permit(&mut self, state: &ClusterState, pod: PodId, node: NodeId) -> PluginDecision {
+        for p in &mut self.permit {
+            let d = p.permit(state, pod, node);
+            if !d.allowed() {
+                return d;
+            }
+        }
+        PluginDecision::Allow
+    }
+
+    pub fn run_pre_bind(
+        &mut self,
+        state: &ClusterState,
+        pod: PodId,
+        node: NodeId,
+    ) -> PluginDecision {
+        for p in &mut self.pre_bind {
+            let d = p.pre_bind(state, pod, node);
+            if !d.allowed() {
+                return d;
+            }
+        }
+        PluginDecision::Allow
+    }
+
+    pub fn run_post_bind(&mut self, state: &ClusterState, pod: PodId, node: NodeId) {
+        for p in &mut self.post_bind {
+            p.post_bind(state, pod, node);
+        }
+    }
+
+    /// Select the winning node: highest score, ties broken by lowest
+    /// `NodeId` — i.e. lexicographically smallest node name (the paper's
+    /// determinism plugin).
+    pub fn select_host(scores: &[(NodeId, f64)]) -> Option<NodeId> {
+        scores
+            .iter()
+            .copied()
+            .max_by(|(na, sa), (nb, sb)| {
+                sa.partial_cmp(sb)
+                    .unwrap()
+                    .then_with(|| nb.cmp(na)) // lower id wins on tie
+            })
+            .map(|(n, _)| n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    struct RejectAll;
+    impl PreEnqueuePlugin for RejectAll {
+        fn pre_enqueue(&mut self, _: &ClusterState, _: PodId) -> PluginDecision {
+            PluginDecision::Reject("nope".into())
+        }
+        fn name(&self) -> &'static str {
+            "RejectAll"
+        }
+    }
+
+    fn tiny_state() -> ClusterState {
+        ClusterState::new(
+            identical_nodes(2, Resources::new(1000, 1000)),
+            vec![Pod::new(0, "p", Resources::new(100, 100), Priority(0))],
+        )
+    }
+
+    #[test]
+    fn select_host_prefers_score_then_name() {
+        let scores = vec![
+            (NodeId(2), 10.0),
+            (NodeId(0), 50.0),
+            (NodeId(1), 50.0),
+        ];
+        assert_eq!(Framework::select_host(&scores), Some(NodeId(0)));
+        assert_eq!(Framework::select_host(&[]), None);
+    }
+
+    #[test]
+    fn pre_enqueue_gate() {
+        let mut fw = Framework::new();
+        let st = tiny_state();
+        assert!(fw.run_pre_enqueue(&st, PodId(0)).allowed());
+        fw.pre_enqueue.push(Box::new(RejectAll));
+        assert!(!fw.run_pre_enqueue(&st, PodId(0)).allowed());
+    }
+
+    #[test]
+    fn pinned_node_restricts_filter() {
+        let fw = Framework::new(); // no filter plugins: everything feasible
+        let st = tiny_state();
+        let mut ctx = CycleContext::default();
+        assert_eq!(fw.run_filter(&st, PodId(0), &ctx).len(), 2);
+        ctx.pinned_node = Some(NodeId(1));
+        assert_eq!(fw.run_filter(&st, PodId(0), &ctx), vec![NodeId(1)]);
+    }
+}

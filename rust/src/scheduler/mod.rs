@@ -1,0 +1,25 @@
+//! kube-scheduler re-implementation.
+//!
+//! Mirrors the Kubernetes *scheduling framework* (Preliminaries, Fig. 2 of
+//! the paper): pods flow through a priority queue, then per-cycle through
+//! the extension points `PreEnqueue → PreFilter → Filter → PostFilter →
+//! Score → NormalizeScore → Reserve → Permit → PreBind → Bind → PostBind`.
+//! Plugins are trait objects registered on the [`framework::Framework`];
+//! the default profile matches the paper's deterministic setup:
+//!
+//! * `NodeResourcesFit` filter (resource + selector feasibility),
+//! * `LeastAllocated` scoring (the exact formula the L1 Pallas kernel
+//!   computes — see `python/compile/kernels/ref.py`),
+//! * lexicographic node-name tie-breaking (the paper's determinism
+//!   plugin; free here because `NodeId` order *is* name order),
+//! * `parallelism = 1`, `DefaultPreemption` disabled.
+
+pub mod binder;
+pub mod default;
+pub mod framework;
+pub mod plugins;
+pub mod queue;
+
+pub use default::{DefaultScheduler, ScheduleOutcome};
+pub use framework::{CycleContext, Framework, PluginDecision};
+pub use queue::SchedulingQueue;

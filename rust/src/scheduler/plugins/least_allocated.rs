@@ -1,0 +1,92 @@
+//! `LeastAllocated` scoring — kube-scheduler's default strategy, and the
+//! exact formula the L1 Pallas kernel computes in batch
+//! (`python/compile/kernels/ref.py` is the shared oracle):
+//!
+//! ```text
+//! score(pod, node) = 100 * mean_r( (free_r - req_r) / max(cap_r, 1) )
+//! ```
+//!
+//! Spreads pods across nodes — precisely the behaviour that produces the
+//! paper's Figure 1 fragmentation and motivates the optimiser.
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::scheduler::framework::ScorePlugin;
+
+#[derive(Default)]
+pub struct LeastAllocated;
+
+impl LeastAllocated {
+    /// The scalar formula; kept public so the native batch scorer and the
+    /// XLA-parity tests share one definition. Computed in f32 to match
+    /// the kernel bit-for-bit.
+    pub fn formula(free_cpu: f32, free_ram: f32, cap_cpu: f32, cap_ram: f32, req_cpu: f32, req_ram: f32) -> f32 {
+        let rem_cpu = free_cpu - req_cpu;
+        let rem_ram = free_ram - req_ram;
+        if rem_cpu < 0.0 || rem_ram < 0.0 {
+            return -1.0; // infeasible marker (matches kernel INFEASIBLE)
+        }
+        let c = rem_cpu / cap_cpu.max(1.0);
+        let r = rem_ram / cap_ram.max(1.0);
+        100.0 * ((c + r) / 2.0)
+    }
+}
+
+impl ScorePlugin for LeastAllocated {
+    fn score(&self, state: &ClusterState, pod: PodId, node: NodeId) -> f64 {
+        let req = state.pod(pod).request;
+        let free = state.free(node);
+        let cap = state.node(node).capacity;
+        Self::formula(
+            free.cpu as f32,
+            free.ram as f32,
+            cap.cpu as f32,
+            cap.ram as f32,
+            req.cpu as f32,
+            req.ram as f32,
+        ) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "NodeResourcesLeastAllocated"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    #[test]
+    fn emptier_node_scores_higher() {
+        let nodes = identical_nodes(2, Resources::new(4000, 4000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(2000, 2000), Priority(0)),
+            Pod::new(1, "b", Resources::new(1000, 1000), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let s = LeastAllocated;
+        // node-001 is empty -> more free after placement -> higher score
+        assert!(s.score(&st, PodId(1), NodeId(1)) > s.score(&st, PodId(1), NodeId(0)));
+    }
+
+    #[test]
+    fn formula_matches_kernel_reference_cases() {
+        // Mirror of python test: pod (500,500), node free (600,600), cap (1000,1000)
+        let v = LeastAllocated::formula(600.0, 600.0, 1000.0, 1000.0, 500.0, 500.0);
+        assert!((v - 10.0).abs() < 1e-6); // (100/1000 + 100/1000)/2 * 100 = 10
+        // infeasible
+        assert_eq!(LeastAllocated::formula(600.0, 600.0, 1000.0, 1000.0, 9000.0, 100.0), -1.0);
+        // exact fit -> 0
+        assert_eq!(LeastAllocated::formula(1000.0, 2000.0, 4000.0, 4000.0, 1000.0, 2000.0), 0.0);
+        // zero-capacity guard
+        let g = LeastAllocated::formula(0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        assert!(g.is_finite() && g == 0.0);
+    }
+
+    #[test]
+    fn empty_node_scores_100_for_zero_request() {
+        let v = LeastAllocated::formula(1000.0, 1000.0, 1000.0, 1000.0, 0.0, 0.0);
+        assert_eq!(v, 100.0);
+    }
+}

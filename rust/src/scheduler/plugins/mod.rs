@@ -1,0 +1,9 @@
+//! Default scheduler plugins (the paper's deterministic profile).
+
+pub mod least_allocated;
+pub mod node_resources_fit;
+pub mod priority_sort;
+
+pub use least_allocated::LeastAllocated;
+pub use node_resources_fit::NodeResourcesFit;
+pub use priority_sort::PrioritySort;

@@ -1,0 +1,58 @@
+//! `NodeResourcesFit` — the default resource-feasibility Filter plugin,
+//! plus node-selector matching (labels are the paper's future-work
+//! extension; empty selectors make it a no-op for paper workloads).
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::scheduler::framework::{CycleContext, FilterPlugin};
+
+#[derive(Default)]
+pub struct NodeResourcesFit;
+
+impl FilterPlugin for NodeResourcesFit {
+    fn filter(&self, state: &ClusterState, pod: PodId, node: NodeId, _ctx: &CycleContext) -> bool {
+        let p = state.pod(pod);
+        p.request.fits_in(&state.free(node)) && p.selector_matches(state.node(node))
+    }
+
+    fn name(&self) -> &'static str {
+        "NodeResourcesFit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    #[test]
+    fn filters_by_free_capacity() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "big", Resources::new(900, 100), Priority(0)),
+            Pod::new(1, "huge", Resources::new(1100, 100), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        let f = NodeResourcesFit;
+        let ctx = CycleContext::default();
+        assert!(f.filter(&st, PodId(0), NodeId(0), &ctx));
+        assert!(!f.filter(&st, PodId(1), NodeId(0), &ctx)); // over capacity
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        // node 0 now has 100 cpu free: pod of 900 no longer fits
+        assert!(!f.filter(&st, PodId(0), NodeId(0), &ctx) || st.free(NodeId(0)).cpu >= 900);
+    }
+
+    #[test]
+    fn respects_selector() {
+        let mut nodes = identical_nodes(1, Resources::new(1000, 1000));
+        nodes[0] = nodes[0].clone().with_label("zone", "a");
+        let pods = vec![
+            Pod::new(0, "z-a", Resources::new(1, 1), Priority(0)).with_selector("zone", "a"),
+            Pod::new(1, "z-b", Resources::new(1, 1), Priority(0)).with_selector("zone", "b"),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let f = NodeResourcesFit;
+        let ctx = CycleContext::default();
+        assert!(f.filter(&st, PodId(0), NodeId(0), &ctx));
+        assert!(!f.filter(&st, PodId(1), NodeId(0), &ctx));
+    }
+}

@@ -1,0 +1,40 @@
+//! `PrioritySort` — the default QueueSort plugin: highest priority first
+//! (lowest numeric value under the paper's convention), FIFO within a
+//! tier (the tie-break is the queue's enqueue sequence).
+
+use crate::cluster::{ClusterState, PodId};
+use crate::scheduler::framework::QueueSortPlugin;
+
+#[derive(Default)]
+pub struct PrioritySort;
+
+impl QueueSortPlugin for PrioritySort {
+    fn less(&self, state: &ClusterState, a: PodId, b: PodId) -> bool {
+        state.pod(a).priority < state.pod(b).priority
+    }
+
+    fn name(&self) -> &'static str {
+        "PrioritySort"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    #[test]
+    fn higher_priority_sorts_first() {
+        let st = ClusterState::new(
+            identical_nodes(1, Resources::new(1, 1)),
+            vec![
+                Pod::new(0, "lo", Resources::ZERO, Priority(3)),
+                Pod::new(1, "hi", Resources::ZERO, Priority(0)),
+            ],
+        );
+        let p = PrioritySort;
+        assert!(p.less(&st, PodId(1), PodId(0)));
+        assert!(!p.less(&st, PodId(0), PodId(1)));
+        assert!(!p.less(&st, PodId(0), PodId(0))); // irreflexive
+    }
+}

@@ -1,0 +1,179 @@
+//! The scheduling queue.
+//!
+//! Kubernetes keeps three sub-queues: *active* (ready to schedule),
+//! *backoff* (retry later), and *unschedulable* (parked until a cluster
+//! event might make them feasible). This model keeps active +
+//! unschedulable (the simulator is event-driven, so a timed backoff
+//! queue would only add noise — unschedulable pods are re-activated
+//! explicitly via [`SchedulingQueue::flush_unschedulable`], which is what
+//! a cluster event does in Kubernetes).
+//!
+//! Ordering follows the default `PrioritySort` QueueSort plugin: highest
+//! priority first (numerically lowest, per the paper's convention), FIFO
+//! within a priority. The queue also supports the optimiser's *pause*
+//! (paper: "during solver execution, new pods arriving in the scheduling
+//! queue are temporarily paused ... re-queued once the solver execution
+//! completes").
+
+use crate::cluster::{PodId, Priority};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Entry {
+    pod: PodId,
+    priority: Priority,
+    seq: u64,
+}
+
+/// Priority scheduling queue with pause support.
+#[derive(Debug, Default)]
+pub struct SchedulingQueue {
+    active: Vec<Entry>,
+    unschedulable: Vec<Entry>,
+    paused_arrivals: Vec<Entry>,
+    paused: bool,
+    next_seq: u64,
+}
+
+impl SchedulingQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a pod. While paused, arrivals are parked on the side list.
+    pub fn push(&mut self, pod: PodId, priority: Priority) {
+        let e = Entry {
+            pod,
+            priority,
+            seq: self.next_seq,
+        };
+        self.next_seq += 1;
+        if self.paused {
+            self.paused_arrivals.push(e);
+        } else {
+            self.active.push(e);
+        }
+    }
+
+    /// Pop the next pod to schedule: min (priority, seq). `None` when the
+    /// active queue is empty or the queue is paused.
+    pub fn pop(&mut self) -> Option<PodId> {
+        if self.paused || self.active.is_empty() {
+            return None;
+        }
+        let best = self
+            .active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (e.priority, e.seq))
+            .map(|(i, _)| i)
+            .unwrap();
+        Some(self.active.swap_remove(best).pod)
+    }
+
+    /// Park a pod as unschedulable (failed its scheduling cycle).
+    pub fn mark_unschedulable(&mut self, pod: PodId, priority: Priority) {
+        let e = Entry {
+            pod,
+            priority,
+            seq: self.next_seq,
+        };
+        self.next_seq += 1;
+        self.unschedulable.push(e);
+    }
+
+    /// Move all unschedulable pods back to active (a "cluster event").
+    pub fn flush_unschedulable(&mut self) -> usize {
+        let n = self.unschedulable.len();
+        self.active.append(&mut self.unschedulable);
+        n
+    }
+
+    /// Pause scheduling (optimiser running). Arrivals are buffered.
+    pub fn pause(&mut self) {
+        self.paused = true;
+    }
+
+    /// Resume after the optimiser: buffered arrivals re-queued in order.
+    pub fn resume(&mut self) {
+        self.paused = false;
+        self.active.append(&mut self.paused_arrivals);
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn unschedulable_len(&self) -> usize {
+        self.unschedulable.len()
+    }
+
+    /// Pods currently parked as unschedulable (id order of arrival).
+    pub fn unschedulable_pods(&self) -> Vec<PodId> {
+        self.unschedulable.iter().map(|e| e.pod).collect()
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.active.is_empty() && self.paused_arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_then_fifo() {
+        let mut q = SchedulingQueue::new();
+        q.push(PodId(0), Priority(2));
+        q.push(PodId(1), Priority(0));
+        q.push(PodId(2), Priority(0));
+        q.push(PodId(3), Priority(1));
+        assert_eq!(q.pop(), Some(PodId(1))); // highest prio, first in
+        assert_eq!(q.pop(), Some(PodId(2))); // FIFO within prio 0
+        assert_eq!(q.pop(), Some(PodId(3)));
+        assert_eq!(q.pop(), Some(PodId(0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn unschedulable_flush() {
+        let mut q = SchedulingQueue::new();
+        q.mark_unschedulable(PodId(5), Priority(1));
+        q.mark_unschedulable(PodId(6), Priority(0));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.unschedulable_pods(), vec![PodId(5), PodId(6)]);
+        assert_eq!(q.flush_unschedulable(), 2);
+        assert_eq!(q.pop(), Some(PodId(6))); // priority order restored
+        assert_eq!(q.pop(), Some(PodId(5)));
+    }
+
+    #[test]
+    fn pause_buffers_arrivals() {
+        let mut q = SchedulingQueue::new();
+        q.push(PodId(0), Priority(0));
+        q.pause();
+        q.push(PodId(1), Priority(0)); // arrives during solver run
+        assert_eq!(q.pop(), None); // paused: nothing schedulable
+        assert!(q.is_paused());
+        q.resume();
+        assert_eq!(q.pop(), Some(PodId(0)));
+        assert_eq!(q.pop(), Some(PodId(1)));
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn drained_accounts_for_paused_arrivals() {
+        let mut q = SchedulingQueue::new();
+        q.pause();
+        q.push(PodId(9), Priority(0));
+        assert!(!q.is_drained());
+        q.resume();
+        assert!(!q.is_drained());
+        q.pop();
+        assert!(q.is_drained());
+    }
+}

@@ -1,0 +1,148 @@
+//! The KWOK-style simulation driver.
+//!
+//! Feeds a workload (pods in ReplicaSet arrival order) through the
+//! default scheduler against simulated node capacities and reports what
+//! the paper's evaluation records: per-priority placement counts,
+//! pending pods, and utilisation.
+
+use crate::cluster::{ClusterState, Node, Pod, PodId};
+use crate::scheduler::default::{BatchScorer, DefaultScheduler};
+
+/// Result of one simulated scheduling pass.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub bound: usize,
+    pub unschedulable: usize,
+    /// Placed pods per priority tier (index = priority value).
+    pub placed_per_priority: Vec<usize>,
+    /// Pods left pending, in queue-park order.
+    pub pending: Vec<PodId>,
+    /// Mean (cpu, ram) utilisation over nodes in [0, 1].
+    pub utilization: (f64, f64),
+    /// True iff every pod was placed.
+    pub all_placed: bool,
+}
+
+/// KWOK simulator: owns the scheduler; state is passed per run so callers
+/// can replay/compare runs on cloned states.
+pub struct KwokSimulator {
+    scheduler: DefaultScheduler,
+    p_max: u32,
+}
+
+impl KwokSimulator {
+    /// Deterministic paper configuration.
+    pub fn new(p_max: u32) -> Self {
+        KwokSimulator {
+            scheduler: DefaultScheduler::kwok_default(),
+            p_max,
+        }
+    }
+
+    /// Use an alternative scoring backend (e.g. the XLA runtime scorer).
+    pub fn with_batch_scorer(mut self, scorer: Box<dyn BatchScorer>) -> Self {
+        self.scheduler = DefaultScheduler::kwok_default().with_batch_scorer(scorer);
+        self
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut DefaultScheduler {
+        &mut self.scheduler
+    }
+
+    /// Build the initial state and schedule every pod (arrival order =
+    /// pod id order = ReplicaSet generation order, exactly like feeding
+    /// manifests to KWOK one after another).
+    pub fn run(&mut self, nodes: Vec<Node>, pods: Vec<Pod>) -> (ClusterState, SimResult) {
+        let mut state = ClusterState::new(nodes, pods);
+        let result = self.run_on(&mut state);
+        (state, result)
+    }
+
+    /// Schedule all currently-pending pods of an existing state.
+    pub fn run_on(&mut self, state: &mut ClusterState) -> SimResult {
+        self.scheduler.enqueue_pending(state);
+        let stats = self.scheduler.run_queue(state);
+        let pending = self.scheduler.queue.unschedulable_pods();
+        SimResult {
+            bound: stats.bound,
+            unschedulable: stats.unschedulable,
+            placed_per_priority: state.placed_per_priority(self.p_max),
+            pending,
+            utilization: state.utilization(),
+            all_placed: stats.unschedulable == 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Priority, Resources};
+
+    fn pods_spec(specs: &[(i64, i64, u32)]) -> Vec<Pod> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(cpu, ram, pr))| {
+                Pod::new(i as u32, format!("pod-{i:03}"), Resources::new(cpu, ram), Priority(pr))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn schedules_everything_when_space_allows() {
+        let mut sim = KwokSimulator::new(0);
+        let (state, res) = sim.run(
+            identical_nodes(2, Resources::new(4000, 4000)),
+            pods_spec(&[(1000, 1000, 0), (1000, 1000, 0), (1000, 1000, 0)]),
+        );
+        assert!(res.all_placed);
+        assert_eq!(res.placed_per_priority, vec![3]);
+        state.check_invariants().unwrap();
+        let (cpu, _) = res.utilization;
+        assert!(cpu > 0.3);
+    }
+
+    #[test]
+    fn figure1_scenario_strands_large_pod() {
+        let mut sim = KwokSimulator::new(0);
+        let (_, res) = sim.run(
+            identical_nodes(2, Resources::new(100, 4096)),
+            pods_spec(&[(10, 2048, 0), (10, 2048, 0), (10, 3072, 0)]),
+        );
+        assert!(!res.all_placed);
+        assert_eq!(res.pending, vec![PodId(2)]);
+        assert_eq!(res.bound, 2);
+    }
+
+    #[test]
+    fn determinism_across_simulators() {
+        let nodes = || identical_nodes(4, Resources::new(2000, 2000));
+        let pods = || {
+            pods_spec(&[
+                (700, 300, 1),
+                (900, 900, 0),
+                (500, 1500, 2),
+                (1200, 200, 0),
+                (400, 400, 1),
+            ])
+        };
+        let (s1, r1) = KwokSimulator::new(2).run(nodes(), pods());
+        let (s2, r2) = KwokSimulator::new(2).run(nodes(), pods());
+        assert_eq!(s1.assignment(), s2.assignment());
+        assert_eq!(r1.placed_per_priority, r2.placed_per_priority);
+    }
+
+    #[test]
+    fn run_on_existing_state_only_touches_pending() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = pods_spec(&[(600, 600, 0), (600, 600, 0)]);
+        let mut state = ClusterState::new(nodes, pods);
+        state.bind(PodId(0), crate::cluster::NodeId(1)).unwrap();
+        let mut sim = KwokSimulator::new(0);
+        let res = sim.run_on(&mut state);
+        assert_eq!(res.bound, 1);
+        // pod 1 cannot share node 1 with pod 0 → lands on node 0
+        assert_eq!(state.assignment_of(PodId(1)), Some(crate::cluster::NodeId(0)));
+    }
+}

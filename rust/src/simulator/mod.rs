@@ -1,0 +1,12 @@
+//! KWOK-like cluster simulator.
+//!
+//! The paper evaluates against *Kubernetes WithOut Kubelet* (KWOK): node
+//! capacities and pod requests are simulated, no containers run, and the
+//! real scheduling algorithm decides placements. [`kwok::KwokSimulator`]
+//! is that harness over our scheduler re-implementation, configured the
+//! way the paper forces determinism (lexicographic tie-break,
+//! parallelism = 1, DefaultPreemption disabled).
+
+pub mod kwok;
+
+pub use kwok::{KwokSimulator, SimResult};

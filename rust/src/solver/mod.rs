@@ -1,0 +1,42 @@
+//! From-scratch CP solver — the OR-Tools CP-SAT substitute.
+//!
+//! The paper's Algorithm 1 needs exactly this contract from its solver:
+//!
+//! * binary decision variables and **linear constraints** (`≤`, `≥`, `=`),
+//! * `maximize(metric, timeout)` returning either a **proven OPTIMAL**
+//!   solution or the best **FEASIBLE** incumbent found before the
+//!   deadline (anytime behaviour),
+//! * **solution hints** to warm-start from the current cluster
+//!   assignment (CP-SAT's `AddHint`),
+//! * model **re-solving** after appending constraints (CP-SAT has no
+//!   push/pop; the paper re-solves after each place/move phase).
+//!
+//! The engine is a depth-first branch-and-bound specialised for (but not
+//! limited to) assignment structure:
+//!
+//! * [`presolve`] detects *groups* — sets of variables under an
+//!   at-most-one constraint (a pod's candidate nodes) — and branches on
+//!   whole groups instead of single variables;
+//! * [`propagate`] maintains bounds-consistency over all linear
+//!   constraints with a trail for chronological backtracking;
+//! * [`bound`] prunes with an admissible objective upper bound
+//!   (fixed value + per-group open-option maxima);
+//! * [`search`] runs the B&B with hint-first / best-fit value ordering,
+//!   optional identical-node symmetry skipping, and deadline polling;
+//! * [`lns`] optionally polishes a feasible incumbent with randomised
+//!   ruin-and-recreate when time remains but optimality wasn't proven.
+//!
+//! All components are toggleable via [`SolverConfig`] — the ablation
+//! bench (`benches/ablation.rs`) measures each one's contribution.
+
+pub mod bound;
+pub mod lns;
+pub mod model;
+pub mod presolve;
+pub mod propagate;
+pub mod search;
+pub mod solution;
+
+pub use model::{CmpOp, LinearExpr, Model, VarId};
+pub use search::{solve_max, SolverConfig};
+pub use solution::{SearchStats, SolveStatus, Solution};

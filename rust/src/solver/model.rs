@@ -1,0 +1,218 @@
+//! The constraint model: binary variables, linear constraints, hints.
+
+/// Dense variable index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub u32);
+
+impl VarId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Comparison operator of a linear constraint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear expression `Σ coef·var` over binary variables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinearExpr {
+    pub terms: Vec<(VarId, i64)>,
+}
+
+impl LinearExpr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, var: VarId, coef: i64) -> &mut Self {
+        if coef != 0 {
+            self.terms.push((var, coef));
+        }
+        self
+    }
+
+    pub fn of(terms: impl IntoIterator<Item = (VarId, i64)>) -> Self {
+        let mut e = Self::new();
+        for (v, c) in terms {
+            e.add(v, c);
+        }
+        e
+    }
+
+    /// Merge duplicate variables (the propagator requires one term/var).
+    pub fn normalized(mut self) -> Self {
+        self.terms.sort_by_key(|(v, _)| *v);
+        let mut out: Vec<(VarId, i64)> = Vec::with_capacity(self.terms.len());
+        for (v, c) in self.terms {
+            match out.last_mut() {
+                Some((lv, lc)) if *lv == v => *lc += c,
+                _ => out.push((v, c)),
+            }
+        }
+        out.retain(|(_, c)| *c != 0);
+        LinearExpr { terms: out }
+    }
+
+    /// Evaluate under a complete assignment.
+    pub fn eval(&self, values: &[bool]) -> i64 {
+        self.terms
+            .iter()
+            .map(|&(v, c)| if values[v.idx()] { c } else { 0 })
+            .sum()
+    }
+}
+
+/// `expr op rhs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearConstraint {
+    pub expr: LinearExpr,
+    pub op: CmpOp,
+    pub rhs: i64,
+}
+
+impl LinearConstraint {
+    pub fn satisfied_by(&self, values: &[bool]) -> bool {
+        let v = self.expr.eval(values);
+        match self.op {
+            CmpOp::Le => v <= self.rhs,
+            CmpOp::Ge => v >= self.rhs,
+            CmpOp::Eq => v == self.rhs,
+        }
+    }
+}
+
+/// The model: a bag of variables, constraints, and optional hints.
+/// Mirrors CP-SAT's `CpModel`: grow-only; re-solve after mutation.
+#[derive(Clone, Debug, Default)]
+pub struct Model {
+    num_vars: u32,
+    pub constraints: Vec<LinearConstraint>,
+    /// Warm-start hint per variable (CP-SAT `AddHint`). Hinted values
+    /// steer value ordering; they are never assumed valid.
+    pub hints: Vec<Option<bool>>,
+    /// Optional structure metadata: groups of `≤`-constraint indices that
+    /// partition one *resource dimension* (e.g. all nodes' CPU
+    /// constraints). The search uses them for an aggregate fractional
+    /// capacity bound — the counterpart of CP-SAT's knowledge that its
+    /// knapsack constraints share items. Purely an optimisation: solvers
+    /// ignore unknown classes, correctness never depends on them.
+    pub resource_classes: Vec<Vec<u32>>,
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_var(&mut self) -> VarId {
+        let v = VarId(self.num_vars);
+        self.num_vars += 1;
+        self.hints.push(None);
+        v
+    }
+
+    pub fn new_vars(&mut self, n: usize) -> Vec<VarId> {
+        (0..n).map(|_| self.new_var()).collect()
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.num_vars as usize
+    }
+
+    pub fn add_constraint(&mut self, expr: LinearExpr, op: CmpOp, rhs: i64) {
+        self.constraints.push(LinearConstraint {
+            expr: expr.normalized(),
+            op,
+            rhs,
+        });
+    }
+
+    pub fn add_le(&mut self, expr: LinearExpr, rhs: i64) {
+        self.add_constraint(expr, CmpOp::Le, rhs);
+    }
+
+    pub fn add_ge(&mut self, expr: LinearExpr, rhs: i64) {
+        self.add_constraint(expr, CmpOp::Ge, rhs);
+    }
+
+    pub fn add_eq(&mut self, expr: LinearExpr, rhs: i64) {
+        self.add_constraint(expr, CmpOp::Eq, rhs);
+    }
+
+    /// Declare that the given `≤` constraints together cover one resource
+    /// dimension (see `resource_classes`).
+    pub fn add_resource_class(&mut self, cons_indices: impl IntoIterator<Item = usize>) {
+        self.resource_classes
+            .push(cons_indices.into_iter().map(|i| i as u32).collect());
+    }
+
+    /// Index the next constraint added will get.
+    pub fn next_constraint_index(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Set a warm-start hint for one variable.
+    pub fn hint(&mut self, var: VarId, value: bool) {
+        self.hints[var.idx()] = Some(value);
+    }
+
+    /// Clear all hints (before installing a fresh assignment).
+    pub fn clear_hints(&mut self) {
+        for h in &mut self.hints {
+            *h = None;
+        }
+    }
+
+    /// Check a complete assignment against every constraint.
+    pub fn feasible(&self, values: &[bool]) -> bool {
+        assert_eq!(values.len(), self.num_vars());
+        self.constraints.iter().all(|c| c.satisfied_by(values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_normalization_merges_terms() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        let e = LinearExpr::of([(a, 1), (b, 2), (a, 3), (b, -2)]).normalized();
+        assert_eq!(e.terms, vec![(a, 4)]);
+    }
+
+    #[test]
+    fn eval_and_satisfaction() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_le(LinearExpr::of([(a, 2), (b, 3)]), 4);
+        assert!(m.feasible(&[true, false]));
+        assert!(!m.feasible(&[true, true]));
+        m.add_ge(LinearExpr::of([(a, 1)]), 1);
+        assert!(m.feasible(&[true, false]));
+        assert!(!m.feasible(&[false, false]));
+        m.add_eq(LinearExpr::of([(b, 1)]), 0);
+        assert!(m.feasible(&[true, false]));
+        assert!(!m.feasible(&[true, true]));
+    }
+
+    #[test]
+    fn hints_tracked_per_var() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let _b = m.new_var();
+        m.hint(a, true);
+        assert_eq!(m.hints, vec![Some(true), None]);
+        m.clear_hints();
+        assert_eq!(m.hints, vec![None, None]);
+    }
+}

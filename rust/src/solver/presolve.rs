@@ -1,0 +1,123 @@
+//! Structure detection: group variables under at-most-one constraints.
+//!
+//! The optimiser's models are assignment-shaped: for every pod there is a
+//! constraint `Σ_j x_{i,j} ≤ 1` over its candidate nodes. Branching on a
+//! whole *group* (pick one option or none) is exponentially stronger than
+//! branching single booleans — it never explores the vacuous
+//! "x_{i,j}=false for one j, undecided elsewhere" frontier.
+//!
+//! Variables not covered by any at-most-one constraint become singleton
+//! groups, so the search remains complete for arbitrary models.
+
+use super::model::{CmpOp, Model, VarId};
+
+/// A branchable group: choose at most one of `options` to set true.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Group {
+    pub options: Vec<VarId>,
+}
+
+/// Partition of all model variables into groups.
+#[derive(Clone, Debug)]
+pub struct Structure {
+    pub groups: Vec<Group>,
+    /// var -> owning group index.
+    pub var_group: Vec<u32>,
+}
+
+/// Detect groups. A constraint qualifies iff it is `Σ x ≤ 1` with all
+/// coefficients exactly 1 and at least 2 variables; each variable joins
+/// at most one group (first qualifying constraint wins).
+pub fn detect_structure(model: &Model) -> Structure {
+    let nv = model.num_vars();
+    let mut var_group = vec![u32::MAX; nv];
+    let mut groups: Vec<Group> = Vec::new();
+
+    for c in &model.constraints {
+        if c.op != CmpOp::Le || c.rhs != 1 || c.expr.terms.len() < 2 {
+            continue;
+        }
+        if !c.expr.terms.iter().all(|&(_, coef)| coef == 1) {
+            continue;
+        }
+        if c.expr.terms.iter().any(|&(v, _)| var_group[v.idx()] != u32::MAX) {
+            continue; // overlapping groups not supported: keep the first
+        }
+        let gi = groups.len() as u32;
+        let options: Vec<VarId> = c.expr.terms.iter().map(|&(v, _)| v).collect();
+        for &v in &options {
+            var_group[v.idx()] = gi;
+        }
+        groups.push(Group { options });
+    }
+
+    // Singleton groups for everything uncovered.
+    for v in 0..nv {
+        if var_group[v] == u32::MAX {
+            var_group[v] = groups.len() as u32;
+            groups.push(Group {
+                options: vec![VarId(v as u32)],
+            });
+        }
+    }
+
+    Structure { groups, var_group }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::model::LinearExpr;
+
+    #[test]
+    fn detects_assignment_groups() {
+        let mut m = Model::new();
+        let xs = m.new_vars(4); // pod A options
+        let ys = m.new_vars(4); // pod B options
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        m.add_le(LinearExpr::of(ys.iter().map(|&v| (v, 1))), 1);
+        // a capacity constraint should not create a group
+        m.add_le(LinearExpr::of([(xs[0], 500), (ys[0], 600)]), 1000);
+        let s = detect_structure(&m);
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].options, xs);
+        assert_eq!(s.groups[1].options, ys);
+        assert_eq!(s.var_group[xs[1].idx()], 0);
+        assert_eq!(s.var_group[ys[3].idx()], 1);
+    }
+
+    #[test]
+    fn uncovered_vars_become_singletons() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_le(LinearExpr::of([(a, 2), (b, 1)]), 2); // coef 2: not a group
+        let s = detect_structure(&m);
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].options, vec![a]);
+        assert_eq!(s.groups[1].options, vec![b]);
+    }
+
+    #[test]
+    fn overlapping_amo_keeps_first() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        let c = m.new_var();
+        m.add_le(LinearExpr::of([(a, 1), (b, 1)]), 1);
+        m.add_le(LinearExpr::of([(b, 1), (c, 1)]), 1); // overlaps on b
+        let s = detect_structure(&m);
+        assert_eq!(s.groups[0].options, vec![a, b]);
+        // c fell back to a singleton
+        assert!(s.groups.iter().any(|g| g.options == vec![c]));
+    }
+
+    #[test]
+    fn rhs_greater_than_one_not_grouped() {
+        let mut m = Model::new();
+        let xs = m.new_vars(3);
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 2);
+        let s = detect_structure(&m);
+        assert_eq!(s.groups.len(), 3); // all singletons
+    }
+}

@@ -1,0 +1,431 @@
+//! Bounds-consistency propagation over linear constraints with a trail.
+//!
+//! For every constraint `Σ c_i·x_i op b` the propagator maintains three
+//! incremental sums: `fixed` (contribution of variables fixed true),
+//! `pos_open` / `neg_open` (total positive / negative coefficient mass
+//! still unfixed). From those, the reachable activity interval is
+//!
+//! ```text
+//! [fixed + neg_open,  fixed + pos_open]
+//! ```
+//!
+//! and the standard filtering rules apply: an empty intersection with
+//! the feasible side of `op b` is a conflict; a variable whose value
+//! would force emptiness is fixed to the opposite value. Assignments are
+//! recorded on a trail with level marks for chronological backtracking.
+
+use super::model::{CmpOp, Model, VarId};
+
+const UNKNOWN: i8 = 0;
+const TRUE: i8 = 1;
+const FALSE: i8 = -1;
+
+/// Trail-based propagation engine. Borrowed by the search for the
+/// duration of one solve.
+pub struct Propagator {
+    /// Per-variable value: 0 unknown, 1 true, -1 false.
+    values: Vec<i8>,
+    /// Assigned variables in order.
+    trail: Vec<u32>,
+    /// Stack of trail lengths at each decision level.
+    trail_lim: Vec<usize>,
+    /// Per-constraint incremental sums.
+    fixed: Vec<i64>,
+    pos_open: Vec<i64>,
+    neg_open: Vec<i64>,
+    /// var -> [(constraint index, coefficient)]
+    occurs: Vec<Vec<(u32, i64)>>,
+    /// Constraint terms, flattened copies for cache-friendly scans.
+    cons_terms: Vec<Vec<(u32, i64)>>,
+    cons_op: Vec<CmpOp>,
+    cons_rhs: Vec<i64>,
+    /// Largest |coefficient| per constraint (static). Lets the
+    /// propagator skip the O(terms) filtering scan when no variable
+    /// could possibly be forced — the top hot-path optimisation
+    /// (EXPERIMENTS.md §Perf: propagate_queue was 68% of solve time).
+    cons_max_abs: Vec<i64>,
+    /// Queue-membership flags: dedup wakes (one scan per wave instead of
+    /// one per assigned variable).
+    on_queue: Vec<bool>,
+    /// Reusable wave queue (avoids a malloc per decision — §Perf #3).
+    scratch: Vec<u32>,
+    /// Number of propagations performed (stats).
+    pub propagations: u64,
+}
+
+impl Propagator {
+    /// Build from a model and run root propagation. `None` = infeasible
+    /// at the root.
+    pub fn new(model: &Model) -> Option<Propagator> {
+        let nv = model.num_vars();
+        let nc = model.constraints.len();
+        let mut occurs: Vec<Vec<(u32, i64)>> = vec![Vec::new(); nv];
+        let mut cons_terms = Vec::with_capacity(nc);
+        let mut pos_open = vec![0i64; nc];
+        let mut neg_open = vec![0i64; nc];
+        for (ci, c) in model.constraints.iter().enumerate() {
+            let mut terms = Vec::with_capacity(c.expr.terms.len());
+            for &(v, coef) in &c.expr.terms {
+                occurs[v.idx()].push((ci as u32, coef));
+                terms.push((v.0, coef));
+                if coef > 0 {
+                    pos_open[ci] += coef;
+                } else {
+                    neg_open[ci] += coef;
+                }
+            }
+            // Descending |coef| order lets the filtering scan stop at the
+            // first term below the forcing threshold (§Perf change #2).
+            terms.sort_by_key(|&(_, k)| std::cmp::Reverse(k.abs()));
+            cons_terms.push(terms);
+        }
+        let cons_max_abs = model
+            .constraints
+            .iter()
+            .map(|c| c.expr.terms.iter().map(|&(_, k)| k.abs()).max().unwrap_or(0))
+            .collect();
+        let mut p = Propagator {
+            values: vec![UNKNOWN; nv],
+            trail: Vec::with_capacity(nv),
+            trail_lim: Vec::new(),
+            fixed: vec![0; nc],
+            pos_open,
+            neg_open,
+            occurs,
+            cons_terms,
+            cons_op: model.constraints.iter().map(|c| c.op).collect(),
+            cons_rhs: model.constraints.iter().map(|c| c.rhs).collect(),
+            cons_max_abs,
+            on_queue: vec![false; nc],
+            scratch: Vec::with_capacity(nc),
+            propagations: 0,
+        };
+        // Root propagation over all constraints.
+        p.on_queue.iter_mut().for_each(|f| *f = true);
+        let mut all: Vec<u32> = (0..nc as u32).collect();
+        if p.propagate_queue(&mut all) {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn value(&self, v: VarId) -> Option<bool> {
+        match self.values[v.idx()] {
+            TRUE => Some(true),
+            FALSE => Some(false),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn is_unknown(&self, v: VarId) -> bool {
+        self.values[v.idx()] == UNKNOWN
+    }
+
+    pub fn num_assigned(&self) -> usize {
+        self.trail.len()
+    }
+
+    /// Open a new decision level.
+    pub fn push_level(&mut self) {
+        self.trail_lim.push(self.trail.len());
+    }
+
+    /// Undo to the previous decision level.
+    pub fn pop_level(&mut self) {
+        let mark = self.trail_lim.pop().expect("pop without push");
+        while self.trail.len() > mark {
+            let v = self.trail.pop().unwrap() as usize;
+            let was_true = self.values[v] == TRUE;
+            self.values[v] = UNKNOWN;
+            for &(ci, coef) in &self.occurs[v] {
+                let ci = ci as usize;
+                if was_true {
+                    self.fixed[ci] -= coef;
+                }
+                if coef > 0 {
+                    self.pos_open[ci] += coef;
+                } else {
+                    self.neg_open[ci] += coef;
+                }
+            }
+        }
+    }
+
+    pub fn level(&self) -> usize {
+        self.trail_lim.len()
+    }
+
+    /// Assign `v := val` and propagate to fixpoint. Returns `false` on
+    /// conflict (caller must `pop_level`).
+    pub fn decide(&mut self, v: VarId, val: bool) -> bool {
+        let mut queue = std::mem::take(&mut self.scratch);
+        queue.clear();
+        if !self.enqueue_assign(v, val, &mut queue) {
+            self.scratch = queue;
+            return false;
+        }
+        let ok = self.propagate_queue(&mut queue);
+        self.scratch = queue;
+        ok
+    }
+
+    /// Record an assignment and collect affected constraints.
+    fn enqueue_assign(&mut self, v: VarId, val: bool, queue: &mut Vec<u32>) -> bool {
+        match self.values[v.idx()] {
+            TRUE => return val,
+            FALSE => return !val,
+            _ => {}
+        }
+        self.values[v.idx()] = if val { TRUE } else { FALSE };
+        self.trail.push(v.0);
+        for i in 0..self.occurs[v.idx()].len() {
+            let (ci, coef) = self.occurs[v.idx()][i];
+            let c = ci as usize;
+            if val {
+                self.fixed[c] += coef;
+            }
+            if coef > 0 {
+                self.pos_open[c] -= coef;
+            } else {
+                self.neg_open[c] -= coef;
+            }
+            if !self.on_queue[c] {
+                self.on_queue[c] = true;
+                queue.push(ci);
+            }
+        }
+        true
+    }
+
+    /// Work through the constraint queue until fixpoint or conflict.
+    /// On conflict, clears all queue-membership flags (the aborted
+    /// wave's entries would otherwise suppress future wakes).
+    fn propagate_queue(&mut self, queue: &mut Vec<u32>) -> bool {
+        let ok = self.propagate_queue_inner(queue);
+        if !ok {
+            self.on_queue.iter_mut().for_each(|f| *f = false);
+        }
+        ok
+    }
+
+    fn propagate_queue_inner(&mut self, queue: &mut Vec<u32>) -> bool {
+        while let Some(ci) = queue.pop() {
+            self.propagations += 1;
+            let c = ci as usize;
+            self.on_queue[c] = false;
+            let rhs = self.cons_rhs[c];
+            let min = self.fixed[c] + self.neg_open[c];
+            let max = self.fixed[c] + self.pos_open[c];
+            let op = self.cons_op[c];
+
+            let check_le = matches!(op, CmpOp::Le | CmpOp::Eq);
+            let check_ge = matches!(op, CmpOp::Ge | CmpOp::Eq);
+
+            if check_le && min > rhs {
+                return false;
+            }
+            if check_ge && max < rhs {
+                return false;
+            }
+
+            // Skip the O(terms) scan when no variable can be forced:
+            // forcing requires min + |coef| > rhs (≤ side) or
+            // max - |coef| < rhs (≥ side) for some open var; bound the
+            // |coef| by the constraint's static maximum.
+            let m = self.cons_max_abs[c];
+            let may_force_le = check_le && min + m > rhs;
+            let may_force_ge = check_ge && max - m < rhs;
+            if !may_force_le && !may_force_ge {
+                continue;
+            }
+
+            // Forcing threshold: a variable can only be forced when
+            // |coef| exceeds the slack on some active side. Terms are
+            // sorted by |coef| descending, so the scan breaks early.
+            let thr = {
+                let t_le = if check_le { rhs - min } else { i64::MAX };
+                let t_ge = if check_ge { max - rhs } else { i64::MAX };
+                t_le.min(t_ge)
+            };
+
+            // Filter unfixed variables of this constraint.
+            // (Index-based loop: enqueue_assign mutates self.)
+            for ti in 0..self.cons_terms[c].len() {
+                let (v, coef) = self.cons_terms[c][ti];
+                if coef.abs() <= thr {
+                    break; // nothing below can force either side
+                }
+                if self.values[v as usize] != UNKNOWN {
+                    continue;
+                }
+                let var = VarId(v);
+                if check_le {
+                    if coef > 0 && min + coef > rhs {
+                        if !self.enqueue_assign(var, false, queue) {
+                            return false;
+                        }
+                        continue;
+                    }
+                    if coef < 0 && min - coef > rhs {
+                        if !self.enqueue_assign(var, true, queue) {
+                            return false;
+                        }
+                        continue;
+                    }
+                }
+                if check_ge {
+                    if coef > 0 && max - coef < rhs {
+                        if !self.enqueue_assign(var, true, queue) {
+                            return false;
+                        }
+                        continue;
+                    }
+                    if coef < 0 && max + coef < rhs {
+                        if !self.enqueue_assign(var, false, queue) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    // ---- introspection for the search layer -------------------------------
+
+    /// Current fixed-true contribution of constraint `ci`.
+    #[inline]
+    pub fn cons_fixed(&self, ci: usize) -> i64 {
+        self.fixed[ci]
+    }
+
+    /// Total number of trail entries (assigned vars).
+    #[inline]
+    pub fn trail_len(&self) -> usize {
+        self.trail.len()
+    }
+
+    /// Trail entries `[from..]` — the vars assigned since a caller-held
+    /// mark. Used by the search to incrementally maintain objective
+    /// bookkeeping.
+    #[inline]
+    pub fn trail_since(&self, from: usize) -> &[u32] {
+        &self.trail[from..]
+    }
+
+    /// Snapshot the current (possibly partial) assignment as booleans,
+    /// unknowns defaulting to `false` (safe for pure-≤ models; the
+    /// search only calls this when all groups are decided).
+    pub fn snapshot(&self) -> Vec<bool> {
+        self.values.iter().map(|&v| v == TRUE).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::model::LinearExpr;
+
+    #[test]
+    fn at_most_one_propagates_exclusion() {
+        let mut m = Model::new();
+        let xs = m.new_vars(3);
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        let mut p = Propagator::new(&m).unwrap();
+        p.push_level();
+        assert!(p.decide(xs[0], true));
+        assert_eq!(p.value(xs[1]), Some(false)); // forced by ≤1
+        assert_eq!(p.value(xs[2]), Some(false));
+        p.pop_level();
+        assert!(p.is_unknown(xs[1]));
+    }
+
+    #[test]
+    fn capacity_constraint_excludes_oversize() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        // 700a + 600b <= 1000: both true impossible
+        m.add_le(LinearExpr::of([(a, 700), (b, 600)]), 1000);
+        let mut p = Propagator::new(&m).unwrap();
+        p.push_level();
+        assert!(p.decide(a, true));
+        assert_eq!(p.value(b), Some(false));
+    }
+
+    #[test]
+    fn ge_forces_inclusion() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_ge(LinearExpr::of([(a, 1), (b, 1)]), 2); // both must be true
+        let p = Propagator::new(&m).unwrap();
+        assert_eq!(p.value(a), Some(true));
+        assert_eq!(p.value(b), Some(true));
+    }
+
+    #[test]
+    fn eq_conflict_detected() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        m.add_eq(LinearExpr::of([(a, 1)]), 1);
+        m.add_eq(LinearExpr::of([(a, 1)]), 0);
+        assert!(Propagator::new(&m).is_none()); // root infeasible
+    }
+
+    #[test]
+    fn negative_coefficients() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        // a - b <= 0  ⇒  a ⇒ b
+        m.add_le(LinearExpr::of([(a, 1), (b, -1)]), 0);
+        let mut p = Propagator::new(&m).unwrap();
+        p.push_level();
+        assert!(p.decide(a, true));
+        assert_eq!(p.value(b), Some(true));
+        p.pop_level();
+        // ¬b ⇒ ¬a
+        p.push_level();
+        assert!(p.decide(b, false));
+        assert_eq!(p.value(a), Some(false));
+    }
+
+    #[test]
+    fn conflict_on_decide_returns_false() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_ge(LinearExpr::of([(a, 1), (b, 1)]), 1);
+        let mut p = Propagator::new(&m).unwrap();
+        p.push_level();
+        assert!(p.decide(a, false)); // ok: forces b
+        assert_eq!(p.value(b), Some(true));
+        p.pop_level();
+        p.push_level();
+        assert!(p.decide(a, false));
+        assert!(!p.decide(b, false)); // both false violates ≥1
+    }
+
+    #[test]
+    fn trail_restores_across_multiple_levels() {
+        let mut m = Model::new();
+        let xs = m.new_vars(4);
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 2);
+        let mut p = Propagator::new(&m).unwrap();
+        p.push_level();
+        assert!(p.decide(xs[0], true));
+        p.push_level();
+        assert!(p.decide(xs[1], true));
+        // two trues: remaining forced false
+        assert_eq!(p.value(xs[2]), Some(false));
+        p.pop_level();
+        assert!(p.is_unknown(xs[2]));
+        p.pop_level();
+        assert!(p.is_unknown(xs[1]));
+        assert_eq!(p.num_assigned(), 0);
+    }
+}

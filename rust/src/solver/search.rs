@@ -1,0 +1,803 @@
+//! Depth-first branch-and-bound over variable groups.
+//!
+//! Branching unit: a *group* (one pod's candidate nodes — see
+//! [`super::presolve`]). At each node the search picks the hardest
+//! undecided group (static difficulty order) and branches over its open
+//! options (hint-first, then best-fit) plus the "place nowhere" branch.
+//! Propagation ([`super::propagate`]) closes each decision; the
+//! incremental objective bound (cross-checked against
+//! [`super::bound::upper_bound`] in debug builds) prunes dominated
+//! subtrees; the anytime incumbent is returned on deadline expiry.
+//!
+//! Symmetry skipping: two open options of one group whose *signature* —
+//! objective coefficient plus (coef, residual, op, rhs) over every
+//! constraint they appear in — is identical are exchangeable in the
+//! models this project generates (identical-capacity nodes make node
+//! columns isomorphic: every tier variable appears in every node's
+//! CPU/RAM constraint with the same demand coefficient). Only the first
+//! of an equivalence class is branched on; `rust/tests/proptests.rs`
+//! cross-validates optima with the feature on and off.
+
+use crate::util::timer::Deadline;
+
+use super::bound::upper_bound;
+use super::lns::lns_polish;
+use super::model::{CmpOp, LinearExpr, Model, VarId};
+use super::presolve::{detect_structure, Structure};
+use super::propagate::Propagator;
+use super::solution::{SearchStats, SolveStatus, Solution};
+
+/// Feature toggles (every one is exercised by `benches/ablation.rs`).
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Prune with the admissible objective upper bound.
+    pub use_bound: bool,
+    /// Tighten the bound with the aggregate fractional-capacity count
+    /// over declared resource classes (uniform objectives only). This is
+    /// what lets the solver *prove* optimality on ≈100%-usage instances
+    /// instead of enumerating the whole assignment space.
+    pub use_capacity_bound: bool,
+    /// Use model hints for value ordering (warm start).
+    pub use_hints: bool,
+    /// Best-fit value ordering (tightest residual first) after hints.
+    pub use_best_fit: bool,
+    /// Skip exchangeable options (identical-node symmetry).
+    pub use_symmetry: bool,
+    /// Polish timed-out incumbents with LNS (ruin-and-recreate).
+    pub use_lns: bool,
+    /// Fraction of the deadline reserved for LNS when enabled.
+    pub lns_fraction: f64,
+    /// Deadline poll interval, in decisions.
+    pub check_interval: u64,
+    /// Seed for LNS randomisation.
+    pub seed: u64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            use_bound: true,
+            use_capacity_bound: true,
+            use_hints: true,
+            use_best_fit: true,
+            use_symmetry: true,
+            use_lns: true,
+            lns_fraction: 0.25,
+            check_interval: 64,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Maximise `objective` over `model` within `deadline`.
+pub fn solve_max(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    config: &SolverConfig,
+) -> Solution {
+    let started = std::time::Instant::now();
+    let mut stats = SearchStats::default();
+
+    let structure = detect_structure(model);
+    let mut obj = vec![0i64; model.num_vars()];
+    for &(v, c) in &objective.clone().normalized().terms {
+        obj[v.idx()] = c;
+    }
+
+    let dfs_deadline = if config.use_lns {
+        Deadline::after(deadline.remaining().mul_f64(1.0 - config.lns_fraction)).min(deadline)
+    } else {
+        deadline
+    };
+
+    let mut searcher = match Searcher::new(model, &structure, &obj, dfs_deadline, config) {
+        Some(s) => s,
+        None => {
+            stats.solve_time_s = started.elapsed().as_secs_f64();
+            return Solution::infeasible(stats);
+        }
+    };
+    searcher.dfs(0, 0);
+    searcher.drain_stats(&mut stats);
+
+    let complete = !searcher.timed_out;
+    let proven_optimal =
+        complete || searcher.best.as_ref().map(|_| searcher.best_val >= searcher.root_ub).unwrap_or(false);
+    let mut best = searcher.best.take();
+    let mut best_val = searcher.best_val;
+
+    // LNS polish: only useful when we have a feasible-but-unproven incumbent.
+    if config.use_lns && !proven_optimal && best.is_some() && !deadline.expired() {
+        let (nb, nv) = lns_polish(
+            model,
+            &structure,
+            &obj,
+            best.clone().unwrap(),
+            best_val,
+            deadline,
+            config,
+            &mut stats,
+        );
+        best = Some(nb);
+        best_val = nv;
+    }
+
+    stats.solve_time_s = started.elapsed().as_secs_f64();
+    match best {
+        Some(values) => Solution {
+            status: if proven_optimal {
+                SolveStatus::Optimal
+            } else {
+                SolveStatus::Feasible
+            },
+            objective: best_val,
+            values,
+            stats,
+        },
+        None if complete => Solution::infeasible(stats),
+        None => Solution::unknown(stats),
+    }
+}
+
+/// One resource class prepared for the aggregate capacity bound.
+struct CapClass {
+    /// Constraint indices of this class (e.g. every node's CPU row).
+    cons: Vec<u32>,
+    /// `(demand, group)` ascending by demand; demand = the group's
+    /// coefficient in this class (0 if it does not consume it).
+    demands: Vec<(i64, u32)>,
+}
+
+/// One DFS run. Also reused by LNS with pre-fixed variables.
+pub(super) struct Searcher<'a> {
+    model: &'a Model,
+    structure: &'a Structure,
+    obj: &'a [i64],
+    config: &'a SolverConfig,
+    prop: Propagator,
+    /// Static branching order: group indices, hardest first.
+    order: Vec<u32>,
+    /// Per-group: number of options fixed true / still unknown.
+    group_true: Vec<u32>,
+    group_open: Vec<u32>,
+    /// Per-group current potential contribution to the bound.
+    group_contrib: Vec<i64>,
+    /// Σ group_contrib over undecided groups.
+    potential: i64,
+    /// Σ obj[v] over fixed-true vars.
+    fixed_obj: i64,
+    /// Per-var knapsack participation for best-fit keys: (cons, coef).
+    knap: Vec<Vec<(u32, i64)>>,
+    knap_rhs: Vec<i64>,
+    /// Capacity-bound support: per resource class, its constraints and
+    /// the per-group demands sorted ascending. Empty when disabled or
+    /// the objective is not uniform.
+    cap_classes: Vec<CapClass>,
+    /// The uniform per-placement objective weight (capacity bound scale).
+    cap_weight: i64,
+    /// Per-var full participation for symmetry signatures.
+    all_occ: Vec<Vec<(u32, i64)>>,
+    cons_rhs: Vec<i64>,
+    cons_op: Vec<CmpOp>,
+    pub best: Option<Vec<bool>>,
+    pub best_val: i64,
+    pub root_ub: i64,
+    deadline: Deadline,
+    pub timed_out: bool,
+    decisions: u64,
+    conflicts: u64,
+    bound_prunes: u64,
+    symmetry_skips: u64,
+    max_depth: u32,
+}
+
+impl<'a> Searcher<'a> {
+    /// Build and root-propagate; `None` = infeasible at the root.
+    pub(super) fn new(
+        model: &'a Model,
+        structure: &'a Structure,
+        obj: &'a [i64],
+        deadline: Deadline,
+        config: &'a SolverConfig,
+    ) -> Option<Self> {
+        let prop = Propagator::new(model)?;
+        let nv = model.num_vars();
+        let ng = structure.groups.len();
+
+        // Best-fit knapsack lists: Le constraints that are not at-most-one.
+        let mut knap: Vec<Vec<(u32, i64)>> = vec![Vec::new(); nv];
+        let mut all_occ: Vec<Vec<(u32, i64)>> = vec![Vec::new(); nv];
+        let mut knap_rhs = vec![0i64; model.constraints.len()];
+        for (ci, c) in model.constraints.iter().enumerate() {
+            let is_amo =
+                c.op == CmpOp::Le && c.rhs == 1 && c.expr.terms.iter().all(|&(_, k)| k == 1);
+            knap_rhs[ci] = c.rhs;
+            for &(v, coef) in &c.expr.terms {
+                if !is_amo {
+                    all_occ[v.idx()].push((ci as u32, coef));
+                    if c.op == CmpOp::Le {
+                        knap[v.idx()].push((ci as u32, coef));
+                    }
+                }
+            }
+        }
+
+        // Static branching order. Two segments:
+        //   1. *hinted* groups (one option hinted true) — deciding them
+        //      first makes the first DFS descent reproduce the warm-start
+        //      solution, which satisfies all accumulated phase locks; a
+        //      feasible incumbent then exists within |groups| decisions.
+        //      Without this, equality locks from earlier tiers conflict
+        //      deep in the tree and chronological backtracking thrashes.
+        //   2. unhinted groups.
+        // Within each segment: decreasing max knapsack share (hardest
+        // first), the classic bin-packing order.
+        let difficulty = |g: &super::presolve::Group| -> f64 {
+            g.options
+                .iter()
+                .flat_map(|v| knap[v.idx()].iter())
+                .map(|&(ci, coef)| coef as f64 / (knap_rhs[ci as usize].max(1)) as f64)
+                .fold(0.0f64, f64::max)
+        };
+        let hinted_group = |g: &super::presolve::Group| -> bool {
+            config.use_hints && g.options.iter().any(|v| model.hints[v.idx()] == Some(true))
+        };
+        let mut order: Vec<u32> = (0..ng as u32).collect();
+        let keys: Vec<(bool, f64)> = structure
+            .groups
+            .iter()
+            .map(|g| (!hinted_group(g), difficulty(g)))
+            .collect();
+        // NaN-free; hinted first, then difficulty desc.
+        order.sort_by(|&a, &b| {
+            let (ha, da) = keys[a as usize];
+            let (hb, db) = keys[b as usize];
+            ha.cmp(&hb)
+                .then(db.partial_cmp(&da).unwrap())
+                .then(a.cmp(&b))
+        });
+        drop(keys);
+
+        // Aggregate capacity bound preparation: only when classes are
+        // declared and the objective is uniform (every non-zero objective
+        // coefficient equals one weight w) — the phase-1 "count placed
+        // pods" shape. Phase-2 objectives (3/1 weights) fall back to the
+        // group-potential bound alone.
+        let mut cap_classes: Vec<CapClass> = Vec::new();
+        let mut cap_weight = 0i64;
+        if config.use_capacity_bound && !model.resource_classes.is_empty() {
+            let mut weights: Vec<i64> = obj.iter().copied().filter(|&c| c != 0).collect();
+            weights.sort_unstable();
+            weights.dedup();
+            if weights.len() == 1 && weights[0] > 0 {
+                cap_weight = weights[0];
+                let nc = model.constraints.len();
+                let mut class_of = vec![u32::MAX; nc];
+                for (k, class) in model.resource_classes.iter().enumerate() {
+                    for &ci in class {
+                        class_of[ci as usize] = k as u32;
+                    }
+                }
+                let mut demands: Vec<Vec<(i64, u32)>> =
+                    vec![Vec::with_capacity(ng); model.resource_classes.len()];
+                for (gi, g) in structure.groups.iter().enumerate() {
+                    let mut per_class = vec![0i64; model.resource_classes.len()];
+                    if let Some(&v0) = g.options.first() {
+                        for &(ci, coef) in &knap[v0.idx()] {
+                            let k = class_of[ci as usize];
+                            if k != u32::MAX {
+                                per_class[k as usize] = coef;
+                            }
+                        }
+                    }
+                    for (k, &d) in per_class.iter().enumerate() {
+                        demands[k].push((d, gi as u32));
+                    }
+                }
+                for (k, class) in model.resource_classes.iter().enumerate() {
+                    let mut ds = std::mem::take(&mut demands[k]);
+                    ds.sort_unstable();
+                    cap_classes.push(CapClass {
+                        cons: class.clone(),
+                        demands: ds,
+                    });
+                }
+            }
+        }
+
+        let mut s = Searcher {
+            model,
+            structure,
+            obj,
+            config,
+            prop,
+            order,
+            group_true: vec![0; ng],
+            group_open: structure.groups.iter().map(|g| g.options.len() as u32).collect(),
+            group_contrib: vec![0; ng],
+            potential: 0,
+            fixed_obj: 0,
+            knap,
+            knap_rhs,
+            cap_classes,
+            cap_weight,
+            all_occ,
+            cons_rhs: model.constraints.iter().map(|c| c.rhs).collect(),
+            cons_op: model.constraints.iter().map(|c| c.op).collect(),
+            best: None,
+            best_val: i64::MIN,
+            root_ub: 0,
+            deadline,
+            timed_out: false,
+            decisions: 0,
+            conflicts: 0,
+            bound_prunes: 0,
+            symmetry_skips: 0,
+            max_depth: 0,
+        };
+
+        // Root propagation may already have fixed vars: sync from scratch.
+        for gi in 0..ng {
+            s.resync_group(gi);
+        }
+        s.fixed_obj = (0..nv)
+            .filter(|&v| s.prop.value(VarId(v as u32)) == Some(true))
+            .map(|v| s.obj[v])
+            .sum();
+        // `upper_bound` counts decided groups' chosen coefficients plus
+        // undecided potentials — exactly fixed_obj + potential, since every
+        // variable belongs to exactly one group after presolve.
+        debug_assert_eq!(
+            s.fixed_obj + s.potential,
+            upper_bound(&s.prop, s.structure, s.obj)
+        );
+        s.root_ub = s.ub(); // includes the capacity bound when available
+        Some(s)
+    }
+
+    /// Fix some variables before search (LNS). Returns false on conflict.
+    pub(super) fn preassign(&mut self, fixes: &[(VarId, bool)]) -> bool {
+        let mark = self.prop.trail_len();
+        self.prop.push_level();
+        for &(v, val) in fixes {
+            if !self.prop.decide(v, val) {
+                return false;
+            }
+        }
+        self.sync_from(mark);
+        true
+    }
+
+    fn decided(&self, gi: usize) -> bool {
+        self.group_true[gi] > 0 || self.group_open[gi] == 0
+    }
+
+    /// Recompute one group's open count and bound contribution.
+    fn resync_group(&mut self, gi: usize) {
+        let g = &self.structure.groups[gi];
+        let mut open = 0u32;
+        let mut truecnt = 0u32;
+        let mut best_open = 0i64;
+        for &v in &g.options {
+            match self.prop.value(v) {
+                None => {
+                    open += 1;
+                    best_open = best_open.max(self.obj[v.idx()]);
+                }
+                Some(true) => truecnt += 1,
+                Some(false) => {}
+            }
+        }
+        self.group_true[gi] = truecnt;
+        self.group_open[gi] = open;
+        let contrib = if truecnt > 0 || open == 0 { 0 } else { best_open.max(0) };
+        self.potential += contrib - self.group_contrib[gi];
+        self.group_contrib[gi] = contrib;
+    }
+
+    /// Incorporate every assignment made since `mark` into the
+    /// objective bookkeeping.
+    fn sync_from(&mut self, mark: usize) {
+        let mut touched: Vec<u32> = Vec::new();
+        // First pass: fixed_obj from newly-true vars.
+        for &v in self.prop.trail_since(mark) {
+            let gi = self.structure.var_group[v as usize];
+            if self.prop.value(VarId(v)) == Some(true) {
+                self.fixed_obj += self.obj[v as usize];
+            }
+            touched.push(gi);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for gi in touched {
+            self.resync_group(gi as usize);
+        }
+    }
+
+    /// Undo one decision level, reversing bookkeeping.
+    fn undo_to(&mut self, mark: usize) {
+        let mut touched: Vec<u32> = Vec::new();
+        for &v in self.prop.trail_since(mark) {
+            if self.prop.value(VarId(v)) == Some(true) {
+                self.fixed_obj -= self.obj[v as usize];
+            }
+            touched.push(self.structure.var_group[v as usize]);
+        }
+        self.prop.pop_level();
+        touched.sort_unstable();
+        touched.dedup();
+        for gi in touched {
+            self.resync_group(gi as usize);
+        }
+    }
+
+    /// Aggregate fractional-capacity bound: across each resource class,
+    /// at most k more groups fit, where k counts the smallest open-group
+    /// demands that fit in the class's total residual capacity. Admissible
+    /// because aggregation over nodes only relaxes the packing.
+    fn cap_bound(&self) -> i64 {
+        let mut k_min = i64::MAX;
+        for class in &self.cap_classes {
+            let mut residual: i64 = class
+                .cons
+                .iter()
+                .map(|&ci| self.knap_rhs[ci as usize] - self.prop.cons_fixed(ci as usize))
+                .sum();
+            let mut k = 0i64;
+            for &(d, gi) in &class.demands {
+                let gi = gi as usize;
+                if self.group_true[gi] > 0 || self.group_open[gi] == 0 {
+                    continue; // decided: already in fixed_obj / unplaceable
+                }
+                if d > residual {
+                    break; // demands ascend: nothing further fits
+                }
+                residual -= d;
+                k += 1;
+            }
+            k_min = k_min.min(k);
+        }
+        if k_min == i64::MAX {
+            i64::MAX
+        } else {
+            k_min.saturating_mul(self.cap_weight)
+        }
+    }
+
+    #[inline]
+    fn ub(&self) -> i64 {
+        let mut pot = self.potential;
+        if !self.cap_classes.is_empty() {
+            pot = pot.min(self.cap_bound());
+        }
+        self.fixed_obj + pot
+    }
+
+    fn poll_deadline(&mut self) -> bool {
+        self.decisions += 1;
+        if self.decisions % self.config.check_interval == 0 && self.deadline.expired() {
+            self.timed_out = true;
+        }
+        self.timed_out
+    }
+
+    fn record_leaf(&mut self) {
+        let val = self.fixed_obj;
+        if val > self.best_val {
+            self.best_val = val;
+            let snap = self.prop.snapshot();
+            debug_assert!(self.model.feasible(&snap), "leaf violates constraints");
+            self.best = Some(snap);
+        }
+    }
+
+    /// Best-fit key: total normalised residual slack after placing `v`
+    /// (lower = tighter = preferred).
+    fn best_fit_key(&self, v: VarId) -> f64 {
+        let mut key = 0.0;
+        for &(ci, coef) in &self.knap[v.idx()] {
+            let rhs = self.knap_rhs[ci as usize];
+            let slack = rhs - self.prop.cons_fixed(ci as usize) - coef;
+            key += slack as f64 / (rhs.max(1)) as f64;
+        }
+        key
+    }
+
+    /// Symmetry signature of option `v` under the current residual state.
+    fn signature(&self, v: VarId) -> Vec<(i64, i64, i64, u8)> {
+        let mut sig: Vec<(i64, i64, i64, u8)> = self.all_occ[v.idx()]
+            .iter()
+            .map(|&(ci, coef)| {
+                let c = ci as usize;
+                (
+                    coef,
+                    self.cons_rhs[c] - self.prop.cons_fixed(c),
+                    self.cons_rhs[c],
+                    match self.cons_op[c] {
+                        CmpOp::Le => 0,
+                        CmpOp::Ge => 1,
+                        CmpOp::Eq => 2,
+                    },
+                )
+            })
+            .collect();
+        sig.sort_unstable();
+        sig
+    }
+
+    pub(super) fn dfs(&mut self, order_pos: usize, depth: u32) {
+        if self.timed_out {
+            return;
+        }
+        self.max_depth = self.max_depth.max(depth);
+
+        // Bound prune (only once an incumbent exists).
+        if self.config.use_bound && self.best.is_some() && self.ub() <= self.best_val {
+            self.bound_prunes += 1;
+            return;
+        }
+
+        // Advance to the next undecided group.
+        let mut pos = order_pos;
+        let gi = loop {
+            match self.order.get(pos) {
+                None => {
+                    self.record_leaf();
+                    return;
+                }
+                Some(&gi) if !self.decided(gi as usize) => break gi as usize,
+                Some(_) => pos += 1,
+            }
+        };
+
+        // Candidate options, ordered.
+        let options = &self.structure.groups[gi].options;
+        let mut cands: Vec<VarId> = options
+            .iter()
+            .copied()
+            .filter(|&v| self.prop.is_unknown(v))
+            .collect();
+        let hinted = |v: VarId| -> bool {
+            self.config.use_hints && self.model.hints[v.idx()] == Some(true)
+        };
+        if self.config.use_best_fit {
+            let mut keyed: Vec<(bool, f64, VarId)> = cands
+                .iter()
+                .map(|&v| (!hinted(v), self.best_fit_key(v), v))
+                .collect();
+            keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()).then(a.2.cmp(&b.2)));
+            cands = keyed.into_iter().map(|(_, _, v)| v).collect();
+        } else if self.config.use_hints {
+            cands.sort_by_key(|&v| (!hinted(v), v));
+        }
+
+        let mut seen_sigs: Vec<Vec<(i64, i64, i64, u8)>> = Vec::new();
+        for v in cands {
+            if self.timed_out {
+                return;
+            }
+            if !self.prop.is_unknown(v) {
+                continue; // an earlier sibling's failure propagation fixed it
+            }
+            if self.config.use_symmetry {
+                let sig = self.signature(v);
+                if seen_sigs.iter().any(|s| *s == sig) {
+                    self.symmetry_skips += 1;
+                    continue;
+                }
+                seen_sigs.push(sig);
+            }
+            if self.poll_deadline() {
+                return;
+            }
+            let mark = self.prop.trail_len();
+            self.prop.push_level();
+            if self.prop.decide(v, true) {
+                self.sync_from(mark);
+                self.dfs(pos, depth + 1);
+                self.undo_to(mark);
+            } else {
+                self.conflicts += 1;
+                self.prop.pop_level();
+            }
+            if self.best_val >= self.root_ub && self.best.is_some() {
+                return; // incumbent meets the root bound: optimal
+            }
+        }
+
+        // "Place nowhere" branch: all remaining options false.
+        if self.timed_out {
+            return;
+        }
+        if self.poll_deadline() {
+            return;
+        }
+        let mark = self.prop.trail_len();
+        self.prop.push_level();
+        let mut ok = true;
+        for &v in &self.structure.groups[gi].options {
+            if self.prop.is_unknown(v) {
+                if !self.prop.decide(v, false) {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok {
+            self.sync_from(mark);
+            self.dfs(pos, depth + 1);
+            self.undo_to(mark);
+        } else {
+            self.conflicts += 1;
+            self.prop.pop_level();
+        }
+    }
+
+    pub(super) fn drain_stats(&self, stats: &mut SearchStats) {
+        stats.decisions += self.decisions;
+        stats.propagations += self.prop.propagations;
+        stats.conflicts += self.conflicts;
+        stats.bound_prunes += self.bound_prunes;
+        stats.symmetry_skips += self.symmetry_skips;
+        stats.max_depth = stats.max_depth.max(self.max_depth);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SolverConfig {
+        SolverConfig::default()
+    }
+
+    /// max x + y + z  s.t.  x+y<=1  → 2
+    #[test]
+    fn simple_maximum() {
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        let z = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        let obj = LinearExpr::of([(x, 1), (y, 1), (z, 1)]);
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 2);
+        assert!(m.feasible(&sol.values));
+    }
+
+    /// Knapsack: items (w, v): (6,10) (5,8) (4,7) (3,5), cap 10 →
+    /// best 17 = (6,10)+(4,7).
+    #[test]
+    fn knapsack_optimal() {
+        let mut m = Model::new();
+        let items = [(6, 10), (5, 8), (4, 7), (3, 5)];
+        let vars = m.new_vars(items.len());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&items).map(|(&v, &(w, _))| (v, w))),
+            10,
+        );
+        let obj = LinearExpr::of(vars.iter().zip(&items).map(|(&v, &(_, val))| (v, val)));
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 17);
+    }
+
+    /// The paper's Figure 1 as a packing model: 2 nodes ram 4096,
+    /// pods ram {2048, 2048, 3072}: all three placeable.
+    #[test]
+    fn figure1_packing_all_three() {
+        let mut m = Model::new();
+        let pods = [2048i64, 2048, 3072];
+        let mut vars = Vec::new();
+        for _ in &pods {
+            let xs = m.new_vars(2);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..2 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                4096,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 3);
+    }
+
+    #[test]
+    fn infeasible_model_detected() {
+        let mut m = Model::new();
+        let x = m.new_var();
+        m.add_ge(LinearExpr::of([(x, 1)]), 1);
+        m.add_le(LinearExpr::of([(x, 1)]), 0);
+        let sol = solve_max(&m, &LinearExpr::of([(x, 1)]), Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn empty_model_trivially_optimal() {
+        let m = Model::new();
+        let sol = solve_max(&m, &LinearExpr::new(), Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 0);
+    }
+
+    #[test]
+    fn hints_steer_value_order() {
+        // Two symmetric optima; the hint should pick which one we land on.
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        m.hint(y, true);
+        let obj = LinearExpr::of([(x, 1), (y, 1)]);
+        let mut c = cfg();
+        c.use_symmetry = false; // let the hint, not symmetry, decide
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &c);
+        assert_eq!(sol.objective, 1);
+        assert!(sol.values[y.idx()]);
+        assert!(!sol.values[x.idx()]);
+    }
+
+    #[test]
+    fn negative_objective_prefers_none() {
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        let obj = LinearExpr::of([(x, -3), (y, -5)]);
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 0);
+        assert!(!sol.values[x.idx()] && !sol.values[y.idx()]);
+    }
+
+    #[test]
+    fn equality_lock_respected() {
+        // Phase-locking pattern from Algorithm 1: fix Σx = 1 then maximize a
+        // different metric.
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        m.add_eq(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        let obj = LinearExpr::of([(x, 1), (y, 3)]);
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 3);
+        assert!(sol.values[y.idx()]);
+    }
+
+    #[test]
+    fn anytime_feasible_under_tiny_deadline() {
+        // Large-ish packing; a microscopic deadline must still yield
+        // Feasible (or Optimal if search finishes) — never a panic.
+        let mut m = Model::new();
+        let mut vars = Vec::new();
+        let demands: Vec<i64> = (0..40).map(|i| 100 + (i * 37) % 400).collect();
+        for _ in &demands {
+            let xs = m.new_vars(8);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..8 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &d)| (xs[node], d))),
+                1200,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        let sol = solve_max(
+            &m,
+            &obj,
+            Deadline::after(std::time::Duration::from_millis(30)),
+            &cfg(),
+        );
+        assert!(sol.status.has_solution());
+        assert!(m.feasible(&sol.values));
+    }
+}

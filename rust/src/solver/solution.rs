@@ -1,0 +1,80 @@
+//! Solve results: status, assignment, and search statistics.
+
+/// Mirrors CP-SAT's solve statuses (the subset Algorithm 1 branches on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Best possible objective, proven (search space exhausted or bound
+    /// closed).
+    Optimal,
+    /// A feasible solution was found but optimality was not proven
+    /// before the deadline.
+    Feasible,
+    /// Proven infeasible (no assignment satisfies the constraints).
+    Infeasible,
+    /// Deadline hit before any feasible assignment was found.
+    Unknown,
+}
+
+impl SolveStatus {
+    pub fn has_solution(self) -> bool {
+        matches!(self, SolveStatus::Optimal | SolveStatus::Feasible)
+    }
+}
+
+/// Search counters (exposed for perf work and the ablation bench).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SearchStats {
+    pub decisions: u64,
+    pub propagations: u64,
+    pub conflicts: u64,
+    pub bound_prunes: u64,
+    pub symmetry_skips: u64,
+    pub max_depth: u32,
+    pub lns_rounds: u64,
+    pub lns_improvements: u64,
+    pub solve_time_s: f64,
+}
+
+/// Result of a `maximize` call.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub status: SolveStatus,
+    /// Objective value of `values` (meaningful iff `status.has_solution()`).
+    pub objective: i64,
+    /// Complete variable assignment (empty iff no solution).
+    pub values: Vec<bool>,
+    pub stats: SearchStats,
+}
+
+impl Solution {
+    pub fn infeasible(stats: SearchStats) -> Self {
+        Solution {
+            status: SolveStatus::Infeasible,
+            objective: 0,
+            values: Vec::new(),
+            stats,
+        }
+    }
+
+    pub fn unknown(stats: SearchStats) -> Self {
+        Solution {
+            status: SolveStatus::Unknown,
+            objective: 0,
+            values: Vec::new(),
+            stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_has_solution() {
+        assert!(SolveStatus::Optimal.has_solution());
+        assert!(SolveStatus::Feasible.has_solution());
+        assert!(!SolveStatus::Infeasible.has_solution());
+        assert!(!SolveStatus::Unknown.has_solution());
+    }
+}

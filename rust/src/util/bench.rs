@@ -1,0 +1,151 @@
+//! Criterion stand-in used by `benches/*.rs` (`harness = false`).
+//!
+//! Provides warmup + timed iterations with mean/median/p95 reporting and a
+//! `black_box` to defeat constant folding. Statistics are intentionally
+//! simple (the project's benches measure milliseconds-to-seconds scale
+//! end-to-end runs, not nanosecond kernels).
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<3} mean={:>10} median={:>10} p95={:>10} min={:>10} max={:>10}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.median_s),
+            fmt_s(self.p95_s),
+            fmt_s(self.min_s),
+            fmt_s(self.max_s),
+        );
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Bench runner: `warmup` unmeasured runs then `iters` timed runs.
+pub struct Bencher {
+    warmup: u32,
+    iters: u32,
+    /// Overall per-benchmark wall-clock cap; iterations stop early once hit
+    /// (but at least one timed iteration always runs).
+    cap: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            iters: 10,
+            cap: Duration::from_secs(60),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32, cap: Duration) -> Self {
+        Bencher { warmup, iters, cap }
+    }
+
+    /// Quick profile for heavy end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher {
+            warmup: 0,
+            iters: 3,
+            cap: Duration::from_secs(120),
+        }
+    }
+
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for done in 0..self.iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+            if started.elapsed() > self.cap && done >= 1 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean_s: stats::mean(&samples),
+            median_s: stats::median(&samples),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: stats::min(&samples),
+            max_s: stats::max(&samples),
+        };
+        m.report();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(1, 5, Duration::from_secs(5));
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.median_s && m.median_s <= m.max_s);
+    }
+
+    #[test]
+    fn cap_stops_early() {
+        let b = Bencher::new(0, 1000, Duration::from_millis(20));
+        let m = b.run("sleepy", || std::thread::sleep(Duration::from_millis(10)));
+        assert!(m.iters < 1000);
+        assert!(m.iters >= 1);
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(fmt_s(2e-9).ends_with("ns"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny CLI parser (clap stand-in): one subcommand + `--key value` /
+//! `--flag` options. Unknown flags are collected so the caller can reject
+//! them with a helpful message.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, bare flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--nodes 4,8,16`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad entry {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--timeouts 0.1,1,2`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad entry {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("fig3 --nodes 4,8 --instances 40 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig3"));
+        assert_eq!(a.get_usize_list("nodes", &[]), vec![4, 8]);
+        assert_eq!(a.get_usize("instances", 100), 40);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("run --seed=42 --alpha=0.8");
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get_f64("alpha", 0.0), 0.8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("table1");
+        assert_eq!(a.get_usize("instances", 100), 100);
+        assert_eq!(a.get_str("out", "results"), "results");
+        assert_eq!(a.get_f64_list("timeouts", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = args("generate out.json extra");
+        assert_eq!(a.command.as_deref(), Some("generate"));
+        assert_eq!(a.positional, vec!["out.json", "extra"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("demo --fast");
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,22 @@
+//! In-house substrates forced by the offline build environment.
+//!
+//! The baked cargo registry only carries `xla` and `anyhow`, so the usual
+//! ecosystem crates (rand, serde_json, clap, criterion, proptest) are
+//! re-implemented here at the scale this project needs. Each module is a
+//! small, fully tested, dependency-free building block:
+//!
+//! * [`rng`]   — xoshiro256++ / splitmix64 deterministic PRNG (rand-like).
+//! * [`json`]  — JSON value tree, writer, and recursive-descent parser.
+//! * [`cli`]   — flag/subcommand parser for the `kube-packd` binary.
+//! * [`timer`] — monotonic deadlines and time budgets for the solver.
+//! * [`stats`] — mean/median/percentile helpers for benches and reports.
+//! * [`prop`]  — seeded property-testing mini-framework (proptest stand-in).
+//! * [`bench`] — criterion stand-in used by `benches/*.rs` (harness=false).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

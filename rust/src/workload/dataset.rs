@@ -1,0 +1,180 @@
+//! Dataset (de)serialization: instances ↔ JSON files.
+//!
+//! The benchmark harness persists generated datasets so experiment runs
+//! are reproducible and compareable across solver configurations (the
+//! paper fixes its 100 instances per parameter combination the same way).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{identical_nodes, Pod, Priority, ReplicaSet, Resources};
+use crate::util::json::{parse, Json};
+
+use super::generator::{GenParams, Instance};
+
+/// Serialize one instance.
+pub fn instance_to_json(inst: &Instance) -> Json {
+    let mut j = Json::obj();
+    j.set("seed", inst.seed)
+        .set("nodes", inst.params.nodes)
+        .set("pods_per_node", inst.params.pods_per_node)
+        .set("priority_tiers", inst.params.priority_tiers)
+        .set("usage", inst.params.usage)
+        .set("node_cpu", inst.nodes[0].capacity.cpu)
+        .set("node_ram", inst.nodes[0].capacity.ram);
+    let rs: Vec<Json> = inst
+        .replicasets
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj();
+            o.set("replicas", r.replicas as u64)
+                .set("cpu", r.template_request.cpu)
+                .set("ram", r.template_request.ram)
+                .set("priority", r.priority.0);
+            o
+        })
+        .collect();
+    j.set("replicasets", Json::Arr(rs));
+    j
+}
+
+/// Rebuild an instance from JSON (pods re-expanded from ReplicaSets, so
+/// arrival order and naming are preserved exactly).
+pub fn instance_from_json(j: &Json) -> Result<Instance> {
+    let get_i = |k: &str| -> Result<i64> {
+        j.get(k)
+            .and_then(Json::as_i64)
+            .with_context(|| format!("missing field {k}"))
+    };
+    let params = GenParams {
+        nodes: get_i("nodes")? as usize,
+        pods_per_node: get_i("pods_per_node")? as usize,
+        priority_tiers: get_i("priority_tiers")? as u32,
+        usage: j
+            .get("usage")
+            .and_then(Json::as_f64)
+            .context("missing usage")?,
+    };
+    let cap = Resources::new(get_i("node_cpu")?, get_i("node_ram")?);
+    let nodes = identical_nodes(params.nodes, cap);
+
+    let mut replicasets = Vec::new();
+    let mut pods: Vec<Pod> = Vec::new();
+    let mut next_pod = 0u32;
+    for (i, rj) in j
+        .get("replicasets")
+        .and_then(Json::as_arr)
+        .context("missing replicasets")?
+        .iter()
+        .enumerate()
+    {
+        let gi = |k: &str| -> Result<i64> {
+            rj.get(k)
+                .and_then(Json::as_i64)
+                .with_context(|| format!("rs {i}: missing {k}"))
+        };
+        let rs = ReplicaSet::new(
+            i as u32,
+            format!("rs-{i:03}"),
+            gi("replicas")? as u32,
+            Resources::new(gi("cpu")?, gi("ram")?),
+            Priority(gi("priority")? as u32),
+        );
+        pods.extend(rs.expand(&mut next_pod));
+        replicasets.push(rs);
+    }
+
+    Ok(Instance {
+        params,
+        seed: get_i("seed")? as u64,
+        replicasets,
+        pods,
+        nodes,
+    })
+}
+
+/// Save a dataset (one JSON document with an instance array).
+pub fn save(instances: &[Instance], path: impl AsRef<Path>) -> Result<()> {
+    let arr = Json::Arr(instances.iter().map(instance_to_json).collect());
+    fs::write(path.as_ref(), arr.to_string_pretty())
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Load a dataset.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Instance>> {
+    let text = fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let doc = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    doc.as_arr()
+        .context("dataset root must be an array")?
+        .iter()
+        .map(instance_from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_instance() {
+        let inst = Instance::generate(
+            GenParams {
+                nodes: 4,
+                pods_per_node: 4,
+                priority_tiers: 4,
+                usage: 0.95,
+            },
+            77,
+        );
+        let j = instance_to_json(&inst);
+        let back = instance_from_json(&j).unwrap();
+        assert_eq!(back.pods.len(), inst.pods.len());
+        assert_eq!(back.nodes[0].capacity, inst.nodes[0].capacity);
+        for (a, b) in inst.pods.iter().zip(&back.pods) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.owner, b.owner);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("kube-packd-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.json");
+        let insts: Vec<Instance> = (0..3)
+            .map(|s| {
+                Instance::generate(
+                    GenParams {
+                        nodes: 4,
+                        pods_per_node: 4,
+                        priority_tiers: 1,
+                        usage: 1.0,
+                    },
+                    s,
+                )
+            })
+            .collect();
+        save(&insts, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[1].pods.len(), insts[1].pods.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = std::env::temp_dir().join("kube-packd-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"not\": \"an array\"}").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "[{\"seed\": 1}]").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,245 @@
+//! The paper's random instance generator.
+
+use crate::cluster::{identical_nodes, Node, Pod, Priority, ReplicaSet, Resources};
+use crate::simulator::KwokSimulator;
+use crate::util::rng::Rng;
+
+/// Generation parameters (one cell of the paper's evaluation grid).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenParams {
+    /// Cluster size: 4, 8, 16 or 32 in the paper.
+    pub nodes: usize,
+    /// Average pods per node: 4 or 8.
+    pub pods_per_node: usize,
+    /// Number of priority tiers: 1, 2 or 4 (priorities 0..tiers).
+    pub priority_tiers: u32,
+    /// Target usage: pod demand / cluster capacity (0.90 … 1.05).
+    pub usage: f64,
+}
+
+impl GenParams {
+    pub fn pod_count(&self) -> usize {
+        self.nodes * self.pods_per_node
+    }
+
+    /// Highest priority value (`p_max`); tiers = p_max + 1.
+    pub fn p_max(&self) -> u32 {
+        self.priority_tiers - 1
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "n{}-ppn{}-pr{}-u{:.0}",
+            self.nodes,
+            self.pods_per_node,
+            self.priority_tiers,
+            self.usage * 100.0
+        )
+    }
+}
+
+/// One generated scheduling instance: ReplicaSets expanded into pods in
+/// arrival order, plus the derived (identical) nodes.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub params: GenParams,
+    pub seed: u64,
+    pub replicasets: Vec<ReplicaSet>,
+    pub pods: Vec<Pod>,
+    pub nodes: Vec<Node>,
+}
+
+impl Instance {
+    /// Generate one instance from a seed, following the paper:
+    /// ReplicaSets of 1–4 replicas with CPU/RAM ~ U[100, 1000] and a
+    /// uniform random priority, generated until the pod budget is
+    /// reached (the last set is truncated to hit the count exactly);
+    /// then identical node capacities chosen so total pod demand equals
+    /// `usage` × cluster capacity.
+    pub fn generate(params: GenParams, seed: u64) -> Instance {
+        let mut rng = Rng::new(seed);
+        let budget = params.pod_count();
+        let mut replicasets = Vec::new();
+        let mut pods: Vec<Pod> = Vec::with_capacity(budget);
+        let mut next_pod = 0u32;
+        let mut rs_id = 0u32;
+
+        while pods.len() < budget {
+            let mut replicas = rng.range_usize(1, 4) as u32;
+            replicas = replicas.min((budget - pods.len()) as u32);
+            let req = Resources::new(rng.range_i64(100, 1000), rng.range_i64(100, 1000));
+            let priority = Priority(rng.below(params.priority_tiers as u64) as u32);
+            let rs = ReplicaSet::new(rs_id, format!("rs-{rs_id:03}"), replicas, req, priority);
+            pods.extend(rs.expand(&mut next_pod));
+            replicasets.push(rs);
+            rs_id += 1;
+        }
+
+        // Node capacity from total demand and the usage ratio.
+        let total: Resources = pods.iter().map(|p| p.request).sum();
+        let cap = Resources::new(
+            ((total.cpu as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
+            ((total.ram as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
+        );
+        let nodes = identical_nodes(params.nodes, cap);
+
+        Instance {
+            params,
+            seed,
+            replicasets,
+            pods,
+            nodes,
+        }
+    }
+
+    /// Generate the paper's *challenging* dataset: run the (deterministic)
+    /// default scheduler and keep only instances it fails to fully place,
+    /// taking the first `count` failures — "we discard the instances
+    /// where KWOK successfully places all pods, selecting the first 100
+    /// instances it fails to do so". Returns fewer if `max_attempts`
+    /// seeds are exhausted (happens at low usage levels).
+    pub fn generate_challenging(
+        params: GenParams,
+        count: usize,
+        base_seed: u64,
+        max_attempts: usize,
+    ) -> Vec<Instance> {
+        let mut out = Vec::with_capacity(count);
+        let mut seed_rng = Rng::new(base_seed);
+        for _ in 0..max_attempts {
+            if out.len() >= count {
+                break;
+            }
+            let inst = Instance::generate(params, seed_rng.next_u64());
+            let mut sim = KwokSimulator::new(params.p_max());
+            let (_, res) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            if !res.all_placed {
+                out.push(inst);
+            }
+        }
+        out
+    }
+
+    /// Total resources requested by all pods.
+    pub fn total_demand(&self) -> Resources {
+        self.pods.iter().map(|p| p.request).sum()
+    }
+
+    /// Actual demand/capacity ratio achieved (≈ params.usage, slightly
+    /// below due to capacity rounding up).
+    pub fn actual_usage(&self) -> (f64, f64) {
+        let d = self.total_demand();
+        let c = self.nodes[0].capacity.scaled(self.nodes.len() as i64);
+        (d.cpu as f64 / c.cpu as f64, d.ram as f64 / c.ram as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> GenParams {
+        GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 1.0,
+        }
+    }
+
+    #[test]
+    fn generates_exact_pod_count() {
+        let inst = Instance::generate(params(), 42);
+        assert_eq!(inst.pods.len(), 16);
+        assert_eq!(inst.nodes.len(), 4);
+        let total_rs: u32 = inst.replicasets.iter().map(|r| r.replicas).sum();
+        assert_eq!(total_rs as usize, 16);
+    }
+
+    #[test]
+    fn requests_in_paper_range() {
+        let inst = Instance::generate(params(), 7);
+        for p in &inst.pods {
+            assert!((100..=1000).contains(&p.request.cpu), "{:?}", p.request);
+            assert!((100..=1000).contains(&p.request.ram), "{:?}", p.request);
+            assert!(p.priority.0 < 2);
+        }
+    }
+
+    #[test]
+    fn usage_ratio_approximately_met() {
+        for seed in [1, 2, 3] {
+            let inst = Instance::generate(
+                GenParams {
+                    usage: 0.95,
+                    ..params()
+                },
+                seed,
+            );
+            let (cpu, ram) = inst.actual_usage();
+            // capacity rounds up, so actual usage is slightly <= target
+            assert!(cpu <= 0.95 + 1e-9 && cpu > 0.90, "cpu usage {cpu}");
+            assert!(ram <= 0.95 + 1e-9 && ram > 0.90, "ram usage {ram}");
+        }
+    }
+
+    #[test]
+    fn nodes_identical_and_sorted() {
+        let inst = Instance::generate(params(), 9);
+        let cap = inst.nodes[0].capacity;
+        for n in &inst.nodes {
+            assert_eq!(n.capacity, cap);
+        }
+        for w in inst.nodes.windows(2) {
+            assert!(w[0].name < w[1].name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Instance::generate(params(), 1234);
+        let b = Instance::generate(params(), 1234);
+        assert_eq!(a.pods.len(), b.pods.len());
+        for (x, y) in a.pods.iter().zip(&b.pods) {
+            assert_eq!(x.request, y.request);
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = Instance::generate(params(), 1235);
+        assert!(
+            a.pods.iter().zip(&c.pods).any(|(x, y)| x.request != y.request),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn replicas_share_template() {
+        let inst = Instance::generate(params(), 5);
+        for rs in &inst.replicasets {
+            let members: Vec<_> = inst.pods.iter().filter(|p| p.owner == Some(rs.id)).collect();
+            assert_eq!(members.len(), rs.replicas as usize);
+            for m in members {
+                assert_eq!(m.request, rs.template_request);
+                assert_eq!(m.priority, rs.priority);
+            }
+        }
+    }
+
+    #[test]
+    fn challenging_instances_fail_kwok() {
+        let insts = Instance::generate_challenging(
+            GenParams {
+                usage: 1.05,
+                ..params()
+            },
+            5,
+            99,
+            200,
+        );
+        assert!(!insts.is_empty());
+        for inst in &insts {
+            let mut sim = KwokSimulator::new(inst.params.p_max());
+            let (_, res) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            assert!(!res.all_placed);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generation and datasets (paper §Evaluation).
+//!
+//! "We generate a set of pod requests with configurable a) number of
+//! nodes, b) average number of pods per node, c) workload ratio between
+//! the total amount of resources in the cluster and the ones needed by
+//! the pods, and d) maximal amount of pods' priorities." Pods get random
+//! CPU/RAM in `[100, 1000]`, arrive as ReplicaSets of 1–4 replicas, and
+//! node capacities are derived from total demand and the usage ratio
+//! (identical nodes, "to reflect typical cloud deployments").
+
+pub mod dataset;
+pub mod generator;
+
+pub use generator::{GenParams, Instance};

@@ -1,0 +1,194 @@
+//! Cross-module integration tests: workload → simulator → optimizer →
+//! plan → plugin, plus failure injection on the plan path.
+
+use std::time::Duration;
+
+use kube_packd::cluster::{identical_nodes, ClusterState, Event, NodeId, Pod, PodId, Priority, Resources};
+use kube_packd::harness::figures::tiny_grid;
+use kube_packd::harness::grid::run_grid;
+use kube_packd::metrics::categories::Outcome;
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::optimizer::{MovePlan, OptimizingScheduler};
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::SolverConfig;
+use kube_packd::workload::{dataset, GenParams, Instance};
+
+/// Full pipeline on a known-fragmenting workload.
+#[test]
+fn pipeline_workload_to_optimised_cluster() {
+    let params = GenParams {
+        nodes: 4,
+        pods_per_node: 4,
+        priority_tiers: 2,
+        usage: 1.0,
+    };
+    let insts = Instance::generate_challenging(params, 3, 2024, 300);
+    assert!(!insts.is_empty(), "no challenging instances found");
+    for inst in &insts {
+        let mut state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+        let mut sched = OptimizingScheduler::new(
+            inst.params.p_max(),
+            OptimizerConfig::with_timeout(1.0),
+        );
+        let report = sched.run(&mut state);
+        assert!(report.solver_invoked);
+        state.check_invariants().unwrap();
+        // event log is consistent with the report
+        let solver_events = state
+            .events
+            .count(|e| matches!(e, Event::SolverInvoked { .. }));
+        assert_eq!(solver_events, 1);
+        if report.improved {
+            assert!(kube_packd::metrics::lex_better(
+                &report.placed_after,
+                &report.placed_before
+            ));
+        }
+    }
+}
+
+/// The optimiser's plan must survive a dataset round-trip (generate →
+/// save → load → solve) with identical results.
+#[test]
+fn dataset_roundtrip_stability() {
+    let params = GenParams {
+        nodes: 4,
+        pods_per_node: 4,
+        priority_tiers: 2,
+        usage: 1.05,
+    };
+    let insts = Instance::generate_challenging(params, 2, 555, 200);
+    let path = std::env::temp_dir().join("kp-integration-ds.json");
+    dataset::save(&insts, &path).unwrap();
+    let loaded = dataset::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    for (a, b) in insts.iter().zip(&loaded) {
+        let run_a = kube_packd::harness::run_instance(a, 0.5, &SolverConfig::default());
+        let run_b = kube_packd::harness::run_instance(b, 0.5, &SolverConfig::default());
+        assert_eq!(run_a.kwok_placed, run_b.kwok_placed);
+        // outcomes may differ between Better and Better&Optimal under
+        // timing jitter, but the baseline and improvement direction agree
+        assert_eq!(
+            run_a.outcome == Outcome::Failure,
+            run_b.outcome == Outcome::Failure
+        );
+    }
+}
+
+/// Failure injection: a plan built against a *stale* state (capacity
+/// stolen between solve and execution) must fail loudly, not corrupt.
+#[test]
+fn stale_plan_execution_fails_cleanly() {
+    let nodes = identical_nodes(2, Resources::new(4000, 4096));
+    let pods = vec![
+        Pod::new(0, "a", Resources::new(100, 2048), Priority(0)),
+        Pod::new(1, "b", Resources::new(100, 2048), Priority(0)),
+        Pod::new(2, "c", Resources::new(100, 3072), Priority(0)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    state.bind(PodId(0), NodeId(0)).unwrap();
+    state.bind(PodId(1), NodeId(1)).unwrap();
+
+    let res = optimize(&state, 0, &OptimizerConfig::with_timeout(1.0)).unwrap();
+    let plan = MovePlan::build(&state, &res.target);
+    assert!(!plan.is_empty());
+
+    // Interloper pod grabs capacity after the solve: small enough to bind
+    // into the residual, big enough to break the planned 3072-MiB bind.
+    let thief = state.add_pod(Pod::new(0, "thief", Resources::new(500, 2000), Priority(0)));
+    let home = res.target[2].unwrap(); // where the big pod should go
+    state.bind(thief, home).unwrap();
+
+    let snapshot = state.clone();
+    let err = plan.execute(&mut state);
+    assert!(err.is_err(), "stale plan must not apply");
+    // state may be partially mutated but never inconsistent
+    state.check_invariants().unwrap();
+    // ... and validate() on the snapshot reports the same problem upfront
+    assert!(plan.validate(&snapshot).is_err());
+}
+
+/// Unschedulable pods flushed after optimisation must not loop forever.
+#[test]
+fn optimizing_scheduler_terminates_when_nothing_fits() {
+    let nodes = identical_nodes(1, Resources::new(100, 100));
+    let pods = vec![
+        Pod::new(0, "xl-1", Resources::new(1000, 1000), Priority(0)),
+        Pod::new(1, "xl-2", Resources::new(1000, 1000), Priority(0)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    let mut sched = OptimizingScheduler::new(0, OptimizerConfig::with_timeout(0.5));
+    let report = sched.run(&mut state);
+    assert!(report.solver_invoked);
+    assert!(!report.improved);
+    assert_eq!(report.placed_after, vec![0]);
+}
+
+/// Tiny end-to-end sweep through the harness grid machinery.
+#[test]
+fn harness_grid_end_to_end() {
+    let cells = run_grid(&tiny_grid());
+    assert!(!cells.is_empty());
+    for cell in &cells {
+        assert_eq!(cell.counts.iter().sum::<usize>(), cell.instances);
+        // challenging instances ⇒ solver invoked ⇒ NoCalls is impossible
+        assert_eq!(cell.pct(Outcome::NoCalls), 0.0);
+    }
+}
+
+/// α-budget accounting: a larger p_max must not blow the total timeout.
+#[test]
+fn total_timeout_respected_across_tiers() {
+    let params = GenParams {
+        nodes: 8,
+        pods_per_node: 8,
+        priority_tiers: 4,
+        usage: 1.05,
+    };
+    let insts = Instance::generate_challenging(params, 1, 9, 100);
+    if let Some(inst) = insts.first() {
+        let mut sim = KwokSimulator::new(inst.params.p_max());
+        let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+        let t0 = std::time::Instant::now();
+        let _ = optimize(
+            &state,
+            inst.params.p_max(),
+            &OptimizerConfig {
+                total_timeout: Duration::from_millis(600),
+                ..Default::default()
+            },
+        );
+        let wall = t0.elapsed();
+        // generous envelope: T_total + per-phase minimum grants + overhead
+        assert!(
+            wall < Duration::from_millis(600 * 3),
+            "optimize ran {wall:?} against a 600ms budget"
+        );
+    }
+}
+
+/// The XLA-scored scheduler must produce the same placements as the
+/// plugin-scored one (full determinism parity), when artifacts exist.
+#[test]
+fn xla_and_native_schedulers_agree_on_placements() {
+    let Ok(scorer) = kube_packd::runtime::XlaScorer::from_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let params = GenParams {
+        nodes: 6,
+        pods_per_node: 5,
+        priority_tiers: 2,
+        usage: 0.95,
+    };
+    let inst = Instance::generate(params, 31337);
+
+    let mut plain = KwokSimulator::new(params.p_max());
+    let (s1, _) = plain.run(inst.nodes.clone(), inst.pods.clone());
+
+    let mut xla = KwokSimulator::new(params.p_max()).with_batch_scorer(Box::new(scorer));
+    let (s2, _) = xla.run(inst.nodes.clone(), inst.pods.clone());
+
+    assert_eq!(s1.assignment(), s2.assignment(), "scorer backends diverged");
+}

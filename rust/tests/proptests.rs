@@ -1,0 +1,324 @@
+//! Property-based tests over solver / scheduler / optimizer invariants,
+//! using the in-house `util::prop` mini-framework (proptest substitute;
+//! see DESIGN.md "Substitutions"). Each property runs against dozens of
+//! seeded random cases; failures report the reproducing seed.
+
+use kube_packd::cluster::{ClusterState, NodeId, PodId};
+use kube_packd::metrics::lex_better;
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::optimizer::plan::MovePlan;
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig};
+use kube_packd::util::prop::check;
+use kube_packd::util::rng::Rng;
+use kube_packd::util::timer::Deadline;
+use kube_packd::workload::{GenParams, Instance};
+
+/// Random small packing model: `pods` groups × `nodes` options with
+/// random demands and capacities. Returns (model, objective).
+fn random_packing(rng: &mut Rng) -> (Model, LinearExpr, usize, usize) {
+    let pods = rng.range_usize(2, 12);
+    let nodes = rng.range_usize(1, 4);
+    let mut m = Model::new();
+    let mut vars = Vec::new();
+    let demands: Vec<(i64, i64)> = (0..pods)
+        .map(|_| (rng.range_i64(50, 600), rng.range_i64(50, 600)))
+        .collect();
+    for _ in 0..pods {
+        let xs = m.new_vars(nodes);
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        vars.push(xs);
+    }
+    let cap = rng.range_i64(300, 1500);
+    let mut cpu_class = Vec::new();
+    let mut ram_class = Vec::new();
+    for j in 0..nodes {
+        cpu_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(c, _))| (xs[j], c))),
+            cap,
+        );
+        ram_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(_, r))| (xs[j], r))),
+            cap,
+        );
+    }
+    m.add_resource_class(cpu_class);
+    m.add_resource_class(ram_class);
+    let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+    (m, obj, pods, nodes)
+}
+
+/// Exhaustive optimum by brute force (assignments as base-(nodes+1)
+/// counters) — only for tiny models.
+fn brute_force_max(m: &Model, obj: &LinearExpr, pods: usize, nodes: usize) -> i64 {
+    let nv = m.num_vars();
+    let mut best = i64::MIN;
+    let mut assign = vec![0usize; pods]; // 0 = none, 1..=nodes = node
+    loop {
+        let mut values = vec![false; nv];
+        for (i, &a) in assign.iter().enumerate() {
+            if a > 0 {
+                values[i * nodes + (a - 1)] = true;
+            }
+        }
+        if m.feasible(&values) {
+            best = best.max(obj.eval(&values));
+        }
+        // increment counter
+        let mut k = 0;
+        loop {
+            if k == pods {
+                return best;
+            }
+            assign[k] += 1;
+            if assign[k] <= nodes {
+                break;
+            }
+            assign[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+#[test]
+fn prop_solver_matches_brute_force_on_tiny_models() {
+    check(
+        "solver_matches_brute_force",
+        0xBF01,
+        40,
+        |rng| {
+            // keep models tiny enough for brute force: <= 4^7 states
+            let mut r2 = rng.fork();
+            loop {
+                let (m, obj, pods, nodes) = random_packing(&mut r2);
+                if pods <= 7 && nodes <= 3 {
+                    return (m, obj, pods, nodes);
+                }
+            }
+        },
+        |(m, obj, pods, nodes)| {
+            let sol = solve_max(m, obj, Deadline::unlimited(), &SolverConfig::default());
+            if sol.status != SolveStatus::Optimal {
+                return Err(format!("expected Optimal, got {:?}", sol.status));
+            }
+            let want = brute_force_max(m, obj, *pods, *nodes);
+            if sol.objective != want {
+                return Err(format!("solver {} != brute force {}", sol.objective, want));
+            }
+            if !m.feasible(&sol.values) {
+                return Err("solution violates constraints".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solver_feature_toggles_agree_on_optimum() {
+    // bound / best-fit / symmetry / hints must never change the OPTIMAL
+    // objective value — only how fast it is reached.
+    check(
+        "feature_toggles_agree",
+        0xF0661,
+        25,
+        random_packing,
+        |(m, obj, _, _)| {
+            let base = solve_max(m, obj, Deadline::unlimited(), &SolverConfig::default());
+            for cfg in [
+                SolverConfig {
+                    use_bound: false,
+                    use_capacity_bound: false,
+                    ..Default::default()
+                },
+                SolverConfig {
+                    use_symmetry: false,
+                    ..Default::default()
+                },
+                SolverConfig {
+                    use_best_fit: false,
+                    use_hints: false,
+                    ..Default::default()
+                },
+            ] {
+                let alt = solve_max(m, obj, Deadline::unlimited(), &cfg);
+                if alt.status != SolveStatus::Optimal || base.status != SolveStatus::Optimal {
+                    return Err(format!("non-optimal: {:?}/{:?}", base.status, alt.status));
+                }
+                if alt.objective != base.objective {
+                    return Err(format!(
+                        "toggle changed optimum: {} vs {} ({cfg:?})",
+                        base.objective, alt.objective
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_never_overcommits_and_is_deterministic() {
+    check(
+        "scheduler_invariants",
+        0x5CED,
+        40,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 8),
+                pods_per_node: rng.range_usize(2, 8),
+                priority_tiers: rng.range_usize(1, 4) as u32,
+                usage: 0.85 + rng.f64() * 0.25,
+            };
+            Instance::generate(params, rng.next_u64())
+        },
+        |inst| {
+            let mut sim1 = KwokSimulator::new(inst.params.p_max());
+            let (s1, r1) = sim1.run(inst.nodes.clone(), inst.pods.clone());
+            s1.check_invariants()?;
+            let mut sim2 = KwokSimulator::new(inst.params.p_max());
+            let (s2, _) = sim2.run(inst.nodes.clone(), inst.pods.clone());
+            if s1.assignment() != s2.assignment() {
+                return Err("nondeterministic placement".into());
+            }
+            let placed: usize = r1.placed_per_priority.iter().sum();
+            if placed + r1.pending.len() != inst.pods.len() {
+                return Err("pod accounting broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_optimizer_never_worse_than_kwok_and_plan_executes() {
+    check(
+        "optimizer_dominates_kwok",
+        0x0D0C,
+        12,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 6),
+                pods_per_node: rng.range_usize(3, 6),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.95 + rng.f64() * 0.10,
+            };
+            Instance::generate(params, rng.next_u64())
+        },
+        |inst| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (state, base) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            let Some(res) = optimize(&state, p_max, &OptimizerConfig::with_timeout(1.0)) else {
+                return Ok(()); // a Failure is allowed, just not a regression
+            };
+            if lex_better(&base.placed_per_priority, &res.placed_per_priority) {
+                return Err(format!(
+                    "optimizer strictly worse: kwok {:?} vs opt {:?}",
+                    base.placed_per_priority, res.placed_per_priority
+                ));
+            }
+            // the plan derived from the target must execute cleanly
+            let plan = MovePlan::build(&state, &res.target);
+            let mut live = state.clone();
+            plan.execute(&mut live).map_err(|e| format!("plan: {e}"))?;
+            live.check_invariants()?;
+            // and realise exactly the target
+            if live.assignment() != &res.target[..] {
+                return Err("plan did not realise the solver target".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_move_plan_roundtrip_arbitrary_targets() {
+    // For arbitrary feasible targets (not just solver output), the plan
+    // builder must produce an executable evict-then-place sequence.
+    check(
+        "move_plan_roundtrip",
+        0x9142,
+        40,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 6),
+                pods_per_node: 3,
+                priority_tiers: 1,
+                usage: 0.7 + rng.f64() * 0.2,
+            };
+            let inst = Instance::generate(params, rng.next_u64());
+            let seed = rng.next_u64();
+            (inst, seed)
+        },
+        |(inst, seed)| {
+            let mut state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+            // random initial placement via first-fit on a shuffled order
+            let mut rng = Rng::new(*seed);
+            let mut order: Vec<usize> = (0..inst.pods.len()).collect();
+            rng.shuffle(&mut order);
+            for &i in &order {
+                for j in 0..inst.nodes.len() {
+                    if state.bind(PodId(i as u32), NodeId(j as u32)).is_ok() {
+                        break;
+                    }
+                }
+            }
+            // random feasible target: replay first-fit with another order
+            let mut target_state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+            rng.shuffle(&mut order);
+            for &i in &order {
+                for j in (0..inst.nodes.len()).rev() {
+                    if target_state.bind(PodId(i as u32), NodeId(j as u32)).is_ok() {
+                        break;
+                    }
+                }
+            }
+            let target: Vec<_> = target_state.assignment().to_vec();
+            let plan = MovePlan::build(&state, &target);
+            let mut live = state.clone();
+            plan.execute(&mut live).map_err(|e| format!("{e}"))?;
+            if live.assignment() != &target[..] {
+                return Err("plan did not reach target".into());
+            }
+            live.check_invariants()?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_anytime_never_regresses_with_more_time() {
+    // More budget can only improve (or keep) the placed vector.
+    check(
+        "anytime_monotone",
+        0xA11E,
+        6,
+        |rng| {
+            let params = GenParams {
+                nodes: 8,
+                pods_per_node: 6,
+                priority_tiers: 2,
+                usage: 1.0,
+            };
+            Instance::generate(params, rng.next_u64())
+        },
+        |inst| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            let short = optimize(&state, p_max, &OptimizerConfig::with_timeout(0.1));
+            let long = optimize(&state, p_max, &OptimizerConfig::with_timeout(1.0));
+            if let (Some(s), Some(l)) = (short, long) {
+                if lex_better(&s.placed_per_priority, &l.placed_per_priority) {
+                    return Err(format!(
+                        "long run worse: {:?} < {:?}",
+                        l.placed_per_priority, s.placed_per_priority
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

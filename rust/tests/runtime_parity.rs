@@ -1,0 +1,122 @@
+//! XLA runtime parity: the compiled L1/L2 artifact must agree with the
+//! native Rust scorer (which itself mirrors `kernels/ref.py`) on every
+//! score, on randomised cluster states.
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when
+//! the artifacts are missing so `cargo test` stays green in a fresh
+//! checkout.
+
+use kube_packd::cluster::{ClusterState, NodeId, PodId};
+use kube_packd::runtime::{NativeScorer, XlaScorer, INFEASIBLE};
+use kube_packd::scheduler::default::BatchScorer;
+use kube_packd::util::rng::Rng;
+use kube_packd::workload::{GenParams, Instance};
+
+fn xla() -> Option<XlaScorer> {
+    match XlaScorer::from_artifacts() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping runtime parity: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn parity_on_random_states() {
+    let Some(mut xla) = xla() else { return };
+    let mut rng = Rng::new(0xA17A);
+    for case in 0..10 {
+        let params = GenParams {
+            nodes: rng.range_usize(1, 30),
+            pods_per_node: rng.range_usize(1, 8),
+            priority_tiers: 1,
+            usage: 0.9 + rng.f64() * 0.2,
+        };
+        let inst = Instance::generate(params, rng.next_u64());
+        let mut state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+        // randomly place a subset to vary the free vectors
+        for i in 0..state.pods().len() {
+            if rng.chance(0.5) {
+                let node = NodeId(rng.below(params.nodes as u64) as u32);
+                let _ = state.bind(PodId(i as u32), node);
+            }
+        }
+        let pending = state.pending_pods();
+        if pending.is_empty() {
+            continue;
+        }
+        let rows = xla.score_matrix(&state, &pending);
+        for (k, &pod) in pending.iter().enumerate() {
+            let native = NativeScorer.score_row(&state, pod);
+            assert_eq!(rows[k].len(), native.len());
+            for (j, (a, b)) in rows[k].iter().zip(&native).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "case {case}: pod {pod:?} node {j}: xla={a} native={b}"
+                );
+                // feasibility marker must agree exactly
+                assert_eq!(*a == INFEASIBLE, *b == INFEASIBLE);
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_padding_never_selects_ghost_nodes() {
+    let Some(mut xla) = xla() else { return };
+    // 3 real nodes in a (64, 8) variant: 5 padded ghost nodes.
+    let params = GenParams {
+        nodes: 3,
+        pods_per_node: 4,
+        priority_tiers: 1,
+        usage: 1.0,
+    };
+    let inst = Instance::generate(params, 99);
+    let state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+    let pending = state.pending_pods();
+    let rows = xla.score_matrix(&state, &pending);
+    for row in &rows {
+        assert_eq!(row.len(), 3, "rows must be truncated to real nodes");
+    }
+}
+
+#[test]
+fn parity_large_variant_exercised() {
+    let Some(mut xla) = xla() else { return };
+    // 20 nodes forces the (256, 32) artifact.
+    let params = GenParams {
+        nodes: 20,
+        pods_per_node: 8,
+        priority_tiers: 1,
+        usage: 1.0,
+    };
+    let inst = Instance::generate(params, 7);
+    let state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+    let pending = state.pending_pods();
+    assert_eq!(pending.len(), 160);
+    let rows = xla.score_matrix(&state, &pending);
+    assert_eq!(rows.len(), 160);
+    let native = NativeScorer.score_row(&state, pending[0]);
+    for (a, b) in rows[0].iter().zip(&native) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    assert_eq!(xla.executions, 1, "one PJRT execute for the whole batch");
+}
+
+#[test]
+fn infeasible_pod_all_negative_through_xla() {
+    let Some(mut xla) = xla() else { return };
+    let params = GenParams {
+        nodes: 2,
+        pods_per_node: 2,
+        priority_tiers: 1,
+        usage: 1.0,
+    };
+    let mut inst = Instance::generate(params, 3);
+    // make pod 0 impossibly large
+    inst.pods[0].request = kube_packd::cluster::Resources::new(10_000_000, 10_000_000);
+    let state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+    let row = xla.score_row(&state, PodId(0));
+    assert!(row.iter().all(|&s| s == INFEASIBLE));
+}
