@@ -1,0 +1,57 @@
+//! Bench: steady-state lifecycle throughput (simulated events/sec).
+//!
+//! Measures the discrete-event loop itself (default-only policy: no CP
+//! solver in the hot path), so later PRs can track scheduling-loop
+//! regressions in BENCH_*.json without solver-timeout noise. A second
+//! pass reports the fallback+sweep policy for context.
+
+use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy, SweepConfig};
+use kube_packd::optimizer::algorithm::OptimizerConfig;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
+use kube_packd::workload::GenParams;
+
+fn main() {
+    let b = Bencher::new(1, 5, std::time::Duration::from_secs(60));
+
+    for nodes in [8usize, 16, 32] {
+        let params = ChurnParams::for_cluster(GenParams {
+            nodes,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 0.90,
+        });
+        let trace = ChurnTraceGenerator::new(params, 7).generate();
+        let cfg = ChurnConfig::for_policy(Policy::DefaultOnly);
+        let events = run_churn(&trace, &cfg).events_processed;
+
+        let m = b.run(&format!("churn/default-only-n{nodes}-ev{events}"), || {
+            black_box(run_churn(&trace, &cfg).events_processed)
+        });
+        println!("  -> ~{:.0} simulated events/sec", events as f64 / m.median_s);
+    }
+
+    // Context: one fallback+sweep run at the acceptance-criterion scale.
+    let params = ChurnParams::for_cluster(GenParams {
+        nodes: 16,
+        pods_per_node: 4,
+        priority_tiers: 2,
+        usage: 0.95,
+    });
+    let trace = ChurnTraceGenerator::new(params, 42).generate();
+    let cfg = ChurnConfig {
+        policy: Policy::FallbackSweep,
+        sweep_every_ms: 5_000,
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(0.5),
+            eviction_budget: 8,
+        },
+        fallback_timeout: std::time::Duration::from_millis(500),
+    };
+    let heavy = Bencher::heavy();
+    let events = run_churn(&trace, &cfg).events_processed;
+    let m = heavy.run(&format!("churn/fallback-sweep-n16-ev{events}"), || {
+        black_box(run_churn(&trace, &cfg).events_processed)
+    });
+    println!("  -> ~{:.0} simulated events/sec", events as f64 / m.median_s);
+}

@@ -27,6 +27,37 @@ pub enum Event {
     },
     /// A queued pod was paused while the solver ran.
     QueuePaused { pod: PodId },
+    /// Pod reached end of life (`node` = where it ran; `None` if it
+    /// completed while pending). `at_ms` is virtual lifecycle time.
+    PodCompleted {
+        pod: PodId,
+        node: Option<NodeId>,
+        at_ms: u64,
+    },
+    /// Node marked unschedulable (drain step 1).
+    NodeCordoned { node: NodeId, at_ms: u64 },
+    /// Node re-admitted to scheduling.
+    NodeUncordoned { node: NodeId, at_ms: u64 },
+    /// Node drained: cordoned and all its pods evicted.
+    NodeDrained {
+        node: NodeId,
+        evicted: usize,
+        at_ms: u64,
+    },
+    /// Fresh node joined the cluster.
+    NodeJoined { node: NodeId, at_ms: u64 },
+    /// Empty node removed from the cluster.
+    NodeRemoved { node: NodeId, at_ms: u64 },
+    /// Periodic defragmentation sweep began.
+    SweepStarted { pending: usize, at_ms: u64 },
+    /// Sweep finished. `applied` = an improving plan within the eviction
+    /// budget was executed (`moves` = pods whose node changed).
+    SweepFinished {
+        improved: bool,
+        applied: bool,
+        moves: usize,
+        at_ms: u64,
+    },
 }
 
 /// Growable event log. Cheap to clone for snapshots in tests.
@@ -69,6 +100,11 @@ impl EventLog {
     /// Number of binds (default + planned).
     pub fn binds(&self) -> usize {
         self.count(|e| matches!(e, Event::Bind { .. } | Event::PlanBind { .. }))
+    }
+
+    /// Number of pod completions recorded.
+    pub fn completions(&self) -> usize {
+        self.count(|e| matches!(e, Event::PodCompleted { .. }))
     }
 }
 

@@ -22,4 +22,4 @@ pub use node::{identical_nodes, Node, NodeId};
 pub use pod::{Pod, PodId, Priority};
 pub use replicaset::ReplicaSet;
 pub use resources::Resources;
-pub use state::{ClusterState, StateError};
+pub use state::{ClusterState, NodeStatus, StateError};

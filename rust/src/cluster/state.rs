@@ -18,6 +18,12 @@ pub enum StateError {
     NotBound(PodId),
     InsufficientCapacity { pod: PodId, node: NodeId },
     SelectorMismatch { pod: PodId, node: NodeId },
+    /// Pod already completed/terminated; it can never bind again.
+    PodRetired(PodId),
+    /// Node is cordoned or removed; it accepts no new binds.
+    NodeUnschedulable { pod: PodId, node: NodeId },
+    /// Node removal requires the node to be empty.
+    NodeNotEmpty(NodeId),
 }
 
 impl std::fmt::Display for StateError {
@@ -31,10 +37,25 @@ impl std::fmt::Display for StateError {
             StateError::SelectorMismatch { pod, node } => {
                 write!(f, "pod {pod:?} selector rejects node {node:?}")
             }
+            StateError::PodRetired(p) => write!(f, "pod {p:?} already retired"),
+            StateError::NodeUnschedulable { pod, node } => {
+                write!(f, "pod {pod:?} cannot bind to unschedulable node {node:?}")
+            }
+            StateError::NodeNotEmpty(n) => write!(f, "node {n:?} still has bound pods"),
         }
     }
 }
 impl std::error::Error for StateError {}
+
+/// Node lifecycle status. `Ready` accepts binds; `Cordoned` keeps its
+/// running pods but takes no new ones (drain step 1); `Removed` has left
+/// the cluster (must be empty first) and is excluded from utilisation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    Ready,
+    Cordoned,
+    Removed,
+}
 
 /// The cluster's allocation state.
 #[derive(Clone, Debug)]
@@ -45,6 +66,12 @@ pub struct ClusterState {
     assignment: Vec<Option<NodeId>>,
     /// Per-node free capacity (capacity − Σ bound requests).
     free: Vec<Resources>,
+    /// Per-node lifecycle status.
+    status: Vec<NodeStatus>,
+    /// Per-pod retirement flag (completed/terminated pods never reschedule).
+    retired: Vec<bool>,
+    /// Virtual lifecycle time stamped onto lifecycle events (ms).
+    now_ms: u64,
     /// Event log of all mutations.
     pub events: EventLog,
 }
@@ -69,11 +96,16 @@ impl ClusterState {
         }
         let free = nodes.iter().map(|n| n.capacity).collect();
         let assignment = vec![None; pods.len()];
+        let status = vec![NodeStatus::Ready; nodes.len()];
+        let retired = vec![false; pods.len()];
         ClusterState {
             nodes,
             pods,
             assignment,
             free,
+            status,
+            retired,
+            now_ms: 0,
             events: EventLog::new(),
         }
     }
@@ -112,12 +144,44 @@ impl ClusterState {
         &self.free
     }
 
-    /// Pods with no binding, in id order.
+    pub fn node_status(&self, node: NodeId) -> NodeStatus {
+        self.status[node.idx()]
+    }
+
+    /// Whether `node` currently accepts new binds.
+    pub fn node_ready(&self, node: NodeId) -> bool {
+        self.status[node.idx()] == NodeStatus::Ready
+    }
+
+    /// Whether `pod` completed/terminated (never reschedules).
+    pub fn is_retired(&self, pod: PodId) -> bool {
+        self.retired[pod.idx()]
+    }
+
+    pub fn retired_count(&self) -> usize {
+        self.retired.iter().filter(|&&r| r).count()
+    }
+
+    /// Virtual lifecycle time, in milliseconds (0 unless a simulator
+    /// drives [`ClusterState::set_time`]).
+    pub fn time_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    /// Advance the virtual clock stamped onto lifecycle events.
+    pub fn set_time(&mut self, now_ms: u64) {
+        debug_assert!(now_ms >= self.now_ms, "lifecycle time must be monotonic");
+        self.now_ms = now_ms;
+    }
+
+    /// Pods with no binding that are still schedulable, in id order.
     pub fn pending_pods(&self) -> Vec<PodId> {
         self.assignment
             .iter()
             .enumerate()
-            .filter_map(|(i, a)| a.is_none().then_some(PodId(i as u32)))
+            .filter_map(|(i, a)| {
+                (a.is_none() && !self.retired[i]).then_some(PodId(i as u32))
+            })
             .collect()
     }
 
@@ -142,17 +206,67 @@ impl ClusterState {
         pod.id = id;
         self.pods.push(pod);
         self.assignment.push(None);
+        self.retired.push(false);
         id
     }
 
-    /// Bind a pending pod to a node, enforcing capacity and selector.
+    /// Append a node (a join). Keeps the lexicographic-name / dense-id
+    /// invariant, so the new name must sort after every existing one.
+    pub fn add_node(&mut self, name: impl Into<String>, capacity: Resources) -> NodeId {
+        let name = name.into();
+        if let Some(last) = self.nodes.last() {
+            assert!(
+                last.name < name,
+                "joined node name must sort last: {:?} !< {:?}",
+                last.name,
+                name
+            );
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::new(id.0, name, capacity));
+        self.free.push(capacity);
+        self.status.push(NodeStatus::Ready);
+        self.events.push(Event::NodeJoined {
+            node: id,
+            at_ms: self.now_ms,
+        });
+        id
+    }
+
+    /// Append a node with the canonical `node-NNN` naming scheme used by
+    /// [`identical_nodes`](super::node::identical_nodes). Past the
+    /// fixed-width ordinal range (1000 joins), names switch to a
+    /// `node-z`-prefixed wide ordinal that still sorts after every
+    /// canonical name, so long-horizon simulations never trip the
+    /// sorted-name invariant.
+    pub fn join_node(&mut self, capacity: Resources) -> NodeId {
+        let ord = self.nodes.len();
+        let mut name = format!("node-{ord:03}");
+        if let Some(last) = self.nodes.last() {
+            if name <= last.name {
+                // "node-1000" < "node-999": the zero-padding ran out.
+                // 'z' > any digit, so this sorts after all canonical names.
+                name = format!("node-z{ord:09}");
+            }
+        }
+        self.add_node(name, capacity)
+    }
+
+    /// Bind a pending pod to a node, enforcing capacity, selector, pod
+    /// liveness, and node readiness.
     pub fn bind(&mut self, pod: PodId, node: NodeId) -> Result<(), StateError> {
+        if self.retired[pod.idx()] {
+            return Err(StateError::PodRetired(pod));
+        }
         if self.assignment[pod.idx()].is_some() {
             return Err(StateError::AlreadyBound(pod));
         }
         let req = self.pods[pod.idx()].request;
         if !self.pods[pod.idx()].selector_matches(&self.nodes[node.idx()]) {
             return Err(StateError::SelectorMismatch { pod, node });
+        }
+        if self.status[node.idx()] != NodeStatus::Ready {
+            return Err(StateError::NodeUnschedulable { pod, node });
         }
         if !req.fits_in(&self.free[node.idx()]) {
             return Err(StateError::InsufficientCapacity { pod, node });
@@ -174,6 +288,95 @@ impl ClusterState {
         Ok(node)
     }
 
+    /// Terminate a pod: frees its capacity (if bound) and retires it so
+    /// it never re-enters scheduling. Returns where it ran.
+    pub fn terminate(&mut self, pod: PodId) -> Result<Option<NodeId>, StateError> {
+        if self.retired[pod.idx()] {
+            return Err(StateError::PodRetired(pod));
+        }
+        let node = self.assignment[pod.idx()];
+        if let Some(n) = node {
+            self.free[n.idx()] += self.pods[pod.idx()].request;
+            self.assignment[pod.idx()] = None;
+        }
+        self.retired[pod.idx()] = true;
+        self.events.push(Event::PodCompleted {
+            pod,
+            node,
+            at_ms: self.now_ms,
+        });
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(node)
+    }
+
+    /// Mark a node unschedulable. Returns `false` if it was not Ready.
+    pub fn cordon(&mut self, node: NodeId) -> bool {
+        if self.status[node.idx()] != NodeStatus::Ready {
+            return false;
+        }
+        self.status[node.idx()] = NodeStatus::Cordoned;
+        self.events.push(Event::NodeCordoned {
+            node,
+            at_ms: self.now_ms,
+        });
+        true
+    }
+
+    /// Re-admit a cordoned node. Returns `false` if it was not Cordoned.
+    pub fn uncordon(&mut self, node: NodeId) -> bool {
+        if self.status[node.idx()] != NodeStatus::Cordoned {
+            return false;
+        }
+        self.status[node.idx()] = NodeStatus::Ready;
+        self.events.push(Event::NodeUncordoned {
+            node,
+            at_ms: self.now_ms,
+        });
+        true
+    }
+
+    /// Drain a node: cordon it and evict every pod bound to it. The
+    /// evicted pods become pending again (they re-enter scheduling);
+    /// returns them in id order. A removed node drains to nothing and
+    /// records no events.
+    pub fn drain(&mut self, node: NodeId) -> Vec<PodId> {
+        if self.status[node.idx()] == NodeStatus::Removed {
+            return Vec::new();
+        }
+        if self.status[node.idx()] == NodeStatus::Ready {
+            self.cordon(node);
+        }
+        let victims = self.pods_on(node);
+        for &pod in &victims {
+            self.evict(pod).expect("pods_on returned an unbound pod");
+        }
+        self.events.push(Event::NodeDrained {
+            node,
+            evicted: victims.len(),
+            at_ms: self.now_ms,
+        });
+        victims
+    }
+
+    /// Remove an (empty) node from the cluster. The slot stays in the
+    /// dense id space but is excluded from scheduling and utilisation.
+    /// Idempotent: removing an already-removed node records no second
+    /// event.
+    pub fn remove_node(&mut self, node: NodeId) -> Result<(), StateError> {
+        if self.status[node.idx()] == NodeStatus::Removed {
+            return Ok(());
+        }
+        if !self.pods_on(node).is_empty() {
+            return Err(StateError::NodeNotEmpty(node));
+        }
+        self.status[node.idx()] = NodeStatus::Removed;
+        self.events.push(Event::NodeRemoved {
+            node,
+            at_ms: self.now_ms,
+        });
+        Ok(())
+    }
+
     // ---- metrics ---------------------------------------------------------
 
     /// Number of placed pods per priority tier, index = priority value.
@@ -191,13 +394,15 @@ impl ClusterState {
         counts
     }
 
-    /// Mean (cpu, ram) utilisation across nodes, in [0, 1].
+    /// Mean (cpu, ram) utilisation across non-removed nodes, in [0, 1].
     pub fn utilization(&self) -> (f64, f64) {
-        if self.nodes.is_empty() {
-            return (0.0, 0.0);
-        }
         let (mut cpu, mut ram) = (0.0, 0.0);
+        let mut k = 0usize;
         for n in &self.nodes {
+            if self.status[n.id.idx()] == NodeStatus::Removed {
+                continue;
+            }
+            k += 1;
             let used = n.capacity - self.free[n.id.idx()];
             if n.capacity.cpu > 0 {
                 cpu += used.cpu as f64 / n.capacity.cpu as f64;
@@ -206,8 +411,10 @@ impl ClusterState {
                 ram += used.ram as f64 / n.capacity.ram as f64;
             }
         }
-        let k = self.nodes.len() as f64;
-        (cpu / k, ram / k)
+        if k == 0 {
+            return (0.0, 0.0);
+        }
+        (cpu / k as f64, ram / k as f64)
     }
 
     // ---- invariants ------------------------------------------------------
@@ -217,6 +424,9 @@ impl ClusterState {
         let mut used = vec![Resources::ZERO; self.nodes.len()];
         for (i, a) in self.assignment.iter().enumerate() {
             if let Some(n) = a {
+                if self.retired[i] {
+                    return Err(format!("retired pod {} still bound", self.pods[i].name));
+                }
                 used[n.idx()] += self.pods[i].request;
             }
         }
@@ -230,6 +440,9 @@ impl ClusterState {
             }
             if expect_free.any_negative() {
                 return Err(format!("node {} over capacity: {:?}", node.name, expect_free));
+            }
+            if self.status[j] == NodeStatus::Removed && used[j] != Resources::ZERO {
+                return Err(format!("removed node {} still hosts pods", node.name));
             }
         }
         Ok(())
@@ -330,6 +543,124 @@ mod tests {
             s.bind(PodId(0), NodeId(0)),
             Err(StateError::SelectorMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn terminate_frees_capacity_and_retires() {
+        let mut s = two_node_state();
+        s.set_time(1_500);
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        let node = s.terminate(PodId(0)).unwrap();
+        assert_eq!(node, Some(NodeId(0)));
+        assert_eq!(s.free(NodeId(0)), Resources::new(4000, 4096));
+        assert!(s.is_retired(PodId(0)));
+        assert_eq!(s.retired_count(), 1);
+        // retired pods are no longer pending and never rebind
+        assert!(!s.pending_pods().contains(&PodId(0)));
+        assert_eq!(s.bind(PodId(0), NodeId(0)), Err(StateError::PodRetired(PodId(0))));
+        assert_eq!(s.terminate(PodId(0)), Err(StateError::PodRetired(PodId(0))));
+        // the completion event carries the virtual timestamp
+        assert!(s.events.all().iter().any(|e| matches!(
+            e,
+            Event::PodCompleted { pod: PodId(0), node: Some(NodeId(0)), at_ms: 1_500 }
+        )));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn terminate_pending_pod_retires_without_node() {
+        let mut s = two_node_state();
+        assert_eq!(s.terminate(PodId(2)).unwrap(), None);
+        assert!(s.is_retired(PodId(2)));
+        assert_eq!(s.events.completions(), 1);
+    }
+
+    #[test]
+    fn cordon_blocks_binds_until_uncordon() {
+        let mut s = two_node_state();
+        assert!(s.cordon(NodeId(0)));
+        assert!(!s.cordon(NodeId(0))); // idempotent-ish: already cordoned
+        assert_eq!(s.node_status(NodeId(0)), NodeStatus::Cordoned);
+        assert_eq!(
+            s.bind(PodId(0), NodeId(0)),
+            Err(StateError::NodeUnschedulable { pod: PodId(0), node: NodeId(0) })
+        );
+        assert!(s.uncordon(NodeId(0)));
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_evicts_everything_and_cordons() {
+        let mut s = two_node_state();
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        s.bind(PodId(1), NodeId(0)).unwrap();
+        s.bind(PodId(2), NodeId(1)).unwrap();
+        let victims = s.drain(NodeId(0));
+        assert_eq!(victims, vec![PodId(0), PodId(1)]);
+        assert!(!s.node_ready(NodeId(0)));
+        assert_eq!(s.free(NodeId(0)), Resources::new(4000, 4096));
+        // drained pods are pending again (not retired)
+        assert_eq!(s.pending_pods(), vec![PodId(0), PodId(1)]);
+        assert!(s.events.all().iter().any(|e| matches!(
+            e,
+            Event::NodeDrained { node: NodeId(0), evicted: 2, .. }
+        )));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_node_requires_empty() {
+        let mut s = two_node_state();
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        assert_eq!(s.remove_node(NodeId(0)), Err(StateError::NodeNotEmpty(NodeId(0))));
+        s.drain(NodeId(0));
+        s.remove_node(NodeId(0)).unwrap();
+        assert_eq!(s.node_status(NodeId(0)), NodeStatus::Removed);
+        // idempotent: no second NodeRemoved event, no phantom drains
+        let events_before = s.events.len();
+        s.remove_node(NodeId(0)).unwrap();
+        assert_eq!(s.drain(NodeId(0)), Vec::<PodId>::new());
+        assert_eq!(s.events.len(), events_before);
+        // removed nodes are excluded from the utilisation mean
+        s.bind(PodId(0), NodeId(1)).unwrap();
+        let (cpu, ram) = s.utilization();
+        assert!((cpu - 0.5).abs() < 1e-9, "cpu={cpu}");
+        assert!((ram - 0.5).abs() < 1e-9, "ram={ram}");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn join_node_extends_cluster() {
+        let mut s = two_node_state();
+        let id = s.join_node(Resources::new(4000, 4096));
+        assert_eq!(id, NodeId(2));
+        assert_eq!(s.node(id).name, "node-002");
+        assert!(s.node_ready(id));
+        s.bind(PodId(2), id).unwrap();
+        assert!(s.events.all().iter().any(|e| matches!(e, Event::NodeJoined { node: NodeId(2), .. })));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn join_survives_the_fixed_width_ordinal_boundary() {
+        // 1000 canonical names exhaust the 3-digit padding; the 1001st
+        // join must still sort after "node-999" instead of panicking.
+        let mut s = ClusterState::new(identical_nodes(1000, Resources::new(10, 10)), vec![]);
+        let id = s.join_node(Resources::new(10, 10));
+        assert_eq!(id, NodeId(1000));
+        assert_eq!(s.node(id).name, "node-z000001000");
+        assert!(s.node(id).name > "node-999".to_string());
+        // and the scheme keeps working for the join after that
+        let id2 = s.join_node(Resources::new(10, 10));
+        assert_eq!(s.node(id2).name, "node-z000001001");
+    }
+
+    #[test]
+    #[should_panic(expected = "sort last")]
+    fn join_with_non_sorting_name_rejected() {
+        let mut s = two_node_state();
+        s.add_node("aaa-first", Resources::ZERO);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! The churn experiment report: default-only vs fallback vs
+//! fallback+sweep over one shared trace.
+
+use std::fmt::Write as _;
+
+use crate::lifecycle::{ChurnResult, Policy};
+use crate::workload::churn::ChurnTrace;
+
+use super::report::{md_header, md_row, section};
+
+fn vec_cell(v: &[usize]) -> String {
+    format!(
+        "[{}]",
+        v.iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+}
+
+/// Whether `a` serves at least as many pods as `b` in every tier.
+pub fn dominates_per_tier(a: &[usize], b: &[usize]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x >= y)
+}
+
+/// Render the policy comparison as a markdown report.
+pub fn churn_report(trace: &ChurnTrace, results: &[ChurnResult]) -> String {
+    let mut out = String::new();
+    let (deploys, scales, drains, joins) = trace.op_counts();
+    out.push_str(&section(&format!(
+        "Churn — {} · horizon {}ms · seed {}",
+        trace.params.base.label(),
+        trace.params.horizon_ms,
+        trace.seed
+    )));
+    let _ = writeln!(
+        out,
+        "trace: {} ops (deploy {deploys}, scale {scales}, drain {drains}, join {joins}), up to {} pods, {} tiers\n",
+        trace.ops.len(),
+        trace.max_pods(),
+        trace.p_max + 1
+    );
+
+    out.push_str(&md_header(&[
+        "policy",
+        "served/tier",
+        "final placed",
+        "pending",
+        "completions",
+        "evictions",
+        "solver calls",
+        "sweeps",
+        "mean cpu",
+        "log digest",
+    ]));
+    out.push('\n');
+    for r in results {
+        let row = md_row(&[
+            r.policy.label().to_string(),
+            vec_cell(&r.served_per_priority),
+            vec_cell(&r.final_placed),
+            r.final_pending.to_string(),
+            r.completions.to_string(),
+            r.evictions.to_string(),
+            r.solver_invocations.to_string(),
+            format!("{}/{}", r.sweeps_applied, r.sweeps_run),
+            format!("{:.1}%", r.series.mean_cpu() * 100.0),
+            format!("{:016x}", r.log.digest()),
+        ]);
+        out.push_str(&row);
+        out.push('\n');
+    }
+
+    // The headline claim: the optimised policies serve at least as many
+    // pods per priority tier as the baseline on the identical trace.
+    let baseline = results.iter().find(|r| r.policy == Policy::DefaultOnly);
+    let sweep = results.iter().find(|r| r.policy == Policy::FallbackSweep);
+    if let (Some(base), Some(sweep)) = (baseline, sweep) {
+        let ok = dominates_per_tier(&sweep.served_per_priority, &base.served_per_priority);
+        let _ = writeln!(
+            out,
+            "\nfallback+sweep serves >= default-only in every priority tier: {}",
+            if ok { "yes" } else { "NO (regression!)" }
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lifecycle::{compare_policies, ChurnConfig, Policy};
+    use crate::workload::churn::{ChurnParams, ChurnTraceGenerator};
+    use crate::workload::GenParams;
+
+    #[test]
+    fn report_renders_all_policies() {
+        let trace = ChurnTraceGenerator::new(
+            ChurnParams {
+                horizon_ms: 3_000,
+                mean_arrival_ms: 500,
+                mean_lifetime_ms: 1_200,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 2,
+                    pods_per_node: 3,
+                    priority_tiers: 1,
+                    usage: 0.9,
+                })
+            },
+            3,
+        )
+        .generate();
+        let results = compare_policies(&trace, &ChurnConfig::for_policy(Policy::FallbackSweep));
+        let report = churn_report(&trace, &results);
+        assert!(report.contains("default-only"));
+        assert!(report.contains("fallback+sweep"));
+        assert!(report.contains("log digest"));
+        assert!(report.contains("serves >= default-only"));
+    }
+
+    #[test]
+    fn dominance_check_is_elementwise() {
+        assert!(dominates_per_tier(&[3, 2], &[3, 2]));
+        assert!(dominates_per_tier(&[4, 2], &[3, 2]));
+        assert!(!dominates_per_tier(&[4, 1], &[3, 2]));
+    }
+}

@@ -8,11 +8,15 @@
 //!   Figure 4 (by usage level), Table 1 (solver duration and
 //!   Δcpu/Δmem utilisation).
 //! * [`report`]     — ASCII stacked bars, markdown tables, JSON dumps.
+//! * [`churn`]      — lifecycle policy comparison (default-only vs
+//!   fallback vs fallback+sweep) over one shared churn trace.
 
+pub mod churn;
 pub mod experiment;
 pub mod figures;
 pub mod grid;
 pub mod report;
 
+pub use churn::churn_report;
 pub use experiment::{run_instance, InstanceRun};
 pub use grid::{CellKey, CellResult, GridConfig};

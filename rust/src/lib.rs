@@ -14,7 +14,13 @@
 //!                   framework with extension points, queue, default
 //!                   plugins (NodeResourcesFit, LeastAllocated,
 //!                   lexicographic tie-break).
-//! * [`simulator`] — KWOK-like deterministic cluster simulator.
+//! * [`simulator`] — KWOK-like deterministic cluster simulator
+//!                   (single queue-drain pass).
+//! * [`lifecycle`] — discrete-event lifecycle simulator: virtual clock,
+//!                   ordered event timeline (arrivals, completions,
+//!                   scale-ups/downs, node drain/join), churn policies,
+//!                   and periodic CP defragmentation sweeps under an
+//!                   eviction budget.
 //! * [`solver`]    — from-scratch CP solver (CP-SAT substitute): binary
 //!                   variables, linear constraints, branch-and-bound with
 //!                   propagation, fractional bounds, hints, timeouts.
@@ -23,15 +29,16 @@
 //!                   cross-node pre-emption planning.
 //! * [`runtime`]   — PJRT (XLA) execution of the AOT-compiled L1/L2
 //!                   batch scorer, with a bit-exact native fallback.
-//! * [`workload`]  — the paper's random workload generator and dataset
-//!                   (de)serialization.
-//! * [`metrics`]   — utilisation metrics and the paper's five outcome
-//!                   categories.
+//! * [`workload`]  — the paper's random workload generator, dataset
+//!                   (de)serialization, and seeded churn-trace generation.
+//! * [`metrics`]   — utilisation metrics, the paper's five outcome
+//!                   categories, and lifecycle time series.
 //! * [`harness`]   — experiment drivers regenerating Figure 3, Figure 4,
-//!                   and Table 1.
+//!                   Table 1, and the churn policy-comparison report.
 
 pub mod cluster;
 pub mod harness;
+pub mod lifecycle;
 pub mod metrics;
 pub mod optimizer;
 pub mod runtime;

@@ -1,0 +1,67 @@
+//! Virtual time for the discrete-event loop.
+//!
+//! The simulator never sleeps: time jumps from event to event. The clock
+//! only enforces monotonicity — an event timeline that tried to move time
+//! backwards would silently corrupt every derived time series.
+
+/// Monotonic virtual clock, in milliseconds since simulation start.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimClock {
+    now_ms: u64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    /// Jump to `at_ms`. Panics if time would move backwards (equal is
+    /// fine: several events may share a tick).
+    pub fn advance_to(&mut self, at_ms: u64) {
+        assert!(
+            at_ms >= self.now_ms,
+            "clock moved backwards: {} -> {}",
+            self.now_ms,
+            at_ms
+        );
+        self.now_ms = at_ms;
+    }
+}
+
+/// Fixed-width render used by the deterministic event log.
+pub fn fmt_ms(ms: u64) -> String {
+    format!("{ms:>8}ms")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_and_allows_equal() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance_to(10);
+        c.advance_to(10);
+        c.advance_to(25);
+        assert_eq!(c.now_ms(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn rejects_time_travel() {
+        let mut c = SimClock::new();
+        c.advance_to(10);
+        c.advance_to(9);
+    }
+
+    #[test]
+    fn fixed_width_format() {
+        assert_eq!(fmt_ms(0), "       0ms");
+        assert_eq!(fmt_ms(12_345), "   12345ms");
+    }
+}

@@ -1,0 +1,31 @@
+//! Discrete-event cluster lifecycle simulation.
+//!
+//! The paper evaluates one-shot allocation: generate pods, drain the
+//! queue once, compare placements. Real clusters *evolve* — pods arrive
+//! and complete, ReplicaSets scale, nodes drain and join — and
+//! fragmentation is a phenomenon of that evolution. This layer adds the
+//! missing time axis:
+//!
+//! * [`clock`]    — monotonic virtual time (the simulator never sleeps).
+//! * [`timeline`] — the ordered event queue with deterministic same-tick
+//!   ordering (insertion-sequence tie-break).
+//! * [`sweep`]    — descheduler-style periodic defragmentation: re-pack
+//!   the live cluster with Algorithm 1 under an eviction budget.
+//! * [`trace`]    — byte-stable event logs with FNV digests, so replay
+//!   determinism is a testable property.
+//! * [`churn`]    — the driver: consumes a seeded
+//!   [`ChurnTrace`](crate::workload::churn::ChurnTrace) and runs one of
+//!   three policies (default-only / fallback / fallback+sweep) over the
+//!   same timeline for apples-to-apples comparison.
+
+pub mod churn;
+pub mod clock;
+pub mod sweep;
+pub mod timeline;
+pub mod trace;
+
+pub use churn::{compare_policies, run_churn, ChurnConfig, ChurnResult, Policy};
+pub use clock::SimClock;
+pub use sweep::{run_sweep, SweepConfig, SweepReport};
+pub use timeline::{LifecycleEvent, Timeline};
+pub use trace::ChurnLog;

@@ -5,6 +5,8 @@
 //! * `demo`      — walk through the paper's Figure 1 scenario.
 //! * `generate`  — emit a challenging dataset as JSON.
 //! * `solve`     — run the optimiser over a dataset file.
+//! * `churn`     — discrete-event lifecycle simulation comparing
+//!   default-only vs fallback vs fallback+sweep on one seeded trace.
 //! * `fig3` / `fig4` / `table1` — regenerate the paper's evaluation
 //!   artefacts (reports under `results/`).
 //! * `all`       — fig3 + fig4 + table1.
@@ -15,11 +17,12 @@ use std::time::Duration;
 use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
 use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
+use kube_packd::lifecycle::{compare_policies, ChurnConfig, Policy, SweepConfig};
 use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
 use kube_packd::runtime::XlaEngine;
 use kube_packd::solver::SolverConfig;
 use kube_packd::util::cli::Args;
-use kube_packd::workload::{dataset, GenParams, Instance};
+use kube_packd::workload::{dataset, ChurnParams, ChurnTraceGenerator, GenParams, Instance};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -27,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("demo") => demo(),
         Some("generate") => generate(&args),
         Some("solve") => solve(&args),
+        Some("churn") => churn(&args),
         Some("fig3") => figure(&args, "fig3"),
         Some("fig4") => figure(&args, "fig4"),
         Some("table1") => figure(&args, "table1"),
@@ -37,11 +41,12 @@ fn main() -> anyhow::Result<()> {
         }
         Some("info") => info(),
         other => {
+            // Unknown (or missing) subcommand: full usage, non-zero exit.
             if let Some(cmd) = other {
                 eprintln!("unknown command: {cmd}\n");
             }
             usage();
-            Ok(())
+            std::process::exit(2);
         }
     }
 }
@@ -58,12 +63,29 @@ COMMANDS
       --nodes N --ppn N --tiers N --usage F --count N --seed N --out FILE
   solve                    run the optimiser over a dataset file
       --dataset FILE --timeout SECS
+  churn                    discrete-event lifecycle simulation; compares
+                           default-only vs fallback vs fallback+sweep on
+                           one seeded churn trace (deterministic replay)
+      --nodes N --ppn N --tiers N --usage F --seed N
+      --horizon-ms N --arrival-ms N --lifetime-ms N
+      --sweep-ms N --budget N --timeout SECS --log
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
   all                      fig3 + fig4 + table1
   info                     PJRT platform + artifact status"
     );
+}
+
+/// `--usage` accepts a ratio (0.95) or a percentage (95); normalize to
+/// the ratio form every generator expects.
+fn usage_arg(args: &Args, default: f64) -> f64 {
+    let u = args.get_f64("usage", default);
+    if u > 2.0 {
+        u / 100.0
+    } else {
+        u
+    }
 }
 
 /// Shared grid config from CLI flags.
@@ -118,14 +140,7 @@ fn generate(args: &Args) -> anyhow::Result<()> {
         nodes: args.get_usize("nodes", 8),
         pods_per_node: args.get_usize("ppn", 4),
         priority_tiers: args.get_usize("tiers", 2) as u32,
-        usage: {
-            let u = args.get_f64("usage", 1.0);
-            if u > 2.0 {
-                u / 100.0
-            } else {
-                u
-            }
-        },
+        usage: usage_arg(args, 1.0),
     };
     let count = args.get_usize("count", 10);
     let seed = args.get_u64("seed", 1);
@@ -158,6 +173,50 @@ fn solve(args: &Args) -> anyhow::Result<()> {
             run.disruptions
         );
     }
+    Ok(())
+}
+
+/// Lifecycle churn comparison: three policies over one seeded trace.
+fn churn(args: &Args) -> anyhow::Result<()> {
+    let base = GenParams {
+        nodes: args.get_usize("nodes", 16),
+        pods_per_node: args.get_usize("ppn", 4),
+        priority_tiers: args.get_usize("tiers", 2) as u32,
+        usage: usage_arg(args, 0.95),
+    };
+    let params = ChurnParams {
+        horizon_ms: args.get_u64("horizon-ms", 30_000),
+        mean_arrival_ms: args.get_u64("arrival-ms", 600),
+        mean_lifetime_ms: args.get_u64("lifetime-ms", 8_000),
+        ..ChurnParams::for_cluster(base)
+    };
+    let seed = args.get_u64("seed", 42);
+    let timeout = args.get_f64("timeout", 1.0);
+
+    let trace = ChurnTraceGenerator::new(params, seed).generate();
+    let cfg = ChurnConfig {
+        policy: Policy::FallbackSweep,
+        sweep_every_ms: args.get_u64("sweep-ms", 5_000),
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(timeout),
+            eviction_budget: args.get_usize("budget", 8),
+        },
+        fallback_timeout: Duration::from_secs_f64(timeout),
+    };
+
+    let results = compare_policies(&trace, &cfg);
+    println!("{}", kube_packd::harness::churn_report(&trace, &results));
+    if args.flag("log") {
+        for r in &results {
+            println!("--- event log: {} ---", r.policy.label());
+            print!("{}", r.log.render());
+        }
+    }
+    println!(
+        "replay check: re-run with --seed {seed} — the default-only digest always matches byte \
+         for byte; the solver-backed rows match whenever every solve finishes within its budget \
+         (raise --timeout if they drift under load)"
+    );
     Ok(())
 }
 

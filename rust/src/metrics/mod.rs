@@ -1,9 +1,11 @@
 //! Evaluation metrics: placement-vector comparison, utilisation deltas,
-//! and the paper's five outcome categories.
+//! the paper's five outcome categories, and lifecycle time series.
 
 pub mod categories;
+pub mod timeseries;
 
 pub use categories::{lex_better, Outcome};
+pub use timeseries::{pending_per_priority, TimeSeries, UtilSample};
 
 /// Mean utilisation improvement between two states, in percentage points
 /// (Table 1's Δcpu/Δmem util columns).

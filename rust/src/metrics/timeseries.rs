@@ -1,0 +1,182 @@
+//! Time-series samples for lifecycle runs.
+//!
+//! The paper's metrics are end-state scalars; a churning cluster needs
+//! trajectories: utilisation, pending-by-priority, and cumulative
+//! evictions sampled at every simulation tick.
+
+use crate::cluster::ClusterState;
+use crate::util::json::Json;
+
+/// One sample of the cluster at a virtual timestamp.
+#[derive(Clone, Debug)]
+pub struct UtilSample {
+    pub at_ms: u64,
+    /// Mean cpu/ram utilisation over non-removed nodes, in [0, 1].
+    pub cpu: f64,
+    pub ram: f64,
+    /// Pending (schedulable, unbound) pods per priority tier.
+    pub pending_per_priority: Vec<usize>,
+    /// Placed pods per priority tier.
+    pub placed_per_priority: Vec<usize>,
+    /// Cumulative evictions since simulation start.
+    pub evictions: usize,
+}
+
+/// Append-only series ordered by time.
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    samples: Vec<UtilSample>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        TimeSeries::default()
+    }
+
+    pub fn push(&mut self, sample: UtilSample) {
+        if let Some(last) = self.samples.last() {
+            debug_assert!(sample.at_ms >= last.at_ms, "samples must be time-ordered");
+        }
+        self.samples.push(sample);
+    }
+
+    /// Convenience: sample `state` at its current virtual time.
+    pub fn sample(&mut self, state: &ClusterState, p_max: u32) {
+        let (cpu, ram) = state.utilization();
+        self.push(UtilSample {
+            at_ms: state.time_ms(),
+            cpu,
+            ram,
+            pending_per_priority: pending_per_priority(state, p_max),
+            placed_per_priority: state.placed_per_priority(p_max),
+            evictions: state.events.evictions(),
+        });
+    }
+
+    pub fn samples(&self) -> &[UtilSample] {
+        &self.samples
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&UtilSample> {
+        self.samples.last()
+    }
+
+    /// Time-unweighted mean cpu utilisation across samples.
+    pub fn mean_cpu(&self) -> f64 {
+        crate::util::stats::mean(&self.samples.iter().map(|s| s.cpu).collect::<Vec<_>>())
+    }
+
+    pub fn mean_ram(&self) -> f64 {
+        crate::util::stats::mean(&self.samples.iter().map(|s| s.ram).collect::<Vec<_>>())
+    }
+
+    /// Largest total pending count seen in any sample.
+    pub fn peak_pending(&self) -> usize {
+        self.samples
+            .iter()
+            .map(|s| s.pending_per_priority.iter().sum())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Machine-readable dump (one object per sample).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.samples
+                .iter()
+                .map(|s| {
+                    let mut j = Json::obj();
+                    j.set("at_ms", s.at_ms)
+                        .set("cpu", s.cpu)
+                        .set("ram", s.ram)
+                        .set("evictions", s.evictions)
+                        .set(
+                            "pending",
+                            Json::Arr(
+                                s.pending_per_priority
+                                    .iter()
+                                    .map(|&p| Json::Num(p as f64))
+                                    .collect(),
+                            ),
+                        )
+                        .set(
+                            "placed",
+                            Json::Arr(
+                                s.placed_per_priority
+                                    .iter()
+                                    .map(|&p| Json::Num(p as f64))
+                                    .collect(),
+                            ),
+                        );
+                    j
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Pending (unbound, unretired) pods per priority tier.
+pub fn pending_per_priority(state: &ClusterState, p_max: u32) -> Vec<usize> {
+    let mut counts = vec![0usize; p_max as usize + 1];
+    for pod in state.pending_pods() {
+        counts[state.pod(pod).priority.0 as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, NodeId, Pod, PodId, Priority, Resources};
+
+    fn state() -> ClusterState {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "hi", Resources::new(500, 500), Priority(0)),
+            Pod::new(1, "lo", Resources::new(500, 500), Priority(1)),
+        ];
+        ClusterState::new(nodes, pods)
+    }
+
+    #[test]
+    fn sampling_tracks_cluster_evolution() {
+        let mut st = state();
+        let mut ts = TimeSeries::new();
+        ts.sample(&st, 1);
+        st.set_time(100);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        ts.sample(&st, 1);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.samples()[0].pending_per_priority, vec![1, 1]);
+        assert_eq!(ts.samples()[1].pending_per_priority, vec![0, 1]);
+        assert_eq!(ts.samples()[1].placed_per_priority, vec![1, 0]);
+        assert_eq!(ts.samples()[1].at_ms, 100);
+        assert!(ts.samples()[1].cpu > ts.samples()[0].cpu);
+        assert_eq!(ts.peak_pending(), 2);
+    }
+
+    #[test]
+    fn pending_counts_exclude_retired() {
+        let mut st = state();
+        st.terminate(PodId(1)).unwrap();
+        assert_eq!(pending_per_priority(&st, 1), vec![1, 0]);
+    }
+
+    #[test]
+    fn json_dump_has_one_entry_per_sample() {
+        let mut ts = TimeSeries::new();
+        let st = state();
+        ts.sample(&st, 1);
+        ts.sample(&st, 1);
+        let j = ts.to_json();
+        assert_eq!(j.as_arr().map(|a| a.len()), Some(2));
+    }
+}

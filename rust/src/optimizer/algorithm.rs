@@ -131,14 +131,22 @@ fn build_model(
     let nodes = state.nodes();
     let mut vars: Vec<Option<Vec<Option<VarId>>>> = vec![None; state.pods().len()];
 
-    // Variables + at-most-one per pod (constraint (3)).
+    // Variables + at-most-one per pod (constraint (3)). Retired pods
+    // (lifecycle completions) take no part. Unready nodes (cordoned or
+    // removed) accept no NEW placements, but a pod already resident on
+    // one keeps a variable for its home — descheduler semantics: it may
+    // stay put (or move to a ready node), it just can't be joined there.
     for pod in state.pods() {
-        if pod.priority.0 > pr {
+        if pod.priority.0 > pr || state.is_retired(pod.id) {
             continue;
         }
+        let home = state.assignment_of(pod.id);
         let per_node: Vec<Option<VarId>> = nodes
             .iter()
-            .map(|n| pod.selector_matches(n).then(|| m.new_var()))
+            .map(|n| {
+                let admissible = state.node_ready(n.id) || home == Some(n.id);
+                (admissible && pod.selector_matches(n)).then(|| m.new_var())
+            })
             .collect();
         let amo = LinearExpr::of(per_node.iter().flatten().map(|&v| (v, 1)));
         if !amo.terms.is_empty() {

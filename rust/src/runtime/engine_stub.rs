@@ -1,0 +1,56 @@
+//! API-compatible stand-in for [`engine`](self) when the crate is built
+//! without the `xla` feature (the default: the offline image may lack
+//! the `xla_extension` shared library). Every load fails with a clear
+//! message, `num_variants` is 0, and callers — `XlaScorer`, the `info`
+//! subcommand, the parity tests — all degrade to the bit-exact
+//! [`NativeScorer`](super::scorer::NativeScorer) path.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Shape variants baked by `python/compile/aot.py` (keep in sync with
+/// `SHAPE_VARIANTS` there and in the real engine).
+pub const SHAPE_VARIANTS: [(usize, usize); 2] = [(64, 8), (256, 32)];
+
+/// PJRT engine stub; cannot be constructed (loading always fails).
+pub struct XlaEngine {
+    _private: (),
+}
+
+impl XlaEngine {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        bail!("built without the `xla` feature — PJRT runtime unavailable (rebuild with `--features xla`)")
+    }
+
+    /// Standard artifact location relative to the repo root.
+    pub fn load_default() -> Result<XlaEngine> {
+        XlaEngine::load("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn num_variants(&self) -> usize {
+        0
+    }
+
+    /// Smallest variant with `p ≥ pods` and `n ≥ nodes` — never any here.
+    pub fn pick_variant(&self, _pods: usize, _nodes: usize) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Execute the (P, N) scorer variant — unreachable in practice since
+    /// the stub cannot be constructed; kept for API parity.
+    pub fn execute_scorer(
+        &self,
+        _shape: (usize, usize),
+        _pod_req: &[f32],
+        _node_free: &[f32],
+        _node_cap: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<i32>)> {
+        bail!("built without the `xla` feature")
+    }
+}

@@ -12,6 +12,12 @@
 //!
 //! [`BatchScorer`]: crate::scheduler::default::BatchScorer
 
+#[cfg(feature = "xla")]
+pub mod engine;
+/// Stub engine when built without the `xla` feature: same API surface,
+/// every load fails gracefully, so callers fall back to [`NativeScorer`].
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod scorer;
 

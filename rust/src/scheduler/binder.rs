@@ -5,7 +5,7 @@
 //! kubelet, so binding is synchronous: reserve → permit → pre-bind →
 //! bind → post-bind collapse into one call that mutates [`ClusterState`].
 
-use crate::cluster::{ClusterState, NodeId, PodId, StateError};
+use crate::cluster::{ClusterState, NodeId, PodId};
 use crate::scheduler::framework::{CycleContext, Framework, PluginDecision};
 
 /// Outcome of one binding attempt.
@@ -40,10 +40,9 @@ pub fn bind_cycle(
             fw.run_post_bind(state, pod, node);
             BindResult::Bound
         }
-        Err(e @ StateError::InsufficientCapacity { .. })
-        | Err(e @ StateError::AlreadyBound(_))
-        | Err(e @ StateError::SelectorMismatch { .. })
-        | Err(e @ StateError::NotBound(_)) => {
+        // Any state refusal (capacity raced away, node cordoned mid-cycle,
+        // pod retired, ...) rolls the reservation back and requeues.
+        Err(e) => {
             fw.run_unreserve(state, pod, ctx);
             BindResult::Rejected(format!("bind: {e}"))
         }

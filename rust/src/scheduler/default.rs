@@ -75,8 +75,15 @@ impl DefaultScheduler {
     /// (or any other [`BatchScorer`]). Score plugins are bypassed; the
     /// backend must be numerically identical to `LeastAllocated`.
     pub fn with_batch_scorer(mut self, scorer: Box<dyn BatchScorer>) -> Self {
-        self.batch_scorer = Some(scorer);
+        self.set_batch_scorer(scorer);
         self
+    }
+
+    /// In-place variant of [`DefaultScheduler::with_batch_scorer`] —
+    /// swaps the scoring backend without rebuilding the framework, so
+    /// registered plugins and queue state survive.
+    pub fn set_batch_scorer(&mut self, scorer: Box<dyn BatchScorer>) {
+        self.batch_scorer = Some(scorer);
     }
 
     pub fn scorer_name(&self) -> &'static str {

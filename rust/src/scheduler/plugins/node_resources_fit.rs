@@ -11,7 +11,9 @@ pub struct NodeResourcesFit;
 impl FilterPlugin for NodeResourcesFit {
     fn filter(&self, state: &ClusterState, pod: PodId, node: NodeId, _ctx: &CycleContext) -> bool {
         let p = state.pod(pod);
-        p.request.fits_in(&state.free(node)) && p.selector_matches(state.node(node))
+        state.node_ready(node)
+            && p.request.fits_in(&state.free(node))
+            && p.selector_matches(state.node(node))
     }
 
     fn name(&self) -> &'static str {

@@ -40,8 +40,11 @@ impl KwokSimulator {
     }
 
     /// Use an alternative scoring backend (e.g. the XLA runtime scorer).
+    /// Mutates the existing scheduler in place, so any customisation
+    /// applied through [`KwokSimulator::scheduler_mut`] beforehand (extra
+    /// plugins, queue state) is preserved.
     pub fn with_batch_scorer(mut self, scorer: Box<dyn BatchScorer>) -> Self {
-        self.scheduler = DefaultScheduler::kwok_default().with_batch_scorer(scorer);
+        self.scheduler.set_batch_scorer(scorer);
         self
     }
 
@@ -131,6 +134,27 @@ mod tests {
         let (s2, r2) = KwokSimulator::new(2).run(nodes(), pods());
         assert_eq!(s1.assignment(), s2.assignment());
         assert_eq!(r1.placed_per_priority, r2.placed_per_priority);
+    }
+
+    #[test]
+    fn with_batch_scorer_preserves_scheduler_customisation() {
+        use crate::runtime::NativeScorer;
+        use crate::scheduler::plugins::NodeResourcesFit;
+
+        let mut sim = KwokSimulator::new(0);
+        // customise the scheduler before installing the scorer ...
+        sim.scheduler_mut()
+            .framework
+            .filter
+            .push(Box::new(NodeResourcesFit));
+        let filters_before = sim.scheduler_mut().framework.filter.len();
+        assert_eq!(filters_before, 2); // kwok_default's + ours
+
+        // ... the regression: this used to rebuild kwok_default(),
+        // silently dropping the extra plugin.
+        let mut sim = sim.with_batch_scorer(Box::new(NativeScorer));
+        assert_eq!(sim.scheduler_mut().framework.filter.len(), filters_before);
+        assert_eq!(sim.scheduler_mut().scorer_name(), "native");
     }
 
     #[test]

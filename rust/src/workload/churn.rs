@@ -1,0 +1,325 @@
+//! Churn traces: timed workload operations for the lifecycle simulator.
+//!
+//! The paper's generator produces one *static* queue of ReplicaSets; a
+//! churn trace extends it along the time axis. The cluster starts with
+//! the paper-distribution workload at `t = 0`, then a seeded operation
+//! stream deploys new ReplicaSets, scales existing ones, drains nodes,
+//! and joins fresh ones until the horizon. Every pod carries a lifetime,
+//! so the live set rises and falls — the fragmentation regime the paper's
+//! one-shot evaluation cannot reach.
+//!
+//! Traces are pure data: the same `(ChurnParams, seed)` pair always
+//! yields the identical `ops` vector, which is what makes timeline
+//! replay (and the byte-identical event-log property) possible.
+
+use crate::cluster::{Node, Priority, ReplicaSet, Resources};
+use crate::util::rng::Rng;
+
+use super::generator::{GenParams, Instance};
+
+/// Parameters of a churn trace (one cell of a future churn grid).
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnParams {
+    /// Initial cluster + workload shape (the paper's generator cell).
+    pub base: GenParams,
+    /// Simulated horizon, in milliseconds of virtual time.
+    pub horizon_ms: u64,
+    /// Mean gap between workload operations (uniform in [½·m, 1½·m]).
+    pub mean_arrival_ms: u64,
+    /// Mean pod lifetime (uniform in [½·m, 1½·m]); pods outliving the
+    /// horizon simply never complete.
+    pub mean_lifetime_ms: u64,
+    /// Probability an operation scales an existing ReplicaSet.
+    pub scale_chance: f64,
+    /// Probability an operation drains a (random ready) node.
+    pub drain_chance: f64,
+    /// Probability an operation joins a fresh node.
+    pub join_chance: f64,
+}
+
+impl ChurnParams {
+    /// Sensible defaults around a base cell: ~50 operations across a
+    /// 30-second horizon with mild node churn.
+    pub fn for_cluster(base: GenParams) -> ChurnParams {
+        ChurnParams {
+            base,
+            horizon_ms: 30_000,
+            mean_arrival_ms: 600,
+            mean_lifetime_ms: 8_000,
+            scale_chance: 0.25,
+            drain_chance: 0.04,
+            join_chance: 0.04,
+        }
+    }
+}
+
+/// One timed workload operation.
+#[derive(Clone, Debug)]
+pub enum TraceOp {
+    /// Deploy a new ReplicaSet; `lifetimes_ms[i]` is replica i's lifetime.
+    Deploy {
+        rs: ReplicaSet,
+        lifetimes_ms: Vec<u64>,
+    },
+    /// Scale ReplicaSet `rs` by `delta` replicas (new replicas get the
+    /// given lifetimes; negative deltas terminate the newest replicas).
+    Scale {
+        rs: u32,
+        delta: i32,
+        lifetimes_ms: Vec<u64>,
+    },
+    /// Drain node `node` (cordon + evict) — the trace generator only
+    /// targets nodes it believes are still ready.
+    Drain { node: u32 },
+    /// Join a fresh identical node.
+    Join { capacity: Resources },
+}
+
+/// A complete churn trace: initial nodes plus the timed operation list
+/// (non-decreasing in time; the initial workload is deployed at t = 0).
+#[derive(Clone, Debug)]
+pub struct ChurnTrace {
+    pub params: ChurnParams,
+    pub seed: u64,
+    /// Worker nodes at t = 0 (identical, from the paper's generator).
+    pub nodes: Vec<Node>,
+    /// Highest priority value in the trace (`tiers - 1`).
+    pub p_max: u32,
+    pub ops: Vec<(u64, TraceOp)>,
+}
+
+impl ChurnTrace {
+    /// Number of operations of each kind: (deploys, scales, drains, joins).
+    pub fn op_counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for (_, op) in &self.ops {
+            match op {
+                TraceOp::Deploy { .. } => c.0 += 1,
+                TraceOp::Scale { .. } => c.1 += 1,
+                TraceOp::Drain { .. } => c.2 += 1,
+                TraceOp::Join { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Total pods the trace can create (deploys + positive scale deltas).
+    pub fn max_pods(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|(_, op)| match op {
+                TraceOp::Deploy { rs, .. } => rs.replicas as usize,
+                TraceOp::Scale { delta, .. } => (*delta).max(0) as usize,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Seeded generator: `(params, seed) -> ChurnTrace`, deterministically.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnTraceGenerator {
+    pub params: ChurnParams,
+    pub seed: u64,
+}
+
+impl ChurnTraceGenerator {
+    pub fn new(params: ChurnParams, seed: u64) -> Self {
+        ChurnTraceGenerator { params, seed }
+    }
+
+    pub fn generate(&self) -> ChurnTrace {
+        let params = self.params;
+        let mut rng = Rng::new(self.seed);
+
+        // Initial cluster + workload from the paper's generator, deployed
+        // as t = 0 operations so every pod flows through the same path.
+        let inst = Instance::generate(params.base, rng.next_u64());
+        let mut ops: Vec<(u64, TraceOp)> = Vec::new();
+        for rs in &inst.replicasets {
+            let lifetimes = sample_lifetimes(&mut rng, rs.replicas, params.mean_lifetime_ms);
+            ops.push((
+                0,
+                TraceOp::Deploy {
+                    rs: rs.clone(),
+                    lifetimes_ms: lifetimes,
+                },
+            ));
+        }
+
+        // Operation stream until the horizon. `ready` mirrors the node
+        // pool the simulator will maintain (joins append dense ids).
+        let mut live_rs: Vec<u32> = inst.replicasets.iter().map(|r| r.id).collect();
+        let mut next_rs = inst.replicasets.len() as u32;
+        let mut ready: Vec<u32> = (0..params.base.nodes as u32).collect();
+        let mut next_node = params.base.nodes as u32;
+        let mut t = 0u64;
+
+        loop {
+            t += jittered(&mut rng, params.mean_arrival_ms);
+            if t > params.horizon_ms {
+                break;
+            }
+            let roll = rng.f64();
+            if roll < params.drain_chance && ready.len() > 1 {
+                let pick = rng.below(ready.len() as u64) as usize;
+                let node = ready.swap_remove(pick);
+                ops.push((t, TraceOp::Drain { node }));
+            } else if roll < params.drain_chance + params.join_chance {
+                ready.push(next_node);
+                next_node += 1;
+                ops.push((
+                    t,
+                    TraceOp::Join {
+                        capacity: inst.nodes[0].capacity,
+                    },
+                ));
+            } else if roll < params.drain_chance + params.join_chance + params.scale_chance
+                && !live_rs.is_empty()
+            {
+                let rs = *rng.choice(&live_rs);
+                let delta = if rng.chance(0.5) {
+                    rng.range_i64(1, 3) as i32
+                } else {
+                    -(rng.range_i64(1, 2) as i32)
+                };
+                let lifetimes = if delta > 0 {
+                    sample_lifetimes(&mut rng, delta as u32, params.mean_lifetime_ms)
+                } else {
+                    Vec::new()
+                };
+                ops.push((
+                    t,
+                    TraceOp::Scale {
+                        rs,
+                        delta,
+                        lifetimes_ms: lifetimes,
+                    },
+                ));
+            } else {
+                // New ReplicaSet, same distribution as the paper's
+                // generator: 1–4 replicas, CPU/RAM ~ U[100, 1000],
+                // uniform priority.
+                let replicas = rng.range_usize(1, 4) as u32;
+                let req = Resources::new(rng.range_i64(100, 1000), rng.range_i64(100, 1000));
+                let priority = Priority(rng.below(params.base.priority_tiers as u64) as u32);
+                let rs = ReplicaSet::new(next_rs, format!("rs-{next_rs:03}"), replicas, req, priority);
+                live_rs.push(next_rs);
+                next_rs += 1;
+                let lifetimes = sample_lifetimes(&mut rng, replicas, params.mean_lifetime_ms);
+                ops.push((
+                    t,
+                    TraceOp::Deploy {
+                        rs,
+                        lifetimes_ms: lifetimes,
+                    },
+                ));
+            }
+        }
+
+        ChurnTrace {
+            params,
+            seed: self.seed,
+            nodes: inst.nodes,
+            p_max: params.base.p_max(),
+            ops,
+        }
+    }
+}
+
+/// Uniform in [½·mean, 1½·mean], never zero.
+fn jittered(rng: &mut Rng, mean_ms: u64) -> u64 {
+    let lo = (mean_ms / 2).max(1);
+    let hi = (mean_ms * 3 / 2).max(lo + 1);
+    rng.range_i64(lo as i64, hi as i64) as u64
+}
+
+fn sample_lifetimes(rng: &mut Rng, count: u32, mean_ms: u64) -> Vec<u64> {
+    (0..count).map(|_| jittered(rng, mean_ms)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ChurnParams {
+        ChurnParams::for_cluster(GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 0.95,
+        })
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ChurnTraceGenerator::new(params(), 42).generate();
+        let b = ChurnTraceGenerator::new(params(), 42).generate();
+        assert_eq!(format!("{:?}", a.ops), format!("{:?}", b.ops));
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        let c = ChurnTraceGenerator::new(params(), 43).generate();
+        assert_ne!(format!("{:?}", a.ops), format!("{:?}", c.ops));
+    }
+
+    #[test]
+    fn times_non_decreasing_and_bounded() {
+        let t = ChurnTraceGenerator::new(params(), 7).generate();
+        let mut last = 0;
+        for (at, _) in &t.ops {
+            assert!(*at >= last);
+            assert!(*at <= t.params.horizon_ms);
+            last = *at;
+        }
+    }
+
+    #[test]
+    fn initial_workload_deployed_at_time_zero() {
+        let t = ChurnTraceGenerator::new(params(), 9).generate();
+        let initial: Vec<_> = t.ops.iter().take_while(|(at, _)| *at == 0).collect();
+        assert!(!initial.is_empty());
+        assert!(initial
+            .iter()
+            .all(|(_, op)| matches!(op, TraceOp::Deploy { .. })));
+        // initial pods match the paper generator's pod budget
+        let pods: usize = initial
+            .iter()
+            .map(|(_, op)| match op {
+                TraceOp::Deploy { rs, .. } => rs.replicas as usize,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(pods, t.params.base.pod_count());
+    }
+
+    #[test]
+    fn lifetimes_match_replica_counts() {
+        let t = ChurnTraceGenerator::new(params(), 11).generate();
+        for (_, op) in &t.ops {
+            match op {
+                TraceOp::Deploy { rs, lifetimes_ms } => {
+                    assert_eq!(lifetimes_ms.len(), rs.replicas as usize);
+                    assert!(lifetimes_ms.iter().all(|&l| l > 0));
+                }
+                TraceOp::Scale {
+                    delta,
+                    lifetimes_ms,
+                    ..
+                } => {
+                    assert_eq!(lifetimes_ms.len(), (*delta).max(0) as usize);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn churn_actually_churns() {
+        // With the default knobs a 30s horizon must produce a healthy
+        // operation mix (deploys always; usually some scales too).
+        let t = ChurnTraceGenerator::new(params(), 5).generate();
+        let (deploys, _scales, _drains, _joins) = t.op_counts();
+        assert!(deploys >= 5, "too few deploys: {:?}", t.op_counts());
+        assert!(t.ops.len() >= 20, "trace too short: {}", t.ops.len());
+        assert!(t.max_pods() > t.params.base.pod_count());
+    }
+}

@@ -8,7 +8,9 @@
 //! node capacities are derived from total demand and the usage ratio
 //! (identical nodes, "to reflect typical cloud deployments").
 
+pub mod churn;
 pub mod dataset;
 pub mod generator;
 
+pub use churn::{ChurnParams, ChurnTrace, ChurnTraceGenerator, TraceOp};
 pub use generator::{GenParams, Instance};

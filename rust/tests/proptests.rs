@@ -3,7 +3,8 @@
 //! see DESIGN.md "Substitutions"). Each property runs against dozens of
 //! seeded random cases; failures report the reproducing seed.
 
-use kube_packd::cluster::{ClusterState, NodeId, PodId};
+use kube_packd::cluster::{ClusterState, NodeId, Pod, PodId, Priority, Resources};
+use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy};
 use kube_packd::metrics::lex_better;
 use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
 use kube_packd::optimizer::plan::MovePlan;
@@ -12,6 +13,7 @@ use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig
 use kube_packd::util::prop::check;
 use kube_packd::util::rng::Rng;
 use kube_packd::util::timer::Deadline;
+use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
 use kube_packd::workload::{GenParams, Instance};
 
 /// Random small packing model: `pods` groups × `nodes` options with
@@ -283,6 +285,135 @@ fn prop_move_plan_roundtrip_arbitrary_targets() {
                 return Err("plan did not reach target".into());
             }
             live.check_invariants()?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_invariants_hold_under_arbitrary_lifecycle_interleavings() {
+    // Random interleavings of bind / evict / terminate / drain / cordon /
+    // uncordon / join / add_pod must never corrupt the residual-capacity
+    // invariant, never leave a retired pod bound, and never host pods on
+    // removed nodes. Individual operations may fail (Err) — that is part
+    // of the contract; corruption is not.
+    check(
+        "lifecycle_interleavings",
+        0x11FE,
+        30,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 5),
+                pods_per_node: rng.range_usize(2, 5),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.8 + rng.f64() * 0.3,
+            };
+            (Instance::generate(params, rng.next_u64()), rng.next_u64())
+        },
+        |(inst, op_seed)| {
+            let mut state = ClusterState::new(inst.nodes.clone(), inst.pods.clone());
+            let mut rng = Rng::new(*op_seed);
+            for step in 0..150 {
+                let n_pods = state.pods().len() as u64;
+                let n_nodes = state.nodes().len() as u64;
+                let pod = PodId(rng.below(n_pods) as u32);
+                let node = NodeId(rng.below(n_nodes) as u32);
+                match rng.below(8) {
+                    0 | 1 => {
+                        let _ = state.bind(pod, node);
+                    }
+                    2 => {
+                        let _ = state.evict(pod);
+                    }
+                    3 => {
+                        let _ = state.terminate(pod);
+                    }
+                    4 => {
+                        state.drain(node);
+                    }
+                    5 => {
+                        if rng.chance(0.5) {
+                            state.cordon(node);
+                        } else {
+                            state.uncordon(node);
+                        }
+                    }
+                    6 => {
+                        // keep the cluster from growing unboundedly
+                        if state.nodes().len() < 8 {
+                            state.join_node(inst.nodes[0].capacity);
+                        }
+                    }
+                    _ => {
+                        if state.pods().len() < 64 {
+                            let req = Resources::new(
+                                rng.range_i64(100, 1000),
+                                rng.range_i64(100, 1000),
+                            );
+                            let prio =
+                                Priority(rng.below(inst.params.priority_tiers as u64) as u32);
+                            state.add_pod(Pod::new(0, format!("extra-{step}"), req, prio));
+                        }
+                    }
+                }
+                state.check_invariants()?;
+            }
+            // terminal spot-checks on the lifecycle bookkeeping
+            for pod in state.pods() {
+                if state.is_retired(pod.id) && state.assignment_of(pod.id).is_some() {
+                    return Err(format!("retired pod {} still bound", pod.name));
+                }
+            }
+            for p in state.pending_pods() {
+                if state.is_retired(p) {
+                    return Err("pending list contains a retired pod".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_churn_timeline_replay_is_byte_identical() {
+    // Same seed => same trace ops => byte-identical event logs and
+    // identical end metrics, across independent simulator instances.
+    check(
+        "churn_replay_determinism",
+        0xC4AB,
+        8,
+        |rng| {
+            let params = ChurnParams {
+                horizon_ms: 3_000 + rng.below(3_000),
+                mean_arrival_ms: 300 + rng.below(400),
+                mean_lifetime_ms: 1_000 + rng.below(2_000),
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: rng.range_usize(2, 4),
+                    pods_per_node: rng.range_usize(2, 4),
+                    priority_tiers: rng.range_usize(1, 3) as u32,
+                    usage: 0.85 + rng.f64() * 0.2,
+                })
+            };
+            (params, rng.next_u64())
+        },
+        |(params, seed)| {
+            let t1 = ChurnTraceGenerator::new(*params, *seed).generate();
+            let t2 = ChurnTraceGenerator::new(*params, *seed).generate();
+            if format!("{:?}", t1.ops) != format!("{:?}", t2.ops) {
+                return Err("trace generation not deterministic".into());
+            }
+            let cfg = ChurnConfig::for_policy(Policy::DefaultOnly);
+            let r1 = run_churn(&t1, &cfg);
+            let r2 = run_churn(&t2, &cfg);
+            if r1.log.render() != r2.log.render() {
+                return Err("event logs diverged on replay".into());
+            }
+            if r1.log.digest() != r2.log.digest() {
+                return Err("log digests diverged".into());
+            }
+            if r1.final_placed != r2.final_placed || r1.evictions != r2.evictions {
+                return Err("end metrics diverged on replay".into());
+            }
             Ok(())
         },
     );
