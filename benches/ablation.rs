@@ -85,6 +85,7 @@ fn main() {
             total_timeout: std::time::Duration::from_millis(400),
             alpha: 0.8,
             solver,
+            ..Default::default()
         };
         let mut improved = 0usize;
         let mut proved = 0usize;

@@ -1,0 +1,123 @@
+//! Scheduling-constraint vocabulary shared by pods and nodes.
+//!
+//! The paper defers "labels and (anti-)affinity" to future work; this
+//! module supplies the data types that extension uses — taints and
+//! tolerations with `NoSchedule` semantics — mirroring the Kubernetes
+//! API shapes closely enough that the scheduler filter plugins and the
+//! CP constraint modules (`optimizer::constraints`) can share one
+//! definition of feasibility.
+
+/// Effect of a taint. Only `NoSchedule` exists in this model: a node
+/// with an untolerated `NoSchedule` taint accepts no *new* placements,
+/// but pods already resident stay put (the descheduler semantics the
+/// optimiser already applies to cordoned nodes). `NoExecute` (evict
+/// residents) would be a lifecycle concern, not a packing one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TaintEffect {
+    #[default]
+    NoSchedule,
+}
+
+/// A node taint: `key=value:effect`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Taint {
+    pub key: String,
+    pub value: String,
+    pub effect: TaintEffect,
+}
+
+impl Taint {
+    pub fn no_schedule(key: impl Into<String>, value: impl Into<String>) -> Self {
+        Taint {
+            key: key.into(),
+            value: value.into(),
+            effect: TaintEffect::NoSchedule,
+        }
+    }
+}
+
+/// A pod toleration. `value = None` tolerates every taint with the key
+/// (the Kubernetes `Exists` operator); `Some(v)` requires an exact value
+/// match (`Equal`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Toleration {
+    pub key: String,
+    pub value: Option<String>,
+}
+
+impl Toleration {
+    /// `Equal`-operator toleration: key and value must both match.
+    pub fn equal(key: impl Into<String>, value: impl Into<String>) -> Self {
+        Toleration {
+            key: key.into(),
+            value: Some(value.into()),
+        }
+    }
+
+    /// `Exists`-operator toleration: any taint with this key is tolerated.
+    pub fn exists(key: impl Into<String>) -> Self {
+        Toleration {
+            key: key.into(),
+            value: None,
+        }
+    }
+
+    /// Whether this toleration covers `taint`.
+    pub fn tolerates(&self, taint: &Taint) -> bool {
+        self.key == taint.key
+            && match &self.value {
+                None => true,
+                Some(v) => *v == taint.value,
+            }
+    }
+}
+
+/// Whether a pod carrying `tolerations` may be *newly placed* on a node
+/// carrying `taints`: every `NoSchedule` taint must be tolerated.
+pub fn tolerates_all(tolerations: &[Toleration], taints: &[Taint]) -> bool {
+    taints.iter().all(|t| match t.effect {
+        TaintEffect::NoSchedule => tolerations.iter().any(|tol| tol.tolerates(t)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_toleration_matches_key_and_value() {
+        let t = Taint::no_schedule("dedicated", "batch");
+        assert!(Toleration::equal("dedicated", "batch").tolerates(&t));
+        assert!(!Toleration::equal("dedicated", "infra").tolerates(&t));
+        assert!(!Toleration::equal("team", "batch").tolerates(&t));
+    }
+
+    #[test]
+    fn exists_toleration_matches_any_value() {
+        let t = Taint::no_schedule("dedicated", "batch");
+        assert!(Toleration::exists("dedicated").tolerates(&t));
+        assert!(!Toleration::exists("team").tolerates(&t));
+    }
+
+    #[test]
+    fn tolerates_all_requires_every_taint_covered() {
+        let taints = vec![
+            Taint::no_schedule("dedicated", "batch"),
+            Taint::no_schedule("zone", "edge"),
+        ];
+        assert!(!tolerates_all(&[], &taints));
+        assert!(!tolerates_all(
+            &[Toleration::equal("dedicated", "batch")],
+            &taints
+        ));
+        assert!(tolerates_all(
+            &[
+                Toleration::equal("dedicated", "batch"),
+                Toleration::exists("zone")
+            ],
+            &taints
+        ));
+        // no taints: everything schedules
+        assert!(tolerates_all(&[], &[]));
+    }
+}

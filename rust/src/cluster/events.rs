@@ -27,6 +27,12 @@ pub enum Event {
     },
     /// A queued pod was paused while the solver ran.
     QueuePaused { pod: PodId },
+    /// An optimiser plan could not complete: `missing` plan pods were
+    /// rejected by a filter plugin after `bound` had already bound. The
+    /// run rolls back to ordinary scheduling instead of crashing — the
+    /// CP model and the filter set can legitimately disagree when a
+    /// custom plugin has no mirroring constraint module (or vice versa).
+    PlanAborted { bound: usize, missing: usize },
     /// Pod reached end of life (`node` = where it ran; `None` if it
     /// completed while pending). `at_ms` is virtual lifecycle time.
     PodCompleted {

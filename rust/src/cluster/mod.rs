@@ -9,7 +9,10 @@
 //!                   with invariant checking.
 //! * [`events`]    — append-only event log (bind/evict/move/solver)
 //!                   for observability and tests.
+//! * [`constraints`] — taints/tolerations and the rest of the shared
+//!                   scheduling-constraint vocabulary.
 
+pub mod constraints;
 pub mod events;
 pub mod node;
 pub mod pod;
@@ -17,6 +20,7 @@ pub mod replicaset;
 pub mod resources;
 pub mod state;
 
+pub use constraints::{Taint, TaintEffect, Toleration};
 pub use events::{Event, EventLog};
 pub use node::{identical_nodes, Node, NodeId};
 pub use pod::{Pod, PodId, Priority};

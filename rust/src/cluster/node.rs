@@ -1,5 +1,6 @@
 //! Cluster nodes.
 
+use super::constraints::Taint;
 use super::resources::Resources;
 
 /// Dense node index. Nodes are kept sorted by `name`, so `NodeId` order is
@@ -24,6 +25,10 @@ pub struct Node {
     pub capacity: Resources,
     /// Optional labels for (anti-)affinity extensions (paper future work).
     pub labels: Vec<(String, String)>,
+    /// Taints (`NoSchedule`): untolerated pods take no new placements here.
+    pub taints: Vec<Taint>,
+    /// Extended (named) resource capacities, e.g. `[("gpu", 4)]`.
+    pub extended: Vec<(String, i64)>,
 }
 
 impl Node {
@@ -33,6 +38,8 @@ impl Node {
             name: name.into(),
             capacity,
             labels: Vec::new(),
+            taints: Vec::new(),
+            extended: Vec::new(),
         }
     }
 
@@ -41,8 +48,28 @@ impl Node {
         self
     }
 
+    pub fn with_taint(mut self, taint: Taint) -> Self {
+        self.taints.push(taint);
+        self
+    }
+
+    pub fn with_extended(mut self, resource: &str, amount: i64) -> Self {
+        assert!(amount > 0, "extended capacity must be positive: {resource}={amount}");
+        self.extended.push((resource.to_string(), amount));
+        self
+    }
+
     pub fn has_label(&self, key: &str, value: &str) -> bool {
         self.labels.iter().any(|(k, v)| k == key && v == value)
+    }
+
+    /// Capacity of an extended resource (0 if the node does not offer it).
+    pub fn extended_capacity(&self, resource: &str) -> i64 {
+        self.extended
+            .iter()
+            .filter(|(k, _)| k == resource)
+            .map(|&(_, v)| v)
+            .sum()
     }
 }
 

@@ -1,5 +1,6 @@
 //! Pods: the smallest deployable unit.
 
+use super::constraints::{tolerates_all, Toleration};
 use super::resources::Resources;
 
 /// Dense pod index within an instance.
@@ -26,18 +27,35 @@ impl Priority {
 }
 
 /// A pod with its resource request, priority, and (optional) owning
-/// ReplicaSet. `node_selector` supports the paper's future-work
-/// affinity extension — empty for all paper workloads.
+/// ReplicaSet, plus the constraint vocabulary of the paper's future-work
+/// extension: node selectors, labels, tolerations, pod anti-affinity,
+/// per-ReplicaSet topology spread, and extended (named) resources. All
+/// constraint fields default to empty, which makes every paper workload
+/// behave exactly as before.
 #[derive(Clone, Debug)]
 pub struct Pod {
     pub id: PodId,
     pub name: String,
     pub request: Resources,
     pub priority: Priority,
-    /// Owning ReplicaSet index, if created through one.
+    /// Owning ReplicaSet index, if created through one. Also the
+    /// topology-spread group key.
     pub owner: Option<u32>,
     /// Required node labels (AND semantics), e.g. `[("disk","ssd")]`.
     pub node_selector: Vec<(String, String)>,
+    /// Pod labels — the match targets of other pods' anti-affinity.
+    pub labels: Vec<(String, String)>,
+    /// Tolerations against node taints (`NoSchedule` semantics).
+    pub tolerations: Vec<Toleration>,
+    /// Anti-affinity selectors (OR semantics): this pod refuses to share
+    /// a node with any *other* pod carrying one of these labels.
+    pub anti_affinity: Vec<(String, String)>,
+    /// Max skew of this pod's owner group across nodes (topology spread
+    /// over the node topology). `None` = unconstrained.
+    pub spread_max_skew: Option<i64>,
+    /// Extended (named) resource requests, e.g. `[("gpu", 1)]` —
+    /// third/fourth resource dimensions beyond CPU and RAM.
+    pub extended: Vec<(String, i64)>,
 }
 
 impl Pod {
@@ -49,6 +67,11 @@ impl Pod {
             priority,
             owner: None,
             node_selector: Vec::new(),
+            labels: Vec::new(),
+            tolerations: Vec::new(),
+            anti_affinity: Vec::new(),
+            spread_max_skew: None,
+            extended: Vec::new(),
         }
     }
 
@@ -62,17 +85,62 @@ impl Pod {
         self
     }
 
+    pub fn with_label(mut self, key: &str, value: &str) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_toleration(mut self, tol: Toleration) -> Self {
+        self.tolerations.push(tol);
+        self
+    }
+
+    /// Refuse to share a node with any other pod labelled `key=value`.
+    pub fn with_anti_affinity(mut self, key: &str, value: &str) -> Self {
+        self.anti_affinity.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_spread(mut self, max_skew: i64) -> Self {
+        self.spread_max_skew = Some(max_skew);
+        self
+    }
+
+    pub fn with_extended(mut self, resource: &str, amount: i64) -> Self {
+        assert!(amount > 0, "extended request must be positive: {resource}={amount}");
+        self.extended.push((resource.to_string(), amount));
+        self
+    }
+
     /// Whether this pod's node selector admits `node`.
     pub fn selector_matches(&self, node: &super::node::Node) -> bool {
         self.node_selector
             .iter()
             .all(|(k, v)| node.has_label(k, v))
     }
+
+    /// Whether this pod may be *newly placed* on `node` given its taints.
+    pub fn tolerates(&self, node: &super::node::Node) -> bool {
+        tolerates_all(&self.tolerations, &node.taints)
+    }
+
+    /// Whether this pod carries the label `key=value`.
+    pub fn has_label(&self, key: &str, value: &str) -> bool {
+        self.labels.iter().any(|(k, v)| k == key && v == value)
+    }
+
+    /// Whether this pod's anti-affinity forbids co-location with `other`
+    /// (directional; the scheduler and the CP module both check both
+    /// directions, matching the Kubernetes InterPodAffinity filter).
+    pub fn anti_affine_with(&self, other: &Pod) -> bool {
+        self.id != other.id && self.anti_affinity.iter().any(|(k, v)| other.has_label(k, v))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::constraints::Taint;
     use crate::cluster::node::Node;
 
     #[test]
@@ -91,5 +159,31 @@ mod tests {
         // empty selector matches everything
         let any = Pod::new(1, "q", Resources::ZERO, Priority(0));
         assert!(any.selector_matches(&hdd));
+    }
+
+    #[test]
+    fn toleration_semantics() {
+        let tainted =
+            Node::new(0, "a", Resources::ZERO).with_taint(Taint::no_schedule("dedicated", "batch"));
+        let clean = Node::new(1, "b", Resources::ZERO);
+        let plain = Pod::new(0, "p", Resources::ZERO, Priority(0));
+        assert!(!plain.tolerates(&tainted));
+        assert!(plain.tolerates(&clean));
+        let tolerant = Pod::new(1, "q", Resources::ZERO, Priority(0))
+            .with_toleration(Toleration::equal("dedicated", "batch"));
+        assert!(tolerant.tolerates(&tainted));
+    }
+
+    #[test]
+    fn anti_affinity_is_directional_and_never_self() {
+        let a = Pod::new(0, "a", Resources::ZERO, Priority(0))
+            .with_label("app", "web")
+            .with_anti_affinity("app", "web");
+        let b = Pod::new(1, "b", Resources::ZERO, Priority(0)).with_label("app", "web");
+        let c = Pod::new(2, "c", Resources::ZERO, Priority(0)).with_label("app", "db");
+        assert!(a.anti_affine_with(&b));
+        assert!(!b.anti_affine_with(&a)); // b declares nothing
+        assert!(!a.anti_affine_with(&c));
+        assert!(!a.anti_affine_with(&a)); // a pod never excludes itself
     }
 }

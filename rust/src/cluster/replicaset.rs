@@ -2,8 +2,11 @@
 //!
 //! The paper's workload generator creates random ReplicaSet requests of
 //! 1–4 replicas each; pods inherit the template's resource request and
-//! priority.
+//! priority — and, for constraint-rich scenario families, the template's
+//! labels, tolerations, anti-affinity, topology spread, and extended
+//! resource requests.
 
+use super::constraints::Toleration;
 use super::pod::{Pod, Priority};
 use super::resources::Resources;
 
@@ -14,6 +17,18 @@ pub struct ReplicaSet {
     pub replicas: u32,
     pub template_request: Resources,
     pub priority: Priority,
+    /// Template labels stamped onto every replica.
+    pub labels: Vec<(String, String)>,
+    /// Template tolerations stamped onto every replica.
+    pub tolerations: Vec<Toleration>,
+    /// Template anti-affinity selectors stamped onto every replica
+    /// (`[("app", <name>)]` + a matching label = "spread my replicas
+    /// across nodes, hard").
+    pub anti_affinity: Vec<(String, String)>,
+    /// Topology spread: max replica-count skew across nodes.
+    pub spread_max_skew: Option<i64>,
+    /// Extended resource requests per replica, e.g. `[("gpu", 1)]`.
+    pub extended: Vec<(String, i64)>,
 }
 
 impl ReplicaSet {
@@ -30,23 +45,67 @@ impl ReplicaSet {
             replicas,
             template_request,
             priority,
+            labels: Vec::new(),
+            tolerations: Vec::new(),
+            anti_affinity: Vec::new(),
+            spread_max_skew: None,
+            extended: Vec::new(),
         }
     }
 
-    /// Expand into pods, continuing the given dense id counter. Pod names
-    /// follow the `<rs>-<ordinal>` convention.
+    pub fn with_label(mut self, key: &str, value: &str) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_toleration(mut self, tol: Toleration) -> Self {
+        self.tolerations.push(tol);
+        self
+    }
+
+    pub fn with_anti_affinity(mut self, key: &str, value: &str) -> Self {
+        self.anti_affinity.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_spread(mut self, max_skew: i64) -> Self {
+        self.spread_max_skew = Some(max_skew);
+        self
+    }
+
+    pub fn with_extended(mut self, resource: &str, amount: i64) -> Self {
+        assert!(amount > 0, "extended request must be positive: {resource}={amount}");
+        self.extended.push((resource.to_string(), amount));
+        self
+    }
+
+    /// Materialise one replica from the template: the single place the
+    /// template fields (request, priority, owner, and the whole
+    /// constraint vocabulary) are stamped onto a pod. Names follow the
+    /// `<rs>-<ordinal>` convention.
+    pub fn instantiate(&self, id: u32, ordinal: u32) -> Pod {
+        let mut pod = Pod::new(
+            id,
+            format!("{}-{ordinal}", self.name),
+            self.template_request,
+            self.priority,
+        )
+        .with_owner(self.id);
+        pod.labels = self.labels.clone();
+        pod.tolerations = self.tolerations.clone();
+        pod.anti_affinity = self.anti_affinity.clone();
+        pod.spread_max_skew = self.spread_max_skew;
+        pod.extended = self.extended.clone();
+        pod
+    }
+
+    /// Expand into pods, continuing the given dense id counter.
     pub fn expand(&self, next_pod_id: &mut u32) -> Vec<Pod> {
         (0..self.replicas)
             .map(|i| {
                 let id = *next_pod_id;
                 *next_pod_id += 1;
-                Pod::new(
-                    id,
-                    format!("{}-{i}", self.name),
-                    self.template_request,
-                    self.priority,
-                )
-                .with_owner(self.id)
+                self.instantiate(id, i)
             })
             .collect()
     }
@@ -81,5 +140,27 @@ mod tests {
     fn total_request() {
         let rs = ReplicaSet::new(0, "db", 4, Resources::new(100, 250), Priority(0));
         assert_eq!(rs.total_request(), Resources::new(400, 1000));
+    }
+
+    #[test]
+    fn constraint_template_inherited_by_replicas() {
+        let rs = ReplicaSet::new(1, "api", 2, Resources::new(100, 100), Priority(0))
+            .with_label("app", "api")
+            .with_anti_affinity("app", "api")
+            .with_toleration(Toleration::equal("dedicated", "batch"))
+            .with_spread(1)
+            .with_extended("gpu", 1);
+        let mut next = 0;
+        let pods = rs.expand(&mut next);
+        for p in &pods {
+            assert!(p.has_label("app", "api"));
+            assert_eq!(p.anti_affinity, vec![("app".to_string(), "api".to_string())]);
+            assert_eq!(p.tolerations.len(), 1);
+            assert_eq!(p.spread_max_skew, Some(1));
+            assert_eq!(p.extended, vec![("gpu".to_string(), 1)]);
+        }
+        // replicas of one set exclude each other, in both directions
+        assert!(pods[0].anti_affine_with(&pods[1]));
+        assert!(pods[1].anti_affine_with(&pods[0]));
     }
 }

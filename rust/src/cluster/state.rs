@@ -6,6 +6,8 @@
 //! through `bind` / `evict` so the residual-capacity invariant can never
 //! drift (checked in debug builds and by `verify_invariants` in tests).
 
+use std::collections::BTreeMap;
+
 use super::events::{Event, EventLog};
 use super::node::{Node, NodeId};
 use super::pod::{Pod, PodId, Priority};
@@ -17,7 +19,13 @@ pub enum StateError {
     AlreadyBound(PodId),
     NotBound(PodId),
     InsufficientCapacity { pod: PodId, node: NodeId },
+    /// Not enough of a named extended resource (GPU, ephemeral storage…).
+    InsufficientExtended { pod: PodId, node: NodeId, resource: String },
     SelectorMismatch { pod: PodId, node: NodeId },
+    /// Node carries a `NoSchedule` taint the pod does not tolerate.
+    TaintNotTolerated { pod: PodId, node: NodeId },
+    /// Another pod on the node excludes this one (or vice versa).
+    AntiAffinityViolation { pod: PodId, other: PodId, node: NodeId },
     /// Pod already completed/terminated; it can never bind again.
     PodRetired(PodId),
     /// Node is cordoned or removed; it accepts no new binds.
@@ -34,8 +42,17 @@ impl std::fmt::Display for StateError {
             StateError::InsufficientCapacity { pod, node } => {
                 write!(f, "pod {pod:?} does not fit on node {node:?}")
             }
+            StateError::InsufficientExtended { pod, node, resource } => {
+                write!(f, "pod {pod:?} exceeds {resource:?} capacity on node {node:?}")
+            }
             StateError::SelectorMismatch { pod, node } => {
                 write!(f, "pod {pod:?} selector rejects node {node:?}")
+            }
+            StateError::TaintNotTolerated { pod, node } => {
+                write!(f, "pod {pod:?} does not tolerate taints of node {node:?}")
+            }
+            StateError::AntiAffinityViolation { pod, other, node } => {
+                write!(f, "pod {pod:?} anti-affine with {other:?} on node {node:?}")
             }
             StateError::PodRetired(p) => write!(f, "pod {p:?} already retired"),
             StateError::NodeUnschedulable { pod, node } => {
@@ -66,6 +83,8 @@ pub struct ClusterState {
     assignment: Vec<Option<NodeId>>,
     /// Per-node free capacity (capacity − Σ bound requests).
     free: Vec<Resources>,
+    /// Per-node free *extended* resource capacity (name → remaining).
+    free_ext: Vec<BTreeMap<String, i64>>,
     /// Per-node lifecycle status.
     status: Vec<NodeStatus>,
     /// Per-pod retirement flag (completed/terminated pods never reschedule).
@@ -95,6 +114,7 @@ impl ClusterState {
             assert_eq!(p.id.idx(), i, "pod ids must be dense");
         }
         let free = nodes.iter().map(|n| n.capacity).collect();
+        let free_ext = nodes.iter().map(extended_map).collect();
         let assignment = vec![None; pods.len()];
         let status = vec![NodeStatus::Ready; nodes.len()];
         let retired = vec![false; pods.len()];
@@ -103,6 +123,7 @@ impl ClusterState {
             pods,
             assignment,
             free,
+            free_ext,
             status,
             retired,
             now_ms: 0,
@@ -142,6 +163,23 @@ impl ClusterState {
 
     pub fn free_all(&self) -> &[Resources] {
         &self.free
+    }
+
+    /// Remaining capacity of a named extended resource on `node` (0 if
+    /// the node does not offer it).
+    pub fn free_extended(&self, node: NodeId, resource: &str) -> i64 {
+        self.free_ext[node.idx()]
+            .get(resource)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Whether `pod`'s extended resource requests all fit on `node` now
+    /// (duplicate resource names in the request are summed).
+    pub fn extended_fits(&self, pod: PodId, node: NodeId) -> bool {
+        ext_demand_map(&self.pods[pod.idx()])
+            .into_iter()
+            .all(|(k, amt)| self.free_extended(node, k) >= amt)
     }
 
     pub fn node_status(&self, node: NodeId) -> NodeStatus {
@@ -223,7 +261,9 @@ impl ClusterState {
             );
         }
         let id = NodeId(self.nodes.len() as u32);
-        self.nodes.push(Node::new(id.0, name, capacity));
+        let node = Node::new(id.0, name, capacity);
+        self.free_ext.push(extended_map(&node));
+        self.nodes.push(node);
         self.free.push(capacity);
         self.status.push(NodeStatus::Ready);
         self.events.push(Event::NodeJoined {
@@ -252,8 +292,13 @@ impl ClusterState {
         self.add_node(name, capacity)
     }
 
-    /// Bind a pending pod to a node, enforcing capacity, selector, pod
-    /// liveness, and node readiness.
+    /// Bind a pending pod to a node, enforcing capacity (CPU/RAM and
+    /// extended resources), selector, tolerations, pairwise
+    /// anti-affinity, pod liveness, and node readiness. Topology spread
+    /// is deliberately *not* enforced here: a multi-pod plan can pass
+    /// through transiently skewed intermediate states on its way to a
+    /// balanced target, so spread is a scheduler/optimiser policy, not a
+    /// state invariant.
     pub fn bind(&mut self, pod: PodId, node: NodeId) -> Result<(), StateError> {
         if self.retired[pod.idx()] {
             return Err(StateError::PodRetired(pod));
@@ -265,23 +310,51 @@ impl ClusterState {
         if !self.pods[pod.idx()].selector_matches(&self.nodes[node.idx()]) {
             return Err(StateError::SelectorMismatch { pod, node });
         }
+        if !self.pods[pod.idx()].tolerates(&self.nodes[node.idx()]) {
+            return Err(StateError::TaintNotTolerated { pod, node });
+        }
         if self.status[node.idx()] != NodeStatus::Ready {
             return Err(StateError::NodeUnschedulable { pod, node });
         }
         if !req.fits_in(&self.free[node.idx()]) {
             return Err(StateError::InsufficientCapacity { pod, node });
         }
+        for (k, amt) in ext_demand_map(&self.pods[pod.idx()]) {
+            if self.free_extended(node, k) < amt {
+                return Err(StateError::InsufficientExtended {
+                    pod,
+                    node,
+                    resource: k.to_string(),
+                });
+            }
+        }
+        for other in self.pods_on(node) {
+            let (a, b) = (&self.pods[pod.idx()], &self.pods[other.idx()]);
+            if a.anti_affine_with(b) || b.anti_affine_with(a) {
+                return Err(StateError::AntiAffinityViolation { pod, other, node });
+            }
+        }
         self.free[node.idx()] -= req;
+        self.charge_extended(pod, node, -1);
         self.assignment[pod.idx()] = Some(node);
         self.events.push(Event::Bind { pod, node });
         debug_assert!(self.check_invariants().is_ok());
         Ok(())
     }
 
+    /// Add (`sign = +1`) or subtract (`sign = -1`) a pod's extended
+    /// resource requests from a node's free pool.
+    fn charge_extended(&mut self, pod: PodId, node: NodeId, sign: i64) {
+        for (k, amt) in &self.pods[pod.idx()].extended {
+            *self.free_ext[node.idx()].entry(k.clone()).or_insert(0) += sign * amt;
+        }
+    }
+
     /// Evict a bound pod (returns the node it was on).
     pub fn evict(&mut self, pod: PodId) -> Result<NodeId, StateError> {
         let node = self.assignment[pod.idx()].ok_or(StateError::NotBound(pod))?;
         self.free[node.idx()] += self.pods[pod.idx()].request;
+        self.charge_extended(pod, node, 1);
         self.assignment[pod.idx()] = None;
         self.events.push(Event::Evict { pod, node });
         debug_assert!(self.check_invariants().is_ok());
@@ -297,6 +370,7 @@ impl ClusterState {
         let node = self.assignment[pod.idx()];
         if let Some(n) = node {
             self.free[n.idx()] += self.pods[pod.idx()].request;
+            self.charge_extended(pod, n, 1);
             self.assignment[pod.idx()] = None;
         }
         self.retired[pod.idx()] = true;
@@ -419,15 +493,30 @@ impl ClusterState {
 
     // ---- invariants ------------------------------------------------------
 
-    /// Full recomputation of residuals; `Err` describes the first violation.
+    /// Full recomputation of residuals plus constraint-field violations
+    /// (taints on bound pods, pairwise anti-affinity, extended-resource
+    /// drift); `Err` describes the first violation. Topology spread is
+    /// intentionally not an invariant (see [`ClusterState::bind`]).
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut used = vec![Resources::ZERO; self.nodes.len()];
+        let mut used_ext: Vec<BTreeMap<&str, i64>> =
+            vec![BTreeMap::new(); self.nodes.len()];
         for (i, a) in self.assignment.iter().enumerate() {
             if let Some(n) = a {
                 if self.retired[i] {
                     return Err(format!("retired pod {} still bound", self.pods[i].name));
                 }
                 used[n.idx()] += self.pods[i].request;
+                for (k, amt) in &self.pods[i].extended {
+                    *used_ext[n.idx()].entry(k.as_str()).or_insert(0) += amt;
+                }
+                if !self.pods[i].tolerates(&self.nodes[n.idx()]) {
+                    return Err(format!(
+                        "pod {} bound to node {} whose taints it does not tolerate",
+                        self.pods[i].name,
+                        self.nodes[n.idx()].name
+                    ));
+                }
             }
         }
         for (j, node) in self.nodes.iter().enumerate() {
@@ -444,9 +533,59 @@ impl ClusterState {
             if self.status[j] == NodeStatus::Removed && used[j] != Resources::ZERO {
                 return Err(format!("removed node {} still hosts pods", node.name));
             }
+            let mut expect_ext = extended_map(node);
+            for (k, amt) in &used_ext[j] {
+                let slot = expect_ext.entry((*k).to_string()).or_insert(0);
+                *slot -= amt;
+                if *slot < 0 {
+                    return Err(format!("node {} over {k:?} capacity", node.name));
+                }
+            }
+            for (k, v) in &expect_ext {
+                if self.free_ext[j].get(k).copied().unwrap_or(0) != *v {
+                    return Err(format!(
+                        "node {} extended residual drift on {k:?}",
+                        node.name
+                    ));
+                }
+            }
+            // pairwise anti-affinity among co-located pods
+            let on = self.pods_on(NodeId(j as u32));
+            for (x, &p) in on.iter().enumerate() {
+                for &q in &on[x + 1..] {
+                    let (a, b) = (&self.pods[p.idx()], &self.pods[q.idx()]);
+                    if a.anti_affine_with(b) || b.anti_affine_with(a) {
+                        return Err(format!(
+                            "anti-affine pods {} and {} share node {}",
+                            a.name, b.name, node.name
+                        ));
+                    }
+                }
+            }
         }
         Ok(())
     }
+}
+
+/// A node's extended capacities as a name → amount map (duplicate names
+/// summed).
+fn extended_map(node: &Node) -> BTreeMap<String, i64> {
+    let mut m = BTreeMap::new();
+    for (k, v) in &node.extended {
+        *m.entry(k.clone()).or_insert(0) += v;
+    }
+    m
+}
+
+/// A pod's extended requests as a name → amount map (duplicate names
+/// summed) — the one definition of "aggregate extended demand" shared by
+/// `bind` and `extended_fits`.
+fn ext_demand_map(pod: &Pod) -> BTreeMap<&str, i64> {
+    let mut m = BTreeMap::new();
+    for (k, amt) in &pod.extended {
+        *m.entry(k.as_str()).or_insert(0) += amt;
+    }
+    m
 }
 
 #[cfg(test)]
@@ -654,6 +793,77 @@ mod tests {
         // and the scheme keeps working for the join after that
         let id2 = s.join_node(Resources::new(10, 10));
         assert_eq!(s.node(id2).name, "node-z000001001");
+    }
+
+    #[test]
+    fn taints_enforced_on_bind() {
+        use crate::cluster::constraints::{Taint, Toleration};
+        let mut nodes = identical_nodes(1, Resources::new(1000, 1000));
+        nodes[0] = nodes[0]
+            .clone()
+            .with_taint(Taint::no_schedule("dedicated", "batch"));
+        let pods = vec![
+            Pod::new(0, "plain", Resources::new(1, 1), Priority(0)),
+            Pod::new(1, "tolerant", Resources::new(1, 1), Priority(0))
+                .with_toleration(Toleration::equal("dedicated", "batch")),
+        ];
+        let mut s = ClusterState::new(nodes, pods);
+        assert_eq!(
+            s.bind(PodId(0), NodeId(0)),
+            Err(StateError::TaintNotTolerated { pod: PodId(0), node: NodeId(0) })
+        );
+        s.bind(PodId(1), NodeId(0)).unwrap();
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn anti_affinity_enforced_on_bind() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(1, 1), Priority(0))
+                .with_label("app", "x")
+                .with_anti_affinity("app", "x"),
+            Pod::new(1, "b", Resources::new(1, 1), Priority(0)).with_label("app", "x"),
+        ];
+        let mut s = ClusterState::new(nodes, pods);
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        // resident's anti-affinity fires against the incomer
+        assert_eq!(
+            s.bind(PodId(1), NodeId(0)),
+            Err(StateError::AntiAffinityViolation {
+                pod: PodId(1),
+                other: PodId(0),
+                node: NodeId(0)
+            })
+        );
+        s.bind(PodId(1), NodeId(1)).unwrap();
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extended_resources_tracked_through_lifecycle() {
+        let mut nodes = identical_nodes(1, Resources::new(1000, 1000));
+        nodes[0] = nodes[0].clone().with_extended("gpu", 2);
+        let pods = vec![
+            Pod::new(0, "g1", Resources::new(1, 1), Priority(0)).with_extended("gpu", 1),
+            Pod::new(1, "g2", Resources::new(1, 1), Priority(0)).with_extended("gpu", 2),
+        ];
+        let mut s = ClusterState::new(nodes, pods);
+        assert_eq!(s.free_extended(NodeId(0), "gpu"), 2);
+        s.bind(PodId(0), NodeId(0)).unwrap();
+        assert_eq!(s.free_extended(NodeId(0), "gpu"), 1);
+        assert!(matches!(
+            s.bind(PodId(1), NodeId(0)),
+            Err(StateError::InsufficientExtended { .. })
+        ));
+        s.evict(PodId(0)).unwrap();
+        assert_eq!(s.free_extended(NodeId(0), "gpu"), 2);
+        s.bind(PodId(1), NodeId(0)).unwrap();
+        s.terminate(PodId(1)).unwrap();
+        assert_eq!(s.free_extended(NodeId(0), "gpu"), 2);
+        // an unknown resource reads as zero capacity
+        assert_eq!(s.free_extended(NodeId(0), "tpu"), 0);
+        s.check_invariants().unwrap();
     }
 
     #[test]

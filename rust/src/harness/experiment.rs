@@ -65,6 +65,7 @@ pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> I
         total_timeout: std::time::Duration::from_secs_f64(timeout_s),
         alpha: 0.8,
         solver: solver.clone(),
+        ..Default::default()
     };
     let sw = Stopwatch::start();
     let result = optimize(&state, p_max, &cfg);

@@ -22,7 +22,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::cluster::{ClusterState, Event, NodeId, Pod, PodId, ReplicaSet, Resources};
+use crate::cluster::{ClusterState, Event, NodeId, PodId, ReplicaSet, Resources};
 use crate::metrics::{pending_per_priority, TimeSeries, UtilSample};
 use crate::optimizer::algorithm::OptimizerConfig;
 use crate::optimizer::OptimizingScheduler;
@@ -299,13 +299,10 @@ impl ChurnRunner {
             *o += 1;
             v
         };
-        let pod = Pod::new(
-            0, // dense id reassigned by add_pod
-            format!("{}-{ord}", rs.name),
-            rs.template_request,
-            rs.priority,
-        )
-        .with_owner(rs_id);
+        // Dense id 0 is a placeholder — add_pod reassigns it. The whole
+        // template (request, priority, constraint fields) is stamped by
+        // the one shared instantiation path.
+        let pod = rs.instantiate(0, ord);
         let id = self.state.add_pod(pod);
         self.ever_bound.push(false);
         self.arrivals[rs.priority.0 as usize] += 1;

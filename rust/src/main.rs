@@ -22,7 +22,9 @@ use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
 use kube_packd::runtime::XlaEngine;
 use kube_packd::solver::SolverConfig;
 use kube_packd::util::cli::Args;
-use kube_packd::workload::{dataset, ChurnParams, ChurnTraceGenerator, GenParams, Instance};
+use kube_packd::workload::{
+    dataset, ChurnParams, ChurnTraceGenerator, ConstraintProfile, GenParams, Instance,
+};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -61,7 +63,9 @@ COMMANDS
   demo                     Figure 1 walk-through (fragmentation -> repack)
   generate                 emit a challenging dataset (JSON)
       --nodes N --ppn N --tiers N --usage F --count N --seed N --out FILE
+      --constraints none|taints|anti-affinity|spread|extended|mixed
   solve                    run the optimiser over a dataset file
+                           (constraint profiles travel with the dataset)
       --dataset FILE --timeout SECS
   churn                    discrete-event lifecycle simulation; compares
                            default-only vs fallback vs fallback+sweep on
@@ -69,12 +73,22 @@ COMMANDS
       --nodes N --ppn N --tiers N --usage F --seed N
       --horizon-ms N --arrival-ms N --lifetime-ms N
       --sweep-ms N --budget N --timeout SECS --log
+      --constraints none|taints|anti-affinity|spread|extended|mixed
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
   all                      fig3 + fig4 + table1
   info                     PJRT platform + artifact status"
     );
+}
+
+/// `--constraints` selects the constraint scenario family for the
+/// workload generator (default: the paper's unconstrained workload).
+fn constraints_arg(args: &Args) -> ConstraintProfile {
+    let v = args.get_str("constraints", "none");
+    ConstraintProfile::parse(v).unwrap_or_else(|| {
+        panic!("--constraints wants none|taints|anti-affinity|spread|extended|mixed, got {v:?}")
+    })
 }
 
 /// `--usage` accepts a ratio (0.95) or a percentage (95); normalize to
@@ -145,12 +159,15 @@ fn generate(args: &Args) -> anyhow::Result<()> {
     let count = args.get_usize("count", 10);
     let seed = args.get_u64("seed", 1);
     let out = args.get_str("out", "dataset.json");
-    let insts = Instance::generate_challenging(params, count, seed, count * 50);
+    let profile = constraints_arg(args);
+    let insts =
+        Instance::generate_challenging_constrained(params, count, seed, count * 50, profile);
     dataset::save(&insts, out)?;
     println!(
-        "wrote {} challenging instances ({}) to {out}",
+        "wrote {} challenging instances ({}, constraints={}) to {out}",
         insts.len(),
-        params.label()
+        params.label(),
+        profile.label()
     );
     Ok(())
 }
@@ -192,8 +209,11 @@ fn churn(args: &Args) -> anyhow::Result<()> {
     };
     let seed = args.get_u64("seed", 42);
     let timeout = args.get_f64("timeout", 1.0);
+    let profile = constraints_arg(args);
 
-    let trace = ChurnTraceGenerator::new(params, seed).generate();
+    let trace = ChurnTraceGenerator::new(params, seed)
+        .with_profile(profile)
+        .generate();
     let cfg = ChurnConfig {
         policy: Policy::FallbackSweep,
         sweep_every_ms: args.get_u64("sweep-ms", 5_000),

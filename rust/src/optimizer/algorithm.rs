@@ -3,7 +3,8 @@
 //! Pseudocode line numbers from the paper are cross-referenced in
 //! comments. For each priority tier `pr = 0..=p_max` (0 = highest):
 //!
-//! 1. add the tier's multi-knapsack constraints (L3),
+//! 1. assemble the tier's model from the registered constraint modules
+//!    (L3 — multi-knapsack plus whatever else the registry declares),
 //! 2. **maximise the number of placed pods** with priority ≤ pr (L5–6),
 //!    then lock the metric: `=` if proven optimal, `≥` otherwise (L7–10),
 //! 3. **minimise disruption**: maximise Σ (Σ_j x_ij + 2·x_i,where) over
@@ -21,9 +22,12 @@ use std::time::Duration;
 
 use crate::cluster::{ClusterState, NodeId, PodId};
 use crate::solver::{
-    solve_max, CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig, VarId,
+    solve_max, CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig,
 };
 use crate::util::timer::{Deadline, Stopwatch, TimeBudget};
+
+use super::builder::{PackingModelBuilder, VarTable};
+use super::constraints::ModuleRegistry;
 
 /// Configuration for one optimisation run.
 #[derive(Clone, Debug)]
@@ -34,6 +38,13 @@ pub struct OptimizerConfig {
     pub alpha: f64,
     /// Underlying CP solver feature toggles.
     pub solver: SolverConfig,
+    /// Constraint modules the per-tier model is assembled from. The
+    /// default is [`ModuleRegistry::standard`]; register custom modules
+    /// here to extend the model without touching the solver core.
+    pub modules: ModuleRegistry,
+    /// Verbose per-phase logging. Resolved once from `KUBE_PACKD_DEBUG`
+    /// at construction instead of per solve inside the hot loop.
+    pub debug: bool,
 }
 
 impl Default for OptimizerConfig {
@@ -42,6 +53,8 @@ impl Default for OptimizerConfig {
             total_timeout: Duration::from_secs(10),
             alpha: 0.8,
             solver: SolverConfig::default(),
+            modules: ModuleRegistry::standard(),
+            debug: std::env::var_os("KUBE_PACKD_DEBUG").is_some(),
         }
     }
 }
@@ -52,6 +65,12 @@ impl OptimizerConfig {
             total_timeout: Duration::from_secs_f64(secs),
             ..Default::default()
         }
+    }
+
+    /// Replace the module registry (builder style).
+    pub fn with_modules(mut self, modules: ModuleRegistry) -> Self {
+        self.modules = modules;
+        self
     }
 }
 
@@ -84,26 +103,6 @@ pub struct OptimizeResult {
     pub stats: SearchStats,
 }
 
-/// Tier-filtered variable table: `vars[pod] = Some(per-node VarIds)` for
-/// pods with priority ≤ the tier (and only selector-feasible nodes get a
-/// variable — labels are the paper's future-work extension, free here).
-struct VarTable {
-    vars: Vec<Option<Vec<Option<VarId>>>>,
-}
-
-impl VarTable {
-    fn var(&self, pod: usize, node: usize) -> Option<VarId> {
-        self.vars[pod].as_ref().and_then(|ns| ns[node])
-    }
-
-    fn eligible_pods(&self) -> impl Iterator<Item = usize> + '_ {
-        self.vars
-            .iter()
-            .enumerate()
-            .filter_map(|(i, v)| v.is_some().then_some(i))
-    }
-}
-
 /// Locked metric from an earlier phase, rebuilt against fresh VarIds on
 /// every model reconstruction.
 #[derive(Clone, Debug)]
@@ -121,74 +120,19 @@ struct Lock {
     value: i64,
 }
 
-/// Build the model for tier `pr` with all accumulated locks.
+/// Build the model for tier `pr` from the registered constraint modules,
+/// then append all accumulated phase locks (L8/L10/L16/L18).
 fn build_model(
     state: &ClusterState,
     pr: u32,
     locks: &[Lock],
+    modules: &ModuleRegistry,
 ) -> (Model, VarTable) {
-    let mut m = Model::new();
-    let nodes = state.nodes();
-    let mut vars: Vec<Option<Vec<Option<VarId>>>> = vec![None; state.pods().len()];
-
-    // Variables + at-most-one per pod (constraint (3)). Retired pods
-    // (lifecycle completions) take no part. Unready nodes (cordoned or
-    // removed) accept no NEW placements, but a pod already resident on
-    // one keeps a variable for its home — descheduler semantics: it may
-    // stay put (or move to a ready node), it just can't be joined there.
-    for pod in state.pods() {
-        if pod.priority.0 > pr || state.is_retired(pod.id) {
-            continue;
-        }
-        let home = state.assignment_of(pod.id);
-        let per_node: Vec<Option<VarId>> = nodes
-            .iter()
-            .map(|n| {
-                let admissible = state.node_ready(n.id) || home == Some(n.id);
-                (admissible && pod.selector_matches(n)).then(|| m.new_var())
-            })
-            .collect();
-        let amo = LinearExpr::of(per_node.iter().flatten().map(|&v| (v, 1)));
-        if !amo.terms.is_empty() {
-            m.add_le(amo, 1);
-        }
-        vars[pod.id.idx()] = Some(per_node);
-    }
-    let table = VarTable { vars };
-
-    // Knapsack constraints (1) and (2): per node, CPU and RAM. The two
-    // dimensions are declared as resource classes so the solver can apply
-    // its aggregate capacity bound (see solver::search).
-    let mut cpu_class = Vec::with_capacity(nodes.len());
-    let mut ram_class = Vec::with_capacity(nodes.len());
-    for (j, node) in nodes.iter().enumerate() {
-        let mut cpu = LinearExpr::new();
-        let mut ram = LinearExpr::new();
-        for i in table.eligible_pods() {
-            if let Some(v) = table.var(i, j) {
-                let req = state.pods()[i].request;
-                cpu.add(v, req.cpu);
-                ram.add(v, req.ram);
-            }
-        }
-        if !cpu.terms.is_empty() {
-            cpu_class.push(m.next_constraint_index());
-            m.add_le(cpu, node.capacity.cpu);
-            ram_class.push(m.next_constraint_index());
-            m.add_le(ram, node.capacity.ram);
-        }
-    }
-    if !cpu_class.is_empty() {
-        m.add_resource_class(cpu_class);
-        m.add_resource_class(ram_class);
-    }
-
-    // Accumulated phase locks (L8/L10/L16/L18).
+    let (mut m, table) = PackingModelBuilder::new(state, pr, modules).build();
     for lock in locks {
         let expr = metric_expr(state, &table, &lock.metric);
         m.add_constraint(expr, lock.op, lock.value);
     }
-
     (m, table)
 }
 
@@ -283,7 +227,7 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
 
     for pr in 0..=p_max {
         // ---- phase 1: maximise placed pods up to priority pr (L5–L10) ----
-        let (mut m, table) = build_model(state, pr, &locks);
+        let (mut m, table) = build_model(state, pr, &locks, &cfg.modules);
         install_hints(&mut m, state, &table, &target);
         let metric1 = metric_expr(state, &table, &LockMetric::Placed { tier: pr });
 
@@ -294,7 +238,7 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
         budget.report_used(grant, phase1_time);
         merge_stats(&mut stats, &sol1.stats);
 
-        if std::env::var_os("KUBE_PACKD_DEBUG").is_some() {
+        if cfg.debug {
             eprintln!(
                 "[optimize] tier {pr} phase1: {:?} obj={} grant={:?} used={:?} dec={} prunes={}",
                 sol1.status,
@@ -324,7 +268,7 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
         have_solution = true;
 
         // ---- phase 2: minimise disruption (L12–L18) -----------------------
-        let (mut m2, table2) = build_model(state, pr, &locks);
+        let (mut m2, table2) = build_model(state, pr, &locks, &cfg.modules);
         install_hints(&mut m2, state, &table2, &target);
         let metric2 = metric_expr(state, &table2, &LockMetric::Stay { tier: pr });
 
@@ -335,7 +279,7 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
         budget.report_used(grant2, phase2_time);
         merge_stats(&mut stats, &sol2.stats);
 
-        if std::env::var_os("KUBE_PACKD_DEBUG").is_some() {
+        if cfg.debug {
             eprintln!(
                 "[optimize] tier {pr} phase2: {:?} obj={} grant={:?} used={:?}",
                 sol2.status, sol2.objective, grant2, phase2_time
@@ -371,6 +315,13 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
 
     if !have_solution {
         return None;
+    }
+
+    // Every module vouches for the final target (solution-audit hook).
+    if cfg!(debug_assertions) {
+        if let Err(e) = cfg.modules.audit(state, &target) {
+            panic!("constraint-module audit rejected the solver target: {e}");
+        }
     }
 
     // Per-priority placement vector of the target.
@@ -434,6 +385,23 @@ mod tests {
         let c = res.target[2].unwrap();
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn figure1_identical_under_legacy_module_set() {
+        // Pure-refactor parity: on a constraint-free workload, the
+        // standard registry and the paper's original vocabulary build
+        // the same model and produce the same target.
+        let st = figure1();
+        let full = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        let legacy = optimize(
+            &st,
+            0,
+            &OptimizerConfig::with_timeout(5.0).with_modules(ModuleRegistry::resource_only()),
+        )
+        .unwrap();
+        assert_eq!(full.target, legacy.target);
+        assert_eq!(full.placed_per_priority, legacy.placed_per_priority);
     }
 
     #[test]

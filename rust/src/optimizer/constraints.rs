@@ -1,0 +1,615 @@
+//! Composable constraint modules — the extensible vocabulary of the
+//! packing model.
+//!
+//! The paper's model hard-codes three constraint families (at-most-one
+//! placement, CPU knapsack, RAM knapsack). SAGE-style deployment solvers
+//! pay off precisely when they encode the *full* constraint surface, so
+//! this module turns each family into a [`ConstraintModule`] and lets
+//! [`PackingModelBuilder`](super::builder::PackingModelBuilder) assemble
+//! the per-tier model from whatever set is registered. A module
+//! contributes through three hooks:
+//!
+//! * [`ConstraintModule::admits`] — variable admissibility: veto a
+//!   (pod, node) pair before a decision variable is even created
+//!   (cheaper than a constraint, and it shrinks the search space);
+//! * [`ConstraintModule::emit`] — append the module's linear constraints
+//!   over the built variable table;
+//! * [`ConstraintModule::audit`] — check a finished assignment against
+//!   the module's semantics (used by parity tests and debug builds).
+//!
+//! Every built-in module mirrors a scheduler-framework Filter plugin
+//! (`scheduler::plugins`), so the CP optimiser and the default scheduler
+//! provably agree on single-pod feasibility — the property pinned by the
+//! CP/filter parity proptest in `rust/tests/constraints.rs`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::rc::Rc;
+
+use crate::cluster::{ClusterState, Node, NodeId, Pod};
+use crate::solver::{LinearExpr, Model};
+
+use super::builder::ModelCtx;
+
+/// One composable constraint family of the packing model.
+pub trait ConstraintModule {
+    fn name(&self) -> &'static str;
+
+    /// Variable admissibility: may `pod` ever be (newly) placed on
+    /// `node`? Pairs vetoed here get no decision variable. The builder
+    /// exempts a pod's *current* node from lifecycle readiness but not
+    /// from this hook — a bound pod always satisfies it because
+    /// [`ClusterState::bind`] enforces the same vocabulary.
+    fn admits(&self, _state: &ClusterState, _pod: &Pod, _node: &Node) -> bool {
+        true
+    }
+
+    /// Append this module's constraints for the tier being built.
+    fn emit(&self, ctx: &ModelCtx, m: &mut Model);
+
+    /// Audit a finished assignment (`target[pod] = node`) against this
+    /// module's semantics. Default: vacuously fine.
+    fn audit(
+        &self,
+        _state: &ClusterState,
+        _target: &[Option<NodeId>],
+    ) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Sum of a pod's requests for one named extended resource.
+fn ext_demand(pod: &Pod, resource: &str) -> i64 {
+    pod.extended
+        .iter()
+        .filter(|(k, _)| k == resource)
+        .map(|&(_, v)| v)
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Built-in modules
+// ---------------------------------------------------------------------------
+
+/// Constraint (3) of the paper: every pod lands on at most one node.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AtMostOnePlacement;
+
+impl ConstraintModule for AtMostOnePlacement {
+    fn name(&self) -> &'static str {
+        "AtMostOnePlacement"
+    }
+
+    fn emit(&self, ctx: &ModelCtx, m: &mut Model) {
+        for i in ctx.table.eligible_pods() {
+            let amo = LinearExpr::of(
+                (0..ctx.state.nodes().len()).filter_map(|j| ctx.table.var(i, j).map(|v| (v, 1))),
+            );
+            if !amo.terms.is_empty() {
+                m.add_le(amo, 1);
+            }
+        }
+    }
+}
+
+/// Constraints (1) and (2), generalised to N named resource dimensions:
+/// per node, one knapsack per dimension — CPU, RAM, and every extended
+/// resource (GPU, ephemeral storage, …) any tier pod requests. Each
+/// dimension is declared as a named resource class so the solver's
+/// aggregate capacity bound covers it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeCapacity;
+
+impl ConstraintModule for NodeCapacity {
+    fn name(&self) -> &'static str {
+        "NodeCapacity"
+    }
+
+    fn emit(&self, ctx: &ModelCtx, m: &mut Model) {
+        let state = ctx.state;
+        let nodes = state.nodes();
+        let table = ctx.table;
+
+        let mut cpu_class = Vec::with_capacity(nodes.len());
+        let mut ram_class = Vec::with_capacity(nodes.len());
+        for (j, node) in nodes.iter().enumerate() {
+            let mut cpu = LinearExpr::new();
+            let mut ram = LinearExpr::new();
+            for i in table.eligible_pods() {
+                if let Some(v) = table.var(i, j) {
+                    let req = state.pods()[i].request;
+                    cpu.add(v, req.cpu);
+                    ram.add(v, req.ram);
+                }
+            }
+            if !cpu.terms.is_empty() {
+                cpu_class.push(m.next_constraint_index());
+                m.add_le(cpu, node.capacity.cpu);
+            }
+            if !ram.terms.is_empty() {
+                ram_class.push(m.next_constraint_index());
+                m.add_le(ram, node.capacity.ram);
+            }
+        }
+        if !cpu_class.is_empty() {
+            m.add_named_resource_class("cpu", cpu_class);
+        }
+        if !ram_class.is_empty() {
+            m.add_named_resource_class("ram", ram_class);
+        }
+
+        // Extended dimensions requested by any tier pod, in name order.
+        let dims: BTreeSet<&str> = table
+            .eligible_pods()
+            .flat_map(|i| state.pods()[i].extended.iter())
+            .filter(|(_, amt)| *amt > 0)
+            .map(|(k, _)| k.as_str())
+            .collect();
+        for dim in dims {
+            let mut class = Vec::with_capacity(nodes.len());
+            for (j, node) in nodes.iter().enumerate() {
+                let mut e = LinearExpr::new();
+                for i in table.eligible_pods() {
+                    let d = ext_demand(&state.pods()[i], dim);
+                    if d > 0 {
+                        if let Some(v) = table.var(i, j) {
+                            e.add(v, d);
+                        }
+                    }
+                }
+                if !e.terms.is_empty() {
+                    class.push(m.next_constraint_index());
+                    m.add_le(e, node.extended_capacity(dim));
+                }
+            }
+            if !class.is_empty() {
+                m.add_named_resource_class(dim, class);
+            }
+        }
+    }
+
+    fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        let nodes = state.nodes();
+        let mut used = vec![crate::cluster::Resources::ZERO; nodes.len()];
+        let mut used_ext: Vec<BTreeMap<&str, i64>> = vec![BTreeMap::new(); nodes.len()];
+        for (i, t) in target.iter().enumerate() {
+            if let Some(n) = t {
+                used[n.idx()] += state.pods()[i].request;
+                for (k, amt) in &state.pods()[i].extended {
+                    *used_ext[n.idx()].entry(k.as_str()).or_insert(0) += amt;
+                }
+            }
+        }
+        for (j, node) in nodes.iter().enumerate() {
+            if (node.capacity - used[j]).any_negative() {
+                return Err(format!("node {} over capacity", node.name));
+            }
+            for (k, amt) in &used_ext[j] {
+                if *amt > node.extended_capacity(k) {
+                    return Err(format!("node {} over {k:?} capacity", node.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Required node labels (the paper's future-work affinity hook, already
+/// present on the seed types). Pure admissibility — no constraints.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeSelector;
+
+impl ConstraintModule for NodeSelector {
+    fn name(&self) -> &'static str {
+        "NodeSelector"
+    }
+
+    fn admits(&self, _state: &ClusterState, pod: &Pod, node: &Node) -> bool {
+        pod.selector_matches(node)
+    }
+
+    fn emit(&self, _ctx: &ModelCtx, _m: &mut Model) {}
+
+    fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        for (i, t) in target.iter().enumerate() {
+            if let Some(n) = t {
+                let pod = &state.pods()[i];
+                if !pod.selector_matches(state.node(*n)) && state.assignment_of(pod.id) != Some(*n)
+                {
+                    return Err(format!("pod {} placed against its selector", pod.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `NoSchedule` taints: an untolerated node accepts no new placements,
+/// though a resident pod may stay (the builder's home-node exemption
+/// never applies here because `bind` enforces tolerations too).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaintsTolerations;
+
+impl ConstraintModule for TaintsTolerations {
+    fn name(&self) -> &'static str {
+        "TaintsTolerations"
+    }
+
+    fn admits(&self, _state: &ClusterState, pod: &Pod, node: &Node) -> bool {
+        pod.tolerates(node)
+    }
+
+    fn emit(&self, _ctx: &ModelCtx, _m: &mut Model) {}
+
+    fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        for (i, t) in target.iter().enumerate() {
+            if let Some(n) = t {
+                let pod = &state.pods()[i];
+                if !pod.tolerates(state.node(*n)) && state.assignment_of(pod.id) != Some(*n) {
+                    return Err(format!("pod {} placed on untolerated node", pod.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pairwise pod anti-affinity: two pods that exclude each other (in
+/// either direction, matching the Kubernetes InterPodAffinity filter)
+/// never share a node — `x_ij + x_kj ≤ 1` on every common candidate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PodAntiAffinity;
+
+impl ConstraintModule for PodAntiAffinity {
+    fn name(&self) -> &'static str {
+        "PodAntiAffinity"
+    }
+
+    fn emit(&self, ctx: &ModelCtx, m: &mut Model) {
+        let state = ctx.state;
+        let pods = state.pods();
+        let eligible: Vec<usize> = ctx.table.eligible_pods().collect();
+        for (x, &i) in eligible.iter().enumerate() {
+            for &k in &eligible[x + 1..] {
+                let (a, b) = (&pods[i], &pods[k]);
+                if a.anti_affinity.is_empty() && b.anti_affinity.is_empty() {
+                    continue;
+                }
+                if !(a.anti_affine_with(b) || b.anti_affine_with(a)) {
+                    continue;
+                }
+                for j in 0..state.nodes().len() {
+                    if let (Some(vi), Some(vk)) = (ctx.table.var(i, j), ctx.table.var(k, j)) {
+                        // Coefficient 2 on purpose: `2x + 2y ≤ 2` is the
+                        // same exclusion as `x + y ≤ 1`, but the search
+                        // engine classifies unit-coefficient/rhs-1 rows
+                        // as at-most-one groups and drops them from its
+                        // symmetry signatures — which would let node
+                        // symmetry-skipping prune past an asymmetric
+                        // anti-affinity pair.
+                        m.add_le(LinearExpr::of([(vi, 2), (vk, 2)]), 2);
+                    }
+                }
+            }
+        }
+    }
+
+    fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        let pods = state.pods();
+        for (i, ti) in target.iter().enumerate() {
+            let Some(ni) = ti else { continue };
+            for (k, tk) in target.iter().enumerate().skip(i + 1) {
+                if tk != &Some(*ni) {
+                    continue;
+                }
+                let (a, b) = (&pods[i], &pods[k]);
+                if a.anti_affine_with(b) || b.anti_affine_with(a) {
+                    return Err(format!(
+                        "anti-affine pods {} and {} share a node",
+                        a.name, b.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-ReplicaSet topology spread over the node topology: for every
+/// owner group declaring a max skew, the placed-replica counts of any
+/// two candidate nodes may differ by at most that skew.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TopologySpread;
+
+impl ConstraintModule for TopologySpread {
+    fn name(&self) -> &'static str {
+        "TopologySpread"
+    }
+
+    fn emit(&self, ctx: &ModelCtx, m: &mut Model) {
+        let state = ctx.state;
+        let pods = state.pods();
+        // owner → eligible member pods
+        let mut groups: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for i in ctx.table.eligible_pods() {
+            if let Some(owner) = pods[i].owner {
+                groups.entry(owner).or_default().push(i);
+            }
+        }
+        for members in groups.values() {
+            let Some(skew) = members
+                .iter()
+                .filter_map(|&i| pods[i].spread_max_skew)
+                .min()
+            else {
+                continue;
+            };
+            // candidate nodes = nodes where any member has a variable
+            let domain: Vec<usize> = (0..state.nodes().len())
+                .filter(|&j| members.iter().any(|&i| ctx.table.var(i, j).is_some()))
+                .collect();
+            if domain.len() < 2 {
+                continue;
+            }
+            let count_terms: Vec<Vec<(crate::solver::VarId, i64)>> = domain
+                .iter()
+                .map(|&j| {
+                    members
+                        .iter()
+                        .filter_map(|&i| ctx.table.var(i, j).map(|v| (v, 1)))
+                        .collect()
+                })
+                .collect();
+            for a in 0..domain.len() {
+                for b in 0..domain.len() {
+                    if a == b {
+                        continue;
+                    }
+                    // count(a) − count(b) ≤ skew
+                    let mut e = LinearExpr::of(count_terms[a].iter().copied());
+                    for &(v, _) in &count_terms[b] {
+                        e.add(v, -1);
+                    }
+                    m.add_le(e, skew);
+                }
+            }
+        }
+    }
+
+    /// Occupied-domain audit: a necessary condition of the emitted
+    /// pairwise constraints (max − min over *occupied* nodes ≤ skew).
+    /// Empty candidate domains are not re-derived here because they
+    /// depend on every module's `admits` hook.
+    fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        let pods = state.pods();
+        let mut counts: BTreeMap<u32, BTreeMap<NodeId, i64>> = BTreeMap::new();
+        let mut skews: BTreeMap<u32, i64> = BTreeMap::new();
+        for (i, t) in target.iter().enumerate() {
+            let (Some(n), Some(owner)) = (t, pods[i].owner) else {
+                continue;
+            };
+            *counts.entry(owner).or_default().entry(*n).or_insert(0) += 1;
+            if let Some(s) = pods[i].spread_max_skew {
+                let e = skews.entry(owner).or_insert(s);
+                *e = (*e).min(s);
+            }
+        }
+        for (owner, skew) in skews {
+            let per_node = &counts[&owner];
+            let max = per_node.values().max().copied().unwrap_or(0);
+            let min = per_node.values().min().copied().unwrap_or(0);
+            if max - min > skew {
+                return Err(format!(
+                    "owner group {owner} skew {} exceeds max {skew}",
+                    max - min
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// An ordered set of constraint modules. Cloning is cheap (modules are
+/// shared behind `Rc`), which lets [`OptimizerConfig`] stay `Clone`.
+///
+/// [`OptimizerConfig`]: super::algorithm::OptimizerConfig
+#[derive(Clone)]
+pub struct ModuleRegistry {
+    modules: Vec<Rc<dyn ConstraintModule>>,
+}
+
+impl ModuleRegistry {
+    /// No modules at all — only useful as a base for [`Self::with`].
+    pub fn empty() -> Self {
+        ModuleRegistry {
+            modules: Vec::new(),
+        }
+    }
+
+    /// The full built-in vocabulary: placement, N-dimensional capacity,
+    /// node selectors, taints/tolerations, pod anti-affinity, and
+    /// topology spread. With constraint-free workloads this produces the
+    /// exact model of the paper's original `build_model`.
+    pub fn standard() -> Self {
+        ModuleRegistry::empty()
+            .with(AtMostOnePlacement)
+            .with(NodeCapacity)
+            .with(NodeSelector)
+            .with(TaintsTolerations)
+            .with(PodAntiAffinity)
+            .with(TopologySpread)
+    }
+
+    /// The paper's original constraint vocabulary only: at-most-one
+    /// placement, resource knapsacks, node selectors.
+    pub fn resource_only() -> Self {
+        ModuleRegistry::empty()
+            .with(AtMostOnePlacement)
+            .with(NodeCapacity)
+            .with(NodeSelector)
+    }
+
+    /// Append a module (builder style).
+    pub fn with(mut self, module: impl ConstraintModule + 'static) -> Self {
+        self.register(module);
+        self
+    }
+
+    /// Append a module in place.
+    pub fn register(&mut self, module: impl ConstraintModule + 'static) -> &mut Self {
+        self.modules.push(Rc::new(module));
+        self
+    }
+
+    pub fn modules(&self) -> &[Rc<dyn ConstraintModule>] {
+        &self.modules
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.modules.iter().map(|m| m.name()).collect()
+    }
+
+    /// Conjunction of every module's admissibility hook.
+    pub fn admits(&self, state: &ClusterState, pod: &Pod, node: &Node) -> bool {
+        self.modules.iter().all(|m| m.admits(state, pod, node))
+    }
+
+    /// Run every module's audit over a finished assignment; the first
+    /// failure is returned prefixed with the offending module's name.
+    pub fn audit(&self, state: &ClusterState, target: &[Option<NodeId>]) -> Result<(), String> {
+        for m in &self.modules {
+            m.audit(state, target)
+                .map_err(|e| format!("{}: {e}", m.name()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for ModuleRegistry {
+    fn default() -> Self {
+        ModuleRegistry::standard()
+    }
+}
+
+impl fmt::Debug for ModuleRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_tuple("ModuleRegistry").field(&self.names()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Priority, Resources};
+    use crate::optimizer::builder::PackingModelBuilder;
+
+    fn build(state: &ClusterState, tier: u32) -> (Model, crate::optimizer::builder::VarTable) {
+        let reg = ModuleRegistry::standard();
+        PackingModelBuilder::new(state, tier, &reg).build()
+    }
+
+    #[test]
+    fn registry_names_in_order() {
+        assert_eq!(
+            ModuleRegistry::standard().names(),
+            vec![
+                "AtMostOnePlacement",
+                "NodeCapacity",
+                "NodeSelector",
+                "TaintsTolerations",
+                "PodAntiAffinity",
+                "TopologySpread"
+            ]
+        );
+    }
+
+    #[test]
+    fn anti_affinity_emits_pairwise_exclusions() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(1, 1), Priority(0))
+                .with_label("app", "x")
+                .with_anti_affinity("app", "x"),
+            Pod::new(1, "b", Resources::new(1, 1), Priority(0)).with_label("app", "x"),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let (m, table) = build(&st, 0);
+        // both pods on node 0 must be infeasible
+        let mut values = vec![false; m.num_vars()];
+        values[table.var(0, 0).unwrap().idx()] = true;
+        values[table.var(1, 0).unwrap().idx()] = true;
+        assert!(!m.feasible(&values));
+        // split across nodes is fine
+        let mut split = vec![false; m.num_vars()];
+        split[table.var(0, 0).unwrap().idx()] = true;
+        split[table.var(1, 1).unwrap().idx()] = true;
+        assert!(m.feasible(&split));
+    }
+
+    #[test]
+    fn extended_resources_get_their_own_class() {
+        let mut nodes = identical_nodes(2, Resources::new(1000, 1000));
+        nodes[1] = nodes[1].clone().with_extended("gpu", 1);
+        let pods = vec![
+            Pod::new(0, "g", Resources::new(1, 1), Priority(0)).with_extended("gpu", 1),
+            Pod::new(1, "h", Resources::new(1, 1), Priority(0)).with_extended("gpu", 1),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let (m, table) = build(&st, 0);
+        assert!(m
+            .resource_classes
+            .iter()
+            .any(|c| c.name == "gpu" && !c.cons.is_empty()));
+        // both gpu pods on the single-gpu node: infeasible
+        let mut values = vec![false; m.num_vars()];
+        values[table.var(0, 1).unwrap().idx()] = true;
+        values[table.var(1, 1).unwrap().idx()] = true;
+        assert!(!m.feasible(&values));
+        // gpu pod on the gpu-less node: also infeasible (capacity 0)
+        let mut wrong = vec![false; m.num_vars()];
+        wrong[table.var(0, 0).unwrap().idx()] = true;
+        assert!(!m.feasible(&wrong));
+    }
+
+    #[test]
+    fn topology_spread_bounds_pairwise_skew() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods: Vec<Pod> = (0..3)
+            .map(|i| {
+                Pod::new(i, format!("g-{i}"), Resources::new(1, 1), Priority(0))
+                    .with_owner(7)
+                    .with_spread(1)
+            })
+            .collect();
+        let st = ClusterState::new(nodes, pods);
+        let (m, table) = build(&st, 0);
+        // 3 on one node, 0 on the other: skew 3 > 1
+        let mut lopsided = vec![false; m.num_vars()];
+        for i in 0..3 {
+            lopsided[table.var(i, 0).unwrap().idx()] = true;
+        }
+        assert!(!m.feasible(&lopsided));
+        // 2 + 1 split: skew 1, fine
+        let mut split = vec![false; m.num_vars()];
+        split[table.var(0, 0).unwrap().idx()] = true;
+        split[table.var(1, 0).unwrap().idx()] = true;
+        split[table.var(2, 1).unwrap().idx()] = true;
+        assert!(m.feasible(&split));
+    }
+
+    #[test]
+    fn audit_reports_offending_module() {
+        let nodes = identical_nodes(1, Resources::new(10, 10));
+        let pods = vec![Pod::new(0, "xl", Resources::new(100, 100), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let err = ModuleRegistry::standard()
+            .audit(&st, &[Some(NodeId(0))])
+            .unwrap_err();
+        assert!(err.starts_with("NodeCapacity:"), "{err}");
+        assert!(ModuleRegistry::standard().audit(&st, &[None]).is_ok());
+    }
+}

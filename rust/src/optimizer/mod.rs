@@ -4,6 +4,12 @@
 //! * [`algorithm`] — Algorithm 1: the per-priority two-phase optimisation
 //!   loop (maximise placements, then minimise moves) with the α time
 //!   budget and phase-locking constraints.
+//! * [`constraints`] — the composable [`ConstraintModule`] vocabulary:
+//!   at-most-one placement, N-dimensional node capacity, node selectors,
+//!   taints/tolerations, pod anti-affinity, and topology spread, plus
+//!   the [`ModuleRegistry`] they are assembled from.
+//! * [`builder`]   — [`PackingModelBuilder`]: turns a cluster state, a
+//!   priority tier, and a module registry into a solver [`Model`].
 //! * [`plan`]      — diff a solver target against the live assignment
 //!   into an executable eviction/placement plan (cross-node pre-emption
 //!   with separate scheduling events, per the paper's Kubernetes-API
@@ -12,11 +18,81 @@
 //!   PreFilter node pinning, PostFilter failure tracking, Reserve
 //!   bookkeeping, PostBind plan completion — the five extension points
 //!   the paper's Go plugin uses.
+//!
+//! # Adding a custom constraint
+//!
+//! The per-tier model is assembled from whatever modules the
+//! [`OptimizerConfig`]'s registry holds, so a new constraint family
+//! never touches the solver core. A module that quarantines one node
+//! from all `batch-*` pods, end to end:
+//!
+//! ```
+//! use kube_packd::cluster::{ClusterState, Node, NodeId, Pod};
+//! use kube_packd::optimizer::constraints::{ConstraintModule, ModuleRegistry};
+//! use kube_packd::optimizer::builder::ModelCtx;
+//! use kube_packd::optimizer::OptimizerConfig;
+//! use kube_packd::solver::Model;
+//!
+//! struct Quarantine {
+//!     node: NodeId,
+//! }
+//!
+//! impl ConstraintModule for Quarantine {
+//!     fn name(&self) -> &'static str {
+//!         "Quarantine"
+//!     }
+//!     // Veto (pod, node) pairs before variables exist — the cheapest
+//!     // way to encode a hard exclusion.
+//!     fn admits(&self, _state: &ClusterState, pod: &Pod, node: &Node) -> bool {
+//!         !(node.id == self.node && pod.name.starts_with("batch-"))
+//!     }
+//!     // Pairwise/aggregate families add linear constraints here instead.
+//!     fn emit(&self, _ctx: &ModelCtx, _m: &mut Model) {}
+//!     // Optional: vouch for finished assignments (runs in debug builds
+//!     // and parity tests).
+//!     fn audit(
+//!         &self,
+//!         state: &ClusterState,
+//!         target: &[Option<NodeId>],
+//!     ) -> Result<(), String> {
+//!         for (i, t) in target.iter().enumerate() {
+//!             if *t == Some(self.node) && state.pods()[i].name.starts_with("batch-") {
+//!                 return Err(format!("batch pod {i} on quarantined node"));
+//!             }
+//!         }
+//!         Ok(())
+//!     }
+//! }
+//!
+//! let cfg = OptimizerConfig::with_timeout(1.0)
+//!     .with_modules(ModuleRegistry::standard().with(Quarantine { node: NodeId(0) }));
+//! assert!(format!("{cfg:?}").contains("Quarantine"));
+//! ```
+//!
+//! Mirror hard per-pod exclusions with a scheduler
+//! [`FilterPlugin`](crate::scheduler::framework::FilterPlugin) so the
+//! default scheduler agrees with the optimiser on feasibility; if the
+//! two disagree, an executing plan can be rejected mid-flight, which the
+//! driver surfaces as [`RunReport::plan_incomplete`] (graceful rollback)
+//! rather than a crash.
+//!
+//! [`ConstraintModule`]: constraints::ConstraintModule
+//! [`ModuleRegistry`]: constraints::ModuleRegistry
+//! [`PackingModelBuilder`]: builder::PackingModelBuilder
+//! [`Model`]: crate::solver::Model
+//! [`RunReport::plan_incomplete`]: plugin::RunReport
 
 pub mod algorithm;
+pub mod builder;
+pub mod constraints;
 pub mod plan;
 pub mod plugin;
 
 pub use algorithm::{optimize, OptimizeResult, OptimizerConfig, TierReport};
+pub use builder::{ModelCtx, PackingModelBuilder, VarTable};
+pub use constraints::{
+    AtMostOnePlacement, ConstraintModule, ModuleRegistry, NodeCapacity, NodeSelector,
+    PodAntiAffinity, TaintsTolerations, TopologySpread,
+};
 pub use plan::MovePlan;
-pub use plugin::OptimizingScheduler;
+pub use plugin::{OptimizingScheduler, RunReport};

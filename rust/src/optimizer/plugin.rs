@@ -140,8 +140,19 @@ pub struct RunReport {
     pub solver_invoked: bool,
     /// Solver result (None if not invoked or failed).
     pub optimize: Option<OptimizeResult>,
+    /// The pass ended strictly better (lexicographic placement vector)
+    /// than it started — measured on the *actual* final state, so an
+    /// aborted plan that changed nothing reads `false` even when the
+    /// solver had promised an improvement.
     pub improved: bool,
     pub proved_optimal: bool,
+    /// A filter plugin rejected part of an executing plan — reachable
+    /// when a custom filter has no mirroring constraint module (the
+    /// built-in filters always agree with the CP model; even the
+    /// order-sensitive TopologySpread filter exempts plan-pinned
+    /// placements). The run rolled back to ordinary scheduling instead
+    /// of crashing.
+    pub plan_incomplete: bool,
     /// Pods whose node changed to realise the plan.
     pub disruptions: usize,
     /// Placement vector before / after the full pass.
@@ -190,6 +201,7 @@ impl OptimizingScheduler {
                 optimize: None,
                 improved: false,
                 proved_optimal: false,
+                plan_incomplete: false,
                 disruptions: 0,
                 placed_after: placed_before.clone(),
                 placed_before,
@@ -206,14 +218,13 @@ impl OptimizingScheduler {
         let result = optimize(state, self.p_max, &self.cfg);
         let solver_wall = sw.elapsed();
 
-        let mut improved = false;
         let mut proved = false;
         let mut disruptions = 0;
+        let mut plan_incomplete = false;
 
         if let Some(res) = &result {
             proved = res.proved_optimal;
-            improved = lex_better(&res.placed_per_priority, &placed_before);
-            if improved {
+            if lex_better(&res.placed_per_priority, &placed_before) {
                 let plan = MovePlan::build(state, &res.target);
                 disruptions = plan.disruptions();
                 // Evictions run as direct pre-emption events ...
@@ -240,16 +251,29 @@ impl OptimizingScheduler {
                         self.scheduler.enqueue(state, pod);
                     }
                 }
-                let stats2 = self.scheduler.run_queue(state);
-                // Every plan pod must have bound (the target is feasible
-                // and nothing else was allowed to run).
-                assert!(
-                    !self.plan.borrow().active,
-                    "plan incomplete after drain: {stats2:?}"
-                );
-                for &(pod, node) in &plan.placements {
-                    debug_assert_eq!(state.assignment_of(pod), Some(node));
-                    state.events.push(Event::PlanBind { pod, node });
+                self.scheduler.run_queue(state);
+                if self.plan.borrow().active {
+                    // A plan pod was rejected by a filter plugin: the CP
+                    // model admitted a target the filter set refuses —
+                    // reachable when a custom filter has no mirroring
+                    // constraint module. Roll back gracefully: deactivate
+                    // the plan (keeping whatever already bound) and let
+                    // every remaining pod retry through ordinary
+                    // scheduling below.
+                    plan_incomplete = true;
+                    let mut ps = self.plan.borrow_mut();
+                    let missing = ps.remaining();
+                    let bound = ps.done.len();
+                    ps.active = false;
+                    ps.targets.clear();
+                    ps.done.clear();
+                    drop(ps);
+                    state.events.push(Event::PlanAborted { bound, missing });
+                } else {
+                    for &(pod, node) in &plan.placements {
+                        debug_assert_eq!(state.assignment_of(pod), Some(node));
+                        state.events.push(Event::PlanBind { pod, node });
+                    }
                 }
                 // Now the held-back pods get their ordinary retry.
                 self.scheduler.queue.flush_unschedulable();
@@ -261,6 +285,8 @@ impl OptimizingScheduler {
             self.scheduler.queue.resume();
         }
 
+        let placed_after = state.placed_per_priority(self.p_max);
+        let improved = lex_better(&placed_after, &placed_before);
         state.events.push(Event::SolverFinished {
             improved,
             proved_optimal: proved,
@@ -273,8 +299,9 @@ impl OptimizingScheduler {
             optimize: result,
             improved,
             proved_optimal: proved,
+            plan_incomplete,
             disruptions,
-            placed_after: state.placed_per_priority(self.p_max),
+            placed_after,
             placed_before,
             solver_wall,
         }

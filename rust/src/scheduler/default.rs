@@ -56,13 +56,26 @@ pub struct DefaultScheduler {
 }
 
 impl DefaultScheduler {
-    /// The paper's deterministic profile: NodeResourcesFit filter,
-    /// LeastAllocated scoring, PrioritySort queue order, no pre-emption.
+    /// The paper's deterministic profile — NodeResourcesFit filter,
+    /// LeastAllocated scoring, PrioritySort queue order, no pre-emption —
+    /// plus the constraint filters (taints, anti-affinity, topology
+    /// spread) mirroring the optimiser's constraint modules. On
+    /// constraint-free workloads the extra filters are no-ops, so the
+    /// profile behaves exactly as the paper's.
     pub fn kwok_default() -> Self {
-        use super::plugins::{LeastAllocated, NodeResourcesFit, PrioritySort};
+        use super::plugins::{
+            InterPodAntiAffinity, LeastAllocated, NodeResourcesFit, PrioritySort, TaintToleration,
+            TopologySpread,
+        };
         let mut fw = Framework::new();
         fw.set_queue_sort(Box::new(PrioritySort));
+        // TopologySpread registers at PreFilter too: it caches the owner
+        // group's per-node counts in the CycleContext for the Filter pass.
+        fw.pre_filter.push(Box::new(TopologySpread));
         fw.filter.push(Box::new(NodeResourcesFit));
+        fw.filter.push(Box::new(TaintToleration));
+        fw.filter.push(Box::new(InterPodAntiAffinity));
+        fw.filter.push(Box::new(TopologySpread));
         fw.score.push(Box::new(LeastAllocated));
         DefaultScheduler {
             framework: fw,

@@ -34,6 +34,10 @@ impl PluginDecision {
 pub struct CycleContext {
     pub pinned_node: Option<NodeId>,
     pub reserved: Option<NodeId>,
+    /// Per-node bound-replica counts of the pod's owner group, cached by
+    /// the TopologySpread PreFilter hook so the Filter pass does not
+    /// rescan every pod per candidate node.
+    pub spread_counts: Option<Vec<i64>>,
 }
 
 // ---- extension-point traits ----------------------------------------------

@@ -1,0 +1,67 @@
+//! `InterPodAntiAffinity` — Filter plugin mirroring the
+//! [`PodAntiAffinity`](crate::optimizer::constraints::PodAntiAffinity)
+//! constraint module. Like the Kubernetes InterPodAffinity filter it
+//! checks *both* directions: the incoming pod's anti-affinity against
+//! every resident of the node, and every resident's anti-affinity
+//! against the incoming pod.
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::scheduler::framework::{CycleContext, FilterPlugin};
+
+#[derive(Default)]
+pub struct InterPodAntiAffinity;
+
+impl FilterPlugin for InterPodAntiAffinity {
+    fn filter(&self, state: &ClusterState, pod: PodId, node: NodeId, _ctx: &CycleContext) -> bool {
+        let p = state.pod(pod);
+        state.pods_on(node).iter().all(|&q| {
+            let other = state.pod(q);
+            !(p.anti_affine_with(other) || other.anti_affine_with(p))
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "InterPodAntiAffinity"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources};
+
+    #[test]
+    fn blocks_colocation_in_both_directions() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(1, 1), Priority(0))
+                .with_label("app", "x")
+                .with_anti_affinity("app", "x"),
+            Pod::new(1, "b", Resources::new(1, 1), Priority(0)).with_label("app", "x"),
+            Pod::new(2, "c", Resources::new(1, 1), Priority(0)).with_label("app", "y"),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let f = InterPodAntiAffinity;
+        let ctx = CycleContext::default();
+        // b carries the label a excludes — resident's anti-affinity fires
+        assert!(!f.filter(&st, PodId(1), NodeId(0), &ctx));
+        assert!(f.filter(&st, PodId(1), NodeId(1), &ctx));
+        // c's label is not excluded
+        assert!(f.filter(&st, PodId(2), NodeId(0), &ctx));
+    }
+
+    #[test]
+    fn incoming_pods_anti_affinity_fires_too() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(1, 1), Priority(0)).with_label("app", "x"),
+            Pod::new(1, "incoming", Resources::new(1, 1), Priority(0))
+                .with_anti_affinity("app", "x"),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let f = InterPodAntiAffinity;
+        assert!(!f.filter(&st, PodId(1), NodeId(0), &CycleContext::default()));
+    }
+}

@@ -1,9 +1,18 @@
-//! Default scheduler plugins (the paper's deterministic profile).
+//! Default scheduler plugins (the paper's deterministic profile), plus
+//! the constraint filters mirroring the optimiser's constraint modules
+//! (`optimizer::constraints`) — one Filter plugin per module, so the
+//! default scheduler and the CP model agree on single-pod feasibility.
 
+pub mod inter_pod_anti_affinity;
 pub mod least_allocated;
 pub mod node_resources_fit;
 pub mod priority_sort;
+pub mod taint_toleration;
+pub mod topology_spread;
 
+pub use inter_pod_anti_affinity::InterPodAntiAffinity;
 pub use least_allocated::LeastAllocated;
 pub use node_resources_fit::NodeResourcesFit;
 pub use priority_sort::PrioritySort;
+pub use taint_toleration::TaintToleration;
+pub use topology_spread::TopologySpread;

@@ -1,6 +1,10 @@
-//! `NodeResourcesFit` — the default resource-feasibility Filter plugin,
-//! plus node-selector matching (labels are the paper's future-work
-//! extension; empty selectors make it a no-op for paper workloads).
+//! `NodeResourcesFit` — the default resource-feasibility Filter plugin:
+//! CPU/RAM *and* extended (named) resources, plus node-selector matching
+//! (labels are the paper's future-work extension; empty selectors and
+//! extended requests make both checks no-ops for paper workloads). It
+//! mirrors the [`NodeCapacity`](crate::optimizer::constraints::NodeCapacity)
+//! and [`NodeSelector`](crate::optimizer::constraints::NodeSelector)
+//! constraint modules.
 
 use crate::cluster::{ClusterState, NodeId, PodId};
 use crate::scheduler::framework::{CycleContext, FilterPlugin};
@@ -13,6 +17,7 @@ impl FilterPlugin for NodeResourcesFit {
         let p = state.pod(pod);
         state.node_ready(node)
             && p.request.fits_in(&state.free(node))
+            && state.extended_fits(pod, node)
             && p.selector_matches(state.node(node))
     }
 
@@ -41,6 +46,23 @@ mod tests {
         st.bind(PodId(0), NodeId(0)).unwrap();
         // node 0 now has 100 cpu free: pod of 900 no longer fits
         assert!(!f.filter(&st, PodId(0), NodeId(0), &ctx) || st.free(NodeId(0)).cpu >= 900);
+    }
+
+    #[test]
+    fn filters_by_extended_resources() {
+        let mut nodes = identical_nodes(2, Resources::new(1000, 1000));
+        nodes[1] = nodes[1].clone().with_extended("gpu", 1);
+        let pods = vec![
+            Pod::new(0, "gpu-1", Resources::new(1, 1), Priority(0)).with_extended("gpu", 1),
+            Pod::new(1, "gpu-2", Resources::new(1, 1), Priority(0)).with_extended("gpu", 1),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        let f = NodeResourcesFit;
+        let ctx = CycleContext::default();
+        assert!(!f.filter(&st, PodId(0), NodeId(0), &ctx)); // no gpu at all
+        assert!(f.filter(&st, PodId(0), NodeId(1), &ctx));
+        st.bind(PodId(0), NodeId(1)).unwrap();
+        assert!(!f.filter(&st, PodId(1), NodeId(1), &ctx)); // gpu exhausted
     }
 
     #[test]

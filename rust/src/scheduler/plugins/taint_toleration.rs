@@ -1,0 +1,45 @@
+//! `TaintToleration` — Filter plugin mirroring the
+//! [`TaintsTolerations`](crate::optimizer::constraints::TaintsTolerations)
+//! constraint module: a node with an untolerated `NoSchedule` taint is
+//! infeasible for the pod. Taint-free clusters make it a no-op.
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::scheduler::framework::{CycleContext, FilterPlugin};
+
+#[derive(Default)]
+pub struct TaintToleration;
+
+impl FilterPlugin for TaintToleration {
+    fn filter(&self, state: &ClusterState, pod: PodId, node: NodeId, _ctx: &CycleContext) -> bool {
+        state.pod(pod).tolerates(state.node(node))
+    }
+
+    fn name(&self) -> &'static str {
+        "TaintToleration"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Resources, Taint, Toleration};
+
+    #[test]
+    fn untolerated_taint_filters_node() {
+        let mut nodes = identical_nodes(2, Resources::new(1000, 1000));
+        nodes[0] = nodes[0]
+            .clone()
+            .with_taint(Taint::no_schedule("dedicated", "batch"));
+        let pods = vec![
+            Pod::new(0, "plain", Resources::new(1, 1), Priority(0)),
+            Pod::new(1, "tolerant", Resources::new(1, 1), Priority(0))
+                .with_toleration(Toleration::equal("dedicated", "batch")),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let f = TaintToleration;
+        let ctx = CycleContext::default();
+        assert!(!f.filter(&st, PodId(0), NodeId(0), &ctx));
+        assert!(f.filter(&st, PodId(0), NodeId(1), &ctx));
+        assert!(f.filter(&st, PodId(1), NodeId(0), &ctx));
+    }
+}

@@ -37,6 +37,6 @@ pub mod propagate;
 pub mod search;
 pub mod solution;
 
-pub use model::{CmpOp, LinearExpr, Model, VarId};
+pub use model::{CmpOp, LinearExpr, Model, ResourceClass, VarId};
 pub use search::{solve_max, SolverConfig};
 pub use solution::{SearchStats, SolveStatus, Solution};

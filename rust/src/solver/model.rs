@@ -87,6 +87,18 @@ impl LinearConstraint {
     }
 }
 
+/// Structure metadata for one *resource dimension*: the `≤`-constraint
+/// indices that together cover it across all nodes, plus a human-readable
+/// dimension name ("cpu", "ram", "gpu", …). The name is metadata only —
+/// it surfaces in debug output and lets constraint modules declare
+/// arbitrarily many named capacity dimensions — while the search engine
+/// keys purely on the constraint indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResourceClass {
+    pub name: String,
+    pub cons: Vec<u32>,
+}
+
 /// The model: a bag of variables, constraints, and optional hints.
 /// Mirrors CP-SAT's `CpModel`: grow-only; re-solve after mutation.
 #[derive(Clone, Debug, Default)]
@@ -96,13 +108,13 @@ pub struct Model {
     /// Warm-start hint per variable (CP-SAT `AddHint`). Hinted values
     /// steer value ordering; they are never assumed valid.
     pub hints: Vec<Option<bool>>,
-    /// Optional structure metadata: groups of `≤`-constraint indices that
-    /// partition one *resource dimension* (e.g. all nodes' CPU
-    /// constraints). The search uses them for an aggregate fractional
+    /// Optional structure metadata: named groups of `≤`-constraint
+    /// indices that partition one *resource dimension* (e.g. all nodes'
+    /// CPU constraints). The search uses them for an aggregate fractional
     /// capacity bound — the counterpart of CP-SAT's knowledge that its
     /// knapsack constraints share items. Purely an optimisation: solvers
     /// ignore unknown classes, correctness never depends on them.
-    pub resource_classes: Vec<Vec<u32>>,
+    pub resource_classes: Vec<ResourceClass>,
 }
 
 impl Model {
@@ -145,11 +157,23 @@ impl Model {
         self.add_constraint(expr, CmpOp::Eq, rhs);
     }
 
-    /// Declare that the given `≤` constraints together cover one resource
-    /// dimension (see `resource_classes`).
+    /// Declare that the given `≤` constraints together cover one
+    /// (anonymous) resource dimension (see `resource_classes`).
     pub fn add_resource_class(&mut self, cons_indices: impl IntoIterator<Item = usize>) {
-        self.resource_classes
-            .push(cons_indices.into_iter().map(|i| i as u32).collect());
+        self.add_named_resource_class("", cons_indices);
+    }
+
+    /// Declare a *named* resource dimension ("cpu", "gpu", …) covered by
+    /// the given `≤` constraints.
+    pub fn add_named_resource_class(
+        &mut self,
+        name: impl Into<String>,
+        cons_indices: impl IntoIterator<Item = usize>,
+    ) {
+        self.resource_classes.push(ResourceClass {
+            name: name.into(),
+            cons: cons_indices.into_iter().map(|i| i as u32).collect(),
+        });
     }
 
     /// Index the next constraint added will get.

@@ -275,7 +275,7 @@ impl<'a> Searcher<'a> {
                 let nc = model.constraints.len();
                 let mut class_of = vec![u32::MAX; nc];
                 for (k, class) in model.resource_classes.iter().enumerate() {
-                    for &ci in class {
+                    for &ci in &class.cons {
                         class_of[ci as usize] = k as u32;
                     }
                 }
@@ -299,7 +299,7 @@ impl<'a> Searcher<'a> {
                     let mut ds = std::mem::take(&mut demands[k]);
                     ds.sort_unstable();
                     cap_classes.push(CapClass {
-                        cons: class.clone(),
+                        cons: class.cons.clone(),
                         demands: ds,
                     });
                 }

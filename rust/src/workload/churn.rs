@@ -16,6 +16,7 @@ use crate::cluster::{Node, Priority, ReplicaSet, Resources};
 use crate::util::rng::Rng;
 
 use super::generator::{GenParams, Instance};
+use super::scenarios::ConstraintProfile;
 
 /// Parameters of a churn trace (one cell of a future churn grid).
 #[derive(Clone, Copy, Debug)]
@@ -116,16 +117,32 @@ impl ChurnTrace {
     }
 }
 
-/// Seeded generator: `(params, seed) -> ChurnTrace`, deterministically.
+/// Seeded generator: `(params, seed, profile) -> ChurnTrace`,
+/// deterministically. The constraint profile decorates the initial
+/// instance (nodes included) and every ReplicaSet the operation stream
+/// deploys; joined nodes arrive undecorated (a fresh node has no taints
+/// or device plugins yet). [`ConstraintProfile::None`] — the default —
+/// consumes no extra randomness, so existing traces replay bit-for-bit.
 #[derive(Clone, Copy, Debug)]
 pub struct ChurnTraceGenerator {
     pub params: ChurnParams,
     pub seed: u64,
+    pub profile: ConstraintProfile,
 }
 
 impl ChurnTraceGenerator {
     pub fn new(params: ChurnParams, seed: u64) -> Self {
-        ChurnTraceGenerator { params, seed }
+        ChurnTraceGenerator {
+            params,
+            seed,
+            profile: ConstraintProfile::None,
+        }
+    }
+
+    /// Select the constraint scenario family for this trace.
+    pub fn with_profile(mut self, profile: ConstraintProfile) -> Self {
+        self.profile = profile;
+        self
     }
 
     pub fn generate(&self) -> ChurnTrace {
@@ -134,7 +151,7 @@ impl ChurnTraceGenerator {
 
         // Initial cluster + workload from the paper's generator, deployed
         // as t = 0 operations so every pod flows through the same path.
-        let inst = Instance::generate(params.base, rng.next_u64());
+        let inst = Instance::generate_constrained(params.base, rng.next_u64(), self.profile);
         let mut ops: Vec<(u64, TraceOp)> = Vec::new();
         for rs in &inst.replicasets {
             let lifetimes = sample_lifetimes(&mut rng, rs.replicas, params.mean_lifetime_ms);
@@ -204,6 +221,7 @@ impl ChurnTraceGenerator {
                 let req = Resources::new(rng.range_i64(100, 1000), rng.range_i64(100, 1000));
                 let priority = Priority(rng.below(params.base.priority_tiers as u64) as u32);
                 let rs = ReplicaSet::new(next_rs, format!("rs-{next_rs:03}"), replicas, req, priority);
+                let rs = self.profile.decorate_replicaset(rs, &mut rng);
                 live_rs.push(next_rs);
                 next_rs += 1;
                 let lifetimes = sample_lifetimes(&mut rng, replicas, params.mean_lifetime_ms);

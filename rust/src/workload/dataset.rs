@@ -13,11 +13,21 @@ use crate::cluster::{identical_nodes, Pod, Priority, ReplicaSet, Resources};
 use crate::util::json::{parse, Json};
 
 use super::generator::{GenParams, Instance};
+use super::scenarios::ConstraintProfile;
 
-/// Serialize one instance.
+/// Serialize one instance. Constraint decorations are recorded by
+/// *profile name* — the generator is deterministic per `(params, seed,
+/// profile)`, so the loader re-derives them exactly (see
+/// [`instance_from_json`]).
 pub fn instance_to_json(inst: &Instance) -> Json {
     let mut j = Json::obj();
+    // `seed` (numeric) is kept for inspection; `seed_hex` is the
+    // authoritative lossless form (JSON numbers are f64 — a full 64-bit
+    // seed would round past 2^53, and the constrained-profile loader
+    // regenerates from the seed).
     j.set("seed", inst.seed)
+        .set("seed_hex", format!("{:016x}", inst.seed))
+        .set("constraints", inst.profile.label())
         .set("nodes", inst.params.nodes)
         .set("pods_per_node", inst.params.pods_per_node)
         .set("priority_tiers", inst.params.priority_tiers)
@@ -41,7 +51,11 @@ pub fn instance_to_json(inst: &Instance) -> Json {
 }
 
 /// Rebuild an instance from JSON (pods re-expanded from ReplicaSets, so
-/// arrival order and naming are preserved exactly).
+/// arrival order and naming are preserved exactly). Instances recorded
+/// with a constraint profile are re-derived through the deterministic
+/// generator — `(params, seed, profile)` reproduces decorations
+/// byte-for-byte; a missing `constraints` field means an (older)
+/// unconstrained dataset.
 pub fn instance_from_json(j: &Json) -> Result<Instance> {
     let get_i = |k: &str| -> Result<i64> {
         j.get(k)
@@ -57,6 +71,19 @@ pub fn instance_from_json(j: &Json) -> Result<Instance> {
             .and_then(Json::as_f64)
             .context("missing usage")?,
     };
+    let profile = match j.get("constraints").and_then(Json::as_str) {
+        None => ConstraintProfile::None,
+        Some(s) => ConstraintProfile::parse(s)
+            .with_context(|| format!("unknown constraints profile {s:?}"))?,
+    };
+    let seed = match j.get("seed_hex").and_then(Json::as_str) {
+        Some(h) => u64::from_str_radix(h, 16)
+            .with_context(|| format!("bad seed_hex {h:?}"))?,
+        None => get_i("seed")? as u64,
+    };
+    if profile != ConstraintProfile::None {
+        return Ok(Instance::generate_constrained(params, seed, profile));
+    }
     let cap = Resources::new(get_i("node_cpu")?, get_i("node_ram")?);
     let nodes = identical_nodes(params.nodes, cap);
 
@@ -88,7 +115,8 @@ pub fn instance_from_json(j: &Json) -> Result<Instance> {
 
     Ok(Instance {
         params,
-        seed: get_i("seed")? as u64,
+        seed,
+        profile,
         replicasets,
         pods,
         nodes,
@@ -138,6 +166,35 @@ mod tests {
             assert_eq!(a.request, b.request);
             assert_eq!(a.priority, b.priority);
             assert_eq!(a.owner, b.owner);
+        }
+    }
+
+    #[test]
+    fn constrained_roundtrip_rederives_decorations() {
+        let params = GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 0.95,
+        };
+        // a full-width 64-bit seed: must survive the f64 JSON number
+        // representation via seed_hex
+        let inst =
+            Instance::generate_constrained(params, 0xDEAD_BEEF_CAFE_F00D, ConstraintProfile::Mixed);
+        let back = instance_from_json(&instance_to_json(&inst)).unwrap();
+        assert_eq!(back.seed, inst.seed);
+        assert_eq!(back.profile, ConstraintProfile::Mixed);
+        assert_eq!(back.pods.len(), inst.pods.len());
+        for (a, b) in inst.pods.iter().zip(&back.pods) {
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.tolerations, b.tolerations);
+            assert_eq!(a.anti_affinity, b.anti_affinity);
+            assert_eq!(a.spread_max_skew, b.spread_max_skew);
+            assert_eq!(a.extended, b.extended);
+        }
+        for (a, b) in inst.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.taints, b.taints);
+            assert_eq!(a.extended, b.extended);
         }
     }
 

@@ -1,8 +1,11 @@
-//! The paper's random instance generator.
+//! The paper's random instance generator, extended with constraint-rich
+//! scenario families (see [`ConstraintProfile`]).
 
 use crate::cluster::{identical_nodes, Node, Pod, Priority, ReplicaSet, Resources};
 use crate::simulator::KwokSimulator;
 use crate::util::rng::Rng;
+
+use super::scenarios::ConstraintProfile;
 
 /// Generation parameters (one cell of the paper's evaluation grid).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,6 +47,8 @@ impl GenParams {
 pub struct Instance {
     pub params: GenParams,
     pub seed: u64,
+    /// Constraint scenario family this instance was decorated with.
+    pub profile: ConstraintProfile,
     pub replicasets: Vec<ReplicaSet>,
     pub pods: Vec<Pod>,
     pub nodes: Vec<Node>,
@@ -57,6 +62,20 @@ impl Instance {
     /// then identical node capacities chosen so total pod demand equals
     /// `usage` × cluster capacity.
     pub fn generate(params: GenParams, seed: u64) -> Instance {
+        Instance::generate_constrained(params, seed, ConstraintProfile::None)
+    }
+
+    /// Like [`Instance::generate`], additionally decorating ReplicaSets
+    /// and nodes with a constraint scenario family. The base
+    /// distribution (replica counts, requests, priorities, node
+    /// capacities) is untouched, and `ConstraintProfile::None` consumes
+    /// no extra randomness — so unconstrained generation is
+    /// byte-identical to the paper's generator.
+    pub fn generate_constrained(
+        params: GenParams,
+        seed: u64,
+        profile: ConstraintProfile,
+    ) -> Instance {
         let mut rng = Rng::new(seed);
         let budget = params.pod_count();
         let mut replicasets = Vec::new();
@@ -70,6 +89,7 @@ impl Instance {
             let req = Resources::new(rng.range_i64(100, 1000), rng.range_i64(100, 1000));
             let priority = Priority(rng.below(params.priority_tiers as u64) as u32);
             let rs = ReplicaSet::new(rs_id, format!("rs-{rs_id:03}"), replicas, req, priority);
+            let rs = profile.decorate_replicaset(rs, &mut rng);
             pods.extend(rs.expand(&mut next_pod));
             replicasets.push(rs);
             rs_id += 1;
@@ -81,11 +101,13 @@ impl Instance {
             ((total.cpu as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
             ((total.ram as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
         );
-        let nodes = identical_nodes(params.nodes, cap);
+        let mut nodes = identical_nodes(params.nodes, cap);
+        profile.decorate_nodes(&mut nodes, &mut rng);
 
         Instance {
             params,
             seed,
+            profile,
             replicasets,
             pods,
             nodes,
@@ -104,13 +126,32 @@ impl Instance {
         base_seed: u64,
         max_attempts: usize,
     ) -> Vec<Instance> {
+        Instance::generate_challenging_constrained(
+            params,
+            count,
+            base_seed,
+            max_attempts,
+            ConstraintProfile::None,
+        )
+    }
+
+    /// [`Instance::generate_challenging`] over a constraint scenario
+    /// family: kept instances are those the (constraint-aware) default
+    /// scheduler fails to fully place.
+    pub fn generate_challenging_constrained(
+        params: GenParams,
+        count: usize,
+        base_seed: u64,
+        max_attempts: usize,
+        profile: ConstraintProfile,
+    ) -> Vec<Instance> {
         let mut out = Vec::with_capacity(count);
         let mut seed_rng = Rng::new(base_seed);
         for _ in 0..max_attempts {
             if out.len() >= count {
                 break;
             }
-            let inst = Instance::generate(params, seed_rng.next_u64());
+            let inst = Instance::generate_constrained(params, seed_rng.next_u64(), profile);
             let mut sim = KwokSimulator::new(params.p_max());
             let (_, res) = sim.run(inst.nodes.clone(), inst.pods.clone());
             if !res.all_placed {
@@ -221,6 +262,31 @@ mod tests {
                 assert_eq!(m.request, rs.template_request);
                 assert_eq!(m.priority, rs.priority);
             }
+        }
+    }
+
+    #[test]
+    fn constrained_generation_keeps_base_distribution() {
+        // Same seed, different profiles: identical replica counts,
+        // requests, priorities, and node capacities — only decorations
+        // differ.
+        let plain = Instance::generate(params(), 11);
+        let mixed = Instance::generate_constrained(params(), 11, ConstraintProfile::Mixed);
+        assert_eq!(plain.pods.len(), mixed.pods.len());
+        assert_eq!(plain.nodes[0].capacity, mixed.nodes[0].capacity);
+        for (a, b) in plain.replicasets.iter().zip(&mixed.replicasets) {
+            assert_eq!(a.replicas, b.replicas);
+            assert_eq!(a.template_request, b.template_request);
+            assert_eq!(a.priority, b.priority);
+        }
+        assert_eq!(mixed.profile, ConstraintProfile::Mixed);
+        // and constrained generation is deterministic per seed
+        let again = Instance::generate_constrained(params(), 11, ConstraintProfile::Mixed);
+        for (a, b) in mixed.pods.iter().zip(&again.pods) {
+            assert_eq!(a.tolerations, b.tolerations);
+            assert_eq!(a.anti_affinity, b.anti_affinity);
+            assert_eq!(a.spread_max_skew, b.spread_max_skew);
+            assert_eq!(a.extended, b.extended);
         }
     }
 

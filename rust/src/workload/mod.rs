@@ -11,6 +11,8 @@
 pub mod churn;
 pub mod dataset;
 pub mod generator;
+pub mod scenarios;
 
 pub use churn::{ChurnParams, ChurnTrace, ChurnTraceGenerator, TraceOp};
 pub use generator::{GenParams, Instance};
+pub use scenarios::ConstraintProfile;

@@ -1,0 +1,168 @@
+//! Constraint-rich scenario families for the workload generator.
+//!
+//! The paper's evaluation grid varies cluster size, pods-per-node,
+//! priority tiers, and usage; a [`ConstraintProfile`] adds a fifth axis:
+//! which scheduling-constraint family the generated cell exercises.
+//! Profiles decorate the paper's base distribution — they never change
+//! how many pods/ReplicaSets are drawn or their resource requests, and
+//! [`ConstraintProfile::None`] draws nothing at all, so unconstrained
+//! generation stays byte-identical to the seed generator.
+
+use crate::cluster::{Node, ReplicaSet, Taint, Toleration};
+use crate::util::rng::Rng;
+
+/// Which constraint family a generated scenario cell exercises.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ConstraintProfile {
+    /// The paper's plain resource-packing workload.
+    #[default]
+    None,
+    /// ~¼ of nodes tainted `dedicated=batch:NoSchedule`; ~½ of
+    /// ReplicaSets tolerate it.
+    Taints,
+    /// ~⅓ of ReplicaSets require their replicas on distinct nodes
+    /// (self anti-affinity via an `app=<rs>` label).
+    AntiAffinity,
+    /// ~½ of ReplicaSets declare a max node skew of 1.
+    Spread,
+    /// ~½ of nodes offer `gpu` capacity; ~¼ of ReplicaSets request it.
+    Extended,
+    /// All of the above, layered.
+    Mixed,
+}
+
+impl ConstraintProfile {
+    /// Parse a `--constraints` CLI value.
+    pub fn parse(s: &str) -> Option<ConstraintProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(ConstraintProfile::None),
+            "taints" => Some(ConstraintProfile::Taints),
+            "anti-affinity" | "antiaffinity" => Some(ConstraintProfile::AntiAffinity),
+            "spread" => Some(ConstraintProfile::Spread),
+            "extended" | "gpu" => Some(ConstraintProfile::Extended),
+            "mixed" => Some(ConstraintProfile::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ConstraintProfile::None => "none",
+            ConstraintProfile::Taints => "taints",
+            ConstraintProfile::AntiAffinity => "anti-affinity",
+            ConstraintProfile::Spread => "spread",
+            ConstraintProfile::Extended => "extended",
+            ConstraintProfile::Mixed => "mixed",
+        }
+    }
+
+    /// Decorate one freshly drawn ReplicaSet. Draws from `rng` only for
+    /// the families this profile enables, keeping `None` stream-neutral.
+    pub fn decorate_replicaset(&self, mut rs: ReplicaSet, rng: &mut Rng) -> ReplicaSet {
+        let (taints, anti, spread, extended) = self.axes();
+        if taints && rng.chance(0.5) {
+            rs = rs.with_toleration(Toleration::equal("dedicated", "batch"));
+        }
+        if anti && rng.chance(1.0 / 3.0) {
+            let name = rs.name.clone();
+            rs = rs.with_label("app", &name).with_anti_affinity("app", &name);
+        }
+        if spread && rng.chance(0.5) {
+            rs = rs.with_spread(1);
+        }
+        if extended && rng.chance(0.25) {
+            let amount = rng.range_i64(1, 2);
+            rs = rs.with_extended("gpu", amount);
+        }
+        rs
+    }
+
+    /// Decorate the generated node pool (taints / extended capacities).
+    pub fn decorate_nodes(&self, nodes: &mut [Node], rng: &mut Rng) {
+        let (taints, _, _, extended) = self.axes();
+        if taints {
+            for n in nodes.iter_mut() {
+                if rng.chance(0.25) {
+                    n.taints.push(Taint::no_schedule("dedicated", "batch"));
+                }
+            }
+        }
+        if extended {
+            for n in nodes.iter_mut() {
+                if rng.chance(0.5) {
+                    n.extended.push(("gpu".to_string(), 4));
+                }
+            }
+        }
+    }
+
+    /// Which decoration axes this profile enables:
+    /// (taints, anti-affinity, spread, extended).
+    fn axes(&self) -> (bool, bool, bool, bool) {
+        match self {
+            ConstraintProfile::None => (false, false, false, false),
+            ConstraintProfile::Taints => (true, false, false, false),
+            ConstraintProfile::AntiAffinity => (false, true, false, false),
+            ConstraintProfile::Spread => (false, false, true, false),
+            ConstraintProfile::Extended => (false, false, false, true),
+            ConstraintProfile::Mixed => (true, true, true, true),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Priority, Resources};
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for p in [
+            ConstraintProfile::None,
+            ConstraintProfile::Taints,
+            ConstraintProfile::AntiAffinity,
+            ConstraintProfile::Spread,
+            ConstraintProfile::Extended,
+            ConstraintProfile::Mixed,
+        ] {
+            assert_eq!(ConstraintProfile::parse(p.label()), Some(p));
+        }
+        assert_eq!(ConstraintProfile::parse("bogus"), None);
+    }
+
+    #[test]
+    fn none_profile_draws_nothing() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let rs = ReplicaSet::new(0, "rs-000", 2, Resources::new(100, 100), Priority(0));
+        let out = ConstraintProfile::None.decorate_replicaset(rs, &mut a);
+        assert!(out.tolerations.is_empty() && out.anti_affinity.is_empty());
+        assert!(out.spread_max_skew.is_none() && out.extended.is_empty());
+        let mut nodes = identical_nodes(4, Resources::new(100, 100));
+        ConstraintProfile::None.decorate_nodes(&mut nodes, &mut a);
+        // rng untouched: both streams still aligned
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn mixed_profile_decorates_eventually() {
+        let mut rng = Rng::new(3);
+        let mut any_tol = false;
+        let mut any_anti = false;
+        let mut any_spread = false;
+        let mut any_gpu = false;
+        for i in 0..64 {
+            let rs = ReplicaSet::new(i, format!("rs-{i:03}"), 2, Resources::new(100, 100), Priority(0));
+            let rs = ConstraintProfile::Mixed.decorate_replicaset(rs, &mut rng);
+            any_tol |= !rs.tolerations.is_empty();
+            any_anti |= !rs.anti_affinity.is_empty();
+            any_spread |= rs.spread_max_skew.is_some();
+            any_gpu |= !rs.extended.is_empty();
+        }
+        assert!(any_tol && any_anti && any_spread && any_gpu);
+        let mut nodes = identical_nodes(32, Resources::new(100, 100));
+        ConstraintProfile::Mixed.decorate_nodes(&mut nodes, &mut rng);
+        assert!(nodes.iter().any(|n| !n.taints.is_empty()));
+        assert!(nodes.iter().any(|n| !n.extended.is_empty()));
+    }
+}
