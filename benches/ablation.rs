@@ -71,6 +71,13 @@ fn main() {
             },
         ),
         (
+            "easiest-first",
+            SolverConfig {
+                branch_easiest_first: true,
+                ..Default::default()
+            },
+        ),
+        (
             "no-lns",
             SolverConfig {
                 use_lns: false,

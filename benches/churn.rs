@@ -7,6 +7,7 @@
 
 use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy, SweepConfig};
 use kube_packd::optimizer::algorithm::OptimizerConfig;
+use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::util::bench::{black_box, Bencher};
 use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
 use kube_packd::workload::GenParams;
@@ -47,6 +48,7 @@ fn main() {
             eviction_budget: 8,
         },
         fallback_timeout: std::time::Duration::from_millis(500),
+        fallback_portfolio: PortfolioConfig::default(),
     };
     let heavy = Bencher::heavy();
     let events = run_churn(&trace, &cfg).events_processed;

@@ -11,6 +11,8 @@ use crate::metrics::categories::{classify, Outcome};
 use crate::metrics::utilization_delta;
 use crate::optimizer::algorithm::{optimize, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
+use crate::optimizer::TierReport;
+use crate::portfolio::{PortfolioConfig, PortfolioStats};
 use crate::simulator::KwokSimulator;
 use crate::solver::SolverConfig;
 use crate::util::timer::Stopwatch;
@@ -34,10 +36,27 @@ pub struct InstanceRun {
     pub opt_placed: Vec<usize>,
     /// Pods whose node changed to realise the improvement.
     pub disruptions: usize,
+    /// Per-tier solve reports — carry the per-tier optimality
+    /// certificate (status + final bound). Empty when the solver was not
+    /// invoked or failed outright.
+    pub tiers: Vec<TierReport>,
+    /// Portfolio-layer counters of the run.
+    pub portfolio: PortfolioStats,
 }
 
-/// Run one instance at one timeout.
+/// Run one instance at one timeout with the single-threaded solver
+/// (unless `KUBE_PACKD_THREADS` raises the portfolio default).
 pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> InstanceRun {
+    run_instance_with(inst, timeout_s, solver, &PortfolioConfig::default())
+}
+
+/// Run one instance at one timeout with explicit portfolio knobs.
+pub fn run_instance_with(
+    inst: &Instance,
+    timeout_s: f64,
+    solver: &SolverConfig,
+    portfolio: &PortfolioConfig,
+) -> InstanceRun {
     let p_max = inst.params.p_max();
 
     // 1. KWOK baseline (deterministic profile).
@@ -57,6 +76,8 @@ pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> I
             kwok_placed: base.placed_per_priority.clone(),
             opt_placed: base.placed_per_priority,
             disruptions: 0,
+            tiers: Vec::new(),
+            portfolio: PortfolioStats::default(),
         };
     }
 
@@ -65,6 +86,7 @@ pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> I
         total_timeout: std::time::Duration::from_secs_f64(timeout_s),
         alpha: 0.8,
         solver: solver.clone(),
+        portfolio: portfolio.clone(),
         ..Default::default()
     };
     let sw = Stopwatch::start();
@@ -102,6 +124,11 @@ pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> I
         }
     };
 
+    let (tiers, pstats) = match &result {
+        Some(res) => (res.tiers.clone(), res.portfolio.clone()),
+        None => (Vec::new(), PortfolioStats::default()),
+    };
+
     InstanceRun {
         outcome,
         solver_duration_s,
@@ -110,6 +137,8 @@ pub fn run_instance(inst: &Instance, timeout_s: f64, solver: &SolverConfig) -> I
         kwok_placed: base.placed_per_priority,
         opt_placed,
         disruptions,
+        tiers,
+        portfolio: pstats,
     }
 }
 
@@ -141,6 +170,35 @@ mod tests {
                 assert!(run.delta_cpu.abs() <= 100.0 && run.delta_mem.abs() <= 100.0);
                 assert!(run.disruptions > 0 || run.kwok_placed.iter().sum::<usize>() == 0 ||
                         run.opt_placed.iter().sum::<usize>() > run.kwok_placed.iter().sum::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn tiers_surface_certificates_through_the_harness() {
+        let params = GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 1.0,
+        };
+        let insts = Instance::generate_challenging(params, 1, 99, 300);
+        if let Some(inst) = insts.first() {
+            let run = run_instance_with(
+                inst,
+                2.0,
+                &SolverConfig::default(),
+                &PortfolioConfig::with_threads(2),
+            );
+            if run.outcome != Outcome::Failure {
+                assert_eq!(run.tiers.len(), 2, "one report per priority tier");
+                for t in &run.tiers {
+                    assert!(
+                        t.phase1_bound >= t.phase1_placed,
+                        "certificate bound must be admissible"
+                    );
+                }
+                assert!(run.portfolio.solves > 0, "threads=2 must use the portfolio");
             }
         }
     }

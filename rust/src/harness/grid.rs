@@ -1,11 +1,12 @@
 //! Parameter-grid sweeps with per-cell tallies.
 
 use crate::metrics::categories::Outcome;
+use crate::portfolio::PortfolioConfig;
 use crate::solver::SolverConfig;
 use crate::util::rng::Rng;
 use crate::workload::{GenParams, Instance};
 
-use super::experiment::{run_instance, InstanceRun};
+use super::experiment::{run_instance_with, InstanceRun};
 
 /// Sweep configuration. Defaults mirror the paper's grid; the driver
 /// binaries scale `instances` and `timeouts` to this testbed (see
@@ -22,6 +23,9 @@ pub struct GridConfig {
     pub instances: usize,
     pub seed: u64,
     pub solver: SolverConfig,
+    /// Portfolio knobs for every solve of the sweep (`--threads` on the
+    /// figure CLIs).
+    pub portfolio: PortfolioConfig,
     /// Cap on generation attempts per cell (low-usage cells may not
     /// yield `instances` failures).
     pub max_gen_attempts: usize,
@@ -40,6 +44,7 @@ impl Default for GridConfig {
             instances: 12,
             seed: 0xC0FFEE,
             solver: SolverConfig::default(),
+            portfolio: PortfolioConfig::default(),
             max_gen_attempts: 400,
             verbose: true,
         }
@@ -148,7 +153,8 @@ pub fn run_grid(cfg: &GridConfig) -> Vec<CellResult> {
                         let key = CellKey { params, timeout_s };
                         let mut cell = CellResult::new(key);
                         for inst in &insts {
-                            let run = run_instance(inst, timeout_s, &cfg.solver);
+                            let run =
+                                run_instance_with(inst, timeout_s, &cfg.solver, &cfg.portfolio);
                             cell.record(&run);
                         }
                         out.push(cell);

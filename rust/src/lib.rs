@@ -24,6 +24,10 @@
 //! * [`solver`]    — from-scratch CP solver (CP-SAT substitute): binary
 //!                   variables, linear constraints, branch-and-bound with
 //!                   propagation, fractional bounds, hints, timeouts.
+//! * [`portfolio`] — parallel portfolio layer between the optimiser and
+//!                   the solver core: constraint-graph decomposition
+//!                   into independent components plus a deterministic
+//!                   multi-threaded strategy race per component.
 //! * [`optimizer`] — the paper's contribution: Algorithm 1 per-priority
 //!                   optimisation loop + fallback scheduler plugin with
 //!                   cross-node pre-emption planning.
@@ -41,6 +45,7 @@ pub mod harness;
 pub mod lifecycle;
 pub mod metrics;
 pub mod optimizer;
+pub mod portfolio;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulator;

@@ -26,6 +26,7 @@ use crate::cluster::{ClusterState, Event, NodeId, PodId, ReplicaSet, Resources};
 use crate::metrics::{pending_per_priority, TimeSeries, UtilSample};
 use crate::optimizer::algorithm::OptimizerConfig;
 use crate::optimizer::OptimizingScheduler;
+use crate::portfolio::PortfolioConfig;
 use crate::scheduler::DefaultScheduler;
 use crate::workload::churn::{ChurnTrace, TraceOp};
 
@@ -65,6 +66,9 @@ pub struct ChurnConfig {
     pub sweep: SweepConfig,
     /// `T_total` handed to each fallback optimisation.
     pub fallback_timeout: Duration,
+    /// Portfolio knobs for the fallback optimiser (sweeps carry their
+    /// own inside [`SweepConfig`]'s `optimizer`).
+    pub fallback_portfolio: PortfolioConfig,
 }
 
 impl ChurnConfig {
@@ -74,6 +78,7 @@ impl ChurnConfig {
             sweep_every_ms: 5_000,
             sweep: SweepConfig::default(),
             fallback_timeout: Duration::from_secs(2),
+            fallback_portfolio: PortfolioConfig::default(),
         }
     }
 }
@@ -408,6 +413,7 @@ impl ChurnRunner {
                     self.p_max,
                     OptimizerConfig {
                         total_timeout: self.cfg.fallback_timeout,
+                        portfolio: self.cfg.fallback_portfolio.clone(),
                         ..Default::default()
                     },
                 );

@@ -17,11 +17,14 @@ use std::time::Duration;
 use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
 use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
+use kube_packd::harness::InstanceRun;
 use kube_packd::lifecycle::{compare_policies, ChurnConfig, Policy, SweepConfig};
 use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
-use kube_packd::solver::SolverConfig;
+use kube_packd::solver::{SolveStatus, SolverConfig};
 use kube_packd::util::cli::Args;
+use kube_packd::util::json::Json;
 use kube_packd::workload::{
     dataset, ChurnParams, ChurnTraceGenerator, ConstraintProfile, GenParams, Instance,
 };
@@ -66,19 +69,27 @@ COMMANDS
       --constraints none|taints|anti-affinity|spread|extended|mixed
   solve                    run the optimiser over a dataset file
                            (constraint profiles travel with the dataset)
-      --dataset FILE --timeout SECS
+      --dataset FILE --timeout SECS --threads N --json FILE
+                           (--json: per-tier optimality certificates —
+                           proven-optimal vs anytime-best + final bound —
+                           and portfolio stats, machine-readable)
   churn                    discrete-event lifecycle simulation; compares
                            default-only vs fallback vs fallback+sweep on
                            one seeded churn trace (deterministic replay)
       --nodes N --ppn N --tiers N --usage F --seed N
       --horizon-ms N --arrival-ms N --lifetime-ms N
-      --sweep-ms N --budget N --timeout SECS --log
+      --sweep-ms N --budget N --timeout SECS --threads N --log
       --constraints none|taints|anti-affinity|spread|extended|mixed
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
+      --threads N
   all                      fig3 + fig4 + table1
-  info                     PJRT platform + artifact status"
+  info                     PJRT platform + artifact status
+
+  --threads N (default 1, or KUBE_PACKD_THREADS): CP solves run a
+  parallel portfolio — constraint-graph decomposition plus a strategy
+  race per component. 1 = the single-threaded solver, bit for bit."
     );
 }
 
@@ -89,6 +100,12 @@ fn constraints_arg(args: &Args) -> ConstraintProfile {
     ConstraintProfile::parse(v).unwrap_or_else(|| {
         panic!("--constraints wants none|taints|anti-affinity|spread|extended|mixed, got {v:?}")
     })
+}
+
+/// `--threads` with the env-aware portfolio default (`KUBE_PACKD_THREADS`
+/// or 1).
+fn threads_arg(args: &Args) -> usize {
+    args.get_usize("threads", PortfolioConfig::default().threads).max(1)
 }
 
 /// `--usage` accepts a ratio (0.95) or a percentage (95); normalize to
@@ -121,6 +138,7 @@ fn grid_config(args: &Args) -> GridConfig {
         instances: args.get_usize("instances", 12),
         seed: args.get_u64("seed", 0xC0FFEE),
         solver: SolverConfig::default(),
+        portfolio: PortfolioConfig::with_threads(threads_arg(args)),
         max_gen_attempts: args.get_usize("max-gen-attempts", 400),
         verbose: !args.flag("quiet"),
     };
@@ -175,22 +193,113 @@ fn generate(args: &Args) -> anyhow::Result<()> {
 fn solve(args: &Args) -> anyhow::Result<()> {
     let path = args.get_str("dataset", "dataset.json");
     let timeout = args.get_f64("timeout", 1.0);
+    let threads = threads_arg(args);
+    let portfolio = PortfolioConfig::with_threads(threads);
     let insts = dataset::load(path)?;
-    println!("instance       outcome          solver(s)  kwok-placed -> opt-placed   moves");
+    println!(
+        "instance       outcome          solver(s)  kwok-placed -> opt-placed   moves  certificate"
+    );
+    let json_out = args.get("json");
+    let mut rows = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
-        let run = kube_packd::harness::run_instance(inst, timeout, &SolverConfig::default());
+        let run = kube_packd::harness::run_instance_with(
+            inst,
+            timeout,
+            &SolverConfig::default(),
+            &portfolio,
+        );
         println!(
-            "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}",
+            "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}  {}",
             i,
             inst.params.label(),
             run.outcome.label(),
             run.solver_duration_s,
             run.kwok_placed,
             run.opt_placed,
-            run.disruptions
+            run.disruptions,
+            certificate_summary(&run)
         );
+        if json_out.is_some() {
+            rows.push(instance_json(i, inst, &run));
+        }
+    }
+    if let Some(out) = json_out {
+        let mut doc = Json::obj();
+        doc.set("dataset", path)
+            .set("timeout_s", timeout)
+            .set("threads", threads)
+            .set("instances", Json::Arr(rows));
+        std::fs::write(out, doc.to_string_pretty())?;
+        eprintln!("json report written to {out}");
     }
     Ok(())
+}
+
+/// One-line per-tier certificate summary for the solve table: how many
+/// tiers were proven optimal vs anytime-best.
+fn certificate_summary(run: &InstanceRun) -> String {
+    if run.tiers.is_empty() {
+        return "-".to_string();
+    }
+    let proven = run
+        .tiers
+        .iter()
+        .filter(|t| t.phase1_status == SolveStatus::Optimal)
+        .count();
+    format!("{proven}/{} tiers proven", run.tiers.len())
+}
+
+/// Machine-readable record of one instance run, including the paper's
+/// "certified optimal" evidence: per-tier status + final bound.
+fn instance_json(index: usize, inst: &Instance, run: &InstanceRun) -> Json {
+    let mut tiers = Vec::new();
+    for t in &run.tiers {
+        let mut tj = Json::obj();
+        tj.set("priority", t.priority)
+            .set("phase1_status", t.phase1_status.label())
+            .set(
+                "phase1_certificate",
+                if t.phase1_status == SolveStatus::Optimal {
+                    "proven-optimal"
+                } else {
+                    "anytime-best"
+                },
+            )
+            .set("phase1_placed", t.phase1_placed)
+            .set("phase1_bound", t.phase1_bound)
+            .set("phase1_components", t.phase1_components)
+            .set("phase1_components_certified", t.phase1_components_certified)
+            .set("phase2_status", t.phase2_status.label())
+            .set("phase2_metric", t.phase2_metric)
+            .set("phase2_bound", t.phase2_bound);
+        tiers.push(tj);
+    }
+    let mut strategy_wins = Json::obj();
+    for (label, wins) in &run.portfolio.strategy_wins {
+        strategy_wins.set(label, *wins);
+    }
+    let mut pf = Json::obj();
+    pf.set("solves", run.portfolio.solves)
+        .set("legacy_solves", run.portfolio.legacy_solves)
+        .set("components", run.portfolio.components)
+        .set("components_certified", run.portfolio.components_certified)
+        .set("tasks_run", run.portfolio.tasks_run)
+        .set("tasks_cancelled", run.portfolio.tasks_cancelled)
+        .set("whole_model_wins", run.portfolio.whole_model_wins)
+        .set("composite_wins", run.portfolio.composite_wins)
+        .set("strategy_wins", strategy_wins);
+    let mut o = Json::obj();
+    o.set("index", index)
+        .set("params", inst.params.label())
+        .set("constraints", inst.profile.label())
+        .set("outcome", run.outcome.label())
+        .set("solver_duration_s", run.solver_duration_s)
+        .set("kwok_placed", run.kwok_placed.clone())
+        .set("opt_placed", run.opt_placed.clone())
+        .set("disruptions", run.disruptions)
+        .set("tiers", Json::Arr(tiers))
+        .set("portfolio", pf);
+    o
 }
 
 /// Lifecycle churn comparison: three policies over one seeded trace.
@@ -209,6 +318,7 @@ fn churn(args: &Args) -> anyhow::Result<()> {
     };
     let seed = args.get_u64("seed", 42);
     let timeout = args.get_f64("timeout", 1.0);
+    let threads = threads_arg(args);
     let profile = constraints_arg(args);
 
     let trace = ChurnTraceGenerator::new(params, seed)
@@ -218,10 +328,11 @@ fn churn(args: &Args) -> anyhow::Result<()> {
         policy: Policy::FallbackSweep,
         sweep_every_ms: args.get_u64("sweep-ms", 5_000),
         sweep: SweepConfig {
-            optimizer: OptimizerConfig::with_timeout(timeout),
+            optimizer: OptimizerConfig::with_timeout(timeout).with_threads(threads),
             eviction_budget: args.get_usize("budget", 8),
         },
         fallback_timeout: Duration::from_secs_f64(timeout),
+        fallback_portfolio: PortfolioConfig::with_threads(threads),
     };
 
     let results = compare_policies(&trace, &cfg);

@@ -1,0 +1,390 @@
+//! Constraint-graph decomposition: split a model into independent
+//! components solvable in isolation.
+//!
+//! Two variables are *connected* when some constraint mentions both —
+//! in the packing models this means pods sharing a candidate node's
+//! capacity row, an anti-affinity pair, a spread group, or an
+//! accumulated phase-lock row. The connected components of that graph
+//! are fully independent sub-problems: no constraint spans two
+//! components, so any per-component feasible assignments compose into a
+//! whole-model feasible assignment, objectives add, and — crucially —
+//! **per-component optimality certificates compose into a whole-model
+//! certificate** (if each component is solved to its proven optimum, the
+//! merged solution provably maximises the separable objective).
+//!
+//! When does a packing instance actually split? Whenever the candidate
+//! node sets partition: taint/toleration pools, node-selector groups,
+//! drained sections of the cluster. The paper's unconstrained workload
+//! (every pod admissible on every node) stays one component — the
+//! portfolio then degrades gracefully to a pure strategy race. Note the
+//! phase-lock rows Algorithm 1 appends after a tier's first solve span
+//! every eligible pod, so decomposition bites hardest on each tier's
+//! *first* phase-1 solve — exactly the deadline-critical placement
+//! maximisation the paper's headline improvement rates measure.
+//!
+//! Variable-free constraints (`0 op rhs`, e.g. a lock over an empty
+//! metric) belong to no component; they are checked once here and either
+//! hold for every assignment or make the whole model infeasible.
+
+use crate::solver::{CmpOp, LinearExpr, Model, VarId};
+
+/// One independent sub-problem of a decomposed model.
+#[derive(Clone, Debug)]
+pub struct Component {
+    /// Original variable ids owned by this component, ascending.
+    pub vars: Vec<u32>,
+    /// Original constraint indices owned by this component, ascending.
+    pub cons: Vec<u32>,
+    /// Standalone model: variables renumbered densely in ascending
+    /// original order, constraint order preserved, hints and resource
+    /// classes carried over. Identical search behaviour to the same
+    /// variables inside the whole model, minus the other components.
+    pub model: Model,
+    /// The original objective restricted to this component's variables.
+    pub objective: LinearExpr,
+}
+
+/// Result of [`decompose`].
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    /// Components ordered by their smallest original variable id —
+    /// deterministic from the model alone.
+    pub components: Vec<Component>,
+    /// Some variable-free constraint (`0 op rhs`) is violated: the model
+    /// is infeasible before any variable is assigned.
+    pub constant_infeasible: bool,
+}
+
+impl Decomposition {
+    /// Scatter a component's local solution into a whole-model
+    /// assignment vector.
+    pub fn scatter(&self, component: usize, local: &[bool], into: &mut [bool]) {
+        let comp = &self.components[component];
+        debug_assert_eq!(local.len(), comp.vars.len());
+        for (li, &ov) in comp.vars.iter().enumerate() {
+            into[ov as usize] = local[li];
+        }
+    }
+}
+
+/// Union-find over variable indices with path halving and min-root
+/// union (the smaller root wins, keeping roots deterministic).
+struct Dsu {
+    parent: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Dsu {
+        Dsu {
+            parent: (0..n as u32).collect(),
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi as usize] = lo;
+        }
+    }
+}
+
+/// Union every constraint's variables; returns the filled union-find
+/// plus whether some variable-free constraint is violated.
+fn build_dsu(model: &Model) -> (Dsu, bool) {
+    let mut dsu = Dsu::new(model.num_vars());
+    let mut constant_infeasible = false;
+    for c in &model.constraints {
+        match c.expr.terms.first() {
+            None => {
+                let holds = match c.op {
+                    CmpOp::Le => c.rhs >= 0,
+                    CmpOp::Ge => c.rhs <= 0,
+                    CmpOp::Eq => c.rhs == 0,
+                };
+                if !holds {
+                    constant_infeasible = true;
+                }
+            }
+            Some(&(v0, _)) => {
+                for &(v, _) in &c.expr.terms[1..] {
+                    dsu.union(v0.0, v.0);
+                }
+            }
+        }
+    }
+    (dsu, constant_infeasible)
+}
+
+/// Result of the cheap connectivity probe — hand it to
+/// [`decompose_probed`] to avoid rebuilding the union-find.
+pub struct Probe {
+    dsu: Dsu,
+    /// Number of connected components.
+    pub components: usize,
+    /// Some variable-free constraint (`0 op rhs`) is violated.
+    pub constant_infeasible: bool,
+}
+
+/// Cheap probe: count connected components and validate variable-free
+/// constraints — **without** building any sub-model. The portfolio
+/// calls this first so the common single-component case (plain
+/// workloads, every lock-coupled phase-2 model) never pays for
+/// sub-model construction inside the solve window; the probe's
+/// union-find is reused by [`decompose_probed`] when splitting does
+/// happen.
+pub fn probe(model: &Model) -> Probe {
+    let nv = model.num_vars();
+    let (mut dsu, constant_infeasible) = build_dsu(model);
+    let mut seen = vec![false; nv];
+    let mut components = 0usize;
+    for v in 0..nv as u32 {
+        let root = dsu.find(v) as usize;
+        if !seen[root] {
+            seen[root] = true;
+            components += 1;
+        }
+    }
+    Probe {
+        dsu,
+        components,
+        constant_infeasible,
+    }
+}
+
+/// [`probe`] reduced to its two scalar answers.
+pub fn component_count(model: &Model) -> (usize, bool) {
+    let p = probe(model);
+    (p.components, p.constant_infeasible)
+}
+
+/// Split `model` into independent components (see module docs).
+pub fn decompose(model: &Model, objective: &LinearExpr) -> Decomposition {
+    decompose_probed(model, objective, probe(model))
+}
+
+/// [`decompose`] reusing an existing [`Probe`]'s union-find.
+pub fn decompose_probed(model: &Model, objective: &LinearExpr, probe: Probe) -> Decomposition {
+    let nv = model.num_vars();
+    let Probe {
+        mut dsu,
+        constant_infeasible,
+        ..
+    } = probe;
+
+    // Component ids in order of first appearance over ascending variable
+    // id; local (dense) ids follow the same ascending order.
+    let mut comp_of_root: Vec<u32> = vec![u32::MAX; nv];
+    let mut comp_of_var: Vec<u32> = vec![u32::MAX; nv];
+    let mut local_of_var: Vec<u32> = vec![0; nv];
+    let mut vars_per_comp: Vec<Vec<u32>> = Vec::new();
+    for v in 0..nv as u32 {
+        let root = dsu.find(v) as usize;
+        if comp_of_root[root] == u32::MAX {
+            comp_of_root[root] = vars_per_comp.len() as u32;
+            vars_per_comp.push(Vec::new());
+        }
+        let k = comp_of_root[root];
+        comp_of_var[v as usize] = k;
+        let members = &mut vars_per_comp[k as usize];
+        local_of_var[v as usize] = members.len() as u32;
+        members.push(v);
+    }
+
+    let mut components: Vec<Component> = vars_per_comp
+        .into_iter()
+        .map(|vars| {
+            let mut m = Model::new();
+            let ids = m.new_vars(vars.len());
+            for (li, &ov) in vars.iter().enumerate() {
+                if let Some(hint) = model.hints[ov as usize] {
+                    m.hint(ids[li], hint);
+                }
+            }
+            Component {
+                vars,
+                cons: Vec::new(),
+                model: m,
+                objective: LinearExpr::new(),
+            }
+        })
+        .collect();
+
+    // Constraints, in original order, each remapped into its component.
+    let nc = model.constraints.len();
+    let mut comp_of_cons: Vec<u32> = vec![u32::MAX; nc];
+    let mut local_of_cons: Vec<u32> = vec![0; nc];
+    for (ci, c) in model.constraints.iter().enumerate() {
+        let Some(&(v0, _)) = c.expr.terms.first() else {
+            continue; // constant: validated above, owned by nobody
+        };
+        let k = comp_of_var[v0.idx()] as usize;
+        debug_assert!(
+            c.expr.terms.iter().all(|&(v, _)| comp_of_var[v.idx()] == k as u32),
+            "constraint spans components"
+        );
+        comp_of_cons[ci] = k as u32;
+        local_of_cons[ci] = components[k].model.next_constraint_index() as u32;
+        components[k].cons.push(ci as u32);
+        let expr = LinearExpr::of(
+            c.expr
+                .terms
+                .iter()
+                .map(|&(v, coef)| (VarId(local_of_var[v.idx()]), coef)),
+        );
+        components[k].model.add_constraint(expr, c.op, c.rhs);
+    }
+
+    // Resource classes split along component lines: a class spanning
+    // several components contributes its local rows to each (the
+    // aggregate capacity bound stays admissible on the restriction).
+    for class in &model.resource_classes {
+        for (k, comp) in components.iter_mut().enumerate() {
+            let cons: Vec<usize> = class
+                .cons
+                .iter()
+                .filter(|&&ci| comp_of_cons[ci as usize] == k as u32)
+                .map(|&ci| local_of_cons[ci as usize] as usize)
+                .collect();
+            if !cons.is_empty() {
+                comp.model.add_named_resource_class(class.name.clone(), cons);
+            }
+        }
+    }
+
+    // Objective restricted per component.
+    for &(v, coef) in &objective.clone().normalized().terms {
+        let k = comp_of_var[v.idx()] as usize;
+        components[k]
+            .objective
+            .add(VarId(local_of_var[v.idx()]), coef);
+    }
+
+    Decomposition {
+        components,
+        constant_infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two pods × two disjoint node pools: pod A can use nodes {0,1},
+    /// pod B nodes {2,3} — two components.
+    fn split_model() -> (Model, LinearExpr, Vec<VarId>, Vec<VarId>) {
+        let mut m = Model::new();
+        let a = m.new_vars(2);
+        let b = m.new_vars(2);
+        m.add_le(LinearExpr::of(a.iter().map(|&v| (v, 1))), 1);
+        m.add_le(LinearExpr::of(b.iter().map(|&v| (v, 1))), 1);
+        let c0 = m.next_constraint_index();
+        m.add_le(LinearExpr::of([(a[0], 500)]), 1000);
+        let c1 = m.next_constraint_index();
+        m.add_le(LinearExpr::of([(b[0], 500)]), 1000);
+        m.add_named_resource_class("cpu", [c0, c1]);
+        m.hint(a[1], true);
+        let obj = LinearExpr::of(a.iter().chain(&b).map(|&v| (v, 1)));
+        (m, obj, a, b)
+    }
+
+    #[test]
+    fn disjoint_pools_split_into_two_components() {
+        let (m, obj, a, b) = split_model();
+        let d = decompose(&m, &obj);
+        assert!(!d.constant_infeasible);
+        assert_eq!(d.components.len(), 2);
+        let ca = &d.components[0];
+        let cb = &d.components[1];
+        assert_eq!(ca.vars, vec![a[0].0, a[1].0]);
+        assert_eq!(cb.vars, vec![b[0].0, b[1].0]);
+        // each side owns its at-most-one row and its capacity row
+        assert_eq!(ca.cons, vec![0, 2]);
+        assert_eq!(cb.cons, vec![1, 3]);
+        assert_eq!(ca.model.constraints.len(), 2);
+        // hint on a[1] carried to local id 1 of component 0
+        assert_eq!(ca.model.hints, vec![None, Some(true)]);
+        assert_eq!(cb.model.hints, vec![None, None]);
+        // the shared "cpu" class split into one row per side
+        assert_eq!(ca.model.resource_classes.len(), 1);
+        assert_eq!(ca.model.resource_classes[0].cons, vec![1]);
+        assert_eq!(cb.model.resource_classes[0].cons, vec![1]);
+        // objective restricted: two unit terms per side
+        assert_eq!(ca.objective.terms.len(), 2);
+        assert_eq!(cb.objective.terms.len(), 2);
+    }
+
+    #[test]
+    fn scatter_maps_local_back_to_original_ids() {
+        let (m, obj, a, b) = split_model();
+        let d = decompose(&m, &obj);
+        let mut whole = vec![false; m.num_vars()];
+        d.scatter(0, &[true, false], &mut whole);
+        d.scatter(1, &[false, true], &mut whole);
+        assert!(whole[a[0].idx()]);
+        assert!(!whole[a[1].idx()]);
+        assert!(!whole[b[0].idx()]);
+        assert!(whole[b[1].idx()]);
+    }
+
+    #[test]
+    fn shared_constraint_keeps_one_component() {
+        let (mut m, obj, a, b) = split_model();
+        // one row touching both pods glues everything together
+        m.add_le(LinearExpr::of([(a[0], 1), (b[0], 1)]), 1);
+        let d = decompose(&m, &obj);
+        assert_eq!(d.components.len(), 1);
+        assert_eq!(d.components[0].vars.len(), m.num_vars());
+        assert_eq!(d.components[0].cons.len(), m.constraints.len());
+    }
+
+    #[test]
+    fn violated_constant_constraint_flags_infeasible() {
+        let mut m = Model::new();
+        let _x = m.new_var();
+        m.add_ge(LinearExpr::new(), 1); // 0 >= 1
+        let d = decompose(&m, &LinearExpr::new());
+        assert!(d.constant_infeasible);
+        // satisfiable constants do not
+        let mut m2 = Model::new();
+        let _y = m2.new_var();
+        m2.add_le(LinearExpr::new(), 0); // 0 <= 0
+        assert!(!decompose(&m2, &LinearExpr::new()).constant_infeasible);
+    }
+
+    #[test]
+    fn component_count_matches_full_decomposition() {
+        let (m, obj, _, _) = split_model();
+        let (count, infeasible) = component_count(&m);
+        assert_eq!(count, decompose(&m, &obj).components.len());
+        assert!(!infeasible);
+        let mut m2 = Model::new();
+        let _x = m2.new_var();
+        m2.add_ge(LinearExpr::new(), 1);
+        assert_eq!(component_count(&m2), (1, true));
+        assert_eq!(component_count(&Model::new()), (0, false));
+    }
+
+    #[test]
+    fn isolated_variables_become_singleton_components() {
+        let mut m = Model::new();
+        let xs = m.new_vars(3); // no constraints at all
+        let obj = LinearExpr::of(xs.iter().map(|&v| (v, 1)));
+        let d = decompose(&m, &obj);
+        assert_eq!(d.components.len(), 3);
+        for (k, comp) in d.components.iter().enumerate() {
+            assert_eq!(comp.vars, vec![k as u32]);
+            assert!(comp.cons.is_empty());
+            assert_eq!(comp.objective.terms.len(), 1);
+        }
+    }
+}

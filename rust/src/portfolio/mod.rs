@@ -1,0 +1,766 @@
+//! Parallel portfolio solving with constraint-graph decomposition — the
+//! layer between the optimiser (Algorithm 1) and the CP solver core.
+//!
+//! The paper's headline numbers are deadline-bound: within a 1-second
+//! window the CP fallback improves 44% of scenarios, within 10 seconds
+//! 73% — so search throughput inside the window converts directly into
+//! more improved and more *certified* placements. This subsystem
+//! saturates the machine inside the same paper-faithful budget:
+//!
+//! 1. **Decomposition** ([`decompose`]): a presolve pass splits the
+//!    per-tier packing model into independent constraint-graph
+//!    components (pods/nodes connected through shared capacity rows,
+//!    anti-affinity pairs, spread groups, …). Components are solved
+//!    separately and merged; component-wise optimality certificates
+//!    compose into a whole-instance certificate.
+//! 2. **Portfolio race** ([`race`], [`strategy`]): per component, a
+//!    fixed roster of diverse solver configurations (branching-order
+//!    variants, LNS-heavy, greedy warm-started from the default
+//!    scheduler's placement) races on `std::thread`-scoped workers under
+//!    one shared deadline, pruning against a shared atomic incumbent
+//!    floor and stopping early once a lower rank proves optimality.
+//!
+//! # Determinism contract
+//!
+//! Results are a pure function of the model, the seed, and the deadline
+//! — **independent of the worker count** — whenever every racer
+//! completes inside the window (the same caveat the churn replay
+//! digests already carry for the anytime solver). The ingredients:
+//!
+//! * the task list is fixed before any thread starts and never depends
+//!   on `threads`;
+//! * winners are selected by *(objective, then fixed strategy rank)* —
+//!   never by wall-clock arrival;
+//! * the shared floor prunes **strictly**, so a completing racer returns
+//!   the same first-in-DFS-order optimum it finds alone;
+//! * a proof cancels only *strictly higher* ranks, whose results could
+//!   at best have tied and lost the tie-break anyway;
+//! * with more than one component, a **whole-model anchor** (the exact
+//!   single-threaded solve, rank 0 overall) also runs and wins all ties
+//!   — so on instances the deadline does not truncate, any `threads`
+//!   value reproduces the single-threaded answer bit for bit.
+//!
+//! `threads == 1` (the default) does not spawn at all: it *is* the
+//! single-threaded code path, byte-identical to calling
+//! [`solve_max`](crate::solver::solve_max) directly.
+
+pub mod decompose;
+mod race;
+pub mod strategy;
+
+pub use decompose::{component_count, decompose, Component, Decomposition};
+pub use strategy::{roster, MAX_STRATEGIES};
+
+use crate::solver::{
+    solve_max, LinearExpr, Model, SearchStats, SolveStatus, Solution, SolverConfig,
+};
+use crate::util::timer::Deadline;
+
+use race::{run_race, Task};
+
+/// Label used for the whole-model anchor task in stats and reports.
+pub const WHOLE_MODEL: &str = "whole-model";
+
+/// Portfolio knobs, carried by `OptimizerConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PortfolioConfig {
+    /// Worker threads racing the portfolio. `1` bypasses the portfolio
+    /// entirely — bit-for-bit the single-threaded solver. The default is
+    /// `1` unless the `KUBE_PACKD_THREADS` environment variable says
+    /// otherwise.
+    pub threads: usize,
+    /// Run the constraint-graph decomposition presolve (off = race
+    /// strategies on the undecomposed model only).
+    pub decompose: bool,
+    /// Strategies raced per component (clamped to `1..=MAX_STRATEGIES`).
+    pub strategies: usize,
+}
+
+impl Default for PortfolioConfig {
+    fn default() -> Self {
+        PortfolioConfig {
+            threads: env_threads(),
+            decompose: true,
+            strategies: 3,
+        }
+    }
+}
+
+impl PortfolioConfig {
+    /// Default knobs at an explicit thread count (0 is clamped to 1).
+    pub fn with_threads(threads: usize) -> Self {
+        PortfolioConfig {
+            threads: threads.max(1),
+            ..Default::default()
+        }
+    }
+}
+
+/// `KUBE_PACKD_THREADS` (≥ 1) or the single-threaded default.
+fn env_threads() -> usize {
+    std::env::var("KUBE_PACKD_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Per-component outcome of one portfolio solve, returned in
+/// [`PortfolioOutcome`]. Aggregate counts flow onward into
+/// [`PortfolioStats`] and per-tier summaries (`TierReport`'s
+/// `phase1_components` / `phase1_components_certified`), which is what
+/// the `solve --json` certificate report emits.
+#[derive(Clone, Debug)]
+pub struct ComponentReport {
+    pub vars: usize,
+    pub cons: usize,
+    pub status: SolveStatus,
+    pub objective: i64,
+    /// Admissible upper bound on the component objective.
+    pub bound: i64,
+    /// Winning strategy label (`"-"` when no racer produced a solution).
+    pub winner: &'static str,
+}
+
+/// Counters aggregated across portfolio solves (merged into
+/// `OptimizeResult` / `RunReport`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PortfolioStats {
+    /// Solves routed through the parallel portfolio (`threads > 1`).
+    pub solves: u64,
+    /// Solves answered by the single-threaded legacy path.
+    pub legacy_solves: u64,
+    /// Components across all portfolio solves.
+    pub components: u64,
+    /// Components whose optimum was proven inside the window.
+    pub components_certified: u64,
+    /// Strategy tasks actually executed.
+    pub tasks_run: u64,
+    /// Tasks skipped because a lower rank proved their component first.
+    pub tasks_cancelled: u64,
+    /// Final winners: the whole-model anchor vs the merged composite.
+    pub whole_model_wins: u64,
+    pub composite_wins: u64,
+    /// Component races won, per strategy label (fixed roster order).
+    pub strategy_wins: Vec<(String, u64)>,
+}
+
+impl PortfolioStats {
+    pub fn merge(&mut self, other: &PortfolioStats) {
+        self.solves += other.solves;
+        self.legacy_solves += other.legacy_solves;
+        self.components += other.components;
+        self.components_certified += other.components_certified;
+        self.tasks_run += other.tasks_run;
+        self.tasks_cancelled += other.tasks_cancelled;
+        self.whole_model_wins += other.whole_model_wins;
+        self.composite_wins += other.composite_wins;
+        for (label, wins) in &other.strategy_wins {
+            self.credit(label, *wins);
+        }
+    }
+
+    fn credit(&mut self, label: &str, wins: u64) {
+        for (l, w) in self.strategy_wins.iter_mut() {
+            if l.as_str() == label {
+                *w += wins;
+                return;
+            }
+        }
+        self.strategy_wins.push((label.to_string(), wins));
+    }
+}
+
+/// Result of [`solve_portfolio`].
+#[derive(Clone, Debug)]
+pub struct PortfolioOutcome {
+    pub solution: Solution,
+    /// Per-component reports of this solve (empty on the legacy path).
+    pub components: Vec<ComponentReport>,
+    pub stats: PortfolioStats,
+}
+
+/// Maximise `objective` over `model` within `deadline`, using the
+/// parallel portfolio when `cfg.threads > 1` and the single-threaded
+/// solver otherwise.
+pub fn solve_portfolio(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
+) -> PortfolioOutcome {
+    if cfg.threads <= 1 {
+        let solution = solve_max(model, objective, deadline, solver);
+        return PortfolioOutcome {
+            solution,
+            components: Vec::new(),
+            stats: PortfolioStats {
+                legacy_solves: 1,
+                ..Default::default()
+            },
+        };
+    }
+    solve_parallel(model, objective, deadline, solver, cfg)
+}
+
+fn solve_parallel(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
+) -> PortfolioOutcome {
+    let started = std::time::Instant::now();
+    let mut stats = PortfolioStats {
+        solves: 1,
+        ..Default::default()
+    };
+
+    // Cheap probe first: the common single-component case (plain paper
+    // workloads, every lock-coupled phase-2 model) must not pay for
+    // sub-model construction inside the solve window.
+    let probe = cfg.decompose.then(|| decompose::probe(model));
+    let (ncomp, constant_infeasible) = match &probe {
+        Some(p) => (p.components, p.constant_infeasible),
+        None => (usize::from(model.num_vars() > 0), false),
+    };
+
+    if constant_infeasible {
+        let mut s = SearchStats::default();
+        s.solve_time_s = started.elapsed().as_secs_f64();
+        return PortfolioOutcome {
+            solution: Solution::infeasible(s),
+            components: Vec::new(),
+            stats,
+        };
+    }
+    if ncomp == 0 {
+        // Variable-free model: the solver answers trivially.
+        return PortfolioOutcome {
+            solution: solve_max(model, objective, deadline, solver),
+            components: Vec::new(),
+            stats,
+        };
+    }
+
+    let roster = strategy::roster(solver, cfg.strategies);
+
+    if ncomp == 1 {
+        // Single component: race the strategies on the *original* model
+        // references — no anchor, no sub-model clone. Rank 0 is the
+        // exact single-threaded solve and wins all ties.
+        let tasks: Vec<Task<'_>> = roster
+            .iter()
+            .enumerate()
+            .map(|(rank, &(label, ref strat))| {
+                let mut config = strat.clone();
+                config.seed = strategy::task_seed(solver.seed, 0, rank);
+                Task {
+                    component: Some(0),
+                    rank: rank as u32,
+                    label,
+                    model,
+                    objective,
+                    config,
+                }
+            })
+            .collect();
+        let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads);
+        stats.tasks_cancelled = cancelled;
+        stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
+        let mut merged_stats = SearchStats::default();
+        for sol in results.iter().flatten() {
+            merged_stats.merge(&sol.stats);
+        }
+        let (report, winner) = pick_winner(
+            &tasks,
+            &mut results,
+            0,
+            model.num_vars(),
+            model.constraints.len(),
+        );
+        stats.components = 1;
+        stats.components_certified = u64::from(report.status == SolveStatus::Optimal);
+        let mut solution = match winner {
+            Some(mut sol) => {
+                stats.credit(report.winner, 1);
+                sol.status = report.status;
+                sol.bound = report.bound;
+                sol
+            }
+            None if report.status == SolveStatus::Infeasible => {
+                Solution::infeasible(SearchStats::default())
+            }
+            None => Solution::unknown(SearchStats::default(), report.bound),
+        };
+        merged_stats.solve_time_s = started.elapsed().as_secs_f64();
+        solution.stats = merged_stats;
+        return PortfolioOutcome {
+            solution,
+            components: vec![report],
+            stats,
+        };
+    }
+
+    // ---- multi-component: full decomposition + fixed task list ------------
+    // (the task list never depends on the worker count)
+    let decomp = decompose::decompose_probed(
+        model,
+        objective,
+        probe.expect("ncomp > 1 implies the probe ran"),
+    );
+    debug_assert_eq!(decomp.components.len(), ncomp);
+
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(1 + ncomp * roster.len());
+    // Whole-model anchor: the exact single-threaded solve. Wins all
+    // ties, which pins portfolio answers to the `threads = 1` path
+    // whenever the deadline does not truncate it.
+    tasks.push(Task {
+        component: None,
+        rank: 0,
+        label: WHOLE_MODEL,
+        model,
+        objective,
+        config: solver.clone(),
+    });
+    for (c, comp) in decomp.components.iter().enumerate() {
+        for (rank, &(label, ref strat)) in roster.iter().enumerate() {
+            let mut config = strat.clone();
+            config.seed = strategy::task_seed(solver.seed, c, rank);
+            tasks.push(Task {
+                component: Some(c),
+                rank: rank as u32,
+                label,
+                model: &comp.model,
+                objective: &comp.objective,
+                config,
+            });
+        }
+    }
+
+    let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads);
+    stats.tasks_cancelled = cancelled;
+    stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
+
+    let mut merged_stats = SearchStats::default();
+    for sol in results.iter().flatten() {
+        merged_stats.merge(&sol.stats);
+    }
+
+    // ---- per-component winners: objective, then lowest rank ---------------
+    let mut component_reports: Vec<ComponentReport> = Vec::with_capacity(ncomp);
+    let mut component_values: Vec<Option<Vec<bool>>> = Vec::with_capacity(ncomp);
+    let mut any_infeasible = false;
+    for (c, comp) in decomp.components.iter().enumerate() {
+        let (report, winner) =
+            pick_winner(&tasks, &mut results, c, comp.vars.len(), comp.cons.len());
+        any_infeasible |= report.status == SolveStatus::Infeasible;
+        match winner {
+            Some(sol) => {
+                stats.credit(report.winner, 1);
+                component_values.push(Some(sol.values));
+            }
+            None => component_values.push(None),
+        }
+        component_reports.push(report);
+    }
+    stats.components = ncomp as u64;
+    stats.components_certified = component_reports
+        .iter()
+        .filter(|r| r.status == SolveStatus::Optimal)
+        .count() as u64;
+
+    // ---- composite candidate: merge per-component winners ------------------
+    let composite: Option<Solution> = if !any_infeasible
+        && component_values.iter().all(Option::is_some)
+    {
+        let mut values = vec![false; model.num_vars()];
+        for (c, local) in component_values.iter().enumerate() {
+            decomp.scatter(c, local.as_ref().expect("checked above"), &mut values);
+        }
+        let objective_val: i64 = component_reports.iter().map(|r| r.objective).sum();
+        debug_assert!(model.feasible(&values), "merged composite infeasible");
+        let all_certified = component_reports
+            .iter()
+            .all(|r| r.status == SolveStatus::Optimal);
+        let bound = component_reports
+            .iter()
+            .fold(0i64, |acc, r| acc.saturating_add(r.bound));
+        Some(Solution {
+            // The certificate composes: every component at its proven
+            // optimum ⇒ the separable whole at its proven optimum.
+            status: if all_certified {
+                SolveStatus::Optimal
+            } else {
+                SolveStatus::Feasible
+            },
+            objective: objective_val,
+            bound,
+            values,
+            stats: SearchStats::default(),
+        })
+    } else {
+        None
+    };
+
+    // ---- final resolution: anchor vs composite, anchor wins ties -----------
+    // The anchor always has a result here: it is task 0, cancellation
+    // only ever targets same-component higher ranks, and a worker exists.
+    let w = results[0].take().expect("anchor always runs");
+
+    let mut solution = match composite {
+        Some(comp) => {
+            if comp.status.has_solution()
+                && (!w.status.has_solution() || comp.objective > w.objective)
+            {
+                stats.composite_wins += 1;
+                let mut comp = comp;
+                comp.bound = comp.bound.min(if w.status == SolveStatus::Optimal {
+                    w.objective
+                } else {
+                    w.bound
+                });
+                comp
+            } else {
+                stats.whole_model_wins += 1;
+                let mut w = w;
+                if w.status.has_solution() {
+                    // A tied, fully certified composite proves the
+                    // anchor's anytime answer optimal too.
+                    if comp.status == SolveStatus::Optimal && comp.objective == w.objective {
+                        w.status = SolveStatus::Optimal;
+                    }
+                    w.bound = w.bound.min(comp.bound);
+                    if w.status == SolveStatus::Optimal {
+                        w.bound = w.objective;
+                    }
+                }
+                w
+            }
+        }
+        None => {
+            if any_infeasible && !w.status.has_solution() {
+                // A component proved infeasibility the anchor's window
+                // could not reach.
+                Solution::infeasible(SearchStats::default())
+            } else {
+                if w.status.has_solution() {
+                    stats.whole_model_wins += 1;
+                }
+                w
+            }
+        }
+    };
+
+    merged_stats.solve_time_s = started.elapsed().as_secs_f64();
+    solution.stats = merged_stats;
+    PortfolioOutcome {
+        solution,
+        components: component_reports,
+        stats,
+    }
+}
+
+/// Winner of one component's race: *(objective, then lowest rank)* over
+/// the racers that ran — never wall-clock arrival. Returns the
+/// component report plus the winning solution (taken out of `results`).
+/// The report's certificate uses everything the race proved, not just
+/// the winner: any racer's Optimal status certifies a tied winner, and
+/// the bound is the tightest admissible bound any racer established.
+fn pick_winner(
+    tasks: &[Task<'_>],
+    results: &mut [Option<Solution>],
+    component: usize,
+    vars: usize,
+    cons: usize,
+) -> (ComponentReport, Option<Solution>) {
+    let mut winner: Option<(usize, i64, u32)> = None;
+    let mut certified = false;
+    let mut infeasible = false;
+    let mut min_bound: Option<i64> = None;
+    for (i, task) in tasks.iter().enumerate() {
+        if task.component != Some(component) {
+            continue;
+        }
+        let Some(sol) = &results[i] else { continue };
+        min_bound = Some(min_bound.map_or(sol.bound, |b: i64| b.min(sol.bound)));
+        match sol.status {
+            SolveStatus::Infeasible => infeasible = true,
+            SolveStatus::Optimal => certified = true,
+            _ => {}
+        }
+        if sol.status.has_solution() {
+            let better = match winner {
+                None => true,
+                Some((_, obj, rank)) => {
+                    sol.objective > obj || (sol.objective == obj && task.rank < rank)
+                }
+            };
+            if better {
+                winner = Some((i, sol.objective, task.rank));
+            }
+        }
+    }
+    match winner {
+        Some((wi, wobj, _)) => {
+            let sol = results[wi].take().expect("winner result present");
+            let report = ComponentReport {
+                vars,
+                cons,
+                // Any racer's proof certifies every tied answer.
+                status: if certified { SolveStatus::Optimal } else { sol.status },
+                objective: wobj,
+                bound: if certified {
+                    wobj
+                } else {
+                    min_bound.expect("winner ran").min(sol.bound)
+                },
+                winner: tasks[wi].label,
+            };
+            (report, Some(sol))
+        }
+        None => (
+            ComponentReport {
+                vars,
+                cons,
+                status: if infeasible {
+                    SolveStatus::Infeasible
+                } else {
+                    SolveStatus::Unknown
+                },
+                objective: 0,
+                bound: min_bound.unwrap_or(0),
+                winner: "-",
+            },
+            None,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::VarId;
+
+    fn cfg(threads: usize) -> PortfolioConfig {
+        PortfolioConfig {
+            threads,
+            decompose: true,
+            strategies: 3,
+        }
+    }
+
+    /// Figure-1 packing (3 pods, 2 nodes) — one component.
+    fn figure1() -> (Model, LinearExpr) {
+        let mut m = Model::new();
+        let pods = [2048i64, 2048, 3072];
+        let mut vars = Vec::new();
+        for _ in &pods {
+            let xs = m.new_vars(2);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..2 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                4096,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        (m, obj)
+    }
+
+    /// Two disjoint copies of a small packing — two components.
+    fn two_pools() -> (Model, LinearExpr) {
+        let mut m = Model::new();
+        let mut obj = LinearExpr::new();
+        for _pool in 0..2 {
+            let pods = [600i64, 500, 400];
+            let mut vars = Vec::new();
+            for _ in &pods {
+                let xs = m.new_vars(2);
+                m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+                vars.push(xs);
+            }
+            for node in 0..2 {
+                m.add_le(
+                    LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                    1000,
+                );
+            }
+            for v in vars.iter().flatten() {
+                obj.add(*v, 1);
+            }
+        }
+        (m, obj)
+    }
+
+    #[test]
+    fn threads_one_is_the_legacy_path() {
+        let (m, obj) = figure1();
+        let legacy = solve_max(&m, &obj, Deadline::unlimited(), &SolverConfig::default());
+        let out = solve_portfolio(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(1),
+        );
+        assert_eq!(out.solution.status, legacy.status);
+        assert_eq!(out.solution.objective, legacy.objective);
+        assert_eq!(out.solution.values, legacy.values);
+        assert_eq!(out.stats.legacy_solves, 1);
+        assert_eq!(out.stats.solves, 0);
+        assert!(out.components.is_empty());
+    }
+
+    #[test]
+    fn portfolio_matches_legacy_values_across_thread_counts() {
+        for (m, obj) in [figure1(), two_pools()] {
+            let legacy = solve_max(&m, &obj, Deadline::unlimited(), &SolverConfig::default());
+            assert_eq!(legacy.status, SolveStatus::Optimal);
+            for threads in [2usize, 4, 8] {
+                let out = solve_portfolio(
+                    &m,
+                    &obj,
+                    Deadline::unlimited(),
+                    &SolverConfig::default(),
+                    &cfg(threads),
+                );
+                assert_eq!(out.solution.status, SolveStatus::Optimal);
+                assert_eq!(out.solution.objective, legacy.objective);
+                assert_eq!(
+                    out.solution.values, legacy.values,
+                    "threads={threads} diverged from the single-threaded answer"
+                );
+                assert_eq!(out.solution.bound, out.solution.objective);
+            }
+        }
+    }
+
+    #[test]
+    fn two_pools_decompose_and_certify() {
+        let (m, obj) = two_pools();
+        let out = solve_portfolio(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(4),
+        );
+        assert_eq!(out.components.len(), 2);
+        assert_eq!(out.stats.components, 2);
+        assert_eq!(out.stats.components_certified, 2);
+        assert_eq!(out.solution.status, SolveStatus::Optimal);
+        assert!(m.feasible(&out.solution.values));
+        // separable objective: the whole equals the sum of its parts
+        assert_eq!(
+            out.solution.objective,
+            out.components.iter().map(|c| c.objective).sum::<i64>()
+        );
+    }
+
+    #[test]
+    fn constant_infeasibility_short_circuits() {
+        let mut m = Model::new();
+        let _x = m.new_var();
+        m.add_ge(LinearExpr::new(), 1); // 0 >= 1
+        let out = solve_portfolio(
+            &m,
+            &LinearExpr::new(),
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(2),
+        );
+        assert_eq!(out.solution.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn component_infeasibility_propagates() {
+        let mut m = Model::new();
+        let a = m.new_var(); // component 0: infeasible (a >= 1 and a <= 0)
+        m.add_ge(LinearExpr::of([(a, 1)]), 1);
+        m.add_le(LinearExpr::of([(a, 1)]), 0);
+        let b = m.new_var(); // component 1: trivially fine
+        m.add_le(LinearExpr::of([(b, 1)]), 1);
+        let obj = LinearExpr::of([(a, 1), (b, 1)]);
+        let out = solve_portfolio(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(2),
+        );
+        assert_eq!(out.solution.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn empty_model_is_trivially_optimal() {
+        let m = Model::new();
+        let out = solve_portfolio(
+            &m,
+            &LinearExpr::new(),
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(4),
+        );
+        assert_eq!(out.solution.status, SolveStatus::Optimal);
+        assert_eq!(out.solution.objective, 0);
+    }
+
+    #[test]
+    fn no_decompose_still_races_strategies() {
+        let (m, obj) = two_pools();
+        let mut c = cfg(4);
+        c.decompose = false;
+        let out = solve_portfolio(&m, &obj, Deadline::unlimited(), &SolverConfig::default(), &c);
+        assert_eq!(out.components.len(), 1, "presolve disabled: one blob");
+        assert_eq!(out.solution.status, SolveStatus::Optimal);
+        let with = solve_portfolio(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(4),
+        );
+        assert_eq!(out.solution.objective, with.solution.objective);
+    }
+
+    #[test]
+    fn stats_merge_accumulates_strategy_wins() {
+        let mut a = PortfolioStats::default();
+        a.credit("default", 2);
+        let mut b = PortfolioStats {
+            solves: 1,
+            components: 3,
+            ..Default::default()
+        };
+        b.credit("default", 1);
+        b.credit("lns-heavy", 4);
+        a.merge(&b);
+        assert_eq!(a.solves, 1);
+        assert_eq!(a.components, 3);
+        assert_eq!(
+            a.strategy_wins,
+            vec![("default".to_string(), 3), ("lns-heavy".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn hints_survive_decomposition_into_the_race() {
+        // A warm-start hint placed on one pool must steer that pool's
+        // winner exactly as it steers the whole-model solve.
+        let (mut m, obj) = two_pools();
+        m.hint(VarId(1), true); // pod 0 of pool 0 -> node 1
+        let legacy = solve_max(&m, &obj, Deadline::unlimited(), &SolverConfig::default());
+        let out = solve_portfolio(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &cfg(8),
+        );
+        assert_eq!(out.solution.values, legacy.values);
+    }
+}

@@ -1,0 +1,222 @@
+//! Deterministic multi-threaded execution of a portfolio task list.
+//!
+//! The task list is fixed *before* any thread starts — it never depends
+//! on the worker count — and workers merely pull tasks off a shared
+//! counter. Coordination is limited to two mechanisms that provably
+//! cannot change a completing task's answer (see
+//! [`crate::solver::SharedIncumbent`]):
+//!
+//! * a per-component incumbent floor racers prune **strictly** against;
+//! * cancellation of *strictly higher ranks* once a task proves its
+//!   component exact (Optimal or Infeasible). A cancelled task could at
+//!   best have tied the prover's objective, and ties resolve to the
+//!   lower rank anyway — so whether the cancellation lands before or
+//!   after the rival ran is unobservable in the selected winner.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::solver::{
+    solve_max_with, LinearExpr, Model, SharedIncumbent, SolveStatus, Solution, SolverConfig,
+};
+use crate::util::timer::Deadline;
+
+/// One racer's assignment.
+pub(crate) struct Task<'a> {
+    /// Component this task races (`None` = the whole-model anchor).
+    pub component: Option<usize>,
+    /// Rank within the component's roster; ties resolve to the lowest.
+    pub rank: u32,
+    pub label: &'static str,
+    pub model: &'a Model,
+    pub objective: &'a LinearExpr,
+    pub config: SolverConfig,
+}
+
+/// Run every task under `deadline` on up to `threads` workers. Returns
+/// one result slot per task (`None` = cancelled before it started) plus
+/// the number of cancelled-unstarted tasks.
+pub(crate) fn run_race(
+    tasks: &[Task<'_>],
+    deadline: Deadline,
+    threads: usize,
+) -> (Vec<Option<Solution>>, u64) {
+    let n = tasks.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let ncomp = tasks
+        .iter()
+        .filter_map(|t| t.component)
+        .map(|c| c + 1)
+        .max()
+        .unwrap_or(0);
+    // One floor per component; every task gets its own sibling handle
+    // (shared floor, private cancellation flag).
+    let floors: Vec<SharedIncumbent> = (0..ncomp).map(|_| SharedIncumbent::new()).collect();
+    let handles: Vec<Option<SharedIncumbent>> = tasks
+        .iter()
+        .map(|t| t.component.map(|c| floors[c].sibling()))
+        .collect();
+    let cancels: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Solution>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let workers = threads.clamp(1, n);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if cancels[i].load(Ordering::Relaxed) {
+                    continue; // a lower rank already proved this component
+                }
+                let task = &tasks[i];
+                let sol = solve_max_with(
+                    task.model,
+                    task.objective,
+                    deadline,
+                    &task.config,
+                    handles[i].as_ref(),
+                );
+                if matches!(sol.status, SolveStatus::Optimal | SolveStatus::Infeasible) {
+                    // Exactness proven: *higher* ranks on this component
+                    // can at best tie and lose the tie-break — release
+                    // their threads for useful work. Lower ranks keep
+                    // running so their (deterministic) answers stay
+                    // available to the tie-break.
+                    if let Some(c) = task.component {
+                        for (j, other) in tasks.iter().enumerate() {
+                            if other.component == Some(c) && other.rank > task.rank {
+                                cancels[j].store(true, Ordering::Relaxed);
+                                if let Some(handle) = &handles[j] {
+                                    handle.cancel();
+                                }
+                            }
+                        }
+                    }
+                }
+                *results[i].lock().expect("result slot poisoned") = Some(sol);
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n);
+    let mut cancelled = 0u64;
+    for (i, slot) in results.into_iter().enumerate() {
+        let sol = slot.into_inner().expect("result slot poisoned");
+        if sol.is_none() && cancels[i].load(Ordering::Relaxed) {
+            cancelled += 1;
+        }
+        out.push(sol);
+    }
+    (out, cancelled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two-node figure-1 packing model with a unit objective.
+    fn model() -> (Model, LinearExpr) {
+        let mut m = Model::new();
+        let pods = [2048i64, 2048, 3072];
+        let mut vars = Vec::new();
+        for _ in &pods {
+            let xs = m.new_vars(2);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..2 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                4096,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        (m, obj)
+    }
+
+    #[test]
+    fn race_results_are_deterministic_across_reruns_and_thread_counts() {
+        let (m, obj) = model();
+        let mk_tasks = || {
+            vec![
+                Task {
+                    component: Some(0),
+                    rank: 0,
+                    label: "default",
+                    model: &m,
+                    objective: &obj,
+                    config: SolverConfig::default(),
+                },
+                Task {
+                    component: Some(0),
+                    rank: 1,
+                    label: "greedy-warm",
+                    model: &m,
+                    objective: &obj,
+                    config: SolverConfig {
+                        use_best_fit: false,
+                        use_lns: false,
+                        ..Default::default()
+                    },
+                },
+            ]
+        };
+        let runs: Vec<_> = [1usize, 2, 8]
+            .iter()
+            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t).0)
+            .collect();
+        for run in &runs {
+            // rank 0 always runs (never cancelled by construction)
+            let r0 = run[0].as_ref().expect("rank 0 ran");
+            assert_eq!(r0.status, SolveStatus::Optimal);
+            assert_eq!(r0.objective, 3);
+            if let Some(r1) = &run[1] {
+                // rank 1 may have been cancelled mid-run by rank 0's
+                // proof; whatever it reports can only tie, never exceed
+                assert!(r1.objective <= 3);
+            }
+        }
+        // rank 0's answer is identical whatever the worker count
+        let v0: Vec<_> = runs
+            .iter()
+            .map(|r| r[0].as_ref().unwrap().values.clone())
+            .collect();
+        assert_eq!(v0[0], v0[1]);
+        assert_eq!(v0[1], v0[2]);
+    }
+
+    #[test]
+    fn pre_proven_component_cancels_higher_ranks_on_one_worker() {
+        // With one worker the rank-0 task completes (proving optimality)
+        // before rank 1 is even picked up: rank 1 must come back `None`
+        // and be counted as cancelled.
+        let (m, obj) = model();
+        let tasks = vec![
+            Task {
+                component: Some(0),
+                rank: 0,
+                label: "default",
+                model: &m,
+                objective: &obj,
+                config: SolverConfig::default(),
+            },
+            Task {
+                component: Some(0),
+                rank: 1,
+                label: "greedy-warm",
+                model: &m,
+                objective: &obj,
+                config: SolverConfig::default(),
+            },
+        ];
+        let (results, cancelled) = run_race(&tasks, Deadline::unlimited(), 1);
+        assert!(results[0].is_some());
+        assert!(results[1].is_none());
+        assert_eq!(cancelled, 1);
+    }
+}

@@ -1,0 +1,115 @@
+//! The portfolio's strategy roster: diverse solver configurations raced
+//! over every component under one shared deadline.
+//!
+//! Rank order is part of the determinism contract — ties on objective
+//! resolve to the **lowest rank**, and rank 0 is the caller's base
+//! configuration *unchanged* (same seed, same toggles). Whenever rank 0
+//! runs to completion it proves the component optimum, ties every rival,
+//! and wins the tie-break — which is exactly what keeps portfolio
+//! answers aligned bit-for-bit with the single-threaded solver on
+//! instances the deadline does not truncate.
+
+use crate::solver::SolverConfig;
+use crate::util::rng::splitmix64;
+
+/// Largest roster [`roster`] will build.
+pub const MAX_STRATEGIES: usize = 4;
+
+/// Strategy labels in fixed rank order.
+pub const STRATEGY_NAMES: [&str; MAX_STRATEGIES] =
+    ["default", "greedy-warm", "lns-heavy", "easiest-first"];
+
+/// Build the roster of `count` strategies (clamped to
+/// `1..=MAX_STRATEGIES`) from the caller's base configuration.
+pub fn roster(base: &SolverConfig, count: usize) -> Vec<(&'static str, SolverConfig)> {
+    let count = count.clamp(1, MAX_STRATEGIES);
+    let mut out = Vec::with_capacity(count);
+    // Rank 0: the base configuration, untouched (see module docs).
+    out.push((STRATEGY_NAMES[0], base.clone()));
+    if count > 1 {
+        // Hint-first descent: reproduce the warm start (the default
+        // scheduler's placement / the previous tier's plan) immediately
+        // and improve from there — the best time-to-first-incumbent on
+        // fragmented states.
+        out.push((
+            STRATEGY_NAMES[1],
+            SolverConfig {
+                use_best_fit: false,
+                use_lns: false,
+                ..base.clone()
+            },
+        ));
+    }
+    if count > 2 {
+        // Anytime-focused: most of the window goes to ruin-and-recreate
+        // polish instead of exhaustive proof.
+        out.push((
+            STRATEGY_NAMES[2],
+            SolverConfig {
+                use_lns: true,
+                lns_fraction: 0.6,
+                ..base.clone()
+            },
+        ));
+    }
+    if count > 3 {
+        // Complementary branching order (easiest group first).
+        out.push((
+            STRATEGY_NAMES[3],
+            SolverConfig {
+                branch_easiest_first: true,
+                ..base.clone()
+            },
+        ));
+    }
+    out
+}
+
+/// Per-(component, rank) seed: a pure function of the base seed so runs
+/// replay exactly, with rank 0 left untouched (bit-compat with the
+/// single-threaded solver).
+pub fn task_seed(base: u64, component: usize, rank: usize) -> u64 {
+    if rank == 0 {
+        base
+    } else {
+        let salt = (((component as u64) << 8) | rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut s = base ^ salt;
+        splitmix64(&mut s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_zero_is_the_base_config_untouched() {
+        let mut base = SolverConfig::default();
+        base.seed = 0xABCD;
+        base.use_symmetry = false;
+        let r = roster(&base, 4);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].0, "default");
+        assert_eq!(r[0].1.seed, 0xABCD);
+        assert!(!r[0].1.use_symmetry);
+        // diversification knobs differ from the base
+        assert!(!r[1].1.use_best_fit);
+        assert!(r[2].1.lns_fraction > base.lns_fraction);
+        assert!(r[3].1.branch_easiest_first);
+    }
+
+    #[test]
+    fn roster_size_clamped() {
+        let base = SolverConfig::default();
+        assert_eq!(roster(&base, 0).len(), 1);
+        assert_eq!(roster(&base, 99).len(), MAX_STRATEGIES);
+    }
+
+    #[test]
+    fn task_seeds_replay_and_diversify() {
+        assert_eq!(task_seed(7, 3, 0), 7, "rank 0 keeps the base seed");
+        assert_eq!(task_seed(7, 3, 2), task_seed(7, 3, 2));
+        assert_ne!(task_seed(7, 3, 2), task_seed(7, 3, 1));
+        assert_ne!(task_seed(7, 3, 2), task_seed(7, 4, 2));
+    }
+}

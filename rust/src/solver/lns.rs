@@ -12,10 +12,12 @@ use crate::util::timer::Deadline;
 
 use super::model::{Model, VarId};
 use super::presolve::Structure;
-use super::search::{Searcher, SolverConfig};
+use super::search::{Searcher, SharedIncumbent, SolverConfig};
 use super::solution::SearchStats;
 
 /// Ruin-and-recreate loop. Returns the (possibly improved) incumbent.
+/// In a portfolio race, `shared` propagates improvements to the other
+/// racers and lets a cancellation end the polish early.
 #[allow(clippy::too_many_arguments)]
 pub fn lns_polish(
     model: &Model,
@@ -25,6 +27,7 @@ pub fn lns_polish(
     mut best_val: i64,
     deadline: Deadline,
     config: &SolverConfig,
+    shared: Option<&SharedIncumbent>,
     stats: &mut SearchStats,
 ) -> (Vec<bool>, i64) {
     let mut rng = Rng::new(config.seed);
@@ -36,6 +39,9 @@ pub fn lns_polish(
     let mut ruin_size = 4.min(ng).max(1);
 
     while !deadline.expired() {
+        if shared.is_some_and(|s| s.is_cancelled()) {
+            break;
+        }
         stats.lns_rounds += 1;
 
         // Pick the groups to ruin.
@@ -61,7 +67,7 @@ pub fn lns_polish(
             use_lns: false,
             ..config.clone()
         };
-        if let Some(mut s) = Searcher::new(model, structure, obj, slice, &sub_cfg) {
+        if let Some(mut s) = Searcher::new(model, structure, obj, slice, &sub_cfg, shared) {
             if s.preassign(&fixes) {
                 s.dfs(0, 0);
                 s.drain_stats(stats);
@@ -126,6 +132,7 @@ mod tests {
             0,
             Deadline::after(Duration::from_millis(150)),
             &SolverConfig::default(),
+            None,
             &mut stats,
         );
         assert!(val >= 0);

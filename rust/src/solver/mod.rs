@@ -22,7 +22,10 @@
 //! * [`bound`] prunes with an admissible objective upper bound
 //!   (fixed value + per-group open-option maxima);
 //! * [`search`] runs the B&B with hint-first / best-fit value ordering,
-//!   optional identical-node symmetry skipping, and deadline polling;
+//!   optional identical-node symmetry skipping, and adaptive deadline
+//!   polling; its [`SharedIncumbent`] lets portfolio racers
+//!   (`crate::portfolio`) share a global incumbent floor and cooperative
+//!   cancellation without giving up determinism;
 //! * [`lns`] optionally polishes a feasible incumbent with randomised
 //!   ruin-and-recreate when time remains but optimality wasn't proven.
 //!
@@ -38,5 +41,5 @@ pub mod search;
 pub mod solution;
 
 pub use model::{CmpOp, LinearExpr, Model, ResourceClass, VarId};
-pub use search::{solve_max, SolverConfig};
+pub use search::{solve_max, solve_max_with, SharedIncumbent, SolverConfig};
 pub use solution::{SearchStats, SolveStatus, Solution};

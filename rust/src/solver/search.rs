@@ -18,6 +18,9 @@
 //! of an equivalence class is branched on; `rust/tests/proptests.rs`
 //! cross-validates optima with the feature on and off.
 
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::time::Instant;
+
 use crate::util::timer::Deadline;
 
 use super::bound::upper_bound;
@@ -47,7 +50,17 @@ pub struct SolverConfig {
     pub use_lns: bool,
     /// Fraction of the deadline reserved for LNS when enabled.
     pub lns_fraction: f64,
-    /// Deadline poll interval, in decisions.
+    /// Branch easiest group first instead of the classic hardest-first
+    /// bin-packing order. A portfolio diversification knob: the reversed
+    /// order explores a complementary part of the tree, so a racer with
+    /// it on finds different early incumbents than the default order.
+    pub branch_easiest_first: bool,
+    /// *Initial* deadline-poll interval, in decisions, capped at the
+    /// adaptive minimum (4) so the very first wall-clock check happens
+    /// before a tiny window can be overshot on an expensive instance.
+    /// After that first check the interval adapts to the measured
+    /// decision rate — backing off while decisions are cheap, tightening
+    /// as the deadline nears (see `Searcher::poll_deadline`).
     pub check_interval: u64,
     /// Seed for LNS randomisation.
     pub seed: u64,
@@ -63,11 +76,82 @@ impl Default for SolverConfig {
             use_symmetry: true,
             use_lns: true,
             lns_fraction: 0.25,
+            branch_easiest_first: false,
             check_interval: 64,
             seed: 0x5EED,
         }
     }
 }
+
+/// Cross-worker coordination for a portfolio race over one model: a
+/// monotone global *floor* (best objective any racer has published,
+/// shared between [`SharedIncumbent::sibling`] handles) and a
+/// **per-handle** cooperative cancellation flag.
+///
+/// Determinism: racers prune only subtrees whose bound is **strictly**
+/// below the floor. The floor never exceeds the model's true optimum
+/// (it is always some racer's feasible objective), so a racer that runs
+/// to completion still reaches the same first-in-DFS-order optimal leaf
+/// it would have found alone — sharing accelerates losers, it never
+/// changes a completing winner's answer. Cancellation is per handle so
+/// the portfolio can stop exactly the racers whose results are provably
+/// irrelevant (higher ranks after a proof) and no one else.
+#[derive(Debug)]
+pub struct SharedIncumbent {
+    /// Best objective published by any sibling (`i64::MIN` = none yet).
+    floor: std::sync::Arc<AtomicI64>,
+    cancel: AtomicBool,
+}
+
+impl Default for SharedIncumbent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SharedIncumbent {
+    pub fn new() -> Self {
+        SharedIncumbent {
+            floor: std::sync::Arc::new(AtomicI64::new(i64::MIN)),
+            cancel: AtomicBool::new(false),
+        }
+    }
+
+    /// A handle sharing this one's floor but carrying its own
+    /// cancellation flag (shared incumbent, per-racer cancel).
+    pub fn sibling(&self) -> SharedIncumbent {
+        SharedIncumbent {
+            floor: std::sync::Arc::clone(&self.floor),
+            cancel: AtomicBool::new(false),
+        }
+    }
+
+    /// Raise the floor to `objective` (monotone; racers call this on
+    /// every incumbent improvement).
+    pub fn publish(&self, objective: i64) {
+        self.floor.fetch_max(objective, Ordering::Relaxed);
+    }
+
+    pub fn floor(&self) -> i64 {
+        self.floor.load(Ordering::Relaxed)
+    }
+
+    /// Ask the racer holding *this* handle to stop at its next poll.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Adaptive deadline-poll interval clamp, in decisions. The lower bound
+/// keeps even propagation-heavy instances (milliseconds per decision)
+/// from overshooting tiny windows by more than a few decisions; the
+/// upper bound keeps cancellation latency bounded on cheap instances.
+const MIN_POLL_INTERVAL: u64 = 4;
+const MAX_POLL_INTERVAL: u64 = 8192;
 
 /// Maximise `objective` over `model` within `deadline`.
 pub fn solve_max(
@@ -76,7 +160,22 @@ pub fn solve_max(
     deadline: Deadline,
     config: &SolverConfig,
 ) -> Solution {
-    let started = std::time::Instant::now();
+    solve_max_with(model, objective, deadline, config, None)
+}
+
+/// [`solve_max`] with an optional [`SharedIncumbent`] for portfolio
+/// racing: incumbent improvements are published to the handle, its floor
+/// prunes strictly-dominated subtrees, and its cancellation flag stops
+/// the search (reported like a timeout, but without an LNS polish —
+/// a cancelled racer's window belongs to whoever proved optimality).
+pub fn solve_max_with(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    config: &SolverConfig,
+    shared: Option<&SharedIncumbent>,
+) -> Solution {
+    let started = Instant::now();
     let mut stats = SearchStats::default();
 
     let structure = detect_structure(model);
@@ -91,7 +190,7 @@ pub fn solve_max(
         deadline
     };
 
-    let mut searcher = match Searcher::new(model, &structure, &obj, dfs_deadline, config) {
+    let mut searcher = match Searcher::new(model, &structure, &obj, dfs_deadline, config, shared) {
         Some(s) => s,
         None => {
             stats.solve_time_s = started.elapsed().as_secs_f64();
@@ -102,13 +201,15 @@ pub fn solve_max(
     searcher.drain_stats(&mut stats);
 
     let complete = !searcher.timed_out;
-    let proven_optimal =
-        complete || searcher.best.as_ref().map(|_| searcher.best_val >= searcher.root_ub).unwrap_or(false);
+    let root_ub = searcher.root_ub;
+    let cancelled = searcher.cancelled;
+    let mut proven_optimal =
+        complete || searcher.best.as_ref().map(|_| searcher.best_val >= root_ub).unwrap_or(false);
     let mut best = searcher.best.take();
     let mut best_val = searcher.best_val;
 
     // LNS polish: only useful when we have a feasible-but-unproven incumbent.
-    if config.use_lns && !proven_optimal && best.is_some() && !deadline.expired() {
+    if config.use_lns && !proven_optimal && !cancelled && best.is_some() && !deadline.expired() {
         let (nb, nv) = lns_polish(
             model,
             &structure,
@@ -117,10 +218,13 @@ pub fn solve_max(
             best_val,
             deadline,
             config,
+            shared,
             &mut stats,
         );
         best = Some(nb);
         best_val = nv;
+        // LNS can close the root gap; credit the proof when it does.
+        proven_optimal = proven_optimal || best_val >= root_ub;
     }
 
     stats.solve_time_s = started.elapsed().as_secs_f64();
@@ -132,11 +236,12 @@ pub fn solve_max(
                 SolveStatus::Feasible
             },
             objective: best_val,
+            bound: if proven_optimal { best_val } else { root_ub },
             values,
             stats,
         },
         None if complete => Solution::infeasible(stats),
-        None => Solution::unknown(stats),
+        None => Solution::unknown(stats, root_ub),
     }
 }
 
@@ -185,7 +290,19 @@ pub(super) struct Searcher<'a> {
     pub root_ub: i64,
     deadline: Deadline,
     pub timed_out: bool,
+    /// Stopped by a [`SharedIncumbent`] cancellation (subset of
+    /// `timed_out`; tells the caller to skip the LNS polish).
+    pub cancelled: bool,
+    /// Portfolio-race handle: publish incumbents, read the floor, honour
+    /// cancellation. `None` outside a race.
+    shared: Option<&'a SharedIncumbent>,
+    /// Cached copy of the shared floor (refreshed at poll points).
+    floor: i64,
     decisions: u64,
+    /// Decision count at which the deadline is next polled.
+    next_poll: u64,
+    last_poll: Instant,
+    last_poll_decisions: u64,
     conflicts: u64,
     bound_prunes: u64,
     symmetry_skips: u64,
@@ -200,6 +317,7 @@ impl<'a> Searcher<'a> {
         obj: &'a [i64],
         deadline: Deadline,
         config: &'a SolverConfig,
+        shared: Option<&'a SharedIncumbent>,
     ) -> Option<Self> {
         let prop = Propagator::new(model)?;
         let nv = model.num_vars();
@@ -249,13 +367,17 @@ impl<'a> Searcher<'a> {
             .iter()
             .map(|g| (!hinted_group(g), difficulty(g)))
             .collect();
-        // NaN-free; hinted first, then difficulty desc.
+        // NaN-free; hinted first, then difficulty desc (or asc under the
+        // portfolio's `branch_easiest_first` diversification variant).
         order.sort_by(|&a, &b| {
             let (ha, da) = keys[a as usize];
             let (hb, db) = keys[b as usize];
-            ha.cmp(&hb)
-                .then(db.partial_cmp(&da).unwrap())
-                .then(a.cmp(&b))
+            let by_difficulty = if config.branch_easiest_first {
+                da.partial_cmp(&db).unwrap()
+            } else {
+                db.partial_cmp(&da).unwrap()
+            };
+            ha.cmp(&hb).then(by_difficulty).then(a.cmp(&b))
         });
         drop(keys);
 
@@ -330,7 +452,15 @@ impl<'a> Searcher<'a> {
             root_ub: 0,
             deadline,
             timed_out: false,
+            cancelled: false,
+            shared,
+            floor: shared.map_or(i64::MIN, |s| s.floor()),
             decisions: 0,
+            // First poll early (rate calibration + tiny-window safety);
+            // the adaptive schedule takes over from there.
+            next_poll: config.check_interval.clamp(1, MIN_POLL_INTERVAL),
+            last_poll: Instant::now(),
+            last_poll_decisions: 0,
             conflicts: 0,
             bound_prunes: 0,
             symmetry_skips: 0,
@@ -474,12 +604,47 @@ impl<'a> Searcher<'a> {
         self.fixed_obj + pot
     }
 
+    /// Count a decision and occasionally check the wall clock. The poll
+    /// interval *adapts* to the measured decision rate: it backs off
+    /// while decisions are cheap (an `Instant::now()` every 64 trivial
+    /// decisions is pure overhead) and tightens as the deadline nears,
+    /// so even a 30 ms window on a propagation-heavy instance is
+    /// overshot by at most a few decisions, not by a fixed burst.
+    /// Shared-race bookkeeping (floor refresh, cancellation) piggybacks
+    /// on the same schedule.
     fn poll_deadline(&mut self) -> bool {
         self.decisions += 1;
-        if self.decisions % self.config.check_interval == 0 && self.deadline.expired() {
-            self.timed_out = true;
+        if self.decisions < self.next_poll {
+            return self.timed_out;
         }
-        self.timed_out
+        if let Some(shared) = self.shared {
+            if shared.is_cancelled() {
+                self.cancelled = true;
+                self.timed_out = true;
+                return true;
+            }
+            self.floor = self.floor.max(shared.floor());
+        }
+        let now = Instant::now();
+        let remaining = self.deadline.remaining_from(now);
+        if remaining.is_zero() {
+            self.timed_out = true;
+            return true;
+        }
+        // Seconds per decision since the last poll (floored so the
+        // division below stays finite on coarse clocks).
+        let span = (self.decisions - self.last_poll_decisions).max(1);
+        let per_decision =
+            (now.duration_since(self.last_poll).as_secs_f64() / span as f64).max(1e-9);
+        // Aim the next poll at ~1/8 of the remaining window, capped at
+        // 1 ms so long-deadline racers still notice cancellation fast.
+        let target_s = (remaining.as_secs_f64() / 8.0).clamp(20e-6, 1e-3);
+        let interval =
+            ((target_s / per_decision) as u64).clamp(MIN_POLL_INTERVAL, MAX_POLL_INTERVAL);
+        self.last_poll = now;
+        self.last_poll_decisions = self.decisions;
+        self.next_poll = self.decisions + interval;
+        false
     }
 
     fn record_leaf(&mut self) {
@@ -489,6 +654,9 @@ impl<'a> Searcher<'a> {
             let snap = self.prop.snapshot();
             debug_assert!(self.model.feasible(&snap), "leaf violates constraints");
             self.best = Some(snap);
+            if let Some(shared) = self.shared {
+                shared.publish(val);
+            }
         }
     }
 
@@ -532,10 +700,17 @@ impl<'a> Searcher<'a> {
         }
         self.max_depth = self.max_depth.max(depth);
 
-        // Bound prune (only once an incumbent exists).
-        if self.config.use_bound && self.best.is_some() && self.ub() <= self.best_val {
-            self.bound_prunes += 1;
-            return;
+        // Bound prune — against the local incumbent once one exists, and
+        // *strictly* against the shared race floor. Strictness is what
+        // keeps portfolio racers deterministic: a subtree that could tie
+        // the global best is never skipped, so a completing racer still
+        // reports the same first-in-DFS-order optimum it finds alone.
+        if self.config.use_bound && (self.best.is_some() || self.floor > i64::MIN) {
+            let ub = self.ub();
+            if (self.best.is_some() && ub <= self.best_val) || ub < self.floor {
+                self.bound_prunes += 1;
+                return;
+            }
         }
 
         // Advance to the next undecided group.
@@ -770,6 +945,109 @@ mod tests {
         assert_eq!(sol.status, SolveStatus::Optimal);
         assert_eq!(sol.objective, 3);
         assert!(sol.values[y.idx()]);
+    }
+
+    #[test]
+    fn bound_certificate_reported() {
+        // Optimal: bound == objective.
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        let sol = solve_max(&m, &LinearExpr::of([(x, 2), (y, 3)]), Deadline::unlimited(), &cfg());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.bound, sol.objective);
+    }
+
+    #[test]
+    fn easiest_first_branching_agrees_on_optimum() {
+        let mut m = Model::new();
+        let items = [(6, 10), (5, 8), (4, 7), (3, 5)];
+        let vars = m.new_vars(items.len());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&items).map(|(&v, &(w, _))| (v, w))),
+            10,
+        );
+        let obj = LinearExpr::of(vars.iter().zip(&items).map(|(&v, &(_, val))| (v, val)));
+        let rev = SolverConfig {
+            branch_easiest_first: true,
+            ..Default::default()
+        };
+        let sol = solve_max(&m, &obj, Deadline::unlimited(), &rev);
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert_eq!(sol.objective, 17);
+    }
+
+    #[test]
+    fn shared_floor_does_not_change_a_completing_search() {
+        // Publish a floor equal to the true optimum from a phantom rival;
+        // the racer must still return the same optimal values it finds
+        // alone (strict pruning keeps tie-valued subtrees reachable).
+        let mut m = Model::new();
+        let pods = [2048i64, 2048, 3072];
+        let mut vars = Vec::new();
+        for _ in &pods {
+            let xs = m.new_vars(2);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..2 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                4096,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        let solo = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        assert_eq!(solo.status, SolveStatus::Optimal);
+
+        let shared = SharedIncumbent::new();
+        shared.publish(solo.objective);
+        let raced = solve_max_with(&m, &obj, Deadline::unlimited(), &cfg(), Some(&shared));
+        assert_eq!(raced.status, SolveStatus::Optimal);
+        assert_eq!(raced.objective, solo.objective);
+        assert_eq!(raced.values, solo.values);
+    }
+
+    #[test]
+    fn cancellation_stops_the_search() {
+        // A pre-cancelled handle must stop the racer at its first poll
+        // and report Unknown (or whatever incumbent it managed) quickly.
+        let mut m = Model::new();
+        let mut vars = Vec::new();
+        let demands: Vec<i64> = (0..30).map(|i| 100 + (i * 37) % 400).collect();
+        for _ in &demands {
+            let xs = m.new_vars(6);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            vars.push(xs);
+        }
+        for node in 0..6 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &d)| (xs[node], d))),
+                1200,
+            );
+        }
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+        let shared = SharedIncumbent::new();
+        shared.cancel();
+        let t = std::time::Instant::now();
+        let sol = solve_max_with(
+            &m,
+            &obj,
+            Deadline::after(std::time::Duration::from_secs(30)),
+            &cfg(),
+            Some(&shared),
+        );
+        // Must return far inside the 30 s deadline (first poll), and any
+        // incumbent it did record must still be a real solution.
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "cancellation ignored for {:?}",
+            t.elapsed()
+        );
+        if sol.status.has_solution() {
+            assert!(m.feasible(&sol.values));
+        }
     }
 
     #[test]

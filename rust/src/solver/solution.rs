@@ -19,6 +19,16 @@ impl SolveStatus {
     pub fn has_solution(self) -> bool {
         matches!(self, SolveStatus::Optimal | SolveStatus::Feasible)
     }
+
+    /// Stable lower-case label for reports and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            SolveStatus::Optimal => "optimal",
+            SolveStatus::Feasible => "feasible",
+            SolveStatus::Infeasible => "infeasible",
+            SolveStatus::Unknown => "unknown",
+        }
+    }
 }
 
 /// Search counters (exposed for perf work and the ablation bench).
@@ -35,12 +45,36 @@ pub struct SearchStats {
     pub solve_time_s: f64,
 }
 
+impl SearchStats {
+    /// Accumulate another stats record into this one. Counters add;
+    /// `max_depth` takes the maximum; `solve_time_s` adds (total solver
+    /// time — for concurrent portfolio workers this is CPU-ish time, not
+    /// wall-clock, and the portfolio layer overwrites it with the wall).
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.decisions += other.decisions;
+        self.propagations += other.propagations;
+        self.conflicts += other.conflicts;
+        self.bound_prunes += other.bound_prunes;
+        self.symmetry_skips += other.symmetry_skips;
+        self.max_depth = self.max_depth.max(other.max_depth);
+        self.lns_rounds += other.lns_rounds;
+        self.lns_improvements += other.lns_improvements;
+        self.solve_time_s += other.solve_time_s;
+    }
+}
+
 /// Result of a `maximize` call.
 #[derive(Clone, Debug)]
 pub struct Solution {
     pub status: SolveStatus,
     /// Objective value of `values` (meaningful iff `status.has_solution()`).
     pub objective: i64,
+    /// Admissible upper bound on the objective established by the solve:
+    /// equal to `objective` when optimality was proven, otherwise the
+    /// root relaxation bound. Together with `status` this is the
+    /// per-solve *optimality certificate* — an anytime result is at most
+    /// `bound - objective` away from optimal.
+    pub bound: i64,
     /// Complete variable assignment (empty iff no solution).
     pub values: Vec<bool>,
     pub stats: SearchStats,
@@ -51,15 +85,17 @@ impl Solution {
         Solution {
             status: SolveStatus::Infeasible,
             objective: 0,
+            bound: 0,
             values: Vec::new(),
             stats,
         }
     }
 
-    pub fn unknown(stats: SearchStats) -> Self {
+    pub fn unknown(stats: SearchStats, bound: i64) -> Self {
         Solution {
             status: SolveStatus::Unknown,
             objective: 0,
+            bound,
             values: Vec::new(),
             stats,
         }
@@ -76,5 +112,41 @@ mod tests {
         assert!(SolveStatus::Feasible.has_solution());
         assert!(!SolveStatus::Infeasible.has_solution());
         assert!(!SolveStatus::Unknown.has_solution());
+    }
+
+    #[test]
+    fn status_labels_are_stable() {
+        assert_eq!(SolveStatus::Optimal.label(), "optimal");
+        assert_eq!(SolveStatus::Feasible.label(), "feasible");
+        assert_eq!(SolveStatus::Infeasible.label(), "infeasible");
+        assert_eq!(SolveStatus::Unknown.label(), "unknown");
+    }
+
+    #[test]
+    fn stats_merge_adds_counters_and_maxes_depth() {
+        let mut a = SearchStats {
+            decisions: 3,
+            max_depth: 2,
+            solve_time_s: 0.5,
+            ..Default::default()
+        };
+        let b = SearchStats {
+            decisions: 4,
+            max_depth: 7,
+            solve_time_s: 0.25,
+            lns_rounds: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.decisions, 7);
+        assert_eq!(a.max_depth, 7);
+        assert_eq!(a.lns_rounds, 2);
+        assert!((a.solve_time_s - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn helper_constructors_carry_bounds() {
+        assert_eq!(Solution::infeasible(SearchStats::default()).bound, 0);
+        assert_eq!(Solution::unknown(SearchStats::default(), 42).bound, 42);
     }
 }

@@ -38,6 +38,12 @@ impl Deadline {
         self.end.saturating_duration_since(Instant::now())
     }
 
+    /// [`Deadline::remaining`] against a caller-provided `now` — saves a
+    /// second `Instant::now()` on hot poll paths that already hold one.
+    pub fn remaining_from(&self, now: Instant) -> Duration {
+        self.end.saturating_duration_since(now)
+    }
+
     /// The earlier of two deadlines.
     pub fn min(self, other: Deadline) -> Deadline {
         Deadline {

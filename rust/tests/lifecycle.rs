@@ -7,6 +7,7 @@ use kube_packd::lifecycle::{
 };
 use kube_packd::metrics::lex_better;
 use kube_packd::optimizer::algorithm::OptimizerConfig;
+use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
 use kube_packd::workload::GenParams;
 
@@ -36,6 +37,7 @@ fn solver_cfg(policy: Policy) -> ChurnConfig {
             eviction_budget: 8,
         },
         fallback_timeout: std::time::Duration::from_secs(5),
+        fallback_portfolio: PortfolioConfig::default(),
     }
 }
 

@@ -1,0 +1,320 @@
+//! Portfolio-subsystem integration tests: thread-count determinism,
+//! decomposition merge safety against `ClusterState` invariants, and
+//! bit-for-bit parity of `threads = 1` with the legacy solver.
+//!
+//! Determinism caveat (same as the churn replay digests): byte-identity
+//! across worker counts holds whenever every racer completes inside its
+//! window, so these tests use tiny models under generous deadlines.
+
+use kube_packd::cluster::{
+    identical_nodes, ClusterState, NodeId, Pod, PodId, Priority, Resources, Taint, Toleration,
+};
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::optimizer::plan::MovePlan;
+use kube_packd::portfolio::{solve_portfolio, PortfolioConfig};
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig};
+use kube_packd::util::prop::check;
+use kube_packd::util::rng::Rng;
+use kube_packd::util::timer::Deadline;
+use kube_packd::workload::{ConstraintProfile, GenParams, Instance};
+
+/// Random small packing model (pods × nodes, two capacity dimensions).
+fn random_packing(rng: &mut Rng) -> (Model, LinearExpr) {
+    let pods = rng.range_usize(2, 10);
+    let nodes = rng.range_usize(1, 4);
+    let mut m = Model::new();
+    let mut vars = Vec::new();
+    let demands: Vec<(i64, i64)> = (0..pods)
+        .map(|_| (rng.range_i64(50, 600), rng.range_i64(50, 600)))
+        .collect();
+    for _ in 0..pods {
+        let xs = m.new_vars(nodes);
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        vars.push(xs);
+    }
+    let cap = rng.range_i64(300, 1500);
+    let mut cpu_class = Vec::new();
+    let mut ram_class = Vec::new();
+    for j in 0..nodes {
+        cpu_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(c, _))| (xs[j], c))),
+            cap,
+        );
+        ram_class.push(m.next_constraint_index());
+        m.add_le(
+            LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(_, r))| (xs[j], r))),
+            cap,
+        );
+    }
+    m.add_resource_class(cpu_class);
+    m.add_resource_class(ram_class);
+    let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+    (m, obj)
+}
+
+#[test]
+fn threads_one_is_bit_for_bit_the_legacy_solver() {
+    check(
+        "portfolio_threads1_legacy_parity",
+        0x70F0,
+        20,
+        random_packing,
+        |(m, obj)| {
+            let legacy = solve_max(m, obj, Deadline::unlimited(), &SolverConfig::default());
+            let out = solve_portfolio(
+                m,
+                obj,
+                Deadline::unlimited(),
+                &SolverConfig::default(),
+                &PortfolioConfig::with_threads(1),
+            );
+            if out.solution.status != legacy.status
+                || out.solution.objective != legacy.objective
+                || out.solution.values != legacy.values
+            {
+                return Err(format!(
+                    "threads=1 diverged: {:?}/{} vs {:?}/{}",
+                    out.solution.status, out.solution.objective, legacy.status, legacy.objective
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The determinism satellite: the same model/seed solved with
+/// `threads` ∈ {1, 2, 8} yields byte-identical assignments and
+/// objectives (every racer completes — unlimited deadline).
+#[test]
+fn prop_solver_thread_counts_yield_identical_solutions() {
+    check(
+        "portfolio_thread_count_independence",
+        0xD37E,
+        15,
+        random_packing,
+        |(m, obj)| {
+            let runs: Vec<_> = [1usize, 2, 8]
+                .iter()
+                .map(|&threads| {
+                    solve_portfolio(
+                        m,
+                        obj,
+                        Deadline::unlimited(),
+                        &SolverConfig::default(),
+                        &PortfolioConfig::with_threads(threads),
+                    )
+                    .solution
+                })
+                .collect();
+            for (i, run) in runs.iter().enumerate().skip(1) {
+                if run.status != runs[0].status
+                    || run.objective != runs[0].objective
+                    || run.values != runs[0].values
+                {
+                    return Err(format!(
+                        "run {i} diverged: {:?}/{} vs {:?}/{}",
+                        run.status, run.objective, runs[0].status, runs[0].objective
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End-to-end determinism through Algorithm 1: identical plans and
+/// per-tier objective vectors for `threads` ∈ {1, 2, 8}.
+#[test]
+fn prop_optimizer_thread_counts_yield_identical_plans() {
+    check(
+        "optimizer_thread_count_independence",
+        0xAB5E,
+        6,
+        |rng| {
+            // Tiny on purpose: byte-identity across worker counts is
+            // only guaranteed when every solve completes in-window.
+            let params = GenParams {
+                nodes: rng.range_usize(2, 4),
+                pods_per_node: rng.range_usize(2, 3),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.9 + rng.f64() * 0.2,
+            };
+            Instance::generate(params, rng.next_u64())
+        },
+        |inst| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            let runs: Vec<_> = [1usize, 2, 8]
+                .iter()
+                .map(|&threads| {
+                    optimize(
+                        &state,
+                        p_max,
+                        &OptimizerConfig::with_timeout(10.0).with_threads(threads),
+                    )
+                })
+                .collect();
+            let Some(base) = &runs[0] else {
+                return if runs.iter().all(|r| r.is_none()) {
+                    Ok(())
+                } else {
+                    Err("solvability depended on thread count".into())
+                };
+            };
+            for (i, run) in runs.iter().enumerate().skip(1) {
+                let Some(run) = run else {
+                    return Err(format!("threads run {i} failed where base succeeded"));
+                };
+                if run.target != base.target {
+                    return Err(format!("plan diverged at run {i}"));
+                }
+                if run.placed_per_priority != base.placed_per_priority {
+                    return Err(format!("objective vector diverged at run {i}"));
+                }
+                if run.proved_optimal != base.proved_optimal {
+                    return Err(format!("certificate diverged at run {i}"));
+                }
+                let tiers: Vec<_> = run
+                    .tiers
+                    .iter()
+                    .map(|t| (t.phase1_placed, t.phase2_metric))
+                    .collect();
+                let base_tiers: Vec<_> = base
+                    .tiers
+                    .iter()
+                    .map(|t| (t.phase1_placed, t.phase2_metric))
+                    .collect();
+                if tiers != base_tiers {
+                    return Err(format!("per-tier metrics diverged at run {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Decomposition-merge safety: plans produced by the parallel path must
+/// execute cleanly and preserve every `ClusterState` invariant, on both
+/// plain and taint-partitioned (genuinely decomposable) workloads.
+#[test]
+fn prop_decomposed_plans_preserve_cluster_invariants() {
+    check(
+        "portfolio_plan_invariants",
+        0x1A7B,
+        8,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(3, 6),
+                pods_per_node: rng.range_usize(2, 4),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.9 + rng.f64() * 0.15,
+            };
+            let profile = if rng.chance(0.5) {
+                ConstraintProfile::Taints
+            } else {
+                ConstraintProfile::None
+            };
+            Instance::generate_constrained(params, rng.next_u64(), profile)
+        },
+        |inst| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            let Some(res) = optimize(
+                &state,
+                p_max,
+                &OptimizerConfig::with_timeout(10.0).with_threads(4),
+            ) else {
+                return Ok(()); // a Failure is allowed, corruption is not
+            };
+            let plan = MovePlan::build(&state, &res.target);
+            let mut live = state.clone();
+            plan.execute(&mut live).map_err(|e| format!("plan: {e}"))?;
+            live.check_invariants()?;
+            if live.assignment() != &res.target[..] {
+                return Err("plan did not realise the portfolio target".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A taint-partitioned cluster splits into one component per pool, and
+/// the parallel path still agrees with the single-threaded plan.
+#[test]
+fn taint_pools_decompose_into_components() {
+    // Nodes 0-1 are pool "a", nodes 2-3 pool "b"; every pod tolerates
+    // exactly one pool, so the candidate node sets partition.
+    let mut nodes = identical_nodes(4, Resources::new(1000, 1000));
+    for (i, node) in nodes.iter_mut().enumerate() {
+        let pool = if i < 2 { "a" } else { "b" };
+        *node = node.clone().with_taint(Taint::no_schedule("pool", pool));
+    }
+    let mut pods = Vec::new();
+    for i in 0..6u32 {
+        let pool = if i < 3 { "a" } else { "b" };
+        pods.push(
+            Pod::new(i, format!("pod-{i}"), Resources::new(400, 400), Priority(0))
+                .with_toleration(Toleration::equal("pool", pool)),
+        );
+    }
+    let mut state = ClusterState::new(nodes, pods);
+    // Fragment pool "a" so the optimiser has real work there.
+    state.bind(PodId(0), NodeId(0)).unwrap();
+    state.bind(PodId(1), NodeId(1)).unwrap();
+
+    let single = optimize(&state, 0, &OptimizerConfig::with_timeout(10.0)).unwrap();
+    let parallel = optimize(
+        &state,
+        0,
+        &OptimizerConfig::with_timeout(10.0).with_threads(4),
+    )
+    .unwrap();
+    assert_eq!(parallel.target, single.target);
+    assert_eq!(parallel.placed_per_priority, single.placed_per_priority);
+    assert!(parallel.proved_optimal);
+    // phase 1 of tier 0 carries no locks: the two pools decompose
+    assert!(
+        parallel.portfolio.components >= 2,
+        "expected the taint pools to split: {:?}",
+        parallel.portfolio
+    );
+    assert!(parallel.portfolio.components_certified >= 2);
+}
+
+/// The portfolio certificate is sound: reported bounds dominate the
+/// achieved objective, and a proven status closes the gap.
+#[test]
+fn certificates_are_sound_under_parallel_solving() {
+    check(
+        "portfolio_certificate_soundness",
+        0xCE27,
+        10,
+        random_packing,
+        |(m, obj)| {
+            let out = solve_portfolio(
+                m,
+                obj,
+                Deadline::unlimited(),
+                &SolverConfig::default(),
+                &PortfolioConfig::with_threads(4),
+            );
+            let sol = &out.solution;
+            if sol.bound < sol.objective {
+                return Err(format!("bound {} below objective {}", sol.bound, sol.objective));
+            }
+            if sol.status == SolveStatus::Optimal && sol.bound != sol.objective {
+                return Err("proven optimal but bound not closed".into());
+            }
+            for report in &out.components {
+                if report.bound < report.objective {
+                    return Err(format!("component bound unsound: {report:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -143,6 +143,10 @@ fn prop_solver_feature_toggles_agree_on_optimum() {
                     use_hints: false,
                     ..Default::default()
                 },
+                SolverConfig {
+                    branch_easiest_first: true,
+                    ..Default::default()
+                },
             ] {
                 let alt = solve_max(m, obj, Deadline::unlimited(), &cfg);
                 if alt.status != SolveStatus::Optimal || base.status != SolveStatus::Optimal {
