@@ -49,6 +49,7 @@ fn main() {
         },
         fallback_timeout: std::time::Duration::from_millis(500),
         fallback_portfolio: PortfolioConfig::default(),
+        incremental: false,
     };
     let heavy = Bencher::heavy();
     let events = run_churn(&trace, &cfg).events_processed;

@@ -1,0 +1,170 @@
+//! Bench: incremental solve sessions — cold vs warm solve cost on a
+//! seeded churn trace, plus the no-op-delta replay microbenchmark.
+//!
+//! Emits machine-readable `BENCH_incremental.json` in the working
+//! directory: one cell per (scenario, mode) with timing and session
+//! reuse counters, and a determinism record asserting the warm run
+//! reproduced the cold run's end metrics (the session contract: caching
+//! changes how fast, never what).
+
+use std::time::Duration;
+
+use kube_packd::cluster::ClusterState;
+use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy, SweepConfig};
+use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::optimizer::SolveSession;
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::util::json::Json;
+use kube_packd::workload::{ChurnParams, ChurnTraceGenerator, GenParams, Instance};
+
+fn main() {
+    let b = Bencher::new(0, 3, Duration::from_secs(60));
+    let mut cells: Vec<Json> = Vec::new();
+
+    // ---- churn: the driver the session layer exists for -------------------
+    let trace = ChurnTraceGenerator::new(
+        ChurnParams {
+            horizon_ms: 10_000,
+            mean_arrival_ms: 800,
+            mean_lifetime_ms: 6_000,
+            ..ChurnParams::for_cluster(GenParams {
+                nodes: 6,
+                pods_per_node: 4,
+                priority_tiers: 2,
+                usage: 0.95,
+            })
+        },
+        0xC01D,
+    )
+    .generate();
+    let mut base = ChurnConfig::for_policy(Policy::FallbackSweep);
+    base.sweep_every_ms = 1_000;
+    base.fallback_timeout = Duration::from_secs(2);
+    base.sweep = SweepConfig {
+        optimizer: OptimizerConfig::with_timeout(2.0),
+        eviction_budget: 8,
+    };
+
+    let mut cold_res = None;
+    let m_cold = b.run("incremental/churn-cold", || {
+        cold_res = Some(run_churn(&trace, &base));
+    });
+    let warm_cfg = ChurnConfig {
+        incremental: true,
+        ..base.clone()
+    };
+    let mut warm_res = None;
+    let m_warm = b.run("incremental/churn-warm", || {
+        warm_res = Some(run_churn(&trace, &warm_cfg));
+    });
+    let cold = cold_res.expect("cold churn ran");
+    let warm = warm_res.expect("warm churn ran");
+    let deterministic = cold.log.digest() == warm.log.digest()
+        && cold.served_per_priority == warm.served_per_priority
+        && cold.final_placed == warm.final_placed;
+    println!(
+        "  -> warm reuse: full={} solve={} component={} warm-seeds={} deterministic-match={}",
+        warm.session_full_hits,
+        warm.solve_cache_hits,
+        warm.component_cache_hits,
+        warm.warm_starts,
+        deterministic
+    );
+    for (mode, m, r) in [("cold", &m_cold, &cold), ("warm", &m_warm, &warm)] {
+        let mut cell = Json::obj();
+        cell.set("scenario", "churn")
+            .set("mode", mode)
+            .set("mean_s", m.mean_s)
+            .set("median_s", m.median_s)
+            .set("min_s", m.min_s)
+            .set("max_s", m.max_s)
+            .set("solver_invocations", r.solver_invocations as u64)
+            .set("sweeps_run", r.sweeps_run as u64)
+            .set("session_full_hits", r.session_full_hits)
+            .set("solve_cache_hits", r.solve_cache_hits)
+            .set("component_cache_hits", r.component_cache_hits)
+            .set("warm_starts", r.warm_starts);
+        cells.push(cell);
+    }
+
+    // ---- resolve: cold first solve vs no-op-delta replay -------------------
+    let insts = Instance::generate_challenging(
+        GenParams {
+            nodes: 8,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 1.0,
+        },
+        1,
+        0xBEEF,
+        300,
+    );
+    if let Some(inst) = insts.first() {
+        let p_max = inst.params.p_max();
+        let mut sim = KwokSimulator::new(p_max);
+        let (state, _): (ClusterState, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+        // Generous window: the no-op replay only arms off a fully
+        // certified run, and byte-identity is only contractual for
+        // solves that complete in-window.
+        let cfg = OptimizerConfig::with_timeout(10.0);
+
+        let m_first = b.run("incremental/resolve-cold", || {
+            black_box(optimize(&state, p_max, &cfg));
+        });
+        let mut session = SolveSession::new();
+        let reference = session.solve(&state, p_max, &cfg);
+        let certified = reference.as_ref().is_some_and(|r| r.proved_optimal);
+        let m_noop = b.run("incremental/resolve-noop", || {
+            let replay = session.solve(&state, p_max, &cfg);
+            if certified {
+                assert_eq!(
+                    replay.as_ref().map(|r| &r.target),
+                    reference.as_ref().map(|r| &r.target),
+                    "replay must be byte-identical"
+                );
+            }
+            black_box(replay);
+        });
+        println!(
+            "  -> no-op replays: {} (optimizer runs stayed at {})",
+            session.stats.full_hits, session.stats.optimizer_runs
+        );
+        for (mode, m) in [("cold", &m_first), ("noop", &m_noop)] {
+            let mut cell = Json::obj();
+            cell.set("scenario", "resolve")
+                .set("mode", mode)
+                .set("mean_s", m.mean_s)
+                .set("median_s", m.median_s)
+                .set("min_s", m.min_s)
+                .set("max_s", m.max_s)
+                .set("session_full_hits", session.stats.full_hits)
+                .set("solve_cache_hits", session.cache_stats().solve_hits)
+                .set("component_cache_hits", session.cache_stats().component_hits)
+                .set("warm_starts", session.cache_stats().warm_seeds);
+            cells.push(cell);
+        }
+    } else {
+        println!("resolve scenario: no challenging instance generated; skipped");
+    }
+
+    let mut determinism = Json::obj();
+    determinism
+        .set("cold_digest", format!("{:016x}", cold.log.digest()))
+        .set("warm_digest", format!("{:016x}", warm.log.digest()))
+        .set("byte_identical", deterministic);
+
+    let mut doc = Json::obj();
+    doc.set("bench", "incremental")
+        .set("schema", 1u64)
+        .set(
+            "host_threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64,
+        )
+        .set("trace_seed", 0xC01Du64)
+        .set("determinism", determinism)
+        .set("cells", Json::Arr(cells));
+    std::fs::write("BENCH_incremental.json", doc.to_string_pretty())
+        .expect("write BENCH_incremental.json");
+    println!("wrote BENCH_incremental.json");
+}

@@ -7,14 +7,43 @@
 use super::node::NodeId;
 use super::pod::PodId;
 
+/// Who ordered an eviction. Sweep-driven defragmentation moves and
+/// fallback pre-emption displacements are different operational costs
+/// (a sweep is elective, a pre-emption is forced), so the event log
+/// attributes each eviction to its driver instead of conflating them in
+/// one counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictCause {
+    /// Cross-node pre-emption on behalf of the optimiser's fallback plan.
+    Preemption,
+    /// Periodic defragmentation sweep executing a re-pack plan.
+    Sweep,
+    /// Node drain (cordon + evict residents).
+    Drain,
+}
+
+impl EvictCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            EvictCause::Preemption => "preemption",
+            EvictCause::Sweep => "sweep",
+            EvictCause::Drain => "drain",
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
     /// Pod bound to a node by the default scheduler.
     Bind { pod: PodId, node: NodeId },
     /// Pod bound to a node chosen by the optimiser's plan.
     PlanBind { pod: PodId, node: NodeId },
-    /// Pod evicted (cross-node pre-emption on behalf of the optimiser).
-    Evict { pod: PodId, node: NodeId },
+    /// Pod evicted; `cause` attributes the eviction to its driver.
+    Evict {
+        pod: PodId,
+        node: NodeId,
+        cause: EvictCause,
+    },
     /// Pod marked unschedulable by the scheduling cycle.
     Unschedulable { pod: PodId },
     /// Optimiser invoked over the current cluster state.
@@ -81,6 +110,14 @@ impl EventLog {
         self.events.push(e);
     }
 
+    /// Move every event of `other` onto the end of this log, preserving
+    /// order (`other` is left empty). Lets a caller detach a log, run a
+    /// trial mutation on a log-free clone, and splice the trial's fresh
+    /// events back without ever copying the full history.
+    pub fn append(&mut self, other: &mut EventLog) {
+        self.events.append(&mut other.events);
+    }
+
     pub fn all(&self) -> &[Event] {
         &self.events
     }
@@ -98,9 +135,14 @@ impl EventLog {
         self.events.iter().filter(|e| pred(e)).count()
     }
 
-    /// Number of evictions recorded (disruption metric).
+    /// Number of evictions recorded (disruption metric), all causes.
     pub fn evictions(&self) -> usize {
         self.count(|e| matches!(e, Event::Evict { .. }))
+    }
+
+    /// Evictions attributed to one driver (sweep vs pre-emption vs drain).
+    pub fn evictions_by(&self, cause: EvictCause) -> usize {
+        self.count(|e| matches!(e, Event::Evict { cause: c, .. } if *c == cause))
     }
 
     /// Number of binds (default + planned).
@@ -128,13 +170,22 @@ mod tests {
         log.push(Event::Evict {
             pod: PodId(0),
             node: NodeId(0),
+            cause: EvictCause::Preemption,
+        });
+        log.push(Event::Evict {
+            pod: PodId(1),
+            node: NodeId(0),
+            cause: EvictCause::Sweep,
         });
         log.push(Event::PlanBind {
             pod: PodId(0),
             node: NodeId(1),
         });
-        assert_eq!(log.len(), 3);
-        assert_eq!(log.evictions(), 1);
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.evictions(), 2);
+        assert_eq!(log.evictions_by(EvictCause::Preemption), 1);
+        assert_eq!(log.evictions_by(EvictCause::Sweep), 1);
+        assert_eq!(log.evictions_by(EvictCause::Drain), 0);
         assert_eq!(log.binds(), 2);
     }
 }

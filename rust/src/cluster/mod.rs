@@ -21,7 +21,7 @@ pub mod resources;
 pub mod state;
 
 pub use constraints::{Taint, TaintEffect, Toleration};
-pub use events::{Event, EventLog};
+pub use events::{Event, EventLog, EvictCause};
 pub use node::{identical_nodes, Node, NodeId};
 pub use pod::{Pod, PodId, Priority};
 pub use replicaset::ReplicaSet;

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use super::events::{Event, EventLog};
+use super::events::{Event, EventLog, EvictCause};
 use super::node::{Node, NodeId};
 use super::pod::{Pod, PodId, Priority};
 use super::resources::Resources;
@@ -350,13 +350,23 @@ impl ClusterState {
         }
     }
 
-    /// Evict a bound pod (returns the node it was on).
+    /// Evict a bound pod as optimiser pre-emption (the historical
+    /// default cause); returns the node it was on. Use [`evict_as`] when
+    /// a different driver (sweep, drain) orders the eviction so the
+    /// event log attributes it correctly.
+    ///
+    /// [`evict_as`]: ClusterState::evict_as
     pub fn evict(&mut self, pod: PodId) -> Result<NodeId, StateError> {
+        self.evict_as(pod, EvictCause::Preemption)
+    }
+
+    /// [`evict`](ClusterState::evict) with an explicit attribution.
+    pub fn evict_as(&mut self, pod: PodId, cause: EvictCause) -> Result<NodeId, StateError> {
         let node = self.assignment[pod.idx()].ok_or(StateError::NotBound(pod))?;
         self.free[node.idx()] += self.pods[pod.idx()].request;
         self.charge_extended(pod, node, 1);
         self.assignment[pod.idx()] = None;
-        self.events.push(Event::Evict { pod, node });
+        self.events.push(Event::Evict { pod, node, cause });
         debug_assert!(self.check_invariants().is_ok());
         Ok(node)
     }
@@ -422,7 +432,8 @@ impl ClusterState {
         }
         let victims = self.pods_on(node);
         for &pod in &victims {
-            self.evict(pod).expect("pods_on returned an unbound pod");
+            self.evict_as(pod, EvictCause::Drain)
+                .expect("pods_on returned an unbound pod");
         }
         self.events.push(Event::NodeDrained {
             node,
@@ -737,6 +748,8 @@ mod tests {
         s.bind(PodId(2), NodeId(1)).unwrap();
         let victims = s.drain(NodeId(0));
         assert_eq!(victims, vec![PodId(0), PodId(1)]);
+        assert_eq!(s.events.evictions_by(EvictCause::Drain), 2);
+        assert_eq!(s.events.evictions_by(EvictCause::Preemption), 0);
         assert!(!s.node_ready(NodeId(0)));
         assert_eq!(s.free(NodeId(0)), Resources::new(4000, 4096));
         // drained pods are pending again (not retired)

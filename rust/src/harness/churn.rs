@@ -47,23 +47,42 @@ pub fn churn_report(trace: &ChurnTrace, results: &[ChurnResult]) -> String {
         "final placed",
         "pending",
         "completions",
-        "evictions",
+        "evictions (pre+swp+drn)",
         "solver calls",
         "sweeps",
+        "cache hits",
         "mean cpu",
         "log digest",
     ]));
     out.push('\n');
     for r in results {
+        // incremental-session reuse: full-state / per-solve /
+        // per-component replays + warm-start floors seeded ("-" when
+        // sessions are off or idle)
+        let hits = r.session_full_hits + r.solve_cache_hits + r.component_cache_hits;
+        let cache_cell = if hits + r.warm_starts == 0 {
+            "-".to_string()
+        } else {
+            format!(
+                "{}/{}/{}+{}w",
+                r.session_full_hits, r.solve_cache_hits, r.component_cache_hits, r.warm_starts
+            )
+        };
         let row = md_row(&[
             r.policy.label().to_string(),
             vec_cell(&r.served_per_priority),
             vec_cell(&r.final_placed),
             r.final_pending.to_string(),
             r.completions.to_string(),
-            r.evictions.to_string(),
+            // attribution split: elective sweep moves are a different
+            // operational cost than forced pre-emptions or drains
+            format!(
+                "{} ({}+{}+{})",
+                r.evictions, r.evictions_preemption, r.evictions_sweep, r.evictions_drain
+            ),
             r.solver_invocations.to_string(),
             format!("{}/{}", r.sweeps_applied, r.sweeps_run),
+            cache_cell,
             format!("{:.1}%", r.series.mean_cpu() * 100.0),
             format!("{:016x}", r.log.digest()),
         ]);
@@ -116,6 +135,9 @@ mod tests {
         assert!(report.contains("fallback+sweep"));
         assert!(report.contains("log digest"));
         assert!(report.contains("serves >= default-only"));
+        // the eviction column carries the per-driver attribution split
+        assert!(report.contains("evictions (pre+swp+drn)"));
+        assert!(report.contains("cache hits"));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::metrics::categories::{classify, Outcome};
 use crate::metrics::utilization_delta;
 use crate::optimizer::algorithm::{optimize, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
+use crate::optimizer::session::SolveSession;
 use crate::optimizer::TierReport;
 use crate::portfolio::{PortfolioConfig, PortfolioStats};
 use crate::simulator::KwokSimulator;
@@ -57,6 +58,20 @@ pub fn run_instance_with(
     solver: &SolverConfig,
     portfolio: &PortfolioConfig,
 ) -> InstanceRun {
+    run_instance_session(inst, timeout_s, solver, portfolio, None)
+}
+
+/// [`run_instance_with`] plus an optional incremental [`SolveSession`]
+/// shared across calls: datasets of near-identical instances (and the
+/// re-solves inside one) reuse proven certificates and warm starts —
+/// the `solve --incremental` path. `None` solves cold.
+pub fn run_instance_session(
+    inst: &Instance,
+    timeout_s: f64,
+    solver: &SolverConfig,
+    portfolio: &PortfolioConfig,
+    session: Option<&mut SolveSession>,
+) -> InstanceRun {
     let p_max = inst.params.p_max();
 
     // 1. KWOK baseline (deterministic profile).
@@ -90,7 +105,10 @@ pub fn run_instance_with(
         ..Default::default()
     };
     let sw = Stopwatch::start();
-    let result = optimize(&state, p_max, &cfg);
+    let result = match session {
+        Some(sess) => sess.solve(&state, p_max, &cfg),
+        None => optimize(&state, p_max, &cfg),
+    };
     let solver_duration_s = sw.elapsed_secs();
 
     let (outcome, opt_placed, delta, disruptions) = match &result {

@@ -22,16 +22,17 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::cluster::{ClusterState, Event, NodeId, PodId, ReplicaSet, Resources};
+use crate::cluster::{ClusterState, Event, EvictCause, NodeId, PodId, ReplicaSet, Resources};
 use crate::metrics::{pending_per_priority, TimeSeries, UtilSample};
 use crate::optimizer::algorithm::OptimizerConfig;
+use crate::optimizer::session::SolveSession;
 use crate::optimizer::OptimizingScheduler;
 use crate::portfolio::PortfolioConfig;
 use crate::scheduler::DefaultScheduler;
 use crate::workload::churn::{ChurnTrace, TraceOp};
 
 use super::clock::SimClock;
-use super::sweep::{run_sweep, SweepConfig};
+use super::sweep::{run_sweep_session, SweepConfig};
 use super::timeline::{LifecycleEvent, Timeline};
 use super::trace::ChurnLog;
 
@@ -69,6 +70,12 @@ pub struct ChurnConfig {
     /// Portfolio knobs for the fallback optimiser (sweeps carry their
     /// own inside [`SweepConfig`]'s `optimizer`).
     pub fallback_portfolio: PortfolioConfig,
+    /// Keep incremental [`SolveSession`]s alive across the run: one for
+    /// the fallback optimiser, one for the sweeps. Consecutive solves
+    /// over near-identical states replay proven certificates and
+    /// warm-start the rest — byte-identical results, less work (the
+    /// churn CLI's `--incremental`).
+    pub incremental: bool,
 }
 
 impl ChurnConfig {
@@ -79,6 +86,7 @@ impl ChurnConfig {
             sweep: SweepConfig::default(),
             fallback_timeout: Duration::from_secs(2),
             fallback_portfolio: PortfolioConfig::default(),
+            incremental: false,
         }
     }
 }
@@ -97,12 +105,28 @@ pub struct ChurnResult {
     /// Pods that arrived, per priority tier.
     pub arrivals_per_priority: Vec<usize>,
     pub completions: usize,
+    /// Total evictions, all causes — always the sum of the three
+    /// attributed counters below.
     pub evictions: usize,
+    /// Forced displacements by the fallback optimiser's plan.
+    pub evictions_preemption: usize,
+    /// Elective moves by the periodic defragmentation sweep.
+    pub evictions_sweep: usize,
+    /// Drain-ordered evictions (node lifecycle, not the optimiser).
+    pub evictions_drain: usize,
     pub solver_invocations: usize,
     pub sweeps_run: usize,
     pub sweeps_applied: usize,
     /// Lifecycle events processed (timeline pops).
     pub events_processed: usize,
+    /// Incremental-session counters, summed over the fallback and sweep
+    /// sessions (all zero when `incremental` is off): full-state
+    /// replays, per-solve cache hits, per-component cache hits, and
+    /// warm-start floors seeded.
+    pub session_full_hits: u64,
+    pub solve_cache_hits: u64,
+    pub component_cache_hits: u64,
+    pub warm_starts: u64,
     pub series: TimeSeries,
     pub log: ChurnLog,
 }
@@ -142,9 +166,18 @@ struct ChurnRunner {
     horizon_ms: u64,
     /// Events of `state.events` already scanned for binds/evictions.
     seen_events: usize,
-    /// Running eviction count (incremental mirror of the event log, so
-    /// per-tick sampling never rescans the whole log).
+    /// Running eviction counts (incremental mirror of the event log, so
+    /// per-tick sampling never rescans the whole log), split by driver.
     evictions_total: usize,
+    evictions_preemption: usize,
+    evictions_sweep: usize,
+    evictions_drain: usize,
+    /// Incremental solve sessions (alive for the whole run when
+    /// `cfg.incremental`); the fallback and the sweep each own one —
+    /// they solve under different configs, so their certificates never
+    /// interchange.
+    fallback_session: Option<SolveSession>,
+    sweep_session: Option<SolveSession>,
     state: ClusterState,
     clock: SimClock,
     timeline: Timeline,
@@ -183,11 +216,16 @@ impl ChurnRunner {
         }
         let tiers = trace.p_max as usize + 1;
         ChurnRunner {
-            cfg: cfg.clone(),
             p_max: trace.p_max,
             horizon_ms: trace.params.horizon_ms,
             seen_events: 0,
             evictions_total: 0,
+            evictions_preemption: 0,
+            evictions_sweep: 0,
+            evictions_drain: 0,
+            fallback_session: cfg.incremental.then(SolveSession::new),
+            sweep_session: cfg.incremental.then(SolveSession::new),
+            cfg: cfg.clone(),
             state: ClusterState::new(trace.nodes.clone(), Vec::new()),
             clock: SimClock::new(),
             timeline,
@@ -240,6 +278,14 @@ impl ChurnRunner {
                 evictions: self.evictions_total,
             });
         }
+        let (mut full_hits, mut solve_hits, mut component_hits, mut warm) = (0, 0, 0, 0);
+        for session in [&self.fallback_session, &self.sweep_session].into_iter().flatten() {
+            full_hits += session.stats.full_hits;
+            let c = session.cache_stats();
+            solve_hits += c.solve_hits;
+            component_hits += c.component_hits;
+            warm += c.warm_seeds;
+        }
         ChurnResult {
             policy: self.cfg.policy,
             served_per_priority: self.served,
@@ -248,10 +294,17 @@ impl ChurnRunner {
             arrivals_per_priority: self.arrivals,
             completions: self.completions,
             evictions: self.evictions_total,
+            evictions_preemption: self.evictions_preemption,
+            evictions_sweep: self.evictions_sweep,
+            evictions_drain: self.evictions_drain,
             solver_invocations: self.solver_invocations,
             sweeps_run: self.sweeps_run,
             sweeps_applied: self.sweeps_applied,
             events_processed: self.events_processed,
+            session_full_hits: full_hits,
+            solve_cache_hits: solve_hits,
+            component_cache_hits: component_hits,
+            warm_starts: warm,
             series: self.series,
             log: self.log,
         }
@@ -409,6 +462,9 @@ impl ChurnRunner {
                 self.log.push(at, line);
             }
             Policy::Fallback | Policy::FallbackSweep => {
+                // The scheduler is rebuilt per round (no hidden queue
+                // state across ticks); the solve session is the one
+                // deliberate carrier of cross-tick solver knowledge.
                 let mut osched = OptimizingScheduler::new(
                     self.p_max,
                     OptimizerConfig {
@@ -417,7 +473,8 @@ impl ChurnRunner {
                         ..Default::default()
                     },
                 );
-                let report = osched.run(&mut self.state);
+                let report =
+                    osched.run_with_session(&mut self.state, self.fallback_session.as_mut());
                 let pending_after = self.state.pending_pods().len();
                 if report.solver_invoked {
                     self.solver_invocations += 1;
@@ -439,7 +496,12 @@ impl ChurnRunner {
 
     fn defrag_sweep(&mut self, at: u64) {
         self.sweeps_run += 1;
-        let report = run_sweep(&mut self.state, self.p_max, &self.cfg.sweep);
+        let report = run_sweep_session(
+            &mut self.state,
+            self.p_max,
+            &self.cfg.sweep,
+            self.sweep_session.as_mut(),
+        );
         if report.applied {
             self.sweeps_applied += 1;
             let line = format!(
@@ -469,8 +531,13 @@ impl ChurnRunner {
         for e in &events[self.seen_events..] {
             let pod = match e {
                 Event::Bind { pod, .. } | Event::PlanBind { pod, .. } => *pod,
-                Event::Evict { .. } => {
+                Event::Evict { cause, .. } => {
                     self.evictions_total += 1;
+                    match cause {
+                        EvictCause::Preemption => self.evictions_preemption += 1,
+                        EvictCause::Sweep => self.evictions_sweep += 1,
+                        EvictCause::Drain => self.evictions_drain += 1,
+                    }
                     continue;
                 }
                 _ => continue,
@@ -557,6 +624,128 @@ mod tests {
         cfg.sweep_every_ms = 1_000;
         let res = run_churn(&trace, &cfg);
         assert_eq!(res.sweeps_run, 4, "one sweep per period inside the horizon");
+    }
+
+    #[test]
+    fn eviction_split_sums_to_total_across_policies() {
+        let trace = tiny_trace(9);
+        for r in compare_policies(&trace, &ChurnConfig::for_policy(Policy::FallbackSweep)) {
+            assert_eq!(
+                r.evictions,
+                r.evictions_preemption + r.evictions_sweep + r.evictions_drain,
+                "split must partition the total for {}",
+                r.policy.label()
+            );
+            if r.policy == Policy::DefaultOnly {
+                // no optimiser, no sweeps: only drains may evict
+                assert_eq!(r.evictions_preemption + r.evictions_sweep, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_attribution_pins_preemption_vs_sweep_vs_drain() {
+        use crate::cluster::{identical_nodes, Pod, Priority};
+        use crate::lifecycle::sweep::run_sweep;
+
+        // One event trail that exercises all three drivers in turn.
+        // Phase 1 — fallback pre-emption: a high-priority pod displaces
+        // a low one (the plugin path).
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "lo-1", Resources::new(600, 600), Priority(1)),
+            Pod::new(1, "lo-2", Resources::new(600, 600), Priority(1)),
+            Pod::new(2, "hi", Resources::new(900, 900), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        let mut osched = OptimizingScheduler::new(1, OptimizerConfig::with_timeout(5.0));
+        let report = osched.run(&mut st);
+        assert!(report.improved);
+        let preempted = st.events.evictions_by(EvictCause::Preemption);
+        assert!(preempted >= 1, "fallback displaced a low-priority pod");
+        assert_eq!(st.events.evictions_by(EvictCause::Sweep), 0);
+
+        // Phase 2 — sweep move: two joined big nodes fragmented the
+        // figure-1 way; the defrag sweep's re-pack move must be
+        // attributed to the sweep, leaving the pre-emption count alone.
+        st.join_node(Resources::new(4000, 4096));
+        st.join_node(Resources::new(4000, 4096));
+        let a = st.add_pod(Pod::new(0, "frag-1", Resources::new(10, 2048), Priority(1)));
+        let b = st.add_pod(Pod::new(0, "frag-2", Resources::new(10, 2048), Priority(1)));
+        let _c = st.add_pod(Pod::new(0, "frag-3", Resources::new(10, 3072), Priority(1)));
+        st.bind(a, NodeId(2)).unwrap();
+        st.bind(b, NodeId(3)).unwrap();
+        let sweep_report = run_sweep(&mut st, 1, &SweepConfig::default());
+        assert!(sweep_report.applied, "re-pack places the stranded pod");
+        let swept = st.events.evictions_by(EvictCause::Sweep);
+        assert!(swept >= 1, "sweep moved a pod");
+        assert_eq!(
+            st.events.evictions_by(EvictCause::Preemption),
+            preempted,
+            "sweep moves must not inflate the pre-emption count"
+        );
+
+        // Phase 3 — drain: node-lifecycle evictions get their own bucket.
+        let victims = st.drain(NodeId(0));
+        let drained = st.events.evictions_by(EvictCause::Drain);
+        assert_eq!(drained, victims.len());
+
+        // The split partitions the total.
+        assert_eq!(st.events.evictions(), preempted + swept + drained);
+    }
+
+    #[test]
+    fn incremental_churn_is_byte_identical_and_reuses_work() {
+        // Quiet trace: long lifetimes, sparse arrivals, frequent sweeps —
+        // consecutive re-pack solves see a near-unchanged cluster, which
+        // is exactly what the session layer exists to exploit.
+        let trace = ChurnTraceGenerator::new(
+            ChurnParams {
+                horizon_ms: 4_000,
+                mean_arrival_ms: 2_000,
+                mean_lifetime_ms: 60_000,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 3,
+                    pods_per_node: 3,
+                    priority_tiers: 1,
+                    usage: 0.9,
+                })
+            },
+            13,
+        )
+        .generate();
+        let mut cold_cfg = ChurnConfig::for_policy(Policy::FallbackSweep);
+        cold_cfg.sweep_every_ms = 500;
+        cold_cfg.fallback_timeout = Duration::from_secs(5);
+        cold_cfg.sweep.optimizer = OptimizerConfig::with_timeout(5.0);
+        let warm_cfg = ChurnConfig {
+            incremental: true,
+            ..cold_cfg.clone()
+        };
+
+        let cold = run_churn(&trace, &cold_cfg);
+        let warm = run_churn(&trace, &warm_cfg);
+
+        // Determinism contract: sessions change speed, never results.
+        assert_eq!(warm.log.render(), cold.log.render());
+        assert_eq!(warm.log.digest(), cold.log.digest());
+        assert_eq!(warm.served_per_priority, cold.served_per_priority);
+        assert_eq!(warm.final_placed, cold.final_placed);
+        assert_eq!(warm.evictions, cold.evictions);
+        assert_eq!(warm.evictions_sweep, cold.evictions_sweep);
+
+        // And the session actually reused work on this quiet trace.
+        assert!(
+            warm.session_full_hits + warm.solve_cache_hits + warm.component_cache_hits > 0,
+            "no reuse recorded: full={} solve={} comp={}",
+            warm.session_full_hits,
+            warm.solve_cache_hits,
+            warm.component_cache_hits
+        );
+        assert_eq!(cold.session_full_hits, 0);
+        assert_eq!(cold.solve_cache_hits, 0);
     }
 
     #[test]

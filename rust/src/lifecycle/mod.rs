@@ -26,6 +26,6 @@ pub mod trace;
 
 pub use churn::{compare_policies, run_churn, ChurnConfig, ChurnResult, Policy};
 pub use clock::SimClock;
-pub use sweep::{run_sweep, SweepConfig, SweepReport};
+pub use sweep::{run_sweep, run_sweep_session, SweepConfig, SweepReport};
 pub use timeline::{LifecycleEvent, Timeline};
 pub use trace::ChurnLog;

@@ -7,10 +7,11 @@
 //! and stays within an eviction budget (disruption is not free in a real
 //! cluster: every move restarts a container).
 
-use crate::cluster::{ClusterState, Event};
+use crate::cluster::{ClusterState, Event, EvictCause};
 use crate::metrics::lex_better;
 use crate::optimizer::algorithm::{optimize, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
+use crate::optimizer::session::SolveSession;
 
 /// Sweep policy knobs.
 #[derive(Clone, Debug)]
@@ -47,6 +48,20 @@ pub struct SweepReport {
 
 /// Run one defragmentation sweep over the live cluster.
 pub fn run_sweep(state: &mut ClusterState, p_max: u32, cfg: &SweepConfig) -> SweepReport {
+    run_sweep_session(state, p_max, cfg, None)
+}
+
+/// [`run_sweep`] with an optional incremental [`SolveSession`]: a
+/// long-lived churn loop hands the same session to every sweep so
+/// consecutive re-packs reuse cached per-component certificates and
+/// warm-start from the previous incumbent (see
+/// `optimizer::session`).
+pub fn run_sweep_session(
+    state: &mut ClusterState,
+    p_max: u32,
+    cfg: &SweepConfig,
+    session: Option<&mut SolveSession>,
+) -> SweepReport {
     let placed_before = state.placed_per_priority(p_max);
     state.events.push(Event::SweepStarted {
         pending: state.pending_pods().len(),
@@ -59,14 +74,16 @@ pub fn run_sweep(state: &mut ClusterState, p_max: u32, cfg: &SweepConfig) -> Swe
         ..Default::default()
     };
 
-    if let Some(res) = optimize(state, p_max, &cfg.optimizer) {
+    let result = match session {
+        Some(sess) => sess.solve(state, p_max, &cfg.optimizer),
+        None => optimize(state, p_max, &cfg.optimizer),
+    };
+    if let Some(res) = result {
         if lex_better(&res.placed_per_priority, &report.placed_before) {
             report.improved = true;
             let plan = MovePlan::build(state, &res.target);
             report.moves = plan.disruptions();
-            if report.moves <= cfg.eviction_budget {
-                plan.execute(state)
-                    .expect("sweep plan must apply to the state it was built on");
+            if report.moves <= cfg.eviction_budget && apply_plan(state, &plan) {
                 report.applied = true;
                 report.placed_after = state.placed_per_priority(p_max);
             }
@@ -80,6 +97,35 @@ pub fn run_sweep(state: &mut ClusterState, p_max: u32, cfg: &SweepConfig) -> Swe
         at_ms: state.time_ms(),
     });
     report
+}
+
+/// Apply a sweep plan all-or-nothing. The plan executes against a trial
+/// clone first; a mid-plan failure (reachable when a custom filter /
+/// module disagrees with the CP model, same as the plugin path) leaves
+/// the live state untouched, emits [`Event::PlanAborted`], and reports
+/// `applied = false` instead of panicking the whole churn simulation.
+/// The event log — the one unboundedly growing piece of state, and
+/// irrelevant to plan feasibility — is detached before the clone, so
+/// the trial stays O(pods + nodes) however long the simulation has run.
+fn apply_plan(state: &mut ClusterState, plan: &MovePlan) -> bool {
+    let mut log = std::mem::take(&mut state.events);
+    let mut trial = state.clone();
+    match plan.execute_as(&mut trial, EvictCause::Sweep) {
+        Ok(()) => {
+            *state = trial;
+            log.append(&mut state.events); // the plan's own fresh events
+            state.events = log;
+            true
+        }
+        Err(_) => {
+            log.push(Event::PlanAborted {
+                bound: 0,
+                missing: plan.placements.len(),
+            });
+            state.events = log;
+            false
+        }
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +159,9 @@ mod tests {
         assert!(report.moves >= 1);
         st.check_invariants().unwrap();
         assert_eq!(st.pending_pods(), Vec::<PodId>::new());
+        // sweep-driven moves are attributed to the sweep, not pre-emption
+        assert!(st.events.evictions_by(EvictCause::Sweep) >= 1);
+        assert_eq!(st.events.evictions_by(EvictCause::Preemption), 0);
         // event trail records the sweep
         assert!(st
             .events
@@ -152,6 +201,67 @@ mod tests {
         assert!(!report.applied);
         assert_eq!(st.assignment_of(PodId(0)), Some(NodeId(0)));
         assert_eq!(st.assignment_of(PodId(1)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn mid_plan_failure_aborts_gracefully_instead_of_panicking() {
+        // A plan whose bind step cannot apply (the target node lacks the
+        // capacity) must leave the state untouched and record
+        // PlanAborted — the regression the `expect` in the old
+        // `run_sweep` turned into a simulation-wide panic.
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "xl", Resources::new(800, 800), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        // Bogus plan: move the xl pod onto node 0, which cannot hold it.
+        let target = vec![Some(NodeId(0)), Some(NodeId(0))];
+        let plan = crate::optimizer::plan::MovePlan::build(&st, &target);
+        let placed_before = st.placed_per_priority(0);
+
+        assert!(!super::apply_plan(&mut st, &plan));
+        // state untouched: same placements, no partial evictions
+        assert_eq!(st.placed_per_priority(0), placed_before);
+        assert_eq!(st.assignment_of(PodId(0)), Some(NodeId(0)));
+        assert_eq!(st.assignment_of(PodId(1)), None);
+        assert_eq!(st.events.evictions(), 0);
+        assert!(st
+            .events
+            .all()
+            .iter()
+            .any(|e| matches!(e, Event::PlanAborted { .. })));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sweep_session_matches_cold_and_replays_stable_states() {
+        // A session-backed sweep must do exactly what a cold sweep does,
+        // and once the cluster stops changing, the session answers the
+        // re-pack solve from its full-state replay without invoking the
+        // solver again.
+        let mut cold_st = fragmented_figure1();
+        let cold = run_sweep(&mut cold_st, 0, &SweepConfig::default());
+
+        let mut st = fragmented_figure1();
+        let mut session = SolveSession::new();
+        let warm = run_sweep_session(&mut st, 0, &SweepConfig::default(), Some(&mut session));
+        assert_eq!(warm.applied, cold.applied);
+        assert_eq!(warm.placed_after, cold.placed_after);
+        assert_eq!(warm.moves, cold.moves);
+        assert_eq!(st.assignment(), cold_st.assignment(), "byte-identical plan");
+        assert_eq!(session.stats.optimizer_runs, 1);
+
+        // The applied plan changed the state: the next sweep re-solves
+        // (no-gain), and the one after that sees an unchanged cluster.
+        let again = run_sweep_session(&mut st, 0, &SweepConfig::default(), Some(&mut session));
+        assert!(!again.improved);
+        assert_eq!(session.stats.optimizer_runs, 2);
+        let third = run_sweep_session(&mut st, 0, &SweepConfig::default(), Some(&mut session));
+        assert!(!third.improved);
+        assert_eq!(session.stats.optimizer_runs, 2, "replayed, not re-solved");
+        assert_eq!(session.stats.full_hits, 1);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
 use kube_packd::harness::InstanceRun;
 use kube_packd::lifecycle::{compare_policies, ChurnConfig, Policy, SweepConfig};
-use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler, SolveSession};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
 use kube_packd::solver::{SolveStatus, SolverConfig};
@@ -69,7 +69,7 @@ COMMANDS
       --constraints none|taints|anti-affinity|spread|extended|mixed
   solve                    run the optimiser over a dataset file
                            (constraint profiles travel with the dataset)
-      --dataset FILE --timeout SECS --threads N --json FILE
+      --dataset FILE --timeout SECS --threads N --json FILE --incremental
                            (--json: per-tier optimality certificates —
                            proven-optimal vs anytime-best + final bound —
                            and portfolio stats, machine-readable)
@@ -79,6 +79,7 @@ COMMANDS
       --nodes N --ppn N --tiers N --usage F --seed N
       --horizon-ms N --arrival-ms N --lifetime-ms N
       --sweep-ms N --budget N --timeout SECS --threads N --log
+      --incremental
       --constraints none|taints|anti-affinity|spread|extended|mixed
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
@@ -89,7 +90,13 @@ COMMANDS
 
   --threads N (default 1, or KUBE_PACKD_THREADS): CP solves run a
   parallel portfolio — constraint-graph decomposition plus a strategy
-  race per component. 1 = the single-threaded solver, bit for bit."
+  race per component. 1 = the single-threaded solver, bit for bit.
+
+  --incremental: keep a solve session alive across consecutive solves
+  (churn cycles, sweeps, dataset instances) — unchanged states and
+  constraint-graph components replay proven certificates, dirty work
+  warm-starts from the previous incumbent. Byte-identical results;
+  caching only changes how fast they arrive."
     );
 }
 
@@ -196,17 +203,21 @@ fn solve(args: &Args) -> anyhow::Result<()> {
     let threads = threads_arg(args);
     let portfolio = PortfolioConfig::with_threads(threads);
     let insts = dataset::load(path)?;
+    // One session across the whole dataset: instances generated from one
+    // grid cell share structure, so certified sub-solves carry over.
+    let mut session = args.flag("incremental").then(SolveSession::new);
     println!(
         "instance       outcome          solver(s)  kwok-placed -> opt-placed   moves  certificate"
     );
     let json_out = args.get("json");
     let mut rows = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
-        let run = kube_packd::harness::run_instance_with(
+        let run = kube_packd::harness::run_instance_session(
             inst,
             timeout,
             &SolverConfig::default(),
             &portfolio,
+            session.as_mut(),
         );
         println!(
             "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}  {}",
@@ -223,11 +234,24 @@ fn solve(args: &Args) -> anyhow::Result<()> {
             rows.push(instance_json(i, inst, &run));
         }
     }
+    if let Some(sess) = &session {
+        let c = sess.cache_stats();
+        eprintln!(
+            "incremental session: {} full replays, {}/{} solve cache hits, {} component hits, \
+             {} warm seeds",
+            sess.stats.full_hits,
+            c.solve_hits,
+            c.solve_hits + c.solve_misses,
+            c.component_hits,
+            c.warm_seeds
+        );
+    }
     if let Some(out) = json_out {
         let mut doc = Json::obj();
         doc.set("dataset", path)
             .set("timeout_s", timeout)
             .set("threads", threads)
+            .set("incremental", session.is_some())
             .set("instances", Json::Arr(rows));
         std::fs::write(out, doc.to_string_pretty())?;
         eprintln!("json report written to {out}");
@@ -271,7 +295,9 @@ fn instance_json(index: usize, inst: &Instance, run: &InstanceRun) -> Json {
             .set("phase1_components_certified", t.phase1_components_certified)
             .set("phase2_status", t.phase2_status.label())
             .set("phase2_metric", t.phase2_metric)
-            .set("phase2_bound", t.phase2_bound);
+            .set("phase2_bound", t.phase2_bound)
+            .set("phase1_cache_hit", t.phase1_cache_hit)
+            .set("phase2_cache_hit", t.phase2_cache_hit);
         tiers.push(tj);
     }
     let mut strategy_wins = Json::obj();
@@ -287,6 +313,9 @@ fn instance_json(index: usize, inst: &Instance, run: &InstanceRun) -> Json {
         .set("tasks_cancelled", run.portfolio.tasks_cancelled)
         .set("whole_model_wins", run.portfolio.whole_model_wins)
         .set("composite_wins", run.portfolio.composite_wins)
+        .set("cache_hits", run.portfolio.cache_hits)
+        .set("component_cache_hits", run.portfolio.component_cache_hits)
+        .set("warm_starts", run.portfolio.warm_starts)
         .set("strategy_wins", strategy_wins);
     let mut o = Json::obj();
     o.set("index", index)
@@ -324,15 +353,19 @@ fn churn(args: &Args) -> anyhow::Result<()> {
     let trace = ChurnTraceGenerator::new(params, seed)
         .with_profile(profile)
         .generate();
+    let incremental = args.flag("incremental");
     let cfg = ChurnConfig {
         policy: Policy::FallbackSweep,
         sweep_every_ms: args.get_u64("sweep-ms", 5_000),
         sweep: SweepConfig {
-            optimizer: OptimizerConfig::with_timeout(timeout).with_threads(threads),
+            optimizer: OptimizerConfig::with_timeout(timeout)
+                .with_threads(threads)
+                .with_incremental(incremental),
             eviction_budget: args.get_usize("budget", 8),
         },
         fallback_timeout: Duration::from_secs_f64(timeout),
         fallback_portfolio: PortfolioConfig::with_threads(threads),
+        incremental,
     };
 
     let results = compare_policies(&trace, &cfg);

@@ -13,7 +13,10 @@
 //! Our solver, like CP-SAT, has no incremental push/pop, so the model is
 //! rebuilt for every solve with all accumulated lock constraints — and,
 //! as the paper does, the previous solution is installed as a **hint**
-//! to warm-start the next solve.
+//! to warm-start the next solve. Across *invocations* (churn cycles,
+//! defrag sweeps) the session layer ([`super::session`]) adds
+//! certificate replay and warm-start floors on top of this loop via
+//! [`optimize_session`].
 //!
 //! Time accounting is the paper's: every solve gets
 //! `α·T_total/(p_max+1)/2 + unused` (see [`crate::util::timer::TimeBudget`]).
@@ -21,7 +24,7 @@
 use std::time::Duration;
 
 use crate::cluster::{ClusterState, NodeId, PodId};
-use crate::portfolio::{solve_portfolio, PortfolioConfig, PortfolioStats};
+use crate::portfolio::{solve_portfolio_session, PortfolioConfig, PortfolioStats, SolveCache};
 use crate::solver::{CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig};
 use crate::util::timer::{Deadline, Stopwatch, TimeBudget};
 
@@ -45,6 +48,13 @@ pub struct OptimizerConfig {
     /// default is [`ModuleRegistry::standard`]; register custom modules
     /// here to extend the model without touching the solver core.
     pub modules: ModuleRegistry,
+    /// Drivers that own a long-lived loop (the fallback plugin, the
+    /// churn runner, the `solve`/`churn` CLIs via `--incremental`)
+    /// create a [`SolveSession`](super::session::SolveSession) when this
+    /// is set, reusing proven certificates and warm starts across
+    /// consecutive solves. `optimize` itself stays stateless; the knob
+    /// only tells drivers to keep a session alive.
+    pub incremental: bool,
     /// Verbose per-phase logging. Resolved once from `KUBE_PACKD_DEBUG`
     /// at construction instead of per solve inside the hot loop.
     pub debug: bool,
@@ -58,6 +68,7 @@ impl Default for OptimizerConfig {
             solver: SolverConfig::default(),
             portfolio: PortfolioConfig::default(),
             modules: ModuleRegistry::standard(),
+            incremental: false,
             debug: std::env::var_os("KUBE_PACKD_DEBUG").is_some(),
         }
     }
@@ -80,6 +91,12 @@ impl OptimizerConfig {
     /// Set the portfolio worker count (builder style; 0 clamps to 1).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.portfolio.threads = threads.max(1);
+        self
+    }
+
+    /// Toggle incremental solve sessions (builder style).
+    pub fn with_incremental(mut self, incremental: bool) -> Self {
+        self.incremental = incremental;
         self
     }
 }
@@ -105,6 +122,10 @@ pub struct TierReport {
     pub phase2_metric: i64,
     /// Upper bound on the phase-2 (stay) metric.
     pub phase2_bound: i64,
+    /// The phase solve was answered by an incremental session's
+    /// certificate cache (zero solver invocations).
+    pub phase1_cache_hit: bool,
+    pub phase2_cache_hit: bool,
     pub phase1_time: Duration,
     pub phase2_time: Duration,
 }
@@ -240,6 +261,23 @@ fn extract_assignment(
 /// produced no usable solution within the budget (the paper's *Failures*
 /// category).
 pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Option<OptimizeResult> {
+    optimize_session(state, p_max, cfg, None)
+}
+
+/// [`optimize`] with an optional session certificate cache threaded
+/// through every per-tier phase solve (see
+/// [`SolveSession`](super::session::SolveSession), which owns the cache
+/// and the surrounding full-state replay). With `None` this *is*
+/// `optimize`; with a cache, unchanged phase solves and decomposed
+/// components replay their proven certificates and dirty ones
+/// warm-start — byte-identical results either way, when solves complete
+/// in-window.
+pub fn optimize_session(
+    state: &ClusterState,
+    p_max: u32,
+    cfg: &OptimizerConfig,
+    mut cache: Option<&mut SolveCache>,
+) -> Option<OptimizeResult> {
     let sw = Stopwatch::start();
     let mut budget = TimeBudget::new(cfg.total_timeout, cfg.alpha, p_max + 1);
     let overall = budget.overall_deadline();
@@ -259,13 +297,15 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
 
         let grant = budget.grant_phase().max(Duration::from_millis(2));
         let t = Stopwatch::start();
-        let out1 = solve_portfolio(
+        let out1 = solve_portfolio_session(
             &m,
             &metric1,
             Deadline::after(grant).min(overall),
             &cfg.solver,
             &cfg.portfolio,
+            cache.as_deref_mut(),
         );
+        let phase1_cache_hit = out1.stats.cache_hits > 0;
         let phase1_components = out1.components.len();
         let phase1_components_certified = out1
             .components
@@ -317,13 +357,15 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
 
         let grant2 = budget.grant_phase().max(Duration::from_millis(2));
         let t2 = Stopwatch::start();
-        let out2 = solve_portfolio(
+        let out2 = solve_portfolio_session(
             &m2,
             &metric2,
             Deadline::after(grant2).min(overall),
             &cfg.solver,
             &cfg.portfolio,
+            cache.as_deref_mut(),
         );
+        let phase2_cache_hit = out2.stats.cache_hits > 0;
         let sol2 = out2.solution;
         let phase2_time = t2.elapsed();
         budget.report_used(grant2, phase2_time);
@@ -363,6 +405,8 @@ pub fn optimize(state: &ClusterState, p_max: u32, cfg: &OptimizerConfig) -> Opti
             phase2_status,
             phase2_metric,
             phase2_bound: sol2.bound,
+            phase1_cache_hit,
+            phase2_cache_hit,
             phase1_time,
             phase2_time,
         });

@@ -56,6 +56,19 @@ pub trait ConstraintModule {
     ) -> Result<(), String> {
         Ok(())
     }
+
+    /// Cache identity of this module *including any internal
+    /// configuration*. The incremental session layer
+    /// (`optimizer::session`) replays whole cached results only while
+    /// every registered module's fingerprint is unchanged, so a module
+    /// carrying parameters (budgets, quarantined nodes, …) MUST fold
+    /// them into this hash — the name-only default is correct for
+    /// stateless modules only.
+    fn fingerprint(&self) -> u64 {
+        crate::util::fingerprint::Fnv64::new()
+            .write_str(self.name())
+            .finish()
+    }
 }
 
 /// Sum of a pod's requests for one named extended resource.
@@ -471,6 +484,12 @@ impl ModuleRegistry {
 
     pub fn names(&self) -> Vec<&'static str> {
         self.modules.iter().map(|m| m.name()).collect()
+    }
+
+    /// Per-module cache fingerprints, in registration order (see
+    /// [`ConstraintModule::fingerprint`]).
+    pub fn fingerprints(&self) -> Vec<u64> {
+        self.modules.iter().map(|m| m.fingerprint()).collect()
     }
 
     /// Conjunction of every module's admissibility hook.

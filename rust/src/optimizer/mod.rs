@@ -18,6 +18,10 @@
 //!   PreFilter node pinning, PostFilter failure tracking, Reserve
 //!   bookkeeping, PostBind plan completion — the five extension points
 //!   the paper's Go plugin uses.
+//! * [`session`]   — incremental solve sessions for drivers that re-run
+//!   Algorithm 1 over an evolving cluster: full-state and per-component
+//!   certificate replay plus warm-start incumbent floors, byte-identical
+//!   to cold solves (the `incremental` knob / `--incremental` flags).
 //!
 //! # Adding a custom constraint
 //!
@@ -87,8 +91,9 @@ pub mod builder;
 pub mod constraints;
 pub mod plan;
 pub mod plugin;
+pub mod session;
 
-pub use algorithm::{optimize, OptimizeResult, OptimizerConfig, TierReport};
+pub use algorithm::{optimize, optimize_session, OptimizeResult, OptimizerConfig, TierReport};
 pub use builder::{ModelCtx, PackingModelBuilder, VarTable};
 pub use constraints::{
     AtMostOnePlacement, ConstraintModule, ModuleRegistry, NodeCapacity, NodeSelector,
@@ -96,3 +101,4 @@ pub use constraints::{
 };
 pub use plan::MovePlan;
 pub use plugin::{OptimizingScheduler, RunReport};
+pub use session::{DeltaLog, SessionStats, SolveSession};

@@ -8,7 +8,7 @@
 //! that moves or leaves before binding anything guarantees each
 //! subsequent bind fits.
 
-use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::cluster::{ClusterState, EvictCause, NodeId, PodId};
 
 /// One pod's transition.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -85,9 +85,21 @@ impl MovePlan {
     }
 
     /// Execute against a state: all evictions, then all placements.
+    /// Evictions are attributed to optimiser pre-emption; use
+    /// [`execute_as`](MovePlan::execute_as) for sweep-driven plans.
     pub fn execute(&self, state: &mut ClusterState) -> Result<(), String> {
+        self.execute_as(state, EvictCause::Preemption)
+    }
+
+    /// [`execute`](MovePlan::execute) with an explicit eviction
+    /// attribution (the defragmentation sweep passes
+    /// [`EvictCause::Sweep`] so the churn report can split disruption by
+    /// driver).
+    pub fn execute_as(&self, state: &mut ClusterState, cause: EvictCause) -> Result<(), String> {
         for &(pod, _) in &self.evictions {
-            state.evict(pod).map_err(|e| format!("evict {pod:?}: {e}"))?;
+            state
+                .evict_as(pod, cause)
+                .map_err(|e| format!("evict {pod:?}: {e}"))?;
         }
         for &(pod, node) in &self.placements {
             state

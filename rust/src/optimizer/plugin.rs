@@ -34,6 +34,7 @@ use crate::util::timer::Stopwatch;
 
 use super::algorithm::{optimize, OptimizeResult, OptimizerConfig};
 use super::plan::MovePlan;
+use super::session::SolveSession;
 
 /// Shared plan state between the five plugin instances and the driver.
 #[derive(Debug, Default)]
@@ -167,6 +168,11 @@ pub struct OptimizingScheduler {
     plan: Rc<RefCell<PlanState>>,
     pub cfg: OptimizerConfig,
     pub p_max: u32,
+    /// Incremental solve session kept alive across `run` passes when
+    /// `cfg.incremental` is set. Drivers that rebuild the scheduler per
+    /// cycle (the churn runner) instead pass a longer-lived session via
+    /// [`run_with_session`](OptimizingScheduler::run_with_session).
+    session: Option<SolveSession>,
 }
 
 impl OptimizingScheduler {
@@ -179,17 +185,34 @@ impl OptimizingScheduler {
         scheduler.framework.post_filter.push(Box::new(PackdPlugin { state: plan.clone() }));
         scheduler.framework.reserve.push(Box::new(PackdPlugin { state: plan.clone() }));
         scheduler.framework.post_bind.push(Box::new(PackdPlugin { state: plan.clone() }));
+        let session = cfg.incremental.then(SolveSession::new);
         OptimizingScheduler {
             scheduler,
             plan,
             cfg,
             p_max,
+            session,
         }
     }
 
     /// Full pass: default scheduling, then — if pods went pending — the
     /// solver fallback with plan execution (cross-node pre-emption).
+    /// Uses the internal session when `cfg.incremental` created one.
     pub fn run(&mut self, state: &mut ClusterState) -> RunReport {
+        let mut session = self.session.take();
+        let report = self.run_with_session(state, session.as_mut());
+        self.session = session;
+        report
+    }
+
+    /// [`run`](OptimizingScheduler::run) with a caller-owned incremental
+    /// session (overrides the internal one for this pass). `None` solves
+    /// cold — exactly the historical behaviour.
+    pub fn run_with_session(
+        &mut self,
+        state: &mut ClusterState,
+        session: Option<&mut SolveSession>,
+    ) -> RunReport {
         self.scheduler.enqueue_pending(state);
         let default_stats = self.scheduler.run_queue(state);
         let placed_before = state.placed_per_priority(self.p_max);
@@ -215,7 +238,10 @@ impl OptimizingScheduler {
             pending: self.scheduler.queue.unschedulable_len(),
         });
         let sw = Stopwatch::start();
-        let result = optimize(state, self.p_max, &self.cfg);
+        let result = match session {
+            Some(sess) => sess.solve(state, self.p_max, &self.cfg),
+            None => optimize(state, self.p_max, &self.cfg),
+        };
         let solver_wall = sw.elapsed();
 
         let mut proved = false;
@@ -341,6 +367,31 @@ mod tests {
             .all()
             .iter()
             .any(|e| matches!(e, Event::SolverFinished { improved: true, .. })));
+    }
+
+    #[test]
+    fn incremental_scheduler_matches_cold_run() {
+        let mk_state = || {
+            ClusterState::new(
+                identical_nodes(2, Resources::new(4000, 4096)),
+                figure1_pods(),
+            )
+        };
+        let mut cold_state = mk_state();
+        let mut cold = OptimizingScheduler::new(0, OptimizerConfig::with_timeout(5.0));
+        let cold_report = cold.run(&mut cold_state);
+
+        let mut warm_state = mk_state();
+        let mut warm = OptimizingScheduler::new(
+            0,
+            OptimizerConfig::with_timeout(5.0).with_incremental(true),
+        );
+        let warm_report = warm.run(&mut warm_state);
+        // byte-identical outcome: same placements, same final assignment
+        assert_eq!(warm_report.placed_before, cold_report.placed_before);
+        assert_eq!(warm_report.placed_after, cold_report.placed_after);
+        assert_eq!(warm_report.disruptions, cold_report.disruptions);
+        assert_eq!(warm_state.assignment(), cold_state.assignment());
     }
 
     #[test]

@@ -1,0 +1,486 @@
+//! Incremental solve sessions: warm-start reuse across churn cycles.
+//!
+//! Algorithm 1 is invoked repeatedly over a live cluster — every
+//! pending-pod fallback cycle and every defragmentation sweep — yet a
+//! plain [`optimize`](super::algorithm::optimize) call rebuilds and
+//! cold-solves every per-tier model from scratch, even when only one pod
+//! arrived since the last solve. Long-running orchestration under churn
+//! is exactly the regime where consecutive instances are near-identical,
+//! so a [`SolveSession`] owned by the churn loop / fallback plugin keeps
+//! three layers of reuse alive between solves:
+//!
+//! 1. **Full-state replay.** The session fingerprints the entire
+//!    solve-relevant [`ClusterState`] (pods, nodes, bindings, statuses)
+//!    plus `p_max` and the optimiser config. An unchanged fingerprint —
+//!    the no-op delta — returns the previous run's result and optimality
+//!    certificate without invoking the solver at all.
+//! 2. **Per-solve / per-component replay.** A dirty state still shares
+//!    most of its per-tier models with the previous cycle. Each phase
+//!    solve routes through
+//!    [`solve_portfolio_session`](crate::portfolio::solve_portfolio_session)
+//!    with the session's [`SolveCache`]: solves (and, under
+//!    decomposition, individual constraint-graph components) whose
+//!    fingerprints are unchanged replay their cached *proven* solution
+//!    and certificate; only dirty ones re-solve.
+//! 3. **Warm-start floors.** Dirty solves project the previous incumbent
+//!    onto the new model (via the hints Algorithm 1 already installs)
+//!    and seed its objective as the portfolio's initial shared-incumbent
+//!    floor, so racers prune from cycle one.
+//!
+//! # Determinism contract (non-negotiable)
+//!
+//! A session re-solve produces **byte-identical plans and objective
+//! vectors** to a cold solve of the same state, at any thread count —
+//! caching may only change *how fast* the answer arrives:
+//!
+//! * only *proven* (`Optimal` / `Infeasible`) results are ever cached or
+//!   replayed — a proven result is a pure function of its model, so any
+//!   completing cold solve reproduces it bit for bit;
+//! * a full-state replay is only armed when the previous run was fully
+//!   certified (every phase of every tier proven optimal);
+//! * warm-start floors are feasible objective values pruned against
+//!   *strictly*, which cannot change a completing solve's answer (see
+//!   [`SharedIncumbent`](crate::solver::SharedIncumbent));
+//! * any config change (knobs, modules, seed) clears the cache outright.
+//!
+//! The usual anytime caveat applies, same as the churn replay digests
+//! and the portfolio's thread-independence: identity is guaranteed when
+//! every solve completes within its window, which the incremental models
+//! this layer exists for do in practice.
+//!
+//! Between solves the session also absorbs the state's event-log suffix
+//! into a [`DeltaLog`] (arrivals, completions, drains, joins,
+//! binds, evictions) — observability for churn reports, not a
+//! correctness input: the fingerprint alone decides cleanliness.
+
+use crate::cluster::{ClusterState, Event, NodeStatus, TaintEffect};
+use crate::portfolio::{CacheStats, SolveCache};
+use crate::solver::SolveStatus;
+use crate::util::fingerprint::Fnv64;
+
+use super::algorithm::{optimize_session, OptimizeResult, OptimizerConfig};
+
+/// Cluster mutations observed between two session solves. Maintained by
+/// scanning the state's event-log suffix (plus pod/node table growth),
+/// so a driver never has to report deltas explicitly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeltaLog {
+    /// Pods appended to the state's pod table (arrivals).
+    pub arrivals: usize,
+    /// Pods that reached end of life.
+    pub completions: usize,
+    /// Binds recorded (default scheduler + plan).
+    pub binds: usize,
+    /// Evictions recorded (all causes).
+    pub evictions: usize,
+    /// Nodes drained.
+    pub drains: usize,
+    /// Nodes joined.
+    pub joins: usize,
+}
+
+impl DeltaLog {
+    pub fn is_empty(&self) -> bool {
+        *self == DeltaLog::default()
+    }
+
+    /// Total mutations observed.
+    pub fn total(&self) -> usize {
+        self.arrivals + self.completions + self.binds + self.evictions + self.drains + self.joins
+    }
+}
+
+/// Session-level counters, surfaced through `ChurnResult` and the churn
+/// report (cache-level counters live in [`CacheStats`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionStats {
+    /// Calls to [`SolveSession::solve`].
+    pub solves: u64,
+    /// Calls that actually ran Algorithm 1 (misses).
+    pub optimizer_runs: u64,
+    /// Calls answered by full-state replay — the no-op delta path with
+    /// zero solver invocations.
+    pub full_hits: u64,
+    /// Delta absorbed by the most recent solve call.
+    pub last_delta: DeltaLog,
+}
+
+/// A long-lived incremental solve session (see module docs). Create one
+/// per driver loop and hand it every re-solve of the same evolving
+/// cluster; dropping it drops all cached certificates.
+#[derive(Debug, Default)]
+pub struct SolveSession {
+    cache: SolveCache,
+    /// Fingerprint of the config the cache was built under.
+    cfg_fp: Option<u64>,
+    /// Previous solve: state fingerprint and its fully certified result.
+    last: Option<(u64, OptimizeResult)>,
+    /// Event-log prefix already absorbed into the delta log.
+    seen_events: usize,
+    /// Pod-table length at the last absorption (arrivals counter).
+    seen_pods: usize,
+    delta: DeltaLog,
+    pub stats: SessionStats,
+}
+
+impl SolveSession {
+    pub fn new() -> Self {
+        SolveSession::default()
+    }
+
+    /// Cache-level counters (solve/component hits, warm seeds).
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache.stats
+    }
+
+    /// Mutations observed since the last solve (resets on solve).
+    pub fn pending_delta(&self) -> &DeltaLog {
+        &self.delta
+    }
+
+    /// Run Algorithm 1 over `state`, reusing everything the session has
+    /// proven since it was created. Result-equivalent to
+    /// [`optimize`](super::algorithm::optimize) on the same inputs (see
+    /// the module-level determinism contract).
+    pub fn solve(
+        &mut self,
+        state: &ClusterState,
+        p_max: u32,
+        cfg: &OptimizerConfig,
+    ) -> Option<OptimizeResult> {
+        self.stats.solves += 1;
+        self.absorb(state);
+        self.stats.last_delta = std::mem::take(&mut self.delta);
+
+        let cfg_fp = fingerprint_config(cfg);
+        if self.cfg_fp != Some(cfg_fp) {
+            // Any knob change invalidates every cached certificate.
+            self.cache.clear();
+            self.last = None;
+            self.cfg_fp = Some(cfg_fp);
+        }
+
+        let fp = fingerprint_state(state, p_max);
+        if let Some((last_fp, res)) = &self.last {
+            if *last_fp == fp {
+                self.stats.full_hits += 1;
+                return Some(res.clone());
+            }
+        }
+
+        self.stats.optimizer_runs += 1;
+        let res = optimize_session(state, p_max, cfg, Some(&mut self.cache));
+        // Arm the full-state replay only with a fully certified run: an
+        // anytime (deadline-truncated) result is not a pure function of
+        // the state, so replaying it could diverge from a cold solve.
+        self.last = match &res {
+            Some(r) if fully_certified(r) => Some((fp, r.clone())),
+            _ => None,
+        };
+        res
+    }
+
+    /// Absorb the state's event-log suffix into the delta log. Purely
+    /// observational — robust to being handed a *different* state (the
+    /// counters reset rather than underflow), since some drivers reuse
+    /// one session across a dataset of independent instances.
+    fn absorb(&mut self, state: &ClusterState) {
+        let events = state.events.all();
+        let start = self.seen_events.min(events.len());
+        for e in &events[start..] {
+            match e {
+                Event::Bind { .. } | Event::PlanBind { .. } => self.delta.binds += 1,
+                Event::Evict { .. } => self.delta.evictions += 1,
+                Event::PodCompleted { .. } => self.delta.completions += 1,
+                Event::NodeDrained { .. } => self.delta.drains += 1,
+                Event::NodeJoined { .. } => self.delta.joins += 1,
+                _ => {}
+            }
+        }
+        self.seen_events = events.len();
+        let pods = state.pods().len();
+        self.delta.arrivals += pods.saturating_sub(self.seen_pods);
+        self.seen_pods = pods;
+    }
+}
+
+/// Every phase of every tier proven optimal — the precondition for
+/// arming the full-state replay.
+fn fully_certified(res: &OptimizeResult) -> bool {
+    res.proved_optimal
+        && res
+            .tiers
+            .iter()
+            .all(|t| t.phase2_status == SolveStatus::Optimal)
+}
+
+/// Fingerprint everything Algorithm 1 reads from a [`ClusterState`]
+/// (plus `p_max`). The event log and the virtual clock are history, not
+/// solve input, and are deliberately excluded. A false *miss* is merely
+/// slow; the field coverage below is what makes a false *hit*
+/// impossible for distinct solve-relevant states (up to the 64-bit
+/// collision odds discussed in [`crate::util::fingerprint`]).
+pub fn fingerprint_state(state: &ClusterState, p_max: u32) -> u64 {
+    let mut h = Fnv64::new();
+    h.tag(b'T').write_u32(p_max);
+
+    h.tag(b'N').write_usize(state.nodes().len());
+    for node in state.nodes() {
+        h.write_str(&node.name)
+            .write_i64(node.capacity.cpu)
+            .write_i64(node.capacity.ram);
+        h.write_usize(node.labels.len());
+        for (k, v) in &node.labels {
+            h.write_str(k).write_str(v);
+        }
+        h.write_usize(node.taints.len());
+        for t in &node.taints {
+            h.write_str(&t.key).write_str(&t.value);
+            // Exhaustive on purpose: a new effect variant must be hashed.
+            match t.effect {
+                TaintEffect::NoSchedule => h.tag(0),
+            };
+        }
+        h.write_usize(node.extended.len());
+        for (k, v) in &node.extended {
+            h.write_str(k).write_i64(*v);
+        }
+        h.tag(match state.node_status(node.id) {
+            NodeStatus::Ready => 0,
+            NodeStatus::Cordoned => 1,
+            NodeStatus::Removed => 2,
+        });
+    }
+
+    h.tag(b'P').write_usize(state.pods().len());
+    for pod in state.pods() {
+        h.write_str(&pod.name)
+            .write_i64(pod.request.cpu)
+            .write_i64(pod.request.ram)
+            .write_u32(pod.priority.0);
+        match pod.owner {
+            Some(rs) => h.tag(1).write_u32(rs),
+            None => h.tag(0),
+        };
+        h.write_usize(pod.node_selector.len());
+        for (k, v) in &pod.node_selector {
+            h.write_str(k).write_str(v);
+        }
+        h.write_usize(pod.labels.len());
+        for (k, v) in &pod.labels {
+            h.write_str(k).write_str(v);
+        }
+        h.write_usize(pod.tolerations.len());
+        for t in &pod.tolerations {
+            h.write_str(&t.key);
+            match &t.value {
+                Some(v) => h.tag(1).write_str(v),
+                None => h.tag(0),
+            };
+        }
+        h.write_usize(pod.anti_affinity.len());
+        for (k, v) in &pod.anti_affinity {
+            h.write_str(k).write_str(v);
+        }
+        match pod.spread_max_skew {
+            Some(s) => h.tag(1).write_i64(s),
+            None => h.tag(0),
+        };
+        h.write_usize(pod.extended.len());
+        for (k, v) in &pod.extended {
+            h.write_str(k).write_i64(*v);
+        }
+        h.write_bool(state.is_retired(pod.id));
+        match state.assignment_of(pod.id) {
+            Some(n) => h.tag(1).write_u32(n.0),
+            None => h.tag(0),
+        };
+    }
+    h.finish()
+}
+
+/// Fingerprint the optimiser knobs a cached certificate depends on.
+/// Modules contribute their [`ConstraintModule::fingerprint`] — which a
+/// parameterized custom module must derive from its own configuration,
+/// or the full-state replay cannot see the change; `threads` is
+/// excluded (completed results are independent of the worker count)
+/// while everything else conservatively invalidates on change.
+///
+/// [`ConstraintModule::fingerprint`]: super::constraints::ConstraintModule::fingerprint
+fn fingerprint_config(cfg: &OptimizerConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.tag(b'C')
+        .write_u64(cfg.total_timeout.as_nanos() as u64)
+        .write_f64(cfg.alpha)
+        .write_bool(cfg.incremental);
+    let s = &cfg.solver;
+    h.tag(b'S')
+        .write_bool(s.use_bound)
+        .write_bool(s.use_capacity_bound)
+        .write_bool(s.use_hints)
+        .write_bool(s.use_best_fit)
+        .write_bool(s.use_symmetry)
+        .write_bool(s.use_lns)
+        .write_f64(s.lns_fraction)
+        .write_bool(s.branch_easiest_first)
+        .write_u64(s.check_interval)
+        .write_u64(s.seed);
+    h.tag(b'P')
+        .write_bool(cfg.portfolio.decompose)
+        .write_usize(cfg.portfolio.strategies);
+    h.tag(b'M');
+    for f in cfg.modules.fingerprints() {
+        h.write_u64(f);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, NodeId, Pod, PodId, Priority, Resources};
+    use crate::optimizer::algorithm::optimize;
+
+    fn figure1() -> ClusterState {
+        let nodes = identical_nodes(2, Resources::new(4000, 4096));
+        let pods = vec![
+            Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+            Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+            Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        st
+    }
+
+    #[test]
+    fn state_fingerprint_tracks_solve_relevant_mutations() {
+        let st = figure1();
+        let base = fingerprint_state(&st, 0);
+        assert_eq!(base, fingerprint_state(&st.clone(), 0), "clone-stable");
+        assert_ne!(base, fingerprint_state(&st, 1), "p_max is input");
+
+        let mut bound = st.clone();
+        bound.bind(PodId(2), NodeId(0)).unwrap();
+        assert_ne!(base, fingerprint_state(&bound, 0), "binds are input");
+
+        let mut grown = st.clone();
+        grown.add_pod(Pod::new(0, "late", Resources::new(10, 10), Priority(0)));
+        assert_ne!(base, fingerprint_state(&grown, 0), "arrivals are input");
+
+        // The event log is history, not input: an extra recorded event
+        // with no state change leaves the fingerprint alone.
+        let mut logged = st.clone();
+        logged.events.push(Event::SolverInvoked { pending: 1 });
+        assert_eq!(base, fingerprint_state(&logged, 0));
+    }
+
+    #[test]
+    fn noop_delta_replays_without_invoking_the_solver() {
+        let st = figure1();
+        let cfg = OptimizerConfig::with_timeout(5.0);
+        let mut session = SolveSession::new();
+
+        let first = session.solve(&st, 0, &cfg).expect("figure 1 solves");
+        assert!(first.proved_optimal);
+        assert_eq!(session.stats.optimizer_runs, 1);
+        assert_eq!(session.stats.full_hits, 0);
+
+        let replay = session.solve(&st, 0, &cfg).expect("replay");
+        assert_eq!(session.stats.optimizer_runs, 1, "solver not invoked");
+        assert_eq!(session.stats.full_hits, 1);
+        assert_eq!(replay.target, first.target);
+        assert_eq!(replay.placed_per_priority, first.placed_per_priority);
+        assert!(replay.proved_optimal, "certificate replayed");
+    }
+
+    #[test]
+    fn dirty_delta_resolves_and_matches_cold() {
+        let mut st = figure1();
+        let cfg = OptimizerConfig::with_timeout(5.0);
+        let mut session = SolveSession::new();
+        session.solve(&st, 0, &cfg).expect("first solve");
+
+        st.add_pod(Pod::new(0, "pod-4", Resources::new(10, 512), Priority(0)));
+        let warm = session.solve(&st, 0, &cfg).expect("re-solve");
+        assert_eq!(session.stats.optimizer_runs, 2);
+        assert_eq!(session.stats.last_delta.arrivals, 1);
+
+        let cold = optimize(&st, 0, &cfg).expect("cold solve");
+        assert_eq!(warm.target, cold.target);
+        assert_eq!(warm.placed_per_priority, cold.placed_per_priority);
+        assert_eq!(warm.proved_optimal, cold.proved_optimal);
+    }
+
+    #[test]
+    fn config_change_clears_the_cache() {
+        let st = figure1();
+        let mut session = SolveSession::new();
+        session
+            .solve(&st, 0, &OptimizerConfig::with_timeout(5.0))
+            .unwrap();
+        // New seed = new certificates; the full-state replay must not fire.
+        let mut cfg2 = OptimizerConfig::with_timeout(5.0);
+        cfg2.solver.seed ^= 1;
+        session.solve(&st, 0, &cfg2).unwrap();
+        assert_eq!(session.stats.optimizer_runs, 2);
+        assert_eq!(session.stats.full_hits, 0);
+    }
+
+    #[test]
+    fn module_parameter_changes_invalidate_the_full_state_replay() {
+        use crate::optimizer::builder::ModelCtx;
+        use crate::optimizer::constraints::{ConstraintModule, ModuleRegistry};
+        use crate::solver::Model;
+
+        // A parameterized custom module folds its config into its cache
+        // fingerprint; re-registering it with different parameters must
+        // re-solve even though the state and module *name* are unchanged.
+        struct Budget {
+            cap: i64,
+        }
+        impl ConstraintModule for Budget {
+            fn name(&self) -> &'static str {
+                "Budget"
+            }
+            fn emit(&self, _ctx: &ModelCtx, _m: &mut Model) {}
+            fn fingerprint(&self) -> u64 {
+                Fnv64::new()
+                    .write_str(self.name())
+                    .write_i64(self.cap)
+                    .finish()
+            }
+        }
+
+        let st = figure1();
+        let mut session = SolveSession::new();
+        let with_cap = |cap| {
+            OptimizerConfig::with_timeout(5.0)
+                .with_modules(ModuleRegistry::standard().with(Budget { cap }))
+        };
+        let _ = session.solve(&st, 0, &with_cap(5));
+        let _ = session.solve(&st, 0, &with_cap(2));
+        assert_eq!(session.stats.optimizer_runs, 2, "parameter change re-solves");
+        assert_eq!(session.stats.full_hits, 0);
+        // and an unchanged parameter set does replay
+        let _ = session.solve(&st, 0, &with_cap(2));
+        assert_eq!(session.stats.full_hits, 1);
+    }
+
+    #[test]
+    fn delta_log_attributes_mutations() {
+        let mut st = figure1();
+        let mut session = SolveSession::new();
+        let cfg = OptimizerConfig::with_timeout(2.0);
+        let _ = session.solve(&st, 0, &cfg);
+        st.add_pod(Pod::new(0, "x", Resources::new(5, 5), Priority(0)));
+        st.evict(PodId(0)).unwrap();
+        assert!(session.pending_delta().is_empty(), "absorbed on solve only");
+        let _ = session.solve(&st, 0, &cfg);
+        let d = &session.stats.last_delta;
+        assert_eq!(d.arrivals, 1);
+        assert_eq!(d.evictions, 1);
+        assert!(d.total() >= 2);
+    }
+}

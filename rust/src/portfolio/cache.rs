@@ -1,0 +1,291 @@
+//! Certificate cache for incremental solve sessions.
+//!
+//! Long-running drivers (the churn loop's fallback plugin, the periodic
+//! defragmentation sweep) re-solve near-identical instances every cycle.
+//! This cache lets [`solve_portfolio_session`](super::solve_portfolio_session)
+//! skip work it has already *proven*:
+//!
+//! * **per-solve entries** — one per (model, objective, solver config)
+//!   fingerprint: a whole phase solve whose inputs are unchanged replays
+//!   its recorded solution and optimality certificate without invoking
+//!   the solver at all;
+//! * **per-component entries** — one per decomposed constraint-graph
+//!   component: when only part of the cluster churned, the clean
+//!   components replay from cache and only the dirty ones re-race.
+//!
+//! # Why only proven results are cached
+//!
+//! The determinism contract of the session layer is that a warm re-solve
+//! is **byte-identical** to a cold solve of the same state: caching may
+//! change how fast the answer arrives, never which answer. A proven
+//! (`Optimal` / `Infeasible`) result is a pure function of the model and
+//! config — any completing cold solve reproduces it bit for bit (the
+//! PR 3 thread-independence contract). An *anytime* result, by contrast,
+//! depends on the deadline it was truncated at, so replaying it could
+//! diverge from what a fresh solve would return; anytime results are
+//! therefore never stored, and a dirty window re-solves cold.
+//!
+//! Fingerprints deliberately exclude the deadline and the worker count:
+//! completed results are independent of both (the same caveat the churn
+//! replay digests carry).
+
+use std::collections::BTreeMap;
+
+use crate::solver::{CmpOp, LinearExpr, Model, SolveStatus, SolverConfig};
+use crate::util::fingerprint::Fnv64;
+
+use super::{ComponentReport, PortfolioConfig};
+
+/// One cached whole-solve result (status is always proven).
+#[derive(Clone, Debug)]
+pub(crate) struct CachedSolve {
+    pub status: SolveStatus,
+    pub objective: i64,
+    pub bound: i64,
+    pub values: Vec<bool>,
+    pub components: Vec<ComponentReport>,
+}
+
+/// One cached per-component result (status is always proven).
+#[derive(Clone, Debug)]
+pub(crate) struct CachedComponent {
+    pub report: ComponentReport,
+    /// Local (dense) assignment; empty iff the component is infeasible.
+    pub values: Vec<bool>,
+}
+
+/// Cache observability counters, surfaced through
+/// [`SolveSession`](crate::optimizer::session::SolveSession) into churn
+/// reports.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Whole solves answered from cache (zero solver invocations).
+    pub solve_hits: u64,
+    /// Whole solves that missed and ran the solver.
+    pub solve_misses: u64,
+    /// Decomposed components replayed from cache.
+    pub component_hits: u64,
+    /// Decomposed components that re-raced.
+    pub component_misses: u64,
+    /// Proven whole-solve results stored.
+    pub stored_solves: u64,
+    /// Proven component results stored.
+    pub stored_components: u64,
+    /// Warm-start incumbent floors seeded from projected hints.
+    pub warm_seeds: u64,
+}
+
+/// Bound on total cached entries (solves + components). The cap only
+/// affects speed, never answers: overflow clears the cache, and a
+/// cleared cache merely re-solves cold. Sized far above any realistic
+/// churn working set (tiers × phases × components per cycle).
+const MAX_ENTRIES: usize = 8192;
+
+/// The certificate cache one [`SolveSession`] owns.
+///
+/// [`SolveSession`]: crate::optimizer::session::SolveSession
+#[derive(Debug, Default)]
+pub struct SolveCache {
+    solves: BTreeMap<u64, CachedSolve>,
+    components: BTreeMap<u64, CachedComponent>,
+    pub stats: CacheStats,
+}
+
+impl SolveCache {
+    pub fn new() -> Self {
+        SolveCache::default()
+    }
+
+    /// Total cached entries (solves + components).
+    pub fn len(&self) -> usize {
+        self.solves.len() + self.components.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.solves.is_empty() && self.components.is_empty()
+    }
+
+    /// Drop every cached entry (config changes invalidate certificates).
+    pub fn clear(&mut self) {
+        self.solves.clear();
+        self.components.clear();
+    }
+
+    pub(crate) fn lookup_solve(&mut self, fp: u64) -> Option<CachedSolve> {
+        let hit = self.solves.get(&fp).cloned();
+        match hit {
+            Some(_) => self.stats.solve_hits += 1,
+            None => self.stats.solve_misses += 1,
+        }
+        hit
+    }
+
+    pub(crate) fn store_solve(&mut self, fp: u64, entry: CachedSolve) {
+        debug_assert!(matches!(entry.status, SolveStatus::Optimal | SolveStatus::Infeasible));
+        self.evict_if_full();
+        self.stats.stored_solves += 1;
+        self.solves.insert(fp, entry);
+    }
+
+    pub(crate) fn lookup_component(&mut self, fp: u64) -> Option<CachedComponent> {
+        let hit = self.components.get(&fp).cloned();
+        match hit {
+            Some(_) => self.stats.component_hits += 1,
+            None => self.stats.component_misses += 1,
+        }
+        hit
+    }
+
+    pub(crate) fn store_component(&mut self, fp: u64, entry: CachedComponent) {
+        debug_assert!(matches!(
+            entry.report.status,
+            SolveStatus::Optimal | SolveStatus::Infeasible
+        ));
+        self.evict_if_full();
+        self.stats.stored_components += 1;
+        self.components.insert(fp, entry);
+    }
+
+    fn evict_if_full(&mut self) {
+        if self.len() >= MAX_ENTRIES {
+            self.clear();
+        }
+    }
+}
+
+/// Fingerprint one solve's complete input: the model (constraints,
+/// hints, resource classes), the objective, and every solver/portfolio
+/// knob that can change a *completed* answer. Excluded on purpose:
+/// `threads` and the deadline — completed results are independent of
+/// both by the portfolio determinism contract.
+pub fn fingerprint_solve(
+    model: &Model,
+    objective: &LinearExpr,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
+) -> u64 {
+    let mut h = Fnv64::new();
+    h.tag(b'M').write_usize(model.num_vars());
+    h.write_usize(model.constraints.len());
+    for c in &model.constraints {
+        h.tag(match c.op {
+            CmpOp::Le => 0,
+            CmpOp::Ge => 1,
+            CmpOp::Eq => 2,
+        });
+        h.write_i64(c.rhs).write_usize(c.expr.terms.len());
+        for &(v, coef) in &c.expr.terms {
+            h.write_u32(v.0).write_i64(coef);
+        }
+    }
+    h.tag(b'H');
+    for (i, hint) in model.hints.iter().enumerate() {
+        if let Some(val) = hint {
+            h.write_usize(i).write_bool(*val);
+        }
+    }
+    h.tag(b'R').write_usize(model.resource_classes.len());
+    for class in &model.resource_classes {
+        h.write_str(&class.name).write_usize(class.cons.len());
+        for &ci in &class.cons {
+            h.write_u32(ci);
+        }
+    }
+    h.tag(b'O').write_usize(objective.terms.len());
+    for &(v, coef) in &objective.terms {
+        h.write_u32(v.0).write_i64(coef);
+    }
+    h.tag(b'S')
+        .write_bool(solver.use_bound)
+        .write_bool(solver.use_capacity_bound)
+        .write_bool(solver.use_hints)
+        .write_bool(solver.use_best_fit)
+        .write_bool(solver.use_symmetry)
+        .write_bool(solver.use_lns)
+        .write_f64(solver.lns_fraction)
+        .write_bool(solver.branch_easiest_first)
+        .write_u64(solver.check_interval)
+        .write_u64(solver.seed);
+    h.tag(b'P')
+        .write_bool(cfg.decompose)
+        .write_usize(cfg.strategies);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> (Model, LinearExpr) {
+        let mut m = Model::new();
+        let x = m.new_var();
+        let y = m.new_var();
+        m.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1);
+        let obj = LinearExpr::of([(x, 1), (y, 1)]);
+        (m, obj)
+    }
+
+    #[test]
+    fn identical_inputs_share_a_fingerprint() {
+        let (m, obj) = tiny_model();
+        let (m2, obj2) = tiny_model();
+        let s = SolverConfig::default();
+        let p = PortfolioConfig::with_threads(1);
+        assert_eq!(
+            fingerprint_solve(&m, &obj, &s, &p),
+            fingerprint_solve(&m2, &obj2, &s, &p)
+        );
+    }
+
+    #[test]
+    fn model_hint_and_config_changes_alter_the_fingerprint() {
+        let (mut m, obj) = tiny_model();
+        let s = SolverConfig::default();
+        let p = PortfolioConfig::with_threads(1);
+        let base = fingerprint_solve(&m, &obj, &s, &p);
+
+        m.hint(crate::solver::VarId(0), true);
+        let hinted = fingerprint_solve(&m, &obj, &s, &p);
+        assert_ne!(base, hinted, "hints are solve input");
+
+        let other_seed = SolverConfig {
+            seed: 99,
+            ..SolverConfig::default()
+        };
+        assert_ne!(hinted, fingerprint_solve(&m, &obj, &other_seed, &p));
+    }
+
+    #[test]
+    fn thread_count_does_not_alter_the_fingerprint() {
+        let (m, obj) = tiny_model();
+        let s = SolverConfig::default();
+        assert_eq!(
+            fingerprint_solve(&m, &obj, &s, &PortfolioConfig::with_threads(1)),
+            fingerprint_solve(&m, &obj, &s, &PortfolioConfig::with_threads(8)),
+        );
+    }
+
+    #[test]
+    fn lookup_and_store_track_stats() {
+        let mut cache = SolveCache::new();
+        assert!(cache.lookup_solve(42).is_none());
+        cache.store_solve(
+            42,
+            CachedSolve {
+                status: SolveStatus::Optimal,
+                objective: 3,
+                bound: 3,
+                values: vec![true],
+                components: Vec::new(),
+            },
+        );
+        let hit = cache.lookup_solve(42).expect("stored entry");
+        assert_eq!(hit.objective, 3);
+        assert_eq!(cache.stats.solve_hits, 1);
+        assert_eq!(cache.stats.solve_misses, 1);
+        assert_eq!(cache.stats.stored_solves, 1);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

@@ -43,20 +43,37 @@
 //! `threads == 1` (the default) does not spawn at all: it *is* the
 //! single-threaded code path, byte-identical to calling
 //! [`solve_max`](crate::solver::solve_max) directly.
+//!
+//! # Incremental sessions
+//!
+//! [`solve_portfolio_session`] threads an optional [`SolveCache`]
+//! (owned by an [`optimizer::session::SolveSession`]) through the solve:
+//! proven results replay from cache (whole solves and individual
+//! decomposed components), and dirty work warm-starts from the previous
+//! incumbent projected onto the model's hints, seeded as the race's
+//! initial [`SharedIncumbent`](crate::solver::SharedIncumbent) floor.
+//! Caching only ever replays *proven* certificates, so it can change how
+//! fast an answer arrives but never which answer — see [`cache`].
+//!
+//! [`optimizer::session::SolveSession`]: crate::optimizer::session::SolveSession
 
+pub mod cache;
 pub mod decompose;
 mod race;
 pub mod strategy;
 
+pub use cache::{fingerprint_solve, CacheStats, SolveCache};
 pub use decompose::{component_count, decompose, Component, Decomposition};
 pub use strategy::{roster, MAX_STRATEGIES};
 
 use crate::solver::{
-    solve_max, LinearExpr, Model, SearchStats, SolveStatus, Solution, SolverConfig,
+    solve_max, solve_max_with, LinearExpr, Model, SearchStats, SharedIncumbent, SolveStatus,
+    Solution, SolverConfig,
 };
 use crate::util::timer::Deadline;
 
-use race::{run_race, Task};
+use cache::{CachedComponent, CachedSolve};
+use race::{run_race, Task, WarmSeeds};
 
 /// Label used for the whole-model anchor task in stats and reports.
 pub const WHOLE_MODEL: &str = "whole-model";
@@ -141,6 +158,13 @@ pub struct PortfolioStats {
     /// Final winners: the whole-model anchor vs the merged composite.
     pub whole_model_wins: u64,
     pub composite_wins: u64,
+    /// Whole solves replayed from a session's certificate cache
+    /// (zero solver invocations).
+    pub cache_hits: u64,
+    /// Decomposed components replayed from a session's certificate cache.
+    pub component_cache_hits: u64,
+    /// Warm-start incumbent floors seeded from projected hints.
+    pub warm_starts: u64,
     /// Component races won, per strategy label (fixed roster order).
     pub strategy_wins: Vec<(String, u64)>,
 }
@@ -155,6 +179,9 @@ impl PortfolioStats {
         self.tasks_cancelled += other.tasks_cancelled;
         self.whole_model_wins += other.whole_model_wins;
         self.composite_wins += other.composite_wins;
+        self.cache_hits += other.cache_hits;
+        self.component_cache_hits += other.component_cache_hits;
+        self.warm_starts += other.warm_starts;
         for (label, wins) in &other.strategy_wins {
             self.credit(label, *wins);
         }
@@ -190,18 +217,113 @@ pub fn solve_portfolio(
     solver: &SolverConfig,
     cfg: &PortfolioConfig,
 ) -> PortfolioOutcome {
-    if cfg.threads <= 1 {
-        let solution = solve_max(model, objective, deadline, solver);
-        return PortfolioOutcome {
-            solution,
-            components: Vec::new(),
-            stats: PortfolioStats {
-                legacy_solves: 1,
-                ..Default::default()
-            },
-        };
+    solve_portfolio_session(model, objective, deadline, solver, cfg, None)
+}
+
+/// [`solve_portfolio`] with an optional session certificate cache:
+/// a previously *proven* solve of the same fingerprint replays without
+/// invoking the solver; a miss solves (replaying clean decomposed
+/// components, warm-starting the rest) and stores its certificate.
+pub fn solve_portfolio_session(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
+    mut session: Option<&mut SolveCache>,
+) -> PortfolioOutcome {
+    let fp = session
+        .as_deref()
+        .map(|_| fingerprint_solve(model, objective, solver, cfg));
+    if let (Some(cache), Some(fp)) = (session.as_deref_mut(), fp) {
+        if let Some(hit) = cache.lookup_solve(fp) {
+            return replay_solve(hit);
+        }
     }
-    solve_parallel(model, objective, deadline, solver, cfg)
+    if cfg.threads <= 1 {
+        return solve_legacy(model, objective, deadline, solver, session, fp);
+    }
+    solve_parallel(model, objective, deadline, solver, cfg, session, fp)
+}
+
+/// Re-emit a cached proven solve as a fresh outcome. The replayed
+/// solution carries empty search stats (nothing ran); `cache_hits`
+/// marks the replay for the tier/churn reports.
+fn replay_solve(hit: CachedSolve) -> PortfolioOutcome {
+    PortfolioOutcome {
+        solution: Solution {
+            status: hit.status,
+            objective: hit.objective,
+            bound: hit.bound,
+            values: hit.values,
+            stats: SearchStats::default(),
+        },
+        components: hit.components,
+        stats: PortfolioStats {
+            cache_hits: 1,
+            ..Default::default()
+        },
+    }
+}
+
+/// Project a model's warm-start hints onto a complete assignment and
+/// return its objective value when that assignment is feasible — the
+/// floor a session seeds into the race. The floor is some feasible
+/// assignment's objective, hence never above the true optimum, so
+/// strict pruning against it cannot change a completing solve's answer.
+fn hint_floor(model: &Model, objective: &LinearExpr) -> Option<i64> {
+    if model.num_vars() == 0 || model.hints.iter().all(Option::is_none) {
+        return None;
+    }
+    let values: Vec<bool> = model.hints.iter().map(|h| *h == Some(true)).collect();
+    model.feasible(&values).then(|| objective.eval(&values))
+}
+
+/// The single-threaded path, session-aware: seed the projected-hint
+/// floor (pure acceleration) and store proven certificates.
+fn solve_legacy(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    session: Option<&mut SolveCache>,
+    fp: Option<u64>,
+) -> PortfolioOutcome {
+    let mut stats = PortfolioStats {
+        legacy_solves: 1,
+        ..Default::default()
+    };
+    let solution = match session {
+        None => solve_max(model, objective, deadline, solver),
+        Some(cache) => {
+            let shared = hint_floor(model, objective).map(SharedIncumbent::seeded);
+            if shared.is_some() {
+                stats.warm_starts = 1;
+                cache.stats.warm_seeds += 1;
+            }
+            let solution = solve_max_with(model, objective, deadline, solver, shared.as_ref());
+            if let (Some(fp), SolveStatus::Optimal | SolveStatus::Infeasible) =
+                (fp, solution.status)
+            {
+                cache.store_solve(
+                    fp,
+                    CachedSolve {
+                        status: solution.status,
+                        objective: solution.objective,
+                        bound: solution.bound,
+                        values: solution.values.clone(),
+                        components: Vec::new(),
+                    },
+                );
+            }
+            solution
+        }
+    };
+    PortfolioOutcome {
+        solution,
+        components: Vec::new(),
+        stats,
+    }
 }
 
 fn solve_parallel(
@@ -210,6 +332,8 @@ fn solve_parallel(
     deadline: Deadline,
     solver: &SolverConfig,
     cfg: &PortfolioConfig,
+    mut session: Option<&mut SolveCache>,
+    fp: Option<u64>,
 ) -> PortfolioOutcome {
     let started = std::time::Instant::now();
     let mut stats = PortfolioStats {
@@ -266,7 +390,15 @@ fn solve_parallel(
                 }
             })
             .collect();
-        let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads);
+        let warm = session.as_deref().map(|_| WarmSeeds {
+            whole: None,
+            per_component: vec![hint_floor(model, objective)],
+        });
+        if let (Some(w), Some(cache)) = (&warm, session.as_deref_mut()) {
+            stats.warm_starts = w.count();
+            cache.stats.warm_seeds += w.count();
+        }
+        let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads, warm.as_ref());
         stats.tasks_cancelled = cancelled;
         stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
         let mut merged_stats = SearchStats::default();
@@ -294,6 +426,20 @@ fn solve_parallel(
             }
             None => Solution::unknown(SearchStats::default(), report.bound),
         };
+        if let (Some(cache), Some(fp)) = (session.as_deref_mut(), fp) {
+            if matches!(solution.status, SolveStatus::Optimal | SolveStatus::Infeasible) {
+                cache.store_solve(
+                    fp,
+                    CachedSolve {
+                        status: solution.status,
+                        objective: solution.objective,
+                        bound: solution.bound,
+                        values: solution.values.clone(),
+                        components: vec![report.clone()],
+                    },
+                );
+            }
+        }
         merged_stats.solve_time_s = started.elapsed().as_secs_f64();
         solution.stats = merged_stats;
         return PortfolioOutcome {
@@ -312,10 +458,26 @@ fn solve_parallel(
     );
     debug_assert_eq!(decomp.components.len(), ncomp);
 
+    // Session replay: a component whose fingerprint matches a proven
+    // cached result skips the race entirely (its certificate composes
+    // like a freshly raced one); only dirty components get racer tasks.
+    let mut comp_fps: Vec<Option<u64>> = vec![None; ncomp];
+    let mut cached: Vec<Option<CachedComponent>> = (0..ncomp).map(|_| None).collect();
+    if let Some(cache) = session.as_deref_mut() {
+        for (c, comp) in decomp.components.iter().enumerate() {
+            let cfp = fingerprint_solve(&comp.model, &comp.objective, solver, cfg);
+            comp_fps[c] = Some(cfp);
+            cached[c] = cache.lookup_component(cfp);
+        }
+    }
+    stats.component_cache_hits = cached.iter().flatten().count() as u64;
+
     let mut tasks: Vec<Task<'_>> = Vec::with_capacity(1 + ncomp * roster.len());
     // Whole-model anchor: the exact single-threaded solve. Wins all
     // ties, which pins portfolio answers to the `threads = 1` path
-    // whenever the deadline does not truncate it.
+    // whenever the deadline does not truncate it. It always runs — a
+    // session replays components, never the anchor (its fingerprint is
+    // the whole-solve entry, checked before decomposition).
     tasks.push(Task {
         component: None,
         rank: 0,
@@ -325,6 +487,9 @@ fn solve_parallel(
         config: solver.clone(),
     });
     for (c, comp) in decomp.components.iter().enumerate() {
+        if cached[c].is_some() {
+            continue; // replayed from the session cache — no racers
+        }
         for (rank, &(label, ref strat)) in roster.iter().enumerate() {
             let mut config = strat.clone();
             config.seed = strategy::task_seed(solver.seed, c, rank);
@@ -339,7 +504,27 @@ fn solve_parallel(
         }
     }
 
-    let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads);
+    let warm = session.as_deref().map(|_| WarmSeeds {
+        whole: hint_floor(model, objective),
+        per_component: decomp
+            .components
+            .iter()
+            .enumerate()
+            .map(|(c, comp)| {
+                if cached[c].is_some() {
+                    None
+                } else {
+                    hint_floor(&comp.model, &comp.objective)
+                }
+            })
+            .collect(),
+    });
+    if let (Some(w), Some(cache)) = (&warm, session.as_deref_mut()) {
+        stats.warm_starts = w.count();
+        cache.stats.warm_seeds += w.count();
+    }
+
+    let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads, warm.as_ref());
     stats.tasks_cancelled = cancelled;
     stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
 
@@ -353,15 +538,47 @@ fn solve_parallel(
     let mut component_values: Vec<Option<Vec<bool>>> = Vec::with_capacity(ncomp);
     let mut any_infeasible = false;
     for (c, comp) in decomp.components.iter().enumerate() {
+        if let Some(hit) = cached[c].take() {
+            // Replayed certificate: proven Optimal (with values) or
+            // proven Infeasible — anytime results are never cached.
+            any_infeasible |= hit.report.status == SolveStatus::Infeasible;
+            component_values.push(hit.report.status.has_solution().then_some(hit.values));
+            component_reports.push(hit.report);
+            continue;
+        }
         let (report, winner) =
             pick_winner(&tasks, &mut results, c, comp.vars.len(), comp.cons.len());
         any_infeasible |= report.status == SolveStatus::Infeasible;
         match winner {
             Some(sol) => {
                 stats.credit(report.winner, 1);
+                if report.status == SolveStatus::Optimal {
+                    if let (Some(cache), Some(cfp)) = (session.as_deref_mut(), comp_fps[c]) {
+                        cache.store_component(
+                            cfp,
+                            CachedComponent {
+                                report: report.clone(),
+                                values: sol.values.clone(),
+                            },
+                        );
+                    }
+                }
                 component_values.push(Some(sol.values));
             }
-            None => component_values.push(None),
+            None => {
+                if report.status == SolveStatus::Infeasible {
+                    if let (Some(cache), Some(cfp)) = (session.as_deref_mut(), comp_fps[c]) {
+                        cache.store_component(
+                            cfp,
+                            CachedComponent {
+                                report: report.clone(),
+                                values: Vec::new(),
+                            },
+                        );
+                    }
+                }
+                component_values.push(None);
+            }
         }
         component_reports.push(report);
     }
@@ -455,6 +672,20 @@ fn solve_parallel(
 
     merged_stats.solve_time_s = started.elapsed().as_secs_f64();
     solution.stats = merged_stats;
+    if let (Some(cache), Some(fp)) = (session.as_deref_mut(), fp) {
+        if matches!(solution.status, SolveStatus::Optimal | SolveStatus::Infeasible) {
+            cache.store_solve(
+                fp,
+                CachedSolve {
+                    status: solution.status,
+                    objective: solution.objective,
+                    bound: solution.bound,
+                    values: solution.values.clone(),
+                    components: component_reports.clone(),
+                },
+            );
+        }
+    }
     PortfolioOutcome {
         solution,
         components: component_reports,
@@ -745,6 +976,95 @@ mod tests {
             a.strategy_wins,
             vec![("default".to_string(), 3), ("lns-heavy".to_string(), 4)]
         );
+    }
+
+    #[test]
+    fn session_cache_replays_proven_solves() {
+        let (m, obj) = figure1();
+        let solver = SolverConfig::default();
+        let mut cache = SolveCache::new();
+        let first = solve_portfolio_session(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &solver,
+            &cfg(1),
+            Some(&mut cache),
+        );
+        assert_eq!(first.solution.status, SolveStatus::Optimal);
+        assert_eq!(first.stats.cache_hits, 0);
+        assert_eq!(cache.stats.stored_solves, 1);
+        // cold parity: the session path is the plain path plus caching
+        let plain = solve_portfolio(&m, &obj, Deadline::unlimited(), &solver, &cfg(1));
+        assert_eq!(first.solution.values, plain.solution.values);
+
+        let replay = solve_portfolio_session(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &solver,
+            &cfg(1),
+            Some(&mut cache),
+        );
+        assert_eq!(replay.stats.cache_hits, 1);
+        assert_eq!(replay.stats.legacy_solves, 0, "no solver invocation");
+        assert_eq!(replay.solution.status, SolveStatus::Optimal);
+        assert_eq!(replay.solution.values, first.solution.values);
+        assert_eq!(replay.solution.objective, first.solution.objective);
+
+        // the cache key is thread-independent: an 8-worker re-solve of
+        // the same model replays the same certificate
+        let replay8 = solve_portfolio_session(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &solver,
+            &cfg(8),
+            Some(&mut cache),
+        );
+        assert_eq!(replay8.stats.cache_hits, 1);
+        assert_eq!(replay8.solution.values, first.solution.values);
+        assert_eq!(cache.stats.solve_hits, 2);
+    }
+
+    #[test]
+    fn session_replays_clean_components_and_warm_starts_dirty_ones() {
+        let (m, obj) = two_pools();
+        let solver = SolverConfig::default();
+        let mut cache = SolveCache::new();
+        let cold = solve_portfolio_session(
+            &m,
+            &obj,
+            Deadline::unlimited(),
+            &solver,
+            &cfg(4),
+            Some(&mut cache),
+        );
+        assert_eq!(cold.solution.status, SolveStatus::Optimal);
+        assert_eq!(cold.stats.component_cache_hits, 0);
+        assert_eq!(cache.stats.stored_components, 2, "both pools certified");
+
+        // Dirty pool 1 only (a fresh hint changes its fingerprint and
+        // the whole-model fingerprint; pool 0 is untouched).
+        let mut m2 = m.clone();
+        m2.hint(VarId(6), true); // pool 1's first variable
+        let warm = solve_portfolio_session(
+            &m2,
+            &obj,
+            Deadline::unlimited(),
+            &solver,
+            &cfg(4),
+            Some(&mut cache),
+        );
+        assert_eq!(warm.stats.cache_hits, 0, "whole model is dirty");
+        assert_eq!(warm.stats.component_cache_hits, 1, "pool 0 replayed");
+        assert!(warm.stats.warm_starts >= 1, "dirty work seeded a floor");
+
+        // Byte-identity with a cold (sessionless) solve of the same model.
+        let coldref = solve_portfolio(&m2, &obj, Deadline::unlimited(), &solver, &cfg(4));
+        assert_eq!(warm.solution.status, coldref.solution.status);
+        assert_eq!(warm.solution.objective, coldref.solution.objective);
+        assert_eq!(warm.solution.values, coldref.solution.values);
     }
 
     #[test]

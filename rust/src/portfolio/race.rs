@@ -33,6 +33,28 @@ pub(crate) struct Task<'a> {
     pub config: SolverConfig,
 }
 
+/// Warm-start incumbent floors an incremental solve session seeds into
+/// the race: the objective value of the previous incumbent *projected*
+/// onto the current model (feasibility-checked by the caller). Racers
+/// prune **strictly** below the floor, so a seed — always some feasible
+/// assignment's objective, hence never above the true optimum — can only
+/// accelerate a completing racer, never change its answer (see
+/// [`SharedIncumbent`]'s determinism note).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WarmSeeds {
+    /// Floor for the whole-model anchor task.
+    pub whole: Option<i64>,
+    /// Floor per component, indexed by original component id.
+    pub per_component: Vec<Option<i64>>,
+}
+
+impl WarmSeeds {
+    /// Number of floors this seed set will publish.
+    pub fn count(&self) -> u64 {
+        u64::from(self.whole.is_some()) + self.per_component.iter().flatten().count() as u64
+    }
+}
+
 /// Run every task under `deadline` on up to `threads` workers. Returns
 /// one result slot per task (`None` = cancelled before it started) plus
 /// the number of cancelled-unstarted tasks.
@@ -40,6 +62,7 @@ pub(crate) fn run_race(
     tasks: &[Task<'_>],
     deadline: Deadline,
     threads: usize,
+    warm: Option<&WarmSeeds>,
 ) -> (Vec<Option<Solution>>, u64) {
     let n = tasks.len();
     if n == 0 {
@@ -54,9 +77,24 @@ pub(crate) fn run_race(
     // One floor per component; every task gets its own sibling handle
     // (shared floor, private cancellation flag).
     let floors: Vec<SharedIncumbent> = (0..ncomp).map(|_| SharedIncumbent::new()).collect();
+    // The anchor keeps its floor-free cold behaviour unless a session
+    // seeds it: its floor is never shared with component racers (their
+    // objectives live on different scales).
+    let anchor_floor: Option<SharedIncumbent> =
+        warm.and_then(|w| w.whole).map(SharedIncumbent::seeded);
+    if let Some(w) = warm {
+        for (c, floor) in floors.iter().enumerate() {
+            if let Some(&Some(v)) = w.per_component.get(c) {
+                floor.publish(v);
+            }
+        }
+    }
     let handles: Vec<Option<SharedIncumbent>> = tasks
         .iter()
-        .map(|t| t.component.map(|c| floors[c].sibling()))
+        .map(|t| match t.component {
+            Some(c) => Some(floors[c].sibling()),
+            None => anchor_floor.as_ref().map(|f| f.sibling()),
+        })
         .collect();
     let cancels: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
     let next = AtomicUsize::new(0);
@@ -168,7 +206,7 @@ mod tests {
         };
         let runs: Vec<_> = [1usize, 2, 8]
             .iter()
-            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t).0)
+            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t, None).0)
             .collect();
         for run in &runs {
             // rank 0 always runs (never cancelled by construction)
@@ -214,9 +252,39 @@ mod tests {
                 config: SolverConfig::default(),
             },
         ];
-        let (results, cancelled) = run_race(&tasks, Deadline::unlimited(), 1);
+        let (results, cancelled) = run_race(&tasks, Deadline::unlimited(), 1, None);
         assert!(results[0].is_some());
         assert!(results[1].is_none());
         assert_eq!(cancelled, 1);
+    }
+
+    #[test]
+    fn seeded_floor_does_not_change_a_completing_race() {
+        // Seed the component floor with the true optimum (3): strict
+        // pruning must leave the completing racer's answer untouched —
+        // the warm-start invariant the session layer relies on.
+        let (m, obj) = model();
+        let mk_tasks = || {
+            vec![Task {
+                component: Some(0),
+                rank: 0,
+                label: "default",
+                model: &m,
+                objective: &obj,
+                config: SolverConfig::default(),
+            }]
+        };
+        let cold = run_race(&mk_tasks(), Deadline::unlimited(), 2, None).0;
+        let seeds = WarmSeeds {
+            whole: None,
+            per_component: vec![Some(3)],
+        };
+        assert_eq!(seeds.count(), 1);
+        let warm = run_race(&mk_tasks(), Deadline::unlimited(), 2, Some(&seeds)).0;
+        let c = cold[0].as_ref().expect("cold racer ran");
+        let w = warm[0].as_ref().expect("warm racer ran");
+        assert_eq!(w.status, SolveStatus::Optimal);
+        assert_eq!(w.objective, c.objective);
+        assert_eq!(w.values, c.values);
     }
 }

@@ -117,6 +117,18 @@ impl SharedIncumbent {
         }
     }
 
+    /// A handle pre-seeded with a known feasible objective — an
+    /// incremental session's previous incumbent projected onto the
+    /// current model. Racers prune strictly below it from their very
+    /// first decision; because the seed is some feasible assignment's
+    /// objective (never above the true optimum), a completing search
+    /// still returns the same first-in-DFS-order answer it finds alone.
+    pub fn seeded(floor: i64) -> SharedIncumbent {
+        let s = SharedIncumbent::new();
+        s.publish(floor);
+        s
+    }
+
     /// A handle sharing this one's floor but carrying its own
     /// cancellation flag (shared incumbent, per-racer cancel).
     pub fn sibling(&self) -> SharedIncumbent {

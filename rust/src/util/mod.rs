@@ -6,6 +6,7 @@
 //! small, fully tested, dependency-free building block:
 //!
 //! * [`rng`]   — xoshiro256++ / splitmix64 deterministic PRNG (rand-like).
+//! * [`fingerprint`] — streaming FNV-1a fingerprints for the solve caches.
 //! * [`json`]  — JSON value tree, writer, and recursive-descent parser.
 //! * [`cli`]   — flag/subcommand parser for the `kube-packd` binary.
 //! * [`timer`] — monotonic deadlines and time budgets for the solver.
@@ -15,6 +16,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fingerprint;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -17,13 +17,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile via linear interpolation on the sorted sample, `q` in [0,100].
+/// Percentile via linear interpolation over the sorted *finite* samples,
+/// `q` in [0,100]. Non-finite cells (a failed timing measurement) are
+/// dropped instead of panicking the sort or bleeding NaN into high
+/// percentiles, so one bad cell cannot poison a whole report; with no
+/// finite sample at all the result clamps to 0.0 (matching `mean`).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (q / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -38,13 +42,35 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Min/max helpers tolerant of NaN-free inputs.
+/// Minimum *finite* sample. Empty (or all-non-finite) input clamps to
+/// 0.0 — matching `mean` / `percentile` — instead of leaking
+/// `±INFINITY` into emitted `BENCH_*.json` files, whose schema admits
+/// finite numbers only.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::INFINITY, f64::min)
+    let m = xs
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    if m.is_finite() {
+        m
+    } else {
+        0.0
+    }
 }
 
+/// Maximum *finite* sample (0.0 when none — see [`min`]).
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    let m = xs
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite())
+        .fold(f64::NEG_INFINITY, f64::max);
+    if m.is_finite() {
+        m
+    } else {
+        0.0
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +99,32 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(stddev(&[]), 0.0);
+        // min/max clamp to 0.0 instead of leaking ±INFINITY into reports
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // A failed timing cell (NaN/inf) must neither panic the sort nor
+        // bleed into any percentile: the summary covers the finite cells.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0, "high percentiles stay finite");
+        assert_eq!(median(&[f64::NAN, 5.0, 1.0]), 3.0);
+        // degenerate all-bad samples clamp like empty input
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn min_max_ignore_non_finite_samples() {
+        assert_eq!(min(&[f64::NAN, 2.0, 5.0]), 2.0);
+        assert_eq!(max(&[f64::NEG_INFINITY, 2.0, 5.0]), 5.0);
+        assert_eq!(min(&[f64::INFINITY, 4.0]), 4.0);
+        // all-non-finite behaves like empty: clamp to 0.0, never ±inf
+        assert_eq!(min(&[f64::NAN]), 0.0);
+        assert_eq!(max(&[f64::NAN, f64::INFINITY]), 0.0);
     }
 
     #[test]

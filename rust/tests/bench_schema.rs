@@ -1,0 +1,101 @@
+//! Schema guard for committed `BENCH_*.json` artefacts.
+//!
+//! Every bench binary emits a machine-readable JSON report in the repo
+//! root; CI runs this test to validate each committed artefact:
+//!
+//! * it parses as JSON at all (the writer renders non-finite `f64`s as
+//!   `inf` / `NaN`, which are *not* JSON — so a parse failure is exactly
+//!   the regression this guards: `stats::min`/`max` leaking ±INFINITY on
+//!   empty inputs, or a NaN timing cell surviving `percentile`);
+//! * every number in the document is finite;
+//! * the shared envelope holds: `bench` (string), `schema` (integer
+//!   ≥ 1), `cells` (array of objects).
+
+use std::path::Path;
+
+use kube_packd::util::json::{parse, Json};
+
+/// Recursively assert every number in the tree is finite.
+fn assert_finite(value: &Json, path: &str, file: &str) {
+    match value {
+        Json::Num(n) => assert!(
+            n.is_finite(),
+            "{file}: non-finite number {n} at {path} — a stats helper leaked inf/NaN"
+        ),
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                assert_finite(item, &format!("{path}[{i}]"), file);
+            }
+        }
+        Json::Obj(map) => {
+            for (k, v) in map {
+                assert_finite(v, &format!("{path}.{k}"), file);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn committed_bench_artefacts_match_their_schema() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(root).expect("repo root readable") {
+        let entry = entry.expect("dir entry");
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(entry.path())
+            .unwrap_or_else(|e| panic!("{name}: unreadable: {e}"));
+        let doc = parse(&text).unwrap_or_else(|e| {
+            panic!("{name}: not valid JSON ({e:?}) — non-finite numbers render as inf/NaN")
+        });
+
+        // Shared envelope.
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("{name}: missing string field 'bench'"));
+        assert!(!bench.is_empty(), "{name}: empty 'bench' label");
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_i64)
+            .unwrap_or_else(|| panic!("{name}: missing integer field 'schema'"));
+        assert!(schema >= 1, "{name}: schema version must be >= 1");
+        let cells = doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{name}: missing array field 'cells'"));
+        for (i, cell) in cells.iter().enumerate() {
+            assert!(
+                matches!(cell, Json::Obj(_)),
+                "{name}: cells[{i}] is not an object"
+            );
+        }
+
+        // Finite numbers only, everywhere.
+        assert_finite(&doc, "$", &name);
+        checked += 1;
+    }
+    assert!(
+        checked >= 1,
+        "no BENCH_*.json artefacts found in the repo root — the bench trajectory regressed"
+    );
+}
+
+#[test]
+fn schema_guard_rejects_non_finite_payloads() {
+    // The JSON writer renders f64::INFINITY as `inf`, which the parser
+    // refuses — proving the guard actually bites on the stats regression
+    // it exists for.
+    let mut doc = Json::obj();
+    doc.set("bench", "broken")
+        .set("schema", 1u64)
+        .set("min_s", f64::INFINITY);
+    let rendered = doc.to_string_pretty();
+    assert!(
+        parse(&rendered).is_err(),
+        "a non-finite number must not round-trip: {rendered}"
+    );
+}

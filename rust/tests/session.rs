@@ -1,0 +1,209 @@
+//! Incremental solve-session integration tests: the PR 3
+//! thread-determinism properties extended to sessions.
+//!
+//! Contract under test: a session re-solve is **byte-identical** to a
+//! cold solve of the same state (plans and objective vectors, threads
+//! ∈ {1, 8}), and a no-op delta returns the cached certificate without
+//! invoking the solver (asserted via the session's solve counters).
+//!
+//! Same caveat as every determinism test in this repo: identity is
+//! guaranteed when every solve completes inside its window, so cases
+//! are tiny and deadlines generous.
+
+use kube_packd::cluster::{Pod, PodId, Priority, Resources};
+use kube_packd::optimizer::algorithm::{optimize, OptimizeResult, OptimizerConfig};
+use kube_packd::optimizer::SolveSession;
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::util::prop::check;
+use kube_packd::workload::{GenParams, Instance};
+
+/// Compare the determinism-relevant surface of two results: the plan,
+/// the objective vector, the certificate, and the per-tier metrics.
+fn assert_same_result(
+    warm: &OptimizeResult,
+    cold: &OptimizeResult,
+    ctx: &str,
+) -> Result<(), String> {
+    if warm.target != cold.target {
+        return Err(format!("{ctx}: plan diverged"));
+    }
+    if warm.placed_per_priority != cold.placed_per_priority {
+        return Err(format!("{ctx}: objective vector diverged"));
+    }
+    if warm.proved_optimal != cold.proved_optimal {
+        return Err(format!("{ctx}: certificate diverged"));
+    }
+    let tiers = |r: &OptimizeResult| -> Vec<(i64, i64, i64)> {
+        r.tiers
+            .iter()
+            .map(|t| (t.phase1_placed, t.phase1_bound, t.phase2_metric))
+            .collect()
+    };
+    if tiers(warm) != tiers(cold) {
+        return Err(format!("{ctx}: per-tier metrics diverged"));
+    }
+    Ok(())
+}
+
+/// The tentpole property: run a session through (cold solve → churn
+/// delta → re-solve) and pin the re-solve byte-identical to a fresh
+/// cold solve of the mutated state, at 1 and 8 threads.
+#[test]
+fn prop_session_resolve_is_byte_identical_to_cold() {
+    check(
+        "session_resolve_cold_parity",
+        0x5E55,
+        6,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 4),
+                pods_per_node: rng.range_usize(2, 3),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.9 + rng.f64() * 0.2,
+            };
+            // The churn delta applied between the two solves: a fresh
+            // arrival, sized like the instance's own pods.
+            let extra_cpu = rng.range_i64(100, 600);
+            let extra_ram = rng.range_i64(100, 600);
+            (Instance::generate(params, rng.next_u64()), extra_cpu, extra_ram)
+        },
+        |(inst, extra_cpu, extra_ram)| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (mut state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+
+            for threads in [1usize, 8] {
+                let cfg = OptimizerConfig::with_timeout(10.0).with_threads(threads);
+                let mut session = SolveSession::new();
+
+                // First solve through the session == plain cold solve.
+                let first = session.solve(&state, p_max, &cfg);
+                let cold_first = optimize(&state, p_max, &cfg);
+                match (&first, &cold_first) {
+                    (None, None) => {}
+                    (Some(w), Some(c)) => {
+                        assert_same_result(w, c, &format!("first solve, threads={threads}"))?
+                    }
+                    _ => return Err(format!("solvability diverged at threads={threads}")),
+                }
+
+                // Churn delta: one arrival (and, when possible, one
+                // eviction) — then the warm re-solve must equal cold.
+                let mut dirty = state.clone();
+                dirty.add_pod(Pod::new(
+                    0,
+                    "arrival",
+                    Resources::new(*extra_cpu, *extra_ram),
+                    Priority(0),
+                ));
+                if let Some(pod) = dirty
+                    .assignment()
+                    .iter()
+                    .position(|a| a.is_some())
+                    .map(|i| PodId(i as u32))
+                {
+                    dirty.evict(pod).map_err(|e| e.to_string())?;
+                }
+                let warm = session.solve(&dirty, p_max, &cfg);
+                let cold = optimize(&dirty, p_max, &cfg);
+                match (&warm, &cold) {
+                    (None, None) => {}
+                    (Some(w), Some(c)) => {
+                        assert_same_result(w, c, &format!("re-solve, threads={threads}"))?
+                    }
+                    _ => return Err(format!("re-solvability diverged at threads={threads}")),
+                }
+                if threads == 1 {
+                    state = dirty; // vary the second thread-count's input
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A no-op delta replays the cached certificate with zero solver
+/// invocations, counter-asserted — and the replay is byte-identical.
+#[test]
+fn noop_delta_returns_cached_certificate_without_solving() {
+    use kube_packd::cluster::{identical_nodes, ClusterState, NodeId};
+
+    // Figure 1: tiny, always fully certified under a generous window.
+    let nodes = identical_nodes(2, Resources::new(4000, 4096));
+    let pods = vec![
+        Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+        Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+        Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    state.bind(PodId(0), NodeId(0)).unwrap();
+    state.bind(PodId(1), NodeId(1)).unwrap();
+
+    for threads in [1usize, 8] {
+        let cfg = OptimizerConfig::with_timeout(10.0).with_threads(threads);
+        let mut session = SolveSession::new();
+        let first = session.solve(&state, 0, &cfg).expect("figure 1 solves");
+        assert!(first.proved_optimal);
+        assert_eq!(session.stats.solves, 1);
+        assert_eq!(session.stats.optimizer_runs, 1);
+        assert_eq!(session.stats.full_hits, 0);
+
+        let replay = session.solve(&state, 0, &cfg).expect("replay");
+        assert_eq!(
+            session.stats.optimizer_runs, 1,
+            "no-op delta must not invoke the solver (threads={threads})"
+        );
+        assert_eq!(session.stats.full_hits, 1);
+        assert_eq!(replay.target, first.target);
+        assert_eq!(replay.placed_per_priority, first.placed_per_priority);
+        assert!(replay.proved_optimal, "certificate replayed");
+        assert_eq!(
+            replay.tiers.len(),
+            first.tiers.len(),
+            "tier reports replay with the certificate"
+        );
+    }
+}
+
+/// Warm-started dirty re-solves actually record reuse: unchanged tier
+/// models hit the per-solve cache, and at least one warm-start floor is
+/// seeded for the dirty work.
+#[test]
+fn dirty_resolve_records_cache_hits_and_warm_starts() {
+    use kube_packd::cluster::{identical_nodes, ClusterState, NodeId};
+
+    // Two tiers: tier 0 stays untouched across the delta, so its phase
+    // solves replay from the per-solve cache even though the state (and
+    // tier 1's models) changed.
+    let nodes = identical_nodes(2, Resources::new(1000, 1000));
+    let pods = vec![
+        Pod::new(0, "hi", Resources::new(900, 900), Priority(0)),
+        Pod::new(1, "lo-1", Resources::new(400, 400), Priority(1)),
+    ];
+    let mut state = ClusterState::new(nodes, pods);
+    state.bind(PodId(0), NodeId(0)).unwrap();
+    state.bind(PodId(1), NodeId(1)).unwrap();
+
+    let cfg = OptimizerConfig::with_timeout(10.0);
+    let mut session = SolveSession::new();
+    session.solve(&state, 1, &cfg).expect("first solve");
+    let hits_before = session.cache_stats().solve_hits;
+
+    // Delta in tier 1 only: a new low-priority arrival.
+    state.add_pod(Pod::new(0, "lo-2", Resources::new(400, 400), Priority(1)));
+    let warm = session.solve(&state, 1, &cfg).expect("re-solve");
+    assert_eq!(session.stats.optimizer_runs, 2, "dirty state re-solves");
+    assert!(
+        session.cache_stats().solve_hits > hits_before,
+        "tier 0's unchanged phase solves must replay from cache"
+    );
+    assert!(
+        session.cache_stats().warm_seeds > 0,
+        "dirty solves must seed warm-start floors"
+    );
+
+    // And the reused result still matches cold bit for bit.
+    let cold = optimize(&state, 1, &cfg).expect("cold solve");
+    assert_eq!(warm.target, cold.target);
+    assert_eq!(warm.placed_per_priority, cold.placed_per_priority);
+}
