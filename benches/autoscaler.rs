@@ -1,0 +1,183 @@
+//! Bench: CP-driven autoscaling — elastic vs static churn on an
+//! overloaded seeded trace, plus the provisioning-solve microbench.
+//!
+//! Emits machine-readable `BENCH_autoscaler.json` in the working
+//! directory: one cell per (scenario, mode) with timing and autoscaler
+//! counters, and a determinism record asserting scale decisions are
+//! identical at 1 and 8 portfolio threads (the certificate contract:
+//! decisions are proofs, so they replay).
+
+use std::time::Duration;
+
+use kube_packd::autoscaler::{plan_provisioning, AutoscaleConfig, NodePool, ProvisionOutcome};
+use kube_packd::cluster::ClusterState;
+use kube_packd::lifecycle::{run_churn, ChurnConfig, ChurnResult, Policy, SweepConfig};
+use kube_packd::optimizer::{constraints::ModuleRegistry, OptimizerConfig};
+use kube_packd::portfolio::PortfolioConfig;
+use kube_packd::solver::SolverConfig;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::util::json::Json;
+use kube_packd::util::timer::Deadline;
+use kube_packd::workload::{ChurnParams, ChurnTraceGenerator, GenParams, Instance};
+
+fn churn_cfg(autoscale: bool, threads: usize) -> ChurnConfig {
+    ChurnConfig {
+        policy: Policy::FallbackSweep,
+        sweep_every_ms: 2_000,
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(2.0).with_threads(threads),
+            eviction_budget: 8,
+        },
+        fallback_timeout: Duration::from_secs(2),
+        fallback_portfolio: PortfolioConfig::with_threads(threads),
+        incremental: false,
+        autoscale: autoscale.then(|| AutoscaleConfig {
+            pools: NodePool::standard_mix(),
+            provision_timeout: Duration::from_secs(2),
+            max_removals: 2,
+            ..AutoscaleConfig::default()
+        }),
+    }
+}
+
+fn churn_cell(scenario: &str, mode: &str, m: &kube_packd::util::bench::Measurement, r: &ChurnResult) -> Json {
+    let mut cell = Json::obj();
+    cell.set("scenario", scenario)
+        .set("mode", mode)
+        .set("mean_s", m.mean_s)
+        .set("median_s", m.median_s)
+        .set("min_s", m.min_s)
+        .set("max_s", m.max_s)
+        .set("served_total", r.served_total() as u64)
+        .set("final_pending", r.final_pending as u64)
+        .set("final_ready_nodes", r.final_ready_nodes as u64)
+        .set("autoscale", r.autoscale.to_json());
+    cell
+}
+
+fn main() {
+    let b = Bencher::new(0, 3, Duration::from_secs(90));
+    let mut cells: Vec<Json> = Vec::new();
+
+    // ---- elastic vs static churn on an overloaded trace -------------------
+    let trace = ChurnTraceGenerator::new(
+        ChurnParams {
+            horizon_ms: 8_000,
+            mean_arrival_ms: 700,
+            mean_lifetime_ms: 3_000,
+            drain_chance: 0.0,
+            join_chance: 0.0,
+            ..ChurnParams::for_cluster(GenParams {
+                nodes: 4,
+                pods_per_node: 4,
+                priority_tiers: 2,
+                usage: 1.15,
+            })
+        },
+        0xE1A5,
+    )
+    .generate();
+
+    let mut static_res = None;
+    let m_static = b.run("autoscaler/churn-static", || {
+        static_res = Some(run_churn(&trace, &churn_cfg(false, 1)));
+    });
+    let mut elastic_res = None;
+    let m_elastic = b.run("autoscaler/churn-elastic", || {
+        elastic_res = Some(run_churn(&trace, &churn_cfg(true, 1)));
+    });
+    let static_run = static_res.expect("static churn ran");
+    let elastic = elastic_res.expect("elastic churn ran");
+    println!(
+        "  -> elastic: +{} nodes (cost {}), -{} consolidated, served {} vs {} static, pending {} vs {}",
+        elastic.autoscale.nodes_added,
+        elastic.autoscale.cost_added,
+        elastic.autoscale.nodes_removed,
+        elastic.served_total(),
+        static_run.served_total(),
+        elastic.final_pending,
+        static_run.final_pending,
+    );
+    cells.push(churn_cell("churn", "static", &m_static, &static_run));
+    cells.push(churn_cell("churn", "elastic", &m_elastic, &elastic));
+
+    // Determinism record: identical decisions at 1 and 8 threads —
+    // asserted, not just recorded (scale decisions are certificates, so
+    // divergence is a bug, not noise).
+    let t8 = run_churn(&trace, &churn_cfg(true, 8));
+    let thread_independent =
+        t8.log.digest() == elastic.log.digest() && t8.autoscale == elastic.autoscale;
+    assert!(
+        thread_independent,
+        "autoscale decisions diverged between 1 and 8 threads: digests {:016x} vs {:016x}",
+        elastic.log.digest(),
+        t8.log.digest()
+    );
+
+    // ---- provisioning microbench: certified min-cost from scratch ----------
+    let inst = Instance::generate(
+        GenParams {
+            nodes: 8,
+            pods_per_node: 4,
+            priority_tiers: 1,
+            usage: 1.0,
+        },
+        0xBEEF,
+    );
+    let empty = ClusterState::new(Vec::new(), inst.pods.clone());
+    let pending: Vec<_> = empty.pending_pods();
+    let pools = vec![NodePool::new("std", 1000, 1)];
+    let reference = inst.reference_capacity;
+    let mut certified = false;
+    let mut provisioned = 0usize;
+    let m_prov = b.run("autoscaler/provision-from-scratch", || {
+        let out = plan_provisioning(
+            &empty,
+            &pending,
+            &pools,
+            reference,
+            pending.len(),
+            Deadline::after(Duration::from_secs(30)),
+            &SolverConfig::default(),
+            &PortfolioConfig::default(),
+            &ModuleRegistry::standard(),
+        );
+        if let ProvisionOutcome::Plan(p) = &out {
+            certified = p.certified();
+            provisioned = p.node_count;
+        }
+        black_box(out);
+    });
+    println!("  -> from-scratch fleet: {provisioned} nodes, certified={certified}");
+    let mut cell = Json::obj();
+    cell.set("scenario", "provision")
+        .set("mode", "from-scratch")
+        .set("mean_s", m_prov.mean_s)
+        .set("median_s", m_prov.median_s)
+        .set("min_s", m_prov.min_s)
+        .set("max_s", m_prov.max_s)
+        .set("pods", pending.len() as u64)
+        .set("nodes_provisioned", provisioned as u64)
+        .set("certified", certified);
+    cells.push(cell);
+
+    let mut determinism = Json::obj();
+    determinism
+        .set("t1_digest", format!("{:016x}", elastic.log.digest()))
+        .set("t8_digest", format!("{:016x}", t8.log.digest()))
+        .set("thread_independent", thread_independent);
+
+    let mut doc = Json::obj();
+    doc.set("bench", "autoscaler")
+        .set("schema", 1u64)
+        .set(
+            "host_threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64,
+        )
+        .set("trace_seed", 0xE1A5u64)
+        .set("determinism", determinism)
+        .set("cells", Json::Arr(cells));
+    std::fs::write("BENCH_autoscaler.json", doc.to_string_pretty())
+        .expect("write BENCH_autoscaler.json");
+    println!("wrote BENCH_autoscaler.json");
+}

@@ -50,6 +50,7 @@ fn main() {
         fallback_timeout: std::time::Duration::from_millis(500),
         fallback_portfolio: PortfolioConfig::default(),
         incremental: false,
+        autoscale: None,
     };
     let heavy = Bencher::heavy();
     let events = run_churn(&trace, &cfg).events_processed;

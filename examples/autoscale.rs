@@ -1,0 +1,95 @@
+//! The autoscaler loop, narrated: prove the cluster full, buy the
+//! cheapest fix, then prove a node drainable once the load recedes.
+//!
+//! Run: `cargo run --release --example autoscale`
+
+use std::time::Duration;
+
+use kube_packd::autoscaler::{run_consolidation, AutoscaleConfig, NodePool};
+use kube_packd::cluster::{identical_nodes, ClusterState, Pod, PodId, Priority, Resources};
+use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler};
+
+fn main() {
+    println!("autoscale demo — 2 nodes x (1000m, 1000Mi), menu: small/large/gpu\n");
+
+    // A cluster the default scheduler fills to the brim, plus two
+    // arrivals that provably cannot fit.
+    let pods = vec![
+        Pod::new(0, "web-0", Resources::new(600, 600), Priority(0)),
+        Pod::new(1, "web-1", Resources::new(1000, 1000), Priority(0)),
+        Pod::new(2, "db-0", Resources::new(400, 400), Priority(0)),
+        Pod::new(3, "burst-0", Resources::new(400, 400), Priority(0)),
+        Pod::new(4, "burst-1", Resources::new(400, 400), Priority(0)),
+    ];
+    let mut state = ClusterState::new(identical_nodes(2, Resources::new(1000, 1000)), pods);
+
+    let acfg = AutoscaleConfig {
+        pools: vec![NodePool::small(), NodePool::large(), NodePool::gpu()],
+        provision_timeout: Duration::from_secs(5),
+        max_removals: 2,
+        ..AutoscaleConfig::default()
+    };
+    let mut sched = OptimizingScheduler::new(
+        0,
+        OptimizerConfig::with_timeout(5.0).with_autoscale(acfg.clone()),
+    );
+
+    // --- phase 1: the fallback proves the cluster full and scales up ---
+    let report = sched.run(&mut state);
+    println!(
+        "fallback: placed {:?} -> {:?} (proved optimal: {})",
+        report.placed_before, report.placed_after, report.proved_optimal
+    );
+    let up = report
+        .autoscale
+        .expect("two pods are certifiably unplaceable");
+    println!("  {}", up.log_line());
+    assert!(up.applied, "the plan must apply");
+    assert!(up.certified, "min cost AND min count, both proven");
+    assert!(
+        state.pending_pods().is_empty(),
+        "every stuck pod landed on a provisioned node"
+    );
+    println!(
+        "  fleet: {} nodes (cost floor proven at {})",
+        state.nodes().len(),
+        up.cost_bound
+    );
+
+    // --- phase 2: load recedes; consolidation proves a node drainable ---
+    println!("\nburst-0 and web-0 complete; the fleet is now oversized");
+    state.terminate(PodId(3)).expect("burst-0 completes");
+    state.terminate(PodId(0)).expect("web-0 completes");
+    let pass = run_consolidation(
+        &mut state,
+        0,
+        &acfg,
+        &OptimizerConfig::with_timeout(5.0),
+        None,
+    );
+    println!(
+        "consolidation: considered={} removed={} moves={} drained={}",
+        pass.considered,
+        pass.removed.len(),
+        pass.moves,
+        pass.drained_pods
+    );
+    assert!(
+        !pass.removed.is_empty(),
+        "at least one node is provably drainable"
+    );
+    for n in &pass.removed {
+        println!("  removed {}", state.node(*n).name);
+    }
+    state.check_invariants().expect("state stays consistent");
+    let ready = state
+        .nodes()
+        .iter()
+        .filter(|n| state.node_ready(n.id))
+        .count();
+    println!(
+        "  fleet: {ready} ready nodes, {} pods placed",
+        state.placed_count()
+    );
+    println!("\nautoscale OK");
+}

@@ -1,0 +1,346 @@
+//! Consolidation scale-down: prove a node drainable, then remove it.
+//!
+//! The mirror image of certificate-guided scale-up. Where the
+//! provisioning model answers "what is the cheapest fleet that makes the
+//! pending set placeable", consolidation answers "which nodes can leave
+//! without making anything unplaceable" — and insists on a *proof*
+//! before acting, reusing the defrag-sweep machinery (trial-clone
+//! re-pack under an eviction budget) and the incremental
+//! [`SolveSession`] warm-starts across candidates:
+//!
+//! 1. Candidates are Ready nodes, emptiest first (fewest resident pods,
+//!    then id) — the cheapest drains are tried first.
+//! 2. For each candidate, a log-detached trial clone drains it and
+//!    re-packs the cluster with Algorithm 1. The candidate is *provably
+//!    removable* iff the re-pack is fully certified (`proved_optimal`)
+//!    and its placement vector loses nothing in any priority tier.
+//! 3. The disruption price — drained residents plus every re-pack move —
+//!    must fit the eviction budget, exactly like a sweep plan.
+//! 4. Only then does the live state drain, execute the move plan
+//!    (evictions attributed to [`EvictCause::Sweep`]: consolidation
+//!    moves are elective, like defragmentation), and remove the node —
+//!    emitting the `NodeDrained` / `NodeRemoved` lifecycle events churn
+//!    traces replay.
+//!
+//! Determinism: candidate order, certificates, and budgets are all pure
+//! functions of the state and config, so consolidation decisions inherit
+//! the solver's thread-independence — identical at any worker count
+//! whenever the solves complete in-window.
+
+use crate::cluster::{ClusterState, EvictCause, NodeId};
+use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+use crate::optimizer::plan::MovePlan;
+use crate::optimizer::session::SolveSession;
+
+use super::policy::AutoscaleConfig;
+
+/// What one consolidation pass did.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConsolidationPass {
+    /// Candidates examined (solves attempted + empty-node fast paths).
+    pub considered: usize,
+    /// Nodes drained and removed, in removal order.
+    pub removed: Vec<NodeId>,
+    /// Re-pack moves executed (pods whose node changed beyond the drain).
+    pub moves: usize,
+    /// Resident pods drained off removed nodes.
+    pub drained_pods: usize,
+    /// Candidates whose certified drain plan exceeded the budget.
+    pub vetoed_budget: usize,
+    /// Candidates with no certified lossless re-pack (kept).
+    pub blocked: usize,
+}
+
+impl ConsolidationPass {
+    pub fn removed_any(&self) -> bool {
+        !self.removed.is_empty()
+    }
+}
+
+/// `a` serves at least as many pods as `b` in every tier (elementwise ≥).
+fn no_tier_loses(a: &[usize], b: &[usize]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x >= y)
+}
+
+/// Run one consolidation pass over the live cluster. `optimizer` is the
+/// re-pack configuration (typically the sweep's); `session` carries
+/// certificates and warm starts across candidates and across passes.
+pub fn run_consolidation(
+    state: &mut ClusterState,
+    p_max: u32,
+    cfg: &AutoscaleConfig,
+    optimizer: &OptimizerConfig,
+    mut session: Option<&mut SolveSession>,
+) -> ConsolidationPass {
+    let mut pass = ConsolidationPass::default();
+    let mut rejected: Vec<NodeId> = Vec::new();
+
+    while pass.removed.len() < cfg.max_removals {
+        // Pending pods mean the spare capacity is already spoken for —
+        // scaling down now would fight the very scale-up path.
+        if !state.pending_pods().is_empty() {
+            break;
+        }
+        let ready: Vec<NodeId> = state
+            .nodes()
+            .iter()
+            .filter(|n| state.node_ready(n.id))
+            .map(|n| n.id)
+            .collect();
+        if ready.len() <= cfg.min_nodes {
+            break;
+        }
+        // Emptiest first: fewest residents, then id — the cheapest drain
+        // is the likeliest to certify.
+        let candidate = ready
+            .iter()
+            .copied()
+            .filter(|n| !rejected.contains(n))
+            .min_by_key(|&n| (state.pods_on(n).len(), n));
+        let Some(candidate) = candidate else { break };
+        pass.considered += 1;
+
+        let victims = state.pods_on(candidate);
+        if victims.len() > cfg.consolidation_budget {
+            pass.vetoed_budget += 1;
+            rejected.push(candidate);
+            continue;
+        }
+        if victims.is_empty() {
+            // Empty node: trivially removable, no solve needed.
+            state.drain(candidate); // cordon (0 evictions) + NodeDrained
+            state
+                .remove_node(candidate)
+                .expect("drained node is empty");
+            pass.removed.push(candidate);
+            continue;
+        }
+
+        // Trial: drain the candidate on a log-detached clone and re-pack.
+        // On success the SAME clone becomes the committed state — one
+        // clone and one drain per removal, not two.
+        let before = state.placed_per_priority(p_max);
+        let log = std::mem::take(&mut state.events);
+        let mut trial = state.clone();
+        state.events = log; // the live log goes straight back
+        trial.drain(candidate);
+        let result = match session.as_deref_mut() {
+            Some(sess) => sess.solve(&trial, p_max, optimizer),
+            None => optimize(&trial, p_max, optimizer),
+        };
+        let Some(res) = result else {
+            pass.blocked += 1;
+            rejected.push(candidate);
+            continue;
+        };
+        if !res.proved_optimal || !no_tier_loses(&res.placed_per_priority, &before) {
+            // No *certified* lossless re-pack without this node.
+            pass.blocked += 1;
+            rejected.push(candidate);
+            continue;
+        }
+        let plan = MovePlan::build(&trial, &res.target);
+        let disruption = victims.len() + plan.disruptions();
+        if disruption > cfg.consolidation_budget {
+            pass.vetoed_budget += 1;
+            rejected.push(candidate);
+            continue;
+        }
+
+        // Commit, all-or-nothing (sweep idiom): finish the plan on the
+        // already-drained trial and adopt it; a failure discards the
+        // trial and leaves the live state untouched.
+        let committed = (|| -> Result<(), String> {
+            plan.execute_as(&mut trial, EvictCause::Sweep)?;
+            trial.remove_node(candidate).map_err(|e| e.to_string())
+        })();
+        match committed {
+            Ok(()) => {
+                let mut log = std::mem::take(&mut state.events);
+                *state = trial;
+                log.append(&mut state.events); // the trial's fresh events
+                state.events = log;
+                pass.removed.push(candidate);
+                pass.moves += plan.disruptions();
+                pass.drained_pods += victims.len();
+            }
+            Err(_) => {
+                // Unreachable with the built-in module/filter sets (the
+                // certified target satisfies bind's vocabulary); kept
+                // graceful for custom modules, like the sweep.
+                pass.blocked += 1;
+                rejected.push(candidate);
+            }
+        }
+    }
+    pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, PodId, Priority, Resources};
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            max_removals: 8,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    /// Three nodes, two small pods spread over two of them: the pass
+    /// consolidates onto one node and removes the other two.
+    #[test]
+    fn consolidates_spread_pods_and_removes_nodes() {
+        let nodes = identical_nodes(3, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(300, 300), Priority(0)),
+            Pod::new(1, "b", Resources::new(300, 300), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+
+        let pass = run_consolidation(
+            &mut st,
+            0,
+            &cfg(),
+            &OptimizerConfig::with_timeout(5.0),
+            None,
+        );
+        assert_eq!(pass.removed.len(), 2, "two of three nodes drain away");
+        assert_eq!(st.placed_per_priority(0), vec![2], "nothing lost");
+        assert_eq!(
+            st.nodes()
+                .iter()
+                .filter(|n| st.node_ready(n.id))
+                .count(),
+            1
+        );
+        assert!(pass.drained_pods >= 1, "at least one pod moved off a node");
+        // lifecycle events emitted for the churn trace
+        assert!(st.events.all().iter().any(|e| matches!(
+            e,
+            crate::cluster::Event::NodeRemoved { .. }
+        )));
+        st.check_invariants().unwrap();
+    }
+
+    /// A full cluster has no removable node: every candidate is blocked
+    /// by the lossless-re-pack certificate.
+    #[test]
+    fn full_cluster_keeps_every_node() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "b", Resources::new(900, 900), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        let pass = run_consolidation(
+            &mut st,
+            0,
+            &cfg(),
+            &OptimizerConfig::with_timeout(5.0),
+            None,
+        );
+        assert!(pass.removed.is_empty());
+        assert!(pass.blocked >= 1);
+        assert_eq!(st.placed_per_priority(0), vec![2]);
+    }
+
+    /// The eviction budget vetoes a certified but too-disruptive drain.
+    #[test]
+    fn budget_vetoes_disruptive_drains() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(300, 300), Priority(0)),
+            Pod::new(1, "b", Resources::new(300, 300), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        st.bind(PodId(1), NodeId(1)).unwrap();
+        let tight = AutoscaleConfig {
+            consolidation_budget: 0,
+            max_removals: 8,
+            ..AutoscaleConfig::default()
+        };
+        let pass = run_consolidation(
+            &mut st,
+            0,
+            &tight,
+            &OptimizerConfig::with_timeout(5.0),
+            None,
+        );
+        assert!(pass.removed.is_empty(), "budget 0 vetoes every drain");
+        assert!(pass.vetoed_budget >= 1);
+        assert_eq!(st.assignment_of(PodId(0)), Some(NodeId(0)), "untouched");
+    }
+
+    /// Pending pods freeze consolidation outright.
+    #[test]
+    fn pending_pods_block_scale_down() {
+        let nodes = identical_nodes(3, Resources::new(1000, 1000));
+        let pods = vec![Pod::new(0, "pending", Resources::new(100, 100), Priority(0))];
+        let mut st = ClusterState::new(nodes, pods);
+        let pass = run_consolidation(
+            &mut st,
+            0,
+            &cfg(),
+            &OptimizerConfig::with_timeout(2.0),
+            None,
+        );
+        assert_eq!(pass, ConsolidationPass::default());
+    }
+
+    /// `min_nodes` floors the fleet even when everything is empty.
+    #[test]
+    fn min_nodes_floor_is_respected() {
+        let nodes = identical_nodes(4, Resources::new(1000, 1000));
+        let mut st = ClusterState::new(nodes, vec![]);
+        let floor = AutoscaleConfig {
+            min_nodes: 2,
+            max_removals: 8,
+            ..AutoscaleConfig::default()
+        };
+        let pass = run_consolidation(
+            &mut st,
+            0,
+            &floor,
+            &OptimizerConfig::with_timeout(2.0),
+            None,
+        );
+        assert_eq!(pass.removed.len(), 2, "stops at the floor");
+        assert_eq!(
+            st.nodes().iter().filter(|n| st.node_ready(n.id)).count(),
+            2
+        );
+    }
+
+    /// Session-backed passes decide exactly like cold ones.
+    #[test]
+    fn session_and_cold_passes_agree() {
+        let build = || {
+            let nodes = identical_nodes(3, Resources::new(1000, 1000));
+            let pods = vec![
+                Pod::new(0, "a", Resources::new(300, 300), Priority(0)),
+                Pod::new(1, "b", Resources::new(300, 300), Priority(0)),
+            ];
+            let mut st = ClusterState::new(nodes, pods);
+            st.bind(PodId(0), NodeId(0)).unwrap();
+            st.bind(PodId(1), NodeId(1)).unwrap();
+            st
+        };
+        let opt = OptimizerConfig::with_timeout(5.0);
+        let mut cold_st = build();
+        let cold = run_consolidation(&mut cold_st, 0, &cfg(), &opt, None);
+        let mut warm_st = build();
+        let mut session = SolveSession::new();
+        let warm = run_consolidation(&mut warm_st, 0, &cfg(), &opt, Some(&mut session));
+        assert_eq!(cold.removed, warm.removed);
+        assert_eq!(cold.moves, warm.moves);
+        assert_eq!(cold_st.assignment(), warm_st.assignment());
+        assert!(session.stats.solves > 0, "the session actually solved");
+    }
+}

@@ -1,0 +1,47 @@
+//! CP-driven cluster autoscaler: certificate-guided scale-up and
+//! consolidation scale-down.
+//!
+//! Every other subsystem in this repo changes the *pod* side of the
+//! instance — where the workload lands on a fixed fleet. This one closes
+//! the loop on the *node* side, turning solver certificates into
+//! cluster-size decisions:
+//!
+//! * **Scale-up** ([`provision`]): when Algorithm 1 proves a priority
+//!   tier's placement count maximal with pods still pending
+//!   ([`certified_unplaceable`]), those pods are provably stuck — "the
+//!   cluster is full" is no longer a guess. A second CP model then
+//!   computes *the cheapest set of nodes that makes it not full*:
+//!   candidate nodes drawn from configurable [`NodePool`]s
+//!   (heterogeneous capacities, extended resources, taints, costs),
+//!   minimising cost then node count, each phase with its own
+//!   optimality certificate.
+//! * **Scale-down** ([`consolidate`]): the defrag-sweep machinery run in
+//!   reverse — a trial-clone drain plus a fully certified lossless
+//!   re-pack *proves* a node removable within the eviction budget before
+//!   the live cluster drains and removes it.
+//! * **Policy** ([`policy`]): the [`AutoscaleConfig`] opt-in knob
+//!   (`OptimizerConfig.autoscale`, churn's `--autoscale`) and the
+//!   certificate-extraction trigger.
+//! * **Pools** ([`pools`]): the provisioning menu, also reused by the
+//!   workload generator's heterogeneous-fleet scenario family
+//!   (`--node-pools small,large,gpu`).
+//! * **Reporting** ([`report`]): per-decision records, run-level
+//!   aggregates, and the byte-stable log lines the churn determinism
+//!   digests cover.
+//!
+//! Scale decisions are pure functions of the cluster state and the
+//! config whenever the underlying solves complete in-window, so they
+//! inherit the portfolio's thread-independence and the session layer's
+//! replay guarantees — the properties `rust/tests/autoscaler.rs` pins.
+
+pub mod consolidate;
+pub mod policy;
+pub mod pools;
+pub mod provision;
+pub mod report;
+
+pub use consolidate::{run_consolidation, ConsolidationPass};
+pub use policy::{certified_unplaceable, AutoscaleConfig};
+pub use pools::NodePool;
+pub use provision::{plan_provisioning, ProvisionOutcome, ProvisionPlan, ProvisionTarget};
+pub use report::{consolidation_log_line, AutoscaleStats, ScaleUpReport};

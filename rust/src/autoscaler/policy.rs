@@ -1,0 +1,237 @@
+//! Autoscaling policy: when to scale, from which menu, within what
+//! limits.
+//!
+//! [`AutoscaleConfig`] is the single opt-in knob drivers carry (an
+//! `Option` on [`OptimizerConfig`] and `ChurnConfig`); the free
+//! functions here translate solver evidence into decisions:
+//! [`certified_unplaceable`] extracts the pods whose pending state the
+//! fallback *proved* — the only trigger the scale-up path ever acts on.
+//! Heuristic pending pods (deadline-truncated tiers) never trigger
+//! provisioning: buying nodes on an unproven "the cluster is full" is
+//! how real autoscalers over-provision.
+//!
+//! [`OptimizerConfig`]: crate::optimizer::algorithm::OptimizerConfig
+
+use std::time::Duration;
+
+use crate::cluster::{ClusterState, NodeStatus, PodId, Resources};
+use crate::optimizer::algorithm::OptimizeResult;
+use crate::solver::SolveStatus;
+use crate::util::fingerprint::Fnv64;
+
+use super::pools::NodePool;
+
+/// Autoscaler knobs (scale-up and consolidation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// The provisioning menu (pool order is plan order).
+    pub pools: Vec<NodePool>,
+    /// Candidate nodes per pool offered to one provisioning solve
+    /// (further clamped to the pending-pod count). `0` disables
+    /// provisioning outright: scale-up solves then cover existing spare
+    /// capacity only and report Infeasible-within-limits for anything
+    /// that needs a new node.
+    pub max_per_pool: usize,
+    /// Wall-clock budget of one provisioning solve (both phases).
+    pub provision_timeout: Duration,
+    /// Reference capacity the pool scales apply to. `None` derives the
+    /// component-wise maximum capacity over non-removed nodes — "a
+    /// standard node of this cluster". Drivers pin the derivation so
+    /// autoscaled nodes can never inflate later scale-ups (a joined
+    /// `large` raising the max would make every subsequent candidate
+    /// 1.5× bigger at the same cost, geometrically): the churn runner
+    /// resolves `None` to the trace's `reference_capacity` up front, and
+    /// [`OptimizingScheduler`] snapshots the first derivation for its
+    /// lifetime.
+    ///
+    /// [`OptimizingScheduler`]: crate::optimizer::plugin::OptimizingScheduler
+    pub reference: Option<Resources>,
+    /// Run the consolidation (scale-down) pass at sweep ticks.
+    pub consolidate: bool,
+    /// Disruption budget of one node drain: drained residents plus
+    /// re-pack moves (the sweep's eviction-budget semantics).
+    pub consolidation_budget: usize,
+    /// Maximum nodes removed per consolidation pass.
+    pub max_removals: usize,
+    /// Never consolidate below this many Ready nodes.
+    pub min_nodes: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            pools: NodePool::standard_mix(),
+            max_per_pool: 8,
+            provision_timeout: Duration::from_secs(2),
+            reference: None,
+            consolidate: true,
+            consolidation_budget: 8,
+            max_removals: 1,
+            min_nodes: 1,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Replace the provisioning menu (builder style).
+    pub fn with_pools(mut self, pools: Vec<NodePool>) -> Self {
+        self.pools = pools;
+        self
+    }
+
+    /// The capacity pool scales apply to: the configured reference, or
+    /// the component-wise max over non-removed nodes (zero on an empty
+    /// cluster — every pool then scales from nothing, so configure an
+    /// explicit reference for from-scratch provisioning).
+    pub fn reference_capacity(&self, state: &ClusterState) -> Resources {
+        if let Some(r) = self.reference {
+            return r;
+        }
+        state
+            .nodes()
+            .iter()
+            .filter(|n| state.node_status(n.id) != NodeStatus::Removed)
+            .fold(Resources::ZERO, |acc, n| acc.max(&n.capacity))
+    }
+
+    /// Cache identity of every decision-relevant knob — folded into the
+    /// optimiser-config fingerprint so incremental sessions invalidate
+    /// when the autoscaling policy changes.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.pools.len());
+        for p in &self.pools {
+            h.write_u64(p.fingerprint());
+        }
+        h.write_usize(self.max_per_pool)
+            .write_u64(self.provision_timeout.as_nanos() as u64);
+        match self.reference {
+            Some(r) => h.tag(1).write_i64(r.cpu).write_i64(r.ram),
+            None => h.tag(0),
+        };
+        h.write_bool(self.consolidate)
+            .write_usize(self.consolidation_budget)
+            .write_usize(self.max_removals)
+            .write_usize(self.min_nodes);
+        h.finish()
+    }
+}
+
+/// The pods an optimisation run *proved* unplaceable: still pending,
+/// left unplaced by the target, and belonging to a tier whose phase-1
+/// solve closed its bound (`Optimal`) — so the tier's placement count
+/// is provably maximal and *some* pod set of this size must stay
+/// pending under any re-pack. This is the scale-up trigger; pods of
+/// anytime (deadline-truncated) tiers are deliberately excluded.
+///
+/// Note the certificate's shape: the proof is about the *count*; which
+/// pods make up the leftover set is the packer's deterministic choice
+/// among equal-count packings. The provisioning plan downstream is
+/// min-cost *for that choice* — choosing a different equal-count
+/// leftover (e.g. stranding a small pod instead of a big one) could
+/// admit a cheaper fleet, which only a joint re-pack-and-provision
+/// model can exploit (ROADMAP follow-on).
+///
+/// Topology-spread pods are excluded too, even when certified stuck:
+/// the provisioning model does not encode max-skew (the skew couples
+/// pending pods with their already-placed owner-group mates across the
+/// whole fleet), and `ClusterState::bind` deliberately doesn't enforce
+/// spread either — so provisioning such a pod could persist a placement
+/// the packing model itself forbids. Spread-aware provisioning is a
+/// ROADMAP follow-on; until then those pods simply stay pending.
+pub fn certified_unplaceable(state: &ClusterState, res: &OptimizeResult) -> Vec<PodId> {
+    res.target
+        .iter()
+        .enumerate()
+        .filter_map(|(i, target)| {
+            if target.is_some() {
+                return None;
+            }
+            let pod = &state.pods()[i];
+            if state.is_retired(pod.id)
+                || state.assignment_of(pod.id).is_some()
+                || pod.spread_max_skew.is_some()
+            {
+                return None;
+            }
+            let tier = res.tiers.iter().find(|t| t.priority == pod.priority.0)?;
+            (tier.phase1_status == SolveStatus::Optimal).then_some(pod.id)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, ClusterState, Node, NodeId, Pod, Priority};
+    use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+
+    #[test]
+    fn reference_capacity_is_max_over_live_nodes() {
+        let mut nodes = identical_nodes(2, Resources::new(1000, 2000));
+        nodes[1] = Node::new(1, "node-001", Resources::new(3000, 500));
+        let mut st = ClusterState::new(nodes, vec![]);
+        let cfg = AutoscaleConfig::default();
+        assert_eq!(cfg.reference_capacity(&st), Resources::new(3000, 2000));
+        // removed nodes drop out of the derivation
+        st.drain(NodeId(1));
+        st.remove_node(NodeId(1)).unwrap();
+        assert_eq!(cfg.reference_capacity(&st), Resources::new(1000, 2000));
+        // explicit reference wins
+        let pinned = AutoscaleConfig {
+            reference: Some(Resources::new(10, 10)),
+            ..AutoscaleConfig::default()
+        };
+        assert_eq!(pinned.reference_capacity(&st), Resources::new(10, 10));
+    }
+
+    #[test]
+    fn fingerprint_tracks_pools_and_knobs() {
+        let base = AutoscaleConfig::default();
+        assert_eq!(base.fingerprint(), AutoscaleConfig::default().fingerprint());
+        let gpu = AutoscaleConfig::default()
+            .with_pools(vec![NodePool::small(), NodePool::gpu()]);
+        assert_ne!(base.fingerprint(), gpu.fingerprint());
+        let tighter = AutoscaleConfig {
+            consolidation_budget: 1,
+            ..AutoscaleConfig::default()
+        };
+        assert_ne!(base.fingerprint(), tighter.fingerprint());
+    }
+
+    #[test]
+    fn certified_unplaceable_requires_a_closed_bound() {
+        // One full node, one oversized pending pod: the tier certifies
+        // (tiny model, generous window) and the pod is proven stuck.
+        let nodes = identical_nodes(1, Resources::new(100, 100));
+        let pods = vec![Pod::new(0, "xl", Resources::new(1000, 1000), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert!(res.proved_optimal);
+        assert_eq!(certified_unplaceable(&st, &res), vec![PodId(0)]);
+    }
+
+    #[test]
+    fn spread_constrained_pods_never_trigger_scale_up() {
+        // Certified stuck, but carrying a max-skew: excluded until the
+        // provisioning model learns to encode spread (see the fn docs).
+        let nodes = identical_nodes(1, Resources::new(100, 100));
+        let pods = vec![Pod::new(0, "xl", Resources::new(1000, 1000), Priority(0))
+            .with_owner(7)
+            .with_spread(1)];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert!(res.proved_optimal);
+        assert_eq!(res.target[0], None, "the pod really is stuck");
+        assert_eq!(certified_unplaceable(&st, &res), Vec::<PodId>::new());
+    }
+
+    #[test]
+    fn placed_pods_are_never_reported() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![Pod::new(0, "fits", Resources::new(100, 100), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let res = optimize(&st, 0, &OptimizerConfig::with_timeout(5.0)).unwrap();
+        assert_eq!(certified_unplaceable(&st, &res), Vec::<PodId>::new());
+    }
+}

@@ -1,0 +1,247 @@
+//! Node pools: the shapes the autoscaler may provision from.
+//!
+//! A real cluster autoscaler does not conjure arbitrary machines — it
+//! picks from a fixed menu of instance types (node groups / machine
+//! sets), each with a capacity, optional device plugins (extended
+//! resources), taints, labels, and a price. [`NodePool`] is that menu
+//! entry. Capacities are expressed *relative* to a reference node
+//! capacity (thousandths), because the paper's generator derives node
+//! size from workload demand — a pool is "half a standard node", not
+//! "2000 milli-CPU", so the same mix works across every grid cell.
+//!
+//! Pools serve two consumers:
+//!
+//! * the provisioning model ([`super::provision`]) offers candidate
+//!   nodes drawn from each pool and pays `cost` per provisioned one;
+//! * the workload generator's heterogeneous scenario family
+//!   (`--node-pools small,large,gpu`) builds the *initial* fleet by
+//!   cycling a mix, replacing the paper's identical-capacity assumption.
+
+use crate::cluster::{Node, Resources, Taint};
+use crate::util::fingerprint::Fnv64;
+
+/// One provisionable node shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodePool {
+    pub name: String,
+    /// Capacity per dimension as thousandths of the reference capacity
+    /// (1000 = one standard node). Applied with ceiling division so a
+    /// pool never rounds below its intended share.
+    pub scale_milli: i64,
+    /// Extended (named) resource capacities every node of this pool
+    /// offers, e.g. `[("gpu", 4)]`. Absolute, not scaled.
+    pub extended: Vec<(String, i64)>,
+    /// Taints stamped onto every provisioned node.
+    pub taints: Vec<Taint>,
+    /// Labels stamped onto every provisioned node.
+    pub labels: Vec<(String, String)>,
+    /// Cost per provisioned node, in abstract positive units — the
+    /// provisioning objective minimises the cost sum first, node count
+    /// second.
+    pub cost: i64,
+}
+
+impl NodePool {
+    pub fn new(name: impl Into<String>, scale_milli: i64, cost: i64) -> Self {
+        assert!(scale_milli > 0, "pool scale must be positive");
+        assert!(cost >= 1, "pool cost must be at least 1");
+        NodePool {
+            name: name.into(),
+            scale_milli,
+            extended: Vec::new(),
+            taints: Vec::new(),
+            labels: Vec::new(),
+            cost,
+        }
+    }
+
+    pub fn with_extended(mut self, resource: &str, amount: i64) -> Self {
+        assert!(amount > 0, "extended capacity must be positive");
+        self.extended.push((resource.to_string(), amount));
+        self
+    }
+
+    pub fn with_taint(mut self, taint: Taint) -> Self {
+        self.taints.push(taint);
+        self
+    }
+
+    pub fn with_label(mut self, key: &str, value: &str) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    // ---- presets ----------------------------------------------------------
+
+    /// Half a standard node. Cheapest per node; slightly cheaper per
+    /// capacity unit than `large`, so pure cost optimisation prefers
+    /// small nodes until the count phase tips the balance.
+    pub fn small() -> NodePool {
+        NodePool::new("small", 500, 5)
+    }
+
+    /// One-and-a-half standard nodes; economies of scale are deliberately
+    /// *absent* (16 > 3 × 5 ÷ … is not: 16 vs 15 for 3× small capacity),
+    /// so min-cost plans only pick `large` when packing demands it.
+    pub fn large() -> NodePool {
+        NodePool::new("large", 1500, 16)
+    }
+
+    /// A standard node carrying 4 GPUs — expensive, only worth
+    /// provisioning for pods that actually request the device.
+    pub fn gpu() -> NodePool {
+        NodePool::new("gpu", 1000, 30).with_extended("gpu", 4)
+    }
+
+    /// The default provisioning menu: `small` + `large`.
+    pub fn standard_mix() -> Vec<NodePool> {
+        vec![NodePool::small(), NodePool::large()]
+    }
+
+    /// Parse one preset name (`small` | `large` | `gpu`).
+    pub fn parse(name: &str) -> Option<NodePool> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "small" => Some(NodePool::small()),
+            "large" => Some(NodePool::large()),
+            "gpu" => Some(NodePool::gpu()),
+            _ => None,
+        }
+    }
+
+    /// Parse a comma-separated preset mix (`"small,large,gpu"`). `None`
+    /// on the first unknown name; an empty string yields an empty mix.
+    pub fn parse_mix(s: &str) -> Option<Vec<NodePool>> {
+        if s.trim().is_empty() {
+            return Some(Vec::new());
+        }
+        s.split(',').map(NodePool::parse).collect()
+    }
+
+    /// Render a mix back to its parseable `--node-pools` form
+    /// (`"small,large"`) — deliberately named apart from the *report*
+    /// rendering [`crate::autoscaler::report::mix_label`]
+    /// (`"small x2 + gpu x1"`), which feeds byte-stable log lines and
+    /// must never be confused with this spec string.
+    pub fn mix_spec(pools: &[NodePool]) -> String {
+        pools
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    // ---- instantiation ----------------------------------------------------
+
+    /// Concrete capacity of one node of this pool, scaled from the
+    /// reference (ceiling division — a pool never undercuts its share).
+    pub fn capacity_for(&self, reference: Resources) -> Resources {
+        let scale = |v: i64| -> i64 {
+            if v <= 0 {
+                0
+            } else {
+                (v * self.scale_milli + 999) / 1000
+            }
+        };
+        Resources::new(scale(reference.cpu), scale(reference.ram))
+    }
+
+    /// A template [`Node`] of this pool (id/name are placeholders — the
+    /// cluster's join path assigns real ones). Used both for
+    /// admissibility checks against the constraint modules and as the
+    /// shape handed to [`ClusterState::join_node_from`].
+    ///
+    /// [`ClusterState::join_node_from`]: crate::cluster::ClusterState::join_node_from
+    pub fn node_template(&self, reference: Resources) -> Node {
+        self.node_template_with_capacity(self.capacity_for(reference))
+    }
+
+    /// [`node_template`](NodePool::node_template) at an explicit
+    /// capacity — churn traces carry the pre-computed capacity on their
+    /// `Join` ops. The single place pool decorations (labels, taints,
+    /// extended capacities) are stamped onto a node, so
+    /// autoscaler-provisioned and trace-joined nodes of one pool can
+    /// never drift apart.
+    pub fn node_template_with_capacity(&self, capacity: Resources) -> Node {
+        let mut node = Node::new(0, format!("pool-{}", self.name), capacity);
+        for (k, v) in &self.labels {
+            node = node.with_label(k, v);
+        }
+        for t in &self.taints {
+            node = node.with_taint(t.clone());
+        }
+        for (k, v) in &self.extended {
+            node = node.with_extended(k, *v);
+        }
+        node
+    }
+
+    /// Cache identity of this pool (all provisioning-relevant fields) —
+    /// folded into [`AutoscaleConfig::fingerprint`].
+    ///
+    /// [`AutoscaleConfig::fingerprint`]: super::policy::AutoscaleConfig::fingerprint
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.name)
+            .write_i64(self.scale_milli)
+            .write_i64(self.cost);
+        h.write_usize(self.extended.len());
+        for (k, v) in &self.extended {
+            h.write_str(k).write_i64(*v);
+        }
+        h.write_usize(self.taints.len());
+        for t in &self.taints {
+            h.write_str(&t.key).write_str(&t.value);
+        }
+        h.write_usize(self.labels.len());
+        for (k, v) in &self.labels {
+            h.write_str(k).write_str(v);
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_roundtrip() {
+        let mix = NodePool::parse_mix("small,large,gpu").unwrap();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(NodePool::mix_spec(&mix), "small,large,gpu");
+        assert_eq!(NodePool::parse_mix("bogus"), None);
+        assert_eq!(NodePool::parse_mix("").unwrap(), Vec::<NodePool>::new());
+        // case/space tolerant
+        assert_eq!(NodePool::parse(" GPU ").unwrap().name, "gpu");
+    }
+
+    #[test]
+    fn capacity_scales_with_ceiling() {
+        let reference = Resources::new(1001, 4096);
+        let small = NodePool::small();
+        // ceil(1001 * 500 / 1000) = 501
+        assert_eq!(small.capacity_for(reference), Resources::new(501, 2048));
+        let large = NodePool::large();
+        assert_eq!(large.capacity_for(reference), Resources::new(1502, 6144));
+    }
+
+    #[test]
+    fn gpu_template_carries_extended_capacity() {
+        let t = NodePool::gpu().node_template(Resources::new(1000, 1000));
+        assert_eq!(t.capacity, Resources::new(1000, 1000));
+        assert_eq!(t.extended_capacity("gpu"), 4);
+        assert_eq!(t.extended_capacity("tpu"), 0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = NodePool::small();
+        assert_eq!(base.fingerprint(), NodePool::small().fingerprint());
+        assert_ne!(base.fingerprint(), NodePool::large().fingerprint());
+        let mut pricier = NodePool::small();
+        pricier.cost += 1;
+        assert_ne!(base.fingerprint(), pricier.fingerprint());
+        let decorated = NodePool::small().with_extended("gpu", 1);
+        assert_ne!(base.fingerprint(), decorated.fingerprint());
+    }
+}

@@ -1,0 +1,792 @@
+//! Certificate-guided scale-up: the min-cost provisioning CP model.
+//!
+//! When Algorithm 1 *proves* a priority tier's placement count maximal
+//! and pods are still pending, those pods are certifiably unplaceable on
+//! the current fleet — no amount of re-packing helps. This module turns
+//! that infeasibility certificate into the cheapest fleet change that
+//! makes the pending set placeable, as its own two-phase CP solve:
+//!
+//! * **Bins**: every Ready node's *spare* capacity (free CPU/RAM and
+//!   extended residuals), plus up to `max_per_pool` candidate nodes per
+//!   configured [`NodePool`].
+//! * **Variables**: one placement variable per admissible (pod, bin)
+//!   pair — admissibility reuses the optimiser's registered
+//!   [`ConstraintModule`]s (selectors, taints vs. the pool's own taints,
+//!   …) plus anti-affinity against residents — and one *shut-off*
+//!   variable `z` per candidate (`z = 1` ⇔ the candidate is **not**
+//!   provisioned).
+//! * **Constraints**: every pod placed exactly once; per-bin knapsacks
+//!   on every demanded dimension (candidate rows carry `cap·z` so a
+//!   shut-off node offers zero capacity); pairwise anti-affinity among
+//!   the pending pods on shared bins; and a per-pool prefix order on `z`
+//!   (provisioned candidates are always ordinals `0..count`), which
+//!   breaks the symmetry between identical candidates.
+//! * **Phase A** maximises the *unspent* cost `Σ cost·z` (= minimise
+//!   provisioned cost); the proven bound converts into a lower bound on
+//!   any feasible plan's cost. **Phase B** locks phase A's metric
+//!   (`=` when proven, `≥` otherwise — Algorithm 1's L8/L10 idiom) and
+//!   maximises `Σ z` (= minimise node count).
+//!
+//! Both phases route through the parallel portfolio, so plans inherit
+//! the PR 3 determinism contract: independent of the worker count
+//! whenever the solves complete in-window, and `Optimal` statuses are
+//! genuine optimality certificates — *min cost, then min node count*.
+
+use crate::cluster::{ClusterState, Node, NodeId, PodId, Resources};
+use crate::optimizer::constraints::ModuleRegistry;
+use crate::portfolio::{solve_portfolio, PortfolioConfig};
+use crate::solver::{CmpOp, LinearExpr, Model, SolveStatus, SolverConfig, VarId};
+use crate::util::timer::Deadline;
+
+use super::pools::NodePool;
+
+/// Where a pending pod lands under a provisioning plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProvisionTarget {
+    /// Spare capacity on an existing Ready node.
+    Existing(NodeId),
+    /// Candidate `ordinal` (0-based) of `pool` in the plan — resolved to
+    /// a real [`NodeId`] when the plan is applied.
+    New { pool: usize, ordinal: usize },
+}
+
+/// A provisioning plan with its optimality certificate.
+#[derive(Clone, Debug)]
+pub struct ProvisionPlan {
+    /// Nodes to provision per pool, in configuration order (zero counts
+    /// kept so indices line up with the pool list).
+    pub per_pool: Vec<(String, usize)>,
+    pub node_count: usize,
+    /// Total cost of the provisioned nodes.
+    pub cost: i64,
+    /// Proven lower bound on the cost of *any* fleet change (within the
+    /// candidate limits) that places the pod set; equals `cost` when
+    /// `cost_status == Optimal`.
+    pub cost_bound: i64,
+    /// Phase A certificate: `Optimal` ⇔ `cost` is proven minimal.
+    pub cost_status: SolveStatus,
+    /// Phase B certificate: `Optimal` ⇔ `node_count` is proven minimal
+    /// among min-cost plans.
+    pub count_status: SolveStatus,
+    /// A concrete feasible placement of every pod under the plan.
+    pub placements: Vec<(PodId, ProvisionTarget)>,
+}
+
+impl ProvisionPlan {
+    /// Both phases proven: the plan is certified *min cost, then min
+    /// node count* — **for this pod set**, within the candidate limits.
+    /// The certificate is conditional on the pods handed in: the packer
+    /// proves the tier's placement *count* maximal and the leftover set
+    /// is its (deterministic) choice among equal-count packings, so a
+    /// joint re-pack-and-provision model could in principle host the
+    /// tier more cheaply by leaving *different* pods pending (a ROADMAP
+    /// follow-on).
+    pub fn certified(&self) -> bool {
+        self.cost_status == SolveStatus::Optimal && self.count_status == SolveStatus::Optimal
+    }
+
+    /// Human-readable pool mix, e.g. `"small x2 + gpu x1"` (`"none"`
+    /// when the plan provisions nothing) — the same rendering the
+    /// scale-up log line uses (see [`super::report::mix_label`]).
+    pub fn mix_label(&self) -> String {
+        super::report::mix_label(&self.per_pool)
+    }
+
+    /// Apply the plan: join the provisioned nodes (pool order, then
+    /// ordinal order — deterministic names via the canonical join
+    /// scheme) and bind every placement. All-or-nothing: the mutation
+    /// runs on a log-detached trial clone first, so a failure leaves the
+    /// live state untouched. Returns the joined node ids.
+    pub fn apply(
+        &self,
+        state: &mut ClusterState,
+        pools: &[NodePool],
+        reference: Resources,
+    ) -> Result<Vec<NodeId>, String> {
+        let mut log = std::mem::take(&mut state.events);
+        let mut trial = state.clone();
+        match self.apply_inner(&mut trial, pools, reference) {
+            Ok(ids) => {
+                *state = trial;
+                log.append(&mut state.events);
+                state.events = log;
+                Ok(ids)
+            }
+            Err(e) => {
+                state.events = log;
+                Err(e)
+            }
+        }
+    }
+
+    fn apply_inner(
+        &self,
+        state: &mut ClusterState,
+        pools: &[NodePool],
+        reference: Resources,
+    ) -> Result<Vec<NodeId>, String> {
+        if pools.len() < self.per_pool.len() {
+            return Err("plan references more pools than configured".to_string());
+        }
+        let mut new_ids: Vec<Vec<NodeId>> = Vec::with_capacity(self.per_pool.len());
+        for (p, (_, count)) in self.per_pool.iter().enumerate() {
+            let template = pools[p].node_template(reference);
+            new_ids.push(
+                (0..*count)
+                    .map(|_| state.join_node_from(&template))
+                    .collect(),
+            );
+        }
+        for &(pod, target) in &self.placements {
+            let node = match target {
+                ProvisionTarget::Existing(n) => n,
+                ProvisionTarget::New { pool, ordinal } => *new_ids
+                    .get(pool)
+                    .and_then(|ids| ids.get(ordinal))
+                    .ok_or_else(|| format!("placement references unprovisioned candidate ({pool},{ordinal})"))?,
+            };
+            state
+                .bind(pod, node)
+                .map_err(|e| format!("provision bind {pod:?} -> {node:?}: {e}"))?;
+        }
+        Ok(new_ids.into_iter().flatten().collect())
+    }
+}
+
+/// Outcome of one provisioning solve.
+#[derive(Clone, Debug)]
+pub enum ProvisionOutcome {
+    /// The cheapest fleet change found (possibly certified — see
+    /// [`ProvisionPlan::certified`]).
+    Plan(ProvisionPlan),
+    /// Proven: even the maximum candidate fleet *within the configured
+    /// limits* cannot place the pod set (a pod no pool admits, demand
+    /// beyond every candidate's capacity, or not enough candidates under
+    /// `max_per_pool`). The certificate covers the offered model, not
+    /// the menu in the abstract — with a `max_per_pool` smaller than the
+    /// pod count, raising it may still find a fleet.
+    Infeasible,
+    /// The deadline expired before any conclusion.
+    Unknown,
+}
+
+/// One bin of the provisioning model.
+enum Bin {
+    Existing(NodeId),
+    Candidate { pool: usize, ordinal: usize },
+}
+
+/// Solve the min-cost provisioning model for `pods` (pending pods the
+/// caller believes unplaceable — typically
+/// [`certified_unplaceable`](super::policy::certified_unplaceable)).
+/// `reference` is the capacity the pool scales apply to;
+/// `max_per_pool` bounds the candidates offered per pool (further
+/// clamped to the pod count — a minimal plan never provisions more
+/// nodes than pods).
+///
+/// Topology spread is *not* encoded here (skew couples pending pods
+/// with placed owner-group mates fleet-wide); the scale-up trigger
+/// filters spread-constrained pods out before they reach this solve.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_provisioning(
+    state: &ClusterState,
+    pods: &[PodId],
+    pools: &[NodePool],
+    reference: Resources,
+    max_per_pool: usize,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    portfolio: &PortfolioConfig,
+    modules: &ModuleRegistry,
+) -> ProvisionOutcome {
+    if pods.is_empty() {
+        return ProvisionOutcome::Plan(ProvisionPlan {
+            per_pool: pools.iter().map(|p| (p.name.clone(), 0)).collect(),
+            node_count: 0,
+            cost: 0,
+            cost_bound: 0,
+            cost_status: SolveStatus::Optimal,
+            count_status: SolveStatus::Optimal,
+            placements: Vec::new(),
+        });
+    }
+
+    // ---- bins --------------------------------------------------------------
+    // `max_per_pool == 0` offers no candidates at all: the solve then
+    // covers existing spare capacity only, and a pod nothing admits is
+    // proven Infeasible-within-limits — "provisioning disabled", not a
+    // silent one-node floor.
+    let per_pool_candidates = max_per_pool.min(pods.len());
+    let mut bins: Vec<Bin> = Vec::new();
+    let mut bin_nodes: Vec<Node> = Vec::new(); // template per bin (admits checks)
+    for node in state.nodes() {
+        if state.node_ready(node.id) {
+            bins.push(Bin::Existing(node.id));
+            bin_nodes.push(node.clone());
+        }
+    }
+    let first_candidate = bins.len();
+    for (p, pool) in pools.iter().enumerate() {
+        let template = pool.node_template(reference);
+        for k in 0..per_pool_candidates {
+            bins.push(Bin::Candidate { pool: p, ordinal: k });
+            bin_nodes.push(template.clone());
+        }
+    }
+
+    // Extended dimensions any of the pods demand (sorted, deduplicated).
+    let mut dims: Vec<&str> = pods
+        .iter()
+        .flat_map(|&p| state.pod(p).extended.iter())
+        .filter(|(_, amt)| *amt > 0)
+        .map(|(k, _)| k.as_str())
+        .collect();
+    dims.sort_unstable();
+    dims.dedup();
+
+    // ---- variables ---------------------------------------------------------
+    let mut m = Model::new();
+    // x[pod_idx][bin] — None marks an inadmissible pair.
+    let mut x: Vec<Vec<Option<VarId>>> = Vec::with_capacity(pods.len());
+    for &pod_id in pods {
+        let pod = state.pod(pod_id);
+        let per_bin: Vec<Option<VarId>> = bins
+            .iter()
+            .enumerate()
+            .map(|(b, bin)| {
+                let node = &bin_nodes[b];
+                if !modules.admits(state, pod, node) {
+                    return None;
+                }
+                let fits = match bin {
+                    Bin::Existing(id) => {
+                        // Spare capacity + resident anti-affinity, the
+                        // same vocabulary ClusterState::bind enforces.
+                        pod.request.fits_in(&state.free(*id))
+                            && pod
+                                .extended
+                                .iter()
+                                .all(|(k, amt)| state.free_extended(*id, k) >= *amt)
+                            && state.pods_on(*id).iter().all(|&q| {
+                                let other = state.pod(q);
+                                !(pod.anti_affine_with(other) || other.anti_affine_with(pod))
+                            })
+                    }
+                    Bin::Candidate { .. } => {
+                        pod.request.fits_in(&node.capacity)
+                            && pod
+                                .extended
+                                .iter()
+                                .all(|(k, amt)| node.extended_capacity(k) >= *amt)
+                    }
+                };
+                fits.then(|| m.new_var())
+            })
+            .collect();
+        if per_bin.iter().all(Option::is_none) {
+            // No bin — existing or candidate — admits this pod: proven
+            // infeasible before the solver even runs.
+            return ProvisionOutcome::Infeasible;
+        }
+        x.push(per_bin);
+    }
+    // z[candidate] — 1 ⇔ the candidate is NOT provisioned.
+    let z: Vec<VarId> = (first_candidate..bins.len()).map(|_| m.new_var()).collect();
+    let z_of = |b: usize| -> VarId { z[b - first_candidate] };
+
+    // ---- constraints -------------------------------------------------------
+    // Every pod placed exactly once — emitted as `≤ 1` plus `≥ 1`
+    // rather than one `=` row: the at-most-one half is what the search
+    // engine detects as a branchable group (pick one bin or none), and
+    // the coverage half forces the "one".
+    for row in &x {
+        let e = LinearExpr::of(row.iter().flatten().map(|&v| (v, 1)));
+        m.add_le(e.clone(), 1);
+        m.add_ge(e, 1);
+    }
+    // Per-bin knapsacks on every demanded dimension.
+    for (b, bin) in bins.iter().enumerate() {
+        let node = &bin_nodes[b];
+        let (free_cpu, free_ram) = match bin {
+            Bin::Existing(id) => (state.free(*id).cpu, state.free(*id).ram),
+            Bin::Candidate { .. } => (node.capacity.cpu, node.capacity.ram),
+        };
+        let mut cpu = LinearExpr::new();
+        let mut ram = LinearExpr::new();
+        for (i, &pod_id) in pods.iter().enumerate() {
+            if let Some(v) = x[i][b] {
+                let req = state.pod(pod_id).request;
+                cpu.add(v, req.cpu);
+                ram.add(v, req.ram);
+            }
+        }
+        let is_candidate = matches!(bin, Bin::Candidate { .. });
+        if is_candidate {
+            // A shut-off candidate offers zero capacity: Σ r·x + cap·z ≤ cap.
+            cpu.add(z_of(b), free_cpu);
+            ram.add(z_of(b), free_ram);
+        }
+        if !cpu.terms.is_empty() {
+            m.add_le(cpu, free_cpu);
+        }
+        if !ram.terms.is_empty() {
+            m.add_le(ram, free_ram);
+        }
+        for dim in &dims {
+            let cap = match bin {
+                Bin::Existing(id) => state.free_extended(*id, dim),
+                Bin::Candidate { .. } => node.extended_capacity(dim),
+            };
+            let mut e = LinearExpr::new();
+            for (i, &pod_id) in pods.iter().enumerate() {
+                let d: i64 = state
+                    .pod(pod_id)
+                    .extended
+                    .iter()
+                    .filter(|(k, _)| k == dim)
+                    .map(|&(_, v)| v)
+                    .sum();
+                if d > 0 {
+                    if let Some(v) = x[i][b] {
+                        e.add(v, d);
+                    }
+                }
+            }
+            if e.terms.is_empty() {
+                continue;
+            }
+            if is_candidate && cap > 0 {
+                e.add(z_of(b), cap);
+            }
+            m.add_le(e, cap);
+        }
+        // A shut-off candidate takes no pods at all (covers zero-request
+        // pods the knapsack rows cannot exclude). Coefficient 2 on
+        // purpose: `2x + 2z ≤ 2` is the same exclusion as `x + z ≤ 1`,
+        // but the search engine classifies unit-coefficient/rhs-1 rows
+        // as at-most-one groups and drops them from its symmetry
+        // signatures — which would blind node symmetry-skipping to the
+        // x↔z coupling (the same idiom as the packing model's
+        // PodAntiAffinity rows).
+        if is_candidate {
+            for row in &x {
+                if let Some(v) = row[b] {
+                    m.add_le(LinearExpr::of([(v, 2), (z_of(b), 2)]), 2);
+                }
+            }
+        }
+    }
+    // Pairwise anti-affinity among the pending pods on shared bins
+    // (coefficient 2 — the same symmetry-safety idiom as the packing
+    // model's PodAntiAffinity module).
+    for i in 0..pods.len() {
+        for k in i + 1..pods.len() {
+            let (a, b) = (state.pod(pods[i]), state.pod(pods[k]));
+            if !(a.anti_affine_with(b) || b.anti_affine_with(a)) {
+                continue;
+            }
+            for bin in 0..bins.len() {
+                if let (Some(vi), Some(vk)) = (x[i][bin], x[k][bin]) {
+                    m.add_le(LinearExpr::of([(vi, 2), (vk, 2)]), 2);
+                }
+            }
+        }
+    }
+    // Per-pool prefix symmetry: provisioned candidates are ordinals
+    // 0..count (z non-decreasing in the ordinal): z_k − z_{k+1} ≤ 0.
+    for p in 0..pools.len() {
+        for k in 0..per_pool_candidates.saturating_sub(1) {
+            let a = z[p * per_pool_candidates + k];
+            let b = z[p * per_pool_candidates + k + 1];
+            m.add_le(LinearExpr::of([(a, 1), (b, -1)]), 0);
+        }
+    }
+    // Warm hint: provision nothing (steers the search toward cheap
+    // fleets first; never assumed valid).
+    for &zv in &z {
+        m.hint(zv, true);
+    }
+
+    // ---- phase A: minimise cost (maximise unspent cost) --------------------
+    let cost_of = |b: usize| -> i64 {
+        match bins[b] {
+            Bin::Candidate { pool, .. } => pools[pool].cost,
+            Bin::Existing(_) => 0,
+        }
+    };
+    let obj_cost = LinearExpr::of(
+        (first_candidate..bins.len()).map(|b| (z_of(b), cost_of(b))),
+    )
+    .normalized();
+    let total_cost: i64 = (first_candidate..bins.len()).map(cost_of).sum();
+
+    let sol_a = solve_portfolio(&m, &obj_cost, deadline, solver, portfolio).solution;
+    match sol_a.status {
+        SolveStatus::Infeasible => return ProvisionOutcome::Infeasible,
+        SolveStatus::Unknown => return ProvisionOutcome::Unknown,
+        _ => {}
+    }
+    let cost_status = sol_a.status;
+    // Unspent-cost upper bound ⇒ provisioned-cost lower bound.
+    let cost_bound = total_cost - sol_a.bound.min(total_cost);
+
+    // ---- phase B: minimise node count at locked cost -----------------------
+    m.add_constraint(
+        obj_cost.clone(),
+        if cost_status == SolveStatus::Optimal {
+            CmpOp::Eq
+        } else {
+            CmpOp::Ge
+        },
+        sol_a.objective,
+    );
+    let obj_count =
+        LinearExpr::of((first_candidate..bins.len()).map(|b| (z_of(b), 1))).normalized();
+    let sol_b = solve_portfolio(&m, &obj_count, deadline, solver, portfolio).solution;
+    let (count_status, values) = if sol_b.status.has_solution() {
+        (sol_b.status, sol_b.values)
+    } else {
+        // Phase B ran out of window: keep phase A's (cost-certified)
+        // fleet and report the count uncertified.
+        (SolveStatus::Unknown, sol_a.values)
+    };
+    debug_assert!(m.feasible(&values) || !sol_b.status.has_solution());
+
+    // ---- extract the plan --------------------------------------------------
+    let mut per_pool: Vec<(String, usize)> =
+        pools.iter().map(|p| (p.name.clone(), 0)).collect();
+    let mut cost = 0i64;
+    for b in first_candidate..bins.len() {
+        if !values[z_of(b).idx()] {
+            if let Bin::Candidate { pool, .. } = bins[b] {
+                per_pool[pool].1 += 1;
+                cost += pools[pool].cost;
+            }
+        }
+    }
+    let node_count: usize = per_pool.iter().map(|(_, c)| *c).sum();
+    let mut placements = Vec::with_capacity(pods.len());
+    for (i, &pod_id) in pods.iter().enumerate() {
+        for (b, v) in x[i].iter().enumerate() {
+            let Some(v) = v else { continue };
+            if values[v.idx()] {
+                let target = match bins[b] {
+                    Bin::Existing(id) => ProvisionTarget::Existing(id),
+                    Bin::Candidate { pool, ordinal } => {
+                        debug_assert!(ordinal < per_pool[pool].1, "prefix symmetry");
+                        ProvisionTarget::New { pool, ordinal }
+                    }
+                };
+                placements.push((pod_id, target));
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(placements.len(), pods.len(), "every pod placed");
+
+    ProvisionOutcome::Plan(ProvisionPlan {
+        per_pool,
+        node_count,
+        cost,
+        cost_bound,
+        cost_status,
+        count_status,
+        placements,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Pod, Priority, Taint, Toleration};
+
+    fn solve(
+        state: &ClusterState,
+        pods: &[PodId],
+        pools: &[NodePool],
+        reference: Resources,
+    ) -> ProvisionOutcome {
+        plan_provisioning(
+            state,
+            pods,
+            pools,
+            reference,
+            4,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &PortfolioConfig::default(),
+            &ModuleRegistry::standard(),
+        )
+    }
+
+    fn plan(outcome: ProvisionOutcome) -> ProvisionPlan {
+        match outcome {
+            ProvisionOutcome::Plan(p) => p,
+            other => panic!("expected a plan, got {other:?}"),
+        }
+    }
+
+    /// A full single-node cluster with two pending half-size pods: one
+    /// `small` node (half the reference) holds exactly one pod, so the
+    /// certified minimum is either 2×small (cost 10) or 1×large
+    /// (cost 16) — cost picks the smalls.
+    #[test]
+    fn min_cost_prefers_cheapest_sufficient_fleet() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(1, "p1", Resources::new(400, 400), Priority(0)),
+            Pod::new(2, "p2", Resources::new(400, 400), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+
+        let p = plan(solve(
+            &st,
+            &[PodId(1), PodId(2)],
+            &NodePool::standard_mix(),
+            Resources::new(1000, 1000),
+        ));
+        assert!(p.certified(), "tiny model must certify both phases");
+        assert_eq!(p.cost, 10, "2x small beats 1x large on cost");
+        assert_eq!(p.cost_bound, 10);
+        assert_eq!(p.node_count, 2);
+        assert_eq!(p.per_pool, vec![("small".to_string(), 2), ("large".to_string(), 0)]);
+        assert_eq!(p.placements.len(), 2);
+        assert_eq!(p.mix_label(), "small x2");
+    }
+
+    /// One pod too big for `small` forces the `large` pool even though
+    /// it costs more.
+    #[test]
+    fn packing_forces_the_larger_pool_when_needed() {
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![Pod::new(0, "big", Resources::new(900, 900), Priority(0))],
+        );
+        let p = plan(solve(
+            &st,
+            &[PodId(0)],
+            &NodePool::standard_mix(),
+            Resources::new(1000, 1000),
+        ));
+        assert!(p.certified());
+        assert_eq!(p.per_pool, vec![("small".to_string(), 0), ("large".to_string(), 1)]);
+        assert_eq!(p.cost, 16);
+    }
+
+    /// Spare capacity on an existing node is free: no provisioning at
+    /// all when the pending pod fits an existing residual.
+    #[test]
+    fn existing_spare_capacity_costs_nothing() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![Pod::new(0, "p", Resources::new(300, 300), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let p = plan(solve(
+            &st,
+            &[PodId(0)],
+            &NodePool::standard_mix(),
+            Resources::new(1000, 1000),
+        ));
+        assert!(p.certified());
+        assert_eq!(p.cost, 0);
+        assert_eq!(p.node_count, 0);
+        assert_eq!(p.placements, vec![(PodId(0), ProvisionTarget::Existing(NodeId(0)))]);
+    }
+
+    /// GPU pods are only admissible on the gpu pool; the plan pays for it.
+    #[test]
+    fn extended_demand_selects_the_gpu_pool() {
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![
+                Pod::new(0, "g1", Resources::new(100, 100), Priority(0)).with_extended("gpu", 2),
+                Pod::new(1, "g2", Resources::new(100, 100), Priority(0)).with_extended("gpu", 2),
+            ],
+        );
+        let pools = vec![NodePool::small(), NodePool::gpu()];
+        let p = plan(solve(&st, &[PodId(0), PodId(1)], &pools, Resources::new(1000, 1000)));
+        assert!(p.certified());
+        // both pods share one 4-gpu node — min cost AND min count
+        assert_eq!(p.per_pool, vec![("small".to_string(), 0), ("gpu".to_string(), 1)]);
+        assert_eq!(p.cost, 30);
+    }
+
+    /// A pod no pool can host is proven infeasible before the solver runs.
+    #[test]
+    fn impossible_pod_is_proven_infeasible() {
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![Pod::new(0, "xxl", Resources::new(99_999, 99_999), Priority(0))],
+        );
+        assert!(matches!(
+            solve(&st, &[PodId(0)], &NodePool::standard_mix(), Resources::new(1000, 1000)),
+            ProvisionOutcome::Infeasible
+        ));
+    }
+
+    /// Tainted pools only admit tolerating pods — the constraint-module
+    /// vocabulary applies to candidates exactly as to real nodes.
+    #[test]
+    fn tainted_pool_requires_toleration() {
+        let tainted = NodePool::new("batch", 1000, 3)
+            .with_taint(Taint::no_schedule("dedicated", "batch"));
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![
+                Pod::new(0, "plain", Resources::new(100, 100), Priority(0)),
+                Pod::new(1, "tol", Resources::new(100, 100), Priority(0))
+                    .with_toleration(Toleration::equal("dedicated", "batch")),
+            ],
+        );
+        // Only the tainted pool on the menu: the plain pod is infeasible.
+        assert!(matches!(
+            solve(&st, &[PodId(0)], std::slice::from_ref(&tainted), Resources::new(1000, 1000)),
+            ProvisionOutcome::Infeasible
+        ));
+        // The tolerating pod provisions a batch node.
+        let p = plan(solve(
+            &st,
+            &[PodId(1)],
+            std::slice::from_ref(&tainted),
+            Resources::new(1000, 1000),
+        ));
+        assert_eq!(p.node_count, 1);
+        assert_eq!(p.cost, 3);
+    }
+
+    /// Anti-affine pending pods never share a provisioned node.
+    #[test]
+    fn anti_affinity_splits_pods_across_candidates() {
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![
+                Pod::new(0, "a", Resources::new(100, 100), Priority(0))
+                    .with_label("app", "x")
+                    .with_anti_affinity("app", "x"),
+                Pod::new(1, "b", Resources::new(100, 100), Priority(0)).with_label("app", "x"),
+            ],
+        );
+        let pools = vec![NodePool::small()];
+        let p = plan(solve(&st, &[PodId(0), PodId(1)], &pools, Resources::new(1000, 1000)));
+        assert!(p.certified());
+        assert_eq!(p.node_count, 2, "exclusion forces two nodes");
+        let targets: Vec<_> = p.placements.iter().map(|&(_, t)| t).collect();
+        assert_ne!(targets[0], targets[1]);
+    }
+
+    /// Applying a plan joins the nodes deterministically and binds every
+    /// placement — all-or-nothing.
+    #[test]
+    fn apply_joins_and_binds() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(1, "p1", Resources::new(400, 400), Priority(0)),
+            Pod::new(2, "p2", Resources::new(400, 400), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let pools = NodePool::standard_mix();
+        let reference = Resources::new(1000, 1000);
+        let p = plan(solve(&st, &[PodId(1), PodId(2)], &pools, reference));
+        let joined = p.apply(&mut st, &pools, reference).unwrap();
+        assert_eq!(joined.len(), 2);
+        assert_eq!(st.pending_pods(), Vec::<PodId>::new());
+        assert!(st.node(joined[0]).name.starts_with("node-"));
+        st.check_invariants().unwrap();
+    }
+
+    /// The plan is identical at 1 and 8 portfolio threads (the PR 3
+    /// determinism contract carried into provisioning).
+    #[test]
+    fn plans_are_thread_independent() {
+        let nodes = identical_nodes(1, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "p1", Resources::new(500, 500), Priority(0)),
+            Pod::new(2, "p2", Resources::new(500, 500), Priority(0)),
+            Pod::new(3, "p3", Resources::new(200, 200), Priority(0)),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(PodId(0), NodeId(0)).unwrap();
+        let pending = [PodId(1), PodId(2), PodId(3)];
+        let reference = Resources::new(1000, 1000);
+        let base = plan(plan_provisioning(
+            &st,
+            &pending,
+            &NodePool::standard_mix(),
+            reference,
+            4,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &PortfolioConfig::with_threads(1),
+            &ModuleRegistry::standard(),
+        ));
+        let threaded = plan(plan_provisioning(
+            &st,
+            &pending,
+            &NodePool::standard_mix(),
+            reference,
+            4,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &PortfolioConfig::with_threads(8),
+            &ModuleRegistry::standard(),
+        ));
+        assert_eq!(base.per_pool, threaded.per_pool);
+        assert_eq!(base.cost, threaded.cost);
+        assert_eq!(base.placements, threaded.placements);
+        assert!(base.certified() && threaded.certified());
+    }
+
+    #[test]
+    fn zero_max_per_pool_disables_provisioning() {
+        // "Consolidate only": no candidates are offered, so a pod that
+        // needs a new node is proven Infeasible within the limits —
+        // never silently floored to one candidate.
+        let st = ClusterState::new(
+            identical_nodes(0, Resources::ZERO),
+            vec![Pod::new(0, "p", Resources::new(100, 100), Priority(0))],
+        );
+        let out = plan_provisioning(
+            &st,
+            &[PodId(0)],
+            &NodePool::standard_mix(),
+            Resources::new(1000, 1000),
+            0,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &PortfolioConfig::default(),
+            &ModuleRegistry::standard(),
+        );
+        assert!(matches!(out, ProvisionOutcome::Infeasible));
+        // ... while a pod that fits existing spare capacity still plans.
+        let roomy = ClusterState::new(
+            identical_nodes(1, Resources::new(1000, 1000)),
+            vec![Pod::new(0, "p", Resources::new(100, 100), Priority(0))],
+        );
+        let p = plan(plan_provisioning(
+            &roomy,
+            &[PodId(0)],
+            &NodePool::standard_mix(),
+            Resources::new(1000, 1000),
+            0,
+            Deadline::unlimited(),
+            &SolverConfig::default(),
+            &PortfolioConfig::default(),
+            &ModuleRegistry::standard(),
+        ));
+        assert_eq!(p.node_count, 0);
+        assert!(p.certified());
+    }
+
+    #[test]
+    fn empty_pod_set_is_a_trivial_certified_plan() {
+        let st = ClusterState::new(identical_nodes(1, Resources::new(10, 10)), vec![]);
+        let p = plan(solve(&st, &[], &NodePool::standard_mix(), Resources::new(10, 10)));
+        assert!(p.certified());
+        assert_eq!(p.node_count, 0);
+        assert_eq!(p.cost, 0);
+    }
+}

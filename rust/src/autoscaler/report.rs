@@ -1,0 +1,305 @@
+//! Autoscaler reporting: per-decision records and run-level aggregates.
+//!
+//! The scale-up path produces a [`ScaleUpReport`] per fallback pass (on
+//! [`RunReport`]); the consolidation pass produces a
+//! [`ConsolidationPass`]; [`AutoscaleStats`] folds both into the
+//! run-level counters `ChurnResult` and the churn report surface. The
+//! log-line renderers are deliberately byte-stable — they feed the churn
+//! log whose FNV digest is the replay-determinism oracle.
+//!
+//! [`RunReport`]: crate::optimizer::plugin::RunReport
+//! [`ConsolidationPass`]: super::consolidate::ConsolidationPass
+
+use crate::solver::SolveStatus;
+use crate::util::json::Json;
+
+use super::consolidate::ConsolidationPass;
+
+/// Render a per-pool provisioning count list — `"small x2 + gpu x1"`,
+/// or `"none"` when nothing is provisioned. The one definition shared
+/// by [`ProvisionPlan::mix_label`] and the scale-up log line, so the
+/// plan and the byte-stable churn digest can never drift apart.
+///
+/// [`ProvisionPlan::mix_label`]: super::provision::ProvisionPlan::mix_label
+pub fn mix_label(per_pool: &[(String, usize)]) -> String {
+    let parts: Vec<String> = per_pool
+        .iter()
+        .filter(|(_, c)| *c > 0)
+        .map(|(name, c)| format!("{name} x{c}"))
+        .collect();
+    if parts.is_empty() {
+        "none".to_string()
+    } else {
+        parts.join(" + ")
+    }
+}
+
+/// One scale-up decision (provisioning solve + application).
+#[derive(Clone, Debug)]
+pub struct ScaleUpReport {
+    /// Certified-unplaceable pods handed to the provisioning solve.
+    pub pending: usize,
+    /// Provisioned nodes per pool, configuration order (zeros kept).
+    pub per_pool: Vec<(String, usize)>,
+    pub nodes_added: usize,
+    /// Total cost of the provisioned fleet.
+    pub cost: i64,
+    /// Proven lower bound on any sufficient fleet's cost.
+    pub cost_bound: i64,
+    /// Phase certificates of the provisioning solve.
+    pub cost_status: SolveStatus,
+    pub count_status: SolveStatus,
+    /// Both phases proven — the plan is certified min-cost-then-min-count.
+    pub certified: bool,
+    /// Proven: no fleet within the candidate limits can host the pods.
+    pub proven_infeasible: bool,
+    /// The plan was applied to the live cluster (joins + binds).
+    pub applied: bool,
+}
+
+impl ScaleUpReport {
+    /// Byte-stable log line, e.g.
+    /// `scale-up +2 (small x2) cost=10 [certified] pods=2`.
+    pub fn log_line(&self) -> String {
+        if self.proven_infeasible {
+            // "Within limits": the proof covers the offered candidate
+            // model (menu × max_per_pool), not the menu in the abstract.
+            return format!(
+                "scale-up infeasible within pool limits ({} pending)",
+                self.pending
+            );
+        }
+        let mix = mix_label(&self.per_pool);
+        format!(
+            "scale-up +{} ({mix}) cost={} [{}]{} pods={}",
+            self.nodes_added,
+            self.cost,
+            if self.certified {
+                "certified"
+            } else {
+                "anytime"
+            },
+            if self.applied { "" } else { " NOT-APPLIED" },
+            self.pending
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pools = Json::obj();
+        for (name, count) in &self.per_pool {
+            pools.set(name, *count as u64);
+        }
+        let mut o = Json::obj();
+        o.set("pending", self.pending as u64)
+            .set("nodes_added", self.nodes_added as u64)
+            .set("cost", self.cost)
+            .set("cost_bound", self.cost_bound)
+            .set("cost_status", self.cost_status.label())
+            .set("count_status", self.count_status.label())
+            .set("certified", self.certified)
+            .set("proven_infeasible", self.proven_infeasible)
+            .set("applied", self.applied)
+            .set("per_pool", pools);
+        o
+    }
+}
+
+/// Run-level autoscaler counters (summed over every cycle of a churn
+/// run; all zero with autoscaling off).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AutoscaleStats {
+    /// Scale-up decisions applied (nodes joined + pods bound).
+    pub scale_ups: usize,
+    /// Scale-up solves that proved no fleet suffices (within the
+    /// configured candidate limits).
+    pub scale_up_infeasible: usize,
+    /// Scale-up attempts that ended without an applied plan for any
+    /// other reason (deadline-truncated Unknown, or a failed apply).
+    pub scale_up_unknown: usize,
+    pub nodes_added: usize,
+    /// Total cost of every provisioned node.
+    pub cost_added: i64,
+    /// Applied scale-ups whose plan carried both optimality proofs.
+    pub certified_scale_ups: usize,
+    /// Consolidation passes that removed at least one node.
+    pub scale_downs: usize,
+    pub nodes_removed: usize,
+    /// Re-pack moves executed by consolidation (beyond the drains).
+    pub consolidation_moves: usize,
+    /// Resident pods drained off removed nodes.
+    pub drained_pods: usize,
+}
+
+impl AutoscaleStats {
+    pub fn absorb_scale_up(&mut self, r: &ScaleUpReport) {
+        if r.proven_infeasible {
+            self.scale_up_infeasible += 1;
+        } else if r.applied {
+            self.scale_ups += 1;
+            self.nodes_added += r.nodes_added;
+            self.cost_added += r.cost;
+            if r.certified {
+                self.certified_scale_ups += 1;
+            }
+        } else {
+            self.scale_up_unknown += 1;
+        }
+    }
+
+    pub fn absorb_consolidation(&mut self, pass: &ConsolidationPass) {
+        if pass.removed_any() {
+            self.scale_downs += 1;
+        }
+        self.nodes_removed += pass.removed.len();
+        self.consolidation_moves += pass.moves;
+        self.drained_pods += pass.drained_pods;
+    }
+
+    pub fn merge(&mut self, other: &AutoscaleStats) {
+        self.scale_ups += other.scale_ups;
+        self.scale_up_infeasible += other.scale_up_infeasible;
+        self.scale_up_unknown += other.scale_up_unknown;
+        self.nodes_added += other.nodes_added;
+        self.cost_added += other.cost_added;
+        self.certified_scale_ups += other.certified_scale_ups;
+        self.scale_downs += other.scale_downs;
+        self.nodes_removed += other.nodes_removed;
+        self.consolidation_moves += other.consolidation_moves;
+        self.drained_pods += other.drained_pods;
+    }
+
+    pub fn any_activity(&self) -> bool {
+        *self != AutoscaleStats::default()
+    }
+
+    /// Compact report cell, e.g. `+3/-1 cost=15` (`-` when idle).
+    pub fn cell(&self) -> String {
+        if !self.any_activity() {
+            return "-".to_string();
+        }
+        format!(
+            "+{}/-{} cost={}",
+            self.nodes_added, self.nodes_removed, self.cost_added
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scale_ups", self.scale_ups as u64)
+            .set("scale_up_infeasible", self.scale_up_infeasible as u64)
+            .set("scale_up_unknown", self.scale_up_unknown as u64)
+            .set("nodes_added", self.nodes_added as u64)
+            .set("cost_added", self.cost_added)
+            .set("certified_scale_ups", self.certified_scale_ups as u64)
+            .set("scale_downs", self.scale_downs as u64)
+            .set("nodes_removed", self.nodes_removed as u64)
+            .set("consolidation_moves", self.consolidation_moves as u64)
+            .set("drained_pods", self.drained_pods as u64);
+        o
+    }
+}
+
+/// Byte-stable consolidation log line, e.g.
+/// `scale-down removed=1 (node-002) moves=2 drained=1`.
+pub fn consolidation_log_line(pass: &ConsolidationPass, names: &[String]) -> String {
+    if pass.removed.is_empty() {
+        return format!(
+            "scale-down none (considered={} blocked={} budget-veto={})",
+            pass.considered, pass.blocked, pass.vetoed_budget
+        );
+    }
+    format!(
+        "scale-down removed={} ({}) moves={} drained={}",
+        pass.removed.len(),
+        names.join(", "),
+        pass.moves,
+        pass.drained_pods
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+
+    fn up(applied: bool, certified: bool) -> ScaleUpReport {
+        ScaleUpReport {
+            pending: 2,
+            per_pool: vec![("small".to_string(), 2), ("large".to_string(), 0)],
+            nodes_added: 2,
+            cost: 10,
+            cost_bound: 10,
+            cost_status: SolveStatus::Optimal,
+            count_status: SolveStatus::Optimal,
+            certified,
+            proven_infeasible: false,
+            applied,
+        }
+    }
+
+    #[test]
+    fn log_lines_are_stable_and_informative() {
+        assert_eq!(
+            up(true, true).log_line(),
+            "scale-up +2 (small x2) cost=10 [certified] pods=2"
+        );
+        assert!(up(false, false).log_line().contains("NOT-APPLIED"));
+        let infeasible = ScaleUpReport {
+            proven_infeasible: true,
+            ..up(false, false)
+        };
+        assert!(infeasible.log_line().contains("infeasible"));
+    }
+
+    #[test]
+    fn stats_absorb_and_render() {
+        let mut s = AutoscaleStats::default();
+        assert_eq!(s.cell(), "-");
+        s.absorb_scale_up(&up(true, true));
+        s.absorb_scale_up(&up(false, false)); // unapplied: counted apart
+        let pass = ConsolidationPass {
+            considered: 2,
+            removed: vec![NodeId(3)],
+            moves: 2,
+            drained_pods: 1,
+            ..Default::default()
+        };
+        s.absorb_consolidation(&pass);
+        assert_eq!(s.scale_ups, 1);
+        assert_eq!(s.scale_up_unknown, 1, "the unapplied attempt is visible");
+        assert_eq!(s.certified_scale_ups, 1);
+        assert_eq!(s.nodes_added, 2);
+        assert_eq!(s.scale_downs, 1);
+        assert_eq!(s.nodes_removed, 1);
+        assert_eq!(s.cell(), "+2/-1 cost=10");
+        let mut t = AutoscaleStats::default();
+        t.merge(&s);
+        assert_eq!(t, s);
+        assert!(t.any_activity());
+    }
+
+    #[test]
+    fn consolidation_lines_cover_both_outcomes() {
+        let idle = ConsolidationPass {
+            considered: 3,
+            blocked: 2,
+            vetoed_budget: 1,
+            ..Default::default()
+        };
+        assert_eq!(
+            consolidation_log_line(&idle, &[]),
+            "scale-down none (considered=3 blocked=2 budget-veto=1)"
+        );
+        let active = ConsolidationPass {
+            considered: 1,
+            removed: vec![NodeId(2)],
+            moves: 2,
+            drained_pods: 1,
+            ..Default::default()
+        };
+        assert_eq!(
+            consolidation_log_line(&active, &["node-002".to_string()]),
+            "scale-down removed=1 (node-002) moves=2 drained=1"
+        );
+    }
+}

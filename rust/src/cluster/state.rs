@@ -252,20 +252,27 @@ impl ClusterState {
     /// invariant, so the new name must sort after every existing one.
     pub fn add_node(&mut self, name: impl Into<String>, capacity: Resources) -> NodeId {
         let name = name.into();
+        self.push_node(Node::new(self.nodes.len() as u32, name, capacity))
+    }
+
+    /// The one node-append path: dense-id assignment, residual/status
+    /// bookkeeping, the sorted-name invariant, and the `NodeJoined`
+    /// event. `node.id` is overwritten with the next dense id.
+    fn push_node(&mut self, mut node: Node) -> NodeId {
         if let Some(last) = self.nodes.last() {
             assert!(
-                last.name < name,
+                last.name < node.name,
                 "joined node name must sort last: {:?} !< {:?}",
                 last.name,
-                name
+                node.name
             );
         }
         let id = NodeId(self.nodes.len() as u32);
-        let node = Node::new(id.0, name, capacity);
+        node.id = id;
+        self.free.push(node.capacity);
         self.free_ext.push(extended_map(&node));
-        self.nodes.push(node);
-        self.free.push(capacity);
         self.status.push(NodeStatus::Ready);
+        self.nodes.push(node);
         self.events.push(Event::NodeJoined {
             node: id,
             at_ms: self.now_ms,
@@ -280,6 +287,13 @@ impl ClusterState {
     /// canonical name, so long-horizon simulations never trip the
     /// sorted-name invariant.
     pub fn join_node(&mut self, capacity: Resources) -> NodeId {
+        let name = self.next_join_name();
+        self.add_node(name, capacity)
+    }
+
+    /// Next name under the canonical join scheme (see
+    /// [`join_node`](ClusterState::join_node)).
+    fn next_join_name(&self) -> String {
         let ord = self.nodes.len();
         let mut name = format!("node-{ord:03}");
         if let Some(last) = self.nodes.last() {
@@ -289,7 +303,19 @@ impl ClusterState {
                 name = format!("node-z{ord:09}");
             }
         }
-        self.add_node(name, capacity)
+        name
+    }
+
+    /// Append a node shaped like `template` — capacity, labels, taints,
+    /// and extended capacities — under the canonical join naming scheme.
+    /// The template's own id and name are ignored. This is the
+    /// autoscaler's scale-up path: provisioned pool nodes (GPU
+    /// capacities, dedicated taints, …) join fully decorated, unlike the
+    /// plain [`join_node`](ClusterState::join_node).
+    pub fn join_node_from(&mut self, template: &Node) -> NodeId {
+        let mut node = template.clone();
+        node.name = self.next_join_name();
+        self.push_node(node)
     }
 
     /// Bind a pending pod to a node, enforcing capacity (CPU/RAM and
@@ -791,6 +817,40 @@ mod tests {
         assert!(s.node_ready(id));
         s.bind(PodId(2), id).unwrap();
         assert!(s.events.all().iter().any(|e| matches!(e, Event::NodeJoined { node: NodeId(2), .. })));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn join_node_from_carries_the_template_decorations() {
+        use crate::cluster::constraints::{Taint, Toleration};
+        let mut s = two_node_state();
+        let template = Node::new(0, "ignored-name", Resources::new(2000, 2000))
+            .with_label("tier", "burst")
+            .with_taint(Taint::no_schedule("dedicated", "batch"))
+            .with_extended("gpu", 4);
+        let id = s.join_node_from(&template);
+        assert_eq!(id, NodeId(2));
+        assert_eq!(s.node(id).name, "node-002", "template name ignored");
+        assert_eq!(s.node(id).capacity, Resources::new(2000, 2000));
+        assert!(s.node(id).has_label("tier", "burst"));
+        assert_eq!(s.free_extended(id, "gpu"), 4);
+        assert!(s.node_ready(id));
+        // the taint is live: untolerated pods are refused, tolerant bind
+        let plain = s.add_pod(Pod::new(0, "plain", Resources::new(1, 1), Priority(0)));
+        assert!(matches!(
+            s.bind(plain, id),
+            Err(StateError::TaintNotTolerated { .. })
+        ));
+        let tol = s.add_pod(
+            Pod::new(0, "tol", Resources::new(1, 1), Priority(0))
+                .with_toleration(Toleration::equal("dedicated", "batch")),
+        );
+        s.bind(tol, id).unwrap();
+        assert!(s
+            .events
+            .all()
+            .iter()
+            .any(|e| matches!(e, Event::NodeJoined { node: NodeId(2), .. })));
         s.check_invariants().unwrap();
     }
 

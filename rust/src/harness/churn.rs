@@ -51,6 +51,7 @@ pub fn churn_report(trace: &ChurnTrace, results: &[ChurnResult]) -> String {
         "solver calls",
         "sweeps",
         "cache hits",
+        "autoscale",
         "mean cpu",
         "log digest",
     ]));
@@ -83,6 +84,9 @@ pub fn churn_report(trace: &ChurnTrace, results: &[ChurnResult]) -> String {
             r.solver_invocations.to_string(),
             format!("{}/{}", r.sweeps_applied, r.sweeps_run),
             cache_cell,
+            // nodes joined / removed by the CP autoscaler and the cost
+            // of the provisioned fleet ("-" when autoscaling is off)
+            r.autoscale.cell(),
             format!("{:.1}%", r.series.mean_cpu() * 100.0),
             format!("{:016x}", r.log.digest()),
         ]);
@@ -138,6 +142,8 @@ mod tests {
         // the eviction column carries the per-driver attribution split
         assert!(report.contains("evictions (pre+swp+drn)"));
         assert!(report.contains("cache hits"));
+        // the autoscale column renders "-" while autoscaling is off
+        assert!(report.contains("autoscale"));
     }
 
     #[test]

@@ -31,6 +31,11 @@
 //! * [`optimizer`] — the paper's contribution: Algorithm 1 per-priority
 //!                   optimisation loop + fallback scheduler plugin with
 //!                   cross-node pre-emption planning.
+//! * [`autoscaler`]— CP-driven cluster autoscaler: certificate-guided
+//!                   min-cost scale-up from configurable node pools plus
+//!                   consolidation scale-down with provably-drainable
+//!                   nodes — the first subsystem that changes the *node*
+//!                   side of the instance.
 //! * [`runtime`]   — PJRT (XLA) execution of the AOT-compiled L1/L2
 //!                   batch scorer, with a bit-exact native fallback.
 //! * [`workload`]  — the paper's random workload generator, dataset
@@ -40,6 +45,7 @@
 //! * [`harness`]   — experiment drivers regenerating Figure 3, Figure 4,
 //!                   Table 1, and the churn policy-comparison report.
 
+pub mod autoscaler;
 pub mod cluster;
 pub mod harness;
 pub mod lifecycle;

@@ -22,6 +22,9 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::autoscaler::{
+    consolidation_log_line, run_consolidation, AutoscaleConfig, AutoscaleStats, NodePool,
+};
 use crate::cluster::{ClusterState, Event, EvictCause, NodeId, PodId, ReplicaSet, Resources};
 use crate::metrics::{pending_per_priority, TimeSeries, UtilSample};
 use crate::optimizer::algorithm::OptimizerConfig;
@@ -76,6 +79,14 @@ pub struct ChurnConfig {
     /// warm-start the rest — byte-identical results, less work (the
     /// churn CLI's `--incremental`).
     pub incremental: bool,
+    /// Opt-in CP-driven autoscaling (the churn CLI's `--autoscale`):
+    /// certified-unplaceable pods trigger min-cost provisioning inside
+    /// the fallback pass, and — when the policy is solver-backed and
+    /// `consolidate` is set — a consolidation scale-down pass runs at
+    /// every sweep tick. Ignored under [`Policy::DefaultOnly`] (both
+    /// directions need the solver's certificates). `None` is
+    /// byte-identical to the pre-autoscaler simulator.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl ChurnConfig {
@@ -87,6 +98,7 @@ impl ChurnConfig {
             fallback_timeout: Duration::from_secs(2),
             fallback_portfolio: PortfolioConfig::default(),
             incremental: false,
+            autoscale: None,
         }
     }
 }
@@ -102,6 +114,9 @@ pub struct ChurnResult {
     pub final_placed: Vec<usize>,
     /// Pods still pending at the horizon.
     pub final_pending: usize,
+    /// Ready nodes at the horizon — the number the autoscaler grows and
+    /// shrinks (cordoned and removed nodes excluded).
+    pub final_ready_nodes: usize,
     /// Pods that arrived, per priority tier.
     pub arrivals_per_priority: Vec<usize>,
     pub completions: usize,
@@ -127,6 +142,9 @@ pub struct ChurnResult {
     pub solve_cache_hits: u64,
     pub component_cache_hits: u64,
     pub warm_starts: u64,
+    /// Autoscaler activity over the run (all zero with `autoscale` off):
+    /// per-cycle scale-up and consolidation decisions, aggregated.
+    pub autoscale: AutoscaleStats,
     pub series: TimeSeries,
     pub log: ChurnLog,
 }
@@ -178,6 +196,11 @@ struct ChurnRunner {
     /// interchange.
     fallback_session: Option<SolveSession>,
     sweep_session: Option<SolveSession>,
+    /// Memoized non-applied provisioning outcome, carried across the
+    /// per-round scheduler rebuilds (like the sessions): an unchanged
+    /// cluster replays a proven scale-up failure instead of re-burning
+    /// the provisioning window every tick.
+    provision_memo: Option<(u64, crate::autoscaler::ScaleUpReport)>,
     state: ClusterState,
     clock: SimClock,
     timeline: Timeline,
@@ -199,6 +222,7 @@ struct ChurnRunner {
     sweeps_applied: usize,
     events_processed: usize,
     sweep_due: bool,
+    autoscale: AutoscaleStats,
 }
 
 impl ChurnRunner {
@@ -207,11 +231,27 @@ impl ChurnRunner {
         for (at, op) in &trace.ops {
             timeline.schedule(*at, LifecycleEvent::Trace(op.clone()));
         }
-        if cfg.policy == Policy::FallbackSweep && cfg.sweep_every_ms > 0 {
+        // Sweep ticks drive the defrag sweep (FallbackSweep) and the
+        // autoscaler's consolidation pass (any solver-backed policy with
+        // `consolidate` armed) — with autoscale off this is exactly the
+        // historical FallbackSweep-only schedule.
+        let consolidating = cfg.policy != Policy::DefaultOnly
+            && cfg.autoscale.as_ref().is_some_and(|a| a.consolidate);
+        if (cfg.policy == Policy::FallbackSweep || consolidating) && cfg.sweep_every_ms > 0 {
             let mut t = cfg.sweep_every_ms;
             while t <= trace.params.horizon_ms {
                 timeline.schedule(t, LifecycleEvent::OptimizerSweep);
                 t += cfg.sweep_every_ms;
+            }
+        }
+        // Pin the autoscaler's reference capacity to the trace's
+        // canonical one: deriving it per-cycle from the live fleet would
+        // let an autoscaled `large` node inflate every later scale-up's
+        // candidate sizes (same cost, 1.5x capacity, geometrically).
+        let mut cfg = cfg.clone();
+        if let Some(a) = &mut cfg.autoscale {
+            if a.reference.is_none() {
+                a.reference = Some(trace.reference_capacity);
             }
         }
         let tiers = trace.p_max as usize + 1;
@@ -225,6 +265,7 @@ impl ChurnRunner {
             evictions_drain: 0,
             fallback_session: cfg.incremental.then(SolveSession::new),
             sweep_session: cfg.incremental.then(SolveSession::new),
+            provision_memo: None,
             cfg: cfg.clone(),
             state: ClusterState::new(trace.nodes.clone(), Vec::new()),
             clock: SimClock::new(),
@@ -243,6 +284,7 @@ impl ChurnRunner {
             sweeps_applied: 0,
             events_processed: 0,
             sweep_due: false,
+            autoscale: AutoscaleStats::default(),
         }
     }
 
@@ -265,7 +307,13 @@ impl ChurnRunner {
             }
             self.schedule_round(t);
             if self.sweep_due {
-                self.defrag_sweep(t);
+                if self.cfg.policy == Policy::FallbackSweep {
+                    self.defrag_sweep(t);
+                }
+                // Consolidation runs after the defrag sweep: a freshly
+                // compacted cluster is exactly when nodes become
+                // provably drainable.
+                self.consolidation_pass(t);
             }
             self.absorb_events();
             let (cpu, ram) = self.state.utilization();
@@ -291,6 +339,12 @@ impl ChurnRunner {
             served_per_priority: self.served,
             final_placed: self.state.placed_per_priority(self.p_max),
             final_pending: self.state.pending_pods().len(),
+            final_ready_nodes: self
+                .state
+                .nodes()
+                .iter()
+                .filter(|n| self.state.node_ready(n.id))
+                .count(),
             arrivals_per_priority: self.arrivals,
             completions: self.completions,
             evictions: self.evictions_total,
@@ -305,6 +359,7 @@ impl ChurnRunner {
             solve_cache_hits: solve_hits,
             component_cache_hits: component_hits,
             warm_starts: warm,
+            autoscale: self.autoscale,
             series: self.series,
             log: self.log,
         }
@@ -323,7 +378,7 @@ impl ChurnRunner {
                     lifetimes_ms,
                 } => self.scale(at, rs, delta, &lifetimes_ms),
                 TraceOp::Drain { node } => self.apply_drain(at, node),
-                TraceOp::Join { capacity } => self.apply_join(at, capacity),
+                TraceOp::Join { capacity, pool } => self.apply_join(at, capacity, pool),
             },
             LifecycleEvent::PodCompletion { pod } => self.complete(at, pod),
             LifecycleEvent::OptimizerSweep => self.sweep_due = true,
@@ -435,9 +490,22 @@ impl ChurnRunner {
         self.log.push(at, line);
     }
 
-    fn apply_join(&mut self, at: u64, capacity: Resources) {
-        let id = self.state.join_node(capacity);
-        let line = format!("join {}", self.state.node(id).name);
+    fn apply_join(&mut self, at: u64, capacity: Resources, pool: Option<NodePool>) {
+        let line = match pool {
+            Some(p) => {
+                // Pool joins arrive decorated (labels, taints, extended
+                // capacities) at the trace's pre-computed capacity —
+                // through the pool's one decoration path.
+                let id = self
+                    .state
+                    .join_node_from(&p.node_template_with_capacity(capacity));
+                format!("join {} ({})", self.state.node(id).name, p.name)
+            }
+            None => {
+                let id = self.state.join_node(capacity);
+                format!("join {}", self.state.node(id).name)
+            }
+        };
         self.log.push(at, line);
     }
 
@@ -463,18 +531,22 @@ impl ChurnRunner {
             }
             Policy::Fallback | Policy::FallbackSweep => {
                 // The scheduler is rebuilt per round (no hidden queue
-                // state across ticks); the solve session is the one
-                // deliberate carrier of cross-tick solver knowledge.
+                // state across ticks); the solve session and the
+                // provisioning-failure memo are the deliberate carriers
+                // of cross-tick solver knowledge.
                 let mut osched = OptimizingScheduler::new(
                     self.p_max,
                     OptimizerConfig {
                         total_timeout: self.cfg.fallback_timeout,
                         portfolio: self.cfg.fallback_portfolio.clone(),
+                        autoscale: self.cfg.autoscale.clone(),
                         ..Default::default()
                     },
                 );
+                osched.set_provision_memo(self.provision_memo.take());
                 let report =
                     osched.run_with_session(&mut self.state, self.fallback_session.as_mut());
+                self.provision_memo = osched.take_provision_memo();
                 let pending_after = self.state.pending_pods().len();
                 if report.solver_invoked {
                     self.solver_invocations += 1;
@@ -483,6 +555,10 @@ impl ChurnRunner {
                         report.placed_before, report.placed_after, report.disruptions, pending_after
                     );
                     self.log.push(at, line);
+                    if let Some(up) = &report.autoscale {
+                        self.log.push(at, up.log_line());
+                        self.autoscale.absorb_scale_up(up);
+                    }
                 } else {
                     let line = format!(
                         "schedule bound={} pending={pending_after}",
@@ -519,6 +595,33 @@ impl ChurnRunner {
             self.log
                 .push(at, format!("sweep no-gain placed={:?}", report.placed_before));
         }
+    }
+
+    /// Autoscaler scale-down at a sweep tick: prove nodes drainable
+    /// (certified lossless re-pack within the budget), then drain and
+    /// remove them. Reuses the sweep's optimiser config and — under
+    /// `--incremental` — the sweep's solve session for warm starts.
+    fn consolidation_pass(&mut self, at: u64) {
+        let Some(acfg) = self.cfg.autoscale.clone() else {
+            return;
+        };
+        if !acfg.consolidate || self.cfg.policy == Policy::DefaultOnly {
+            return;
+        }
+        let pass = run_consolidation(
+            &mut self.state,
+            self.p_max,
+            &acfg,
+            &self.cfg.sweep.optimizer,
+            self.sweep_session.as_mut(),
+        );
+        let names: Vec<String> = pass
+            .removed
+            .iter()
+            .map(|&n| self.state.node(n).name.clone())
+            .collect();
+        self.log.push(at, consolidation_log_line(&pass, &names));
+        self.autoscale.absorb_consolidation(&pass);
     }
 
     /// Absorb the event-log suffix appended since the last tick: credit
@@ -746,6 +849,91 @@ mod tests {
         );
         assert_eq!(cold.session_full_hits, 0);
         assert_eq!(cold.solve_cache_hits, 0);
+    }
+
+    #[test]
+    fn same_tick_join_vs_deploy_order_is_pinned_and_both_replay() {
+        use crate::cluster::{identical_nodes, Priority};
+        use crate::workload::churn::ChurnTrace;
+        use crate::workload::GenParams;
+
+        // Node 0 is too small for the pod; a Join at the very same tick
+        // provides the only feasible node. Autoscaler-injected joins
+        // made this race observable — the contract is: same-tick events
+        // apply in insertion order (pinned log), and the scheduling
+        // round runs after the whole tick is batched, so the pod binds
+        // under either insertion order.
+        let base = GenParams {
+            nodes: 1,
+            pods_per_node: 1,
+            priority_tiers: 1,
+            usage: 1.0,
+        };
+        let params = ChurnParams {
+            horizon_ms: 1_000,
+            ..ChurnParams::for_cluster(base)
+        };
+        let nodes = identical_nodes(1, Resources::new(100, 100));
+        let rs = ReplicaSet::new(0, "rs-000", 1, Resources::new(500, 500), Priority(0));
+        let mk = |join_first: bool| {
+            let deploy = (
+                0u64,
+                TraceOp::Deploy {
+                    rs: rs.clone(),
+                    lifetimes_ms: vec![5_000],
+                },
+            );
+            let join = (
+                0u64,
+                TraceOp::Join {
+                    capacity: Resources::new(1000, 1000),
+                    pool: None,
+                },
+            );
+            let ops = if join_first {
+                vec![join, deploy]
+            } else {
+                vec![deploy, join]
+            };
+            ChurnTrace {
+                params,
+                seed: 0,
+                nodes: nodes.clone(),
+                reference_capacity: Resources::new(100, 100),
+                p_max: 0,
+                ops,
+            }
+        };
+        for join_first in [true, false] {
+            let trace = mk(join_first);
+            let a = run_churn(&trace, &ChurnConfig::for_policy(Policy::DefaultOnly));
+            let b = run_churn(&trace, &ChurnConfig::for_policy(Policy::DefaultOnly));
+            assert_eq!(a.log.digest(), b.log.digest(), "replay determinism");
+            assert_eq!(a.final_placed, vec![1], "join_first={join_first}");
+            assert_eq!(a.final_pending, 0, "join_first={join_first}");
+        }
+        // The two insertion orders are *different but pinned* logs.
+        let ja = run_churn(&mk(true), &ChurnConfig::for_policy(Policy::DefaultOnly));
+        let db = run_churn(&mk(false), &ChurnConfig::for_policy(Policy::DefaultOnly));
+        assert_ne!(ja.log.digest(), db.log.digest());
+        assert!(ja.log.lines()[0].contains("join"), "{}", ja.log.lines()[0]);
+        assert!(db.log.lines()[0].contains("deploy"), "{}", db.log.lines()[0]);
+    }
+
+    #[test]
+    fn autoscale_off_is_the_default_and_records_no_activity() {
+        let trace = tiny_trace(21);
+        let base = ChurnConfig::for_policy(Policy::FallbackSweep);
+        assert!(base.autoscale.is_none(), "autoscaling is strictly opt-in");
+        let explicit = ChurnConfig {
+            autoscale: None,
+            ..base.clone()
+        };
+        let a = run_churn(&trace, &base);
+        let b = run_churn(&trace, &explicit);
+        assert_eq!(a.log.digest(), b.log.digest());
+        assert_eq!(a.autoscale, crate::autoscaler::AutoscaleStats::default());
+        assert_eq!(b.autoscale, crate::autoscaler::AutoscaleStats::default());
     }
 
     #[test]

@@ -5,6 +5,21 @@
 //! scheduled. The sequence tie-break is what makes the whole simulator
 //! deterministic — `BinaryHeap` alone gives no stable order for equal
 //! keys.
+//!
+//! # Same-tick ordering is contractual
+//!
+//! Insertion order at an equal timestamp is *the* specified order, not
+//! an accident: a trace that schedules `Join` before a `Deploy` at tick
+//! `t` applies the join first (its state mutation and log line precede
+//! the deploy's), and vice versa. Elastic clusters made this
+//! observable — autoscaler-era traces interleave `NodeJoin` with pod
+//! arrivals at shared ticks, and replay determinism (byte-identical
+//! churn digests) depends on the interleaving being pinned. The
+//! regression tests below freeze it. Note the *scheduling round* of the
+//! churn runner is unaffected either way: it batches every event of a
+//! tick before scheduling, so a same-tick join is always visible to
+//! that tick's placements regardless of which side of the deploy it
+//! landed on.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -119,6 +134,81 @@ mod tests {
         tl.schedule(5, completion(3));
         tl.schedule(5, completion(9));
         assert_eq!(popped_pods(&mut tl), vec![(5, 7), (5, 3), (5, 9)]);
+    }
+
+    #[test]
+    fn same_tick_join_vs_arrival_order_is_insertion_order() {
+        use crate::cluster::Resources;
+        use crate::workload::churn::TraceOp;
+
+        let join = || {
+            LifecycleEvent::Trace(TraceOp::Join {
+                capacity: Resources::new(1000, 1000),
+                pool: None,
+            })
+        };
+        let arrival = || completion(0); // any pod-side event
+
+        // join scheduled first fires first …
+        let mut tl = Timeline::new();
+        tl.schedule(100, join());
+        tl.schedule(100, arrival());
+        match tl.pop_next() {
+            Some((100, LifecycleEvent::Trace(TraceOp::Join { .. }))) => {}
+            other => panic!("join scheduled first must fire first, got {other:?}"),
+        }
+        match tl.pop_next() {
+            Some((100, LifecycleEvent::PodCompletion { .. })) => {}
+            other => panic!("arrival must fire second, got {other:?}"),
+        }
+
+        // … and the reverse insertion fires in the reverse order.
+        let mut tl = Timeline::new();
+        tl.schedule(100, arrival());
+        tl.schedule(100, join());
+        match tl.pop_next() {
+            Some((100, LifecycleEvent::PodCompletion { .. })) => {}
+            other => panic!("arrival scheduled first must fire first, got {other:?}"),
+        }
+        match tl.pop_next() {
+            Some((100, LifecycleEvent::Trace(TraceOp::Join { .. }))) => {}
+            other => panic!("join must fire second, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn same_tick_ordering_survives_heap_growth() {
+        use crate::cluster::Resources;
+        use crate::workload::churn::TraceOp;
+
+        // Many same-tick events around a Join: the heap's internal
+        // sift order must never leak through the (time, seq) key.
+        let mut tl = Timeline::new();
+        for i in 0..8 {
+            tl.schedule(50, completion(i));
+        }
+        tl.schedule(
+            50,
+            LifecycleEvent::Trace(TraceOp::Join {
+                capacity: Resources::new(1, 1),
+                pool: None,
+            }),
+        );
+        for i in 8..16 {
+            tl.schedule(50, completion(i));
+        }
+        let mut order = Vec::new();
+        while let Some((t, ev)) = tl.pop_next() {
+            assert_eq!(t, 50);
+            order.push(match ev {
+                LifecycleEvent::PodCompletion { pod } => pod.0 as i64,
+                LifecycleEvent::Trace(TraceOp::Join { .. }) => -1,
+                _ => panic!("unexpected event"),
+            });
+        }
+        let expected: Vec<i64> =
+            (0..8).chain([-1]).chain(8..16).collect();
+        assert_eq!(order, expected);
     }
 
     #[test]

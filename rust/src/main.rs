@@ -14,11 +14,12 @@
 
 use std::time::Duration;
 
+use kube_packd::autoscaler::{AutoscaleConfig, NodePool};
 use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
 use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
 use kube_packd::harness::InstanceRun;
-use kube_packd::lifecycle::{compare_policies, ChurnConfig, Policy, SweepConfig};
+use kube_packd::lifecycle::{compare_policies, run_churn, ChurnConfig, Policy, SweepConfig};
 use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler, SolveSession};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
@@ -36,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         Some("generate") => generate(&args),
         Some("solve") => solve(&args),
         Some("churn") => churn(&args),
+        Some("autoscale") => autoscale(&args),
         Some("fig3") => figure(&args, "fig3"),
         Some("fig4") => figure(&args, "fig4"),
         Some("table1") => figure(&args, "table1"),
@@ -67,6 +69,8 @@ COMMANDS
   generate                 emit a challenging dataset (JSON)
       --nodes N --ppn N --tiers N --usage F --count N --seed N --out FILE
       --constraints none|taints|anti-affinity|spread|extended|mixed
+      --node-pools small,large,gpu   (heterogeneous fleet; default
+                           identical nodes, the paper's assumption)
   solve                    run the optimiser over a dataset file
                            (constraint profiles travel with the dataset)
       --dataset FILE --timeout SECS --threads N --json FILE --incremental
@@ -79,8 +83,15 @@ COMMANDS
       --nodes N --ppn N --tiers N --usage F --seed N
       --horizon-ms N --arrival-ms N --lifetime-ms N
       --sweep-ms N --budget N --timeout SECS --threads N --log
-      --incremental
+      --incremental --autoscale --node-pools small,large,gpu
       --constraints none|taints|anti-affinity|spread|extended|mixed
+  autoscale                CP-driven elastic-cluster comparison: the same
+                           seeded churn trace with the autoscaler off vs
+                           on — certified scale-ups (min-cost node pools)
+                           and provably-drainable consolidations
+      --nodes N --ppn N --tiers N --usage F --seed N --horizon-ms N
+      --arrival-ms N --lifetime-ms N --sweep-ms N --budget N
+      --timeout SECS --threads N --node-pools small,large,gpu --log
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
@@ -107,6 +118,32 @@ fn constraints_arg(args: &Args) -> ConstraintProfile {
     ConstraintProfile::parse(v).unwrap_or_else(|| {
         panic!("--constraints wants none|taints|anti-affinity|spread|extended|mixed, got {v:?}")
     })
+}
+
+/// `--node-pools` selects the heterogeneous fleet mix (empty = the
+/// paper's identical nodes).
+fn node_pools_arg(args: &Args) -> Vec<NodePool> {
+    let v = args.get_str("node-pools", "");
+    NodePool::parse_mix(v)
+        .unwrap_or_else(|| panic!("--node-pools wants a comma mix of small|large|gpu, got {v:?}"))
+}
+
+/// The autoscaler knobs shared by `churn --autoscale` and the
+/// `autoscale` subcommand: the trace's pool mix doubles as the
+/// provisioning menu (standard mix when the fleet is identical), the
+/// provisioning window follows `--timeout`, and `--budget` caps
+/// consolidation disruption.
+fn autoscale_cfg_arg(args: &Args, pools: &[NodePool], timeout: f64) -> AutoscaleConfig {
+    AutoscaleConfig {
+        pools: if pools.is_empty() {
+            NodePool::standard_mix()
+        } else {
+            pools.to_vec()
+        },
+        provision_timeout: Duration::from_secs_f64(timeout),
+        consolidation_budget: args.get_usize("budget", 8),
+        ..AutoscaleConfig::default()
+    }
 }
 
 /// `--threads` with the env-aware portfolio default (`KUBE_PACKD_THREADS`
@@ -185,14 +222,26 @@ fn generate(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 1);
     let out = args.get_str("out", "dataset.json");
     let profile = constraints_arg(args);
-    let insts =
-        Instance::generate_challenging_constrained(params, count, seed, count * 50, profile);
+    let pools = node_pools_arg(args);
+    let insts = Instance::generate_challenging_pooled(
+        params,
+        count,
+        seed,
+        count * 50,
+        profile,
+        &pools,
+    );
     dataset::save(&insts, out)?;
     println!(
-        "wrote {} challenging instances ({}, constraints={}) to {out}",
+        "wrote {} challenging instances ({}, constraints={}, pools={}) to {out}",
         insts.len(),
         params.label(),
-        profile.label()
+        profile.label(),
+        if pools.is_empty() {
+            "identical".to_string()
+        } else {
+            NodePool::mix_spec(&pools)
+        }
     );
     Ok(())
 }
@@ -350,10 +399,15 @@ fn churn(args: &Args) -> anyhow::Result<()> {
     let threads = threads_arg(args);
     let profile = constraints_arg(args);
 
+    let pools = node_pools_arg(args);
     let trace = ChurnTraceGenerator::new(params, seed)
         .with_profile(profile)
+        .with_pools(pools.clone())
         .generate();
     let incremental = args.flag("incremental");
+    let autoscale = args
+        .flag("autoscale")
+        .then(|| autoscale_cfg_arg(args, &pools, timeout));
     let cfg = ChurnConfig {
         policy: Policy::FallbackSweep,
         sweep_every_ms: args.get_u64("sweep-ms", 5_000),
@@ -366,6 +420,7 @@ fn churn(args: &Args) -> anyhow::Result<()> {
         fallback_timeout: Duration::from_secs_f64(timeout),
         fallback_portfolio: PortfolioConfig::with_threads(threads),
         incremental,
+        autoscale,
     };
 
     let results = compare_policies(&trace, &cfg);
@@ -380,6 +435,96 @@ fn churn(args: &Args) -> anyhow::Result<()> {
         "replay check: re-run with --seed {seed} — the default-only digest always matches byte \
          for byte; the solver-backed rows match whenever every solve finishes within its budget \
          (raise --timeout if they drift under load)"
+    );
+    Ok(())
+}
+
+/// CP-driven elastic-cluster comparison: the identical seeded trace run
+/// with the autoscaler off vs on, under the fallback+sweep policy.
+fn autoscale(args: &Args) -> anyhow::Result<()> {
+    let base = GenParams {
+        nodes: args.get_usize("nodes", 6),
+        pods_per_node: args.get_usize("ppn", 4),
+        priority_tiers: args.get_usize("tiers", 2) as u32,
+        // Overloaded by default: certified scale-ups need a cluster the
+        // solver can *prove* full.
+        usage: usage_arg(args, 1.15),
+    };
+    let params = ChurnParams {
+        horizon_ms: args.get_u64("horizon-ms", 20_000),
+        mean_arrival_ms: args.get_u64("arrival-ms", 600),
+        mean_lifetime_ms: args.get_u64("lifetime-ms", 5_000),
+        ..ChurnParams::for_cluster(base)
+    };
+    let seed = args.get_u64("seed", 42);
+    let timeout = args.get_f64("timeout", 1.0);
+    let threads = threads_arg(args);
+    let pools = node_pools_arg(args);
+    let trace = ChurnTraceGenerator::new(params, seed)
+        .with_profile(constraints_arg(args))
+        .with_pools(pools.clone())
+        .generate();
+
+    let acfg = autoscale_cfg_arg(args, &pools, timeout);
+    let mk = |autoscale: Option<AutoscaleConfig>| ChurnConfig {
+        policy: Policy::FallbackSweep,
+        sweep_every_ms: args.get_u64("sweep-ms", 2_000),
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(timeout).with_threads(threads),
+            eviction_budget: args.get_usize("budget", 8),
+        },
+        fallback_timeout: Duration::from_secs_f64(timeout),
+        fallback_portfolio: PortfolioConfig::with_threads(threads),
+        incremental: args.flag("incremental"),
+        autoscale,
+    };
+    let off = run_churn(&trace, &mk(None));
+    let on = run_churn(&trace, &mk(Some(acfg.clone())));
+
+    println!(
+        "autoscale — {} · horizon {}ms · seed {seed} · pools {}",
+        base.label(),
+        params.horizon_ms,
+        NodePool::mix_spec(&acfg.pools)
+    );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7} {:>18} {:>11} {:>18}",
+        "mode", "served/tier", "pending", "nodes", "scale (+n/-n cost)", "evictions", "log digest"
+    );
+    for (mode, r) in [("off", &off), ("on", &on)] {
+        println!(
+            "{:<10} {:>14} {:>8} {:>7} {:>18} {:>11} {:>18}",
+            mode,
+            format!("{:?}", r.served_per_priority),
+            r.final_pending,
+            r.final_ready_nodes,
+            r.autoscale.cell(),
+            r.evictions,
+            format!("{:016x}", r.log.digest()),
+        );
+    }
+    let a = &on.autoscale;
+    println!(
+        "\nscale-ups: {} applied ({} certified min-cost, {} nodes, cost {}), {} \
+         proven-infeasible, {} inconclusive",
+        a.scale_ups,
+        a.certified_scale_ups,
+        a.nodes_added,
+        a.cost_added,
+        a.scale_up_infeasible,
+        a.scale_up_unknown
+    );
+    println!(
+        "scale-downs: {} passes removed {} node(s) ({} re-pack moves, {} drained pods)",
+        a.scale_downs, a.nodes_removed, a.consolidation_moves, a.drained_pods
+    );
+    if args.flag("log") {
+        println!("--- event log: autoscale on ---");
+        print!("{}", on.log.render());
+    }
+    println!(
+        "\nreplay check: identical --seed and --threads replay byte-identically whenever every \
+         solve finishes within its budget; scale decisions are certificates, so they replay too"
     );
     Ok(())
 }

@@ -23,6 +23,7 @@
 
 use std::time::Duration;
 
+use crate::autoscaler::AutoscaleConfig;
 use crate::cluster::{ClusterState, NodeId, PodId};
 use crate::portfolio::{solve_portfolio_session, PortfolioConfig, PortfolioStats, SolveCache};
 use crate::solver::{CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig};
@@ -55,6 +56,14 @@ pub struct OptimizerConfig {
     /// consecutive solves. `optimize` itself stays stateless; the knob
     /// only tells drivers to keep a session alive.
     pub incremental: bool,
+    /// Opt-in CP-driven autoscaling. When set, the fallback scheduler
+    /// ([`OptimizingScheduler`](super::plugin::OptimizingScheduler))
+    /// reacts to *certified* unplaceability — a tier proven maximal with
+    /// pods still pending — by solving the min-cost provisioning model
+    /// and joining the resulting nodes; churn drivers additionally run
+    /// the consolidation scale-down pass at sweep ticks. `optimize`
+    /// itself never mutates the cluster; the knob only arms drivers.
+    pub autoscale: Option<AutoscaleConfig>,
     /// Verbose per-phase logging. Resolved once from `KUBE_PACKD_DEBUG`
     /// at construction instead of per solve inside the hot loop.
     pub debug: bool,
@@ -69,6 +78,7 @@ impl Default for OptimizerConfig {
             portfolio: PortfolioConfig::default(),
             modules: ModuleRegistry::standard(),
             incremental: false,
+            autoscale: None,
             debug: std::env::var_os("KUBE_PACKD_DEBUG").is_some(),
         }
     }
@@ -97,6 +107,12 @@ impl OptimizerConfig {
     /// Toggle incremental solve sessions (builder style).
     pub fn with_incremental(mut self, incremental: bool) -> Self {
         self.incremental = incremental;
+        self
+    }
+
+    /// Arm CP-driven autoscaling (builder style).
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> Self {
+        self.autoscale = Some(autoscale);
         self
     }
 }

@@ -22,7 +22,8 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
-use crate::cluster::{ClusterState, Event, NodeId, PodId};
+use crate::autoscaler::{certified_unplaceable, plan_provisioning, ProvisionOutcome, ScaleUpReport};
+use crate::cluster::{ClusterState, Event, NodeId, PodId, Resources};
 use crate::metrics::lex_better;
 use crate::scheduler::default::RunStats;
 use crate::scheduler::framework::{
@@ -30,7 +31,7 @@ use crate::scheduler::framework::{
     PreFilterPlugin, ReservePlugin,
 };
 use crate::scheduler::DefaultScheduler;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{Deadline, Stopwatch};
 
 use super::algorithm::{optimize, OptimizeResult, OptimizerConfig};
 use super::plan::MovePlan;
@@ -156,6 +157,11 @@ pub struct RunReport {
     pub plan_incomplete: bool,
     /// Pods whose node changed to realise the plan.
     pub disruptions: usize,
+    /// Certificate-guided scale-up taken this pass (None unless
+    /// `OptimizerConfig.autoscale` is armed *and* the run certified
+    /// unplaceable pods): the provisioning solve's outcome, applied or
+    /// not.
+    pub autoscale: Option<ScaleUpReport>,
     /// Placement vector before / after the full pass.
     pub placed_before: Vec<usize>,
     pub placed_after: Vec<usize>,
@@ -173,6 +179,17 @@ pub struct OptimizingScheduler {
     /// cycle (the churn runner) instead pass a longer-lived session via
     /// [`run_with_session`](OptimizingScheduler::run_with_session).
     session: Option<SolveSession>,
+    /// Scale-up reference capacity, snapshotted on first use: deriving
+    /// it per pass from the live fleet would let an autoscaled `large`
+    /// node inflate every later candidate's size at the same cost.
+    autoscale_reference: Option<Resources>,
+    /// Memoized *proven-infeasible* provisioning outcome, keyed on the
+    /// state and autoscale-config fingerprints: an unchanged cluster
+    /// replays the certificate instead of re-burning the provisioning
+    /// window every pass. Only certificates are cached — a
+    /// deadline-truncated Unknown is a wall-clock artifact and must
+    /// stay retryable.
+    provision_memo: Option<(u64, ScaleUpReport)>,
 }
 
 impl OptimizingScheduler {
@@ -192,6 +209,8 @@ impl OptimizingScheduler {
             cfg,
             p_max,
             session,
+            autoscale_reference: None,
+            provision_memo: None,
         }
     }
 
@@ -203,6 +222,22 @@ impl OptimizingScheduler {
         let report = self.run_with_session(state, session.as_mut());
         self.session = session;
         report
+    }
+
+    /// Take the memoized non-applied provisioning outcome out of this
+    /// scheduler. Drivers that rebuild the scheduler every cycle (the
+    /// churn runner) carry it across instances with
+    /// [`set_provision_memo`](OptimizingScheduler::set_provision_memo),
+    /// the same way they carry the solve session.
+    pub fn take_provision_memo(&mut self) -> Option<(u64, ScaleUpReport)> {
+        self.provision_memo.take()
+    }
+
+    /// Install a memo taken from a previous scheduler instance (pure
+    /// caching — outcomes are deterministic per (state, config), so a
+    /// transplanted memo can only skip work, never change a decision).
+    pub fn set_provision_memo(&mut self, memo: Option<(u64, ScaleUpReport)>) {
+        self.provision_memo = memo;
     }
 
     /// [`run`](OptimizingScheduler::run) with a caller-owned incremental
@@ -226,6 +261,7 @@ impl OptimizingScheduler {
                 proved_optimal: false,
                 plan_incomplete: false,
                 disruptions: 0,
+                autoscale: None,
                 placed_after: placed_before.clone(),
                 placed_before,
                 solver_wall: std::time::Duration::ZERO,
@@ -311,6 +347,95 @@ impl OptimizingScheduler {
             self.scheduler.queue.resume();
         }
 
+        // --- certificate-guided scale-up -----------------------------------
+        // Only *proven* unplaceability triggers provisioning: the tier's
+        // phase-1 bound must be closed, so "the cluster is full" is a
+        // certificate, not a heuristic.
+        let mut autoscale = None;
+        if let (Some(acfg), Some(res)) = (self.cfg.autoscale.clone(), &result) {
+            let stuck = certified_unplaceable(state, res);
+            if !stuck.is_empty() {
+                // Replay a memoized proven failure for an unchanged
+                // cluster (applied plans mutate the state, so they can
+                // never falsely hit).
+                let memo_key =
+                    super::session::fingerprint_state(state, self.p_max) ^ acfg.fingerprint();
+                if let Some((key, cached)) = &self.provision_memo {
+                    if *key == memo_key {
+                        autoscale = Some(cached.clone());
+                    }
+                }
+                if autoscale.is_none() {
+                    let reference = *self
+                        .autoscale_reference
+                        .get_or_insert_with(|| acfg.reference_capacity(state));
+                    let outcome = plan_provisioning(
+                        state,
+                        &stuck,
+                        &acfg.pools,
+                        reference,
+                        acfg.max_per_pool,
+                        Deadline::after(acfg.provision_timeout),
+                        &self.cfg.solver,
+                        &self.cfg.portfolio,
+                        &self.cfg.modules,
+                    );
+                    let report = match outcome {
+                        ProvisionOutcome::Plan(plan) => {
+                            let applied = plan.apply(state, &acfg.pools, reference).is_ok();
+                            ScaleUpReport {
+                                pending: stuck.len(),
+                                nodes_added: plan.node_count,
+                                cost: plan.cost,
+                                cost_bound: plan.cost_bound,
+                                cost_status: plan.cost_status,
+                                count_status: plan.count_status,
+                                certified: plan.certified(),
+                                proven_infeasible: false,
+                                applied,
+                                per_pool: plan.per_pool,
+                            }
+                        }
+                        ProvisionOutcome::Infeasible => ScaleUpReport {
+                            pending: stuck.len(),
+                            per_pool: acfg.pools.iter().map(|p| (p.name.clone(), 0)).collect(),
+                            nodes_added: 0,
+                            cost: 0,
+                            cost_bound: 0,
+                            cost_status: crate::solver::SolveStatus::Infeasible,
+                            count_status: crate::solver::SolveStatus::Infeasible,
+                            certified: false,
+                            proven_infeasible: true,
+                            applied: false,
+                        },
+                        ProvisionOutcome::Unknown => ScaleUpReport {
+                            pending: stuck.len(),
+                            per_pool: acfg.pools.iter().map(|p| (p.name.clone(), 0)).collect(),
+                            nodes_added: 0,
+                            cost: 0,
+                            cost_bound: 0,
+                            cost_status: crate::solver::SolveStatus::Unknown,
+                            count_status: crate::solver::SolveStatus::Unknown,
+                            certified: false,
+                            proven_infeasible: false,
+                            applied: false,
+                        },
+                    };
+                    // Memoize *proven* failures only: Infeasible is a
+                    // certificate and replays soundly, while a
+                    // deadline-truncated Unknown is a wall-clock
+                    // artifact — caching it would disable retries
+                    // forever on an unchanged cluster.
+                    self.provision_memo = if report.proven_infeasible {
+                        Some((memo_key, report.clone()))
+                    } else {
+                        None
+                    };
+                    autoscale = Some(report);
+                }
+            }
+        }
+
         let placed_after = state.placed_per_priority(self.p_max);
         let improved = lex_better(&placed_after, &placed_before);
         state.events.push(Event::SolverFinished {
@@ -327,6 +452,7 @@ impl OptimizingScheduler {
             proved_optimal: proved,
             plan_incomplete,
             disruptions,
+            autoscale,
             placed_after,
             placed_before,
             solver_wall,
@@ -421,6 +547,121 @@ mod tests {
         assert!(!report.improved);
         assert!(report.proved_optimal); // proves KWOK's placement optimal
         assert_eq!(report.placed_after, vec![1]);
+    }
+
+    #[test]
+    fn certified_unplaceable_pods_trigger_scale_up() {
+        use crate::autoscaler::AutoscaleConfig;
+        // One full node; a pending pod provably unplaceable on it. With
+        // autoscale armed, the certificate buys the cheapest node that
+        // hosts the pod and binds it — all in one pass.
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(900, 900), Priority(0)),
+            Pod::new(1, "stuck", Resources::new(800, 800), Priority(0)),
+        ];
+        let mut state =
+            ClusterState::new(identical_nodes(1, Resources::new(1000, 1000)), pods);
+        state.bind(PodId(0), crate::cluster::NodeId(0)).unwrap();
+        let cfg = OptimizerConfig::with_timeout(5.0).with_autoscale(AutoscaleConfig {
+            provision_timeout: std::time::Duration::from_secs(5),
+            ..AutoscaleConfig::default()
+        });
+        let mut osched = OptimizingScheduler::new(0, cfg);
+        let report = osched.run(&mut state);
+        assert!(report.solver_invoked);
+        let up = report.autoscale.expect("certified pending pod must scale up");
+        assert!(up.applied);
+        assert!(up.certified, "tiny provisioning model certifies both phases");
+        assert!(up.nodes_added >= 1);
+        assert!(up.cost >= up.cost_bound && up.cost_bound > 0);
+        assert_eq!(state.pending_pods(), Vec::<PodId>::new());
+        assert!(report.improved, "the joined node placed the stuck pod");
+        state.check_invariants().unwrap();
+        assert!(state
+            .events
+            .all()
+            .iter()
+            .any(|e| matches!(e, Event::NodeJoined { .. })));
+    }
+
+    #[test]
+    fn scale_up_reference_is_snapshotted_not_ratcheted() {
+        use crate::autoscaler::AutoscaleConfig;
+        // First scale-up joins a `large` (1500m at reference 1000m). A
+        // later scale-up must size its candidates from the SAME
+        // reference — deriving from the live fleet would make the next
+        // large 2250m at the same cost (geometric ratchet).
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(1000, 1000), Priority(0)),
+            Pod::new(1, "stuck-1", Resources::new(800, 800), Priority(0)),
+        ];
+        let mut state =
+            ClusterState::new(identical_nodes(1, Resources::new(1000, 1000)), pods);
+        state.bind(PodId(0), crate::cluster::NodeId(0)).unwrap();
+        let cfg = OptimizerConfig::with_timeout(5.0).with_autoscale(AutoscaleConfig {
+            provision_timeout: std::time::Duration::from_secs(5),
+            ..AutoscaleConfig::default()
+        });
+        let mut osched = OptimizingScheduler::new(0, cfg);
+        assert!(osched.run(&mut state).autoscale.expect("first scale-up").applied);
+        assert_eq!(
+            state.nodes().last().unwrap().capacity,
+            Resources::new(1500, 1500),
+            "800m pod needs the large pool at reference 1000m"
+        );
+
+        // Second stuck pod: 800m fits neither the full original node nor
+        // the joined large's 700m residual, even re-packed.
+        state.add_pod(Pod::new(0, "stuck-2", Resources::new(800, 800), Priority(0)));
+        let up2 = osched.run(&mut state).autoscale.expect("second scale-up");
+        assert!(up2.applied);
+        assert_eq!(
+            state.nodes().last().unwrap().capacity,
+            Resources::new(1500, 1500),
+            "reference snapshot: still 1500m, not 2250m"
+        );
+        state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn provisioning_failures_are_memoized_for_unchanged_clusters() {
+        use crate::autoscaler::AutoscaleConfig;
+        // A pod no pool can host: proven infeasible. Re-running on the
+        // unchanged cluster must replay the memoized outcome instead of
+        // re-solving the provisioning model.
+        let pods = vec![Pod::new(0, "xxl", Resources::new(99_999, 99_999), Priority(0))];
+        let mut state =
+            ClusterState::new(identical_nodes(1, Resources::new(1000, 1000)), pods);
+        let cfg = OptimizerConfig::with_timeout(5.0).with_autoscale(AutoscaleConfig {
+            provision_timeout: std::time::Duration::from_secs(5),
+            ..AutoscaleConfig::default()
+        });
+        let mut osched = OptimizingScheduler::new(0, cfg);
+        let first = osched.run(&mut state).autoscale.expect("outcome recorded");
+        assert!(first.proven_infeasible);
+        assert!(osched.provision_memo.is_some(), "failure memoized");
+
+        let second = osched.run(&mut state).autoscale.expect("replayed outcome");
+        assert!(second.proven_infeasible);
+        assert_eq!(second.per_pool, first.per_pool);
+        assert!(osched.provision_memo.is_some(), "memo survives the replay");
+        assert_eq!(state.nodes().len(), 1, "fleet untouched throughout");
+    }
+
+    #[test]
+    fn autoscale_stays_idle_without_certified_pending() {
+        use crate::autoscaler::AutoscaleConfig;
+        let mut state = ClusterState::new(
+            identical_nodes(2, Resources::new(4000, 4096)),
+            figure1_pods(),
+        );
+        let cfg = OptimizerConfig::with_timeout(5.0).with_autoscale(AutoscaleConfig::default());
+        let mut osched = OptimizingScheduler::new(0, cfg);
+        let report = osched.run(&mut state);
+        // the re-pack places everything; nothing is certified-stuck
+        assert_eq!(report.placed_after, vec![3]);
+        assert!(report.autoscale.is_none(), "no certificate, no scale-up");
+        assert_eq!(state.nodes().len(), 2, "fleet untouched");
     }
 
     #[test]

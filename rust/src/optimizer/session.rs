@@ -332,6 +332,15 @@ fn fingerprint_config(cfg: &OptimizerConfig) -> u64 {
     for f in cfg.modules.fingerprints() {
         h.write_u64(f);
     }
+    // Autoscale policy does not change what `optimize` returns for a
+    // fixed state, but it is hashed anyway: conservatively invalidating
+    // on any knob change is cheaper to reason about than carving out
+    // exemptions field by field.
+    h.tag(b'A');
+    match &cfg.autoscale {
+        None => h.tag(0),
+        Some(a) => h.tag(1).write_u64(a.fingerprint()),
+    };
     h.finish()
 }
 

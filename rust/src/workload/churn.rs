@@ -12,6 +12,7 @@
 //! yields the identical `ops` vector, which is what makes timeline
 //! replay (and the byte-identical event-log property) possible.
 
+use crate::autoscaler::NodePool;
 use crate::cluster::{Node, Priority, ReplicaSet, Resources};
 use crate::util::rng::Rng;
 
@@ -72,8 +73,14 @@ pub enum TraceOp {
     /// Drain node `node` (cordon + evict) — the trace generator only
     /// targets nodes it believes are still ready.
     Drain { node: u32 },
-    /// Join a fresh identical node.
-    Join { capacity: Resources },
+    /// Join a fresh node. `pool` carries the node-pool decorations
+    /// (labels, taints, extended capacities) on heterogeneous traces;
+    /// `None` joins a plain node of `capacity` — the paper's identical
+    /// fleet, byte-identical to the pre-pool trace format.
+    Join {
+        capacity: Resources,
+        pool: Option<NodePool>,
+    },
 }
 
 /// A complete churn trace: initial nodes plus the timed operation list
@@ -82,8 +89,13 @@ pub enum TraceOp {
 pub struct ChurnTrace {
     pub params: ChurnParams,
     pub seed: u64,
-    /// Worker nodes at t = 0 (identical, from the paper's generator).
+    /// Worker nodes at t = 0 (identical from the paper's generator, or
+    /// a heterogeneous pool mix).
     pub nodes: Vec<Node>,
+    /// The "standard node" capacity pool scales derive from (see
+    /// [`Instance::generate_pooled`]); `nodes[0].capacity` on identical
+    /// fleets.
+    pub reference_capacity: Resources,
     /// Highest priority value in the trace (`tiers - 1`).
     pub p_max: u32,
     pub ops: Vec<(u64, TraceOp)>,
@@ -123,11 +135,16 @@ impl ChurnTrace {
 /// deploys; joined nodes arrive undecorated (a fresh node has no taints
 /// or device plugins yet). [`ConstraintProfile::None`] — the default —
 /// consumes no extra randomness, so existing traces replay bit-for-bit.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ChurnTraceGenerator {
     pub params: ChurnParams,
     pub seed: u64,
     pub profile: ConstraintProfile,
+    /// Heterogeneous node-pool mix: the initial fleet cycles it (see
+    /// [`Instance::generate_pooled`]) and joined nodes continue the
+    /// cycle. Empty = the paper's identical fleet; pools draw no
+    /// randomness, so non-pooled traces replay bit-for-bit.
+    pub pools: Vec<NodePool>,
 }
 
 impl ChurnTraceGenerator {
@@ -136,6 +153,7 @@ impl ChurnTraceGenerator {
             params,
             seed,
             profile: ConstraintProfile::None,
+            pools: Vec::new(),
         }
     }
 
@@ -145,13 +163,20 @@ impl ChurnTraceGenerator {
         self
     }
 
+    /// Select the heterogeneous node-pool mix for this trace.
+    pub fn with_pools(mut self, pools: Vec<NodePool>) -> Self {
+        self.pools = pools;
+        self
+    }
+
     pub fn generate(&self) -> ChurnTrace {
         let params = self.params;
         let mut rng = Rng::new(self.seed);
 
         // Initial cluster + workload from the paper's generator, deployed
         // as t = 0 operations so every pod flows through the same path.
-        let inst = Instance::generate_constrained(params.base, rng.next_u64(), self.profile);
+        let inst =
+            Instance::generate_pooled(params.base, rng.next_u64(), self.profile, &self.pools);
         let mut ops: Vec<(u64, TraceOp)> = Vec::new();
         for rs in &inst.replicasets {
             let lifetimes = sample_lifetimes(&mut rng, rs.replicas, params.mean_lifetime_ms);
@@ -183,14 +208,18 @@ impl ChurnTraceGenerator {
                 let node = ready.swap_remove(pick);
                 ops.push((t, TraceOp::Drain { node }));
             } else if roll < params.drain_chance + params.join_chance {
+                // Joined nodes continue the pool cycle the initial fleet
+                // started (node ordinal mod mix length); identical
+                // fleets join a clone of node 0, as before.
+                let (capacity, pool) = if self.pools.is_empty() {
+                    (inst.nodes[0].capacity, None)
+                } else {
+                    let p = &self.pools[next_node as usize % self.pools.len()];
+                    (p.capacity_for(inst.reference_capacity), Some(p.clone()))
+                };
                 ready.push(next_node);
                 next_node += 1;
-                ops.push((
-                    t,
-                    TraceOp::Join {
-                        capacity: inst.nodes[0].capacity,
-                    },
-                ));
+                ops.push((t, TraceOp::Join { capacity, pool }));
             } else if roll < params.drain_chance + params.join_chance + params.scale_chance
                 && !live_rs.is_empty()
             {
@@ -239,6 +268,7 @@ impl ChurnTraceGenerator {
             params,
             seed: self.seed,
             nodes: inst.nodes,
+            reference_capacity: inst.reference_capacity,
             p_max: params.base.p_max(),
             ops,
         }
@@ -326,6 +356,43 @@ mod tests {
                     assert_eq!(lifetimes_ms.len(), (*delta).max(0) as usize);
                 }
                 _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_traces_cycle_the_mix_through_joins() {
+        let pools = NodePool::parse_mix("small,large").unwrap();
+        // High join chance so the trace reliably joins nodes.
+        let mut p = params();
+        p.join_chance = 0.5;
+        p.drain_chance = 0.0;
+        let t = ChurnTraceGenerator::new(p, 31)
+            .with_pools(pools.clone())
+            .generate();
+        // initial fleet is heterogeneous
+        assert_ne!(t.nodes[0].capacity, t.nodes[1].capacity);
+        // joins carry pool decorations and continue the ordinal cycle
+        let joins: Vec<(&Resources, &NodePool)> = t
+            .ops
+            .iter()
+            .filter_map(|(_, op)| match op {
+                TraceOp::Join { capacity, pool } => Some((capacity, pool.as_ref().unwrap())),
+                _ => None,
+            })
+            .collect();
+        assert!(!joins.is_empty(), "join chance 0.5 must join nodes");
+        let mut ord = t.nodes.len();
+        for (capacity, pool) in joins {
+            assert_eq!(pool.name, pools[ord % pools.len()].name);
+            assert_eq!(*capacity, pool.capacity_for(t.reference_capacity));
+            ord += 1;
+        }
+        // and an unpooled trace still joins undecorated nodes
+        let plain = ChurnTraceGenerator::new(p, 31).generate();
+        for (_, op) in &plain.ops {
+            if let TraceOp::Join { pool, .. } = op {
+                assert!(pool.is_none());
             }
         }
     }

@@ -9,6 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::autoscaler::NodePool;
 use crate::cluster::{identical_nodes, Pod, Priority, ReplicaSet, Resources};
 use crate::util::json::{parse, Json};
 
@@ -18,8 +19,21 @@ use super::scenarios::ConstraintProfile;
 /// Serialize one instance. Constraint decorations are recorded by
 /// *profile name* — the generator is deterministic per `(params, seed,
 /// profile)`, so the loader re-derives them exactly (see
-/// [`instance_from_json`]).
+/// [`instance_from_json`]). Node pools are recorded by preset name the
+/// same way, so only preset pools round-trip: a custom pool would
+/// either fail to load (unknown name) or — worse — silently reload as
+/// the stock preset sharing its name, regenerating a *different* fleet.
+/// Serialization therefore refuses (panics on) any pool that is not
+/// byte-identical to its preset.
 pub fn instance_to_json(inst: &Instance) -> Json {
+    for p in &inst.pools {
+        assert!(
+            NodePool::parse(&p.name).as_ref() == Some(p),
+            "only preset node pools round-trip through datasets; pool {:?} is custom \
+             (or a modified preset) and would not reload identically",
+            p.name
+        );
+    }
     let mut j = Json::obj();
     // `seed` (numeric) is kept for inspection; `seed_hex` is the
     // authoritative lossless form (JSON numbers are f64 — a full 64-bit
@@ -28,6 +42,7 @@ pub fn instance_to_json(inst: &Instance) -> Json {
     j.set("seed", inst.seed)
         .set("seed_hex", format!("{:016x}", inst.seed))
         .set("constraints", inst.profile.label())
+        .set("node_pools", NodePool::mix_spec(&inst.pools))
         .set("nodes", inst.params.nodes)
         .set("pods_per_node", inst.params.pods_per_node)
         .set("priority_tiers", inst.params.priority_tiers)
@@ -81,8 +96,17 @@ pub fn instance_from_json(j: &Json) -> Result<Instance> {
             .with_context(|| format!("bad seed_hex {h:?}"))?,
         None => get_i("seed")? as u64,
     };
-    if profile != ConstraintProfile::None {
-        return Ok(Instance::generate_constrained(params, seed, profile));
+    // Pool mixes are recorded by preset name and re-derived through the
+    // deterministic generator, like constraint profiles (only preset
+    // pools round-trip through datasets; missing field = identical
+    // fleet, an older dataset).
+    let pools = match j.get("node_pools").and_then(Json::as_str) {
+        None | Some("") => Vec::new(),
+        Some(s) => NodePool::parse_mix(s)
+            .with_context(|| format!("unknown node_pools mix {s:?}"))?,
+    };
+    if profile != ConstraintProfile::None || !pools.is_empty() {
+        return Ok(Instance::generate_pooled(params, seed, profile, &pools));
     }
     let cap = Resources::new(get_i("node_cpu")?, get_i("node_ram")?);
     let nodes = identical_nodes(params.nodes, cap);
@@ -117,6 +141,8 @@ pub fn instance_from_json(j: &Json) -> Result<Instance> {
         params,
         seed,
         profile,
+        pools,
+        reference_capacity: cap,
         replicasets,
         pods,
         nodes,
@@ -195,6 +221,48 @@ mod tests {
         for (a, b) in inst.nodes.iter().zip(&back.nodes) {
             assert_eq!(a.taints, b.taints);
             assert_eq!(a.extended, b.extended);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "only preset node pools round-trip")]
+    fn custom_pools_are_rejected_at_save_time() {
+        // A modified preset would silently reload as the stock one
+        // (different costs => different fleet); serialization refuses.
+        let params = GenParams {
+            nodes: 2,
+            pods_per_node: 2,
+            priority_tiers: 1,
+            usage: 1.0,
+        };
+        let mut pricier = NodePool::small();
+        pricier.cost += 1;
+        let inst = Instance::generate_pooled(params, 5, ConstraintProfile::None, &[pricier]);
+        instance_to_json(&inst);
+    }
+
+    #[test]
+    fn pooled_roundtrip_rederives_the_heterogeneous_fleet() {
+        let params = GenParams {
+            nodes: 4,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 0.95,
+        };
+        let pools = NodePool::parse_mix("small,large,gpu").unwrap();
+        let inst = Instance::generate_pooled(params, 99, ConstraintProfile::None, &pools);
+        let back = instance_from_json(&instance_to_json(&inst)).unwrap();
+        assert_eq!(back.pools, inst.pools);
+        assert_eq!(back.reference_capacity, inst.reference_capacity);
+        assert_eq!(back.nodes.len(), inst.nodes.len());
+        for (a, b) in inst.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.capacity, b.capacity);
+            assert_eq!(a.extended, b.extended);
+            assert_eq!(a.name, b.name);
+        }
+        for (a, b) in inst.pods.iter().zip(&back.pods) {
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.priority, b.priority);
         }
     }
 

@@ -1,7 +1,12 @@
 //! The paper's random instance generator, extended with constraint-rich
-//! scenario families (see [`ConstraintProfile`]).
+//! scenario families (see [`ConstraintProfile`]) and heterogeneous
+//! node-pool fleets (see [`NodePool`]) — the paper assumes identical
+//! node capacities "to reflect typical cloud deployments", but real
+//! clusters mix instance types, and the autoscaler benches need fleets
+//! that do too.
 
-use crate::cluster::{identical_nodes, Node, Pod, Priority, ReplicaSet, Resources};
+use crate::autoscaler::NodePool;
+use crate::cluster::{identical_nodes, Node, NodeId, Pod, Priority, ReplicaSet, Resources};
 use crate::simulator::KwokSimulator;
 use crate::util::rng::Rng;
 
@@ -49,6 +54,13 @@ pub struct Instance {
     pub seed: u64,
     /// Constraint scenario family this instance was decorated with.
     pub profile: ConstraintProfile,
+    /// Node-pool mix the fleet was drawn from (empty = the paper's
+    /// identical nodes).
+    pub pools: Vec<NodePool>,
+    /// The "standard node" capacity pool scales apply to — equals
+    /// `nodes[0].capacity` on identical fleets; heterogeneous fleets and
+    /// churn joins derive their per-pool capacities from it.
+    pub reference_capacity: Resources,
     pub replicasets: Vec<ReplicaSet>,
     pub pods: Vec<Pod>,
     pub nodes: Vec<Node>,
@@ -76,6 +88,23 @@ impl Instance {
         seed: u64,
         profile: ConstraintProfile,
     ) -> Instance {
+        Instance::generate_pooled(params, seed, profile, &[])
+    }
+
+    /// Like [`Instance::generate_constrained`], additionally drawing the
+    /// fleet from a heterogeneous [`NodePool`] mix: node `i` takes pool
+    /// `i mod pools.len()`, and the reference capacity is chosen so the
+    /// *aggregate* fleet capacity still meets the `usage` ratio (the
+    /// paper's derivation, generalised to non-uniform scales). The pod
+    /// workload and all profile decorations are untouched, pools draw no
+    /// randomness, and an empty mix is byte-identical to the paper's
+    /// identical-capacity generator.
+    pub fn generate_pooled(
+        params: GenParams,
+        seed: u64,
+        profile: ConstraintProfile,
+        pools: &[NodePool],
+    ) -> Instance {
         let mut rng = Rng::new(seed);
         let budget = params.pod_count();
         let mut replicasets = Vec::new();
@@ -95,19 +124,43 @@ impl Instance {
             rs_id += 1;
         }
 
-        // Node capacity from total demand and the usage ratio.
+        // Reference capacity from total demand and the usage ratio: the
+        // fleet's total scale (in node-equivalents) replaces the plain
+        // node count when pools are in play.
         let total: Resources = pods.iter().map(|p| p.request).sum();
-        let cap = Resources::new(
-            ((total.cpu as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
-            ((total.ram as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
-        );
-        let mut nodes = identical_nodes(params.nodes, cap);
+        let (cap, mut nodes) = if pools.is_empty() {
+            let cap = Resources::new(
+                ((total.cpu as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
+                ((total.ram as f64) / (params.usage * params.nodes as f64)).ceil() as i64,
+            );
+            (cap, identical_nodes(params.nodes, cap))
+        } else {
+            let scale_sum: i64 = (0..params.nodes)
+                .map(|i| pools[i % pools.len()].scale_milli)
+                .sum();
+            let denom = params.usage * (scale_sum as f64 / 1000.0);
+            let cap = Resources::new(
+                ((total.cpu as f64) / denom).ceil() as i64,
+                ((total.ram as f64) / denom).ceil() as i64,
+            );
+            let nodes = (0..params.nodes)
+                .map(|i| {
+                    let mut n = pools[i % pools.len()].node_template(cap);
+                    n.id = NodeId(i as u32);
+                    n.name = format!("node-{i:03}");
+                    n
+                })
+                .collect();
+            (cap, nodes)
+        };
         profile.decorate_nodes(&mut nodes, &mut rng);
 
         Instance {
             params,
             seed,
             profile,
+            pools: pools.to_vec(),
+            reference_capacity: cap,
             replicasets,
             pods,
             nodes,
@@ -145,13 +198,27 @@ impl Instance {
         max_attempts: usize,
         profile: ConstraintProfile,
     ) -> Vec<Instance> {
+        Instance::generate_challenging_pooled(params, count, base_seed, max_attempts, profile, &[])
+    }
+
+    /// [`Instance::generate_challenging_constrained`] over a
+    /// heterogeneous node-pool fleet: kept instances are those the
+    /// default scheduler fails to fully place *on that mixed fleet*.
+    pub fn generate_challenging_pooled(
+        params: GenParams,
+        count: usize,
+        base_seed: u64,
+        max_attempts: usize,
+        profile: ConstraintProfile,
+        pools: &[NodePool],
+    ) -> Vec<Instance> {
         let mut out = Vec::with_capacity(count);
         let mut seed_rng = Rng::new(base_seed);
         for _ in 0..max_attempts {
             if out.len() >= count {
                 break;
             }
-            let inst = Instance::generate_constrained(params, seed_rng.next_u64(), profile);
+            let inst = Instance::generate_pooled(params, seed_rng.next_u64(), profile, pools);
             let mut sim = KwokSimulator::new(params.p_max());
             let (_, res) = sim.run(inst.nodes.clone(), inst.pods.clone());
             if !res.all_placed {
@@ -167,10 +234,11 @@ impl Instance {
     }
 
     /// Actual demand/capacity ratio achieved (≈ params.usage, slightly
-    /// below due to capacity rounding up).
+    /// below due to capacity rounding up). Sums per-node capacities, so
+    /// it holds for heterogeneous pool fleets too.
     pub fn actual_usage(&self) -> (f64, f64) {
         let d = self.total_demand();
-        let c = self.nodes[0].capacity.scaled(self.nodes.len() as i64);
+        let c: Resources = self.nodes.iter().map(|n| n.capacity).sum();
         (d.cpu as f64 / c.cpu as f64, d.ram as f64 / c.ram as f64)
     }
 }
@@ -287,6 +355,58 @@ mod tests {
             assert_eq!(a.anti_affinity, b.anti_affinity);
             assert_eq!(a.spread_max_skew, b.spread_max_skew);
             assert_eq!(a.extended, b.extended);
+        }
+    }
+
+    #[test]
+    fn pooled_fleet_is_heterogeneous_and_keeps_the_workload() {
+        let pools = NodePool::parse_mix("small,large").unwrap();
+        let plain = Instance::generate(params(), 17);
+        let pooled = Instance::generate_pooled(params(), 17, ConstraintProfile::None, &pools);
+        // identical workload: pools never touch the pod stream
+        assert_eq!(plain.pods.len(), pooled.pods.len());
+        for (a, b) in plain.pods.iter().zip(&pooled.pods) {
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.priority, b.priority);
+        }
+        // fleet alternates small/large around the reference capacity
+        let reference = pooled.reference_capacity;
+        assert_eq!(pooled.nodes.len(), 4);
+        assert_eq!(pooled.nodes[0].capacity, NodePool::small().capacity_for(reference));
+        assert_eq!(pooled.nodes[1].capacity, NodePool::large().capacity_for(reference));
+        assert_ne!(pooled.nodes[0].capacity, pooled.nodes[1].capacity);
+        // names stay canonical (sorted, dense) so joins keep working
+        for (i, n) in pooled.nodes.iter().enumerate() {
+            assert_eq!(n.name, format!("node-{i:03}"));
+        }
+        // aggregate capacity still meets the usage target (rounded up)
+        let (cpu, ram) = pooled.actual_usage();
+        assert!(cpu <= 1.0 + 1e-9 && cpu > 0.9, "cpu usage {cpu}");
+        assert!(ram <= 1.0 + 1e-9 && ram > 0.9, "ram usage {ram}");
+        // deterministic per (seed, mix)
+        let again = Instance::generate_pooled(params(), 17, ConstraintProfile::None, &pools);
+        assert_eq!(
+            format!("{:?}", pooled.nodes),
+            format!("{:?}", again.nodes)
+        );
+    }
+
+    #[test]
+    fn gpu_pool_decorates_extended_capacity() {
+        let pools = NodePool::parse_mix("small,gpu").unwrap();
+        let inst = Instance::generate_pooled(params(), 3, ConstraintProfile::None, &pools);
+        assert_eq!(inst.nodes[1].extended_capacity("gpu"), 4);
+        assert_eq!(inst.nodes[0].extended_capacity("gpu"), 0);
+    }
+
+    #[test]
+    fn empty_pool_mix_is_byte_identical_to_the_paper_generator() {
+        let plain = Instance::generate(params(), 23);
+        let pooled = Instance::generate_pooled(params(), 23, ConstraintProfile::None, &[]);
+        assert_eq!(format!("{:?}", plain.nodes), format!("{:?}", pooled.nodes));
+        assert_eq!(plain.reference_capacity, plain.nodes[0].capacity);
+        for (a, b) in plain.pods.iter().zip(&pooled.pods) {
+            assert_eq!(a.request, b.request);
         }
     }
 

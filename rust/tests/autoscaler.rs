@@ -1,0 +1,271 @@
+//! Autoscaler integration tests: the acceptance scenario (certified
+//! scale-up, deterministic replay, provable consolidation) plus the
+//! PR 3/PR 4 thread-determinism properties extended to autoscaler runs.
+//!
+//! Same caveat as every determinism test in this repo: identity is
+//! guaranteed when every solve completes inside its window, so cases
+//! are tiny and deadlines generous.
+
+use std::time::Duration;
+
+use kube_packd::autoscaler::{AutoscaleConfig, AutoscaleStats, NodePool};
+use kube_packd::cluster::{identical_nodes, Priority, ReplicaSet, Resources};
+use kube_packd::lifecycle::{run_churn, ChurnConfig, ChurnResult, Policy, SweepConfig};
+use kube_packd::optimizer::OptimizerConfig;
+use kube_packd::portfolio::PortfolioConfig;
+use kube_packd::util::prop::check;
+use kube_packd::workload::churn::{ChurnParams, ChurnTrace, TraceOp};
+use kube_packd::workload::{ChurnTraceGenerator, GenParams};
+
+/// The acceptance trace: a cluster the fallback *proves* full at t=100,
+/// then frees capacity at t=2000 so consolidation can prove a joined
+/// node drainable at the t=3000 sweep tick.
+///
+/// * t=0: three deploys fill both 1000-capacity nodes exactly
+///   (600+400 on one, 1000 on the other, after the fallback re-pack).
+/// * t=100: two 400-pods arrive — certifiably unplaceable; the min-cost
+///   plan is 2×small (cost 10), beating 1×large (cost 16).
+/// * t=2000: the 600-pod completes, freeing room on an original node.
+/// * t=3000: consolidation drains one joined small (its pod re-packs
+///   into the freed capacity, provably lossless) and removes it.
+fn acceptance_trace() -> ChurnTrace {
+    let base = GenParams {
+        nodes: 2,
+        pods_per_node: 2,
+        priority_tiers: 1,
+        usage: 1.0,
+    };
+    let params = ChurnParams {
+        horizon_ms: 4_000,
+        ..ChurnParams::for_cluster(base)
+    };
+    let deploy = |id: u32, replicas: u32, cpu: i64, lifetimes: Vec<u64>| TraceOp::Deploy {
+        rs: ReplicaSet::new(id, format!("rs-{id:03}"), replicas, Resources::new(cpu, cpu), Priority(0)),
+        lifetimes_ms: lifetimes,
+    };
+    ChurnTrace {
+        params,
+        seed: 0,
+        nodes: identical_nodes(2, Resources::new(1000, 1000)),
+        reference_capacity: Resources::new(1000, 1000),
+        p_max: 0,
+        ops: vec![
+            (0, deploy(0, 1, 600, vec![2_000])),
+            (0, deploy(1, 1, 400, vec![999_999])),
+            (0, deploy(2, 1, 1000, vec![999_999])),
+            (100, deploy(3, 2, 400, vec![999_999, 999_999])),
+        ],
+    }
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        pools: NodePool::standard_mix(),
+        provision_timeout: Duration::from_secs(5),
+        max_removals: 2,
+        ..AutoscaleConfig::default()
+    }
+}
+
+fn churn_cfg_every(autoscale: bool, threads: usize, sweep_every_ms: u64) -> ChurnConfig {
+    ChurnConfig {
+        policy: Policy::FallbackSweep,
+        sweep_every_ms,
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(5.0).with_threads(threads),
+            eviction_budget: 8,
+        },
+        fallback_timeout: Duration::from_secs(5),
+        fallback_portfolio: PortfolioConfig::with_threads(threads),
+        incremental: false,
+        autoscale: autoscale.then(autoscale_cfg),
+    }
+}
+
+/// The acceptance cadence: exactly one sweep tick (t=3000) inside the
+/// 4000ms horizon.
+fn churn_cfg(autoscale: bool, threads: usize) -> ChurnConfig {
+    churn_cfg_every(autoscale, threads, 3_000)
+}
+
+/// The ISSUE acceptance criterion, end to end: certified scale-up,
+/// deterministic replay at 1 and 8 threads, and a provably-removable
+/// node drained within the eviction budget.
+#[test]
+fn acceptance_certified_scale_up_then_provable_consolidation() {
+    let trace = acceptance_trace();
+
+    // Without the autoscaler the two arrivals stay stuck forever.
+    let off = run_churn(&trace, &churn_cfg(false, 1));
+    assert_eq!(off.final_pending, 2, "the arrivals are provably stuck");
+    assert_eq!(off.final_ready_nodes, 2);
+    assert_eq!(off.autoscale, AutoscaleStats::default());
+
+    let mut digests = Vec::new();
+    for threads in [1usize, 8] {
+        let on = run_churn(&trace, &churn_cfg(true, threads));
+
+        // Scale-up: one decision, certified min-cost (2×small = 10
+        // beats 1×large = 16), both pods placed.
+        assert_eq!(on.autoscale.scale_ups, 1, "threads={threads}");
+        assert_eq!(on.autoscale.certified_scale_ups, 1, "plan carries both proofs");
+        assert_eq!(on.autoscale.nodes_added, 2);
+        assert_eq!(on.autoscale.cost_added, 10, "min-cost: 2x small");
+        assert_eq!(on.final_pending, 0, "scale-up placed the stuck pods");
+        assert!(on
+            .log
+            .lines()
+            .iter()
+            .any(|l| l.contains("scale-up +2 (small x2) cost=10 [certified] pods=2")));
+
+        // Consolidation: after the 600-pod completes, exactly one
+        // joined node is provably drainable (its pod re-packs into the
+        // freed capacity); the other joined node must stay.
+        assert_eq!(on.autoscale.scale_downs, 1, "threads={threads}");
+        assert_eq!(on.autoscale.nodes_removed, 1);
+        assert_eq!(on.autoscale.drained_pods, 1, "a resident was drained, not an empty node");
+        assert!(on.log.lines().iter().any(|l| l.contains("scale-down removed=1")));
+        assert_eq!(on.final_ready_nodes, 3, "2 original + 2 joined - 1 consolidated");
+
+        // Elastic fleet serves what the static one provably cannot.
+        assert!(on.served_total() > off.served_total());
+        // Whole-trace eviction accounting still partitions.
+        assert_eq!(
+            on.evictions,
+            on.evictions_preemption + on.evictions_sweep + on.evictions_drain
+        );
+        digests.push((on.log.digest(), on.autoscale.clone()));
+    }
+    // Identical decisions and byte-identical logs at 1 and 8 threads.
+    assert_eq!(digests[0].0, digests[1].0, "thread-count must not leak into the log");
+    assert_eq!(digests[0].1, digests[1].1, "scale decisions must be thread-independent");
+
+    // And replay: the same config reproduces the same digest.
+    let again = run_churn(&trace, &churn_cfg(true, 1));
+    assert_eq!(again.log.digest(), digests[0].0);
+}
+
+/// Autoscale **off** is byte-identical across repeated runs and across
+/// thread counts on generated traces — the historical churn contract,
+/// re-pinned now that the autoscaler exists.
+#[test]
+fn prop_autoscale_off_replays_byte_identical_across_threads() {
+    check(
+        "autoscale_off_thread_parity",
+        0xA5C4,
+        4,
+        |rng| {
+            let params = ChurnParams {
+                horizon_ms: 2_500,
+                mean_arrival_ms: 700,
+                mean_lifetime_ms: 1_500,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: rng.range_usize(2, 3),
+                    pods_per_node: 2,
+                    priority_tiers: rng.range_usize(1, 2) as u32,
+                    usage: 1.0 + rng.f64() * 0.1,
+                })
+            };
+            ChurnTraceGenerator::new(params, rng.next_u64()).generate()
+        },
+        |trace| {
+            // Sweep ticks at 1000/2000 land inside the 2500ms horizon,
+            // so the off-runs exercise the sweep path too.
+            let base = run_churn(trace, &churn_cfg_every(false, 1, 1_000));
+            for threads in [1usize, 8] {
+                let r = run_churn(trace, &churn_cfg_every(false, threads, 1_000));
+                if r.log.digest() != base.log.digest() {
+                    return Err(format!("off-run digest diverged at threads={threads}"));
+                }
+                if r.autoscale != AutoscaleStats::default() {
+                    return Err("autoscale off recorded activity".to_string());
+                }
+                if r.served_per_priority != base.served_per_priority {
+                    return Err(format!("served vector diverged at threads={threads}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Autoscale **on**: scale decisions (and the whole log) are identical
+/// at 1 and 8 threads on generated overloaded traces.
+#[test]
+fn prop_autoscale_decisions_are_thread_independent() {
+    check(
+        "autoscale_on_thread_parity",
+        0xE1A5,
+        4,
+        |rng| {
+            let params = ChurnParams {
+                horizon_ms: 2_500,
+                mean_arrival_ms: 800,
+                mean_lifetime_ms: 1_200,
+                // No node churn from the trace itself: the autoscaler is
+                // the only fleet mutator, which keeps the property sharp.
+                drain_chance: 0.0,
+                join_chance: 0.0,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 2,
+                    pods_per_node: 2,
+                    priority_tiers: rng.range_usize(1, 2) as u32,
+                    // Overloaded: certified unplaceability is likely.
+                    usage: 1.1 + rng.f64() * 0.2,
+                })
+            };
+            ChurnTraceGenerator::new(params, rng.next_u64()).generate()
+        },
+        |trace| {
+            // Sweep ticks at 1000/2000 fire inside the horizon, so the
+            // property covers consolidation decisions, not just
+            // scale-ups.
+            let runs: Vec<ChurnResult> = [1usize, 8]
+                .iter()
+                .map(|&t| run_churn(trace, &churn_cfg_every(true, t, 1_000)))
+                .collect();
+            if runs[0].log.digest() != runs[1].log.digest() {
+                return Err("autoscale-on digest diverged between 1 and 8 threads".to_string());
+            }
+            if runs[0].autoscale != runs[1].autoscale {
+                return Err(format!(
+                    "scale decisions diverged: {:?} vs {:?}",
+                    runs[0].autoscale, runs[1].autoscale
+                ));
+            }
+            if runs[0].final_ready_nodes != runs[1].final_ready_nodes {
+                return Err("final fleet size diverged".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A pooled (heterogeneous) trace with autoscaling replays
+/// deterministically too — pools add no hidden randomness.
+#[test]
+fn pooled_autoscale_trace_replays_deterministically() {
+    let params = ChurnParams {
+        horizon_ms: 2_500,
+        mean_arrival_ms: 700,
+        mean_lifetime_ms: 1_500,
+        ..ChurnParams::for_cluster(GenParams {
+            nodes: 3,
+            pods_per_node: 2,
+            priority_tiers: 1,
+            usage: 1.1,
+        })
+    };
+    let trace = ChurnTraceGenerator::new(params, 77)
+        .with_pools(NodePool::parse_mix("small,large").unwrap())
+        .generate();
+    assert_ne!(
+        trace.nodes[0].capacity, trace.nodes[1].capacity,
+        "the initial fleet really is heterogeneous"
+    );
+    let a = run_churn(&trace, &churn_cfg_every(true, 1, 1_000));
+    let b = run_churn(&trace, &churn_cfg_every(true, 1, 1_000));
+    assert_eq!(a.log.digest(), b.log.digest());
+    assert_eq!(a.autoscale, b.autoscale);
+    assert_eq!(a.final_ready_nodes, b.final_ready_nodes);
+}

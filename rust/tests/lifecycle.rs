@@ -39,6 +39,7 @@ fn solver_cfg(policy: Policy) -> ChurnConfig {
         fallback_timeout: std::time::Duration::from_secs(5),
         fallback_portfolio: PortfolioConfig::default(),
         incremental: false,
+        autoscale: None,
     }
 }
 
