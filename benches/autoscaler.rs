@@ -15,9 +15,9 @@ use kube_packd::lifecycle::{run_churn, ChurnConfig, ChurnResult, Policy, SweepCo
 use kube_packd::optimizer::{constraints::ModuleRegistry, OptimizerConfig};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::solver::SolverConfig;
+use kube_packd::telemetry::Deadline;
 use kube_packd::util::bench::{black_box, Bencher};
 use kube_packd::util::json::Json;
-use kube_packd::util::timer::Deadline;
 use kube_packd::workload::{ChurnParams, ChurnTraceGenerator, GenParams, Instance};
 
 fn churn_cfg(autoscale: bool, threads: usize) -> ChurnConfig {

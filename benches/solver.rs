@@ -5,9 +5,9 @@ use kube_packd::cluster::ClusterState;
 use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
 use kube_packd::simulator::KwokSimulator;
 use kube_packd::solver::{solve_max, LinearExpr, Model, SolverConfig};
+use kube_packd::telemetry::Deadline;
 use kube_packd::util::bench::{black_box, Bencher};
 use kube_packd::util::rng::Rng;
-use kube_packd::util::timer::Deadline;
 use kube_packd::workload::{GenParams, Instance};
 
 /// Build a pure packing model (pods × nodes) from a generated instance.

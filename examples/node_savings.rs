@@ -22,7 +22,7 @@ use kube_packd::optimizer::constraints::ModuleRegistry;
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::simulator::KwokSimulator;
 use kube_packd::solver::SolverConfig;
-use kube_packd::util::timer::Deadline;
+use kube_packd::telemetry::Deadline;
 use kube_packd::workload::{GenParams, Instance};
 
 /// Smallest node count (identical nodes of `cap`) at which the default

@@ -28,9 +28,10 @@
 //! whenever the solves complete in-window.
 
 use crate::cluster::{ClusterState, EvictCause, NodeId};
-use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+use crate::optimizer::algorithm::{optimize_traced, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
 use crate::optimizer::session::SolveSession;
+use crate::telemetry::Telemetry;
 
 use super::policy::AutoscaleConfig;
 
@@ -71,7 +72,10 @@ pub fn run_consolidation(
     cfg: &AutoscaleConfig,
     optimizer: &OptimizerConfig,
     mut session: Option<&mut SolveSession>,
+    tel: &Telemetry,
 ) -> ConsolidationPass {
+    let sp = tel.span("consolidate");
+    tel.add("autoscaler_consolidation_passes_total", "", 1);
     let mut pass = ConsolidationPass::default();
     let mut rejected: Vec<NodeId> = Vec::new();
 
@@ -124,9 +128,14 @@ pub fn run_consolidation(
         let mut trial = state.clone();
         state.events = log; // the live log goes straight back
         trial.drain(candidate);
-        let result = match session.as_deref_mut() {
-            Some(sess) => sess.solve(&trial, p_max, optimizer),
-            None => optimize(&trial, p_max, optimizer),
+        let result = {
+            let sp = tel.span("consolidate-trial");
+            sp.arg("node", candidate.0);
+            sp.arg("residents", victims.len());
+            match session.as_deref_mut() {
+                Some(sess) => sess.solve_traced(&trial, p_max, optimizer, tel),
+                None => optimize_traced(&trial, p_max, optimizer, None, tel),
+            }
         };
         let Some(res) = result else {
             pass.blocked += 1;
@@ -173,6 +182,12 @@ pub fn run_consolidation(
             }
         }
     }
+    sp.arg("considered", pass.considered);
+    sp.arg("removed", pass.removed.len());
+    if tel.enabled() {
+        tel.add("autoscaler_nodes_removed_total", "", pass.removed.len() as u64);
+        tel.add("autoscaler_consolidation_moves_total", "", pass.moves as u64);
+    }
     pass
 }
 
@@ -207,6 +222,7 @@ mod tests {
             &cfg(),
             &OptimizerConfig::with_timeout(5.0),
             None,
+            &Telemetry::off(),
         );
         assert_eq!(pass.removed.len(), 2, "two of three nodes drain away");
         assert_eq!(st.placed_per_priority(0), vec![2], "nothing lost");
@@ -244,6 +260,7 @@ mod tests {
             &cfg(),
             &OptimizerConfig::with_timeout(5.0),
             None,
+            &Telemetry::off(),
         );
         assert!(pass.removed.is_empty());
         assert!(pass.blocked >= 1);
@@ -272,6 +289,7 @@ mod tests {
             &tight,
             &OptimizerConfig::with_timeout(5.0),
             None,
+            &Telemetry::off(),
         );
         assert!(pass.removed.is_empty(), "budget 0 vetoes every drain");
         assert!(pass.vetoed_budget >= 1);
@@ -290,6 +308,7 @@ mod tests {
             &cfg(),
             &OptimizerConfig::with_timeout(2.0),
             None,
+            &Telemetry::off(),
         );
         assert_eq!(pass, ConsolidationPass::default());
     }
@@ -310,6 +329,7 @@ mod tests {
             &floor,
             &OptimizerConfig::with_timeout(2.0),
             None,
+            &Telemetry::off(),
         );
         assert_eq!(pass.removed.len(), 2, "stops at the floor");
         assert_eq!(
@@ -334,10 +354,10 @@ mod tests {
         };
         let opt = OptimizerConfig::with_timeout(5.0);
         let mut cold_st = build();
-        let cold = run_consolidation(&mut cold_st, 0, &cfg(), &opt, None);
+        let cold = run_consolidation(&mut cold_st, 0, &cfg(), &opt, None, &Telemetry::off());
         let mut warm_st = build();
         let mut session = SolveSession::new();
-        let warm = run_consolidation(&mut warm_st, 0, &cfg(), &opt, Some(&mut session));
+        let warm = run_consolidation(&mut warm_st, 0, &cfg(), &opt, Some(&mut session), &Telemetry::off());
         assert_eq!(cold.removed, warm.removed);
         assert_eq!(cold.moves, warm.moves);
         assert_eq!(cold_st.assignment(), warm_st.assignment());

@@ -34,9 +34,9 @@
 
 use crate::cluster::{ClusterState, Node, NodeId, PodId, Resources};
 use crate::optimizer::constraints::ModuleRegistry;
-use crate::portfolio::{solve_portfolio, PortfolioConfig};
+use crate::portfolio::{solve_portfolio_traced, PortfolioConfig};
 use crate::solver::{CmpOp, LinearExpr, Model, SolveStatus, SolverConfig, VarId};
-use crate::util::timer::Deadline;
+use crate::telemetry::{Deadline, Telemetry};
 
 use super::pools::NodePool;
 
@@ -198,7 +198,11 @@ pub fn plan_provisioning(
     solver: &SolverConfig,
     portfolio: &PortfolioConfig,
     modules: &ModuleRegistry,
+    tel: &Telemetry,
 ) -> ProvisionOutcome {
+    let sp = tel.span("provision");
+    sp.arg("pods", pods.len());
+    tel.add("autoscaler_provision_solves_total", "", 1);
     if pods.is_empty() {
         return ProvisionOutcome::Plan(ProvisionPlan {
             per_pool: pools.iter().map(|p| (p.name.clone(), 0)).collect(),
@@ -420,7 +424,11 @@ pub fn plan_provisioning(
     .normalized();
     let total_cost: i64 = (first_candidate..bins.len()).map(cost_of).sum();
 
-    let sol_a = solve_portfolio(&m, &obj_cost, deadline, solver, portfolio).solution;
+    let sol_a = {
+        let sp = tel.span("provision-cost");
+        sp.arg("bins", bins.len());
+        solve_portfolio_traced(&m, &obj_cost, deadline, solver, portfolio, None, tel).solution
+    };
     match sol_a.status {
         SolveStatus::Infeasible => return ProvisionOutcome::Infeasible,
         SolveStatus::Unknown => return ProvisionOutcome::Unknown,
@@ -442,7 +450,10 @@ pub fn plan_provisioning(
     );
     let obj_count =
         LinearExpr::of((first_candidate..bins.len()).map(|b| (z_of(b), 1))).normalized();
-    let sol_b = solve_portfolio(&m, &obj_count, deadline, solver, portfolio).solution;
+    let sol_b = {
+        let _sp = tel.span("provision-count");
+        solve_portfolio_traced(&m, &obj_count, deadline, solver, portfolio, None, tel).solution
+    };
     let (count_status, values) = if sol_b.status.has_solution() {
         (sol_b.status, sol_b.values)
     } else {
@@ -516,6 +527,7 @@ mod tests {
             &SolverConfig::default(),
             &PortfolioConfig::default(),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         )
     }
 
@@ -722,6 +734,7 @@ mod tests {
             &SolverConfig::default(),
             &PortfolioConfig::with_threads(1),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         ));
         let threaded = plan(plan_provisioning(
             &st,
@@ -733,6 +746,7 @@ mod tests {
             &SolverConfig::default(),
             &PortfolioConfig::with_threads(8),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         ));
         assert_eq!(base.per_pool, threaded.per_pool);
         assert_eq!(base.cost, threaded.cost);
@@ -759,6 +773,7 @@ mod tests {
             &SolverConfig::default(),
             &PortfolioConfig::default(),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         );
         assert!(matches!(out, ProvisionOutcome::Infeasible));
         // ... while a pod that fits existing spare capacity still plans.
@@ -776,6 +791,7 @@ mod tests {
             &SolverConfig::default(),
             &PortfolioConfig::default(),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         ));
         assert_eq!(p.node_count, 0);
         assert!(p.certified());

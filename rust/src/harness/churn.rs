@@ -6,7 +6,7 @@ use std::fmt::Write as _;
 use crate::lifecycle::{ChurnResult, Policy};
 use crate::workload::churn::ChurnTrace;
 
-use super::report::{md_header, md_row, section};
+use super::report::{md_table, section};
 
 fn vec_cell(v: &[usize]) -> String {
     format!(
@@ -41,58 +41,62 @@ pub fn churn_report(trace: &ChurnTrace, results: &[ChurnResult]) -> String {
         trace.p_max + 1
     );
 
-    out.push_str(&md_header(&[
-        "policy",
-        "served/tier",
-        "final placed",
-        "pending",
-        "completions",
-        "evictions (pre+swp+drn)",
-        "solver calls",
-        "sweeps",
-        "cache hits",
-        "autoscale",
-        "mean cpu",
-        "log digest",
-    ]));
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            // incremental-session reuse: full-state / per-solve /
+            // per-component replays + warm-start floors seeded ("-" when
+            // sessions are off or idle)
+            let hits = r.session_full_hits + r.solve_cache_hits + r.component_cache_hits;
+            let cache_cell = if hits + r.warm_starts == 0 {
+                "-".to_string()
+            } else {
+                format!(
+                    "{}/{}/{}+{}w",
+                    r.session_full_hits, r.solve_cache_hits, r.component_cache_hits, r.warm_starts
+                )
+            };
+            vec![
+                r.policy.label().to_string(),
+                vec_cell(&r.served_per_priority),
+                vec_cell(&r.final_placed),
+                r.final_pending.to_string(),
+                r.completions.to_string(),
+                // attribution split: elective sweep moves are a different
+                // operational cost than forced pre-emptions or drains
+                format!(
+                    "{} ({}+{}+{})",
+                    r.evictions, r.evictions_preemption, r.evictions_sweep, r.evictions_drain
+                ),
+                r.solver_invocations.to_string(),
+                format!("{}/{}", r.sweeps_applied, r.sweeps_run),
+                cache_cell,
+                // nodes joined / removed by the CP autoscaler and the cost
+                // of the provisioned fleet ("-" when autoscaling is off)
+                r.autoscale.cell(),
+                format!("{:.1}%", r.series.mean_cpu() * 100.0),
+                format!("{:016x}", r.log.digest()),
+            ]
+        })
+        .collect();
+    out.push_str(&md_table(
+        &[
+            "policy",
+            "served/tier",
+            "final placed",
+            "pending",
+            "completions",
+            "evictions (pre+swp+drn)",
+            "solver calls",
+            "sweeps",
+            "cache hits",
+            "autoscale",
+            "mean cpu",
+            "log digest",
+        ],
+        &rows,
+    ));
     out.push('\n');
-    for r in results {
-        // incremental-session reuse: full-state / per-solve /
-        // per-component replays + warm-start floors seeded ("-" when
-        // sessions are off or idle)
-        let hits = r.session_full_hits + r.solve_cache_hits + r.component_cache_hits;
-        let cache_cell = if hits + r.warm_starts == 0 {
-            "-".to_string()
-        } else {
-            format!(
-                "{}/{}/{}+{}w",
-                r.session_full_hits, r.solve_cache_hits, r.component_cache_hits, r.warm_starts
-            )
-        };
-        let row = md_row(&[
-            r.policy.label().to_string(),
-            vec_cell(&r.served_per_priority),
-            vec_cell(&r.final_placed),
-            r.final_pending.to_string(),
-            r.completions.to_string(),
-            // attribution split: elective sweep moves are a different
-            // operational cost than forced pre-emptions or drains
-            format!(
-                "{} ({}+{}+{})",
-                r.evictions, r.evictions_preemption, r.evictions_sweep, r.evictions_drain
-            ),
-            r.solver_invocations.to_string(),
-            format!("{}/{}", r.sweeps_applied, r.sweeps_run),
-            cache_cell,
-            // nodes joined / removed by the CP autoscaler and the cost
-            // of the provisioned fleet ("-" when autoscaling is off)
-            r.autoscale.cell(),
-            format!("{:.1}%", r.series.mean_cpu() * 100.0),
-            format!("{:016x}", r.log.digest()),
-        ]);
-        out.push_str(&row);
-        out.push('\n');
-    }
 
     // The headline claim: the optimised policies serve at least as many
     // pods per priority tier as the baseline on the identical trace.
@@ -144,6 +148,66 @@ mod tests {
         assert!(report.contains("cache hits"));
         // the autoscale column renders "-" while autoscaling is off
         assert!(report.contains("autoscale"));
+    }
+
+    #[test]
+    fn report_columns_stay_aligned_with_large_counters() {
+        // Regression: the fixed-width header/row pair drifted apart as
+        // soon as an eviction or solver-call cell outgrew its header
+        // (5+ digit counters on long traces). md_table sizes columns
+        // from the widest cell, so every pipe lands on one column.
+        let trace = ChurnTraceGenerator::new(
+            ChurnParams {
+                horizon_ms: 1_000,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 2,
+                    pods_per_node: 2,
+                    priority_tiers: 2,
+                    usage: 0.5,
+                })
+            },
+            1,
+        )
+        .generate();
+        let mk = |policy: Policy, k: usize| crate::lifecycle::ChurnResult {
+            policy,
+            served_per_priority: vec![k, 2],
+            final_placed: vec![k, 1],
+            final_pending: 0,
+            final_ready_nodes: 3,
+            arrivals_per_priority: vec![k, 2],
+            completions: k,
+            evictions: 3 * k,
+            evictions_preemption: k,
+            evictions_sweep: k,
+            evictions_drain: k,
+            solver_invocations: k,
+            sweeps_run: k,
+            sweeps_applied: 1,
+            events_processed: k,
+            session_full_hits: 0,
+            solve_cache_hits: 0,
+            component_cache_hits: 0,
+            warm_starts: 0,
+            autoscale: crate::autoscaler::AutoscaleStats::default(),
+            series: crate::metrics::TimeSeries::new(),
+            log: crate::lifecycle::ChurnLog::new(),
+        };
+        let results = vec![mk(Policy::DefaultOnly, 7), mk(Policy::FallbackSweep, 123_456)];
+        let report = churn_report(&trace, &results);
+        let table: Vec<&str> = report
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .collect();
+        assert_eq!(table.len(), 4, "header + separator + two rows");
+        let pipes = |s: &str| -> Vec<usize> {
+            s.char_indices().filter(|(_, c)| *c == '|').map(|(i, _)| i).collect()
+        };
+        let expect = pipes(table[0]);
+        for line in &table[1..] {
+            assert_eq!(pipes(line), expect, "misaligned row: {line}");
+        }
+        assert!(report.contains("370368 (123456+123456+123456)"));
     }
 
     #[test]

@@ -9,14 +9,14 @@
 
 use crate::metrics::categories::{classify, Outcome};
 use crate::metrics::utilization_delta;
-use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+use crate::optimizer::algorithm::{optimize_traced, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
 use crate::optimizer::session::SolveSession;
 use crate::optimizer::TierReport;
 use crate::portfolio::{PortfolioConfig, PortfolioStats};
 use crate::simulator::KwokSimulator;
 use crate::solver::SolverConfig;
-use crate::util::timer::Stopwatch;
+use crate::telemetry::{Stopwatch, Telemetry};
 use crate::workload::Instance;
 
 /// Everything recorded about one (instance, timeout) run.
@@ -72,6 +72,24 @@ pub fn run_instance_session(
     portfolio: &PortfolioConfig,
     session: Option<&mut SolveSession>,
 ) -> InstanceRun {
+    run_instance_traced(inst, timeout_s, solver, portfolio, session, &Telemetry::off())
+}
+
+/// [`run_instance_session`] recording onto a caller-owned [`Telemetry`]
+/// handle: the measurement becomes an `instance` span wrapping the KWOK
+/// baseline and the optimiser's own span tree (the `solve --trace`
+/// path). Telemetry never feeds back into the measurement.
+pub fn run_instance_traced(
+    inst: &Instance,
+    timeout_s: f64,
+    solver: &SolverConfig,
+    portfolio: &PortfolioConfig,
+    session: Option<&mut SolveSession>,
+    tel: &Telemetry,
+) -> InstanceRun {
+    let sp = tel.span("instance");
+    sp.arg("pods", inst.pods.len());
+    sp.arg("nodes", inst.nodes.len());
     let p_max = inst.params.p_max();
 
     // 1. KWOK baseline (deterministic profile).
@@ -106,8 +124,8 @@ pub fn run_instance_session(
     };
     let sw = Stopwatch::start();
     let result = match session {
-        Some(sess) => sess.solve(&state, p_max, &cfg),
-        None => optimize(&state, p_max, &cfg),
+        Some(sess) => sess.solve_traced(&state, p_max, &cfg, tel),
+        None => optimize_traced(&state, p_max, &cfg, None, tel),
     };
     let solver_duration_s = sw.elapsed_secs();
 

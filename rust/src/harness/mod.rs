@@ -18,5 +18,7 @@ pub mod grid;
 pub mod report;
 
 pub use churn::churn_report;
-pub use experiment::{run_instance, run_instance_session, run_instance_with, InstanceRun};
+pub use experiment::{
+    run_instance, run_instance_session, run_instance_traced, run_instance_with, InstanceRun,
+};
 pub use grid::{CellKey, CellResult, GridConfig};

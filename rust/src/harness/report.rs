@@ -60,6 +60,46 @@ pub fn md_row(cells: &[String]) -> String {
     format!("| {} |", cells.join(" | "))
 }
 
+/// Width-aligned markdown table: every column is padded to its widest
+/// cell (header included), so the pipes line up however many digits the
+/// counters grow — [`md_header`]/[`md_row`] drift apart as soon as one
+/// row's cell outgrows its header. Rows shorter than the header are
+/// padded with empty cells; longer rows are truncated.
+pub fn md_table(cols: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = cols.iter().map(|c| c.chars().count()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().take(cols.len()).enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let render = |cells: &mut dyn Iterator<Item = &str>| -> String {
+        let padded: Vec<String> = widths
+            .iter()
+            .map(|&w| {
+                let c = cells.next().unwrap_or("");
+                let pad = w.saturating_sub(c.chars().count());
+                format!("{c}{}", " ".repeat(pad))
+            })
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    let mut out = render(&mut cols.iter().copied());
+    out.push('\n');
+    out.push_str(&format!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|&w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    ));
+    for row in rows {
+        out.push('\n');
+        out.push_str(&render(&mut row.iter().map(|s| s.as_str())));
+    }
+    out
+}
+
 /// Serialize a cell to JSON (for machine-readable results files).
 pub fn cell_to_json(cell: &CellResult) -> Json {
     let mut j = Json::obj();
@@ -172,6 +212,34 @@ mod tests {
         assert!(h.contains("| a | b |"));
         assert!(h.contains("|---|---|"));
         assert_eq!(md_row(&["1".into(), "2".into()]), "| 1 | 2 |");
+    }
+
+    #[test]
+    fn md_table_aligns_pipes_across_rows() {
+        let rows = vec![
+            vec!["x".to_string(), "12345".to_string()],
+            vec!["longer".to_string(), "7".to_string()],
+        ];
+        let t = md_table(&["policy", "n"], &rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let pipes = |s: &str| -> Vec<usize> {
+            s.char_indices().filter(|(_, c)| *c == '|').map(|(i, _)| i).collect()
+        };
+        let expect = pipes(lines[0]);
+        for line in &lines[1..] {
+            assert_eq!(pipes(line), expect, "misaligned: {line}");
+        }
+        // cells padded, not truncated
+        assert!(lines[2].contains("| x      | 12345 |"));
+        assert!(lines[3].contains("| longer | 7     |"));
+    }
+
+    #[test]
+    fn md_table_pads_short_rows() {
+        let t = md_table(&["a", "b", "c"], &[vec!["1".to_string()]]);
+        let last = t.lines().last().unwrap();
+        assert_eq!(last, "| 1 |   |   |");
     }
 
     #[test]

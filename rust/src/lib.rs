@@ -36,6 +36,12 @@
 //!                   consolidation scale-down with provably-drainable
 //!                   nodes — the first subsystem that changes the *node*
 //!                   side of the instance.
+//! * [`telemetry`] — structured observability: RAII spans, solver
+//!                   counters, structured events, and byte-stable
+//!                   Chrome-trace / Prometheus exporters; also the
+//!                   crate's single monotonic clock (deadlines, the α
+//!                   time budget, stopwatches). Zero overhead when off,
+//!                   determinism-preserving when on.
 //! * [`runtime`]   — PJRT (XLA) execution of the AOT-compiled L1/L2
 //!                   batch scorer, with a bit-exact native fallback.
 //! * [`workload`]  — the paper's random workload generator, dataset
@@ -56,5 +62,6 @@ pub mod runtime;
 pub mod scheduler;
 pub mod simulator;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -32,10 +32,11 @@ use crate::optimizer::session::SolveSession;
 use crate::optimizer::OptimizingScheduler;
 use crate::portfolio::PortfolioConfig;
 use crate::scheduler::DefaultScheduler;
+use crate::telemetry::Telemetry;
 use crate::workload::churn::{ChurnTrace, TraceOp};
 
 use super::clock::SimClock;
-use super::sweep::{run_sweep_session, SweepConfig};
+use super::sweep::{run_sweep_session_traced, SweepConfig};
 use super::timeline::{LifecycleEvent, Timeline};
 use super::trace::ChurnLog;
 
@@ -158,21 +159,41 @@ impl ChurnResult {
 
 /// Run one policy over one trace.
 pub fn run_churn(trace: &ChurnTrace, cfg: &ChurnConfig) -> ChurnResult {
-    ChurnRunner::new(trace, cfg).run()
+    run_churn_traced(trace, cfg, &Telemetry::off())
+}
+
+/// [`run_churn`] recording onto a caller-owned [`Telemetry`] handle:
+/// the run becomes a `churn` span enclosing every per-tick sweep,
+/// consolidation, and fallback-solve span, plus `churn_*` counters.
+/// Telemetry observes the run and never feeds back — recorded and
+/// unrecorded runs produce byte-identical [`ChurnLog`]s.
+pub fn run_churn_traced(trace: &ChurnTrace, cfg: &ChurnConfig, tel: &Telemetry) -> ChurnResult {
+    ChurnRunner::new(trace, cfg).run(tel)
 }
 
 /// Run all three policies over the same trace (the comparison the churn
 /// report renders).
 pub fn compare_policies(trace: &ChurnTrace, base: &ChurnConfig) -> Vec<ChurnResult> {
+    compare_policies_traced(trace, base, &Telemetry::off())
+}
+
+/// [`compare_policies`] recording each policy's run onto `tel` (runs are
+/// sequential, so spans land in policy order).
+pub fn compare_policies_traced(
+    trace: &ChurnTrace,
+    base: &ChurnConfig,
+    tel: &Telemetry,
+) -> Vec<ChurnResult> {
     [Policy::DefaultOnly, Policy::Fallback, Policy::FallbackSweep]
         .into_iter()
         .map(|policy| {
-            run_churn(
+            run_churn_traced(
                 trace,
                 &ChurnConfig {
                     policy,
                     ..base.clone()
                 },
+                tel,
             )
         })
         .collect()
@@ -288,7 +309,9 @@ impl ChurnRunner {
         }
     }
 
-    fn run(mut self) -> ChurnResult {
+    fn run(mut self, tel: &Telemetry) -> ChurnResult {
+        let sp = tel.span("churn");
+        sp.arg("policy", self.cfg.policy.label());
         while let Some((t, ev)) = self.timeline.pop_next() {
             if t > self.horizon_ms {
                 // The horizon is a hard cut: completions scheduled past it
@@ -305,15 +328,15 @@ impl ChurnRunner {
                 let (_, ev) = self.timeline.pop_next().expect("peeked event exists");
                 self.apply(t, ev);
             }
-            self.schedule_round(t);
+            self.schedule_round(t, tel);
             if self.sweep_due {
                 if self.cfg.policy == Policy::FallbackSweep {
-                    self.defrag_sweep(t);
+                    self.defrag_sweep(t, tel);
                 }
                 // Consolidation runs after the defrag sweep: a freshly
                 // compacted cluster is exactly when nodes become
                 // provably drainable.
-                self.consolidation_pass(t);
+                self.consolidation_pass(t, tel);
             }
             self.absorb_events();
             let (cpu, ram) = self.state.utilization();
@@ -325,6 +348,13 @@ impl ChurnRunner {
                 placed_per_priority: self.state.placed_per_priority(self.p_max),
                 evictions: self.evictions_total,
             });
+        }
+        sp.arg("events", self.events_processed);
+        sp.arg("solves", self.solver_invocations);
+        if tel.enabled() {
+            tel.add("churn_events_total", "", self.events_processed as u64);
+            tel.add("churn_solver_invocations_total", "", self.solver_invocations as u64);
+            tel.add("churn_evictions_total", "", self.evictions_total as u64);
         }
         let (mut full_hits, mut solve_hits, mut component_hits, mut warm) = (0, 0, 0, 0);
         for session in [&self.fallback_session, &self.sweep_session].into_iter().flatten() {
@@ -514,7 +544,7 @@ impl ChurnRunner {
     /// One scheduling round at the end of a tick. Schedulers are rebuilt
     /// per round: `ClusterState` is the only carrier of cross-tick truth,
     /// which keeps replay deterministic and avoids stale queue entries.
-    fn schedule_round(&mut self, at: u64) {
+    fn schedule_round(&mut self, at: u64, tel: &Telemetry) {
         if self.state.pending_pods().is_empty() {
             return;
         }
@@ -544,8 +574,11 @@ impl ChurnRunner {
                     },
                 );
                 osched.set_provision_memo(self.provision_memo.take());
-                let report =
-                    osched.run_with_session(&mut self.state, self.fallback_session.as_mut());
+                let report = osched.run_with_session_traced(
+                    &mut self.state,
+                    self.fallback_session.as_mut(),
+                    tel,
+                );
                 self.provision_memo = osched.take_provision_memo();
                 let pending_after = self.state.pending_pods().len();
                 if report.solver_invoked {
@@ -570,13 +603,14 @@ impl ChurnRunner {
         }
     }
 
-    fn defrag_sweep(&mut self, at: u64) {
+    fn defrag_sweep(&mut self, at: u64, tel: &Telemetry) {
         self.sweeps_run += 1;
-        let report = run_sweep_session(
+        let report = run_sweep_session_traced(
             &mut self.state,
             self.p_max,
             &self.cfg.sweep,
             self.sweep_session.as_mut(),
+            tel,
         );
         if report.applied {
             self.sweeps_applied += 1;
@@ -601,7 +635,7 @@ impl ChurnRunner {
     /// (certified lossless re-pack within the budget), then drain and
     /// remove them. Reuses the sweep's optimiser config and — under
     /// `--incremental` — the sweep's solve session for warm starts.
-    fn consolidation_pass(&mut self, at: u64) {
+    fn consolidation_pass(&mut self, at: u64, tel: &Telemetry) {
         let Some(acfg) = self.cfg.autoscale.clone() else {
             return;
         };
@@ -614,6 +648,7 @@ impl ChurnRunner {
             &acfg,
             &self.cfg.sweep.optimizer,
             self.sweep_session.as_mut(),
+            tel,
         );
         let names: Vec<String> = pass
             .removed

@@ -24,8 +24,11 @@ pub mod sweep;
 pub mod timeline;
 pub mod trace;
 
-pub use churn::{compare_policies, run_churn, ChurnConfig, ChurnResult, Policy};
+pub use churn::{
+    compare_policies, compare_policies_traced, run_churn, run_churn_traced, ChurnConfig,
+    ChurnResult, Policy,
+};
 pub use clock::SimClock;
-pub use sweep::{run_sweep, run_sweep_session, SweepConfig, SweepReport};
+pub use sweep::{run_sweep, run_sweep_session, run_sweep_session_traced, SweepConfig, SweepReport};
 pub use timeline::{LifecycleEvent, Timeline};
 pub use trace::ChurnLog;

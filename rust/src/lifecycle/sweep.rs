@@ -9,9 +9,10 @@
 
 use crate::cluster::{ClusterState, Event, EvictCause};
 use crate::metrics::lex_better;
-use crate::optimizer::algorithm::{optimize, OptimizerConfig};
+use crate::optimizer::algorithm::{optimize_traced, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
 use crate::optimizer::session::SolveSession;
+use crate::telemetry::Telemetry;
 
 /// Sweep policy knobs.
 #[derive(Clone, Debug)]
@@ -62,6 +63,21 @@ pub fn run_sweep_session(
     cfg: &SweepConfig,
     session: Option<&mut SolveSession>,
 ) -> SweepReport {
+    run_sweep_session_traced(state, p_max, cfg, session, &Telemetry::off())
+}
+
+/// [`run_sweep_session`] recording onto a caller-owned [`Telemetry`]
+/// handle: the whole sweep becomes a `sweep` span wrapping the re-pack
+/// solve's own spans, plus `sweep_*` counters.
+pub fn run_sweep_session_traced(
+    state: &mut ClusterState,
+    p_max: u32,
+    cfg: &SweepConfig,
+    session: Option<&mut SolveSession>,
+    tel: &Telemetry,
+) -> SweepReport {
+    let sp = tel.span("sweep");
+    tel.add("sweep_runs_total", "", 1);
     let placed_before = state.placed_per_priority(p_max);
     state.events.push(Event::SweepStarted {
         pending: state.pending_pods().len(),
@@ -75,8 +91,8 @@ pub fn run_sweep_session(
     };
 
     let result = match session {
-        Some(sess) => sess.solve(state, p_max, &cfg.optimizer),
-        None => optimize(state, p_max, &cfg.optimizer),
+        Some(sess) => sess.solve_traced(state, p_max, &cfg.optimizer, tel),
+        None => optimize_traced(state, p_max, &cfg.optimizer, None, tel),
     };
     if let Some(res) = result {
         if lex_better(&res.placed_per_priority, &report.placed_before) {
@@ -96,6 +112,13 @@ pub fn run_sweep_session(
         moves: report.moves,
         at_ms: state.time_ms(),
     });
+    sp.arg("improved", report.improved);
+    sp.arg("applied", report.applied);
+    sp.arg("moves", report.moves);
+    if report.applied {
+        tel.add("sweep_applied_total", "", 1);
+        tel.add("sweep_moves_total", "", report.moves as u64);
+    }
     report
 }
 

@@ -19,11 +19,14 @@ use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resource
 use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
 use kube_packd::harness::InstanceRun;
-use kube_packd::lifecycle::{compare_policies, run_churn, ChurnConfig, Policy, SweepConfig};
+use kube_packd::lifecycle::{
+    compare_policies_traced, run_churn_traced, ChurnConfig, Policy, SweepConfig,
+};
 use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler, SolveSession};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
 use kube_packd::solver::{SolveStatus, SolverConfig};
+use kube_packd::telemetry::{Telemetry, Verbosity};
 use kube_packd::util::cli::Args;
 use kube_packd::util::json::Json;
 use kube_packd::workload::{
@@ -74,6 +77,7 @@ COMMANDS
   solve                    run the optimiser over a dataset file
                            (constraint profiles travel with the dataset)
       --dataset FILE --timeout SECS --threads N --json FILE --incremental
+      --trace FILE --metrics FILE --verbosity off|info|debug|trace
                            (--json: per-tier optimality certificates —
                            proven-optimal vs anytime-best + final bound —
                            and portfolio stats, machine-readable)
@@ -85,6 +89,7 @@ COMMANDS
       --sweep-ms N --budget N --timeout SECS --threads N --log
       --incremental --autoscale --node-pools small,large,gpu
       --constraints none|taints|anti-affinity|spread|extended|mixed
+      --trace FILE --metrics FILE --verbosity off|info|debug|trace
   autoscale                CP-driven elastic-cluster comparison: the same
                            seeded churn trace with the autoscaler off vs
                            on — certified scale-ups (min-cost node pools)
@@ -92,6 +97,7 @@ COMMANDS
       --nodes N --ppn N --tiers N --usage F --seed N --horizon-ms N
       --arrival-ms N --lifetime-ms N --sweep-ms N --budget N
       --timeout SECS --threads N --node-pools small,large,gpu --log
+      --trace FILE --metrics FILE --verbosity off|info|debug|trace
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
@@ -107,7 +113,13 @@ COMMANDS
   (churn cycles, sweeps, dataset instances) — unchanged states and
   constraint-graph components replay proven certificates, dirty work
   warm-starts from the previous incumbent. Byte-identical results;
-  caching only changes how fast they arrive."
+  caching only changes how fast they arrive.
+
+  --trace FILE: export the run as Chrome-trace JSON (open in Perfetto or
+  chrome://tracing). --metrics FILE: dump solver/portfolio/session
+  counters in Prometheus text exposition. --verbosity debug additionally
+  echoes pipeline events to stderr. Telemetry observes and never feeds
+  back: results are byte-identical with it on or off."
     );
 }
 
@@ -144,6 +156,36 @@ fn autoscale_cfg_arg(args: &Args, pools: &[NodePool], timeout: f64) -> Autoscale
         consolidation_budget: args.get_usize("budget", 8),
         ..AutoscaleConfig::default()
     }
+}
+
+/// `--trace FILE` / `--metrics FILE` / `--verbosity off|info|debug|trace`:
+/// build the run's telemetry handle. The export flags arm recording even
+/// at the default verbosity; telemetry only observes, so armed and
+/// disarmed runs produce byte-identical plans, objectives, and digests.
+fn telemetry_arg(args: &Args) -> Telemetry {
+    let v = args.get_str("verbosity", "off");
+    let verbosity = Verbosity::parse(v)
+        .unwrap_or_else(|| panic!("--verbosity wants off|info|debug|trace, got {v:?}"));
+    if verbosity == Verbosity::Off && (args.get("trace").is_some() || args.get("metrics").is_some())
+    {
+        return Telemetry::recording();
+    }
+    Telemetry::from_verbosity(verbosity)
+}
+
+/// Write the `--trace` (Chrome trace JSON — load in Perfetto or
+/// chrome://tracing) and `--metrics` (Prometheus text exposition)
+/// exports, when requested.
+fn write_telemetry(args: &Args, tel: &Telemetry) -> anyhow::Result<()> {
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, tel.export_chrome())?;
+        eprintln!("chrome trace written to {path} ({} spans)", tel.span_count());
+    }
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, tel.export_prometheus())?;
+        eprintln!("prometheus metrics written to {path}");
+    }
+    Ok(())
 }
 
 /// `--threads` with the env-aware portfolio default (`KUBE_PACKD_THREADS`
@@ -252,6 +294,7 @@ fn solve(args: &Args) -> anyhow::Result<()> {
     let threads = threads_arg(args);
     let portfolio = PortfolioConfig::with_threads(threads);
     let insts = dataset::load(path)?;
+    let tel = telemetry_arg(args);
     // One session across the whole dataset: instances generated from one
     // grid cell share structure, so certified sub-solves carry over.
     let mut session = args.flag("incremental").then(SolveSession::new);
@@ -261,12 +304,13 @@ fn solve(args: &Args) -> anyhow::Result<()> {
     let json_out = args.get("json");
     let mut rows = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
-        let run = kube_packd::harness::run_instance_session(
+        let run = kube_packd::harness::run_instance_traced(
             inst,
             timeout,
             &SolverConfig::default(),
             &portfolio,
             session.as_mut(),
+            &tel,
         );
         println!(
             "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}  {}",
@@ -305,6 +349,7 @@ fn solve(args: &Args) -> anyhow::Result<()> {
         std::fs::write(out, doc.to_string_pretty())?;
         eprintln!("json report written to {out}");
     }
+    write_telemetry(args, &tel)?;
     Ok(())
 }
 
@@ -423,8 +468,10 @@ fn churn(args: &Args) -> anyhow::Result<()> {
         autoscale,
     };
 
-    let results = compare_policies(&trace, &cfg);
+    let tel = telemetry_arg(args);
+    let results = compare_policies_traced(&trace, &cfg, &tel);
     println!("{}", kube_packd::harness::churn_report(&trace, &results));
+    write_telemetry(args, &tel)?;
     if args.flag("log") {
         for r in &results {
             println!("--- event log: {} ---", r.policy.label());
@@ -478,8 +525,10 @@ fn autoscale(args: &Args) -> anyhow::Result<()> {
         incremental: args.flag("incremental"),
         autoscale,
     };
-    let off = run_churn(&trace, &mk(None));
-    let on = run_churn(&trace, &mk(Some(acfg.clone())));
+    let tel = telemetry_arg(args);
+    let off = run_churn_traced(&trace, &mk(None), &tel);
+    let on = run_churn_traced(&trace, &mk(Some(acfg.clone())), &tel);
+    write_telemetry(args, &tel)?;
 
     println!(
         "autoscale — {} · horizon {}ms · seed {seed} · pools {}",

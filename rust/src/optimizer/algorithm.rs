@@ -19,15 +19,16 @@
 //! [`optimize_session`].
 //!
 //! Time accounting is the paper's: every solve gets
-//! `α·T_total/(p_max+1)/2 + unused` (see [`crate::util::timer::TimeBudget`]).
+//! `α·T_total/(p_max+1)/2 + unused` (see
+//! [`crate::telemetry::clock::TimeBudget`]).
 
 use std::time::Duration;
 
 use crate::autoscaler::AutoscaleConfig;
 use crate::cluster::{ClusterState, NodeId, PodId};
-use crate::portfolio::{solve_portfolio_session, PortfolioConfig, PortfolioStats, SolveCache};
+use crate::portfolio::{solve_portfolio_traced, PortfolioConfig, PortfolioStats, SolveCache};
 use crate::solver::{CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig};
-use crate::util::timer::{Deadline, Stopwatch, TimeBudget};
+use crate::telemetry::{clock::TimeBudget, Deadline, Stopwatch, Telemetry, Verbosity};
 
 use super::builder::{PackingModelBuilder, VarTable};
 use super::constraints::ModuleRegistry;
@@ -64,9 +65,14 @@ pub struct OptimizerConfig {
     /// the consolidation scale-down pass at sweep ticks. `optimize`
     /// itself never mutates the cluster; the knob only arms drivers.
     pub autoscale: Option<AutoscaleConfig>,
-    /// Verbose per-phase logging. Resolved once from `KUBE_PACKD_DEBUG`
-    /// at construction instead of per solve inside the hot loop.
-    pub debug: bool,
+    /// Telemetry verbosity for drivers that do not pass an explicit
+    /// handle: `Off` (the default) records nothing, `Info` records
+    /// spans/counters silently, `Debug`/`Trace` additionally echo
+    /// structured events to stderr — the successor of the old
+    /// `KUBE_PACKD_DEBUG` env toggle. Telemetry observes only, so this
+    /// knob never changes results (and is excluded from session
+    /// config fingerprints).
+    pub verbosity: Verbosity,
 }
 
 impl Default for OptimizerConfig {
@@ -79,7 +85,7 @@ impl Default for OptimizerConfig {
             modules: ModuleRegistry::standard(),
             incremental: false,
             autoscale: None,
-            debug: std::env::var_os("KUBE_PACKD_DEBUG").is_some(),
+            verbosity: Verbosity::Off,
         }
     }
 }
@@ -292,7 +298,24 @@ pub fn optimize_session(
     state: &ClusterState,
     p_max: u32,
     cfg: &OptimizerConfig,
+    cache: Option<&mut SolveCache>,
+) -> Option<OptimizeResult> {
+    let local = Telemetry::from_verbosity(cfg.verbosity);
+    optimize_traced(state, p_max, cfg, cache, &local)
+}
+
+/// [`optimize_session`] with an explicit telemetry handle. Every tier
+/// contributes a `phase1`/`phase2` span pair (nesting the portfolio's
+/// cache / decompose / warm-start / strategy-race spans), the old debug
+/// eprintlns become structured `optimize` events, and per-run counters
+/// land under `optimizer_*`. When no handle is passed,
+/// [`optimize_session`] derives one from `cfg.verbosity`.
+pub fn optimize_traced(
+    state: &ClusterState,
+    p_max: u32,
+    cfg: &OptimizerConfig,
     mut cache: Option<&mut SolveCache>,
+    tel: &Telemetry,
 ) -> Option<OptimizeResult> {
     let sw = Stopwatch::start();
     let mut budget = TimeBudget::new(cfg.total_timeout, cfg.alpha, p_max + 1);
@@ -313,14 +336,20 @@ pub fn optimize_session(
 
         let grant = budget.grant_phase().max(Duration::from_millis(2));
         let t = Stopwatch::start();
-        let out1 = solve_portfolio_session(
+        let sp1 = tel.span("phase1");
+        sp1.arg("tier", pr);
+        let out1 = solve_portfolio_traced(
             &m,
             &metric1,
             Deadline::after(grant).min(overall),
             &cfg.solver,
             &cfg.portfolio,
             cache.as_deref_mut(),
+            tel,
         );
+        sp1.arg("status", out1.solution.status.label());
+        sp1.arg("objective", out1.solution.objective);
+        drop(sp1);
         let phase1_cache_hit = out1.stats.cache_hits > 0;
         let phase1_components = out1.components.len();
         let phase1_components_certified = out1
@@ -334,9 +363,9 @@ pub fn optimize_session(
         stats.merge(&sol1.stats);
         pstats.merge(&out1.stats);
 
-        if cfg.debug {
-            eprintln!(
-                "[optimize] tier {pr} phase1: {:?} obj={} bound={} grant={:?} used={:?} \
+        tel.event("optimize", || {
+            format!(
+                "tier {pr} phase1: {:?} obj={} bound={} grant={:?} used={:?} \
                  dec={} prunes={} components={}",
                 sol1.status,
                 sol1.objective,
@@ -345,12 +374,13 @@ pub fn optimize_session(
                 phase1_time,
                 sol1.stats.decisions,
                 sol1.stats.bound_prunes,
-                out1.components.len()
-            );
-        }
+                phase1_components
+            )
+        });
         if !sol1.status.has_solution() {
             // No feasible packing surfaced in time for this tier: the run
             // is a Failure (the paper's grey bar).
+            tel.add("optimizer_failures_total", "", 1);
             return None;
         }
         locks.push(Lock {
@@ -373,14 +403,20 @@ pub fn optimize_session(
 
         let grant2 = budget.grant_phase().max(Duration::from_millis(2));
         let t2 = Stopwatch::start();
-        let out2 = solve_portfolio_session(
+        let sp2 = tel.span("phase2");
+        sp2.arg("tier", pr);
+        let out2 = solve_portfolio_traced(
             &m2,
             &metric2,
             Deadline::after(grant2).min(overall),
             &cfg.solver,
             &cfg.portfolio,
             cache.as_deref_mut(),
+            tel,
         );
+        sp2.arg("status", out2.solution.status.label());
+        sp2.arg("objective", out2.solution.objective);
+        drop(sp2);
         let phase2_cache_hit = out2.stats.cache_hits > 0;
         let sol2 = out2.solution;
         let phase2_time = t2.elapsed();
@@ -388,12 +424,12 @@ pub fn optimize_session(
         stats.merge(&sol2.stats);
         pstats.merge(&out2.stats);
 
-        if cfg.debug {
-            eprintln!(
-                "[optimize] tier {pr} phase2: {:?} obj={} grant={:?} used={:?}",
+        tel.event("optimize", || {
+            format!(
+                "tier {pr} phase2: {:?} obj={} grant={:?} used={:?}",
                 sol2.status, sol2.objective, grant2, phase2_time
-            );
-        }
+            )
+        });
         let (phase2_status, phase2_metric) = if sol2.status.has_solution() {
             locks.push(Lock {
                 metric: LockMetric::Stay { tier: pr },
@@ -445,6 +481,32 @@ pub fn optimize_session(
         if t.is_some() {
             placed[state.pods()[i].priority.0 as usize] += 1;
         }
+    }
+
+    if tel.enabled() {
+        tel.add("optimizer_runs_total", "", 1);
+        tel.add("optimizer_tiers_total", "", tiers.len() as u64);
+        tel.add(
+            "optimizer_tiers_certified_total",
+            "",
+            tiers
+                .iter()
+                .filter(|t| t.phase1_status == SolveStatus::Optimal)
+                .count() as u64,
+        );
+        tel.add(
+            "optimizer_phase_cache_hits_total",
+            "",
+            tiers
+                .iter()
+                .map(|t| u64::from(t.phase1_cache_hit) + u64::from(t.phase2_cache_hit))
+                .sum(),
+        );
+        tel.add(
+            "optimizer_proved_optimal_total",
+            "",
+            u64::from(proved_optimal),
+        );
     }
 
     Some(OptimizeResult {

@@ -93,7 +93,9 @@ pub mod plan;
 pub mod plugin;
 pub mod session;
 
-pub use algorithm::{optimize, optimize_session, OptimizeResult, OptimizerConfig, TierReport};
+pub use algorithm::{
+    optimize, optimize_session, optimize_traced, OptimizeResult, OptimizerConfig, TierReport,
+};
 pub use builder::{ModelCtx, PackingModelBuilder, VarTable};
 pub use constraints::{
     AtMostOnePlacement, ConstraintModule, ModuleRegistry, NodeCapacity, NodeSelector,

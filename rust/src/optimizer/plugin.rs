@@ -31,9 +31,9 @@ use crate::scheduler::framework::{
     PreFilterPlugin, ReservePlugin,
 };
 use crate::scheduler::DefaultScheduler;
-use crate::util::timer::{Deadline, Stopwatch};
+use crate::telemetry::{Deadline, Stopwatch, Telemetry};
 
-use super::algorithm::{optimize, OptimizeResult, OptimizerConfig};
+use super::algorithm::{optimize_traced, OptimizeResult, OptimizerConfig};
 use super::plan::MovePlan;
 use super::session::SolveSession;
 
@@ -224,6 +224,16 @@ impl OptimizingScheduler {
         report
     }
 
+    /// [`run`](OptimizingScheduler::run) with an explicit telemetry
+    /// handle threaded through the fallback solve and any provisioning
+    /// pass (the `--trace`/`--metrics` CLI path).
+    pub fn run_traced(&mut self, state: &mut ClusterState, tel: &Telemetry) -> RunReport {
+        let mut session = self.session.take();
+        let report = self.run_with_session_traced(state, session.as_mut(), tel);
+        self.session = session;
+        report
+    }
+
     /// Take the memoized non-applied provisioning outcome out of this
     /// scheduler. Drivers that rebuild the scheduler every cycle (the
     /// churn runner) carry it across instances with
@@ -247,6 +257,18 @@ impl OptimizingScheduler {
         &mut self,
         state: &mut ClusterState,
         session: Option<&mut SolveSession>,
+    ) -> RunReport {
+        let local = Telemetry::from_verbosity(self.cfg.verbosity);
+        self.run_with_session_traced(state, session, &local)
+    }
+
+    /// [`run_with_session`](OptimizingScheduler::run_with_session) with
+    /// an explicit telemetry handle.
+    pub fn run_with_session_traced(
+        &mut self,
+        state: &mut ClusterState,
+        session: Option<&mut SolveSession>,
+        tel: &Telemetry,
     ) -> RunReport {
         self.scheduler.enqueue_pending(state);
         let default_stats = self.scheduler.run_queue(state);
@@ -274,10 +296,13 @@ impl OptimizingScheduler {
             pending: self.scheduler.queue.unschedulable_len(),
         });
         let sw = Stopwatch::start();
+        let sp = tel.span("fallback");
+        sp.arg("pending", self.scheduler.queue.unschedulable_len());
         let result = match session {
-            Some(sess) => sess.solve(state, self.p_max, &self.cfg),
-            None => optimize(state, self.p_max, &self.cfg),
+            Some(sess) => sess.solve_traced(state, self.p_max, &self.cfg, tel),
+            None => optimize_traced(state, self.p_max, &self.cfg, None, tel),
         };
+        drop(sp);
         let solver_wall = sw.elapsed();
 
         let mut proved = false;
@@ -379,6 +404,7 @@ impl OptimizingScheduler {
                         &self.cfg.solver,
                         &self.cfg.portfolio,
                         &self.cfg.modules,
+                        tel,
                     );
                     let report = match outcome {
                         ProvisionOutcome::Plan(plan) => {

@@ -56,9 +56,10 @@
 use crate::cluster::{ClusterState, Event, NodeStatus, TaintEffect};
 use crate::portfolio::{CacheStats, SolveCache};
 use crate::solver::SolveStatus;
+use crate::telemetry::Telemetry;
 use crate::util::fingerprint::Fnv64;
 
-use super::algorithm::{optimize_session, OptimizeResult, OptimizerConfig};
+use super::algorithm::{optimize_traced, OptimizeResult, OptimizerConfig};
 
 /// Cluster mutations observed between two session solves. Maintained by
 /// scanning the state's event-log suffix (plus pod/node table growth),
@@ -148,9 +149,27 @@ impl SolveSession {
         p_max: u32,
         cfg: &OptimizerConfig,
     ) -> Option<OptimizeResult> {
+        let local = Telemetry::from_verbosity(cfg.verbosity);
+        self.solve_traced(state, p_max, cfg, &local)
+    }
+
+    /// [`solve`](Self::solve) with an explicit telemetry handle: the
+    /// whole call sits in a `session` span (annotated with the absorbed
+    /// delta and whether the full-state replay fired), and session
+    /// counters land under `session_*`.
+    pub fn solve_traced(
+        &mut self,
+        state: &ClusterState,
+        p_max: u32,
+        cfg: &OptimizerConfig,
+        tel: &Telemetry,
+    ) -> Option<OptimizeResult> {
+        let sp = tel.span("session");
         self.stats.solves += 1;
+        tel.add("session_solves_total", "", 1);
         self.absorb(state);
         self.stats.last_delta = std::mem::take(&mut self.delta);
+        sp.arg("delta", self.stats.last_delta.total());
 
         let cfg_fp = fingerprint_config(cfg);
         if self.cfg_fp != Some(cfg_fp) {
@@ -164,12 +183,18 @@ impl SolveSession {
         if let Some((last_fp, res)) = &self.last {
             if *last_fp == fp {
                 self.stats.full_hits += 1;
+                tel.add("session_full_hits_total", "", 1);
+                sp.arg("full_hit", true);
+                tel.event("session", || {
+                    "no-op delta: full-state replay, no solver invocation".to_string()
+                });
                 return Some(res.clone());
             }
         }
 
         self.stats.optimizer_runs += 1;
-        let res = optimize_session(state, p_max, cfg, Some(&mut self.cache));
+        tel.add("session_optimizer_runs_total", "", 1);
+        let res = optimize_traced(state, p_max, cfg, Some(&mut self.cache), tel);
         // Arm the full-state replay only with a fully certified run: an
         // anytime (deadline-truncated) result is not a pure function of
         // the state, so replaying it could diverge from a cold solve.

@@ -70,7 +70,7 @@ use crate::solver::{
     solve_max, solve_max_with, LinearExpr, Model, SearchStats, SharedIncumbent, SolveStatus,
     Solution, SolverConfig,
 };
-use crate::util::timer::Deadline;
+use crate::telemetry::{clock::Deadline, Telemetry};
 
 use cache::{CachedComponent, CachedSolve};
 use race::{run_race, Task, WarmSeeds};
@@ -165,6 +165,11 @@ pub struct PortfolioStats {
     pub component_cache_hits: u64,
     /// Warm-start incumbent floors seeded from projected hints.
     pub warm_starts: u64,
+    /// Warm-seeded solves whose final objective equalled the seeded
+    /// floor — the projected previous incumbent was already optimal for
+    /// the new model, so the seed was a perfect guess. A deterministic
+    /// measure of warm-start seed quality across a churn run.
+    pub warm_seed_exact: u64,
     /// Component races won, per strategy label (fixed roster order).
     pub strategy_wins: Vec<(String, u64)>,
 }
@@ -182,8 +187,45 @@ impl PortfolioStats {
         self.cache_hits += other.cache_hits;
         self.component_cache_hits += other.component_cache_hits;
         self.warm_starts += other.warm_starts;
+        self.warm_seed_exact += other.warm_seed_exact;
         for (label, wins) in &other.strategy_wins {
             self.credit(label, *wins);
+        }
+    }
+
+    /// Record every counter into a telemetry handle (one call per
+    /// portfolio solve, from [`solve_portfolio_traced`]). Deterministic:
+    /// every value is an output of the completed solve.
+    pub fn record(&self, tel: &Telemetry) {
+        if !tel.enabled() {
+            return;
+        }
+        tel.add("portfolio_solves_total", "", self.solves);
+        tel.add("portfolio_legacy_solves_total", "", self.legacy_solves);
+        tel.add("portfolio_components_total", "", self.components);
+        tel.add(
+            "portfolio_components_certified_total",
+            "",
+            self.components_certified,
+        );
+        tel.add("portfolio_tasks_run_total", "", self.tasks_run);
+        tel.add("portfolio_tasks_cancelled_total", "", self.tasks_cancelled);
+        tel.add("portfolio_whole_model_wins_total", "", self.whole_model_wins);
+        tel.add("portfolio_composite_wins_total", "", self.composite_wins);
+        tel.add("portfolio_cache_hits_total", "", self.cache_hits);
+        tel.add(
+            "portfolio_component_cache_hits_total",
+            "",
+            self.component_cache_hits,
+        );
+        tel.add("portfolio_warm_starts_total", "", self.warm_starts);
+        tel.add("portfolio_warm_seed_exact_total", "", self.warm_seed_exact);
+        for (label, wins) in &self.strategy_wins {
+            tel.add(
+                "portfolio_strategy_wins_total",
+                &format!("strategy=\"{label}\""),
+                *wins,
+            );
         }
     }
 
@@ -230,20 +272,54 @@ pub fn solve_portfolio_session(
     deadline: Deadline,
     solver: &SolverConfig,
     cfg: &PortfolioConfig,
+    session: Option<&mut SolveCache>,
+) -> PortfolioOutcome {
+    solve_portfolio_traced(
+        model,
+        objective,
+        deadline,
+        solver,
+        cfg,
+        session,
+        &Telemetry::off(),
+    )
+}
+
+/// [`solve_portfolio_session`] with a telemetry handle: spans cover the
+/// cache lookup, decomposition, warm-start seeding, and the strategy
+/// race (one lane per task); counters cover every [`PortfolioStats`]
+/// field plus the winning task's search stats. Telemetry observes only
+/// — the outcome is byte-identical to the untraced call.
+pub fn solve_portfolio_traced(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
     mut session: Option<&mut SolveCache>,
+    tel: &Telemetry,
 ) -> PortfolioOutcome {
     let fp = session
         .as_deref()
         .map(|_| fingerprint_solve(model, objective, solver, cfg));
-    if let (Some(cache), Some(fp)) = (session.as_deref_mut(), fp) {
-        if let Some(hit) = cache.lookup_solve(fp) {
-            return replay_solve(hit);
+    let hit = match (session.as_deref_mut(), fp) {
+        (Some(cache), Some(fp)) => {
+            let sp = tel.span("cache");
+            let hit = cache.lookup_solve(fp);
+            sp.arg("hit", hit.is_some());
+            hit
         }
-    }
-    if cfg.threads <= 1 {
-        return solve_legacy(model, objective, deadline, solver, session, fp);
-    }
-    solve_parallel(model, objective, deadline, solver, cfg, session, fp)
+        _ => None,
+    };
+    let outcome = match hit {
+        Some(hit) => replay_solve(hit),
+        None if cfg.threads <= 1 => {
+            solve_legacy(model, objective, deadline, solver, session, fp, tel)
+        }
+        None => solve_parallel(model, objective, deadline, solver, cfg, session, fp, tel),
+    };
+    outcome.stats.record(tel);
+    outcome
 }
 
 /// Re-emit a cached proven solve as a fresh outcome. The replayed
@@ -288,20 +364,37 @@ fn solve_legacy(
     solver: &SolverConfig,
     session: Option<&mut SolveCache>,
     fp: Option<u64>,
+    tel: &Telemetry,
 ) -> PortfolioOutcome {
     let mut stats = PortfolioStats {
         legacy_solves: 1,
         ..Default::default()
     };
     let solution = match session {
-        None => solve_max(model, objective, deadline, solver),
+        None => {
+            let _sp = tel.span("solve");
+            let solution = solve_max(model, objective, deadline, solver);
+            solution.stats.record(tel, "strategy=\"legacy\"");
+            solution
+        }
         Some(cache) => {
-            let shared = hint_floor(model, objective).map(SharedIncumbent::seeded);
+            let floor = {
+                let _sp = tel.span("warm-start");
+                hint_floor(model, objective)
+            };
+            let shared = floor.map(SharedIncumbent::seeded);
             if shared.is_some() {
                 stats.warm_starts = 1;
                 cache.stats.warm_seeds += 1;
             }
+            let sp = tel.span("solve");
+            sp.arg("warm", shared.is_some());
             let solution = solve_max_with(model, objective, deadline, solver, shared.as_ref());
+            drop(sp);
+            solution.stats.record(tel, "strategy=\"legacy\"");
+            if solution.status.has_solution() && floor == Some(solution.objective) {
+                stats.warm_seed_exact = 1;
+            }
             if let (Some(fp), SolveStatus::Optimal | SolveStatus::Infeasible) =
                 (fp, solution.status)
             {
@@ -334,8 +427,9 @@ fn solve_parallel(
     cfg: &PortfolioConfig,
     mut session: Option<&mut SolveCache>,
     fp: Option<u64>,
+    tel: &Telemetry,
 ) -> PortfolioOutcome {
-    let started = std::time::Instant::now();
+    let started = crate::telemetry::Stopwatch::start();
     let mut stats = PortfolioStats {
         solves: 1,
         ..Default::default()
@@ -344,7 +438,14 @@ fn solve_parallel(
     // Cheap probe first: the common single-component case (plain paper
     // workloads, every lock-coupled phase-2 model) must not pay for
     // sub-model construction inside the solve window.
-    let probe = cfg.decompose.then(|| decompose::probe(model));
+    let probe = {
+        let sp = tel.span("decompose");
+        let probe = cfg.decompose.then(|| decompose::probe(model));
+        if let Some(p) = &probe {
+            sp.arg("components", p.components);
+        }
+        probe
+    };
     let (ncomp, constant_infeasible) = match &probe {
         Some(p) => (p.components, p.constant_infeasible),
         None => (usize::from(model.num_vars() > 0), false),
@@ -352,7 +453,7 @@ fn solve_parallel(
 
     if constant_infeasible {
         let mut s = SearchStats::default();
-        s.solve_time_s = started.elapsed().as_secs_f64();
+        s.solve_time_s = started.elapsed_secs();
         return PortfolioOutcome {
             solution: Solution::infeasible(s),
             components: Vec::new(),
@@ -390,15 +491,22 @@ fn solve_parallel(
                 }
             })
             .collect();
-        let warm = session.as_deref().map(|_| WarmSeeds {
-            whole: None,
-            per_component: vec![hint_floor(model, objective)],
+        let warm = session.as_deref().map(|_| {
+            let _sp = tel.span("warm-start");
+            WarmSeeds {
+                whole: None,
+                per_component: vec![hint_floor(model, objective)],
+            }
         });
         if let (Some(w), Some(cache)) = (&warm, session.as_deref_mut()) {
             stats.warm_starts = w.count();
             cache.stats.warm_seeds += w.count();
         }
-        let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads, warm.as_ref());
+        let (mut results, cancelled) = {
+            let sp = tel.span("strategy-race");
+            sp.arg("tasks", tasks.len());
+            run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel)
+        };
         stats.tasks_cancelled = cancelled;
         stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
         let mut merged_stats = SearchStats::default();
@@ -414,6 +522,11 @@ fn solve_parallel(
         );
         stats.components = 1;
         stats.components_certified = u64::from(report.status == SolveStatus::Optimal);
+        if let Some(w) = &warm {
+            if report.status.has_solution() && w.per_component[0] == Some(report.objective) {
+                stats.warm_seed_exact = 1;
+            }
+        }
         let mut solution = match winner {
             Some(mut sol) => {
                 stats.credit(report.winner, 1);
@@ -440,7 +553,7 @@ fn solve_parallel(
                 );
             }
         }
-        merged_stats.solve_time_s = started.elapsed().as_secs_f64();
+        merged_stats.solve_time_s = started.elapsed_secs();
         solution.stats = merged_stats;
         return PortfolioOutcome {
             solution,
@@ -451,11 +564,15 @@ fn solve_parallel(
 
     // ---- multi-component: full decomposition + fixed task list ------------
     // (the task list never depends on the worker count)
-    let decomp = decompose::decompose_probed(
-        model,
-        objective,
-        probe.expect("ncomp > 1 implies the probe ran"),
-    );
+    let decomp = {
+        let sp = tel.span("decompose");
+        sp.arg("components", ncomp);
+        decompose::decompose_probed(
+            model,
+            objective,
+            probe.expect("ncomp > 1 implies the probe ran"),
+        )
+    };
     debug_assert_eq!(decomp.components.len(), ncomp);
 
     // Session replay: a component whose fingerprint matches a proven
@@ -504,27 +621,34 @@ fn solve_parallel(
         }
     }
 
-    let warm = session.as_deref().map(|_| WarmSeeds {
-        whole: hint_floor(model, objective),
-        per_component: decomp
-            .components
-            .iter()
-            .enumerate()
-            .map(|(c, comp)| {
-                if cached[c].is_some() {
-                    None
-                } else {
-                    hint_floor(&comp.model, &comp.objective)
-                }
-            })
-            .collect(),
+    let warm = session.as_deref().map(|_| {
+        let _sp = tel.span("warm-start");
+        WarmSeeds {
+            whole: hint_floor(model, objective),
+            per_component: decomp
+                .components
+                .iter()
+                .enumerate()
+                .map(|(c, comp)| {
+                    if cached[c].is_some() {
+                        None
+                    } else {
+                        hint_floor(&comp.model, &comp.objective)
+                    }
+                })
+                .collect(),
+        }
     });
     if let (Some(w), Some(cache)) = (&warm, session.as_deref_mut()) {
         stats.warm_starts = w.count();
         cache.stats.warm_seeds += w.count();
     }
 
-    let (mut results, cancelled) = run_race(&tasks, deadline, cfg.threads, warm.as_ref());
+    let (mut results, cancelled) = {
+        let sp = tel.span("strategy-race");
+        sp.arg("tasks", tasks.len());
+        run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel)
+    };
     stats.tasks_cancelled = cancelled;
     stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
 
@@ -549,6 +673,13 @@ fn solve_parallel(
         let (report, winner) =
             pick_winner(&tasks, &mut results, c, comp.vars.len(), comp.cons.len());
         any_infeasible |= report.status == SolveStatus::Infeasible;
+        if let Some(w) = &warm {
+            if report.status.has_solution()
+                && w.per_component.get(c).copied().flatten() == Some(report.objective)
+            {
+                stats.warm_seed_exact += 1;
+            }
+        }
         match winner {
             Some(sol) => {
                 stats.credit(report.winner, 1);
@@ -670,7 +801,7 @@ fn solve_parallel(
         }
     };
 
-    merged_stats.solve_time_s = started.elapsed().as_secs_f64();
+    merged_stats.solve_time_s = started.elapsed_secs();
     solution.stats = merged_stats;
     if let (Some(cache), Some(fp)) = (session.as_deref_mut(), fp) {
         if matches!(solution.status, SolveStatus::Optimal | SolveStatus::Infeasible) {

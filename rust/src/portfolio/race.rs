@@ -19,7 +19,7 @@ use std::sync::Mutex;
 use crate::solver::{
     solve_max_with, LinearExpr, Model, SharedIncumbent, SolveStatus, Solution, SolverConfig,
 };
-use crate::util::timer::Deadline;
+use crate::telemetry::{clock::Deadline, Telemetry};
 
 /// One racer's assignment.
 pub(crate) struct Task<'a> {
@@ -58,11 +58,17 @@ impl WarmSeeds {
 /// Run every task under `deadline` on up to `threads` workers. Returns
 /// one result slot per task (`None` = cancelled before it started) plus
 /// the number of cancelled-unstarted tasks.
+///
+/// Telemetry: each task gets a [`Telemetry::child`] lane, created here
+/// in task order (before any worker spawns) and absorbed back in task
+/// order after the scope — the merged record is a pure function of the
+/// task list, whatever the thread interleaving did.
 pub(crate) fn run_race(
     tasks: &[Task<'_>],
     deadline: Deadline,
     threads: usize,
     warm: Option<&WarmSeeds>,
+    tel: &Telemetry,
 ) -> (Vec<Option<Solution>>, u64) {
     let n = tasks.len();
     if n == 0 {
@@ -101,6 +107,18 @@ pub(crate) fn run_race(
     let results: Vec<Mutex<Option<Solution>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let workers = threads.clamp(1, n);
 
+    // One telemetry lane per task, allocated here on the owning thread
+    // so lane numbering is deterministic. Off handles cost nothing.
+    let lanes: Vec<Mutex<Telemetry>> = tasks
+        .iter()
+        .map(|t| {
+            Mutex::new(tel.child(&match t.component {
+                Some(c) => format!("{} c{c} r{}", t.label, t.rank),
+                None => t.label.to_string(),
+            }))
+        })
+        .collect();
+
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -112,6 +130,13 @@ pub(crate) fn run_race(
                     continue; // a lower rank already proved this component
                 }
                 let task = &tasks[i];
+                let lane = lanes[i].lock().expect("telemetry lane poisoned");
+                let sp = lane.span("race-task");
+                sp.arg("strategy", task.label);
+                if let Some(c) = task.component {
+                    sp.arg("component", c);
+                }
+                sp.arg("rank", task.rank);
                 let sol = solve_max_with(
                     task.model,
                     task.objective,
@@ -119,6 +144,13 @@ pub(crate) fn run_race(
                     &task.config,
                     handles[i].as_ref(),
                 );
+                sp.arg("status", sol.status.label());
+                if lane.enabled() {
+                    sol.stats
+                        .record(&lane, &format!("strategy=\"{}\"", task.label));
+                }
+                drop(sp);
+                drop(lane);
                 if matches!(sol.status, SolveStatus::Optimal | SolveStatus::Infeasible) {
                     // Exactness proven: *higher* ranks on this component
                     // can at best tie and lose the tie-break — release
@@ -140,6 +172,11 @@ pub(crate) fn run_race(
             });
         }
     });
+
+    // Absorb task lanes in task-index order — never completion order.
+    for lane in lanes {
+        tel.absorb(lane.into_inner().expect("telemetry lane poisoned"));
+    }
 
     let mut out = Vec::with_capacity(n);
     let mut cancelled = 0u64;
@@ -206,7 +243,7 @@ mod tests {
         };
         let runs: Vec<_> = [1usize, 2, 8]
             .iter()
-            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t, None).0)
+            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t, None, &Telemetry::off()).0)
             .collect();
         for run in &runs {
             // rank 0 always runs (never cancelled by construction)
@@ -252,7 +289,8 @@ mod tests {
                 config: SolverConfig::default(),
             },
         ];
-        let (results, cancelled) = run_race(&tasks, Deadline::unlimited(), 1, None);
+        let (results, cancelled) =
+            run_race(&tasks, Deadline::unlimited(), 1, None, &Telemetry::off());
         assert!(results[0].is_some());
         assert!(results[1].is_none());
         assert_eq!(cancelled, 1);
@@ -274,13 +312,13 @@ mod tests {
                 config: SolverConfig::default(),
             }]
         };
-        let cold = run_race(&mk_tasks(), Deadline::unlimited(), 2, None).0;
+        let cold = run_race(&mk_tasks(), Deadline::unlimited(), 2, None, &Telemetry::off()).0;
         let seeds = WarmSeeds {
             whole: None,
             per_component: vec![Some(3)],
         };
         assert_eq!(seeds.count(), 1);
-        let warm = run_race(&mk_tasks(), Deadline::unlimited(), 2, Some(&seeds)).0;
+        let warm = run_race(&mk_tasks(), Deadline::unlimited(), 2, Some(&seeds), &Telemetry::off()).0;
         let c = cold[0].as_ref().expect("cold racer ran");
         let w = warm[0].as_ref().expect("warm racer ran");
         assert_eq!(w.status, SolveStatus::Optimal);

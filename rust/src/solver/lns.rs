@@ -7,8 +7,8 @@
 //! improvement replaces the incumbent. This mirrors CP-SAT's LNS workers
 //! (scaled down) and is one of the ablation toggles.
 
+use crate::telemetry::clock::Deadline;
 use crate::util::rng::Rng;
-use crate::util::timer::Deadline;
 
 use super::model::{Model, VarId};
 use super::presolve::Structure;

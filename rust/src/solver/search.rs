@@ -21,7 +21,7 @@
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::time::Instant;
 
-use crate::util::timer::Deadline;
+use crate::telemetry::clock::Deadline;
 
 use super::bound::upper_bound;
 use super::lns::lns_polish;
@@ -317,6 +317,9 @@ pub(super) struct Searcher<'a> {
     last_poll_decisions: u64,
     conflicts: u64,
     bound_prunes: u64,
+    /// Prunes where the shared race floor alone cut the subtree (the
+    /// local incumbent would not have) — sibling-racer savings.
+    floor_prunes: u64,
     symmetry_skips: u64,
     max_depth: u32,
 }
@@ -475,6 +478,7 @@ impl<'a> Searcher<'a> {
             last_poll_decisions: 0,
             conflicts: 0,
             bound_prunes: 0,
+            floor_prunes: 0,
             symmetry_skips: 0,
             max_depth: 0,
         };
@@ -719,8 +723,15 @@ impl<'a> Searcher<'a> {
         // reports the same first-in-DFS-order optimum it finds alone.
         if self.config.use_bound && (self.best.is_some() || self.floor > i64::MIN) {
             let ub = self.ub();
-            if (self.best.is_some() && ub <= self.best_val) || ub < self.floor {
-                self.bound_prunes += 1;
+            let local_cut = self.best.is_some() && ub <= self.best_val;
+            if local_cut || ub < self.floor {
+                if local_cut {
+                    self.bound_prunes += 1;
+                } else {
+                    // Only the shared floor cut this subtree: credit the
+                    // sibling racer whose published incumbent saved the work.
+                    self.floor_prunes += 1;
+                }
                 return;
             }
         }
@@ -826,6 +837,7 @@ impl<'a> Searcher<'a> {
         stats.propagations += self.prop.propagations;
         stats.conflicts += self.conflicts;
         stats.bound_prunes += self.bound_prunes;
+        stats.floor_prunes += self.floor_prunes;
         stats.symmetry_skips += self.symmetry_skips;
         stats.max_depth = stats.max_depth.max(self.max_depth);
     }

@@ -37,7 +37,13 @@ pub struct SearchStats {
     pub decisions: u64,
     pub propagations: u64,
     pub conflicts: u64,
+    /// Subtrees cut by the admissible bound against the *local* incumbent.
     pub bound_prunes: u64,
+    /// Subtrees cut specifically by the shared portfolio incumbent floor
+    /// — work a sibling racer's published objective saved this search.
+    /// Disjoint from `bound_prunes`: a node the local incumbent would
+    /// also have cut counts there, not here.
+    pub floor_prunes: u64,
     pub symmetry_skips: u64,
     pub max_depth: u32,
     pub lns_rounds: u64,
@@ -55,11 +61,35 @@ impl SearchStats {
         self.propagations += other.propagations;
         self.conflicts += other.conflicts;
         self.bound_prunes += other.bound_prunes;
+        self.floor_prunes += other.floor_prunes;
         self.symmetry_skips += other.symmetry_skips;
         self.max_depth = self.max_depth.max(other.max_depth);
         self.lns_rounds += other.lns_rounds;
         self.lns_improvements += other.lns_improvements;
         self.solve_time_s += other.solve_time_s;
+    }
+
+    /// Record every counter into a telemetry handle under `labels`
+    /// (pre-rendered Prometheus label body, e.g. `strategy="default"`).
+    /// All values here are deterministic outputs of a completed search,
+    /// so the resulting counter dump is too.
+    pub fn record(&self, tel: &crate::telemetry::Telemetry, labels: &str) {
+        if !tel.enabled() {
+            return;
+        }
+        tel.add("solver_decisions_total", labels, self.decisions);
+        tel.add("solver_propagations_total", labels, self.propagations);
+        tel.add("solver_conflicts_total", labels, self.conflicts);
+        tel.add("solver_bound_prunes_total", labels, self.bound_prunes);
+        tel.add("solver_floor_prunes_total", labels, self.floor_prunes);
+        tel.add("solver_symmetry_skips_total", labels, self.symmetry_skips);
+        tel.add("solver_lns_rounds_total", labels, self.lns_rounds);
+        tel.add(
+            "solver_lns_improvements_total",
+            labels,
+            self.lns_improvements,
+        );
+        tel.gauge_max("solver_max_depth", labels, self.max_depth as u64);
     }
 }
 

@@ -1,0 +1,116 @@
+//! Chrome Trace Event Format exporter (`chrome://tracing` / Perfetto).
+//!
+//! Renders the recorded span forest as paired `B`/`E` duration events
+//! plus `i` instant events, one timeline lane (`tid`) per telemetry
+//! handle. Spans within a lane were recorded under strict stack
+//! discipline by one thread, so a depth-first emission per lane yields a
+//! well-formed stream: every `B` has a matching `E`, and timestamps are
+//! non-decreasing within a lane. The output is byte-stable for a fixed
+//! recorded run: event order is derived from recording order and lane
+//! ids only, and the JSON writer sorts object keys.
+
+use crate::util::json::Json;
+
+use super::{EventRecord, SpanRecord};
+
+/// Render a complete trace document (compact JSON).
+pub fn render(spans: &[SpanRecord], events: &[EventRecord], lanes: &[(u32, String)]) -> String {
+    let mut out: Vec<Json> = Vec::new();
+
+    // Lane metadata first: Perfetto names each tid row from these.
+    let mut lanes_sorted: Vec<(u32, String)> = lanes.to_vec();
+    lanes_sorted.sort();
+    for (lane, name) in &lanes_sorted {
+        let mut args = Json::obj();
+        args.set("name", name.as_str());
+        let mut m = Json::obj();
+        m.set("ph", "M")
+            .set("name", "thread_name")
+            .set("pid", 1u64)
+            .set("tid", *lane)
+            .set("args", args);
+        out.push(m);
+    }
+
+    // Build the span forest: children in recording order, roots per lane.
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match s.parent {
+            Some(p) => children[p].push(i),
+            None => roots.push(i),
+        }
+    }
+    for &(lane, _) in &lanes_sorted {
+        for &r in &roots {
+            if spans[r].lane == lane {
+                emit_span(r, spans, &children, &mut out);
+            }
+        }
+    }
+    // Roots on lanes that never got a name still must render.
+    for &r in &roots {
+        if !lanes_sorted.iter().any(|&(l, _)| l == spans[r].lane) {
+            emit_span(r, spans, &children, &mut out);
+        }
+    }
+
+    // Instant events, grouped per lane in timestamp order.
+    let mut inst: Vec<&EventRecord> = events.iter().collect();
+    inst.sort_by_key(|e| (e.lane, e.ts_us));
+    for e in inst {
+        let mut args = Json::obj();
+        args.set("message", e.msg.as_str());
+        let mut j = Json::obj();
+        j.set("ph", "i")
+            .set("name", e.scope)
+            .set("cat", "kube-packd")
+            .set("s", "t")
+            .set("ts", e.ts_us)
+            .set("pid", 1u64)
+            .set("tid", e.lane)
+            .set("args", args);
+        out.push(j);
+    }
+
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", "ms")
+        .set("traceEvents", Json::Arr(out));
+    doc.to_string_compact()
+}
+
+/// Depth-first `B` … children … `E` emission of one span.
+fn emit_span(i: usize, spans: &[SpanRecord], children: &[Vec<usize>], out: &mut Vec<Json>) {
+    let s = &spans[i];
+    // A span absorbed while still open reads as zero-length.
+    let end = if s.end_us == u64::MAX { s.start_us } else { s.end_us };
+
+    let mut b = Json::obj();
+    b.set("ph", "B")
+        .set("name", s.name)
+        .set("cat", "kube-packd")
+        .set("ts", s.start_us)
+        .set("pid", 1u64)
+        .set("tid", s.lane);
+    if !s.args.is_empty() {
+        let mut args = Json::obj();
+        for (k, v) in &s.args {
+            args.set(k, v.as_str());
+        }
+        b.set("args", args);
+    }
+    out.push(b);
+
+    for &c in &children[i] {
+        emit_span(c, spans, children, out);
+    }
+
+    let mut e = Json::obj();
+    e.set("ph", "E")
+        .set("name", s.name)
+        .set("cat", "kube-packd")
+        .set("ts", end.max(s.start_us))
+        .set("pid", 1u64)
+        .set("tid", s.lane);
+    out.push(e);
+}

@@ -1,0 +1,153 @@
+//! Ordered counter/gauge storage behind the [`Telemetry`] handle.
+//!
+//! Keys are `(metric, labels)` pairs kept in a `BTreeMap`, so iteration
+//! — and therefore every export — is deterministic regardless of the
+//! order counters were touched in. Counters add on merge; gauges take
+//! the maximum (the only gauge today is `solver_max_depth`).
+//!
+//! [`Telemetry`]: super::Telemetry
+
+use std::collections::BTreeMap;
+
+/// How a metric merges and how it is typed in the Prometheus export.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterKind {
+    /// Monotone sum; merges by addition.
+    Counter,
+    /// Level; merges by maximum.
+    Gauge,
+}
+
+impl CounterKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            CounterKind::Counter => "counter",
+            CounterKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// A deterministic multiset of named counters and gauges.
+///
+/// `labels` is a pre-rendered Prometheus label body (without braces),
+/// e.g. `strategy="default",component="2"`, or `""` for none. The caller
+/// renders it so the hot path stays a single map lookup.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CounterSet {
+    entries: BTreeMap<(String, String), (CounterKind, u64)>,
+}
+
+impl CounterSet {
+    /// Add `delta` to a counter, creating it at zero first. A zero delta
+    /// still creates the entry, so exports list every metric a run
+    /// touched.
+    pub fn add(&mut self, metric: &str, labels: &str, delta: u64) {
+        let e = self
+            .entries
+            .entry((metric.to_string(), labels.to_string()))
+            .or_insert((CounterKind::Counter, 0));
+        e.1 += delta;
+    }
+
+    /// Raise a gauge to at least `value`.
+    pub fn gauge_max(&mut self, metric: &str, labels: &str, value: u64) {
+        let e = self
+            .entries
+            .entry((metric.to_string(), labels.to_string()))
+            .or_insert((CounterKind::Gauge, 0));
+        e.0 = CounterKind::Gauge;
+        e.1 = e.1.max(value);
+    }
+
+    pub fn get(&self, metric: &str, labels: &str) -> Option<u64> {
+        self.entries
+            .get(&(metric.to_string(), labels.to_string()))
+            .map(|&(_, v)| v)
+    }
+
+    /// Sum of one metric across all label sets.
+    pub fn total(&self, metric: &str) -> u64 {
+        self.entries
+            .iter()
+            .filter(|((m, _), _)| m == metric)
+            .map(|(_, &(_, v))| v)
+            .sum()
+    }
+
+    /// Fold another set in: counters add, gauges max.
+    pub fn merge(&mut self, other: &CounterSet) {
+        for ((metric, labels), (kind, value)) in &other.entries {
+            match kind {
+                CounterKind::Counter => self.add(metric, labels, *value),
+                CounterKind::Gauge => self.gauge_max(metric, labels, *value),
+            }
+        }
+    }
+
+    /// Sorted iteration: `(metric, labels, kind, value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str, CounterKind, u64)> {
+        self.entries
+            .iter()
+            .map(|((m, l), &(k, v))| (m.as_str(), l.as_str(), k, v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_and_zero_creates() {
+        let mut c = CounterSet::default();
+        c.add("x_total", "", 0);
+        c.add("x_total", "", 3);
+        c.add("x_total", "", 4);
+        assert_eq!(c.get("x_total", ""), Some(7));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn labels_separate_series() {
+        let mut c = CounterSet::default();
+        c.add("wins_total", "strategy=\"a\"", 1);
+        c.add("wins_total", "strategy=\"b\"", 2);
+        assert_eq!(c.get("wins_total", "strategy=\"a\""), Some(1));
+        assert_eq!(c.total("wins_total"), 3);
+    }
+
+    #[test]
+    fn gauges_merge_by_max_counters_by_sum() {
+        let mut a = CounterSet::default();
+        a.add("n_total", "", 5);
+        a.gauge_max("depth", "", 7);
+        let mut b = CounterSet::default();
+        b.add("n_total", "", 2);
+        b.gauge_max("depth", "", 3);
+        a.merge(&b);
+        assert_eq!(a.get("n_total", ""), Some(7));
+        assert_eq!(a.get("depth", ""), Some(7));
+    }
+
+    #[test]
+    fn iteration_is_sorted() {
+        let mut c = CounterSet::default();
+        c.add("b_total", "", 1);
+        c.add("a_total", "z=\"1\"", 1);
+        c.add("a_total", "a=\"1\"", 1);
+        let keys: Vec<(String, String)> = c
+            .iter()
+            .map(|(m, l, _, _)| (m.to_string(), l.to_string()))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,494 @@
+//! Structured telemetry: spans, counters, events, and exportable solve
+//! traces — zero-overhead when off, determinism-preserving when on.
+//!
+//! The paper's headline claims are time-budget claims ("within a
+//! 1-second scheduling window…"), so the pipeline must be able to say
+//! *where* inside a solve window the time goes: search, propagation,
+//! LNS, decomposition, warm-start projection, provisioning. A
+//! [`Telemetry`] handle threads through solver → portfolio → session →
+//! autoscaler → lifecycle and records three kinds of data:
+//!
+//! * **Spans** — RAII-guarded wall-clock intervals
+//!   (`tel.span("phase1")`, or the [`span!`](crate::span) macro) kept as
+//!   a per-handle stack, exported as a Chrome-trace timeline
+//!   ([`chrome`], the `--trace FILE` CLI flag) that opens directly in
+//!   Perfetto / `chrome://tracing`.
+//! * **Counters** — deterministic solver/portfolio/session/autoscaler
+//!   accounting ([`counters`]), exported in Prometheus text exposition
+//!   ([`prometheus`], the `--metrics FILE` flag) — the dump a future
+//!   serve daemon's `/metrics` endpoint mounts directly.
+//! * **Events** — structured messages replacing the old
+//!   `KUBE_PACKD_DEBUG` eprintlns; echoed to stderr at
+//!   [`Verbosity::Debug`] and embedded in the trace as instant events.
+//!
+//! # Determinism contract
+//!
+//! Telemetry *observes* the pipeline; it never feeds back into it. Span
+//! timestamps are wall-clock and live strictly outside the determinism
+//! boundary: plans, objective vectors, and certificates are
+//! byte-identical with telemetry on or off at any thread count (pinned
+//! by the `telemetry` proptests). Counters recorded from completed
+//! solves are themselves deterministic; only span/event *timestamps*
+//! vary run to run. Exports are byte-stable given a fixed recorded run:
+//! ordering derives from recording order, lane ids, and sorted maps —
+//! never from timing races.
+//!
+//! # Concurrency model
+//!
+//! A handle is single-threaded by construction (`RefCell` inside). The
+//! portfolio race gives each task a [`child`](Telemetry::child) handle
+//! on its own timeline lane, created in deterministic task order before
+//! the workers spawn, and [`absorb`](Telemetry::absorb)s them back in
+//! task-index order after the race — so the merged record is a pure
+//! function of the task list, not of thread scheduling.
+//!
+//! The clock ([`clock`]) is the crate's single monotonic-time source;
+//! `Deadline`/`TimeBudget`/`Stopwatch` live here (re-exported through
+//! the deprecated `util::timer` shim for older call sites).
+
+pub mod chrome;
+pub mod clock;
+pub mod counters;
+pub mod prometheus;
+
+pub use clock::{Deadline, Stopwatch, TimeBudget};
+pub use counters::{CounterKind, CounterSet};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How chatty the pipeline is. `Off` disables telemetry entirely;
+/// `Info` records spans/counters/events; `Debug` and `Trace`
+/// additionally echo events to stderr (the old `KUBE_PACKD_DEBUG=1`
+/// behaviour, now a config knob: `OptimizerConfig.verbosity`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verbosity {
+    #[default]
+    Off,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Verbosity {
+    /// Parse a CLI spelling; `None` on unknown input.
+    pub fn parse(s: &str) -> Option<Verbosity> {
+        match s {
+            "off" => Some(Verbosity::Off),
+            "info" => Some(Verbosity::Info),
+            "debug" => Some(Verbosity::Debug),
+            "trace" => Some(Verbosity::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Verbosity::Off => "off",
+            Verbosity::Info => "info",
+            Verbosity::Debug => "debug",
+            Verbosity::Trace => "trace",
+        }
+    }
+}
+
+/// One recorded span: a named wall-clock interval on a timeline lane.
+/// `parent` indexes into the owning handle's span vec (fixed up on
+/// absorb), giving the exporter the nesting forest without re-deriving
+/// it from timestamps.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub lane: u32,
+    pub parent: Option<usize>,
+    pub start_us: u64,
+    /// `u64::MAX` while the span is open.
+    pub end_us: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// One structured event (the old debug eprintlns, kept as data).
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    pub lane: u32,
+    pub ts_us: u64,
+    pub scope: &'static str,
+    pub msg: String,
+}
+
+#[derive(Debug)]
+struct Recorder {
+    /// Echo events to stderr as they are recorded (Verbosity::Debug+).
+    echo: bool,
+    /// Shared time origin: all lanes timestamp against the root
+    /// handle's creation instant, so a merged trace is coherent.
+    origin: Instant,
+    lane: u32,
+    /// Root-shared lane allocator. Children are only ever created on
+    /// the thread owning the parent handle, before workers spawn, so
+    /// allocation order — hence lane numbering — is deterministic.
+    lane_alloc: Arc<AtomicU32>,
+    lane_names: Vec<(u32, String)>,
+    spans: Vec<SpanRecord>,
+    /// Indices of currently-open spans (stack discipline).
+    stack: Vec<usize>,
+    events: Vec<EventRecord>,
+    counters: CounterSet,
+}
+
+/// The telemetry handle. `Telemetry::off()` (or `default()`) is a
+/// no-op shell: every method early-returns without reading the clock or
+/// allocating, which is what "zero overhead when off" means here.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    inner: Option<RefCell<Recorder>>,
+}
+
+impl Telemetry {
+    /// Disabled handle — all operations are no-ops.
+    pub fn off() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// Enabled handle that records silently (the `--trace`/`--metrics`
+    /// CLI path).
+    pub fn recording() -> Telemetry {
+        Telemetry::with_echo(false)
+    }
+
+    /// Handle matching a configured verbosity: `Off` disables,
+    /// `Info` records, `Debug`/`Trace` record *and* echo events to
+    /// stderr (successor of the `KUBE_PACKD_DEBUG` env toggle).
+    pub fn from_verbosity(v: Verbosity) -> Telemetry {
+        match v {
+            Verbosity::Off => Telemetry::off(),
+            Verbosity::Info => Telemetry::with_echo(false),
+            Verbosity::Debug | Verbosity::Trace => Telemetry::with_echo(true),
+        }
+    }
+
+    fn with_echo(echo: bool) -> Telemetry {
+        Telemetry {
+            inner: Some(RefCell::new(Recorder {
+                echo,
+                origin: Instant::now(),
+                lane: 0,
+                lane_alloc: Arc::new(AtomicU32::new(0)),
+                lane_names: vec![(0, "main".to_string())],
+                spans: Vec::new(),
+                stack: Vec::new(),
+                events: Vec::new(),
+                counters: CounterSet::default(),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a named span; the returned guard closes it on drop.
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        let idx = match &self.inner {
+            None => usize::MAX,
+            Some(cell) => {
+                let mut r = cell.borrow_mut();
+                let now = r.origin.elapsed().as_micros() as u64;
+                let parent = r.stack.last().copied();
+                let lane = r.lane;
+                r.spans.push(SpanRecord {
+                    name,
+                    lane,
+                    parent,
+                    start_us: now,
+                    end_us: u64::MAX,
+                    args: Vec::new(),
+                });
+                let idx = r.spans.len() - 1;
+                r.stack.push(idx);
+                idx
+            }
+        };
+        Span { tel: self, idx }
+    }
+
+    fn close_span(&self, idx: usize) {
+        if idx == usize::MAX {
+            return;
+        }
+        if let Some(cell) = &self.inner {
+            let mut r = cell.borrow_mut();
+            let now = r.origin.elapsed().as_micros() as u64;
+            if let Some(s) = r.spans.get_mut(idx) {
+                if s.end_us == u64::MAX {
+                    s.end_us = now.max(s.start_us);
+                }
+            }
+            // Pop through idx: guards dropped out of order still leave a
+            // consistent stack.
+            if let Some(pos) = r.stack.iter().rposition(|&i| i == idx) {
+                r.stack.truncate(pos);
+            }
+        }
+    }
+
+    fn annotate(&self, idx: usize, key: &'static str, value: String) {
+        if let Some(cell) = &self.inner {
+            let mut r = cell.borrow_mut();
+            if let Some(s) = r.spans.get_mut(idx) {
+                s.args.push((key, value));
+            }
+        }
+    }
+
+    /// Add to a counter (see [`CounterSet::add`]).
+    pub fn add(&self, metric: &'static str, labels: &str, delta: u64) {
+        if let Some(cell) = &self.inner {
+            cell.borrow_mut().counters.add(metric, labels, delta);
+        }
+    }
+
+    /// Raise a gauge (see [`CounterSet::gauge_max`]).
+    pub fn gauge_max(&self, metric: &'static str, labels: &str, value: u64) {
+        if let Some(cell) = &self.inner {
+            cell.borrow_mut().counters.gauge_max(metric, labels, value);
+        }
+    }
+
+    /// Record a structured event. The message closure only runs when the
+    /// handle is enabled — disabled handles pay nothing for formatting.
+    pub fn event(&self, scope: &'static str, msg: impl FnOnce() -> String) {
+        if self.inner.is_none() {
+            return;
+        }
+        let m = msg();
+        let cell = self.inner.as_ref().unwrap();
+        let mut r = cell.borrow_mut();
+        if r.echo {
+            eprintln!("[{scope}] {m}");
+        }
+        let lane = r.lane;
+        let ts_us = r.origin.elapsed().as_micros() as u64;
+        r.events.push(EventRecord {
+            lane,
+            ts_us,
+            scope,
+            msg: m,
+        });
+    }
+
+    /// Spawn a handle on a fresh timeline lane sharing this handle's
+    /// time origin — one per portfolio task / churn policy. Call on the
+    /// owning thread *before* spawning workers so lane numbering stays
+    /// deterministic; hand the result back via [`absorb`](Self::absorb).
+    pub fn child(&self, label: &str) -> Telemetry {
+        match &self.inner {
+            None => Telemetry::off(),
+            Some(cell) => {
+                let r = cell.borrow();
+                let lane = r.lane_alloc.fetch_add(1, Ordering::Relaxed) + 1;
+                Telemetry {
+                    inner: Some(RefCell::new(Recorder {
+                        echo: false,
+                        origin: r.origin,
+                        lane,
+                        lane_alloc: r.lane_alloc.clone(),
+                        lane_names: vec![(lane, label.to_string())],
+                        spans: Vec::new(),
+                        stack: Vec::new(),
+                        events: Vec::new(),
+                        counters: CounterSet::default(),
+                    })),
+                }
+            }
+        }
+    }
+
+    /// Merge a child handle's record into this one. Deterministic as
+    /// long as callers absorb in a deterministic order (the race absorbs
+    /// by task index, the churn comparator by policy order).
+    pub fn absorb(&self, child: Telemetry) {
+        let cell = match &self.inner {
+            Some(c) => c,
+            None => return,
+        };
+        let ccell = match child.inner {
+            Some(c) => c,
+            None => return,
+        };
+        let c = ccell.into_inner();
+        let mut r = cell.borrow_mut();
+        let offset = r.spans.len();
+        for mut s in c.spans {
+            s.parent = s.parent.map(|p| p + offset);
+            if s.end_us == u64::MAX {
+                s.end_us = s.start_us; // absorbed while open: zero-length
+            }
+            r.spans.push(s);
+        }
+        r.events.extend(c.events);
+        r.lane_names.extend(c.lane_names);
+        r.counters.merge(&c.counters);
+    }
+
+    /// Snapshot of the counter set (tests, reports).
+    pub fn counters(&self) -> CounterSet {
+        match &self.inner {
+            None => CounterSet::default(),
+            Some(cell) => cell.borrow().counters.clone(),
+        }
+    }
+
+    /// Number of recorded spans (tests).
+    pub fn span_count(&self) -> usize {
+        match &self.inner {
+            None => 0,
+            Some(cell) => cell.borrow().spans.len(),
+        }
+    }
+
+    /// Chrome-trace JSON of everything recorded so far.
+    pub fn export_chrome(&self) -> String {
+        match &self.inner {
+            None => chrome::render(&[], &[], &[]),
+            Some(cell) => {
+                let r = cell.borrow();
+                chrome::render(&r.spans, &r.events, &r.lane_names)
+            }
+        }
+    }
+
+    /// Prometheus text exposition of the counter set.
+    pub fn export_prometheus(&self) -> String {
+        match &self.inner {
+            None => prometheus::render(&CounterSet::default()),
+            Some(cell) => prometheus::render(&cell.borrow().counters),
+        }
+    }
+}
+
+/// RAII span guard: closes its span when dropped. Obtained from
+/// [`Telemetry::span`]; annotate with [`Span::arg`].
+pub struct Span<'a> {
+    tel: &'a Telemetry,
+    idx: usize,
+}
+
+impl Span<'_> {
+    /// Attach a key/value argument (shown in the trace viewer). Free
+    /// when telemetry is off — the value is never formatted.
+    pub fn arg(&self, key: &'static str, value: impl std::fmt::Display) {
+        if self.idx != usize::MAX {
+            self.tel.annotate(self.idx, key, value.to_string());
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.tel.close_span(self.idx);
+    }
+}
+
+/// Open an RAII span on a [`Telemetry`] handle held for the rest of the
+/// enclosing block: `span!(tel, "phase1_solve")`.
+#[macro_export]
+macro_rules! span {
+    ($tel:expr, $name:literal) => {
+        let _telemetry_span = $tel.span($name);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_is_inert() {
+        let tel = Telemetry::off();
+        assert!(!tel.enabled());
+        {
+            let sp = tel.span("nothing");
+            sp.arg("k", 1u64);
+        }
+        tel.add("x_total", "", 5);
+        tel.event("scope", || unreachable!("must not format when off"));
+        assert_eq!(tel.span_count(), 0);
+        assert!(tel.counters().is_empty());
+        assert_eq!(tel.export_prometheus(), "");
+    }
+
+    #[test]
+    fn spans_nest_and_close_on_drop() {
+        let tel = Telemetry::recording();
+        {
+            let _outer = tel.span("outer");
+            {
+                let inner = tel.span("inner");
+                inner.arg("tier", 0u64);
+            }
+        }
+        assert_eq!(tel.span_count(), 2);
+        let trace = tel.export_chrome();
+        assert!(trace.contains("\"outer\""));
+        assert!(trace.contains("\"inner\""));
+    }
+
+    #[test]
+    fn verbosity_parses_and_orders() {
+        assert_eq!(Verbosity::parse("debug"), Some(Verbosity::Debug));
+        assert_eq!(Verbosity::parse("bogus"), None);
+        assert!(Verbosity::Off < Verbosity::Info);
+        assert!(Verbosity::Info < Verbosity::Debug);
+        assert_eq!(Verbosity::default(), Verbosity::Off);
+        assert!(!Telemetry::from_verbosity(Verbosity::Off).enabled());
+        assert!(Telemetry::from_verbosity(Verbosity::Info).enabled());
+    }
+
+    #[test]
+    fn children_merge_in_absorb_order() {
+        let tel = Telemetry::recording();
+        let c1 = tel.child("task-0");
+        let c2 = tel.child("task-1");
+        {
+            span!(c2, "b");
+        }
+        {
+            span!(c1, "a");
+        }
+        c1.add("n_total", "", 1);
+        c2.add("n_total", "", 2);
+        tel.absorb(c1);
+        tel.absorb(c2);
+        assert_eq!(tel.span_count(), 2);
+        assert_eq!(tel.counters().get("n_total", ""), Some(3));
+        // Lanes were allocated in creation order: task-0 → 1, task-1 → 2.
+        let trace = tel.export_chrome();
+        assert!(trace.contains("task-0"));
+        assert!(trace.contains("task-1"));
+    }
+
+    #[test]
+    fn events_are_recorded_with_scope() {
+        let tel = Telemetry::recording();
+        tel.event("optimize", || "tier 0 phase1: placed 3".to_string());
+        let trace = tel.export_chrome();
+        assert!(trace.contains("tier 0 phase1: placed 3"));
+        assert!(trace.contains("\"optimize\""));
+    }
+
+    #[test]
+    fn exports_are_byte_stable() {
+        let tel = Telemetry::recording();
+        {
+            let sp = tel.span("solve");
+            sp.arg("tier", 1u64);
+        }
+        tel.add("solver_decisions_total", "strategy=\"default\"", 42);
+        assert_eq!(tel.export_chrome(), tel.export_chrome());
+        assert_eq!(tel.export_prometheus(), tel.export_prometheus());
+    }
+}

@@ -1,0 +1,65 @@
+//! Prometheus text-exposition exporter for telemetry counters.
+//!
+//! Output follows the text format a `/metrics` endpoint would serve:
+//! one `# TYPE` comment per metric followed by its sample lines, every
+//! metric prefixed `kube_packd_`. Iteration over the underlying
+//! `BTreeMap` makes the dump byte-stable for a fixed run — the property
+//! the snapshot tests pin.
+
+use super::counters::CounterSet;
+
+/// Namespace prefix on every exported metric.
+pub const PREFIX: &str = "kube_packd_";
+
+/// Render the counter set as Prometheus text exposition.
+pub fn render(counters: &CounterSet) -> String {
+    let mut out = String::new();
+    let mut last_metric: Option<String> = None;
+    for (metric, labels, kind, value) in counters.iter() {
+        if last_metric.as_deref() != Some(metric) {
+            out.push_str("# TYPE ");
+            out.push_str(PREFIX);
+            out.push_str(metric);
+            out.push(' ');
+            out.push_str(kind.label());
+            out.push('\n');
+            last_metric = Some(metric.to_string());
+        }
+        out.push_str(PREFIX);
+        out.push_str(metric);
+        if !labels.is_empty() {
+            out.push('{');
+            out.push_str(labels);
+            out.push('}');
+        }
+        out.push(' ');
+        out.push_str(&value.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_types_once_and_sorted() {
+        let mut c = CounterSet::default();
+        c.add("solver_decisions_total", "strategy=\"default\"", 10);
+        c.add("solver_decisions_total", "strategy=\"easiest\"", 4);
+        c.gauge_max("solver_max_depth", "", 6);
+        let text = render(&c);
+        let expected = "# TYPE kube_packd_solver_decisions_total counter\n\
+                        kube_packd_solver_decisions_total{strategy=\"default\"} 10\n\
+                        kube_packd_solver_decisions_total{strategy=\"easiest\"} 4\n\
+                        # TYPE kube_packd_solver_max_depth gauge\n\
+                        kube_packd_solver_max_depth 6\n";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn empty_set_renders_empty() {
+        assert_eq!(render(&CounterSet::default()), "");
+    }
+}

@@ -9,7 +9,8 @@
 //! * [`fingerprint`] — streaming FNV-1a fingerprints for the solve caches.
 //! * [`json`]  — JSON value tree, writer, and recursive-descent parser.
 //! * [`cli`]   — flag/subcommand parser for the `kube-packd` binary.
-//! * [`timer`] — monotonic deadlines and time budgets for the solver.
+//! * [`timer`] — deprecated shim re-exporting the clock that moved to
+//!   [`crate::telemetry::clock`] (the crate's single monotonic source).
 //! * [`stats`] — mean/median/percentile helpers for benches and reports.
 //! * [`prop`]  — seeded property-testing mini-framework (proptest stand-in).
 //! * [`bench`] — criterion stand-in used by `benches/*.rs` (harness=false).

@@ -1,192 +1,7 @@
-//! Monotonic deadlines and hierarchical time budgets.
-//!
-//! The paper's Algorithm 1 divides a total wall-clock budget `T_total`
-//! across priority tiers: each tier is *reserved* `α·T_total/(p_max+1)`,
-//! and any reserved-but-unused time rolls into the next solver call
-//! (`get_timeout() = α·T_total/(p_max+1) + unused`). [`TimeBudget`]
-//! implements exactly that accounting; [`Deadline`] is the cheap
-//! per-search check the solver polls.
+//! Deprecated location: the monotonic clock moved to
+//! [`crate::telemetry::clock`] so spans, deadlines, and budgets share a
+//! single time source. This shim re-exports the old names for external
+//! callers; new code should import from `telemetry::clock` (or
+//! `telemetry`) directly.
 
-use std::time::{Duration, Instant};
-
-/// A fixed point in time the solver must not run past.
-#[derive(Clone, Copy, Debug)]
-pub struct Deadline {
-    end: Instant,
-}
-
-impl Deadline {
-    pub fn after(d: Duration) -> Self {
-        Deadline {
-            end: Instant::now() + d,
-        }
-    }
-
-    /// A deadline so far out it never fires (for "solve to optimality").
-    pub fn unlimited() -> Self {
-        Deadline {
-            end: Instant::now() + Duration::from_secs(86_400 * 365),
-        }
-    }
-
-    #[inline]
-    pub fn expired(&self) -> bool {
-        Instant::now() >= self.end
-    }
-
-    pub fn remaining(&self) -> Duration {
-        self.end.saturating_duration_since(Instant::now())
-    }
-
-    /// [`Deadline::remaining`] against a caller-provided `now` — saves a
-    /// second `Instant::now()` on hot poll paths that already hold one.
-    pub fn remaining_from(&self, now: Instant) -> Duration {
-        self.end.saturating_duration_since(now)
-    }
-
-    /// The earlier of two deadlines.
-    pub fn min(self, other: Deadline) -> Deadline {
-        Deadline {
-            end: self.end.min(other.end),
-        }
-    }
-}
-
-/// Paper's per-tier time accounting (Implementation §Optimisation problem).
-///
-/// `T_total` is the overall wall-clock limit; a fraction `α` of it is
-/// pre-partitioned evenly across `p_max + 1` priority tiers, and the
-/// remaining `(1-α)·T_total` plus any unused reservations are consumed
-/// opportunistically. Each tier's reservation is further split in half
-/// between its two solve phases (maximise placements / minimise moves).
-#[derive(Debug)]
-pub struct TimeBudget {
-    started: Instant,
-    total: Duration,
-    tier_reservation: Duration,
-    /// Reserved-but-unused time carried across solver calls.
-    unused: Duration,
-}
-
-impl TimeBudget {
-    pub fn new(total: Duration, alpha: f64, num_tiers: u32) -> Self {
-        assert!((0.0..=1.0).contains(&alpha), "alpha in [0,1]");
-        assert!(num_tiers > 0);
-        let tier_reservation = total.mul_f64(alpha / num_tiers as f64);
-        TimeBudget {
-            started: Instant::now(),
-            total,
-            tier_reservation,
-            unused: Duration::ZERO,
-        }
-    }
-
-    /// Wall-clock elapsed since the budget was opened.
-    pub fn elapsed(&self) -> Duration {
-        self.started.elapsed()
-    }
-
-    /// Hard overall deadline (`T_total` from the start).
-    pub fn overall_deadline(&self) -> Deadline {
-        Deadline {
-            end: self.started + self.total,
-        }
-    }
-
-    /// Time granted to the next solver call within one tier *phase*
-    /// (half the tier reservation, per the paper) plus all carried
-    /// `unused` time — clipped to the overall remaining budget.
-    pub fn grant_phase(&mut self) -> Duration {
-        let want = self.tier_reservation / 2 + self.unused;
-        let remaining = self.total.saturating_sub(self.started.elapsed());
-        let granted = want.min(remaining);
-        // The grant is handed out; the carry is re-credited on `report_used`.
-        self.unused = Duration::ZERO;
-        granted
-    }
-
-    /// Report how much of a `granted` slice a solve actually consumed;
-    /// the difference is carried forward (paper's `unused`).
-    pub fn report_used(&mut self, granted: Duration, used: Duration) {
-        self.unused += granted.saturating_sub(used.min(granted));
-    }
-
-    /// Whether the overall budget is exhausted.
-    pub fn exhausted(&self) -> bool {
-        self.started.elapsed() >= self.total
-    }
-}
-
-/// Simple stopwatch for measurements.
-#[derive(Clone, Copy, Debug)]
-pub struct Stopwatch {
-    start: Instant,
-}
-
-impl Stopwatch {
-    pub fn start() -> Self {
-        Stopwatch {
-            start: Instant::now(),
-        }
-    }
-
-    pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
-    }
-
-    pub fn elapsed_secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn deadline_expires() {
-        let d = Deadline::after(Duration::from_millis(1));
-        std::thread::sleep(Duration::from_millis(5));
-        assert!(d.expired());
-        assert_eq!(d.remaining(), Duration::ZERO);
-    }
-
-    #[test]
-    fn deadline_unlimited_does_not_expire() {
-        assert!(!Deadline::unlimited().expired());
-    }
-
-    #[test]
-    fn deadline_min_picks_earlier() {
-        let a = Deadline::after(Duration::from_secs(1));
-        let b = Deadline::after(Duration::from_secs(10));
-        let m = a.min(b);
-        assert!(m.remaining() <= Duration::from_secs(1));
-    }
-
-    #[test]
-    fn budget_partitions_alpha_evenly() {
-        let mut b = TimeBudget::new(Duration::from_secs(10), 0.8, 4);
-        // tier reservation = 0.8*10/4 = 2s; phase grant = 1s (+unused 0)
-        let g = b.grant_phase();
-        assert!((g.as_secs_f64() - 1.0).abs() < 0.05, "{g:?}");
-    }
-
-    #[test]
-    fn unused_time_carries_forward() {
-        let mut b = TimeBudget::new(Duration::from_secs(10), 0.8, 4);
-        let g1 = b.grant_phase();
-        b.report_used(g1, Duration::from_millis(100)); // used 0.1 of 1s
-        let g2 = b.grant_phase();
-        // g2 = 1s + 0.9s carry ≈ 1.9s
-        assert!(g2 > Duration::from_millis(1700), "{g2:?}");
-    }
-
-    #[test]
-    fn grant_clipped_by_overall_budget() {
-        let mut b = TimeBudget::new(Duration::from_millis(5), 1.0, 1);
-        std::thread::sleep(Duration::from_millis(10));
-        assert!(b.exhausted());
-        assert_eq!(b.grant_phase(), Duration::ZERO);
-    }
-}
+pub use crate::telemetry::clock::{Deadline, Stopwatch, TimeBudget};

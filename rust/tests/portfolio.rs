@@ -14,9 +14,9 @@ use kube_packd::optimizer::plan::MovePlan;
 use kube_packd::portfolio::{solve_portfolio, PortfolioConfig};
 use kube_packd::simulator::KwokSimulator;
 use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig};
+use kube_packd::telemetry::Deadline;
 use kube_packd::util::prop::check;
 use kube_packd::util::rng::Rng;
-use kube_packd::util::timer::Deadline;
 use kube_packd::workload::{ConstraintProfile, GenParams, Instance};
 
 /// Random small packing model (pods × nodes, two capacity dimensions).

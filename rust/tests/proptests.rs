@@ -10,9 +10,9 @@ use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
 use kube_packd::optimizer::plan::MovePlan;
 use kube_packd::simulator::KwokSimulator;
 use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig};
+use kube_packd::telemetry::Deadline;
 use kube_packd::util::prop::check;
 use kube_packd::util::rng::Rng;
-use kube_packd::util::timer::Deadline;
 use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
 use kube_packd::workload::{GenParams, Instance};
 

@@ -1,0 +1,289 @@
+//! Telemetry-subsystem integration tests.
+//!
+//! The contract under test: telemetry *observes* the pipeline and never
+//! feeds back — solve results are byte-identical with recording on or
+//! off, at any thread count — and the two exports are well-formed and
+//! byte-stable for a fixed recorded run.
+//!
+//! Determinism caveat (same as the portfolio tests): byte-identity
+//! across worker counts holds whenever every racer completes inside its
+//! window, so the models here are tiny and the deadlines generous.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
+use kube_packd::lifecycle::{run_churn, run_churn_traced, ChurnConfig, Policy};
+use kube_packd::optimizer::{optimize_traced, OptimizerConfig, SolveSession};
+use kube_packd::telemetry::{Telemetry, Verbosity};
+use kube_packd::util::json;
+use kube_packd::util::prop::check;
+use kube_packd::util::rng::Rng;
+use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
+use kube_packd::workload::GenParams;
+
+/// Random small cluster: every pod pending, mixed priorities, tight
+/// enough that phase 1 has real packing work.
+fn random_cluster(rng: &mut Rng) -> (ClusterState, u32) {
+    let nodes = rng.range_usize(2, 4);
+    let pods = rng.range_usize(4, 9);
+    let tiers = rng.range_usize(1, 3) as u32;
+    let node_list = identical_nodes(nodes, Resources::new(1000, 1000));
+    let pod_list: Vec<Pod> = (0..pods)
+        .map(|i| {
+            Pod::new(
+                i as u32,
+                format!("p-{i}"),
+                Resources::new(rng.range_i64(150, 650), rng.range_i64(150, 650)),
+                Priority(rng.range_usize(0, tiers as usize - 1) as u32),
+            )
+        })
+        .collect();
+    (ClusterState::new(node_list, pod_list), tiers - 1)
+}
+
+/// The determinism tentpole: (telemetry off, recording) × threads
+/// {1, 8} all produce the identical plan, placement vector, and
+/// certificate. Recording must be a pure observer.
+#[test]
+fn prop_results_identical_with_telemetry_on_or_off_at_threads_1_and_8() {
+    check(
+        "telemetry_observer_identity",
+        0x7E1E,
+        8,
+        random_cluster,
+        |(state, p_max)| {
+            let mut runs = Vec::new();
+            for threads in [1usize, 8] {
+                for recording in [false, true] {
+                    let tel = if recording {
+                        Telemetry::recording()
+                    } else {
+                        Telemetry::off()
+                    };
+                    let cfg = OptimizerConfig::with_timeout(30.0).with_threads(threads);
+                    let res = optimize_traced(state, *p_max, &cfg, None, &tel);
+                    runs.push((threads, recording, res));
+                }
+            }
+            let (_, _, first) = &runs[0];
+            for (threads, recording, res) in &runs[1..] {
+                let same = match (first, res) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => {
+                        a.target == b.target
+                            && a.placed_per_priority == b.placed_per_priority
+                            && a.proved_optimal == b.proved_optimal
+                    }
+                    _ => false,
+                };
+                if !same {
+                    return Err(format!(
+                        "threads={threads} recording={recording} diverged from threads=1 off"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Figure-1 fragmentation: two big nodes, two small pods spread, one
+/// stranded — the canonical state where the optimiser has work to do.
+fn fragmented_figure1() -> ClusterState {
+    use kube_packd::cluster::{NodeId, PodId};
+    let nodes = identical_nodes(2, Resources::new(4000, 4096));
+    let pods = vec![
+        Pod::new(0, "pod-1", Resources::new(10, 2048), Priority(0)),
+        Pod::new(1, "pod-2", Resources::new(10, 2048), Priority(0)),
+        Pod::new(2, "pod-3", Resources::new(10, 3072), Priority(0)),
+    ];
+    let mut st = ClusterState::new(nodes, pods);
+    st.bind(PodId(0), NodeId(0)).unwrap();
+    st.bind(PodId(1), NodeId(1)).unwrap();
+    st
+}
+
+/// A recorded session solve covers the whole advertised span vocabulary
+/// and the Chrome export is well-formed: per lane, every `B` has a
+/// matching same-name `E` and timestamps never go backwards.
+#[test]
+fn chrome_trace_is_well_formed_and_covers_the_pipeline() {
+    let tel = Telemetry::recording();
+    let state = fragmented_figure1();
+    let cfg = OptimizerConfig::with_timeout(10.0).with_threads(2);
+    let mut session = SolveSession::new();
+    let res = session.solve_traced(&state, 0, &cfg, &tel);
+    assert!(res.is_some(), "figure 1 must solve");
+
+    let trace = tel.export_chrome();
+    let doc = json::parse(&trace).expect("chrome trace must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+
+    // The exporter writes the B/E duration stream first and then the
+    // instant events, so each stream gets its own per-lane clock.
+    let mut stacks: BTreeMap<i64, Vec<String>> = BTreeMap::new();
+    let mut span_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut inst_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph");
+        if ph == "M" {
+            continue; // lane-name metadata carries no timestamp
+        }
+        let tid = ev.get("tid").and_then(|t| t.as_i64()).expect("tid");
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("name");
+        let clock = if ph == "i" { &mut inst_ts } else { &mut span_ts };
+        let prev = clock.entry(tid).or_insert(0.0);
+        assert!(
+            ts >= *prev,
+            "timestamps must be monotone per lane: {name} at {ts} after {prev}"
+        );
+        *prev = ts;
+        match ph {
+            "B" => {
+                begins += 1;
+                names.insert(name.to_string());
+                stacks.entry(tid).or_default().push(name.to_string());
+            }
+            "E" => {
+                ends += 1;
+                let open = stacks
+                    .entry(tid)
+                    .or_default()
+                    .pop()
+                    .unwrap_or_else(|| panic!("E '{name}' with no open span on lane {tid}"));
+                assert_eq!(open, name, "E must close the innermost open span");
+            }
+            "i" => {}
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(begins, ends, "every B needs a matching E");
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "lane {tid} left spans open: {stack:?}");
+    }
+    for expected in [
+        "session",
+        "phase1",
+        "phase2",
+        "cache",
+        "decompose",
+        "strategy-race",
+        "race-task",
+    ] {
+        assert!(
+            names.contains(expected),
+            "span vocabulary missing {expected:?}; got {names:?}"
+        );
+    }
+}
+
+/// Both exports are byte-stable for a fixed recorded run: exporting the
+/// same handle twice yields identical bytes (the snapshot property).
+#[test]
+fn exports_are_byte_stable_for_a_fixed_run() {
+    let tel = Telemetry::recording();
+    let state = fragmented_figure1();
+    let cfg = OptimizerConfig::with_timeout(10.0).with_threads(2);
+    optimize_traced(&state, 0, &cfg, None, &tel).expect("figure 1 must solve");
+    assert_eq!(tel.export_chrome(), tel.export_chrome());
+    assert_eq!(tel.export_prometheus(), tel.export_prometheus());
+}
+
+/// The Prometheus dump follows the text exposition format and carries
+/// the layered counter families: solver, portfolio, optimizer, session.
+#[test]
+fn prometheus_export_is_schema_valid_and_layered() {
+    let tel = Telemetry::recording();
+    let state = fragmented_figure1();
+    let cfg = OptimizerConfig::with_timeout(10.0).with_threads(2);
+    let mut session = SolveSession::new();
+    session
+        .solve_traced(&state, 0, &cfg, &tel)
+        .expect("figure 1 must solve");
+
+    let text = tel.export_prometheus();
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            assert!(
+                rest.starts_with("kube_packd_"),
+                "TYPE line without namespace: {line}"
+            );
+            let kind = rest.rsplit(' ').next().unwrap();
+            assert!(kind == "counter" || kind == "gauge", "bad kind: {line}");
+        } else {
+            assert!(
+                line.starts_with("kube_packd_"),
+                "sample line without namespace: {line}"
+            );
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(value.parse::<u64>().is_ok(), "non-numeric sample: {line}");
+        }
+    }
+    for family in [
+        "kube_packd_solver_decisions_total",
+        "kube_packd_portfolio_solves_total",
+        "kube_packd_optimizer_runs_total",
+        "kube_packd_session_solves_total",
+    ] {
+        assert!(text.contains(family), "missing {family} in:\n{text}");
+    }
+}
+
+/// Churn replay digests are identical with telemetry recording or off —
+/// the lifecycle layer inherits the observer property — and a recorded
+/// run surfaces churn-level counters.
+#[test]
+fn churn_digests_identical_with_recording_on() {
+    let trace = ChurnTraceGenerator::new(
+        ChurnParams {
+            horizon_ms: 3_000,
+            mean_arrival_ms: 500,
+            mean_lifetime_ms: 1_200,
+            ..ChurnParams::for_cluster(GenParams {
+                nodes: 3,
+                pods_per_node: 3,
+                priority_tiers: 2,
+                usage: 0.9,
+            })
+        },
+        17,
+    )
+    .generate();
+    let mut cfg = ChurnConfig::for_policy(Policy::FallbackSweep);
+    cfg.sweep_every_ms = 1_000; // several sweep ticks inside the horizon
+    cfg.fallback_timeout = std::time::Duration::from_secs(5);
+
+    let off = run_churn(&trace, &cfg);
+    let tel = Telemetry::recording();
+    let on = run_churn_traced(&trace, &cfg, &tel);
+
+    assert_eq!(off.log.digest(), on.log.digest());
+    assert_eq!(off.log.render(), on.log.render());
+    assert_eq!(off.served_per_priority, on.served_per_priority);
+    assert_eq!(off.final_placed, on.final_placed);
+
+    let counters = tel.counters();
+    assert!(counters.get("churn_events_total", "").unwrap_or(0) > 0);
+    assert!(counters.get("sweep_runs_total", "").unwrap_or(0) > 0);
+}
+
+#[test]
+fn verbosity_parses_all_levels_and_rejects_garbage() {
+    assert_eq!(Verbosity::parse("off"), Some(Verbosity::Off));
+    assert_eq!(Verbosity::parse("info"), Some(Verbosity::Info));
+    assert_eq!(Verbosity::parse("debug"), Some(Verbosity::Debug));
+    assert_eq!(Verbosity::parse("trace"), Some(Verbosity::Trace));
+    assert_eq!(Verbosity::parse("loud"), None);
+    // Off must mean disabled — the zero-overhead contract.
+    assert!(!Telemetry::from_verbosity(Verbosity::Off).enabled());
+    assert!(Telemetry::from_verbosity(Verbosity::Info).enabled());
+}
