@@ -15,7 +15,7 @@ use kube_packd::lifecycle::{run_churn, ChurnConfig, ChurnResult, Policy, SweepCo
 use kube_packd::optimizer::{constraints::ModuleRegistry, OptimizerConfig};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::solver::SolverConfig;
-use kube_packd::telemetry::Deadline;
+use kube_packd::telemetry::{Deadline, Telemetry};
 use kube_packd::util::bench::{black_box, Bencher};
 use kube_packd::util::json::Json;
 use kube_packd::workload::{ChurnParams, ChurnTraceGenerator, GenParams, Instance};
@@ -141,6 +141,7 @@ fn main() {
             &SolverConfig::default(),
             &PortfolioConfig::default(),
             &ModuleRegistry::standard(),
+            &Telemetry::off(),
         );
         if let ProvisionOutcome::Plan(p) = &out {
             certified = p.certified();

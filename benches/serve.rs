@@ -1,0 +1,44 @@
+//! Bench: scheduler-as-a-service — the serve daemon under closed- and
+//! open-loop admission load over loopback.
+//!
+//! Emits machine-readable `BENCH_serve.json` in the working directory:
+//! one cell per arrival mode with sustained admissions/sec and the
+//! p50/p95/p99 decision-latency distribution (window batching
+//! included), plus a determinism record asserting the reply stream and
+//! final state digest of an in-process replay are byte-identical at 1
+//! and 8 portfolio threads.
+//!
+//! Run with `--quick` (or env `BENCH_QUICK=1`) for the CI-sized
+//! workload.
+
+use kube_packd::server::loadgen::bench_document;
+use kube_packd::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let mut doc = bench_document(quick).expect("serve bench");
+    doc.set(
+        "host_threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64,
+    );
+    let det = doc.get("determinism").expect("determinism record");
+    println!(
+        "serve bench: {} cells, thread_independent={}",
+        doc.get("cells").and_then(Json::as_arr).map(|c| c.len()).unwrap_or(0),
+        det.get("thread_independent").and_then(Json::as_bool).unwrap_or(false)
+    );
+    for cell in doc.get("cells").and_then(Json::as_arr).cloned().unwrap_or_default() {
+        println!(
+            "  {:<10} {:>6} req  {:>8.1} adm/s  p50 {:>7.2}ms  p95 {:>7.2}ms  p99 {:>7.2}ms",
+            cell.get("mode").and_then(Json::as_str).unwrap_or("?"),
+            cell.get("requests").and_then(Json::as_i64).unwrap_or(0),
+            cell.get("admissions_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+            cell.get("latency_p50_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            cell.get("latency_p95_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            cell.get("latency_p99_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+    std::fs::write("BENCH_serve.json", doc.to_string_pretty()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

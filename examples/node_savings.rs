@@ -22,7 +22,7 @@ use kube_packd::optimizer::constraints::ModuleRegistry;
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::simulator::KwokSimulator;
 use kube_packd::solver::SolverConfig;
-use kube_packd::telemetry::Deadline;
+use kube_packd::telemetry::{Deadline, Telemetry};
 use kube_packd::workload::{GenParams, Instance};
 
 /// Smallest node count (identical nodes of `cap`) at which the default
@@ -57,6 +57,7 @@ fn certified_nodes_needed(inst: &Instance, cap: Resources) -> Option<(usize, boo
         &SolverConfig::default(),
         &PortfolioConfig::default(),
         &ModuleRegistry::standard(),
+        &Telemetry::off(),
     ) {
         ProvisionOutcome::Plan(plan) => Some((plan.node_count, plan.certified())),
         ProvisionOutcome::Infeasible => {

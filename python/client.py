@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Stdlib-only client for the `kube-packd serve` daemon.
+
+The wire protocol is newline-delimited JSON over TCP: one request
+object per line, one reply object per line. Every request may carry an
+opaque integer ``tag`` which the daemon echoes on the reply (including
+error replies), so a client can correlate out-of-order arrivals —
+``submit`` replies are deferred to the end of their batching window,
+while ``query``/``health``/... answer immediately.
+
+Library use::
+
+    with ServeClient(port=7878) as c:
+        t_web = c.submit("web", replicas=2, cpu_milli=100, ram_mib=2048)
+        t_db = c.submit("db", replicas=1, cpu_milli=100, ram_mib=3072)
+        for t in (t_web, t_db):
+            reply = c.wait(t)            # blocks until the window closes
+            print(reply["certificate"], reply["placements"])
+        print(c.request("query")["digest"])
+        c.request("shutdown")            # drains the daemon; it exits 0
+
+CLI use (the CI smoke test)::
+
+    python3 python/client.py --port 7979 --figure1 --shutdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+import sys
+
+
+class ServeClient:
+    """One connection to the daemon, with tag-based reply correlation."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 7878, timeout: float = 60.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
+        self._next_tag = 0
+        self._pending: dict[int, dict] = {}
+
+    # -- plumbing -----------------------------------------------------------
+
+    def send(self, op: str, **fields) -> int:
+        """Send one request; returns its tag (use :meth:`wait`)."""
+        tag = self._next_tag
+        self._next_tag += 1
+        line = json.dumps({"op": op, "tag": tag, **fields}, separators=(",", ":"))
+        self._sock.sendall(line.encode("utf-8") + b"\n")
+        return tag
+
+    def recv(self) -> dict:
+        """Read the next reply line, whatever request it answers."""
+        line = self._rfile.readline()
+        if not line:
+            raise ConnectionError("daemon closed the connection")
+        return json.loads(line)
+
+    def wait(self, tag: int) -> dict:
+        """Block until the reply tagged ``tag`` arrives."""
+        while tag not in self._pending:
+            reply = self.recv()
+            self._pending[reply.get("tag")] = reply
+        return self._pending.pop(tag)
+
+    def request(self, op: str, **fields) -> dict:
+        """Send and wait in one step (fine for immediate-reply ops)."""
+        return self.wait(self.send(op, **fields))
+
+    # -- conveniences -------------------------------------------------------
+
+    def submit(self, name: str, replicas: int, cpu_milli: int, ram_mib: int,
+               priority: int = 0, **constraints) -> int:
+        """Submit one ReplicaSet-shaped batch; reply arrives at window
+        close, so this returns the tag rather than blocking."""
+        return self.send("submit", name=name, replicas=replicas, cpu_milli=cpu_milli,
+                         ram_mib=ram_mib, priority=priority, **constraints)
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *_exc) -> None:
+        self.close()
+
+
+def run_figure1(client: ServeClient) -> None:
+    """The paper's figure-1 batch: 2Gi + 2Gi + 3Gi on two 4Gi nodes.
+
+    The default scheduler's spreading strands the 3Gi pod; the window
+    solve must re-pack all three and prove it. Raises on anything less.
+    """
+    tags = [
+        client.submit("web", replicas=2, cpu_milli=100, ram_mib=2048),
+        client.submit("db", replicas=1, cpu_milli=100, ram_mib=3072),
+    ]
+    for tag in tags:
+        reply = client.wait(tag)
+        if "error" in reply:
+            raise RuntimeError(f"submit rejected: {reply['error']}")
+        placements = reply["placements"]
+        unplaced = [p["pod"] for p in placements if p["node"] is None]
+        if unplaced:
+            raise RuntimeError(f"unplaced pods {unplaced} in window {reply['window']}")
+        if reply["certificate"] != "proven-optimal":
+            raise RuntimeError(f"expected a proven-optimal window, got {reply['certificate']!r}")
+        for p in placements:
+            print(f"  {p['pod']} -> {p['node']}  [{reply['certificate']}]")
+    query = client.request("query")
+    if query["pending"] != 0:
+        raise RuntimeError(f"daemon still has {query['pending']} pending pods")
+    print(f"figure-1 batch certified: digest {query['digest']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7878)
+    ap.add_argument("--figure1", action="store_true",
+                    help="submit the figure-1 batch and require a certified repack")
+    ap.add_argument("--shutdown", action="store_true",
+                    help="drain the daemon before exiting")
+    args = ap.parse_args()
+
+    with ServeClient(args.host, args.port) as client:
+        health = client.request("health")
+        if not health.get("ok"):
+            print(f"unhealthy daemon: {health}", file=sys.stderr)
+            return 1
+        print(f"daemon healthy: protocol v{health['protocol']}, "
+              f"{health['windows']} windows closed")
+        if args.figure1:
+            run_figure1(client)
+            metrics = client.request("metrics")["body"]
+            if "kube_packd_server_windows_total" not in metrics:
+                print("metrics exposition missing server counters", file=sys.stderr)
+                return 1
+        if args.shutdown:
+            ack = client.request("shutdown")
+            if not ack.get("draining"):
+                print(f"shutdown not acknowledged: {ack}", file=sys.stderr)
+                return 1
+            print("daemon draining")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,10 @@
 //!                   categories, and lifecycle time series.
 //! * [`harness`]   — experiment drivers regenerating Figure 3, Figure 4,
 //!                   Table 1, and the churn policy-comparison report.
+//! * [`server`]    — scheduler-as-a-service: the `serve` daemon (batched
+//!                   admission windows over newline-JSON TCP, seq-ordered
+//!                   deterministic replies, graceful drain) and its
+//!                   closed-loop load generator (`serve-bench`).
 
 pub mod autoscaler;
 pub mod cluster;
@@ -60,6 +64,7 @@ pub mod optimizer;
 pub mod portfolio;
 pub mod runtime;
 pub mod scheduler;
+pub mod server;
 pub mod simulator;
 pub mod solver;
 pub mod telemetry;

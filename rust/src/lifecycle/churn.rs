@@ -28,7 +28,7 @@ use crate::autoscaler::{
 use crate::cluster::{ClusterState, Event, EvictCause, NodeId, PodId, ReplicaSet, Resources};
 use crate::metrics::{pending_per_priority, TimeSeries, UtilSample};
 use crate::optimizer::algorithm::OptimizerConfig;
-use crate::optimizer::session::SolveSession;
+use crate::optimizer::session::{fingerprint_state, SolveSession};
 use crate::optimizer::OptimizingScheduler;
 use crate::portfolio::PortfolioConfig;
 use crate::scheduler::DefaultScheduler;
@@ -118,6 +118,12 @@ pub struct ChurnResult {
     /// Ready nodes at the horizon — the number the autoscaler grows and
     /// shrinks (cordoned and removed nodes excluded).
     pub final_ready_nodes: usize,
+    /// Fingerprint of the solve-relevant end state
+    /// ([`fingerprint_state`]) — what the daemon ⇄ simulator
+    /// equivalence test compares against [`Engine::digest`].
+    ///
+    /// [`Engine::digest`]: crate::server::engine::Engine::digest
+    pub final_state_digest: u64,
     /// Pods that arrived, per priority tier.
     pub arrivals_per_priority: Vec<usize>,
     pub completions: usize,
@@ -375,6 +381,7 @@ impl ChurnRunner {
                 .iter()
                 .filter(|n| self.state.node_ready(n.id))
                 .count(),
+            final_state_digest: fingerprint_state(&self.state, self.p_max),
             arrivals_per_priority: self.arrivals,
             completions: self.completions,
             evictions: self.evictions_total,

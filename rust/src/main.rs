@@ -7,6 +7,10 @@
 //! * `solve`     — run the optimiser over a dataset file.
 //! * `churn`     — discrete-event lifecycle simulation comparing
 //!   default-only vs fallback vs fallback+sweep on one seeded trace.
+//! * `serve`     — long-lived scheduler daemon: batched admission
+//!   windows over newline-JSON TCP, graceful drain on shutdown/SIGINT.
+//! * `serve-bench` — closed-loop load generator against a live daemon
+//!   over loopback; emits the `BENCH_serve.json` document.
 //! * `fig3` / `fig4` / `table1` — regenerate the paper's evaluation
 //!   artefacts (reports under `results/`).
 //! * `all`       — fig3 + fig4 + table1.
@@ -25,6 +29,9 @@ use kube_packd::lifecycle::{
 use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler, SolveSession};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
+use kube_packd::server::engine::EngineConfig;
+use kube_packd::server::loadgen;
+use kube_packd::server::{ServeConfig, ServeHandle};
 use kube_packd::solver::{SolveStatus, SolverConfig};
 use kube_packd::telemetry::{Telemetry, Verbosity};
 use kube_packd::util::cli::Args;
@@ -41,6 +48,8 @@ fn main() -> anyhow::Result<()> {
         Some("solve") => solve(&args),
         Some("churn") => churn(&args),
         Some("autoscale") => autoscale(&args),
+        Some("serve") => serve(&args),
+        Some("serve-bench") => serve_bench(&args),
         Some("fig3") => figure(&args, "fig3"),
         Some("fig4") => figure(&args, "fig4"),
         Some("table1") => figure(&args, "table1"),
@@ -98,6 +107,24 @@ COMMANDS
       --arrival-ms N --lifetime-ms N --sweep-ms N --budget N
       --timeout SECS --threads N --node-pools small,large,gpu --log
       --trace FILE --metrics FILE --verbosity off|info|debug|trace
+  serve                    long-lived scheduler daemon over newline-JSON
+                           TCP: pod submit/delete, node join/drain/remove,
+                           query/health/metrics/trace_export/shutdown;
+                           submits batch into solve windows and answer
+                           with placements + optimality certificates
+      --addr HOST:PORT (default 127.0.0.1:7878)
+      --window-ms N (default 1000) --max-batch N (default 64)
+      --nodes N --node-cpu M --node-ram M --tiers N
+      --timeout SECS --threads N --no-incremental
+      --autoscale --node-pools small,large,gpu --budget N
+      --trace FILE --metrics FILE   (flushed at drain; also available
+                           live via {{\"op\":\"metrics\"}}/{{\"op\":\"trace_export\"}})
+  serve-bench              closed-loop load generator: spawns a daemon on
+                           loopback, drives seeded churn admissions, and
+                           emits sustained admissions/sec + p50/p95/p99
+                           decision latency plus the threads-{1,8}
+                           determinism record
+      --out FILE (default BENCH_serve.json) --quick
   fig3 | fig4 | table1     regenerate the paper's figures/tables
       --nodes 4,8,16,32 --ppn 4,8 --tiers 1,2,4 --usage 90,95,100,105
       --timeouts 0.1,0.5,1 --instances N --seed N --out DIR --quick
@@ -575,6 +602,60 @@ fn autoscale(args: &Args) -> anyhow::Result<()> {
         "\nreplay check: identical --seed and --threads replay byte-identically whenever every \
          solve finishes within its budget; scale decisions are certificates, so they replay too"
     );
+    Ok(())
+}
+
+/// Scheduler-as-a-service: run the daemon until it drains. The serve
+/// loop owns the cluster, the persistent solve session, and a recording
+/// telemetry handle (so live `metrics`/`trace_export` requests have
+/// substance); `--trace`/`--metrics` additionally flush file exports at
+/// drain.
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let tiers = args.get_usize("tiers", 2).max(1) as u32;
+    let capacity = Resources::new(
+        args.get_u64("node-cpu", 4000) as i64,
+        args.get_u64("node-ram", 4096) as i64,
+    );
+    let timeout = args.get_f64("timeout", 1.0);
+    let pools = node_pools_arg(args);
+    let autoscale = args
+        .flag("autoscale")
+        .then(|| autoscale_cfg_arg(args, &pools, timeout));
+    let cfg = ServeConfig {
+        addr: args.get_str("addr", "127.0.0.1:7878").to_string(),
+        max_batch: args.get_usize("max-batch", 64),
+        engine: EngineConfig {
+            p_max: tiers - 1,
+            nodes: identical_nodes(args.get_usize("nodes", 8), capacity),
+            reference_capacity: capacity,
+            solve_timeout: Duration::from_secs_f64(timeout),
+            threads: threads_arg(args),
+            incremental: !args.flag("no-incremental"),
+            autoscale,
+            window_ms: args.get_u64("window-ms", 1_000),
+        },
+        trace_out: args.get("trace").map(str::to_string),
+        metrics_out: args.get("metrics").map(str::to_string),
+        install_sigint: true,
+        ..ServeConfig::default()
+    };
+    let handle = ServeHandle::spawn(cfg)?;
+    eprintln!("kube-packd serve listening on {}", handle.addr);
+    handle.join()?;
+    eprintln!("kube-packd serve drained cleanly");
+    Ok(())
+}
+
+/// Closed-loop load generator: spawn a daemon on loopback, drive it
+/// with seeded churn admissions, and write the `BENCH_serve.json`
+/// document (throughput/latency cells + the threads-{1,8} determinism
+/// record).
+fn serve_bench(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_str("out", "BENCH_serve.json");
+    let doc = loadgen::bench_document(args.flag("quick"))?;
+    std::fs::write(out, doc.to_string_pretty())?;
+    println!("{}", doc.to_string_pretty());
+    eprintln!("serve bench written to {out}");
     Ok(())
 }
 

@@ -1,0 +1,614 @@
+//! The serve engine: single-threaded owner of the live cluster.
+//!
+//! One engine instance owns the daemon's [`ClusterState`], its
+//! persistent [`SolveSession`], the provisioning-failure memo, and the
+//! [`Telemetry`] recorder. Connection threads never touch any of it —
+//! they enqueue seq-stamped requests through the
+//! [`Batcher`](super::batcher::Batcher) and the engine thread applies
+//! them in seq order, which is the whole determinism story: replies are
+//! a pure function of the seq-ordered request interleaving, at any
+//! portfolio `--threads` count (threads change solve *speed* inside the
+//! window budget, never results — the crate-wide contract).
+//!
+//! Scheduling follows the churn runner's fallback semantics exactly:
+//! mutations apply as they arrive, and at each window close the engine
+//! runs default-scheduler-first with CP fallback
+//! ([`OptimizingScheduler::run_with_session_traced`]) over whatever is
+//! pending, carrying the solve session and provision memo across
+//! windows. `submit` replies are deferred to the window close and carry
+//! per-pod placements plus the window certificate (`proven-optimal` |
+//! `anytime` | `default`). The daemon ⇄ simulator equivalence test
+//! rides this symmetry: a [`ChurnTrace`] converted by
+//! [`trace_to_windows`](super::protocol::trace_to_windows) and replayed
+//! through [`Engine::run_window`] lands in the same state fingerprint
+//! as `run_churn`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::autoscaler::{AutoscaleConfig, NodePool, ScaleUpReport};
+use crate::cluster::{identical_nodes, ClusterState, Node, NodeId, PodId, ReplicaSet, Resources};
+use crate::optimizer::algorithm::OptimizerConfig;
+use crate::optimizer::plugin::RunReport;
+use crate::optimizer::session::{fingerprint_state, SolveSession};
+use crate::optimizer::OptimizingScheduler;
+use crate::portfolio::PortfolioConfig;
+use crate::telemetry::Telemetry;
+use crate::util::json::Json;
+
+use super::protocol::{SubmitSpec, WireError, WireOp, PROTOCOL_VERSION};
+
+/// Engine knobs (the daemon's `serve` flags, minus the socket ones).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Highest priority value (tiers = `p_max + 1`).
+    pub p_max: u32,
+    /// Initial fleet.
+    pub nodes: Vec<Node>,
+    /// Reference capacity for pool-preset joins and the autoscaler.
+    pub reference_capacity: Resources,
+    /// `T_total` handed to each window's fallback optimisation.
+    pub solve_timeout: Duration,
+    /// Portfolio threads per solve (1 = the single-threaded solver,
+    /// bit for bit).
+    pub threads: usize,
+    /// Keep the solve session alive across windows (byte-identical
+    /// results, warm-started work — on by default for a long-lived
+    /// daemon).
+    pub incremental: bool,
+    /// Opt-in CP-driven scale-up inside the window solve.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Window length in virtual ms: each closed window advances the
+    /// daemon's logical clock by this much (the paper's 1s scheduling
+    /// window).
+    pub window_ms: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            p_max: 1,
+            nodes: identical_nodes(4, Resources::new(4000, 4096)),
+            reference_capacity: Resources::new(4000, 4096),
+            solve_timeout: Duration::from_secs(1),
+            threads: 1,
+            incremental: true,
+            autoscale: None,
+            window_ms: 1_000,
+        }
+    }
+}
+
+/// A `submit` awaiting its window close.
+struct PendingSubmit {
+    seq: u64,
+    tag: Option<u64>,
+    rs_name: String,
+    pods: Vec<PodId>,
+}
+
+/// Single-threaded owner of the daemon's cluster, session, and
+/// telemetry. See the module docs for the threading model.
+pub struct Engine {
+    cfg: EngineConfig,
+    state: ClusterState,
+    session: Option<SolveSession>,
+    provision_memo: Option<(u64, ScaleUpReport)>,
+    tel: Telemetry,
+    /// ReplicaSet templates by id (first-seen template wins, like the
+    /// churn runner's catalog).
+    catalog: BTreeMap<u32, ReplicaSet>,
+    name_to_rs: BTreeMap<String, u32>,
+    next_ord: BTreeMap<u32, u32>,
+    next_rs_id: u32,
+    pod_names: BTreeMap<String, PodId>,
+    pending_submits: Vec<PendingSubmit>,
+    windows: u64,
+    requests: u64,
+    now_ms: u64,
+    draining: bool,
+    /// Seq counter for the in-process [`Engine::run_window`] driver
+    /// (the TCP path sequences in the batcher instead).
+    auto_seq: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        Engine::with_telemetry(cfg, Telemetry::off())
+    }
+
+    /// Engine recording onto a caller-provided handle (the daemon arms
+    /// a recording handle so `metrics`/`trace_export` have substance).
+    pub fn with_telemetry(cfg: EngineConfig, tel: Telemetry) -> Engine {
+        let state = ClusterState::new(cfg.nodes.clone(), Vec::new());
+        Engine {
+            state,
+            session: cfg.incremental.then(SolveSession::new),
+            provision_memo: None,
+            tel,
+            catalog: BTreeMap::new(),
+            name_to_rs: BTreeMap::new(),
+            next_ord: BTreeMap::new(),
+            next_rs_id: 0,
+            pod_names: BTreeMap::new(),
+            pending_submits: Vec::new(),
+            windows: 0,
+            requests: 0,
+            now_ms: 0,
+            draining: false,
+            auto_seq: 0,
+            cfg,
+        }
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    pub fn windows_closed(&self) -> u64 {
+        self.windows
+    }
+
+    /// Are any `submit` replies waiting on a window close?
+    pub fn has_pending_submits(&self) -> bool {
+        !self.pending_submits.is_empty()
+    }
+
+    /// How many `submit` requests the open window has gathered (the
+    /// `--max-batch` early-flush counter).
+    pub fn pending_submit_count(&self) -> usize {
+        self.pending_submits.len()
+    }
+
+    pub fn state(&self) -> &ClusterState {
+        &self.state
+    }
+
+    /// Solve-relevant state fingerprint (the equivalence digest).
+    pub fn digest(&self) -> u64 {
+        fingerprint_state(&self.state, self.cfg.p_max)
+    }
+
+    /// Count and structure a request-level failure (parse error, drain
+    /// rejection) so errors ride the same counters as successes.
+    pub fn error_reply(&mut self, seq: Option<u64>, tag: Option<u64>, err: &WireError) -> Json {
+        self.tel.add("server_errors_total", &format!("code=\"{}\"", err.code()), 1);
+        err.reply(seq, tag)
+    }
+
+    /// Apply one seq-stamped operation. Returns the immediate reply,
+    /// or `None` for a `submit` (answered at the next window close).
+    pub fn apply(&mut self, seq: u64, tag: Option<u64>, op: &WireOp) -> Option<Json> {
+        self.requests += 1;
+        self.tel.add("server_requests_total", &format!("op=\"{}\"", op.name()), 1);
+        match op {
+            WireOp::Submit(spec) => self.apply_submit(seq, tag, spec),
+            WireOp::Delete { pod } => Some(self.apply_delete(seq, tag, pod)),
+            WireOp::Join {
+                pool,
+                cpu_milli,
+                ram_mib,
+            } => Some(self.apply_join(seq, tag, pool.as_deref(), *cpu_milli, *ram_mib)),
+            WireOp::Drain { node } => Some(self.apply_drain(seq, tag, *node)),
+            WireOp::Remove { node } => Some(self.apply_remove(seq, tag, *node)),
+            WireOp::Query => Some(self.apply_query(seq, tag)),
+            WireOp::Health => {
+                let mut o = self.base("health", seq, tag);
+                o.set("ok", true)
+                    .set("protocol", PROTOCOL_VERSION)
+                    .set("draining", self.draining)
+                    .set("windows", self.windows)
+                    .set("requests", self.requests);
+                Some(o)
+            }
+            WireOp::Metrics => {
+                let mut o = self.base("metrics", seq, tag);
+                o.set("content_type", "text/plain; version=0.0.4")
+                    .set("body", self.tel.export_prometheus());
+                Some(o)
+            }
+            WireOp::TraceExport => {
+                let mut o = self.base("trace_export", seq, tag);
+                o.set("body", self.tel.export_chrome());
+                Some(o)
+            }
+            WireOp::Shutdown => {
+                self.draining = true;
+                let mut o = self.base("shutdown", seq, tag);
+                o.set("draining", true);
+                Some(o)
+            }
+        }
+    }
+
+    /// Close the current solve window at virtual time `at_ms`: run the
+    /// default-first/CP-fallback round over everything pending, then
+    /// answer every deferred `submit` in seq order with placements and
+    /// the window certificate.
+    pub fn close_window_at(&mut self, at_ms: u64) -> Vec<(u64, Json)> {
+        self.advance_to(at_ms);
+        let submits = std::mem::take(&mut self.pending_submits);
+        let sp = self.tel.span("serve_window");
+        sp.arg("window", self.windows);
+        sp.arg("submits", submits.len());
+        let report = if self.state.pending_pods().is_empty() {
+            None
+        } else {
+            Some(self.round())
+        };
+        drop(sp);
+        self.windows += 1;
+        self.tel.add("server_windows_total", "", 1);
+        let certificate = match &report {
+            None => "default",
+            Some(r) if !r.solver_invoked => "default",
+            Some(r) if r.proved_optimal => "proven-optimal",
+            Some(_) => "anytime",
+        };
+        let solver_invoked = report.as_ref().is_some_and(|r| r.solver_invoked);
+        let window = self.windows - 1;
+        let mut replies = Vec::with_capacity(submits.len());
+        for sub in submits {
+            let placements = sub
+                .pods
+                .iter()
+                .map(|&id| {
+                    let mut p = Json::obj();
+                    p.set("pod", self.state.pod(id).name.as_str());
+                    match self.state.assignment_of(id) {
+                        Some(n) => p.set("node", self.state.node(n).name.as_str()),
+                        None => p.set("node", Json::Null),
+                    };
+                    p
+                })
+                .collect();
+            let mut o = self.base("submit", sub.seq, sub.tag);
+            o.set("rs", sub.rs_name.as_str())
+                .set("window", window)
+                .set("certificate", certificate)
+                .set("solver_invoked", solver_invoked)
+                .set("placements", Json::Arr(placements));
+            replies.push((sub.seq, o));
+        }
+        replies
+    }
+
+    /// Drive one whole window in-process: set the virtual clock, apply
+    /// `ops` under engine-assigned seqs, close the window, and return
+    /// every reply line in emission order. This is the replay/bench
+    /// surface — byte-identical across runs and thread counts for the
+    /// same window stream.
+    pub fn run_window(&mut self, at_ms: u64, ops: &[WireOp]) -> Vec<String> {
+        self.advance_to(at_ms);
+        let mut lines = Vec::new();
+        for op in ops {
+            let seq = self.auto_seq;
+            self.auto_seq += 1;
+            if let Some(reply) = self.apply(seq, None, op) {
+                lines.push(reply.to_string_compact());
+            }
+        }
+        for (_, reply) in self.close_window_at(at_ms) {
+            lines.push(reply.to_string_compact());
+        }
+        lines
+    }
+
+    // ---- op handlers ------------------------------------------------------
+
+    fn base(&mut self, op: &str, seq: u64, tag: Option<u64>) -> Json {
+        self.tel.add("server_replies_total", &format!("op=\"{op}\""), 1);
+        let mut o = Json::obj();
+        o.set("seq", seq).set("op", op);
+        if let Some(t) = tag {
+            o.set("tag", t);
+        }
+        o
+    }
+
+    fn apply_submit(&mut self, seq: u64, tag: Option<u64>, spec: &SubmitSpec) -> Option<Json> {
+        if spec.priority > self.cfg.p_max {
+            let err = WireError::BadRequest(format!(
+                "priority {} exceeds p_max {}",
+                spec.priority, self.cfg.p_max
+            ));
+            return Some(self.error_reply(Some(seq), tag, &err));
+        }
+        // Resolve the template: explicit id, then name, then a fresh
+        // registration (first-seen template wins, like the churn
+        // runner's catalog — a scale-up never re-stamps the template).
+        let rs_id = match spec.rs_id {
+            Some(id) => id,
+            None => match self.name_to_rs.get(&spec.name) {
+                Some(&id) => id,
+                None => {
+                    let id = self.next_rs_id;
+                    self.next_rs_id += 1;
+                    id
+                }
+            },
+        };
+        if let Some(&owner) = self.name_to_rs.get(&spec.name) {
+            if owner != rs_id {
+                let err = WireError::BadRequest(format!(
+                    "name {:?} already owned by rs {}",
+                    spec.name, owner
+                ));
+                return Some(self.error_reply(Some(seq), tag, &err));
+            }
+        }
+        let rs = self
+            .catalog
+            .entry(rs_id)
+            .or_insert_with(|| spec.to_replicaset(rs_id))
+            .clone();
+        self.name_to_rs.insert(rs.name.clone(), rs_id);
+        self.next_rs_id = self.next_rs_id.max(rs_id + 1);
+        let mut pods = Vec::with_capacity(spec.replicas as usize);
+        for _ in 0..spec.replicas {
+            let ord = self.next_ord.entry(rs_id).or_insert(0);
+            let pod = rs.instantiate(0, *ord);
+            *ord += 1;
+            let name = pod.name.clone();
+            let id = self.state.add_pod(pod);
+            self.pod_names.insert(name, id);
+            pods.push(id);
+        }
+        self.tel.add("server_submit_pods_total", "", pods.len() as u64);
+        self.pending_submits.push(PendingSubmit {
+            seq,
+            tag,
+            rs_name: rs.name,
+            pods,
+        });
+        None
+    }
+
+    fn apply_delete(&mut self, seq: u64, tag: Option<u64>, pod: &str) -> Json {
+        let Some(&id) = self.pod_names.get(pod) else {
+            let err = WireError::BadRequest(format!("unknown pod {pod:?}"));
+            return self.error_reply(Some(seq), tag, &err);
+        };
+        let mut o = self.base("delete", seq, tag);
+        o.set("pod", pod);
+        if self.state.is_retired(id) {
+            // Mirrors the churn runner's completion of an
+            // already-scaled-down pod: a silent skip, not an error.
+            o.set("deleted", false).set("reason", "retired");
+            return o;
+        }
+        let node = self.state.terminate(id).expect("live pod terminates");
+        o.set("deleted", true);
+        match node {
+            Some(n) => o.set("node", self.state.node(n).name.as_str()),
+            None => o.set("node", Json::Null),
+        };
+        o
+    }
+
+    fn apply_join(
+        &mut self,
+        seq: u64,
+        tag: Option<u64>,
+        pool: Option<&str>,
+        cpu_milli: Option<i64>,
+        ram_mib: Option<i64>,
+    ) -> Json {
+        let joined = match pool {
+            Some(name) => {
+                let Some(p) = NodePool::parse(name) else {
+                    let err = WireError::BadRequest(format!("unknown pool {name:?}"));
+                    return self.error_reply(Some(seq), tag, &err);
+                };
+                let capacity = match (cpu_milli, ram_mib) {
+                    (Some(c), Some(r)) => Resources::new(c, r),
+                    _ => p.capacity_for(self.cfg.reference_capacity),
+                };
+                self.state.join_node_from(&p.node_template_with_capacity(capacity))
+            }
+            None => {
+                // The protocol layer guarantees both are present.
+                let capacity = Resources::new(
+                    cpu_milli.expect("validated cpu"),
+                    ram_mib.expect("validated ram"),
+                );
+                self.state.join_node(capacity)
+            }
+        };
+        self.tel.add("server_joins_total", "", 1);
+        let mut o = self.base("join", seq, tag);
+        o.set("node", self.state.node(joined).name.as_str());
+        o
+    }
+
+    fn apply_drain(&mut self, seq: u64, tag: Option<u64>, node: u32) -> Json {
+        let mut o = self.base("drain", seq, tag);
+        // Same skip condition as the churn runner: out-of-range or
+        // not-ready drains are recorded, not errors.
+        if node as usize >= self.state.nodes().len() || !self.state.node_ready(NodeId(node)) {
+            o.set("drained", false).set("reason", "not-ready");
+            return o;
+        }
+        let victims = self.state.drain(NodeId(node));
+        self.tel.add("server_drains_total", "", 1);
+        o.set("drained", true)
+            .set("node", self.state.node(NodeId(node)).name.as_str())
+            .set("evicted", victims.len() as u64);
+        o
+    }
+
+    fn apply_remove(&mut self, seq: u64, tag: Option<u64>, node: u32) -> Json {
+        if node as usize >= self.state.nodes().len() {
+            let err = WireError::BadRequest(format!("no node at index {node}"));
+            return self.error_reply(Some(seq), tag, &err);
+        }
+        match self.state.remove_node(NodeId(node)) {
+            Ok(()) => {
+                let mut o = self.base("remove", seq, tag);
+                o.set("node", self.state.node(NodeId(node)).name.as_str())
+                    .set("removed", true);
+                o
+            }
+            Err(e) => {
+                let err = WireError::BadRequest(format!("remove refused: {e:?}"));
+                self.error_reply(Some(seq), tag, &err)
+            }
+        }
+    }
+
+    fn apply_query(&mut self, seq: u64, tag: Option<u64>) -> Json {
+        let (cpu, ram) = self.state.utilization();
+        let placed = self
+            .state
+            .placed_per_priority(self.cfg.p_max)
+            .into_iter()
+            .map(|c| Json::from(c as u64))
+            .collect();
+        let ready = self
+            .state
+            .nodes()
+            .iter()
+            .filter(|n| self.state.node_ready(n.id))
+            .count();
+        let digest = self.digest();
+        let mut o = self.base("query", seq, tag);
+        o.set("windows", self.windows)
+            .set("virtual_ms", self.now_ms)
+            .set("nodes", self.state.nodes().len() as u64)
+            .set("ready_nodes", ready as u64)
+            .set("pods", self.state.pods().len() as u64)
+            .set("placed", Json::Arr(placed))
+            .set("pending", self.state.pending_pods().len() as u64)
+            .set("cpu_util", cpu)
+            .set("ram_util", ram)
+            .set("digest", format!("{digest:016x}"));
+        o
+    }
+
+    // ---- scheduling -------------------------------------------------------
+
+    fn advance_to(&mut self, at_ms: u64) {
+        if at_ms > self.now_ms {
+            self.now_ms = at_ms;
+            self.state.set_time(at_ms);
+        }
+    }
+
+    /// One fallback scheduling round — the churn runner's
+    /// `schedule_round` arm, verbatim: rebuild the scheduler, carry the
+    /// session and the provision memo.
+    fn round(&mut self) -> RunReport {
+        let mut osched = OptimizingScheduler::new(
+            self.cfg.p_max,
+            OptimizerConfig {
+                total_timeout: self.cfg.solve_timeout,
+                portfolio: PortfolioConfig::with_threads(self.cfg.threads),
+                autoscale: self.cfg.autoscale.clone(),
+                ..Default::default()
+            },
+        );
+        osched.set_provision_memo(self.provision_memo.take());
+        let report = osched.run_with_session_traced(&mut self.state, self.session.as_mut(), &self.tel);
+        self.provision_memo = osched.take_provision_memo();
+        if report.solver_invoked {
+            self.tel.add("server_solver_invocations_total", "", 1);
+        }
+        if report.autoscale.is_some() {
+            self.tel.add("server_scale_ups_total", "", 1);
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn engine() -> Engine {
+        Engine::new(EngineConfig {
+            p_max: 0,
+            nodes: identical_nodes(2, Resources::new(4000, 4096)),
+            solve_timeout: Duration::from_secs(5),
+            ..EngineConfig::default()
+        })
+    }
+
+    #[test]
+    fn figure_one_batch_gets_certified_placements() {
+        let mut e = engine();
+        // 2Gi + 2Gi + 3Gi over two 4Gi nodes: LeastAllocated spreads the
+        // 2Gi pods across both nodes and strands the 3Gi pod; the window
+        // solve re-packs all three and proves it.
+        let lines = e.run_window(
+            1_000,
+            &[
+                WireOp::Submit(SubmitSpec::basic("web", 2, 100, 2048, 0)),
+                WireOp::Submit(SubmitSpec::basic("db", 1, 100, 3072, 0)),
+            ],
+        );
+        assert_eq!(lines.len(), 2, "one deferred reply per submit");
+        for line in &lines {
+            let reply = parse(line).expect("reply parses");
+            assert_eq!(reply.get("op").and_then(Json::as_str), Some("submit"));
+            assert_eq!(
+                reply.get("certificate").and_then(Json::as_str),
+                Some("proven-optimal"),
+                "{line}"
+            );
+            let placements = reply.get("placements").and_then(Json::as_arr).expect("arr");
+            for p in placements {
+                assert!(p.get("node").and_then(Json::as_str).is_some(), "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn replies_carry_seq_and_tag_and_errors_are_structured() {
+        let mut e = engine();
+        let r = e.apply(7, Some(99), &WireOp::Health).expect("immediate");
+        assert_eq!(r.get("seq").and_then(Json::as_i64), Some(7));
+        assert_eq!(r.get("tag").and_then(Json::as_i64), Some(99));
+        let err = e.apply(
+            8,
+            None,
+            &WireOp::Submit(SubmitSpec::basic("hi", 1, 100, 100, 3)),
+        );
+        let err = err.expect("priority above p_max fails immediately");
+        assert_eq!(
+            err.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad-request")
+        );
+    }
+
+    #[test]
+    fn delete_then_redundant_delete() {
+        let mut e = engine();
+        let lines = e.run_window(0, &[WireOp::Submit(SubmitSpec::basic("web", 1, 100, 128, 0))]);
+        assert_eq!(lines.len(), 1);
+        let del = e
+            .apply(10, None, &WireOp::Delete { pod: "web-0".into() })
+            .expect("immediate");
+        assert_eq!(del.get("deleted").and_then(Json::as_bool), Some(true));
+        let again = e
+            .apply(11, None, &WireOp::Delete { pod: "web-0".into() })
+            .expect("immediate");
+        assert_eq!(again.get("deleted").and_then(Json::as_bool), Some(false));
+        assert_eq!(again.get("reason").and_then(Json::as_str), Some("retired"));
+    }
+
+    #[test]
+    fn query_reports_digest_and_counts() {
+        let mut e = engine();
+        e.run_window(0, &[WireOp::Submit(SubmitSpec::basic("web", 2, 100, 128, 0))]);
+        let q = e.apply(5, None, &WireOp::Query).expect("immediate");
+        assert_eq!(q.get("pods").and_then(Json::as_i64), Some(2));
+        assert_eq!(q.get("pending").and_then(Json::as_i64), Some(0));
+        let digest = q.get("digest").and_then(Json::as_str).expect("digest");
+        assert_eq!(digest, format!("{:016x}", e.digest()));
+    }
+}

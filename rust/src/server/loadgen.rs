@@ -1,0 +1,450 @@
+//! Closed-loop load generator for the serve daemon (`serve-bench`).
+//!
+//! Drives a freshly-spawned daemon over loopback with the admission
+//! stream of a seeded [`ChurnTrace`] (converted by
+//! [`trace_to_windows`]) and measures what the paper's service framing
+//! cares about: sustained admissions/sec and the decision-latency
+//! distribution (p50/p95/p99) a client observes, window batching
+//! included — a `submit` reply intentionally waits for its solve window
+//! to close, so latency is dominated by `--window-ms` under light load
+//! and by solve time under saturation.
+//!
+//! Two seeded arrival modes:
+//!
+//! * **closed** — N client connections, each with one request in
+//!   flight; the next request fires when the reply lands. Throughput
+//!   self-regulates to what the daemon sustains.
+//! * **open** — one firehose connection paced by seeded exponential
+//!   gaps at a target rate, replies matched asynchronously by tag.
+//!   Measures latency under offered (not sustained) load.
+//!
+//! Wall-clock numbers are measurements, never protocol content — the
+//! reply *streams* stay deterministic, which
+//! [`replay_reply_stream`] exposes for the determinism record in
+//! `BENCH_serve.json` and the thread-count proptests.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::{mean, percentile};
+use crate::workload::churn::{ChurnParams, ChurnTrace, ChurnTraceGenerator};
+use crate::workload::GenParams;
+
+use super::engine::{Engine, EngineConfig};
+use super::protocol::{trace_to_windows, WireOp, WireRequest};
+use super::{ServeConfig, ServeHandle};
+
+/// How requests are offered to the daemon.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalMode {
+    /// `clients` connections, one request in flight each.
+    Closed { clients: usize },
+    /// One connection, seeded exponential gaps at `rate_per_s`.
+    Open { rate_per_s: f64 },
+}
+
+impl ArrivalMode {
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalMode::Closed { clients } => format!("closed/{clients}"),
+            ArrivalMode::Open { rate_per_s } => format!("open/{rate_per_s}"),
+        }
+    }
+}
+
+/// One `serve-bench` cell.
+#[derive(Clone, Debug)]
+pub struct LoadgenParams {
+    pub seed: u64,
+    pub mode: ArrivalMode,
+    /// Workload shape; the trace also supplies the daemon's initial
+    /// fleet and tier count.
+    pub churn: ChurnParams,
+    pub window_ms: u64,
+    pub max_batch: usize,
+    pub threads: usize,
+    pub solve_timeout: Duration,
+}
+
+/// Engine configured the way the daemon would be for this trace: the
+/// trace's fleet, tiers, and reference capacity, the bench's solve
+/// knobs.
+pub fn engine_for_trace(
+    trace: &ChurnTrace,
+    threads: usize,
+    solve_timeout: Duration,
+    window_ms: u64,
+) -> EngineConfig {
+    EngineConfig {
+        p_max: trace.p_max,
+        nodes: trace.nodes.clone(),
+        reference_capacity: trace.reference_capacity,
+        solve_timeout,
+        threads,
+        incremental: true,
+        autoscale: None,
+        window_ms,
+    }
+}
+
+/// Replay a trace's converted windows through an in-process [`Engine`]
+/// and return every reply line in emission order plus the final state
+/// fingerprint. This is the determinism surface: for a fixed trace the
+/// result must be byte-identical at any `threads` count (solves must
+/// prove within budget — the anytime caveat the lifecycle module
+/// documents).
+pub fn replay_reply_stream(
+    trace: &ChurnTrace,
+    threads: usize,
+    solve_timeout: Duration,
+) -> (Vec<String>, u64) {
+    let mut engine = Engine::new(engine_for_trace(trace, threads, solve_timeout, 1_000));
+    let mut lines = Vec::new();
+    for (t, ops) in trace_to_windows(trace) {
+        lines.extend(engine.run_window(t, &ops));
+    }
+    (lines, engine.digest())
+}
+
+/// FNV-1a over a reply stream — a compact identity for the determinism
+/// record in `BENCH_serve.json`.
+pub fn stream_fingerprint(lines: &[String]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for line in lines {
+        for &b in line.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A blocking newline-JSON client connection.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            writer,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    fn send(&mut self, req: &WireRequest) -> io::Result<()> {
+        let mut line = req.to_line();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())
+    }
+
+    fn recv(&mut self) -> io::Result<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "daemon closed the connection",
+            ));
+        }
+        parse(line.trim_end())
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("bad reply: {e}")))
+    }
+
+    /// Send, then block until the reply carrying this request's tag
+    /// arrives (single-outstanding discipline).
+    fn request(&mut self, req: &WireRequest) -> io::Result<Json> {
+        self.send(req)?;
+        loop {
+            let reply = self.recv()?;
+            if reply.get("tag").and_then(Json::as_i64).map(|t| t as u64) == req.tag {
+                return Ok(reply);
+            }
+        }
+    }
+}
+
+/// Generate the trace and flatten its windows into one tagged request
+/// stream (window structure re-emerges daemon-side from the batcher).
+fn request_stream(p: &LoadgenParams) -> (ChurnTrace, Vec<WireRequest>) {
+    let trace = ChurnTraceGenerator::new(p.churn, p.seed).generate();
+    let mut reqs = Vec::new();
+    for (_, ops) in trace_to_windows(&trace) {
+        for op in ops {
+            let tag = reqs.len() as u64;
+            reqs.push(WireRequest::tagged(op, tag));
+        }
+    }
+    (trace, reqs)
+}
+
+/// Run one bench cell against a live daemon on loopback and return the
+/// cell object for `BENCH_serve.json`.
+pub fn run_bench(p: &LoadgenParams) -> io::Result<Json> {
+    let (trace, reqs) = request_stream(p);
+    let total = reqs.len();
+    let handle = ServeHandle::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: p.max_batch,
+        engine: engine_for_trace(&trace, p.threads, p.solve_timeout, p.window_ms),
+        telemetry: true,
+        ..ServeConfig::default()
+    })?;
+    let addr = handle.addr.to_string();
+
+    let started = Instant::now();
+    let latencies_ms = match p.mode {
+        ArrivalMode::Closed { clients } => drive_closed(&addr, reqs, clients.max(1))?,
+        ArrivalMode::Open { rate_per_s } => drive_open(&addr, reqs, rate_per_s, p.seed)?,
+    };
+    let elapsed = started.elapsed().as_secs_f64();
+
+    // Snapshot the end state, then drain the daemon.
+    let mut control = Client::connect(&addr)?;
+    let query = control.request(&WireRequest::tagged(WireOp::Query, total as u64))?;
+    let shutdown = control.request(&WireRequest::tagged(WireOp::Shutdown, total as u64 + 1))?;
+    if shutdown.get("error").is_some() {
+        return Err(io::Error::other("shutdown rejected"));
+    }
+    handle.join()?;
+
+    let mut cell = Json::obj();
+    cell.set("mode", p.mode.label())
+        .set("seed", p.seed)
+        .set("threads", p.threads as u64)
+        .set("window_ms", p.window_ms)
+        .set("max_batch", p.max_batch as u64)
+        .set("requests", total as u64)
+        .set("elapsed_s", elapsed)
+        .set(
+            "admissions_per_s",
+            if elapsed > 0.0 { total as f64 / elapsed } else { 0.0 },
+        )
+        .set("latency_p50_ms", percentile(&latencies_ms, 0.50))
+        .set("latency_p95_ms", percentile(&latencies_ms, 0.95))
+        .set("latency_p99_ms", percentile(&latencies_ms, 0.99))
+        .set("latency_mean_ms", mean(&latencies_ms));
+    for key in ["windows", "pods", "pending", "digest"] {
+        if let Some(v) = query.get(key) {
+            cell.set(key, v.clone());
+        }
+    }
+    Ok(cell)
+}
+
+/// Build the complete `BENCH_serve.json` document: bench cells over
+/// closed and open arrival modes on one seeded churn workload, plus the
+/// determinism record — reply-stream fingerprints and end-state digests
+/// from in-process replays at portfolio threads 1 and 8 (the acceptance
+/// surface: they must agree byte for byte).
+pub fn bench_document(quick: bool) -> io::Result<Json> {
+    let seed = 0x5E17;
+    let churn = ChurnParams {
+        horizon_ms: if quick { 3_000 } else { 10_000 },
+        mean_arrival_ms: 300,
+        mean_lifetime_ms: 2_500,
+        drain_chance: 0.03,
+        join_chance: 0.03,
+        ..ChurnParams::for_cluster(GenParams {
+            nodes: 8,
+            pods_per_node: 4,
+            priority_tiers: 2,
+            usage: 0.95,
+        })
+    };
+    let mk = |mode| LoadgenParams {
+        seed,
+        mode,
+        churn,
+        window_ms: 50,
+        max_batch: 32,
+        threads: 1,
+        solve_timeout: Duration::from_secs(2),
+    };
+    let modes: Vec<ArrivalMode> = if quick {
+        vec![ArrivalMode::Closed { clients: 4 }]
+    } else {
+        vec![
+            ArrivalMode::Closed { clients: 1 },
+            ArrivalMode::Closed { clients: 8 },
+            ArrivalMode::Open { rate_per_s: 400.0 },
+        ]
+    };
+    let mut cells = Vec::new();
+    for mode in modes {
+        cells.push(run_bench(&mk(mode))?);
+    }
+    let trace = ChurnTraceGenerator::new(churn, seed).generate();
+    let (s1, d1) = replay_reply_stream(&trace, 1, Duration::from_secs(2));
+    let (s8, d8) = replay_reply_stream(&trace, 8, Duration::from_secs(2));
+    let mut det = Json::obj();
+    det.set("trace_seed", seed)
+        .set("t1_stream", format!("{:016x}", stream_fingerprint(&s1)))
+        .set("t8_stream", format!("{:016x}", stream_fingerprint(&s8)))
+        .set("t1_digest", format!("{d1:016x}"))
+        .set("t8_digest", format!("{d8:016x}"))
+        .set("thread_independent", s1 == s8 && d1 == d8);
+    let mut doc = Json::obj();
+    doc.set("bench", "serve")
+        .set("schema", 1u64)
+        .set("determinism", det)
+        .set("cells", Json::Arr(cells));
+    Ok(doc)
+}
+
+/// Closed loop: split the stream round-robin over `clients` threads,
+/// each keeping exactly one request outstanding on its own connection.
+fn drive_closed(addr: &str, reqs: Vec<WireRequest>, clients: usize) -> io::Result<Vec<f64>> {
+    let mut lanes: Vec<Vec<WireRequest>> = (0..clients).map(|_| Vec::new()).collect();
+    for (i, r) in reqs.into_iter().enumerate() {
+        lanes[i % clients].push(r);
+    }
+    let mut workers = Vec::new();
+    for lane in lanes {
+        let addr = addr.to_string();
+        workers.push(thread::spawn(move || -> io::Result<Vec<f64>> {
+            let mut client = Client::connect(&addr)?;
+            let mut out = Vec::with_capacity(lane.len());
+            for req in &lane {
+                let sent = Instant::now();
+                client.request(req)?;
+                out.push(sent.elapsed().as_secs_f64() * 1_000.0);
+            }
+            Ok(out)
+        }));
+    }
+    let mut all = Vec::new();
+    for w in workers {
+        let lane = w
+            .join()
+            .map_err(|_| io::Error::other("client thread panicked"))??;
+        all.extend(lane);
+    }
+    Ok(all)
+}
+
+/// Open loop: one connection, seeded exponential pacing; a reader
+/// thread matches replies to send times by tag.
+fn drive_open(addr: &str, reqs: Vec<WireRequest>, rate_per_s: f64, seed: u64) -> io::Result<Vec<f64>> {
+    let total = reqs.len();
+    let mut writer = Client::connect(addr)?;
+    let read_stream = writer.writer.try_clone()?;
+    let reader = thread::spawn(move || -> io::Result<Vec<(u64, f64)>> {
+        let mut r = BufReader::new(read_stream);
+        let origin = Instant::now();
+        let mut seen = Vec::with_capacity(total);
+        while seen.len() < total {
+            let mut line = String::new();
+            if r.read_line(&mut line)? == 0 {
+                break;
+            }
+            let at = origin.elapsed().as_secs_f64();
+            let reply = parse(line.trim_end())
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e}")))?;
+            if let Some(tag) = reply.get("tag").and_then(Json::as_i64) {
+                seen.push((tag as u64, at));
+            }
+        }
+        Ok(seen)
+    });
+
+    let rate = rate_per_s.max(1.0);
+    let mut rng = Rng::new(seed ^ 0x6f70_656e); // "open"
+    let origin = Instant::now();
+    let mut sends = vec![0.0f64; total];
+    let mut next_at = 0.0f64;
+    for req in &reqs {
+        let gap = -(1.0 - rng.f64()).ln() / rate;
+        next_at += gap;
+        loop {
+            let now = origin.elapsed().as_secs_f64();
+            if now >= next_at {
+                break;
+            }
+            thread::sleep(Duration::from_secs_f64((next_at - now).min(0.01)));
+        }
+        sends[req.tag.expect("tagged") as usize] = origin.elapsed().as_secs_f64();
+        writer.send(req)?;
+    }
+    let seen = reader
+        .join()
+        .map_err(|_| io::Error::other("reader thread panicked"))??;
+    if seen.len() != total {
+        return Err(io::Error::other(format!(
+            "open-loop run lost replies: {}/{total}",
+            seen.len()
+        )));
+    }
+    Ok(seen
+        .into_iter()
+        .map(|(tag, at)| (at - sends[tag as usize]) * 1_000.0)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params(mode: ArrivalMode) -> LoadgenParams {
+        LoadgenParams {
+            seed: 7,
+            mode,
+            churn: ChurnParams {
+                horizon_ms: 3_000,
+                mean_arrival_ms: 400,
+                mean_lifetime_ms: 1_500,
+                drain_chance: 0.05,
+                join_chance: 0.05,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 3,
+                    pods_per_node: 3,
+                    priority_tiers: 2,
+                    usage: 0.9,
+                })
+            },
+            window_ms: 20,
+            max_batch: 16,
+            threads: 1,
+            solve_timeout: Duration::from_secs(2),
+        }
+    }
+
+    #[test]
+    fn closed_loop_bench_round_trips() {
+        let cell = run_bench(&tiny_params(ArrivalMode::Closed { clients: 4 })).expect("bench");
+        assert!(cell.get("requests").and_then(Json::as_i64).expect("requests") > 0);
+        assert!(cell.get("admissions_per_s").and_then(Json::as_f64).expect("rate") > 0.0);
+        let p50 = cell.get("latency_p50_ms").and_then(Json::as_f64).expect("p50");
+        let p99 = cell.get("latency_p99_ms").and_then(Json::as_f64).expect("p99");
+        assert!(p50 >= 0.0 && p99 >= p50);
+        assert!(cell.get("digest").and_then(Json::as_str).is_some());
+    }
+
+    #[test]
+    fn open_loop_bench_round_trips() {
+        let cell =
+            run_bench(&tiny_params(ArrivalMode::Open { rate_per_s: 500.0 })).expect("bench");
+        assert!(cell.get("requests").and_then(Json::as_i64).expect("requests") > 0);
+        assert!(cell.get("latency_p99_ms").and_then(Json::as_f64).expect("p99") >= 0.0);
+    }
+
+    #[test]
+    fn replay_streams_are_reproducible() {
+        let p = tiny_params(ArrivalMode::Closed { clients: 1 });
+        let trace = ChurnTraceGenerator::new(p.churn, p.seed).generate();
+        let (a, da) = replay_reply_stream(&trace, 1, Duration::from_secs(2));
+        let (b, db) = replay_reply_stream(&trace, 1, Duration::from_secs(2));
+        assert_eq!(a, b, "same trace, same threads: byte-identical replies");
+        assert_eq!(da, db);
+        assert!(stream_fingerprint(&a) == stream_fingerprint(&b));
+    }
+}

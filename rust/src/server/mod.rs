@@ -1,0 +1,425 @@
+//! Scheduler-as-a-service: the `kube-packd serve` daemon.
+//!
+//! The paper deploys the CP optimiser as a plug-in inside a live
+//! scheduler; this module is that deployment shape for the crate — a
+//! long-lived daemon that owns a [`ClusterState`] + persistent
+//! [`SolveSession`] and admits a concurrent request stream over
+//! newline-delimited JSON on std TCP (no tokio, no gRPC, no serde;
+//! the crate's hand-rolled [`Json`] codec end to end).
+//!
+//! Architecture — three kinds of thread, one owner of truth:
+//!
+//! * **Connection readers** (one per accepted socket) frame lines under
+//!   a byte cap, parse them, and enqueue into the [`Batcher`]. They own
+//!   nothing and decide nothing; even parse errors are enqueued so the
+//!   error replies join the global order.
+//! * **The serve loop** (the thread that called [`serve`]) is the
+//!   single engine thread: it accepts connections, drains the batcher
+//!   in seq order, applies ops to the [`Engine`], and writes every
+//!   reply line itself. Because one thread owns state, session,
+//!   telemetry, and reply emission, replies are a deterministic
+//!   function of the seq interleaving at any `--threads` count.
+//! * **Solver workers** live inside the portfolio for the duration of
+//!   one window solve, exactly as in batch mode.
+//!
+//! Admission is windowed per the paper's scheduling-window framing:
+//! `submit` requests are deferred and answered together when the window
+//! closes — after `--window-ms` of wall time (default 1000), early when
+//! `--max-batch` submits have gathered, or immediately at drain. Each
+//! close advances the daemon's *virtual* clock by `window_ms`; replies
+//! carry window ordinals and virtual time only, never wall-clock, so a
+//! fixed request interleaving yields byte-identical reply streams.
+//!
+//! Graceful shutdown: `{"op":"shutdown"}` or SIGINT stops admission
+//! (late requests get a structured `draining` error), finishes the
+//! in-flight window so every enqueued request is answered, flushes the
+//! `--trace`/`--metrics` telemetry exports, and returns cleanly.
+//!
+//! [`ClusterState`]: crate::cluster::ClusterState
+//! [`SolveSession`]: crate::optimizer::session::SolveSession
+//! [`Json`]: crate::util::json::Json
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod protocol;
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::telemetry::Telemetry;
+
+use batcher::{send_line, Batcher, Drained, ReplySink};
+use engine::{Engine, EngineConfig};
+use protocol::{parse_request, WireError, MAX_LINE_BYTES};
+
+/// How often the serve loop wakes to poll for new connections and the
+/// SIGINT flag when no window deadline is nearer.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Everything `kube-packd serve` needs beyond the engine knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 picks an ephemeral
+    /// port — [`ServeHandle::spawn`] reports the resolved address).
+    pub addr: String,
+    /// Close the open window early once this many `submit` requests
+    /// have gathered.
+    pub max_batch: usize,
+    /// Per-line byte cap on the wire.
+    pub max_line_bytes: usize,
+    /// Engine knobs (fleet, tiers, solve budget, `window_ms`, ...).
+    pub engine: EngineConfig,
+    /// Record spans/counters (on by default so live `metrics` /
+    /// `trace_export` requests have substance).
+    pub telemetry: bool,
+    /// Write the Chrome trace export here at shutdown.
+    pub trace_out: Option<String>,
+    /// Write the Prometheus text exposition here at shutdown.
+    pub metrics_out: Option<String>,
+    /// Install the process SIGINT handler (the CLI does; in-process
+    /// tests and benches don't).
+    pub install_sigint: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 64,
+            max_line_bytes: MAX_LINE_BYTES,
+            engine: EngineConfig::default(),
+            telemetry: true,
+            trace_out: None,
+            metrics_out: None,
+            install_sigint: false,
+        }
+    }
+}
+
+/// A daemon running on a background thread (tests and the load
+/// generator drive it over loopback).
+pub struct ServeHandle {
+    /// The resolved bind address (meaningful when the config asked for
+    /// port 0).
+    pub addr: SocketAddr,
+    join: thread::JoinHandle<io::Result<()>>,
+}
+
+impl ServeHandle {
+    /// Bind synchronously (so the caller can connect immediately), then
+    /// run the serve loop on a background thread.
+    pub fn spawn(cfg: ServeConfig) -> io::Result<ServeHandle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let join = thread::Builder::new()
+            .name("kube-packd-serve".to_string())
+            .spawn(move || serve_loop(listener, cfg))?;
+        Ok(ServeHandle { addr, join })
+    }
+
+    /// Wait for the daemon to drain and exit.
+    pub fn join(self) -> io::Result<()> {
+        self.join.join().unwrap_or_else(|_| {
+            Err(io::Error::other("serve thread panicked"))
+        })
+    }
+}
+
+/// Run the daemon on the calling thread until it drains (the CLI
+/// entrypoint). Returns once every enqueued request has been answered
+/// and telemetry exports are flushed.
+pub fn serve(cfg: ServeConfig) -> io::Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    serve_loop(listener, cfg)
+}
+
+fn serve_loop(listener: TcpListener, cfg: ServeConfig) -> io::Result<()> {
+    if cfg.install_sigint {
+        sigint::install();
+    }
+    listener.set_nonblocking(true)?;
+    let batcher = Batcher::new();
+    let tel = if cfg.telemetry {
+        Telemetry::recording()
+    } else {
+        Telemetry::off()
+    };
+    let mut engine = Engine::with_telemetry(cfg.engine.clone(), tel);
+    let window = Duration::from_millis(cfg.engine.window_ms.max(1));
+    let mut conns = 0u64;
+    // Wall-clock deadline of the open window (None = no submits
+    // pending, no window open).
+    let mut deadline: Option<Instant> = None;
+    // seq -> reply sink for deferred `submit` replies.
+    let mut waiting: BTreeMap<u64, ReplySink> = BTreeMap::new();
+
+    loop {
+        // Gated on the install flag: the flag is process-global, and an
+        // in-process test daemon must not drain because some other
+        // daemon's SIGINT test fired.
+        if cfg.install_sigint && sigint::pending() {
+            batcher.begin_drain();
+        }
+        // Accept whatever is waiting; readers are detached and exit on
+        // client close.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let id = conns;
+                    conns += 1;
+                    let b = Arc::clone(&batcher);
+                    let max = cfg.max_line_bytes;
+                    thread::Builder::new()
+                        .name(format!("kube-packd-conn-{id}"))
+                        .spawn(move || reader_loop(stream, id, &b, max))?;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e),
+            }
+        }
+        // Wait for work, but never past the window deadline or the poll
+        // tick.
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()).min(POLL),
+            None => POLL,
+        };
+        let drained = batcher.pop_all(timeout);
+        let terminal = matches!(drained, Drained::Empty);
+        if let Drained::Items(items) = drained {
+            for sub in items {
+                match sub.request {
+                    Ok(req) => match engine.apply(sub.seq, req.tag, &req.op) {
+                        Some(reply) => {
+                            send_line(&sub.reply, &reply.to_string_compact());
+                        }
+                        None => {
+                            // A deferred submit: opens the window if
+                            // none is open.
+                            waiting.insert(sub.seq, sub.reply);
+                            deadline.get_or_insert_with(|| Instant::now() + window);
+                        }
+                    },
+                    Err((err, tag)) => {
+                        let reply = engine.error_reply(Some(sub.seq), tag, &err);
+                        send_line(&sub.reply, &reply.to_string_compact());
+                    }
+                }
+            }
+        }
+        // A shutdown op stops admission; already-enqueued requests keep
+        // draining through the loop.
+        if engine.draining() {
+            batcher.begin_drain();
+        }
+        // Close the window on deadline, early on batch size, or
+        // unconditionally once the drain has emptied the queue.
+        let due = deadline.is_some_and(|d| Instant::now() >= d)
+            || engine.pending_submit_count() >= cfg.max_batch.max(1)
+            || (terminal && engine.has_pending_submits());
+        if engine.has_pending_submits() && due {
+            let at = (engine.windows_closed() + 1) * cfg.engine.window_ms;
+            for (seq, reply) in engine.close_window_at(at) {
+                if let Some(sink) = waiting.remove(&seq) {
+                    send_line(&sink, &reply.to_string_compact());
+                }
+            }
+            deadline = None;
+        }
+        if terminal && !engine.has_pending_submits() {
+            debug_assert!(waiting.is_empty(), "drained with unanswered submits");
+            break;
+        }
+        if !engine.has_pending_submits() {
+            deadline = None;
+        }
+    }
+    // Flush telemetry exports before reporting a clean exit.
+    if let Some(path) = &cfg.trace_out {
+        std::fs::write(path, engine.telemetry().export_chrome())?;
+    }
+    if let Some(path) = &cfg.metrics_out {
+        std::fs::write(path, engine.telemetry().export_prometheus())?;
+    }
+    Ok(())
+}
+
+/// One framed line off the socket, or why there isn't one.
+enum Frame {
+    Line(String),
+    /// The line blew the byte cap; it was discarded without unbounded
+    /// buffering. Payload is the observed length.
+    Oversized(usize),
+    Eof,
+}
+
+/// Read one newline-delimited frame, enforcing the byte cap *while*
+/// reading — an attacker line never occupies more than `max` bytes of
+/// buffer no matter how long it is.
+fn read_frame(r: &mut impl BufRead, max: usize) -> io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut seen = 0usize;
+    let mut dropped = false;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(match (seen, dropped) {
+                (0, _) => Frame::Eof,
+                (_, true) => Frame::Oversized(seen),
+                // A final unterminated line still counts as a frame.
+                (_, false) => Frame::Line(String::from_utf8_lossy(&buf).into_owned()),
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                seen += pos;
+                if !dropped {
+                    buf.extend_from_slice(&chunk[..pos]);
+                }
+                r.consume(pos + 1);
+                return Ok(if dropped || seen > max {
+                    Frame::Oversized(seen)
+                } else {
+                    Frame::Line(String::from_utf8_lossy(&buf).into_owned())
+                });
+            }
+            None => {
+                let n = chunk.len();
+                seen += n;
+                if !dropped {
+                    buf.extend_from_slice(chunk);
+                    if buf.len() > max {
+                        dropped = true;
+                        buf = Vec::new();
+                    }
+                }
+                r.consume(n);
+            }
+        }
+    }
+}
+
+/// Per-connection reader: frame, parse, enqueue. Parse failures are
+/// enqueued too (the engine answers them in seq order); only drain-time
+/// rejections are answered here, because they never join the
+/// interleaving.
+fn reader_loop(stream: TcpStream, conn: u64, batcher: &Batcher, max: usize) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let sink: ReplySink = Arc::new(Mutex::new(write_half));
+    let mut reader = BufReader::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader, max) {
+            Ok(f) => f,
+            Err(_) => break, // connection died
+        };
+        let parsed = match frame {
+            Frame::Eof => break,
+            Frame::Oversized(got) => Err((WireError::Oversized { got, max }, None)),
+            Frame::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                parse_request(&line, max)
+            }
+        };
+        let tag = match &parsed {
+            Ok(req) => req.tag,
+            Err((_, tag)) => *tag,
+        };
+        if batcher.submit(conn, parsed, Arc::clone(&sink)).is_none() {
+            // Draining: rejected before sequencing, answered in place.
+            let reply = WireError::Draining.reply(None, tag);
+            if !send_line(&sink, &reply.to_string_compact()) {
+                break;
+            }
+        }
+    }
+}
+
+/// SIGINT → drain flag, with no libc crate: `signal(2)` is in the C
+/// library std already links. The handler only flips an atomic; the
+/// serve loop polls it.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FLAG: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_sig: i32) {
+        FLAG.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            let _ = signal(SIGINT, on_sigint);
+        }
+    }
+
+    pub fn pending() -> bool {
+        FLAG.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+
+    pub fn pending() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_split_on_newlines_and_cap_bytes() {
+        let mut r = BufReader::new(Cursor::new(b"{\"op\":\"health\"}\nshort\n".to_vec()));
+        match read_frame(&mut r, 64).expect("frame") {
+            Frame::Line(l) => assert_eq!(l, "{\"op\":\"health\"}"),
+            _ => panic!("expected a line"),
+        }
+        match read_frame(&mut r, 64).expect("frame") {
+            Frame::Line(l) => assert_eq!(l, "short"),
+            _ => panic!("expected a line"),
+        }
+        assert!(matches!(read_frame(&mut r, 64).expect("frame"), Frame::Eof));
+    }
+
+    #[test]
+    fn oversized_frames_are_discarded_not_buffered() {
+        let long = format!("{}\nnext\n", "x".repeat(1000));
+        let mut r = BufReader::new(Cursor::new(long.into_bytes()));
+        match read_frame(&mut r, 16).expect("frame") {
+            Frame::Oversized(got) => assert_eq!(got, 1000),
+            _ => panic!("expected oversized"),
+        }
+        // The stream recovers at the next line.
+        match read_frame(&mut r, 16).expect("frame") {
+            Frame::Line(l) => assert_eq!(l, "next"),
+            _ => panic!("expected recovery line"),
+        }
+    }
+
+    #[test]
+    fn unterminated_tail_is_a_frame() {
+        let mut r = BufReader::new(Cursor::new(b"{\"op\":\"query\"}".to_vec()));
+        match read_frame(&mut r, 64).expect("frame") {
+            Frame::Line(l) => assert_eq!(l, "{\"op\":\"query\"}"),
+            _ => panic!("expected a line"),
+        }
+        assert!(matches!(read_frame(&mut r, 64).expect("frame"), Frame::Eof));
+    }
+}

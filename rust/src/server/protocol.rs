@@ -1,0 +1,780 @@
+//! Newline-delimited JSON wire protocol for `kube-packd serve`.
+//!
+//! One request per line, one JSON object per line; every reply is one
+//! JSON object on one line. No tokio, no gRPC, no serde — the same
+//! hand-rolled [`Json`] codec the `datasets` and `solve --json` paths
+//! use, over std TCP. Serialisation is canonical (object keys are
+//! BTreeMap-ordered, optional fields are omitted when absent), so
+//! `op -> json -> text -> parse -> op -> json -> text` is
+//! byte-identical — the round-trip contract `rust/tests/server.rs`
+//! pins for every op.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"op":"submit","name":"web","replicas":2,"cpu_milli":500,"ram_mib":512,"priority":0}
+//! {"op":"delete","pod":"web-0"}
+//! {"op":"join","cpu_milli":4000,"ram_mib":4096}            // or {"op":"join","pool":"large",...}
+//! {"op":"drain","node":0}
+//! {"op":"remove","node":0}
+//! {"op":"query"} {"op":"health"} {"op":"metrics"} {"op":"trace_export"} {"op":"shutdown"}
+//! ```
+//!
+//! Every request may carry `"tag": N` — an opaque client correlation id
+//! echoed verbatim in the reply (load generators match latencies by
+//! tag; the server never interprets it). Replies additionally carry
+//! `"seq"`, the server-assigned global arrival sequence number: replies
+//! are a deterministic function of the seq-ordered request interleaving
+//! at any `--threads` count.
+//!
+//! Malformed input — bad JSON, an unknown `op`, a wrong-typed field, or
+//! an oversized line — produces a structured `{"error":{"code":...,
+//! "message":...}}` reply and leaves the connection alive.
+
+use crate::cluster::{ReplicaSet, Toleration};
+use crate::util::json::{parse, Json};
+use crate::workload::churn::{ChurnTrace, TraceOp};
+
+/// Default per-line byte cap. A line longer than this is answered with
+/// an `oversized` error and discarded without unbounded buffering.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Wire protocol version, reported by `health`.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Everything that can go wrong between the socket and a valid
+/// [`WireOp`]. Each variant maps to a stable `code` string on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// The line is not valid JSON.
+    BadJson(String),
+    /// Valid JSON, but `op` is missing or names no known operation.
+    UnknownOp(String),
+    /// Known op with a missing, wrong-typed, or out-of-range field.
+    BadRequest(String),
+    /// The line exceeded the per-line byte cap.
+    Oversized { got: usize, max: usize },
+    /// The daemon is draining: no new requests are accepted.
+    Draining,
+}
+
+impl WireError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            WireError::BadJson(_) => "bad-json",
+            WireError::UnknownOp(_) => "unknown-op",
+            WireError::BadRequest(_) => "bad-request",
+            WireError::Oversized { .. } => "oversized",
+            WireError::Draining => "draining",
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            WireError::BadJson(m) => format!("invalid JSON: {m}"),
+            WireError::UnknownOp(op) => format!("unknown op {op:?}"),
+            WireError::BadRequest(m) => m.clone(),
+            WireError::Oversized { got, max } => {
+                format!("line of {got} bytes exceeds the {max}-byte cap")
+            }
+            WireError::Draining => "daemon is draining; request rejected".to_string(),
+        }
+    }
+
+    /// The structured error reply for this failure, carrying whatever
+    /// identifiers are known (`seq` is absent when the request was
+    /// rejected before sequencing, e.g. during drain).
+    pub fn reply(&self, seq: Option<u64>, tag: Option<u64>) -> Json {
+        let mut err = Json::obj();
+        err.set("code", self.code()).set("message", self.message());
+        let mut o = Json::obj();
+        if let Some(s) = seq {
+            o.set("seq", s);
+        }
+        if let Some(t) = tag {
+            o.set("tag", t);
+        }
+        o.set("error", err);
+        o
+    }
+}
+
+/// A `submit` payload: one ReplicaSet-shaped admission request. The
+/// optional constraint fields mirror the [`ReplicaSet`] template
+/// vocabulary so churn traces convert losslessly (see
+/// [`trace_to_windows`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitSpec {
+    /// Explicit ReplicaSet identity. `Some` scales the known set (or
+    /// registers the template under that id); `None` resolves by name,
+    /// falling back to a server-assigned id.
+    pub rs_id: Option<u32>,
+    pub name: String,
+    pub replicas: u32,
+    pub cpu_milli: i64,
+    pub ram_mib: i64,
+    pub priority: u32,
+    pub labels: Vec<(String, String)>,
+    pub tolerations: Vec<Toleration>,
+    pub anti_affinity: Vec<(String, String)>,
+    pub spread_max_skew: Option<i64>,
+    pub extended: Vec<(String, i64)>,
+}
+
+impl SubmitSpec {
+    /// Minimal spec (no constraint fields) — the common client case.
+    pub fn basic(name: &str, replicas: u32, cpu_milli: i64, ram_mib: i64, priority: u32) -> Self {
+        SubmitSpec {
+            rs_id: None,
+            name: name.to_string(),
+            replicas,
+            cpu_milli,
+            ram_mib,
+            priority,
+            labels: Vec::new(),
+            tolerations: Vec::new(),
+            anti_affinity: Vec::new(),
+            spread_max_skew: None,
+            extended: Vec::new(),
+        }
+    }
+
+    /// Capture a trace ReplicaSet template (with an explicit replica
+    /// count — trace `Scale` ops reuse the template at a delta count).
+    pub fn from_replicaset(rs: &ReplicaSet, replicas: u32) -> Self {
+        SubmitSpec {
+            rs_id: Some(rs.id),
+            name: rs.name.clone(),
+            replicas,
+            cpu_milli: rs.template_request.cpu,
+            ram_mib: rs.template_request.ram,
+            priority: rs.priority.0,
+            labels: rs.labels.clone(),
+            tolerations: rs.tolerations.clone(),
+            anti_affinity: rs.anti_affinity.clone(),
+            spread_max_skew: rs.spread_max_skew,
+            extended: rs.extended.clone(),
+        }
+    }
+
+    /// Materialise the template this spec describes, under a resolved
+    /// dense id. The engine's single instantiation path — replicas are
+    /// stamped via [`ReplicaSet::instantiate`], exactly like the churn
+    /// simulator's.
+    pub fn to_replicaset(&self, id: u32) -> ReplicaSet {
+        let mut rs = ReplicaSet::new(
+            id,
+            self.name.clone(),
+            self.replicas,
+            crate::cluster::Resources::new(self.cpu_milli, self.ram_mib),
+            crate::cluster::Priority(self.priority),
+        );
+        rs.labels = self.labels.clone();
+        rs.tolerations = self.tolerations.clone();
+        rs.anti_affinity = self.anti_affinity.clone();
+        rs.spread_max_skew = self.spread_max_skew;
+        rs.extended = self.extended.clone();
+        rs
+    }
+}
+
+/// One admission operation on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireOp {
+    /// Admit `replicas` pods from a ReplicaSet template; the reply is
+    /// deferred to the enclosing solve window and carries placements +
+    /// the window certificate.
+    Submit(SubmitSpec),
+    /// Terminate a pod by name (replies immediately).
+    Delete { pod: String },
+    /// Join a node: plain capacity, or a pool preset (`small` | `large`
+    /// | `gpu`) decorated with the pool's labels/taints/extended
+    /// capacities. Capacity defaults to the pool's scale of the
+    /// daemon's reference capacity when omitted.
+    Join {
+        pool: Option<String>,
+        cpu_milli: Option<i64>,
+        ram_mib: Option<i64>,
+    },
+    /// Drain a ready node by index: evictees return to pending and are
+    /// re-placed in the next window.
+    Drain { node: u32 },
+    /// Remove a drained/cordoned node by index.
+    Remove { node: u32 },
+    /// Cluster snapshot: placements per tier, pending, utilisation, and
+    /// the solve-relevant state fingerprint.
+    Query,
+    /// Liveness + protocol version + drain status.
+    Health,
+    /// Live Prometheus text exposition of the daemon's counters.
+    Metrics,
+    /// Live Chrome-trace JSON export of the daemon's spans.
+    TraceExport,
+    /// Begin graceful drain: finish the in-flight window, answer every
+    /// already-enqueued request, flush telemetry exports, exit 0.
+    Shutdown,
+}
+
+impl WireOp {
+    /// Stable op name on the wire.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireOp::Submit(_) => "submit",
+            WireOp::Delete { .. } => "delete",
+            WireOp::Join { .. } => "join",
+            WireOp::Drain { .. } => "drain",
+            WireOp::Remove { .. } => "remove",
+            WireOp::Query => "query",
+            WireOp::Health => "health",
+            WireOp::Metrics => "metrics",
+            WireOp::TraceExport => "trace_export",
+            WireOp::Shutdown => "shutdown",
+        }
+    }
+
+    /// Canonical JSON form (the exact bytes a round-trip must preserve).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("op", self.name());
+        match self {
+            WireOp::Submit(s) => {
+                if let Some(id) = s.rs_id {
+                    o.set("rs_id", id);
+                }
+                o.set("name", s.name.as_str())
+                    .set("replicas", s.replicas)
+                    .set("cpu_milli", s.cpu_milli)
+                    .set("ram_mib", s.ram_mib)
+                    .set("priority", s.priority);
+                if !s.labels.is_empty() {
+                    o.set("labels", pairs_to_json(&s.labels));
+                }
+                if !s.tolerations.is_empty() {
+                    let tols = s
+                        .tolerations
+                        .iter()
+                        .map(|t| {
+                            let mut tj = Json::obj();
+                            tj.set("key", t.key.as_str());
+                            if let Some(v) = &t.value {
+                                tj.set("value", v.as_str());
+                            }
+                            tj
+                        })
+                        .collect();
+                    o.set("tolerations", Json::Arr(tols));
+                }
+                if !s.anti_affinity.is_empty() {
+                    o.set("anti_affinity", pairs_to_json(&s.anti_affinity));
+                }
+                if let Some(skew) = s.spread_max_skew {
+                    o.set("spread_max_skew", skew);
+                }
+                if !s.extended.is_empty() {
+                    let ext = s
+                        .extended
+                        .iter()
+                        .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::from(*v)]))
+                        .collect();
+                    o.set("extended", Json::Arr(ext));
+                }
+            }
+            WireOp::Delete { pod } => {
+                o.set("pod", pod.as_str());
+            }
+            WireOp::Join {
+                pool,
+                cpu_milli,
+                ram_mib,
+            } => {
+                if let Some(p) = pool {
+                    o.set("pool", p.as_str());
+                }
+                if let Some(c) = cpu_milli {
+                    o.set("cpu_milli", *c);
+                }
+                if let Some(r) = ram_mib {
+                    o.set("ram_mib", *r);
+                }
+            }
+            WireOp::Drain { node } | WireOp::Remove { node } => {
+                o.set("node", *node);
+            }
+            WireOp::Query
+            | WireOp::Health
+            | WireOp::Metrics
+            | WireOp::TraceExport
+            | WireOp::Shutdown => {}
+        }
+        o
+    }
+
+    /// Parse a request object (sans `tag`, which [`WireRequest`] owns).
+    pub fn from_json(j: &Json) -> Result<WireOp, WireError> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| WireError::BadRequest("missing string field 'op'".into()))?;
+        match op {
+            "submit" => Ok(WireOp::Submit(submit_from_json(j)?)),
+            "delete" => Ok(WireOp::Delete {
+                pod: req_str(j, "pod")?,
+            }),
+            "join" => {
+                let pool = match j.get("pool") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| bad("field 'pool' must be a string"))?
+                            .to_string(),
+                    ),
+                };
+                let cpu_milli = opt_i64(j, "cpu_milli")?;
+                let ram_mib = opt_i64(j, "ram_mib")?;
+                if pool.is_none() && (cpu_milli.is_none() || ram_mib.is_none()) {
+                    return Err(bad("join wants a 'pool' or both 'cpu_milli' and 'ram_mib'"));
+                }
+                Ok(WireOp::Join {
+                    pool,
+                    cpu_milli,
+                    ram_mib,
+                })
+            }
+            "drain" => Ok(WireOp::Drain {
+                node: req_u32(j, "node")?,
+            }),
+            "remove" => Ok(WireOp::Remove {
+                node: req_u32(j, "node")?,
+            }),
+            "query" => Ok(WireOp::Query),
+            "health" => Ok(WireOp::Health),
+            "metrics" => Ok(WireOp::Metrics),
+            "trace_export" => Ok(WireOp::TraceExport),
+            "shutdown" => Ok(WireOp::Shutdown),
+            other => Err(WireError::UnknownOp(other.to_string())),
+        }
+    }
+}
+
+/// A parsed request: the operation plus the client's optional opaque
+/// correlation tag (echoed in the reply, never interpreted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub op: WireOp,
+    pub tag: Option<u64>,
+}
+
+impl WireRequest {
+    pub fn new(op: WireOp) -> Self {
+        WireRequest { op, tag: None }
+    }
+
+    pub fn tagged(op: WireOp, tag: u64) -> Self {
+        WireRequest { op, tag: Some(tag) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = self.op.to_json();
+        if let Some(t) = self.tag {
+            o.set("tag", t);
+        }
+        o
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json(j: &Json) -> Result<WireRequest, WireError> {
+        let tag = match j.get("tag") {
+            None => None,
+            Some(v) => Some(
+                v.as_i64()
+                    .filter(|t| *t >= 0)
+                    .map(|t| t as u64)
+                    .ok_or_else(|| bad("field 'tag' must be a non-negative integer"))?,
+            ),
+        };
+        Ok(WireRequest {
+            op: WireOp::from_json(j)?,
+            tag,
+        })
+    }
+}
+
+/// Parse one wire line into a request, enforcing the byte cap. On
+/// `BadJson`/`BadRequest` failures the tag is still recovered when the
+/// line parses as JSON, so the error reply can carry it.
+pub fn parse_request(line: &str, max_bytes: usize) -> Result<WireRequest, (WireError, Option<u64>)> {
+    if line.len() > max_bytes {
+        return Err((
+            WireError::Oversized {
+                got: line.len(),
+                max: max_bytes,
+            },
+            None,
+        ));
+    }
+    let j = parse(line).map_err(|e| (WireError::BadJson(format!("{e}")), None))?;
+    let tag = j.get("tag").and_then(Json::as_i64).filter(|t| *t >= 0).map(|t| t as u64);
+    WireRequest::from_json(&j).map_err(|e| (e, tag))
+}
+
+fn bad(msg: &str) -> WireError {
+    WireError::BadRequest(msg.to_string())
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, WireError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| bad(&format!("missing string field '{key}'")))
+}
+
+fn req_i64(j: &Json, key: &str) -> Result<i64, WireError> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .ok_or_else(|| bad(&format!("missing integer field '{key}'")))
+}
+
+fn opt_i64(j: &Json, key: &str) -> Result<Option<i64>, WireError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .map(Some)
+            .ok_or_else(|| bad(&format!("field '{key}' must be an integer"))),
+    }
+}
+
+fn req_u32(j: &Json, key: &str) -> Result<u32, WireError> {
+    let v = req_i64(j, key)?;
+    u32::try_from(v).map_err(|_| bad(&format!("field '{key}' out of range: {v}")))
+}
+
+fn pairs_to_json(pairs: &[(String, String)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+            .collect(),
+    )
+}
+
+fn pairs_from_json(j: &Json, key: &str) -> Result<Vec<(String, String)>, WireError> {
+    let Some(v) = j.get(key) else {
+        return Ok(Vec::new());
+    };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| bad(&format!("field '{key}' must be an array of [key, value] pairs")))?;
+    arr.iter()
+        .map(|item| {
+            let pair = item.as_arr().filter(|p| p.len() == 2);
+            match pair {
+                Some(p) => match (p[0].as_str(), p[1].as_str()) {
+                    (Some(k), Some(v)) => Ok((k.to_string(), v.to_string())),
+                    _ => Err(bad(&format!("'{key}' entries must be string pairs"))),
+                },
+                None => Err(bad(&format!("'{key}' entries must be [key, value] pairs"))),
+            }
+        })
+        .collect()
+}
+
+fn submit_from_json(j: &Json) -> Result<SubmitSpec, WireError> {
+    let rs_id = match j.get("rs_id") {
+        None => None,
+        Some(v) => Some(
+            v.as_i64()
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or_else(|| bad("field 'rs_id' must be a non-negative integer"))?,
+        ),
+    };
+    let replicas = req_u32(j, "replicas")?;
+    if replicas == 0 {
+        return Err(bad("'replicas' must be at least 1"));
+    }
+    let cpu_milli = req_i64(j, "cpu_milli")?;
+    let ram_mib = req_i64(j, "ram_mib")?;
+    if cpu_milli < 0 || ram_mib < 0 {
+        return Err(bad("resource requests must be non-negative"));
+    }
+    let tolerations = match j.get("tolerations") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| bad("field 'tolerations' must be an array"))?;
+            arr.iter()
+                .map(|t| {
+                    let key = req_str(t, "key")?;
+                    let value = match t.get("value") {
+                        None => None,
+                        Some(v) => Some(
+                            v.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| bad("toleration 'value' must be a string"))?,
+                        ),
+                    };
+                    Ok(Toleration { key, value })
+                })
+                .collect::<Result<Vec<_>, WireError>>()?
+        }
+    };
+    let extended = match j.get("extended") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| bad("field 'extended' must be an array of [name, amount] pairs"))?;
+            arr.iter()
+                .map(|item| {
+                    let p = item.as_arr().filter(|p| p.len() == 2);
+                    match p {
+                        Some(p) => match (p[0].as_str(), p[1].as_i64()) {
+                            (Some(k), Some(v)) if v > 0 => Ok((k.to_string(), v)),
+                            _ => Err(bad("'extended' entries must be [name, positive amount]")),
+                        },
+                        None => Err(bad("'extended' entries must be [name, amount] pairs")),
+                    }
+                })
+                .collect::<Result<Vec<_>, WireError>>()?
+        }
+    };
+    Ok(SubmitSpec {
+        rs_id,
+        name: req_str(j, "name")?,
+        replicas,
+        cpu_milli,
+        ram_mib,
+        priority: req_u32(j, "priority")?,
+        labels: pairs_from_json(j, "labels")?,
+        tolerations,
+        anti_affinity: pairs_from_json(j, "anti_affinity")?,
+        spread_max_skew: opt_i64(j, "spread_max_skew")?,
+        extended,
+    })
+}
+
+// ---- trace ops ⇄ wire ops ---------------------------------------------------
+
+/// Expand a seeded [`ChurnTrace`] into per-tick wire-op windows: the
+/// daemon-side equivalent of feeding the trace to the lifecycle
+/// simulator under [`Policy::Fallback`]. Each `(tick, ops)` window maps
+/// to one engine solve window; replaying them through
+/// [`Engine::run_window`] must land in the same final
+/// [`ClusterState`] fingerprint as `run_churn` — the daemon ⇄ simulator
+/// equivalence `rust/tests/server.rs` pins.
+///
+/// The conversion mirrors the churn runner's semantics exactly:
+///
+/// * `Deploy`/`Scale(+)` become `submit` ops; pod lifetimes become
+///   `delete` ops at the completion tick (the daemon has no virtual
+///   clock, so completions must arrive as explicit requests).
+/// * `Scale(-)` terminates the newest still-live replicas — matching
+///   the runner's "newest first, skip retired" downscale — as `delete`
+///   ops in the scale's own position.
+/// * Deletes for pods a scale-down already terminated are still
+///   emitted (the engine answers `deleted:false`), because the runner
+///   processes the completion event tick anyway — and runs a
+///   scheduling round there, which the replay must reproduce.
+/// * Events past the horizon never fire; the converter drops them.
+///
+/// [`Policy::Fallback`]: crate::lifecycle::Policy::Fallback
+/// [`Engine::run_window`]: super::engine::Engine::run_window
+pub fn trace_to_windows(trace: &ChurnTrace) -> Vec<(u64, Vec<WireOp>)> {
+    use std::collections::BTreeMap;
+
+    struct Replica {
+        name: String,
+        completes_at: u64,
+        spawn_seq: u64,
+    }
+    let horizon = trace.params.horizon_ms;
+    // Tick -> trace-derived ops, in trace order (the runner's insertion
+    // order: all trace ops are scheduled before any completion).
+    let mut windows: BTreeMap<u64, Vec<WireOp>> = BTreeMap::new();
+    // Completion tick -> (spawn seq, pod name): appended after the
+    // trace ops of the same tick, in spawn order — exactly the
+    // timeline's insertion-sequence tie-break.
+    let mut completions: BTreeMap<u64, Vec<(u64, String)>> = BTreeMap::new();
+    let mut catalog: BTreeMap<u32, ReplicaSet> = BTreeMap::new();
+    let mut next_ord: BTreeMap<u32, u32> = BTreeMap::new();
+    let mut live: BTreeMap<u32, Vec<Replica>> = BTreeMap::new();
+    let mut spawn_seq = 0u64;
+
+    let mut spawn = |rs_id: u32,
+                     at: u64,
+                     lifetime_ms: u64,
+                     catalog: &BTreeMap<u32, ReplicaSet>,
+                     next_ord: &mut BTreeMap<u32, u32>,
+                     live: &mut BTreeMap<u32, Vec<Replica>>,
+                     completions: &mut BTreeMap<u64, Vec<(u64, String)>>| {
+        let rs = catalog.get(&rs_id).expect("catalogued rs");
+        let ord = next_ord.entry(rs_id).or_insert(0);
+        let name = format!("{}-{}", rs.name, *ord);
+        *ord += 1;
+        let completes_at = at + lifetime_ms;
+        if completes_at <= horizon {
+            completions
+                .entry(completes_at)
+                .or_default()
+                .push((spawn_seq, name.clone()));
+        }
+        live.entry(rs_id).or_default().push(Replica {
+            name,
+            completes_at,
+            spawn_seq,
+        });
+        spawn_seq += 1;
+    };
+
+    for (t, op) in &trace.ops {
+        let t = *t;
+        if t > horizon {
+            continue; // the runner's hard horizon cut
+        }
+        let ops = windows.entry(t).or_default();
+        match op {
+            TraceOp::Deploy { rs, lifetimes_ms } => {
+                catalog.insert(rs.id, rs.clone());
+                ops.push(WireOp::Submit(SubmitSpec::from_replicaset(
+                    rs,
+                    lifetimes_ms.len() as u32,
+                )));
+                for &life in lifetimes_ms {
+                    spawn(rs.id, t, life, &catalog, &mut next_ord, &mut live, &mut completions);
+                }
+            }
+            TraceOp::Scale {
+                rs,
+                delta,
+                lifetimes_ms,
+            } => {
+                let Some(template) = catalog.get(rs).cloned() else {
+                    continue; // unknown set: the runner logs a skip (tick still rounds)
+                };
+                if *delta >= 0 {
+                    ops.push(WireOp::Submit(SubmitSpec::from_replicaset(
+                        &template,
+                        lifetimes_ms.len() as u32,
+                    )));
+                    for &life in lifetimes_ms {
+                        spawn(*rs, t, life, &catalog, &mut next_ord, &mut live, &mut completions);
+                    }
+                } else {
+                    // Newest first; a replica whose completion already
+                    // fired (strictly before this tick — same-tick
+                    // completions apply *after* trace ops) is skipped
+                    // without counting, like the runner's retired check.
+                    let mut want = (-*delta) as usize;
+                    let stack = live.entry(*rs).or_default();
+                    while want > 0 {
+                        let Some(r) = stack.pop() else { break };
+                        if r.completes_at < t {
+                            continue;
+                        }
+                        ops.push(WireOp::Delete { pod: r.name });
+                        want -= 1;
+                    }
+                }
+            }
+            TraceOp::Drain { node } => ops.push(WireOp::Drain { node: *node }),
+            TraceOp::Join { capacity, pool } => ops.push(WireOp::Join {
+                pool: pool.as_ref().map(|p| p.name.clone()),
+                cpu_milli: Some(capacity.cpu),
+                ram_mib: Some(capacity.ram),
+            }),
+        }
+    }
+    for (t, mut deletes) in completions {
+        deletes.sort_by_key(|(seq, _)| *seq);
+        let ops = windows.entry(t).or_default();
+        ops.extend(deletes.into_iter().map(|(_, name)| WireOp::Delete { pod: name }));
+    }
+    windows.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::churn::{ChurnParams, ChurnTraceGenerator};
+    use crate::workload::GenParams;
+
+    #[test]
+    fn parse_rejects_garbage_and_unknown_ops() {
+        assert!(matches!(
+            parse_request("{nope", MAX_LINE_BYTES),
+            Err((WireError::BadJson(_), None))
+        ));
+        assert!(matches!(
+            parse_request("{\"op\":\"fly\"}", MAX_LINE_BYTES),
+            Err((WireError::UnknownOp(_), None))
+        ));
+        assert!(matches!(
+            parse_request("{\"op\":\"drain\"}", MAX_LINE_BYTES),
+            Err((WireError::BadRequest(_), None))
+        ));
+        // Tag is recovered even when the op is broken.
+        assert!(matches!(
+            parse_request("{\"op\":\"drain\",\"tag\":7}", MAX_LINE_BYTES),
+            Err((WireError::BadRequest(_), Some(7)))
+        ));
+        let oversized = format!("{{\"op\":\"health\",\"pad\":\"{}\"}}", "x".repeat(64));
+        assert!(matches!(
+            parse_request(&oversized, 16),
+            Err((WireError::Oversized { .. }, None))
+        ));
+    }
+
+    #[test]
+    fn error_replies_are_structured() {
+        let r = WireError::UnknownOp("fly".into()).reply(Some(3), Some(9));
+        assert_eq!(r.get("seq").and_then(Json::as_i64), Some(3));
+        assert_eq!(r.get("tag").and_then(Json::as_i64), Some(9));
+        let e = r.get("error").expect("error object");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("unknown-op"));
+    }
+
+    #[test]
+    fn trace_windows_are_tick_ordered_and_inside_horizon() {
+        let trace = ChurnTraceGenerator::new(
+            ChurnParams {
+                horizon_ms: 5_000,
+                mean_arrival_ms: 300,
+                mean_lifetime_ms: 1_200,
+                ..ChurnParams::for_cluster(GenParams {
+                    nodes: 3,
+                    pods_per_node: 3,
+                    priority_tiers: 2,
+                    usage: 0.9,
+                })
+            },
+            11,
+        )
+        .generate();
+        let windows = trace_to_windows(&trace);
+        assert!(!windows.is_empty());
+        let mut prev = None;
+        let mut submits = 0usize;
+        let mut deletes = 0usize;
+        for (t, ops) in &windows {
+            assert!(*t <= trace.params.horizon_ms);
+            if let Some(p) = prev {
+                assert!(*t > p, "windows must be strictly tick-ordered");
+            }
+            prev = Some(*t);
+            for op in ops {
+                match op {
+                    WireOp::Submit(_) => submits += 1,
+                    WireOp::Delete { .. } => deletes += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(submits > 0, "trace must produce admissions");
+        assert!(deletes > 0, "lifetimes inside the horizon must convert to deletes");
+    }
+}

@@ -1,0 +1,507 @@
+//! Serve-daemon integration tests.
+//!
+//! Four contracts from the serve subsystem, each pinned here:
+//!
+//! 1. **Wire round-trips** — every [`WireOp`] serialises and parses
+//!    back byte-identically (the protocol's canonical-form claim), and
+//!    malformed frames map to the stable error taxonomy without ever
+//!    panicking (fuzz-ish proptest over garbage lines).
+//! 2. **Live hardening** — a real daemon over loopback survives bad
+//!    JSON, unknown ops, oversized lines, and garbage bursts with one
+//!    structured error reply per frame and the connection intact.
+//! 3. **Drain** — `shutdown` (and SIGINT) stop admission, the in-flight
+//!    window closes, every already-enqueued reply is delivered, and the
+//!    daemon exits cleanly. No reply lost, no request accepted after
+//!    the drain begins.
+//! 4. **Determinism & equivalence** — the replay surface is
+//!    byte-identical at 1 and 8 portfolio threads, and a churn trace
+//!    converted through [`trace_to_windows`] leaves the engine in the
+//!    same fingerprinted state as `run_churn` on the original trace.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use kube_packd::cluster::{identical_nodes, Resources, Toleration};
+use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy, SweepConfig};
+use kube_packd::optimizer::OptimizerConfig;
+use kube_packd::portfolio::PortfolioConfig;
+use kube_packd::server::engine::{Engine, EngineConfig};
+use kube_packd::server::loadgen::{engine_for_trace, replay_reply_stream, stream_fingerprint};
+use kube_packd::server::protocol::{
+    parse_request, trace_to_windows, SubmitSpec, WireOp, WireRequest, MAX_LINE_BYTES,
+};
+use kube_packd::server::{ServeConfig, ServeHandle};
+use kube_packd::util::json::{parse, Json};
+use kube_packd::util::prop;
+use kube_packd::util::rng::Rng;
+use kube_packd::workload::{ChurnParams, ChurnTraceGenerator, ConstraintProfile, GenParams};
+
+// ---- helpers --------------------------------------------------------------
+
+/// The paper's figure-1 cluster: two 4Gi nodes, one priority tier.
+fn fig1_engine(window_ms: u64) -> EngineConfig {
+    EngineConfig {
+        p_max: 0,
+        nodes: identical_nodes(2, Resources::new(4000, 4096)),
+        reference_capacity: Resources::new(4000, 4096),
+        solve_timeout: Duration::from_secs(5),
+        window_ms,
+        ..EngineConfig::default()
+    }
+}
+
+fn spawn_daemon(engine: EngineConfig, max_batch: usize, max_line_bytes: usize) -> ServeHandle {
+    ServeHandle::spawn(ServeConfig {
+        max_batch,
+        max_line_bytes,
+        engine,
+        ..ServeConfig::default()
+    })
+    .expect("daemon binds on loopback")
+}
+
+/// Minimal blocking newline-JSON client (tests drive ordering
+/// explicitly, so no tag matching here — replies are read in order).
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).expect("connect to daemon");
+        s.set_nodelay(true).ok();
+        Client {
+            r: BufReader::new(s.try_clone().expect("clone stream")),
+            w: s,
+        }
+    }
+
+    fn send_raw(&mut self, line: &str) {
+        self.w.write_all(line.as_bytes()).expect("send line");
+        self.w.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "daemon closed the connection unexpectedly");
+        parse(line.trim_end()).expect("reply is valid JSON")
+    }
+
+    fn request(&mut self, req: &WireRequest) -> Json {
+        self.send_raw(&req.to_line());
+        self.recv()
+    }
+}
+
+fn error_code(reply: &Json) -> Option<&str> {
+    reply.get("error")?.get("code")?.as_str()
+}
+
+fn tag_of(reply: &Json) -> Option<i64> {
+    reply.get("tag").and_then(Json::as_i64)
+}
+
+// ---- 1. wire round-trips --------------------------------------------------
+
+/// A submit exercising every optional constraint field at once.
+fn full_spec() -> SubmitSpec {
+    SubmitSpec {
+        rs_id: Some(7),
+        name: "etl".to_string(),
+        replicas: 3,
+        cpu_milli: 250,
+        ram_mib: 512,
+        priority: 2,
+        labels: vec![("app".to_string(), "etl".to_string())],
+        tolerations: vec![
+            Toleration::equal("dedicated", "batch"),
+            Toleration {
+                key: "spot".to_string(),
+                value: None,
+            },
+        ],
+        anti_affinity: vec![("app".to_string(), "etl".to_string())],
+        spread_max_skew: Some(1),
+        extended: vec![("gpu".to_string(), 2)],
+    }
+}
+
+fn every_op() -> Vec<WireOp> {
+    vec![
+        WireOp::Submit(SubmitSpec::basic("web", 2, 100, 2048, 0)),
+        WireOp::Submit(full_spec()),
+        WireOp::Delete {
+            pod: "web-0".to_string(),
+        },
+        WireOp::Join {
+            pool: None,
+            cpu_milli: Some(4000),
+            ram_mib: Some(4096),
+        },
+        WireOp::Join {
+            pool: Some("large".to_string()),
+            cpu_milli: None,
+            ram_mib: None,
+        },
+        WireOp::Join {
+            pool: Some("small".to_string()),
+            cpu_milli: Some(2000),
+            ram_mib: Some(2048),
+        },
+        WireOp::Drain { node: 3 },
+        WireOp::Remove { node: 0 },
+        WireOp::Query,
+        WireOp::Health,
+        WireOp::Metrics,
+        WireOp::TraceExport,
+        WireOp::Shutdown,
+    ]
+}
+
+#[test]
+fn every_wire_op_round_trips_byte_identically() {
+    for op in every_op() {
+        for req in [
+            WireRequest::new(op.clone()),
+            WireRequest::tagged(op.clone(), 42),
+        ] {
+            let line = req.to_line();
+            let parsed = parse_request(&line, MAX_LINE_BYTES)
+                .unwrap_or_else(|(e, _)| panic!("{op:?} failed to re-parse: {}", e.message()));
+            assert_eq!(parsed, req, "structural round-trip for {op:?}");
+            assert_eq!(parsed.to_line(), line, "byte-identical reserialisation for {op:?}");
+        }
+    }
+}
+
+#[test]
+fn malformed_frames_map_to_the_stable_error_taxonomy() {
+    let code = |line: &str, max: usize| -> (&'static str, Option<u64>) {
+        match parse_request(line, max) {
+            Ok(req) => panic!("{line:?} unexpectedly parsed as {req:?}"),
+            Err((e, tag)) => (e.code(), tag),
+        }
+    };
+    assert_eq!(code("{not json", MAX_LINE_BYTES).0, "bad-json");
+    assert_eq!(code("[1,2]", MAX_LINE_BYTES).0, "bad-request");
+    assert_eq!(code("{\"op\":\"fly\"}", MAX_LINE_BYTES).0, "unknown-op");
+    assert_eq!(code("{\"op\":\"submit\"}", MAX_LINE_BYTES).0, "bad-request");
+    assert_eq!(code("{\"op\":\"drain\"}", MAX_LINE_BYTES).0, "bad-request");
+    assert_eq!(code("{\"op\":\"join\"}", MAX_LINE_BYTES).0, "bad-request");
+    assert_eq!(code(&"x".repeat(300), 256).0, "oversized");
+    // The correlation tag survives op-level failures so the error reply
+    // can carry it back.
+    assert_eq!(code("{\"op\":\"fly\",\"tag\":9}", MAX_LINE_BYTES), ("unknown-op", Some(9)));
+}
+
+#[test]
+fn garbage_frames_never_panic_and_errors_stay_structured() {
+    let alphabet: &[u8] = b"{}[]\",:0123456789abcdefgh \t\\truefalsnu-+.eE";
+    prop::check(
+        "serve-garbage-frames",
+        0x6A5B,
+        400,
+        |rng: &mut Rng| {
+            let len = 1 + rng.below(100) as usize;
+            (0..len)
+                .map(|_| alphabet[rng.below(alphabet.len() as u64) as usize] as char)
+                .collect::<String>()
+        },
+        |line| match parse_request(line, 256) {
+            // The rare frame that happens to spell a valid request is
+            // fine — the contract is "no panic, errors structured".
+            Ok(_) => Ok(()),
+            Err((err, tag)) => {
+                let reply = err.reply(None, tag);
+                match error_code(&reply) {
+                    Some(c) if !c.is_empty() => Ok(()),
+                    _ => Err(format!("unstructured error reply for {line:?}: {reply}")),
+                }
+            }
+        },
+    );
+}
+
+// ---- 2. live hardening ----------------------------------------------------
+
+#[test]
+fn daemon_survives_garbage_and_keeps_answering() {
+    let handle = spawn_daemon(fig1_engine(50), 64, 512);
+    let mut c = Client::connect(handle.addr);
+
+    c.send_raw("{definitely not json");
+    assert_eq!(error_code(&c.recv()), Some("bad-json"));
+
+    c.send_raw("{\"op\":\"fly\",\"tag\":9}");
+    let r = c.recv();
+    assert_eq!(error_code(&r), Some("unknown-op"));
+    assert_eq!(tag_of(&r), Some(9), "tag recovered onto the error reply");
+
+    // Oversized: the frame reader caps buffering, discards the rest of
+    // the line, and the connection must stay usable.
+    c.send_raw(&format!("{{\"op\":\"health\",\"pad\":\"{}\"}}", "x".repeat(1024)));
+    assert_eq!(error_code(&c.recv()), Some("oversized"));
+
+    // Garbage burst: every frame opens with '[' so it can never spell a
+    // valid request (requests are objects) and never reads as an empty
+    // line — exactly one structured error reply per frame.
+    let mut rng = Rng::new(0xF00D);
+    let alphabet: &[u8] = b"{}[]\",:0123456789abcdef \\truefalsnu-+.eE";
+    for i in 0..50 {
+        let len = rng.below(80) as usize;
+        let line: String = std::iter::once('[')
+            .chain((0..len).map(|_| alphabet[rng.below(alphabet.len() as u64) as usize] as char))
+            .collect();
+        c.send_raw(&line);
+        let r = c.recv();
+        assert!(
+            error_code(&r).is_some_and(|c| c == "bad-json" || c == "bad-request"),
+            "garbage frame {i} got a non-error reply: {r}"
+        );
+    }
+
+    // The same connection still serves valid requests.
+    let r = c.request(&WireRequest::tagged(WireOp::Health, 1));
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(tag_of(&r), Some(1));
+
+    let _ = c.request(&WireRequest::new(WireOp::Shutdown));
+    handle.join().expect("daemon exits cleanly");
+}
+
+#[test]
+fn live_metrics_and_trace_export_have_substance() {
+    let handle = spawn_daemon(fig1_engine(50), 64, MAX_LINE_BYTES);
+    let mut c = Client::connect(handle.addr);
+
+    // Figure-1 batch: 2Gi + 2Gi + 3Gi over two 4Gi nodes. LeastAllocated
+    // spreading strands the 3Gi pod; the window solve re-packs and
+    // proves it.
+    c.send_raw(&WireRequest::tagged(WireOp::Submit(SubmitSpec::basic("web", 2, 100, 2048, 0)), 1).to_line());
+    c.send_raw(&WireRequest::tagged(WireOp::Submit(SubmitSpec::basic("db", 1, 100, 3072, 0)), 2).to_line());
+    for expect_tag in [1, 2] {
+        let r = c.recv();
+        assert_eq!(r.get("op").and_then(Json::as_str), Some("submit"));
+        assert_eq!(tag_of(&r), Some(expect_tag));
+        assert_eq!(
+            r.get("certificate").and_then(Json::as_str),
+            Some("proven-optimal"),
+            "figure-1 repack must carry the optimality certificate: {r}"
+        );
+        for p in r.get("placements").and_then(Json::as_arr).expect("placements array") {
+            assert!(p.get("node").and_then(Json::as_str).is_some(), "unplaced pod in {r}");
+        }
+    }
+
+    let m = c.request(&WireRequest::tagged(WireOp::Metrics, 3));
+    let body = m.get("body").and_then(Json::as_str).expect("metrics body");
+    assert!(
+        m.get("content_type").and_then(Json::as_str).is_some_and(|t| t.starts_with("text/plain")),
+        "Prometheus exposition content type: {m}"
+    );
+    for metric in [
+        "# TYPE kube_packd_server_requests_total counter",
+        "kube_packd_server_windows_total",
+        "kube_packd_server_solver_invocations_total",
+    ] {
+        assert!(body.contains(metric), "metrics body missing {metric:?}:\n{body}");
+    }
+
+    let t = c.request(&WireRequest::tagged(WireOp::TraceExport, 4));
+    let body = t.get("body").and_then(Json::as_str).expect("trace body");
+    let chrome = parse(body).expect("Chrome trace export is valid JSON");
+    assert!(chrome.get("traceEvents").is_some() || body.starts_with('['), "unexpected trace shape");
+    assert!(body.contains("serve_window"), "window span missing from the live trace export");
+
+    let _ = c.request(&WireRequest::new(WireOp::Shutdown));
+    handle.join().expect("daemon exits cleanly");
+}
+
+// ---- 3. drain -------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_the_window_without_losing_replies() {
+    // A huge window: only the drain may close it. If drain failed to
+    // flush, the deferred replies below would never arrive (the test
+    // would hang rather than pass vacuously).
+    let handle = spawn_daemon(fig1_engine(600_000), 1_000, MAX_LINE_BYTES);
+    let mut a = Client::connect(handle.addr);
+    for (tag, name, replicas, ram) in [(1, "web", 2, 2048), (2, "db", 1, 3072)] {
+        a.send_raw(&WireRequest::tagged(WireOp::Submit(SubmitSpec::basic(name, replicas, 100, ram, 0)), tag).to_line());
+    }
+    // Same-connection barrier: once the query answers, both submits are
+    // sequenced and applied — the shutdown below cannot overtake them.
+    let q = a.request(&WireRequest::tagged(WireOp::Query, 3));
+    assert_eq!(q.get("pending").and_then(Json::as_i64), Some(3), "submits deferred, unplaced: {q}");
+
+    let mut b = Client::connect(handle.addr);
+    let ack = b.request(&WireRequest::tagged(WireOp::Shutdown, 9));
+    assert_eq!(ack.get("draining").and_then(Json::as_bool), Some(true), "shutdown ack: {ack}");
+
+    // No enqueued reply lost: the drain closes the in-flight window and
+    // both deferred submits answer, in seq order, with placements.
+    for expect_tag in [1, 2] {
+        let r = a.recv();
+        assert_eq!(r.get("op").and_then(Json::as_str), Some("submit"), "lost or reordered reply: {r}");
+        assert_eq!(tag_of(&r), Some(expect_tag));
+        assert_eq!(r.get("certificate").and_then(Json::as_str), Some("proven-optimal"));
+        for p in r.get("placements").and_then(Json::as_arr).expect("placements array") {
+            assert!(p.get("node").and_then(Json::as_str).is_some(), "unplaced pod in {r}");
+        }
+    }
+
+    // No request accepted once the drain begins. The flag propagates a
+    // beat after the ack, so poll until the structured rejection
+    // appears; every probe still gets exactly one reply either way.
+    let mut saw_draining = false;
+    for i in 0..200u64 {
+        b.send_raw(&WireRequest::tagged(WireOp::Health, 100 + i).to_line());
+        let r = b.recv();
+        if error_code(&r) == Some("draining") {
+            assert_eq!(r.get("seq"), None, "drain-time rejections never join the interleaving");
+            saw_draining = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saw_draining, "daemon never began refusing requests after shutdown");
+    handle.join().expect("daemon drains and exits cleanly");
+}
+
+#[cfg(unix)]
+#[test]
+fn sigint_drains_like_shutdown() {
+    extern "C" {
+        fn raise(signum: i32) -> i32;
+    }
+    const SIGINT: i32 = 2;
+
+    let handle = ServeHandle::spawn(ServeConfig {
+        engine: fig1_engine(600_000),
+        install_sigint: true,
+        ..ServeConfig::default()
+    })
+    .expect("daemon binds on loopback");
+    let mut c = Client::connect(handle.addr);
+    // A served health round-trip proves the serve loop is running, and
+    // the loop installs the handler before serving — so the raise below
+    // cannot kill the test process.
+    let h = c.request(&WireRequest::tagged(WireOp::Health, 0));
+    assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
+
+    c.send_raw(&WireRequest::tagged(WireOp::Submit(SubmitSpec::basic("web", 1, 100, 1024, 0)), 1).to_line());
+    let _ = c.request(&WireRequest::tagged(WireOp::Query, 2)); // barrier: submit applied
+    unsafe {
+        raise(SIGINT);
+    }
+    // SIGINT must drain exactly like shutdown: close the window, answer
+    // the deferred submit, exit 0.
+    let r = c.recv();
+    assert_eq!(r.get("op").and_then(Json::as_str), Some("submit"));
+    assert_eq!(tag_of(&r), Some(1));
+    handle.join().expect("daemon exits cleanly after SIGINT");
+}
+
+// ---- 4. determinism & equivalence ----------------------------------------
+
+fn small_churn_params() -> ChurnParams {
+    ChurnParams {
+        horizon_ms: 3_000,
+        mean_arrival_ms: 350,
+        mean_lifetime_ms: 1_400,
+        ..ChurnParams::for_cluster(GenParams {
+            nodes: 3,
+            pods_per_node: 3,
+            priority_tiers: 2,
+            usage: 0.9,
+        })
+    }
+}
+
+#[test]
+fn replay_reply_streams_are_identical_at_1_and_8_threads() {
+    prop::check(
+        "serve-thread-determinism",
+        0x7D17,
+        3,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let trace = ChurnTraceGenerator::new(small_churn_params(), seed).generate();
+            let timeout = Duration::from_secs(2);
+            let (s1, d1) = replay_reply_stream(&trace, 1, timeout);
+            let (s8, d8) = replay_reply_stream(&trace, 8, timeout);
+            if s1 != s8 {
+                let diverge = s1.iter().zip(&s8).position(|(a, b)| a != b);
+                return Err(format!(
+                    "reply streams diverge at line {diverge:?} ({} vs {} lines)",
+                    s1.len(),
+                    s8.len()
+                ));
+            }
+            if d1 != d8 {
+                return Err(format!("state digests diverge: {d1:016x} vs {d8:016x}"));
+            }
+            if stream_fingerprint(&s1) != stream_fingerprint(&s8) {
+                return Err("fingerprint disagrees with line equality".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The churn config whose Fallback arm the engine window mirrors.
+fn equivalence_cfg(threads: usize, timeout: Duration) -> ChurnConfig {
+    ChurnConfig {
+        policy: Policy::Fallback,
+        sweep_every_ms: 0,
+        sweep: SweepConfig {
+            optimizer: OptimizerConfig::with_timeout(1.0),
+            eviction_budget: 8,
+        },
+        fallback_timeout: timeout,
+        fallback_portfolio: PortfolioConfig::with_threads(threads),
+        incremental: true,
+        autoscale: None,
+    }
+}
+
+#[test]
+fn daemon_engine_matches_run_churn_on_converted_traces() {
+    for (seed, profile) in [
+        (0xC0FFEE_u64, ConstraintProfile::None),
+        (0x0BEE5, ConstraintProfile::AntiAffinity),
+    ] {
+        let trace = ChurnTraceGenerator::new(small_churn_params(), seed)
+            .with_profile(profile)
+            .generate();
+        let timeout = Duration::from_secs(2);
+        let churn = run_churn(&trace, &equivalence_cfg(1, timeout));
+
+        let mut engine = Engine::new(engine_for_trace(&trace, 1, timeout, 1_000));
+        for (t, ops) in trace_to_windows(&trace) {
+            engine.run_window(t, &ops);
+        }
+
+        assert_eq!(
+            engine.digest(),
+            churn.final_state_digest,
+            "daemon and simulator end states diverge (seed {seed:#x}, {profile:?})"
+        );
+        assert_eq!(engine.state().pending_pods().len(), churn.final_pending, "pending (seed {seed:#x})");
+        assert_eq!(
+            engine.state().placed_per_priority(trace.p_max),
+            churn.final_placed,
+            "placement vector (seed {seed:#x})"
+        );
+        let ready = engine
+            .state()
+            .nodes()
+            .iter()
+            .filter(|n| engine.state().node_ready(n.id))
+            .count();
+        assert_eq!(ready, churn.final_ready_nodes, "ready nodes (seed {seed:#x})");
+    }
+}
