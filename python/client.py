@@ -41,6 +41,7 @@ class ServeClient:
         self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
         self._next_tag = 0
         self._pending: dict[int, dict] = {}
+        self._frames: list[dict] = []
 
     # -- plumbing -----------------------------------------------------------
 
@@ -60,10 +61,16 @@ class ServeClient:
         return json.loads(line)
 
     def wait(self, tag: int) -> dict:
-        """Block until the reply tagged ``tag`` arrives."""
+        """Block until the reply tagged ``tag`` arrives. Untagged push
+        frames (``watch`` deltas / ``lagged`` notices) are diverted to
+        the frame queue for :meth:`next_frame` rather than stashed as
+        replies."""
         while tag not in self._pending:
             reply = self.recv()
-            self._pending[reply.get("tag")] = reply
+            if "frame" in reply:
+                self._frames.append(reply)
+            else:
+                self._pending[reply.get("tag")] = reply
         return self._pending.pop(tag)
 
     def request(self, op: str, **fields) -> dict:
@@ -79,6 +86,52 @@ class ServeClient:
         return self.send("submit", name=name, replicas=replicas, cpu_milli=cpu_milli,
                          ram_mib=ram_mib, priority=priority, **constraints)
 
+    def watch(self) -> dict:
+        """Subscribe this connection to window-close delta frames. The
+        daemon acks immediately; frames then arrive untagged — read
+        them with :meth:`next_frame`."""
+        ack = self.request("watch")
+        if "error" in ack:
+            raise RuntimeError(f"watch rejected: {ack['error']}")
+        return ack
+
+    def next_frame(self) -> dict:
+        """Block until the next push frame (``delta`` or ``lagged``)."""
+        while not self._frames:
+            reply = self.recv()
+            if "frame" in reply:
+                self._frames.append(reply)
+            else:
+                self._pending[reply.get("tag")] = reply
+        return self._frames.pop(0)
+
+    def journal(self, since: int = 0, limit: int | None = None,
+                wall: bool = False) -> list[dict]:
+        """Page through the daemon's window-close journal starting at
+        window ``since`` (each reply's ``next`` resumes the cursor)."""
+        entries: list[dict] = []
+        while True:
+            fields: dict = {"since": since}
+            if limit is not None:
+                fields["limit"] = limit
+            if wall:
+                fields["wall"] = True
+            reply = self.request("journal", **fields)
+            if "error" in reply:
+                raise RuntimeError(f"journal rejected: {reply['error']}")
+            page = reply["entries"]
+            entries.extend(page)
+            if not page or reply["next"] <= since:
+                return entries
+            since = reply["next"]
+
+    def explain(self, pod: str) -> dict:
+        """Per-node rejection census for ``pod`` (why is it pending?)."""
+        reply = self.request("explain", pod=pod)
+        if "error" in reply:
+            raise RuntimeError(f"explain rejected: {reply['error']}")
+        return reply
+
     def close(self) -> None:
         try:
             self._rfile.close()
@@ -92,7 +145,48 @@ class ServeClient:
         self.close()
 
 
-def run_figure1(client: ServeClient) -> None:
+def validate_histograms(metrics: str) -> int:
+    """Validate every Prometheus histogram series in an exposition:
+    per label set, ``_bucket`` samples must be cumulative (monotone
+    non-decreasing in file order) and end with ``le="+Inf"`` equal to
+    the sibling ``_count``; a ``_sum`` sample must exist. Returns the
+    number of bucket series checked; raises ``ValueError`` on any
+    violation."""
+    buckets: dict[str, list[tuple[str, int]]] = {}
+    scalars: dict[str, float] = {}
+    for line in metrics.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name_labels, _, value = line.rpartition(" ")
+        if "_bucket" in name_labels and 'le="' in name_labels:
+            prefix, _, le_part = name_labels.partition('le="')
+            le = le_part.rstrip("}").rstrip('"')
+            buckets.setdefault(prefix, []).append((le, int(value)))
+        else:
+            scalars[name_labels] = float(value)
+    for prefix, series in buckets.items():
+        counts = [c for _, c in series]
+        if any(a > b for a, b in zip(counts, counts[1:])):
+            raise ValueError(f"non-monotone buckets for {prefix}: {counts}")
+        if series[-1][0] != "+Inf":
+            raise ValueError(f"{prefix} does not end at le=\"+Inf\"")
+        base = prefix[:-1] if prefix and prefix[-1] in "{," else prefix
+        if "{" in base:
+            count_name = base.replace("_bucket{", "_count{") + "}"
+        else:
+            count_name = base.replace("_bucket", "_count")
+        if count_name not in scalars:
+            raise ValueError(f"missing {count_name}")
+        if counts[-1] != scalars[count_name]:
+            raise ValueError(
+                f"+Inf bucket {counts[-1]} != {count_name} {scalars[count_name]}")
+        sum_name = count_name.replace("_count", "_sum")
+        if sum_name not in scalars:
+            raise ValueError(f"missing {sum_name}")
+    return len(buckets)
+
+
+def run_figure1(client: ServeClient) -> dict:
     """The paper's figure-1 batch: 2Gi + 2Gi + 3Gi on two 4Gi nodes.
 
     The default scheduler's spreading strands the 3Gi pod; the window
@@ -118,6 +212,7 @@ def run_figure1(client: ServeClient) -> None:
     if query["pending"] != 0:
         raise RuntimeError(f"daemon still has {query['pending']} pending pods")
     print(f"figure-1 batch certified: digest {query['digest']}")
+    return query
 
 
 def main() -> int:
@@ -126,6 +221,9 @@ def main() -> int:
     ap.add_argument("--port", type=int, default=7878)
     ap.add_argument("--figure1", action="store_true",
                     help="submit the figure-1 batch and require a certified repack")
+    ap.add_argument("--watch-one", action="store_true",
+                    help="subscribe to watch frames before --figure1 and require "
+                         "the window close's delta frame (matching digest)")
     ap.add_argument("--shutdown", action="store_true",
                     help="drain the daemon before exiting")
     args = ap.parse_args()
@@ -137,12 +235,38 @@ def main() -> int:
             return 1
         print(f"daemon healthy: protocol v{health['protocol']}, "
               f"{health['windows']} windows closed")
+        if args.watch_one:
+            ack = client.watch()
+            print(f"watch subscribed at window {ack['window']}")
         if args.figure1:
-            run_figure1(client)
+            query = run_figure1(client)
             metrics = client.request("metrics")["body"]
             if "kube_packd_server_windows_total" not in metrics:
                 print("metrics exposition missing server counters", file=sys.stderr)
                 return 1
+            nseries = validate_histograms(metrics)
+            if nseries == 0:
+                print("no histogram series in metrics exposition", file=sys.stderr)
+                return 1
+            print(f"histograms well-formed ({nseries} bucket series)")
+            journal = client.journal(wall=True)
+            if not journal or journal[-1]["pending_after"] != 0:
+                print(f"journal tail disagrees with the close: {journal[-1:]}",
+                      file=sys.stderr)
+                return 1
+            print(f"journal replay: {len(journal)} window(s), last certificate "
+                  f"{journal[-1]['certificate']!r}")
+            if args.watch_one:
+                frame = client.next_frame()
+                if frame.get("frame") != "delta":
+                    print(f"expected a delta frame, got {frame}", file=sys.stderr)
+                    return 1
+                if frame["digest"] != query["digest"]:
+                    print(f"watch digest {frame['digest']} != query digest "
+                          f"{query['digest']}", file=sys.stderr)
+                    return 1
+                print(f"watch frame: window {frame['window']} digest {frame['digest']} "
+                      f"(matches polling query)")
         if args.shutdown:
             ack = client.request("shutdown")
             if not ack.get("draining"):

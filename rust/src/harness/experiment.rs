@@ -43,6 +43,10 @@ pub struct InstanceRun {
     pub tiers: Vec<TierReport>,
     /// Portfolio-layer counters of the run.
     pub portfolio: PortfolioStats,
+    /// Cluster state after the run: the optimiser's plan applied when it
+    /// improved on the baseline, the KWOK baseline otherwise. Feeds the
+    /// `solve --explain` rejection census for still-pending pods.
+    pub final_state: crate::cluster::ClusterState,
 }
 
 /// Run one instance at one timeout with the single-threaded solver
@@ -111,6 +115,7 @@ pub fn run_instance_traced(
             disruptions: 0,
             tiers: Vec::new(),
             portfolio: PortfolioStats::default(),
+            final_state: state,
         };
     }
 
@@ -129,12 +134,13 @@ pub fn run_instance_traced(
     };
     let solver_duration_s = sw.elapsed_secs();
 
-    let (outcome, opt_placed, delta, disruptions) = match &result {
+    let (outcome, opt_placed, delta, disruptions, applied) = match &result {
         None => (
             Outcome::Failure,
             base.placed_per_priority.clone(),
             (0.0, 0.0),
             0,
+            None,
         ),
         Some(res) => {
             let outcome = classify(
@@ -145,17 +151,25 @@ pub fn run_instance_traced(
             match outcome {
                 Outcome::Better | Outcome::BetterOptimal => {
                     let plan = MovePlan::build(&state, &res.target);
-                    let after_util = plan
-                        .validate(&state)
+                    let mut after = state.clone();
+                    plan.execute(&mut after)
                         .expect("solver target must be executable");
+                    let after_util = after.utilization();
                     (
                         outcome,
                         res.placed_per_priority.clone(),
                         utilization_delta(base_util, after_util),
                         plan.disruptions(),
+                        Some(after),
                     )
                 }
-                _ => (outcome, base.placed_per_priority.clone(), (0.0, 0.0), 0),
+                _ => (
+                    outcome,
+                    base.placed_per_priority.clone(),
+                    (0.0, 0.0),
+                    0,
+                    None,
+                ),
             }
         }
     };
@@ -175,6 +189,7 @@ pub fn run_instance_traced(
         disruptions,
         tiers,
         portfolio: pstats,
+        final_state: applied.unwrap_or(state),
     }
 }
 

@@ -11,6 +11,8 @@
 //!   windows over newline-JSON TCP, graceful drain on shutdown/SIGINT.
 //! * `serve-bench` — closed-loop load generator against a live daemon
 //!   over loopback; emits the `BENCH_serve.json` document.
+//! * `journal`   — page through a live daemon's window-close journal
+//!   and pretty-print it (the flight-recorder replay view).
 //! * `fig3` / `fig4` / `table1` — regenerate the paper's evaluation
 //!   artefacts (reports under `results/`).
 //! * `all`       — fig3 + fig4 + table1.
@@ -19,18 +21,21 @@
 use std::time::Duration;
 
 use kube_packd::autoscaler::{AutoscaleConfig, NodePool};
-use kube_packd::cluster::{identical_nodes, ClusterState, Pod, Priority, Resources};
+use kube_packd::cluster::{identical_nodes, ClusterState, Pod, PodId, Priority, Resources};
 use kube_packd::harness::figures;
 use kube_packd::harness::grid::GridConfig;
 use kube_packd::harness::InstanceRun;
 use kube_packd::lifecycle::{
     compare_policies_traced, run_churn_traced, ChurnConfig, Policy, SweepConfig,
 };
-use kube_packd::optimizer::{OptimizerConfig, OptimizingScheduler, SolveSession};
+use kube_packd::optimizer::{
+    explain_pod, ModuleRegistry, OptimizerConfig, OptimizingScheduler, SolveSession,
+};
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::runtime::XlaEngine;
 use kube_packd::server::engine::EngineConfig;
 use kube_packd::server::loadgen;
+use kube_packd::server::protocol::{WireOp, WireRequest};
 use kube_packd::server::{ServeConfig, ServeHandle};
 use kube_packd::solver::{SolveStatus, SolverConfig};
 use kube_packd::telemetry::{Telemetry, Verbosity};
@@ -50,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         Some("autoscale") => autoscale(&args),
         Some("serve") => serve(&args),
         Some("serve-bench") => serve_bench(&args),
+        Some("journal") => journal(&args),
         Some("fig3") => figure(&args, "fig3"),
         Some("fig4") => figure(&args, "fig4"),
         Some("table1") => figure(&args, "table1"),
@@ -87,6 +93,9 @@ COMMANDS
                            (constraint profiles travel with the dataset)
       --dataset FILE --timeout SECS --threads N --json FILE --incremental
       --trace FILE --metrics FILE --verbosity off|info|debug|trace
+      --explain            per still-pending pod, print the per-node
+                           rejection census (taint/selector/capacity/
+                           anti-affinity tallies over all ready nodes)
                            (--json: per-tier optimality certificates —
                            proven-optimal vs anytime-best + final bound —
                            and portfolio stats, machine-readable)
@@ -119,6 +128,19 @@ COMMANDS
       --autoscale --node-pools small,large,gpu --budget N
       --trace FILE --metrics FILE   (flushed at drain; also available
                            live via {{\"op\":\"metrics\"}}/{{\"op\":\"trace_export\"}})
+      --max-pending N (default 4096): admission queue bound — past it
+                           requests are shed with a structured
+                           `overloaded` error instead of growing memory
+      live observability: {{\"op\":\"journal\"}} pages the window-close
+                           event journal, {{\"op\":\"watch\"}} streams
+                           per-window delta frames, {{\"op\":\"explain\"}}
+                           gives a pending pod's per-node rejection
+                           census; query/health take \"latency\":true for
+                           p50/p95/p99 solve+admission summaries
+  journal                  connect to a live daemon and pretty-print its
+                           window-close journal (flight-recorder replay)
+      --addr HOST:PORT (default 127.0.0.1:7878)
+      --since N (default 0) --limit N (page size, default 64) --json
   serve-bench              closed-loop load generator: spawns a daemon on
                            loopback, drives seeded churn admissions, and
                            emits sustained admissions/sec + p50/p95/p99
@@ -353,6 +375,9 @@ fn solve(args: &Args) -> anyhow::Result<()> {
         if json_out.is_some() {
             rows.push(instance_json(i, inst, &run));
         }
+        if args.flag("explain") {
+            explain_pending(&run.final_state);
+        }
     }
     if let Some(sess) = &session {
         let c = sess.cache_stats();
@@ -378,6 +403,41 @@ fn solve(args: &Args) -> anyhow::Result<()> {
     }
     write_telemetry(args, &tel)?;
     Ok(())
+}
+
+/// `solve --explain`: per still-pending pod, print the rejection census
+/// over every ready node — which constraint module (or residual
+/// capacity dimension) vetoes each node, tallied by reason. A pod with
+/// feasible nodes is pending for packing reasons, not hard
+/// infeasibility; say so.
+fn explain_pending(state: &ClusterState) {
+    let reg = ModuleRegistry::standard();
+    for (i, slot) in state.assignment().iter().enumerate() {
+        if slot.is_some() {
+            continue;
+        }
+        let pod = &state.pods()[i];
+        let report = explain_pod(state, &reg, PodId(i as u32));
+        let reasons = if report.tally.is_empty() {
+            "no hard rejections".to_string()
+        } else {
+            report
+                .tally
+                .iter()
+                .map(|(r, c)| format!("{r}:{c}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let packing = if report.feasible > 0 {
+            " (feasible nodes exist — pending for packing, not infeasibility)"
+        } else {
+            ""
+        };
+        println!(
+            "      explain {} (tier {}): {} ready node(s), {} feasible — {}{}",
+            pod.name, pod.priority.0, report.ready_nodes, report.feasible, reasons, packing
+        );
+    }
 }
 
 /// One-line per-tier certificate summary for the solve table: how many
@@ -624,6 +684,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let cfg = ServeConfig {
         addr: args.get_str("addr", "127.0.0.1:7878").to_string(),
         max_batch: args.get_usize("max-batch", 64),
+        max_pending: args.get_usize("max-pending", 4096),
         engine: EngineConfig {
             p_max: tiers - 1,
             nodes: identical_nodes(args.get_usize("nodes", 8), capacity),
@@ -657,6 +718,98 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
     println!("{}", doc.to_string_pretty());
     eprintln!("serve bench written to {out}");
     Ok(())
+}
+
+/// `kube-packd journal`: connect to a live daemon, page through its
+/// window-close journal with the `since` cursor, and pretty-print one
+/// line per window (or the raw wire entries with `--json`).
+fn journal(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let mut since = args.get_u64("since", 0);
+    let limit = args.get_u64("limit", 64);
+    let raw = args.flag("json");
+    let mut client = loadgen::Client::connect(addr)?;
+    let mut tag = 1u64;
+    let mut total = 0usize;
+    loop {
+        let req = WireRequest::tagged(
+            WireOp::Journal {
+                since: Some(since),
+                limit: Some(limit),
+                wall: true,
+            },
+            tag,
+        );
+        let reply = client.request(&req)?;
+        tag += 1;
+        if let Some(err) = reply.get("error") {
+            anyhow::bail!("daemon rejected journal request: {}", err.to_string_compact());
+        }
+        let entries = reply.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+        if total == 0 {
+            if let (Some(f), Some(l)) = (
+                reply.get("first_window").and_then(Json::as_i64),
+                reply.get("last_window").and_then(Json::as_i64),
+            ) {
+                eprintln!("journal retains windows {f}..={l}");
+            }
+        }
+        for e in entries {
+            if raw {
+                println!("{}", e.to_string_compact());
+            } else {
+                println!("{}", journal_line(e));
+            }
+        }
+        total += entries.len();
+        let next = reply
+            .get("next")
+            .and_then(Json::as_i64)
+            .map(|n| n as u64)
+            .unwrap_or(since);
+        if entries.is_empty() || next <= since {
+            break;
+        }
+        since = next;
+    }
+    eprintln!("{total} window(s) printed");
+    Ok(())
+}
+
+/// One human-readable line per window-close journal entry.
+fn journal_line(e: &Json) -> String {
+    let num = |k: &str| e.get(k).and_then(Json::as_i64).unwrap_or(0);
+    let arr = |k: &str| -> Vec<i64> {
+        e.get(k)
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(Json::as_i64).collect())
+            .unwrap_or_default()
+    };
+    let seq = match (
+        e.get("seq_lo").and_then(Json::as_i64),
+        e.get("seq_hi").and_then(Json::as_i64),
+    ) {
+        (Some(lo), Some(hi)) => format!("seq {lo}..={hi}"),
+        _ => "timer".to_string(),
+    };
+    let wall = e
+        .get("wall_us")
+        .and_then(Json::as_i64)
+        .map(|us| format!("  {:.1}ms", us as f64 / 1000.0))
+        .unwrap_or_default();
+    format!(
+        "window {:>4} @{:>7}ms  {:<14}  submits {:>3}  placed {:?} -> {:?}  pending {:>3} -> {:<3}  {}{}",
+        num("window"),
+        num("virtual_ms"),
+        seq,
+        num("submits"),
+        arr("placed_before"),
+        arr("placed_after"),
+        num("pending_before"),
+        num("pending_after"),
+        e.get("certificate").and_then(Json::as_str).unwrap_or("?"),
+        wall,
+    )
 }
 
 /// The paper's Figure 1, narrated.

@@ -1,0 +1,180 @@
+//! Placement explainer: why is this pod (still) pending?
+//!
+//! A certificate proves *that* a pod set is unplaceable; this module
+//! says *why*, per node, in the constraint modules' own vocabulary. For
+//! one pod it walks every ready node and reports the first rejection in
+//! a fixed order — the static `admits` hooks in registration order
+//! (selector, taint), then residual capacity per dimension against the
+//! live free vector, then anti-affinity against the node's residents —
+//! and tallies nodes per reason: "insufficient-ram on 12 nodes, taint
+//! on 3, anti-affinity on 2". Nodes with no rejection count as
+//! `feasible` (the pod is then pending for packing reasons — another
+//! tier's pods hold the space — not hard infeasibility).
+//!
+//! Everything here is a read-only pure function of `ClusterState`, so
+//! wiring it into the serve path (`explain` op) or the CLI (`--explain`)
+//! can never perturb solve results.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterState, NodeId, PodId};
+use crate::util::json::Json;
+
+use super::constraints::ModuleRegistry;
+
+/// Stable reason slug for a static-admits veto by the named module.
+fn module_slug(name: &str) -> String {
+    match name {
+        "NodeSelector" => "selector".to_string(),
+        "TaintsTolerations" => "taint".to_string(),
+        other => other.to_string(),
+    }
+}
+
+/// The first reason `pod` cannot (newly) land on `node`, or `None` when
+/// the node would accept it right now.
+pub fn node_rejection(
+    state: &ClusterState,
+    registry: &ModuleRegistry,
+    pod: PodId,
+    node: NodeId,
+) -> Option<String> {
+    let p = state.pod(pod);
+    let n = state.node(node);
+    for m in registry.modules() {
+        if !m.admits(state, p, n) {
+            return Some(module_slug(m.name()));
+        }
+    }
+    let free = state.free(node);
+    if p.request.cpu > free.cpu {
+        return Some("insufficient-cpu".to_string());
+    }
+    if p.request.ram > free.ram {
+        return Some("insufficient-ram".to_string());
+    }
+    // Extended dimensions, aggregated per resource name in name order.
+    let mut ext: BTreeMap<&str, i64> = BTreeMap::new();
+    for (k, amt) in &p.extended {
+        *ext.entry(k.as_str()).or_insert(0) += amt;
+    }
+    for (k, amt) in ext {
+        if amt > state.free_extended(node, k) {
+            return Some(format!("insufficient-{k}"));
+        }
+    }
+    for resident in state.pods_on(node) {
+        let r = state.pod(resident);
+        if p.anti_affine_with(r) || r.anti_affine_with(p) {
+            return Some("anti-affinity".to_string());
+        }
+    }
+    None
+}
+
+/// Per-node rejection census for one pod across every ready node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExplainReport {
+    pub pod: PodId,
+    /// Ready nodes inspected (`tally` totals + `feasible` == this).
+    pub ready_nodes: usize,
+    /// Ready nodes that would accept the pod right now.
+    pub feasible: usize,
+    /// Rejection reason → number of ready nodes vetoing for it.
+    pub tally: BTreeMap<String, usize>,
+    /// Per-node verdicts in node order (`None` = feasible).
+    pub nodes: Vec<(NodeId, Option<String>)>,
+}
+
+impl ExplainReport {
+    /// Wire/CLI form: `{"ready_nodes":N,"feasible":K,"reasons":{...}}`.
+    /// Deterministic — reasons iterate in `BTreeMap` order.
+    pub fn to_json(&self) -> Json {
+        let mut reasons = Json::obj();
+        for (reason, count) in &self.tally {
+            reasons.set(reason, *count as u64);
+        }
+        let mut o = Json::obj();
+        o.set("ready_nodes", self.ready_nodes as u64)
+            .set("feasible", self.feasible as u64)
+            .set("reasons", reasons);
+        o
+    }
+}
+
+/// Explain why `pod` is pending: walk every ready node through
+/// [`node_rejection`] and tally. Covers **every** ready node — the
+/// acceptance contract for certified-unplaceable pods.
+pub fn explain_pod(state: &ClusterState, registry: &ModuleRegistry, pod: PodId) -> ExplainReport {
+    let mut tally: BTreeMap<String, usize> = BTreeMap::new();
+    let mut nodes = Vec::new();
+    let mut ready = 0usize;
+    let mut feasible = 0usize;
+    for (j, _) in state.nodes().iter().enumerate() {
+        let id = NodeId(j as u32);
+        if !state.node_ready(id) {
+            continue;
+        }
+        ready += 1;
+        let verdict = node_rejection(state, registry, pod, id);
+        match &verdict {
+            None => feasible += 1,
+            Some(reason) => *tally.entry(reason.clone()).or_insert(0) += 1,
+        }
+        nodes.push((id, verdict));
+    }
+    ExplainReport {
+        pod,
+        ready_nodes: ready,
+        feasible,
+        tally,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{identical_nodes, Node, Pod, Priority, Resources, Taint};
+
+    #[test]
+    fn tallies_cover_every_ready_node() {
+        // Three nodes: one tainted, one too small, one with a hostile
+        // resident — the pending pod is rejected everywhere, each node
+        // for a different reason.
+        let mut nodes = identical_nodes(3, Resources::new(1000, 1000));
+        nodes[0].taints.push(Taint::no_schedule("dedicated", "infra"));
+        nodes[1] = Node::new(1, "node-1", Resources::new(100, 100));
+        let pods = vec![
+            Pod::new(0, "resident", Resources::new(10, 10), Priority(0)).with_label("app", "x"),
+            Pod::new(1, "victim", Resources::new(200, 200), Priority(0))
+                .with_anti_affinity("app", "x"),
+        ];
+        let mut st = ClusterState::new(nodes, pods);
+        st.bind(crate::cluster::PodId(0), NodeId(2)).unwrap();
+
+        let reg = ModuleRegistry::standard();
+        let report = explain_pod(&st, &reg, crate::cluster::PodId(1));
+        assert_eq!(report.ready_nodes, 3);
+        assert_eq!(report.feasible, 0);
+        assert_eq!(report.tally.get("taint"), Some(&1));
+        assert_eq!(report.tally.get("insufficient-cpu"), Some(&1));
+        assert_eq!(report.tally.get("anti-affinity"), Some(&1));
+        let total: usize = report.tally.values().sum();
+        assert_eq!(total + report.feasible, report.ready_nodes);
+        let j = report.to_json().to_string_compact();
+        assert!(j.contains("\"taint\":1"));
+    }
+
+    #[test]
+    fn feasible_nodes_report_no_reason() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![Pod::new(0, "p", Resources::new(10, 10), Priority(0))];
+        let st = ClusterState::new(nodes, pods);
+        let reg = ModuleRegistry::standard();
+        let report = explain_pod(&st, &reg, crate::cluster::PodId(0));
+        assert_eq!(report.feasible, 2);
+        assert!(report.tally.is_empty());
+        assert!(report.nodes.iter().all(|(_, r)| r.is_none()));
+    }
+}

@@ -89,6 +89,7 @@
 pub mod algorithm;
 pub mod builder;
 pub mod constraints;
+pub mod explain;
 pub mod plan;
 pub mod plugin;
 pub mod session;
@@ -101,6 +102,7 @@ pub use constraints::{
     AtMostOnePlacement, ConstraintModule, ModuleRegistry, NodeCapacity, NodeSelector,
     PodAntiAffinity, TaintsTolerations, TopologySpread,
 };
+pub use explain::{explain_pod, node_rejection, ExplainReport};
 pub use plan::MovePlan;
 pub use plugin::{OptimizingScheduler, RunReport};
 pub use session::{DeltaLog, SessionStats, SolveSession};

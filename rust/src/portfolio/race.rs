@@ -137,6 +137,7 @@ pub(crate) fn run_race(
                     sp.arg("component", c);
                 }
                 sp.arg("rank", task.rank);
+                let started = std::time::Instant::now();
                 let sol = solve_max_with(
                     task.model,
                     task.objective,
@@ -148,6 +149,11 @@ pub(crate) fn run_race(
                 if lane.enabled() {
                     sol.stats
                         .record(&lane, &format!("strategy=\"{}\"", task.label));
+                    lane.observe_us(
+                        "race_task_seconds",
+                        &format!("strategy=\"{}\"", task.label),
+                        started.elapsed().as_micros() as u64,
+                    );
                 }
                 drop(sp);
                 drop(lane);

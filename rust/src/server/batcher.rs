@@ -64,14 +64,35 @@ pub enum Drained {
     Empty,
 }
 
-/// Deterministically-sequenced MPSC admission queue.
+/// The outcome of [`Batcher::submit`]. Rejections never join the
+/// interleaving, so they carry no seq — the caller answers them on its
+/// own connection thread.
+pub enum Admit {
+    /// Enqueued under this global seq.
+    Accepted(u64),
+    /// The daemon is draining; answer with [`WireError::Draining`].
+    Draining,
+    /// The admission queue is at `--max-pending`; answer with
+    /// [`WireError::Overloaded`] instead of buffering without bound.
+    Overloaded { pending: usize, max: usize },
+}
+
+/// Deterministically-sequenced MPSC admission queue, bounded at
+/// `max_pending` enqueued-but-undrained requests.
 pub struct Batcher {
     q: Mutex<Queue>,
     cv: Condvar,
+    max_pending: usize,
 }
 
 impl Batcher {
+    /// An effectively-unbounded queue (tests, in-process replays).
     pub fn new() -> Arc<Batcher> {
+        Batcher::with_max_pending(usize::MAX)
+    }
+
+    /// A queue that sheds load past `max_pending` enqueued requests.
+    pub fn with_max_pending(max_pending: usize) -> Arc<Batcher> {
         Arc::new(Batcher {
             q: Mutex::new(Queue {
                 items: VecDeque::new(),
@@ -79,23 +100,29 @@ impl Batcher {
                 draining: false,
             }),
             cv: Condvar::new(),
+            max_pending,
         })
     }
 
-    /// Enqueue a request under the next global seq. Returns the
-    /// assigned seq, or `None` when the daemon is draining (the caller
-    /// answers with [`WireError::Draining`] itself — drain-time
-    /// rejections carry no seq because they never joined the
-    /// interleaving).
+    /// Enqueue a request under the next global seq — or reject it
+    /// without sequencing when the daemon is draining or the queue is
+    /// full (backpressure: the client gets a structured error now
+    /// rather than unbounded buffering under burst).
     pub fn submit(
         &self,
         conn: u64,
         request: Result<WireRequest, (WireError, Option<u64>)>,
         reply: ReplySink,
-    ) -> Option<u64> {
+    ) -> Admit {
         let mut q = self.q.lock().expect("batcher lock");
         if q.draining {
-            return None;
+            return Admit::Draining;
+        }
+        if q.items.len() >= self.max_pending {
+            return Admit::Overloaded {
+                pending: q.items.len(),
+                max: self.max_pending,
+            };
         }
         let seq = q.next_seq;
         q.next_seq += 1;
@@ -106,7 +133,7 @@ impl Batcher {
             reply,
         });
         self.cv.notify_all();
-        Some(seq)
+        Admit::Accepted(seq)
     }
 
     /// Stop accepting new submissions. Already-enqueued requests stay
@@ -156,14 +183,18 @@ mod tests {
         Arc::new(Mutex::new(Vec::<u8>::new()))
     }
 
+    fn accept(b: &Batcher, op: WireOp) -> u64 {
+        match b.submit(0, Ok(WireRequest::new(op)), sink()) {
+            Admit::Accepted(seq) => seq,
+            _ => panic!("expected acceptance"),
+        }
+    }
+
     #[test]
     fn seqs_are_globally_monotonic_from_zero() {
         let b = Batcher::new();
         for want in 0..5u64 {
-            let got = b
-                .submit(0, Ok(WireRequest::new(WireOp::Health)), sink())
-                .expect("accepting");
-            assert_eq!(got, want);
+            assert_eq!(accept(&b, WireOp::Health { latency: false }), want);
         }
         match b.pop_all(Duration::from_millis(10)) {
             Drained::Items(items) => {
@@ -177,9 +208,16 @@ mod tests {
     #[test]
     fn drain_rejects_new_but_keeps_queued() {
         let b = Batcher::new();
-        b.submit(0, Ok(WireRequest::new(WireOp::Query)), sink()).expect("accepting");
+        accept(&b, WireOp::Query { latency: false });
         b.begin_drain();
-        assert!(b.submit(0, Ok(WireRequest::new(WireOp::Query)), sink()).is_none());
+        assert!(matches!(
+            b.submit(
+                0,
+                Ok(WireRequest::new(WireOp::Query { latency: false })),
+                sink()
+            ),
+            Admit::Draining
+        ));
         // The queued item survives the drain flag...
         match b.pop_all(Duration::from_millis(10)) {
             Drained::Items(items) => assert_eq!(items.len(), 1),
@@ -187,6 +225,40 @@ mod tests {
         }
         // ...and once empty, the pop reports terminal emptiness.
         assert!(matches!(b.pop_all(Duration::from_millis(10)), Drained::Empty));
+    }
+
+    #[test]
+    fn full_queue_sheds_load_and_drains_what_it_took() {
+        let b = Batcher::with_max_pending(2);
+        accept(&b, WireOp::Health { latency: false });
+        accept(&b, WireOp::Health { latency: false });
+        match b.submit(
+            0,
+            Ok(WireRequest::new(WireOp::Health { latency: false })),
+            sink(),
+        ) {
+            Admit::Overloaded { pending, max } => {
+                assert_eq!(pending, 2);
+                assert_eq!(max, 2);
+            }
+            _ => panic!("third submit must be shed"),
+        }
+        // A rejected request never consumed a seq: the interleaving has
+        // no gap, and a pop frees capacity again.
+        match b.pop_all(Duration::from_millis(10)) {
+            Drained::Items(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[1].seq, 1);
+            }
+            _ => panic!("expected items"),
+        }
+        assert_eq!(accept(&b, WireOp::Health { latency: false }), 2);
+        // Drain still answers everything already enqueued, cap or not.
+        b.begin_drain();
+        match b.pop_all(Duration::from_millis(10)) {
+            Drained::Items(items) => assert_eq!(items.len(), 1),
+            _ => panic!("queued item must still drain"),
+        }
     }
 
     #[test]

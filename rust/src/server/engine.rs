@@ -24,11 +24,13 @@
 //! as `run_churn`.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::autoscaler::{AutoscaleConfig, NodePool, ScaleUpReport};
 use crate::cluster::{identical_nodes, ClusterState, Node, NodeId, PodId, ReplicaSet, Resources};
 use crate::optimizer::algorithm::OptimizerConfig;
+use crate::optimizer::constraints::ModuleRegistry;
+use crate::optimizer::explain::explain_pod;
 use crate::optimizer::plugin::RunReport;
 use crate::optimizer::session::{fingerprint_state, SolveSession};
 use crate::optimizer::OptimizingScheduler;
@@ -36,6 +38,7 @@ use crate::portfolio::PortfolioConfig;
 use crate::telemetry::Telemetry;
 use crate::util::json::Json;
 
+use super::journal::{CounterSnapshot, Journal, JournalEntry, JOURNAL_CAP};
 use super::protocol::{SubmitSpec, WireError, WireOp, PROTOCOL_VERSION};
 
 /// Engine knobs (the daemon's `serve` flags, minus the socket ones).
@@ -85,6 +88,9 @@ struct PendingSubmit {
     tag: Option<u64>,
     rs_name: String,
     pods: Vec<PodId>,
+    /// Wall-clock arrival, for the admission→decision latency
+    /// histogram. Observability only — never read by scheduling.
+    arrived: Instant,
 }
 
 /// Single-threaded owner of the daemon's cluster, session, and
@@ -110,6 +116,20 @@ pub struct Engine {
     /// Seq counter for the in-process [`Engine::run_window`] driver
     /// (the TCP path sequences in the batcher instead).
     auto_seq: u64,
+    /// Window-close flight recorder (the `journal` op pages it).
+    journal: Journal,
+    /// Engine-owned cumulative counters snapshotted into each journal
+    /// entry. Deliberately not telemetry-derived: these are identical
+    /// with recording on or off and at any thread count, so journal
+    /// entries stay inside the byte-identity boundary.
+    ctr: CounterSnapshot,
+    /// Seq range applied since the last window close.
+    win_seq: Option<(u64, u64)>,
+    /// Certificate of the most recently closed window (for `explain`).
+    last_certificate: Option<String>,
+    /// Delta frame built at the last close, until the serve loop claims
+    /// it for watch fan-out.
+    last_frame: Option<Json>,
 }
 
 impl Engine {
@@ -137,6 +157,11 @@ impl Engine {
             now_ms: 0,
             draining: false,
             auto_seq: 0,
+            journal: Journal::new(JOURNAL_CAP),
+            ctr: CounterSnapshot::default(),
+            win_seq: None,
+            last_certificate: None,
+            last_frame: None,
             cfg,
         }
     }
@@ -168,6 +193,19 @@ impl Engine {
         &self.state
     }
 
+    /// The window-close flight recorder (read-only; CLI/test surface).
+    pub fn journal(&self) -> &Journal {
+        &self.journal
+    }
+
+    /// Claim the delta frame built at the most recent window close, if
+    /// any. The serve loop publishes it to watch subscribers; the frame
+    /// is built unconditionally but costs one small Json when nobody
+    /// watches.
+    pub fn take_watch_frame(&mut self) -> Option<Json> {
+        self.last_frame.take()
+    }
+
     /// Solve-relevant state fingerprint (the equivalence digest).
     pub fn digest(&self) -> u64 {
         fingerprint_state(&self.state, self.cfg.p_max)
@@ -176,6 +214,7 @@ impl Engine {
     /// Count and structure a request-level failure (parse error, drain
     /// rejection) so errors ride the same counters as successes.
     pub fn error_reply(&mut self, seq: Option<u64>, tag: Option<u64>, err: &WireError) -> Json {
+        self.ctr.errors += 1;
         self.tel.add("server_errors_total", &format!("code=\"{}\"", err.code()), 1);
         err.reply(seq, tag)
     }
@@ -184,6 +223,11 @@ impl Engine {
     /// or `None` for a `submit` (answered at the next window close).
     pub fn apply(&mut self, seq: u64, tag: Option<u64>, op: &WireOp) -> Option<Json> {
         self.requests += 1;
+        self.ctr.requests += 1;
+        self.win_seq = Some(match self.win_seq {
+            None => (seq, seq),
+            Some((lo, _)) => (lo, seq),
+        });
         self.tel.add("server_requests_total", &format!("op=\"{}\"", op.name()), 1);
         match op {
             WireOp::Submit(spec) => self.apply_submit(seq, tag, spec),
@@ -195,16 +239,32 @@ impl Engine {
             } => Some(self.apply_join(seq, tag, pool.as_deref(), *cpu_milli, *ram_mib)),
             WireOp::Drain { node } => Some(self.apply_drain(seq, tag, *node)),
             WireOp::Remove { node } => Some(self.apply_remove(seq, tag, *node)),
-            WireOp::Query => Some(self.apply_query(seq, tag)),
-            WireOp::Health => {
+            WireOp::Query { latency } => Some(self.apply_query(seq, tag, *latency)),
+            WireOp::Health { latency } => {
+                let summary = latency.then(|| self.latency_summary());
                 let mut o = self.base("health", seq, tag);
                 o.set("ok", true)
                     .set("protocol", PROTOCOL_VERSION)
                     .set("draining", self.draining)
                     .set("windows", self.windows)
                     .set("requests", self.requests);
+                if let Some(s) = summary {
+                    o.set("latency", s);
+                }
                 Some(o)
             }
+            WireOp::Journal { since, limit, wall } => {
+                Some(self.apply_journal(seq, tag, *since, *limit, *wall))
+            }
+            WireOp::Watch => {
+                // Registration happens in the serve loop (it owns the
+                // sockets); the engine just acknowledges, reporting the
+                // window id the stream will start after.
+                let mut o = self.base("watch", seq, tag);
+                o.set("subscribed", true).set("window", self.windows);
+                Some(o)
+            }
+            WireOp::Explain { pod } => Some(self.apply_explain(seq, tag, pod)),
             WireOp::Metrics => {
                 let mut o = self.base("metrics", seq, tag);
                 o.set("content_type", "text/plain; version=0.0.4")
@@ -232,15 +292,34 @@ impl Engine {
     pub fn close_window_at(&mut self, at_ms: u64) -> Vec<(u64, Json)> {
         self.advance_to(at_ms);
         let submits = std::mem::take(&mut self.pending_submits);
+        let placed_before: Vec<u64> = self
+            .state
+            .placed_per_priority(self.cfg.p_max)
+            .into_iter()
+            .map(|c| c as u64)
+            .collect();
+        let pending_before = self.state.pending_pods().len() as u64;
         let sp = self.tel.span("serve_window");
         sp.arg("window", self.windows);
         sp.arg("submits", submits.len());
+        let started = Instant::now();
         let report = if self.state.pending_pods().is_empty() {
             None
         } else {
             Some(self.round())
         };
+        let wall_us = started.elapsed().as_micros() as u64;
         drop(sp);
+        if report.is_some() {
+            self.tel.observe_us("serve_window_solve_seconds", "", wall_us);
+        }
+        for sub in &submits {
+            self.tel.observe_us(
+                "serve_admission_seconds",
+                "",
+                sub.arrived.elapsed().as_micros() as u64,
+            );
+        }
         self.windows += 1;
         self.tel.add("server_windows_total", "", 1);
         let certificate = match &report {
@@ -251,6 +330,39 @@ impl Engine {
         };
         let solver_invoked = report.as_ref().is_some_and(|r| r.solver_invoked);
         let window = self.windows - 1;
+        self.last_certificate = Some(certificate.to_string());
+        let (seq_lo, seq_hi) = match self.win_seq.take() {
+            Some((lo, hi)) => (Some(lo), Some(hi)),
+            None => (None, None),
+        };
+        let entry = JournalEntry {
+            window,
+            virtual_ms: self.now_ms,
+            seq_lo,
+            seq_hi,
+            submits: submits.len() as u64,
+            certificate: certificate.to_string(),
+            solver_invoked,
+            placed_before,
+            placed_after: self
+                .state
+                .placed_per_priority(self.cfg.p_max)
+                .into_iter()
+                .map(|c| c as u64)
+                .collect(),
+            pending_before,
+            pending_after: self.state.pending_pods().len() as u64,
+            counters: self.ctr,
+            wall_us,
+        };
+        let mut frame = Json::obj();
+        frame
+            .set("frame", "delta")
+            .set("window", window)
+            .set("digest", format!("{:016x}", self.digest()))
+            .set("entry", entry.to_json(false));
+        self.last_frame = Some(frame);
+        self.journal.push(entry);
         let mut replies = Vec::with_capacity(submits.len());
         for sub in submits {
             let placements = sub
@@ -358,12 +470,14 @@ impl Engine {
             self.pod_names.insert(name, id);
             pods.push(id);
         }
+        self.ctr.submit_pods += pods.len() as u64;
         self.tel.add("server_submit_pods_total", "", pods.len() as u64);
         self.pending_submits.push(PendingSubmit {
             seq,
             tag,
             rs_name: rs.name,
             pods,
+            arrived: Instant::now(),
         });
         None
     }
@@ -460,7 +574,97 @@ impl Engine {
         }
     }
 
-    fn apply_query(&mut self, seq: u64, tag: Option<u64>) -> Json {
+    /// Page the journal: entries with `window >= since`, oldest first,
+    /// capped at `limit`. The reply's `next` is the resume cursor; the
+    /// retained range exposes ring eviction gaps to slow pollers.
+    fn apply_journal(
+        &mut self,
+        seq: u64,
+        tag: Option<u64>,
+        since: Option<u64>,
+        limit: Option<u64>,
+        wall: bool,
+    ) -> Json {
+        let from = since.unwrap_or(0);
+        let lim = limit.map(|l| l as usize).unwrap_or(usize::MAX);
+        let page: Vec<&JournalEntry> = self.journal.since(from, lim).collect();
+        let next = page.last().map(|e| e.window + 1).unwrap_or(from);
+        let entries: Vec<Json> = page.iter().map(|e| e.to_json(wall)).collect();
+        let (first, last) = (self.journal.first_window(), self.journal.last_window());
+        let mut o = self.base("journal", seq, tag);
+        o.set("entries", Json::Arr(entries)).set("next", next);
+        if let Some(fw) = first {
+            o.set("first_window", fw);
+        }
+        if let Some(lw) = last {
+            o.set("last_window", lw);
+        }
+        o
+    }
+
+    /// Explain a pod by name: placed/retired pods report their state;
+    /// a pending pod gets the per-ready-node rejection census plus the
+    /// latest window certificate.
+    fn apply_explain(&mut self, seq: u64, tag: Option<u64>, pod: &str) -> Json {
+        let Some(&id) = self.pod_names.get(pod) else {
+            let err = WireError::BadRequest(format!("unknown pod {pod:?}"));
+            return self.error_reply(Some(seq), tag, &err);
+        };
+        let mut o = self.base("explain", seq, tag);
+        o.set("pod", pod).set("tier", self.state.pod(id).priority.0);
+        if self.state.is_retired(id) {
+            o.set("status", "retired");
+            return o;
+        }
+        if let Some(n) = self.state.assignment_of(id) {
+            o.set("status", "placed")
+                .set("node", self.state.node(n).name.as_str());
+            return o;
+        }
+        let registry = ModuleRegistry::standard();
+        let report = explain_pod(&self.state, &registry, id);
+        let mut reasons = Json::obj();
+        for (reason, count) in &report.tally {
+            reasons.set(reason, *count as u64);
+        }
+        o.set("status", "pending")
+            .set(
+                "certificate",
+                self.last_certificate.as_deref().unwrap_or("none"),
+            )
+            .set("ready_nodes", report.ready_nodes as u64)
+            .set("feasible", report.feasible as u64)
+            .set("reasons", reasons);
+        o
+    }
+
+    /// Wall-clock p50/p95/p99 summary over the recorded latency
+    /// histograms, in milliseconds. Non-canonical by construction: a
+    /// client only sees it after opting in with `"latency":true`, and
+    /// it renders `null` when telemetry is off.
+    fn latency_summary(&self) -> Json {
+        if !self.tel.enabled() {
+            return Json::Null;
+        }
+        let hists = self.tel.histograms();
+        let mut o = Json::obj();
+        for (key, metric) in [
+            ("admission", "serve_admission_seconds"),
+            ("race_task", "race_task_seconds"),
+            ("window_solve", "serve_window_solve_seconds"),
+        ] {
+            let h = hists.total(metric);
+            let mut m = Json::obj();
+            m.set("count", h.count())
+                .set("p50_ms", h.quantile_us(0.50) / 1000.0)
+                .set("p95_ms", h.quantile_us(0.95) / 1000.0)
+                .set("p99_ms", h.quantile_us(0.99) / 1000.0);
+            o.set(key, m);
+        }
+        o
+    }
+
+    fn apply_query(&mut self, seq: u64, tag: Option<u64>, latency: bool) -> Json {
         let (cpu, ram) = self.state.utilization();
         let placed = self
             .state
@@ -486,6 +690,9 @@ impl Engine {
             .set("cpu_util", cpu)
             .set("ram_util", ram)
             .set("digest", format!("{digest:016x}"));
+        if latency {
+            o.set("latency", self.latency_summary());
+        }
         o
     }
 
@@ -515,9 +722,11 @@ impl Engine {
         let report = osched.run_with_session_traced(&mut self.state, self.session.as_mut(), &self.tel);
         self.provision_memo = osched.take_provision_memo();
         if report.solver_invoked {
+            self.ctr.solver_invocations += 1;
             self.tel.add("server_solver_invocations_total", "", 1);
         }
         if report.autoscale.is_some() {
+            self.ctr.scale_ups += 1;
             self.tel.add("server_scale_ups_total", "", 1);
         }
         report
@@ -570,7 +779,9 @@ mod tests {
     #[test]
     fn replies_carry_seq_and_tag_and_errors_are_structured() {
         let mut e = engine();
-        let r = e.apply(7, Some(99), &WireOp::Health).expect("immediate");
+        let r = e
+            .apply(7, Some(99), &WireOp::Health { latency: false })
+            .expect("immediate");
         assert_eq!(r.get("seq").and_then(Json::as_i64), Some(7));
         assert_eq!(r.get("tag").and_then(Json::as_i64), Some(99));
         let err = e.apply(
@@ -605,10 +816,110 @@ mod tests {
     fn query_reports_digest_and_counts() {
         let mut e = engine();
         e.run_window(0, &[WireOp::Submit(SubmitSpec::basic("web", 2, 100, 128, 0))]);
-        let q = e.apply(5, None, &WireOp::Query).expect("immediate");
+        let q = e
+            .apply(5, None, &WireOp::Query { latency: false })
+            .expect("immediate");
         assert_eq!(q.get("pods").and_then(Json::as_i64), Some(2));
         assert_eq!(q.get("pending").and_then(Json::as_i64), Some(0));
         let digest = q.get("digest").and_then(Json::as_str).expect("digest");
         assert_eq!(digest, format!("{:016x}", e.digest()));
+        // The canonical query carries no latency block; asking for one
+        // without telemetry renders an explicit null.
+        assert!(q.get("latency").is_none());
+        let q2 = e
+            .apply(6, None, &WireOp::Query { latency: true })
+            .expect("immediate");
+        assert_eq!(q2.get("latency"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn window_closes_record_journal_entries_and_frames() {
+        let mut e = engine();
+        e.run_window(
+            1_000,
+            &[WireOp::Submit(SubmitSpec::basic("web", 2, 100, 128, 0))],
+        );
+        e.run_window(2_000, &[]);
+        assert_eq!(e.journal().len(), 2);
+        let entries: Vec<_> = e.journal().since(0, 100).collect();
+        assert_eq!(entries[0].window, 0);
+        assert_eq!(entries[0].submits, 1);
+        assert_eq!(entries[0].pending_before, 2);
+        assert_eq!(entries[0].pending_after, 0);
+        assert_eq!(entries[0].counters.submit_pods, 2);
+        assert_eq!(entries[0].seq_lo, Some(0));
+        // The timer-only window has no seq range and no submits.
+        assert_eq!(entries[1].window, 1);
+        assert_eq!(entries[1].submits, 0);
+        assert_eq!(entries[1].seq_lo, None);
+        // The latest close leaves one claimable delta frame.
+        let frame = e.take_watch_frame().expect("frame");
+        assert_eq!(frame.get("frame").and_then(Json::as_str), Some("delta"));
+        assert_eq!(frame.get("window").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            frame.get("digest").and_then(Json::as_str),
+            Some(format!("{:016x}", e.digest()).as_str())
+        );
+        assert!(frame.get("entry").is_some());
+        assert!(e.take_watch_frame().is_none(), "frames claim once");
+        // The journal op pages with a resume cursor.
+        let page = e
+            .apply(
+                20,
+                None,
+                &WireOp::Journal {
+                    since: Some(1),
+                    limit: None,
+                    wall: false,
+                },
+            )
+            .expect("immediate");
+        let got = page.get("entries").and_then(Json::as_arr).expect("arr");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].get("window").and_then(Json::as_i64), Some(1));
+        assert_eq!(page.get("next").and_then(Json::as_i64), Some(2));
+        assert!(!page.to_string_compact().contains("wall_us"));
+    }
+
+    #[test]
+    fn explain_reports_placement_state_and_rejection_census() {
+        let mut e = engine();
+        // Two 4Gi nodes; a 3Gi pod lands, then a 6Gi pod cannot fit
+        // anywhere — explain must cover both ready nodes with reasons.
+        e.run_window(
+            1_000,
+            &[WireOp::Submit(SubmitSpec::basic("web", 1, 100, 3072, 0))],
+        );
+        e.run_window(
+            2_000,
+            &[WireOp::Submit(SubmitSpec::basic("big", 1, 100, 6144, 0))],
+        );
+        let placed = e
+            .apply(30, None, &WireOp::Explain { pod: "web-0".into() })
+            .expect("immediate");
+        assert_eq!(placed.get("status").and_then(Json::as_str), Some("placed"));
+        assert!(placed.get("node").and_then(Json::as_str).is_some());
+        let pending = e
+            .apply(31, None, &WireOp::Explain { pod: "big-0".into() })
+            .expect("immediate");
+        assert_eq!(pending.get("status").and_then(Json::as_str), Some("pending"));
+        assert_eq!(pending.get("ready_nodes").and_then(Json::as_i64), Some(2));
+        assert_eq!(pending.get("feasible").and_then(Json::as_i64), Some(0));
+        let reasons = pending.get("reasons").expect("reasons");
+        assert_eq!(
+            reasons.get("insufficient-ram").and_then(Json::as_i64),
+            Some(2)
+        );
+        assert!(pending.get("certificate").and_then(Json::as_str).is_some());
+        let missing = e
+            .apply(32, None, &WireOp::Explain { pod: "ghost-0".into() })
+            .expect("immediate");
+        assert_eq!(
+            missing
+                .get("error")
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_str),
+            Some("bad-request")
+        );
     }
 }

@@ -1,0 +1,354 @@
+//! Window-close event journal and watch-frame fan-out.
+//!
+//! The journal is the daemon's flight recorder: one structured
+//! [`JournalEntry`] per closed solve window — seq range, per-tier
+//! placed/pending deltas, certificate outcome, cumulative engine
+//! counters, wall + virtual timings — kept in a bounded ring so memory
+//! stays flat under unbounded uptime. Clients page through it with the
+//! `journal` wire op (`since`-window cursor) or subscribe to live
+//! deltas with `watch`; `kube-packd journal` pretty-prints it.
+//!
+//! # Determinism contract
+//!
+//! The canonical wire form of an entry ([`JournalEntry::to_json`] with
+//! `wall = false`, the default) is a pure function of the seq-ordered
+//! request interleaving: identical at any `--threads` count and with
+//! telemetry on or off (the counters snapshot is engine-owned, not
+//! telemetry-derived). The wall-clock solve time is recorded but only
+//! rendered when a client opts in with `"wall":true` — it sits outside
+//! the byte-identity boundary, exactly like span timestamps.
+//!
+//! [`WatchHub`] owns the per-subscriber frame queues. Queues are
+//! bounded: past the cap, new frames are dropped and counted, and the
+//! next successful drain leads with a structured `lagged` frame
+//! carrying the missed count — slow consumers shed history instead of
+//! growing the daemon's heap.
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+
+/// Default journal ring capacity (entries, i.e. windows retained).
+pub const JOURNAL_CAP: usize = 512;
+
+/// Default per-subscriber watch queue bound (frames).
+pub const WATCH_QUEUE_CAP: usize = 64;
+
+/// Cumulative engine-owned counters at a window close. Tracked by the
+/// engine itself (not telemetry) so journal entries are identical with
+/// recording on or off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    /// Requests applied (all ops, including failed ones).
+    pub requests: u64,
+    /// Pods admitted through `submit`.
+    pub submit_pods: u64,
+    /// Windows whose round invoked the CP solver.
+    pub solver_invocations: u64,
+    /// Autoscale scale-ups applied by window rounds.
+    pub scale_ups: u64,
+    /// Structured error replies sent.
+    pub errors: u64,
+}
+
+impl CounterSnapshot {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests", self.requests)
+            .set("submit_pods", self.submit_pods)
+            .set("solver_invocations", self.solver_invocations)
+            .set("scale_ups", self.scale_ups)
+            .set("errors", self.errors);
+        o
+    }
+}
+
+/// One window-close record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEntry {
+    /// Window id as it appears on the wire (0-based: the first window
+    /// to close is window 0, matching submit replies).
+    pub window: u64,
+    /// Virtual close time: `(window + 1) * window_ms`.
+    pub virtual_ms: u64,
+    /// Seq range applied since the previous close; `None` when the
+    /// window closed on a timer with no requests.
+    pub seq_lo: Option<u64>,
+    pub seq_hi: Option<u64>,
+    /// Deferred submit requests answered at this close.
+    pub submits: u64,
+    /// Window certificate: `proven-optimal` | `anytime` | `default`.
+    pub certificate: String,
+    pub solver_invoked: bool,
+    /// Per-tier placed counts before/after the window round.
+    pub placed_before: Vec<u64>,
+    pub placed_after: Vec<u64>,
+    /// Pending pod counts before/after the window round.
+    pub pending_before: u64,
+    pub pending_after: u64,
+    /// Cumulative engine counters at this close.
+    pub counters: CounterSnapshot,
+    /// Wall-clock time the round took, microseconds. **Non-canonical**:
+    /// omitted from the wire form unless the client asks for it.
+    pub wall_us: u64,
+}
+
+impl JournalEntry {
+    /// Wire form. With `wall = false` (the canonical default) the
+    /// output is byte-identical across thread counts and telemetry
+    /// settings; `wall = true` appends the wall-clock field.
+    pub fn to_json(&self, wall: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("window", self.window)
+            .set("virtual_ms", self.virtual_ms)
+            .set("submits", self.submits)
+            .set("certificate", self.certificate.as_str())
+            .set("solver_invoked", self.solver_invoked)
+            .set(
+                "placed_before",
+                Json::Arr(self.placed_before.iter().map(|&v| Json::from(v)).collect()),
+            )
+            .set(
+                "placed_after",
+                Json::Arr(self.placed_after.iter().map(|&v| Json::from(v)).collect()),
+            )
+            .set("pending_before", self.pending_before)
+            .set("pending_after", self.pending_after)
+            .set("counters", self.counters.to_json());
+        if let (Some(lo), Some(hi)) = (self.seq_lo, self.seq_hi) {
+            o.set("seq_lo", lo).set("seq_hi", hi);
+        }
+        if wall {
+            o.set("wall_us", self.wall_us);
+        }
+        o
+    }
+}
+
+/// Bounded ring of window-close entries. Old windows fall off the
+/// front; the cursor API reports the retained range so clients can see
+/// when they have a gap.
+#[derive(Debug)]
+pub struct Journal {
+    cap: usize,
+    entries: VecDeque<JournalEntry>,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Journal {
+        Journal {
+            cap: cap.max(1),
+            entries: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, entry: JournalEntry) {
+        if self.entries.len() == self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back(entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Oldest retained window id, if any.
+    pub fn first_window(&self) -> Option<u64> {
+        self.entries.front().map(|e| e.window)
+    }
+
+    /// Newest retained window id, if any.
+    pub fn last_window(&self) -> Option<u64> {
+        self.entries.back().map(|e| e.window)
+    }
+
+    /// Entries with `window >= since` (a start-from cursor: pass the
+    /// previous reply's `next` to resume), oldest first, at most
+    /// `limit`.
+    pub fn since(&self, since: u64, limit: usize) -> impl Iterator<Item = &JournalEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.window >= since)
+            .take(limit)
+    }
+}
+
+/// A structured `lagged` frame: `missed` delta frames were dropped for
+/// this subscriber since its last successful drain.
+pub fn lagged_frame(missed: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("frame", "lagged").set("missed", missed);
+    o
+}
+
+struct Subscriber {
+    id: u64,
+    queue: VecDeque<String>,
+    missed: u64,
+}
+
+/// Fan-out of window-close delta frames to watch subscribers, with
+/// per-subscriber bounded queues. Pure bookkeeping — the serve loop
+/// owns the sockets and calls [`drain`](WatchHub::drain) after every
+/// publish; a subscriber whose socket write fails is dropped there.
+#[derive(Default)]
+pub struct WatchHub {
+    subs: Vec<Subscriber>,
+    cap: usize,
+}
+
+impl WatchHub {
+    pub fn new(queue_cap: usize) -> WatchHub {
+        WatchHub {
+            subs: Vec::new(),
+            cap: queue_cap.max(1),
+        }
+    }
+
+    pub fn subscribe(&mut self, id: u64) {
+        if !self.subs.iter().any(|s| s.id == id) {
+            self.subs.push(Subscriber {
+                id,
+                queue: VecDeque::new(),
+                missed: 0,
+            });
+        }
+    }
+
+    pub fn unsubscribe(&mut self, id: u64) {
+        self.subs.retain(|s| s.id != id);
+    }
+
+    pub fn subscriber_ids(&self) -> Vec<u64> {
+        self.subs.iter().map(|s| s.id).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+
+    /// Enqueue one frame line for every subscriber. Full queues drop
+    /// the frame and count it toward the subscriber's `lagged` notice.
+    pub fn publish(&mut self, line: &str) {
+        for s in &mut self.subs {
+            if s.queue.len() >= self.cap {
+                s.missed += 1;
+            } else {
+                s.queue.push_back(line.to_string());
+            }
+        }
+    }
+
+    /// Take everything queued for `id`: a `lagged` frame first when
+    /// frames were dropped, then the surviving frames in order.
+    pub fn drain(&mut self, id: u64) -> Vec<String> {
+        let Some(s) = self.subs.iter_mut().find(|s| s.id == id) else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(s.queue.len() + 1);
+        if s.missed > 0 {
+            out.push(lagged_frame(s.missed).to_string_compact());
+            s.missed = 0;
+        }
+        out.extend(s.queue.drain(..));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(window: u64) -> JournalEntry {
+        JournalEntry {
+            window,
+            virtual_ms: window * 1000,
+            seq_lo: Some(window * 10),
+            seq_hi: Some(window * 10 + 3),
+            submits: 2,
+            certificate: "proven-optimal".to_string(),
+            solver_invoked: true,
+            placed_before: vec![1, 0],
+            placed_after: vec![3, 1],
+            pending_before: 3,
+            pending_after: 0,
+            counters: CounterSnapshot {
+                requests: window * 4,
+                submit_pods: window * 2,
+                solver_invocations: window,
+                scale_ups: 0,
+                errors: 0,
+            },
+            wall_us: 1234,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_past_cap() {
+        let mut j = Journal::new(3);
+        for w in 1..=5 {
+            j.push(entry(w));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.first_window(), Some(3));
+        assert_eq!(j.last_window(), Some(5));
+    }
+
+    #[test]
+    fn since_cursor_pages_forward() {
+        let mut j = Journal::new(10);
+        for w in 1..=6 {
+            j.push(entry(w));
+        }
+        let windows: Vec<u64> = j.since(2, 3).map(|e| e.window).collect();
+        assert_eq!(windows, vec![2, 3, 4]);
+        let rest: Vec<u64> = j.since(5, 100).map(|e| e.window).collect();
+        assert_eq!(rest, vec![5, 6]);
+        assert!(j.since(7, 100).next().is_none());
+    }
+
+    #[test]
+    fn wall_time_is_opt_in_on_the_wire() {
+        let e = entry(1);
+        let canonical = e.to_json(false).to_string_compact();
+        assert!(!canonical.contains("wall_us"));
+        let with_wall = e.to_json(true).to_string_compact();
+        assert!(with_wall.contains("\"wall_us\":1234"));
+        // The canonical form is stable under re-rendering.
+        assert_eq!(canonical, e.to_json(false).to_string_compact());
+    }
+
+    #[test]
+    fn hub_bounds_queues_and_reports_lag() {
+        let mut hub = WatchHub::new(2);
+        hub.subscribe(7);
+        hub.subscribe(7); // idempotent
+        assert_eq!(hub.len(), 1);
+        for i in 0..5 {
+            hub.publish(&format!("frame-{i}"));
+        }
+        let got = hub.drain(7);
+        // 2 queued + 3 dropped → lagged first, then the survivors.
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], "{\"frame\":\"lagged\",\"missed\":3}");
+        assert_eq!(got[1], "frame-0");
+        assert_eq!(got[2], "frame-1");
+        // Drained state resets.
+        assert!(hub.drain(7).is_empty());
+        hub.publish("frame-5");
+        assert_eq!(hub.drain(7), vec!["frame-5".to_string()]);
+        hub.unsubscribe(7);
+        assert!(hub.is_empty());
+        hub.publish("frame-6");
+        assert!(hub.drain(7).is_empty());
+    }
+}

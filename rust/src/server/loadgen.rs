@@ -28,6 +28,7 @@ use std::net::TcpStream;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::telemetry::Telemetry;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, percentile};
@@ -110,6 +111,59 @@ pub fn replay_reply_stream(
     (lines, engine.digest())
 }
 
+/// Everything observable from one in-process replay: the reply stream,
+/// the canonical journal and watch-frame lines, and the end-state
+/// digest.
+pub struct ObservedReplay {
+    pub lines: Vec<String>,
+    /// Canonical journal entries (`wall = false`), oldest first.
+    pub journal: Vec<String>,
+    /// The delta frame each window close would push to a subscriber.
+    pub frames: Vec<String>,
+    pub digest: u64,
+}
+
+/// Like [`replay_reply_stream`], but optionally armed with a recording
+/// telemetry handle and returning the full observability surface. The
+/// proptest surface for "observability never feeds back": replies,
+/// journal, frames, and digest must be byte-identical with telemetry on
+/// or off and at any `threads` count.
+pub fn replay_observed(
+    trace: &ChurnTrace,
+    threads: usize,
+    solve_timeout: Duration,
+    telemetry: bool,
+) -> ObservedReplay {
+    let tel = if telemetry {
+        Telemetry::recording()
+    } else {
+        Telemetry::off()
+    };
+    let mut engine = Engine::with_telemetry(
+        engine_for_trace(trace, threads, solve_timeout, 1_000),
+        tel,
+    );
+    let mut lines = Vec::new();
+    let mut frames = Vec::new();
+    for (t, ops) in trace_to_windows(trace) {
+        lines.extend(engine.run_window(t, &ops));
+        if let Some(frame) = engine.take_watch_frame() {
+            frames.push(frame.to_string_compact());
+        }
+    }
+    let journal = engine
+        .journal()
+        .since(0, usize::MAX)
+        .map(|e| e.to_json(false).to_string_compact())
+        .collect();
+    ObservedReplay {
+        lines,
+        journal,
+        frames,
+        digest: engine.digest(),
+    }
+}
+
 /// FNV-1a over a reply stream — a compact identity for the determinism
 /// record in `BENCH_serve.json`.
 pub fn stream_fingerprint(lines: &[String]) -> u64 {
@@ -125,14 +179,15 @@ pub fn stream_fingerprint(lines: &[String]) -> u64 {
     h
 }
 
-/// A blocking newline-JSON client connection.
-struct Client {
+/// A blocking newline-JSON client connection (also the CLI's transport
+/// for `kube-packd journal`).
+pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
 }
 
 impl Client {
-    fn connect(addr: &str) -> io::Result<Client> {
+    pub fn connect(addr: &str) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let writer = stream.try_clone()?;
@@ -142,13 +197,13 @@ impl Client {
         })
     }
 
-    fn send(&mut self, req: &WireRequest) -> io::Result<()> {
+    pub fn send(&mut self, req: &WireRequest) -> io::Result<()> {
         let mut line = req.to_line();
         line.push('\n');
         self.writer.write_all(line.as_bytes())
     }
 
-    fn recv(&mut self) -> io::Result<Json> {
+    pub fn recv(&mut self) -> io::Result<Json> {
         let mut line = String::new();
         if self.reader.read_line(&mut line)? == 0 {
             return Err(io::Error::new(
@@ -162,7 +217,7 @@ impl Client {
 
     /// Send, then block until the reply carrying this request's tag
     /// arrives (single-outstanding discipline).
-    fn request(&mut self, req: &WireRequest) -> io::Result<Json> {
+    pub fn request(&mut self, req: &WireRequest) -> io::Result<Json> {
         self.send(req)?;
         loop {
             let reply = self.recv()?;
@@ -210,7 +265,10 @@ pub fn run_bench(p: &LoadgenParams) -> io::Result<Json> {
 
     // Snapshot the end state, then drain the daemon.
     let mut control = Client::connect(&addr)?;
-    let query = control.request(&WireRequest::tagged(WireOp::Query, total as u64))?;
+    let query = control.request(&WireRequest::tagged(
+        WireOp::Query { latency: false },
+        total as u64,
+    ))?;
     let shutdown = control.request(&WireRequest::tagged(WireOp::Shutdown, total as u64 + 1))?;
     if shutdown.get("error").is_some() {
         return Err(io::Error::other("shutdown rejected"));
@@ -229,9 +287,9 @@ pub fn run_bench(p: &LoadgenParams) -> io::Result<Json> {
             "admissions_per_s",
             if elapsed > 0.0 { total as f64 / elapsed } else { 0.0 },
         )
-        .set("latency_p50_ms", percentile(&latencies_ms, 0.50))
-        .set("latency_p95_ms", percentile(&latencies_ms, 0.95))
-        .set("latency_p99_ms", percentile(&latencies_ms, 0.99))
+        .set("latency_p50_ms", percentile(&latencies_ms, 50.0))
+        .set("latency_p95_ms", percentile(&latencies_ms, 95.0))
+        .set("latency_p99_ms", percentile(&latencies_ms, 99.0))
         .set("latency_mean_ms", mean(&latencies_ms));
     for key in ["windows", "pods", "pending", "digest"] {
         if let Some(v) = query.get(key) {

@@ -41,6 +41,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod journal;
 pub mod loadgen;
 pub mod protocol;
 
@@ -53,9 +54,10 @@ use std::time::{Duration, Instant};
 
 use crate::telemetry::Telemetry;
 
-use batcher::{send_line, Batcher, Drained, ReplySink};
+use batcher::{send_line, Admit, Batcher, Drained, ReplySink};
 use engine::{Engine, EngineConfig};
-use protocol::{parse_request, WireError, MAX_LINE_BYTES};
+use journal::{WatchHub, WATCH_QUEUE_CAP};
+use protocol::{parse_request, WireError, WireOp, MAX_LINE_BYTES};
 
 /// How often the serve loop wakes to poll for new connections and the
 /// SIGINT flag when no window deadline is nearer.
@@ -72,6 +74,10 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Per-line byte cap on the wire.
     pub max_line_bytes: usize,
+    /// Admission-queue bound: past this many enqueued-but-undrained
+    /// requests, new ones are shed with a structured `overloaded` error
+    /// instead of buffering without bound (`--max-pending`).
+    pub max_pending: usize,
     /// Engine knobs (fleet, tiers, solve budget, `window_ms`, ...).
     pub engine: EngineConfig,
     /// Record spans/counters (on by default so live `metrics` /
@@ -92,6 +98,7 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             max_batch: 64,
             max_line_bytes: MAX_LINE_BYTES,
+            max_pending: 4096,
             engine: EngineConfig::default(),
             telemetry: true,
             trace_out: None,
@@ -143,7 +150,7 @@ fn serve_loop(listener: TcpListener, cfg: ServeConfig) -> io::Result<()> {
         sigint::install();
     }
     listener.set_nonblocking(true)?;
-    let batcher = Batcher::new();
+    let batcher = Batcher::with_max_pending(cfg.max_pending);
     let tel = if cfg.telemetry {
         Telemetry::recording()
     } else {
@@ -157,6 +164,10 @@ fn serve_loop(listener: TcpListener, cfg: ServeConfig) -> io::Result<()> {
     let mut deadline: Option<Instant> = None;
     // seq -> reply sink for deferred `submit` replies.
     let mut waiting: BTreeMap<u64, ReplySink> = BTreeMap::new();
+    // Watch subscribers: the hub owns the bounded frame queues, keyed
+    // by the `watch` request's seq; this map holds their sockets.
+    let mut hub = WatchHub::new(WATCH_QUEUE_CAP);
+    let mut watch_sinks: BTreeMap<u64, ReplySink> = BTreeMap::new();
 
     loop {
         // Gated on the install flag: the flag is process-global, and an
@@ -195,6 +206,12 @@ fn serve_loop(listener: TcpListener, cfg: ServeConfig) -> io::Result<()> {
                 match sub.request {
                     Ok(req) => match engine.apply(sub.seq, req.tag, &req.op) {
                         Some(reply) => {
+                            if matches!(req.op, WireOp::Watch) {
+                                // Register before the ack goes out so no
+                                // window close can slip between them.
+                                hub.subscribe(sub.seq);
+                                watch_sinks.insert(sub.seq, Arc::clone(&sub.reply));
+                            }
                             send_line(&sub.reply, &reply.to_string_compact());
                         }
                         None => {
@@ -226,6 +243,24 @@ fn serve_loop(listener: TcpListener, cfg: ServeConfig) -> io::Result<()> {
             for (seq, reply) in engine.close_window_at(at) {
                 if let Some(sink) = waiting.remove(&seq) {
                     send_line(&sink, &reply.to_string_compact());
+                }
+            }
+            // Fan the close's delta frame out to watch subscribers; a
+            // subscriber whose socket write fails is dropped here.
+            if let Some(frame) = engine.take_watch_frame() {
+                if !hub.is_empty() {
+                    hub.publish(&frame.to_string_compact());
+                    for id in hub.subscriber_ids() {
+                        let Some(sink) = watch_sinks.get(&id) else {
+                            hub.unsubscribe(id);
+                            continue;
+                        };
+                        let alive = hub.drain(id).iter().all(|line| send_line(sink, line));
+                        if !alive {
+                            hub.unsubscribe(id);
+                            watch_sinks.remove(&id);
+                        }
+                    }
                 }
             }
             deadline = None;
@@ -332,10 +367,15 @@ fn reader_loop(stream: TcpStream, conn: u64, batcher: &Batcher, max: usize) {
             Ok(req) => req.tag,
             Err((_, tag)) => *tag,
         };
-        if batcher.submit(conn, parsed, Arc::clone(&sink)).is_none() {
-            // Draining: rejected before sequencing, answered in place.
-            let reply = WireError::Draining.reply(None, tag);
-            if !send_line(&sink, &reply.to_string_compact()) {
+        // Rejections never join the interleaving, so they are answered
+        // in place (carrying no seq) rather than by the engine thread.
+        let rejection = match batcher.submit(conn, parsed, Arc::clone(&sink)) {
+            Admit::Accepted(_) => None,
+            Admit::Draining => Some(WireError::Draining),
+            Admit::Overloaded { pending, max } => Some(WireError::Overloaded { pending, max }),
+        };
+        if let Some(err) = rejection {
+            if !send_line(&sink, &err.reply(None, tag).to_string_compact()) {
                 break;
             }
         }

@@ -56,6 +56,9 @@ pub enum WireError {
     Oversized { got: usize, max: usize },
     /// The daemon is draining: no new requests are accepted.
     Draining,
+    /// The admission queue is full (`--max-pending`): shed load instead
+    /// of buffering without bound. Retry after a window closes.
+    Overloaded { pending: usize, max: usize },
 }
 
 impl WireError {
@@ -66,6 +69,7 @@ impl WireError {
             WireError::BadRequest(_) => "bad-request",
             WireError::Oversized { .. } => "oversized",
             WireError::Draining => "draining",
+            WireError::Overloaded { .. } => "overloaded",
         }
     }
 
@@ -78,6 +82,9 @@ impl WireError {
                 format!("line of {got} bytes exceeds the {max}-byte cap")
             }
             WireError::Draining => "daemon is draining; request rejected".to_string(),
+            WireError::Overloaded { pending, max } => {
+                format!("admission queue full ({pending} pending, max {max}); retry after a window")
+            }
         }
     }
 
@@ -202,14 +209,37 @@ pub enum WireOp {
     /// Remove a drained/cordoned node by index.
     Remove { node: u32 },
     /// Cluster snapshot: placements per tier, pending, utilisation, and
-    /// the solve-relevant state fingerprint.
-    Query,
-    /// Liveness + protocol version + drain status.
-    Health,
+    /// the solve-relevant state fingerprint. `latency: true` opts into
+    /// a wall-clock p50/p95/p99 latency summary — non-canonical, like
+    /// the journal's `wall` flag.
+    Query { latency: bool },
+    /// Liveness + protocol version + drain status (same optional
+    /// latency summary as `query`).
+    Health { latency: bool },
     /// Live Prometheus text exposition of the daemon's counters.
     Metrics,
     /// Live Chrome-trace JSON export of the daemon's spans.
     TraceExport,
+    /// Page through the window-close event journal. `since` is a
+    /// start-from window-id cursor (entries with `window >= since` are
+    /// returned; pass the previous reply's `next` to resume; omitted
+    /// means everything retained); `limit` caps the page;
+    /// `wall` opts into the wall-clock timing fields, which live
+    /// outside the determinism boundary and are omitted by default.
+    Journal {
+        since: Option<u64>,
+        limit: Option<u64>,
+        wall: bool,
+    },
+    /// Subscribe this connection to push-mode delta frames on every
+    /// window close (journal entry + state digest). Frames carry no
+    /// `tag`/`seq`; a `lagged` frame replaces frames dropped past the
+    /// per-subscriber queue bound.
+    Watch,
+    /// Explain why a pod is (still) pending: per-ready-node rejection
+    /// tally across the constraint modules, plus the latest window
+    /// certificate.
+    Explain { pod: String },
     /// Begin graceful drain: finish the in-flight window, answer every
     /// already-enqueued request, flush telemetry exports, exit 0.
     Shutdown,
@@ -224,10 +254,13 @@ impl WireOp {
             WireOp::Join { .. } => "join",
             WireOp::Drain { .. } => "drain",
             WireOp::Remove { .. } => "remove",
-            WireOp::Query => "query",
-            WireOp::Health => "health",
+            WireOp::Query { .. } => "query",
+            WireOp::Health { .. } => "health",
             WireOp::Metrics => "metrics",
             WireOp::TraceExport => "trace_export",
+            WireOp::Journal { .. } => "journal",
+            WireOp::Watch => "watch",
+            WireOp::Explain { .. } => "explain",
             WireOp::Shutdown => "shutdown",
         }
     }
@@ -300,11 +333,26 @@ impl WireOp {
             WireOp::Drain { node } | WireOp::Remove { node } => {
                 o.set("node", *node);
             }
-            WireOp::Query
-            | WireOp::Health
-            | WireOp::Metrics
-            | WireOp::TraceExport
-            | WireOp::Shutdown => {}
+            WireOp::Journal { since, limit, wall } => {
+                if let Some(s) = since {
+                    o.set("since", *s);
+                }
+                if let Some(l) = limit {
+                    o.set("limit", *l);
+                }
+                if *wall {
+                    o.set("wall", true);
+                }
+            }
+            WireOp::Explain { pod } => {
+                o.set("pod", pod.as_str());
+            }
+            WireOp::Query { latency } | WireOp::Health { latency } => {
+                if *latency {
+                    o.set("latency", true);
+                }
+            }
+            WireOp::Metrics | WireOp::TraceExport | WireOp::Watch | WireOp::Shutdown => {}
         }
         o
     }
@@ -346,10 +394,23 @@ impl WireOp {
             "remove" => Ok(WireOp::Remove {
                 node: req_u32(j, "node")?,
             }),
-            "query" => Ok(WireOp::Query),
-            "health" => Ok(WireOp::Health),
+            "query" => Ok(WireOp::Query {
+                latency: opt_bool(j, "latency")?.unwrap_or(false),
+            }),
+            "health" => Ok(WireOp::Health {
+                latency: opt_bool(j, "latency")?.unwrap_or(false),
+            }),
             "metrics" => Ok(WireOp::Metrics),
             "trace_export" => Ok(WireOp::TraceExport),
+            "journal" => Ok(WireOp::Journal {
+                since: opt_u64(j, "since")?,
+                limit: opt_u64(j, "limit")?,
+                wall: opt_bool(j, "wall")?.unwrap_or(false),
+            }),
+            "watch" => Ok(WireOp::Watch),
+            "explain" => Ok(WireOp::Explain {
+                pod: req_str(j, "pod")?,
+            }),
             "shutdown" => Ok(WireOp::Shutdown),
             other => Err(WireError::UnknownOp(other.to_string())),
         }
@@ -445,6 +506,25 @@ fn opt_i64(j: &Json, key: &str) -> Result<Option<i64>, WireError> {
             .as_i64()
             .map(Some)
             .ok_or_else(|| bad(&format!("field '{key}' must be an integer"))),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>, WireError> {
+    match opt_i64(j, key)? {
+        None => Ok(None),
+        Some(v) => u64::try_from(v)
+            .map(Some)
+            .map_err(|_| bad(&format!("field '{key}' must be non-negative"))),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>, WireError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| bad(&format!("field '{key}' must be a boolean"))),
     }
 }
 

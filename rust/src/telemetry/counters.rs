@@ -1,13 +1,180 @@
-//! Ordered counter/gauge storage behind the [`Telemetry`] handle.
+//! Ordered counter/gauge/histogram storage behind the [`Telemetry`]
+//! handle.
 //!
-//! Keys are `(metric, labels)` pairs kept in a `BTreeMap`, so iteration
+//! Keys are `(metric, labels)` pairs kept in `BTreeMap`s, so iteration
 //! — and therefore every export — is deterministic regardless of the
-//! order counters were touched in. Counters add on merge; gauges take
-//! the maximum (the only gauge today is `solver_max_depth`).
+//! order metrics were touched in. Counters add on merge; gauges take
+//! the maximum (the only gauge today is `solver_max_depth`); histogram
+//! buckets and sums add.
+//!
+//! Histograms use one **fixed** log-spaced bucket table
+//! ([`BUCKET_BOUNDS_US`]) shared by every latency family, so the
+//! exported bucket *structure* is byte-stable across runs and thread
+//! counts even though the observed wall-clock values are not — the same
+//! carve-out span timestamps already have in the determinism contract.
 //!
 //! [`Telemetry`]: super::Telemetry
 
 use std::collections::BTreeMap;
+
+/// Histogram bucket upper bounds in microseconds: powers of 4 from 1 µs
+/// to ~16.8 s, plus an implicit `+Inf` overflow bucket. Log-spaced so a
+/// single table covers sub-microsecond plumbing and multi-second solver
+/// windows with constant relative error.
+pub const BUCKET_BOUNDS_US: [u64; 13] = [
+    1,
+    4,
+    16,
+    64,
+    256,
+    1_024,
+    4_096,
+    16_384,
+    65_536,
+    262_144,
+    1_048_576,
+    4_194_304,
+    16_777_216,
+];
+
+/// One latency histogram over the fixed [`BUCKET_BOUNDS_US`] table.
+/// Bucket counts are stored per-bucket (non-cumulative); the Prometheus
+/// exporter renders the cumulative `_bucket` form.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Histogram {
+    /// Per-bucket counts; index i counts observations ≤ bounds[i].
+    buckets: [u64; BUCKET_BOUNDS_US.len()],
+    /// Observations above the last finite bound (`+Inf` bucket).
+    overflow: u64,
+    /// Sum of all observed values, microseconds.
+    sum_us: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// Record one observation of `us` microseconds.
+    pub fn observe(&mut self, us: u64) {
+        match BUCKET_BOUNDS_US.iter().position(|&b| us <= b) {
+            Some(i) => self.buckets[i] += 1,
+            None => self.overflow += 1,
+        }
+        self.sum_us += us;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Cumulative counts per finite bound, then the `+Inf` total — the
+    /// exact sequence a Prometheus `_bucket` series carries.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.buckets.len() + 1);
+        let mut acc = 0u64;
+        for &b in &self.buckets {
+            acc += b;
+            out.push(acc);
+        }
+        out.push(acc + self.overflow);
+        out
+    }
+
+    /// Fold another histogram in (bucket-wise addition).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    /// Estimate the `q`-quantile (q in [0,1]) in microseconds, with
+    /// `histogram_quantile`-style linear interpolation inside the
+    /// containing bucket. Observations in the `+Inf` bucket clamp to
+    /// the largest finite bound. Returns 0.0 on an empty histogram.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut acc = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            let next = acc + b;
+            if (next as f64) >= rank && b > 0 {
+                let lo = if i == 0 { 0.0 } else { BUCKET_BOUNDS_US[i - 1] as f64 };
+                let hi = BUCKET_BOUNDS_US[i] as f64;
+                let into = (rank - acc as f64) / b as f64;
+                return lo + (hi - lo) * into.clamp(0.0, 1.0);
+            }
+            acc = next;
+        }
+        *BUCKET_BOUNDS_US.last().expect("non-empty bounds") as f64
+    }
+}
+
+/// A deterministic map of labelled histograms, mirroring [`CounterSet`]:
+/// keys are `(metric, labels)` with pre-rendered label bodies, iteration
+/// is sorted, merge is bucket-wise addition.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSet {
+    entries: BTreeMap<(String, String), Histogram>,
+}
+
+impl HistogramSet {
+    /// Record one observation, creating the series on first touch.
+    pub fn observe(&mut self, metric: &str, labels: &str, us: u64) {
+        self.entries
+            .entry((metric.to_string(), labels.to_string()))
+            .or_default()
+            .observe(us);
+    }
+
+    pub fn get(&self, metric: &str, labels: &str) -> Option<&Histogram> {
+        self.entries.get(&(metric.to_string(), labels.to_string()))
+    }
+
+    /// Merge one metric across all label sets into a single histogram
+    /// (for summary quantiles over e.g. every strategy).
+    pub fn total(&self, metric: &str) -> Histogram {
+        let mut out = Histogram::default();
+        for ((m, _), h) in &self.entries {
+            if m == metric {
+                out.merge(h);
+            }
+        }
+        out
+    }
+
+    /// Fold another set in: histograms add bucket-wise.
+    pub fn merge(&mut self, other: &HistogramSet) {
+        for ((metric, labels), h) in &other.entries {
+            self.entries
+                .entry((metric.clone(), labels.clone()))
+                .or_default()
+                .merge(h);
+        }
+    }
+
+    /// Sorted iteration: `(metric, labels, histogram)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str, &Histogram)> {
+        self.entries
+            .iter()
+            .map(|((m, l), h)| (m.as_str(), l.as_str(), h))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
 
 /// How a metric merges and how it is typed in the Prometheus export.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -149,5 +316,85 @@ mod tests {
         let mut sorted = keys.clone();
         sorted.sort();
         assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_inclusive_upper_bounds() {
+        let mut h = Histogram::default();
+        // Exactly on a bound lands in that bound's bucket; one past it
+        // spills into the next — the `le` (less-or-equal) contract.
+        h.observe(1);
+        h.observe(2); // > 1, ≤ 4
+        h.observe(4);
+        h.observe(5); // > 4, ≤ 16
+        let cum = h.cumulative();
+        assert_eq!(cum[0], 1); // ≤ 1µs
+        assert_eq!(cum[1], 3); // ≤ 4µs
+        assert_eq!(cum[2], 4); // ≤ 16µs
+        assert_eq!(*cum.last().unwrap(), 4); // +Inf == count
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_us(), 12);
+    }
+
+    #[test]
+    fn histogram_overflow_goes_to_inf_bucket() {
+        let mut h = Histogram::default();
+        let top = *BUCKET_BOUNDS_US.last().unwrap();
+        h.observe(top);
+        h.observe(top + 1);
+        let cum = h.cumulative();
+        assert_eq!(cum[BUCKET_BOUNDS_US.len() - 1], 1); // last finite
+        assert_eq!(*cum.last().unwrap(), 2); // +Inf
+    }
+
+    #[test]
+    fn histogram_merge_adds_bucketwise() {
+        let mut a = Histogram::default();
+        a.observe(3);
+        let mut b = Histogram::default();
+        b.observe(3);
+        b.observe(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum_us(), 106);
+        assert_eq!(*a.cumulative().last().unwrap(), 3);
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let mut h = Histogram::default();
+        assert_eq!(h.quantile_us(0.5), 0.0); // empty
+        for _ in 0..100 {
+            h.observe(10); // all in the (4, 16] bucket
+        }
+        let p50 = h.quantile_us(0.5);
+        assert!(
+            (4.0..=16.0).contains(&p50),
+            "p50 must interpolate inside the containing bucket, got {p50}"
+        );
+        // Quantiles are monotone in q.
+        assert!(h.quantile_us(0.99) >= h.quantile_us(0.5));
+    }
+
+    #[test]
+    fn histogram_set_labels_separate_and_total_merges() {
+        let mut hs = HistogramSet::default();
+        hs.observe("race_task_seconds", "strategy=\"a\"", 10);
+        hs.observe("race_task_seconds", "strategy=\"b\"", 20);
+        assert_eq!(hs.len(), 2);
+        assert_eq!(
+            hs.get("race_task_seconds", "strategy=\"a\"").unwrap().count(),
+            1
+        );
+        let total = hs.total("race_task_seconds");
+        assert_eq!(total.count(), 2);
+        assert_eq!(total.sum_us(), 30);
+        let mut other = HistogramSet::default();
+        other.observe("race_task_seconds", "strategy=\"a\"", 5);
+        hs.merge(&other);
+        assert_eq!(
+            hs.get("race_task_seconds", "strategy=\"a\"").unwrap().count(),
+            2
+        );
     }
 }

@@ -52,7 +52,7 @@ pub mod counters;
 pub mod prometheus;
 
 pub use clock::{Deadline, Stopwatch, TimeBudget};
-pub use counters::{CounterKind, CounterSet};
+pub use counters::{CounterKind, CounterSet, Histogram, HistogramSet, BUCKET_BOUNDS_US};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -136,6 +136,7 @@ struct Recorder {
     stack: Vec<usize>,
     events: Vec<EventRecord>,
     counters: CounterSet,
+    histograms: HistogramSet,
 }
 
 /// The telemetry handle. `Telemetry::off()` (or `default()`) is a
@@ -181,6 +182,7 @@ impl Telemetry {
                 stack: Vec::new(),
                 events: Vec::new(),
                 counters: CounterSet::default(),
+                histograms: HistogramSet::default(),
             })),
         }
     }
@@ -258,6 +260,16 @@ impl Telemetry {
         }
     }
 
+    /// Record one latency observation (microseconds) into a histogram
+    /// series (see [`HistogramSet::observe`]). Observed values are
+    /// wall-clock and sit outside the byte-identity boundary, exactly
+    /// like span timestamps; only the bucket *bounds* are fixed.
+    pub fn observe_us(&self, metric: &'static str, labels: &str, us: u64) {
+        if let Some(cell) = &self.inner {
+            cell.borrow_mut().histograms.observe(metric, labels, us);
+        }
+    }
+
     /// Record a structured event. The message closure only runs when the
     /// handle is enabled — disabled handles pay nothing for formatting.
     pub fn event(&self, scope: &'static str, msg: impl FnOnce() -> String) {
@@ -301,6 +313,7 @@ impl Telemetry {
                         stack: Vec::new(),
                         events: Vec::new(),
                         counters: CounterSet::default(),
+                        histograms: HistogramSet::default(),
                     })),
                 }
             }
@@ -332,6 +345,7 @@ impl Telemetry {
         r.events.extend(c.events);
         r.lane_names.extend(c.lane_names);
         r.counters.merge(&c.counters);
+        r.histograms.merge(&c.histograms);
     }
 
     /// Snapshot of the counter set (tests, reports).
@@ -339,6 +353,14 @@ impl Telemetry {
         match &self.inner {
             None => CounterSet::default(),
             Some(cell) => cell.borrow().counters.clone(),
+        }
+    }
+
+    /// Snapshot of the histogram set (latency summaries, tests).
+    pub fn histograms(&self) -> HistogramSet {
+        match &self.inner {
+            None => HistogramSet::default(),
+            Some(cell) => cell.borrow().histograms.clone(),
         }
     }
 
@@ -361,11 +383,14 @@ impl Telemetry {
         }
     }
 
-    /// Prometheus text exposition of the counter set.
+    /// Prometheus text exposition of the counter and histogram sets.
     pub fn export_prometheus(&self) -> String {
         match &self.inner {
-            None => prometheus::render(&CounterSet::default()),
-            Some(cell) => prometheus::render(&cell.borrow().counters),
+            None => prometheus::render(&CounterSet::default(), &HistogramSet::default()),
+            Some(cell) => {
+                let r = cell.borrow();
+                prometheus::render(&r.counters, &r.histograms)
+            }
         }
     }
 }
@@ -488,7 +513,26 @@ mod tests {
             sp.arg("tier", 1u64);
         }
         tel.add("solver_decisions_total", "strategy=\"default\"", 42);
+        tel.observe_us("serve_window_solve_seconds", "", 123);
         assert_eq!(tel.export_chrome(), tel.export_chrome());
         assert_eq!(tel.export_prometheus(), tel.export_prometheus());
+    }
+
+    #[test]
+    fn histograms_record_absorb_and_export() {
+        let off = Telemetry::off();
+        off.observe_us("x_seconds", "", 1);
+        assert!(off.histograms().is_empty());
+
+        let tel = Telemetry::recording();
+        let child = tel.child("task-0");
+        child.observe_us("race_task_seconds", "strategy=\"a\"", 10);
+        tel.observe_us("race_task_seconds", "strategy=\"a\"", 20);
+        tel.absorb(child);
+        let h = tel.histograms();
+        assert_eq!(h.get("race_task_seconds", "strategy=\"a\"").unwrap().count(), 2);
+        let text = tel.export_prometheus();
+        assert!(text.contains("# TYPE kube_packd_race_task_seconds histogram"));
+        assert!(text.contains("race_task_seconds_count{strategy=\"a\"} 2"));
     }
 }

@@ -1,18 +1,35 @@
-//! Prometheus text-exposition exporter for telemetry counters.
+//! Prometheus text-exposition exporter for telemetry counters and
+//! latency histograms.
 //!
 //! Output follows the text format a `/metrics` endpoint would serve:
 //! one `# TYPE` comment per metric followed by its sample lines, every
-//! metric prefixed `kube_packd_`. Iteration over the underlying
-//! `BTreeMap` makes the dump byte-stable for a fixed run — the property
-//! the snapshot tests pin.
+//! metric prefixed `kube_packd_`. Scalar families (counters/gauges)
+//! render first, histogram families after — within each section,
+//! iteration over the underlying `BTreeMap` makes the dump byte-stable
+//! for a fixed run, the property the snapshot tests pin.
+//!
+//! Histograms render the standard triplet: cumulative
+//! `<name>_bucket{le="..."}` series ending at `le="+Inf"`, then
+//! `<name>_sum` and `<name>_count`. Bucket bounds come from the fixed
+//! [`BUCKET_BOUNDS_US`] table (stored in microseconds, exposed in
+//! seconds per Prometheus convention), so the bucket *structure* is
+//! identical across runs even though observed wall-clock values vary.
 
-use super::counters::CounterSet;
+use super::counters::{CounterSet, HistogramSet, BUCKET_BOUNDS_US};
 
 /// Namespace prefix on every exported metric.
 pub const PREFIX: &str = "kube_packd_";
 
-/// Render the counter set as Prometheus text exposition.
-pub fn render(counters: &CounterSet) -> String {
+/// Render a microsecond quantity in seconds, using Rust's shortest
+/// round-trip float formatting (never scientific notation), e.g.
+/// `1 → "0.000001"`, `16777216 → "16.777216"`.
+fn secs(us: u64) -> String {
+    (us as f64 / 1e6).to_string()
+}
+
+/// Render the counter set, then the histogram set, as Prometheus text
+/// exposition.
+pub fn render(counters: &CounterSet, histograms: &HistogramSet) -> String {
     let mut out = String::new();
     let mut last_metric: Option<String> = None;
     for (metric, labels, kind, value) in counters.iter() {
@@ -36,6 +53,52 @@ pub fn render(counters: &CounterSet) -> String {
         out.push_str(&value.to_string());
         out.push('\n');
     }
+    last_metric = None;
+    for (metric, labels, hist) in histograms.iter() {
+        if last_metric.as_deref() != Some(metric) {
+            out.push_str("# TYPE ");
+            out.push_str(PREFIX);
+            out.push_str(metric);
+            out.push_str(" histogram\n");
+            last_metric = Some(metric.to_string());
+        }
+        let cum = hist.cumulative();
+        for (i, count) in cum.iter().enumerate() {
+            let le = if i < BUCKET_BOUNDS_US.len() {
+                secs(BUCKET_BOUNDS_US[i])
+            } else {
+                "+Inf".to_string()
+            };
+            out.push_str(PREFIX);
+            out.push_str(metric);
+            out.push_str("_bucket{");
+            if !labels.is_empty() {
+                out.push_str(labels);
+                out.push(',');
+            }
+            out.push_str("le=\"");
+            out.push_str(&le);
+            out.push_str("\"} ");
+            out.push_str(&count.to_string());
+            out.push('\n');
+        }
+        for (suffix, value) in [
+            ("_sum", secs(hist.sum_us())),
+            ("_count", hist.count().to_string()),
+        ] {
+            out.push_str(PREFIX);
+            out.push_str(metric);
+            out.push_str(suffix);
+            if !labels.is_empty() {
+                out.push('{');
+                out.push_str(labels);
+                out.push('}');
+            }
+            out.push(' ');
+            out.push_str(&value);
+            out.push('\n');
+        }
+    }
     out
 }
 
@@ -49,7 +112,7 @@ mod tests {
         c.add("solver_decisions_total", "strategy=\"default\"", 10);
         c.add("solver_decisions_total", "strategy=\"easiest\"", 4);
         c.gauge_max("solver_max_depth", "", 6);
-        let text = render(&c);
+        let text = render(&c, &HistogramSet::default());
         let expected = "# TYPE kube_packd_solver_decisions_total counter\n\
                         kube_packd_solver_decisions_total{strategy=\"default\"} 10\n\
                         kube_packd_solver_decisions_total{strategy=\"easiest\"} 4\n\
@@ -60,6 +123,38 @@ mod tests {
 
     #[test]
     fn empty_set_renders_empty() {
-        assert_eq!(render(&CounterSet::default()), "");
+        assert_eq!(render(&CounterSet::default(), &HistogramSet::default()), "");
+    }
+
+    #[test]
+    fn histograms_render_cumulative_buckets_sum_and_count() {
+        let mut h = HistogramSet::default();
+        h.observe("serve_window_solve_seconds", "", 2); // ≤ 4µs
+        h.observe("serve_window_solve_seconds", "", 2_000_000); // ≤ 4.194304s
+        let text = render(&CounterSet::default(), &h);
+        assert!(text.starts_with("# TYPE kube_packd_serve_window_solve_seconds histogram\n"));
+        assert!(text
+            .contains("kube_packd_serve_window_solve_seconds_bucket{le=\"0.000004\"} 1\n"));
+        assert!(text.contains("kube_packd_serve_window_solve_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("kube_packd_serve_window_solve_seconds_sum 2.000002\n"));
+        assert!(text.ends_with("kube_packd_serve_window_solve_seconds_count 2\n"));
+        // Cumulative monotonicity across the whole bucket series.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "buckets must be cumulative: {line}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn histogram_labels_compose_with_le() {
+        let mut h = HistogramSet::default();
+        h.observe("race_task_seconds", "strategy=\"default\"", 100);
+        let text = render(&CounterSet::default(), &h);
+        assert!(text
+            .contains("kube_packd_race_task_seconds_bucket{strategy=\"default\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("kube_packd_race_task_seconds_sum{strategy=\"default\"} 0.0001\n"));
+        assert!(text.contains("kube_packd_race_task_seconds_count{strategy=\"default\"} 1\n"));
     }
 }

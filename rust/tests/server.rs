@@ -22,12 +22,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
-use kube_packd::cluster::{identical_nodes, Resources, Toleration};
+use kube_packd::cluster::{identical_nodes, Node, Resources, Taint, Toleration};
 use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy, SweepConfig};
 use kube_packd::optimizer::OptimizerConfig;
 use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::server::engine::{Engine, EngineConfig};
-use kube_packd::server::loadgen::{engine_for_trace, replay_reply_stream, stream_fingerprint};
+use kube_packd::server::loadgen::{
+    engine_for_trace, replay_observed, replay_reply_stream, stream_fingerprint,
+};
 use kube_packd::server::protocol::{
     parse_request, trace_to_windows, SubmitSpec, WireOp, WireRequest, MAX_LINE_BYTES,
 };
@@ -153,10 +155,26 @@ fn every_op() -> Vec<WireOp> {
         },
         WireOp::Drain { node: 3 },
         WireOp::Remove { node: 0 },
-        WireOp::Query,
-        WireOp::Health,
+        WireOp::Query { latency: false },
+        WireOp::Query { latency: true },
+        WireOp::Health { latency: false },
+        WireOp::Health { latency: true },
         WireOp::Metrics,
         WireOp::TraceExport,
+        WireOp::Journal {
+            since: None,
+            limit: None,
+            wall: false,
+        },
+        WireOp::Journal {
+            since: Some(12),
+            limit: Some(8),
+            wall: true,
+        },
+        WireOp::Watch,
+        WireOp::Explain {
+            pod: "web-0".to_string(),
+        },
         WireOp::Shutdown,
     ]
 }
@@ -264,7 +282,7 @@ fn daemon_survives_garbage_and_keeps_answering() {
     }
 
     // The same connection still serves valid requests.
-    let r = c.request(&WireRequest::tagged(WireOp::Health, 1));
+    let r = c.request(&WireRequest::tagged(WireOp::Health { latency: false }, 1));
     assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
     assert_eq!(tag_of(&r), Some(1));
 
@@ -334,7 +352,7 @@ fn shutdown_drains_the_window_without_losing_replies() {
     }
     // Same-connection barrier: once the query answers, both submits are
     // sequenced and applied — the shutdown below cannot overtake them.
-    let q = a.request(&WireRequest::tagged(WireOp::Query, 3));
+    let q = a.request(&WireRequest::tagged(WireOp::Query { latency: false }, 3));
     assert_eq!(q.get("pending").and_then(Json::as_i64), Some(3), "submits deferred, unplaced: {q}");
 
     let mut b = Client::connect(handle.addr);
@@ -358,7 +376,7 @@ fn shutdown_drains_the_window_without_losing_replies() {
     // appears; every probe still gets exactly one reply either way.
     let mut saw_draining = false;
     for i in 0..200u64 {
-        b.send_raw(&WireRequest::tagged(WireOp::Health, 100 + i).to_line());
+        b.send_raw(&WireRequest::tagged(WireOp::Health { latency: false }, 100 + i).to_line());
         let r = b.recv();
         if error_code(&r) == Some("draining") {
             assert_eq!(r.get("seq"), None, "drain-time rejections never join the interleaving");
@@ -389,11 +407,11 @@ fn sigint_drains_like_shutdown() {
     // A served health round-trip proves the serve loop is running, and
     // the loop installs the handler before serving — so the raise below
     // cannot kill the test process.
-    let h = c.request(&WireRequest::tagged(WireOp::Health, 0));
+    let h = c.request(&WireRequest::tagged(WireOp::Health { latency: false }, 0));
     assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
 
     c.send_raw(&WireRequest::tagged(WireOp::Submit(SubmitSpec::basic("web", 1, 100, 1024, 0)), 1).to_line());
-    let _ = c.request(&WireRequest::tagged(WireOp::Query, 2)); // barrier: submit applied
+    let _ = c.request(&WireRequest::tagged(WireOp::Query { latency: false }, 2)); // barrier: submit applied
     unsafe {
         raise(SIGINT);
     }
@@ -449,6 +467,195 @@ fn replay_reply_streams_are_identical_at_1_and_8_threads() {
             }
             Ok(())
         },
+    );
+}
+
+/// The observability plane must observe, never feed back: arming
+/// telemetry, reading the journal, or building watch frames cannot
+/// change a single reply byte, and the journal/frame streams themselves
+/// are byte-identical across thread counts.
+#[test]
+fn observability_is_inert_and_thread_deterministic() {
+    prop::check(
+        "serve-observability-identity",
+        0x0B5E7,
+        3,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let trace = ChurnTraceGenerator::new(small_churn_params(), seed).generate();
+            let timeout = Duration::from_secs(2);
+            let off = replay_observed(&trace, 1, timeout, false);
+            let armed = replay_observed(&trace, 1, timeout, true);
+            let t8 = replay_observed(&trace, 8, timeout, true);
+            if off.lines != armed.lines {
+                return Err("arming telemetry changed the reply stream".to_string());
+            }
+            if off.journal != armed.journal {
+                return Err("arming telemetry changed the journal".to_string());
+            }
+            if off.frames != armed.frames {
+                return Err("arming telemetry changed the watch frames".to_string());
+            }
+            if off.digest != armed.digest {
+                return Err("arming telemetry changed the end-state digest".to_string());
+            }
+            if armed.lines != t8.lines {
+                return Err("reply stream not thread-deterministic".to_string());
+            }
+            if armed.journal != t8.journal {
+                let diverge = armed.journal.iter().zip(&t8.journal).position(|(a, b)| a != b);
+                return Err(format!("journal diverges across threads at entry {diverge:?}"));
+            }
+            if armed.frames != t8.frames {
+                return Err("watch frames not thread-deterministic".to_string());
+            }
+            if armed.digest != t8.digest {
+                return Err("digest not thread-deterministic".to_string());
+            }
+            if armed.journal.is_empty() || armed.frames.len() != armed.journal.len() {
+                return Err(format!(
+                    "one frame per journal entry expected: {} frames, {} entries",
+                    armed.frames.len(),
+                    armed.journal.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- 5. observability plane (live) ---------------------------------------
+
+#[test]
+fn watch_subscribers_see_the_same_close_a_polling_client_reconstructs() {
+    let handle = spawn_daemon(fig1_engine(50), 64, MAX_LINE_BYTES);
+    let mut watcher = Client::connect(handle.addr);
+    let ack = watcher.request(&WireRequest::tagged(WireOp::Watch, 1));
+    assert_eq!(ack.get("subscribed").and_then(Json::as_bool), Some(true), "{ack}");
+    assert_eq!(ack.get("window").and_then(Json::as_i64), Some(0), "stream starts at window 0");
+
+    let mut submitter = Client::connect(handle.addr);
+    let r = submitter.request(&WireRequest::tagged(
+        WireOp::Submit(SubmitSpec::basic("web", 2, 100, 2048, 0)),
+        7,
+    ));
+    assert_eq!(r.get("op").and_then(Json::as_str), Some("submit"), "{r}");
+    let window = r.get("window").and_then(Json::as_i64).expect("window id");
+
+    // The push-mode delta frame for that close arrives on the watch
+    // connection, untagged, carrying the journal entry and the digest.
+    let frame = watcher.recv();
+    assert_eq!(frame.get("frame").and_then(Json::as_str), Some("delta"), "{frame}");
+    assert_eq!(frame.get("window").and_then(Json::as_i64), Some(window));
+    assert!(tag_of(&frame).is_none(), "frames are push traffic, never tagged");
+    let entry = frame.get("entry").expect("journal entry embedded in frame");
+    assert_eq!(entry.get("submits").and_then(Json::as_i64), Some(1));
+    assert_eq!(entry.get("window").and_then(Json::as_i64), Some(window));
+
+    // A polling client lands on the same digest the frame carried...
+    let q = submitter.request(&WireRequest::tagged(WireOp::Query { latency: false }, 8));
+    assert_eq!(
+        frame.get("digest").and_then(Json::as_str),
+        q.get("digest").and_then(Json::as_str),
+        "watch and query disagree on the state digest"
+    );
+    // ...and the journal op returns the exact entry the frame embedded.
+    let j = submitter.request(&WireRequest::tagged(
+        WireOp::Journal {
+            since: None,
+            limit: None,
+            wall: false,
+        },
+        9,
+    ));
+    let entries = j.get("entries").and_then(Json::as_arr).expect("entries");
+    assert_eq!(entries.last().expect("at least one entry"), entry);
+    assert_eq!(
+        j.get("next").and_then(Json::as_i64),
+        Some(window + 1),
+        "resume cursor points past the newest window: {j}"
+    );
+
+    let _ = submitter.request(&WireRequest::new(WireOp::Shutdown));
+    handle.join().expect("daemon exits cleanly");
+}
+
+#[test]
+fn full_admission_queue_sheds_with_structured_overloaded_errors() {
+    // max_pending = 0: every request is shed, deterministically — the
+    // pure backpressure path with no timing dependence.
+    let handle = ServeHandle::spawn(ServeConfig {
+        engine: fig1_engine(50),
+        max_pending: 0,
+        ..ServeConfig::default()
+    })
+    .expect("daemon binds on loopback");
+    let mut c = Client::connect(handle.addr);
+    let r = c.request(&WireRequest::tagged(WireOp::Health { latency: false }, 1));
+    assert_eq!(error_code(&r), Some("overloaded"), "{r}");
+    assert_eq!(r.get("seq"), None, "shed requests never join the interleaving");
+    assert_eq!(tag_of(&r), Some(1), "tag still echoed on the rejection");
+    // The connection survives shedding; the next probe is also answered.
+    let r2 = c.request(&WireRequest::tagged(WireOp::Query { latency: false }, 2));
+    assert_eq!(error_code(&r2), Some("overloaded"), "{r2}");
+    // A shutdown op would be shed too, so the daemon cannot be drained
+    // over the wire here — drop the handle and let the thread die with
+    // the test process.
+    drop(handle);
+}
+
+#[test]
+fn explain_covers_every_ready_node_for_an_unplaceable_pod() {
+    // Figure-1 variant: node-0 tainted, node-2 RAM-starved, node-1
+    // filled by the first window — the victim pod then fits nowhere,
+    // each node rejecting for a different reason.
+    let mut nodes = identical_nodes(3, Resources::new(4000, 4096));
+    nodes[0].taints.push(Taint::no_schedule("dedicated", "infra"));
+    nodes[2] = Node::new(2, "node-2", Resources::new(4000, 512));
+    let mut engine = Engine::new(EngineConfig {
+        p_max: 0,
+        nodes,
+        reference_capacity: Resources::new(4000, 4096),
+        solve_timeout: Duration::from_secs(5),
+        ..EngineConfig::default()
+    });
+    engine.run_window(
+        1_000,
+        &[WireOp::Submit(SubmitSpec::basic("filler", 1, 100, 3584, 0))],
+    );
+    let lines = engine.run_window(
+        2_000,
+        &[WireOp::Submit(SubmitSpec::basic("victim", 1, 100, 3072, 0))],
+    );
+    let reply = parse(&lines[0]).expect("submit reply parses");
+    let placement = reply.get("placements").and_then(Json::as_arr).expect("placements");
+    assert!(
+        placement[0].get("node").map(|n| *n == Json::Null).unwrap_or(false),
+        "victim must be certified unplaceable: {reply}"
+    );
+
+    let ex = engine
+        .apply(
+            50,
+            None,
+            &WireOp::Explain {
+                pod: "victim-0".to_string(),
+            },
+        )
+        .expect("immediate reply");
+    assert_eq!(ex.get("status").and_then(Json::as_str), Some("pending"), "{ex}");
+    assert_eq!(ex.get("ready_nodes").and_then(Json::as_i64), Some(3));
+    assert_eq!(ex.get("feasible").and_then(Json::as_i64), Some(0));
+    let reasons = ex.get("reasons").expect("per-module tally");
+    assert_eq!(reasons.get("taint").and_then(Json::as_i64), Some(1), "{ex}");
+    assert_eq!(
+        reasons.get("insufficient-ram").and_then(Json::as_i64),
+        Some(2),
+        "{ex}"
+    );
+    assert!(
+        ex.get("certificate").and_then(Json::as_str).is_some(),
+        "explain must report the window certificate: {ex}"
     );
 }
 

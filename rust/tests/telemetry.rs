@@ -218,14 +218,19 @@ fn prometheus_export_is_schema_valid_and_layered() {
                 "TYPE line without namespace: {line}"
             );
             let kind = rest.rsplit(' ').next().unwrap();
-            assert!(kind == "counter" || kind == "gauge", "bad kind: {line}");
+            assert!(
+                kind == "counter" || kind == "gauge" || kind == "histogram",
+                "bad kind: {line}"
+            );
         } else {
             assert!(
                 line.starts_with("kube_packd_"),
                 "sample line without namespace: {line}"
             );
+            // Counter/gauge/bucket samples are integers; histogram
+            // `_sum` series are seconds, so floats are legal too.
             let value = line.rsplit(' ').next().unwrap();
-            assert!(value.parse::<u64>().is_ok(), "non-numeric sample: {line}");
+            assert!(value.parse::<f64>().is_ok(), "non-numeric sample: {line}");
         }
     }
     for family in [
@@ -235,6 +240,86 @@ fn prometheus_export_is_schema_valid_and_layered() {
         "kube_packd_session_solves_total",
     ] {
         assert!(text.contains(family), "missing {family} in:\n{text}");
+    }
+}
+
+/// A recorded portfolio solve emits valid Prometheus histogram series:
+/// per label set, `_bucket` counts are cumulative and monotone, the
+/// series ends at `le="+Inf"` whose count equals `_count`, and a `_sum`
+/// series exists alongside.
+#[test]
+fn prometheus_histograms_are_well_formed_for_a_recorded_solve() {
+    let tel = Telemetry::recording();
+    let state = fragmented_figure1();
+    let cfg = OptimizerConfig::with_timeout(10.0).with_threads(2);
+    optimize_traced(&state, 0, &cfg, None, &tel).expect("figure 1 must solve");
+
+    let text = tel.export_prometheus();
+    assert!(
+        text.contains("# TYPE kube_packd_race_task_seconds histogram"),
+        "race-task latency histogram missing:\n{text}"
+    );
+    // Group bucket samples by everything before the `le` label — that
+    // prefix is one series; file order is the exporter's bound order.
+    let mut series: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    let mut last_le: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        let Some((name_labels, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        let Some((prefix, le_part)) = name_labels.split_once("le=\"") else {
+            continue;
+        };
+        let le = le_part.trim_end_matches('}').trim_end_matches('"');
+        series
+            .entry(prefix.to_string())
+            .or_default()
+            .push(value.parse().expect("bucket counts are integers"));
+        last_le.insert(prefix.to_string(), le.to_string());
+    }
+    assert!(!series.is_empty(), "no histogram buckets in:\n{text}");
+    for (key, vals) in &series {
+        assert!(
+            vals.windows(2).all(|w| w[0] <= w[1]),
+            "buckets must be cumulative and monotone for {key}: {vals:?}"
+        );
+        assert_eq!(
+            last_le.get(key).map(String::as_str),
+            Some("+Inf"),
+            "{key} must end at le=\"+Inf\""
+        );
+        // `key` is `<metric>_bucket{` or `<metric>_bucket{<labels>,` —
+        // recover the sibling `_count` and `_sum` sample lines.
+        let base = key.trim_end_matches(['{', ',']);
+        let (count_needle, sum_needle) = if base.contains('{') {
+            (
+                base.replace("_bucket{", "_count{") + "} ",
+                base.replace("_bucket{", "_sum{") + "} ",
+            )
+        } else {
+            (
+                base.replace("_bucket", "_count") + " ",
+                base.replace("_bucket", "_sum") + " ",
+            )
+        };
+        let count: u64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&count_needle))
+            .unwrap_or_else(|| panic!("no _count series for {base}"))
+            .parse()
+            .expect("count is an integer");
+        assert_eq!(
+            *vals.last().unwrap(),
+            count,
+            "+Inf bucket must equal _count for {base}"
+        );
+        let sum: f64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&sum_needle))
+            .unwrap_or_else(|| panic!("no _sum series for {base}"))
+            .parse()
+            .expect("sum is numeric");
+        assert!(sum >= 0.0 && sum.is_finite());
     }
 }
 
