@@ -31,6 +31,35 @@ import json
 import socket
 import sys
 
+#: Every op the daemon speaks, kept in lockstep with ``WireOp::name``
+#: in ``rust/src/server/protocol.rs``. The ``wire-parity`` rule of
+#: ``kube-packd lint`` asserts set equality in both directions, so a
+#: slug added on one side only fails CI instead of drifting silently.
+WIRE_OPS = frozenset({
+    "submit", "delete", "join", "drain", "remove", "query", "health",
+    "metrics", "trace_export", "journal", "watch", "explain", "shutdown",
+})
+
+#: Structured error slugs (``reply["error"]["code"]``), the mirror of
+#: ``WireError::code`` — same wire-parity contract as ``WIRE_OPS``.
+ERROR_CODES = frozenset({
+    "bad-json", "unknown-op", "bad-request", "oversized", "draining",
+    "overloaded",
+})
+
+
+def error_code(reply: dict) -> str | None:
+    """Structured error slug of ``reply``, or ``None`` on success.
+    Raises if the daemon sends a slug this client doesn't know —
+    that's protocol drift, not a user error."""
+    err = reply.get("error")
+    if err is None:
+        return None
+    code = err.get("code") if isinstance(err, dict) else str(err)
+    if code not in ERROR_CODES:
+        raise ValueError(f"daemon sent an unknown error code {code!r}")
+    return code
+
 
 class ServeClient:
     """One connection to the daemon, with tag-based reply correlation."""
@@ -47,6 +76,8 @@ class ServeClient:
 
     def send(self, op: str, **fields) -> int:
         """Send one request; returns its tag (use :meth:`wait`)."""
+        if op not in WIRE_OPS:
+            raise ValueError(f"unknown wire op {op!r} (known: {sorted(WIRE_OPS)})")
         tag = self._next_tag
         self._next_tag += 1
         line = json.dumps({"op": op, "tag": tag, **fields}, separators=(",", ":"))

@@ -1,0 +1,477 @@
+//! Hand-rolled token-level lexer for the detlint pass.
+//!
+//! Deliberately *not* a full Rust grammar: the rules in
+//! [`super::rules`] only need a faithful token stream — identifiers,
+//! punctuation, literals — with comments and string contents kept out
+//! of the way (so `"Instant::now"` inside a string or a doc comment
+//! never fires a finding). The lexer handles the corners that would
+//! otherwise cause misfires: nested block comments, escaped and raw
+//! (byte) strings, char literals vs. lifetimes, and `#[cfg(test)]`
+//! regions (test code may panic and read clocks freely; the pass marks
+//! those tokens and every rule skips them).
+//!
+//! It also extracts waiver *directives* from line comments:
+//!
+//! ```text
+//! // detlint: allow(<rule>[, <rule>]*) — <mandatory reason>
+//! ```
+//!
+//! A trailing directive waives findings on its own line; a standalone
+//! comment line waives the next token-bearing line. The reason text is
+//! not optional — a directive without one is itself reported (the
+//! `bad-directive` rule in [`super`]).
+
+/// Token class. The rules only ever distinguish identifiers,
+/// single-char punctuation, string literals (for the wire-parity
+/// extraction), and "everything else literal".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    /// String literal (plain, byte, or raw); `text` holds the content.
+    Str,
+    /// Char / byte-char / numeric literal.
+    Lit,
+    /// `'a`, `'static` — kept distinct so `'a'` vs `'a` never confuse
+    /// the punctuation stream.
+    Lifetime,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` item — every rule skips these.
+    pub in_test: bool,
+}
+
+impl Tok {
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(ch)
+    }
+}
+
+/// A `// detlint: allow(...)` comment, as written (validated later).
+#[derive(Clone, Debug)]
+pub struct Directive {
+    pub line: u32,
+    /// No token precedes the comment on its line: the directive targets
+    /// the next token-bearing line instead of its own.
+    pub standalone: bool,
+    /// Rule slugs listed inside `allow(...)`.
+    pub rules: Vec<String>,
+    /// The comment matched the `allow(...)` grammar at all.
+    pub parse_ok: bool,
+    /// Non-empty reason text followed the closing paren.
+    pub reason_ok: bool,
+}
+
+/// Lexer output: the token stream plus every directive comment.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub directives: Vec<Directive>,
+}
+
+/// Lex one source file. Never fails: unterminated constructs consume
+/// to end of input (the pass is a linter, not a compiler).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc `///` and `//!`): scan for a directive.
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != '\n' {
+                j += 1;
+            }
+            let body: String = b[start..j].iter().collect();
+            let standalone = out.toks.last().map_or(true, |t| t.line != line);
+            if let Some(d) = parse_directive(&body, line, standalone) {
+                out.directives.push(d);
+            }
+            i = j;
+            continue;
+        }
+        // Block comment, nesting like rustc.
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // String literals, including `b"…"`, `r"…"`, `r#"…"#`, `br#"…"#`.
+        if c == '"' || ((c == 'r' || c == 'b') && string_prefix(&b, i).is_some()) {
+            let (content, next, nl) = lex_string(&b, i);
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: content,
+                line,
+                in_test: false,
+            });
+            line += nl;
+            i = next;
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            let (kind, text, next, nl) = lex_quote(&b, i);
+            out.toks.push(Tok {
+                kind,
+                text,
+                line,
+                in_test: false,
+            });
+            line += nl;
+            i = next;
+            continue;
+        }
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i] == '_' || b[i].is_alphanumeric()) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (b[i] == '_' || b[i].is_alphanumeric()) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Lit,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+            in_test: false,
+        });
+        i += 1;
+    }
+    mark_test_regions(&mut out.toks);
+    out
+}
+
+/// Does position `i` (at `r`/`b`) start a string literal? Returns the
+/// offset of the opening quote and the `#` count for raw strings.
+fn string_prefix(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) == Some(&'r') {
+        let mut hashes = 0usize;
+        let mut k = j + 1;
+        while b.get(k) == Some(&'#') {
+            hashes += 1;
+            k += 1;
+        }
+        if b.get(k) == Some(&'"') {
+            return Some((k, hashes));
+        }
+        return None;
+    }
+    // Only `b"…"` remains (`"` alone is handled by the caller).
+    if j > i && b.get(j) == Some(&'"') {
+        return Some((j, 0));
+    }
+    None
+}
+
+/// Lex a string starting at `i` (at the quote or at an `r`/`b`
+/// prefix). Returns (content, next index, newlines consumed).
+fn lex_string(b: &[char], i: usize) -> (String, usize, u32) {
+    let (quote, hashes) = match b[i] {
+        '"' => (i, 0),
+        _ => string_prefix(b, i).unwrap_or((i, 0)),
+    };
+    let raw = hashes > 0 || (quote > i && b[quote - 1] == 'r');
+    let mut j = quote + 1;
+    let mut content = String::new();
+    let mut nl = 0u32;
+    while j < b.len() {
+        if b[j] == '\\' && !raw {
+            if let Some(&esc) = b.get(j + 1) {
+                content.push(esc);
+                if esc == '\n' {
+                    nl += 1;
+                }
+            }
+            j += 2;
+            continue;
+        }
+        if b[j] == '"' {
+            // Raw strings close only on `"` followed by the right
+            // number of `#`s.
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && b.get(k) == Some(&'#') {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (content, k, nl);
+            }
+        }
+        if b[j] == '\n' {
+            nl += 1;
+        }
+        content.push(b[j]);
+        j += 1;
+    }
+    (content, j, nl)
+}
+
+/// Lex from a `'`: either a char literal (`'x'`, `'\n'`, `'\u{1F4}'`)
+/// or a lifetime (`'a`, `'static`).
+fn lex_quote(b: &[char], i: usize) -> (TokKind, String, usize, u32) {
+    if b.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: scan to the closing quote. `'\''` puts
+        // the quote directly after the backslash.
+        let mut j = i + 2;
+        if b.get(j) == Some(&'\'') {
+            j += 1;
+        }
+        while j < b.len() && b[j] != '\'' {
+            j += 1;
+        }
+        let text: String = b[i..(j + 1).min(b.len())].iter().collect();
+        return (TokKind::Lit, text, (j + 1).min(b.len()), 0);
+    }
+    if b.get(i + 2) == Some(&'\'') {
+        let nl = u32::from(b.get(i + 1) == Some(&'\n'));
+        let text: String = b[i..i + 3].iter().collect();
+        return (TokKind::Lit, text, i + 3, nl);
+    }
+    let mut j = i + 1;
+    while j < b.len() && (b[j] == '_' || b[j].is_alphanumeric()) {
+        j += 1;
+    }
+    let text: String = b[i..j].iter().collect();
+    (TokKind::Lifetime, text, j, 0)
+}
+
+/// Parse a line-comment body as a directive, if it is one. Leading doc
+/// markers (`/`, `!`) are stripped so `/// detlint: …` also works.
+fn parse_directive(body: &str, line: u32, standalone: bool) -> Option<Directive> {
+    let text = body.trim_start_matches(['/', '!']).trim();
+    let rest = text.strip_prefix("detlint:")?.trim_start();
+    let mut d = Directive {
+        line,
+        standalone,
+        rules: Vec::new(),
+        parse_ok: false,
+        reason_ok: false,
+    };
+    let Some(list) = rest.strip_prefix("allow(") else {
+        return Some(d); // `detlint:` without `allow(…)` — bad-directive
+    };
+    let Some(close) = list.find(')') else {
+        return Some(d);
+    };
+    d.rules = list[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    d.parse_ok = !d.rules.is_empty();
+    let reason = list[close + 1..].trim_start_matches(['—', '–', '-', ':', ' ', '\t']);
+    d.reason_ok = reason.chars().any(char::is_alphanumeric);
+    Some(d)
+}
+
+/// Mark every token inside a `#[cfg(test)]` item (`mod tests { … }`,
+/// a lone `#[cfg(test)] fn`, or a `use`): rules skip test code.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_cfg_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        // Skip further attributes between the cfg and the item.
+        while j < toks.len() && toks[j].is_punct('#') {
+            if j + 1 < toks.len() && toks[j + 1].is_punct('[') {
+                j = match_close(toks, j + 1, '[', ']') + 1;
+            } else {
+                j += 1;
+            }
+        }
+        // Scan to the item's body (or a `;` for body-less items).
+        while j < toks.len() && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+            j += 1;
+        }
+        if j < toks.len() && toks[j].is_punct('{') {
+            j = match_close(toks, j, '{', '}');
+        }
+        let end = j.min(toks.len().saturating_sub(1));
+        for t in &mut toks[start..=end] {
+            t.in_test = true;
+        }
+        i = end + 1;
+    }
+}
+
+/// Token sequence `#[cfg(test)]` at `i`.
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && toks[i].is_punct('#')
+        && toks[i + 1].is_punct('[')
+        && toks[i + 2].is_ident("cfg")
+        && toks[i + 3].is_punct('(')
+        && toks[i + 4].is_ident("test")
+        && toks[i + 5].is_punct(')')
+        && toks[i + 6].is_punct(']')
+}
+
+/// Index of the token closing the bracket opened at `open_idx`
+/// (depth-matched). Unbalanced input answers the last index.
+pub fn match_close(toks: &[Tok], open_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_their_contents() {
+        let src = r##"
+            // Instant::now in a comment
+            /* HashMap in /* a nested */ block */
+            let s = "Instant::now()";
+            let r = r#"HashMap "quoted" inside"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<_> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Lit && t.text == "'x'"));
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_derail() {
+        let ids = idents(r"let c = '\''; let n = '\n'; let u = '\u{1F600}'; done();");
+        assert!(ids.contains(&"done".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn directive_trailing_and_standalone() {
+        let lx = lex(concat!(
+            "let t = now(); // detlint: allow(wall-clock) — deadline anchor\n",
+            "// detlint: allow(hash-iter, float-order) — twin reasons\n",
+            "let m = build();\n",
+        ));
+        assert_eq!(lx.directives.len(), 2);
+        let d0 = &lx.directives[0];
+        assert!(!d0.standalone && d0.parse_ok && d0.reason_ok);
+        assert_eq!(d0.rules, vec!["wall-clock"]);
+        let d1 = &lx.directives[1];
+        assert!(d1.standalone && d1.parse_ok && d1.reason_ok);
+        assert_eq!(d1.rules, vec!["hash-iter", "float-order"]);
+    }
+
+    #[test]
+    fn directive_without_reason_is_flagged() {
+        let lx = lex("let t = now(); // detlint: allow(wall-clock)\n");
+        assert_eq!(lx.directives.len(), 1);
+        assert!(lx.directives[0].parse_ok);
+        assert!(!lx.directives[0].reason_ok);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { panic!(\"x\") }\n}\n";
+        let lx = lex(src);
+        let panic_tok = lx.toks.iter().find(|t| t.is_ident("panic")).unwrap();
+        assert!(panic_tok.in_test);
+        let live_tok = lx.toks.iter().find(|t| t.is_ident("live")).unwrap();
+        assert!(!live_tok.in_test);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "let a = \"two\nlines\";\nlet b = 1;\n";
+        let lx = lex(src);
+        let b_tok = lx.toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+}

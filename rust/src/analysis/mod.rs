@@ -1,0 +1,250 @@
+//! detlint — the self-hosted determinism-boundary static analysis
+//! pass behind `kube-packd lint [PATH]`.
+//!
+//! Every contract this reproduction rests on — byte-identical plans
+//! across thread counts, certificates that mean what they say,
+//! telemetry that observes but never feeds back — is otherwise only
+//! *sampled* by proptests. This pass makes the boundary structural:
+//! a zone manifest ([`zones`]) places every source file inside or
+//! outside the byte-identity core, and token-pattern rules ([`rules`])
+//! forbid the known nondeterminism sources inside it (wall clocks,
+//! hash-ordered iteration, NaN-partial float comparisons, panics on
+//! server connection paths, telemetry read-backs), plus a
+//! cross-language `wire-parity` check pinning the Python client to the
+//! Rust wire protocol.
+//!
+//! Violations are waivable only in the source itself:
+//!
+//! ```text
+//! // detlint: allow(wall-clock) — solve-deadline anchor; see …
+//! ```
+//!
+//! with a mandatory reason (a reason-less or unknown-slug directive is
+//! its own finding, `bad-directive`). The CLI exits nonzero on any
+//! unwaived finding; CI runs it as a blocking gate next to clippy/fmt.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod zones;
+
+use std::path::{Path, PathBuf};
+
+pub use report::Report;
+pub use rules::Finding;
+
+use lexer::Directive;
+use zones::Zone;
+
+/// Findings and waiver tally for one file.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub findings: Vec<Finding>,
+    pub waived: usize,
+}
+
+/// Scan one file's source. `rel` is the source-root-relative path the
+/// zone manifest keys on (e.g. `solver/search.rs`).
+pub fn scan_source(rel: &str, src: &str) -> ScanResult {
+    let lx = lexer::lex(src);
+    let mut findings = Vec::new();
+    let zone = match zones::zone_of(rel) {
+        Some(z) => z,
+        None => {
+            findings.push(Finding {
+                rule: "no-zone",
+                path: rel.to_string(),
+                line: 1,
+                msg: "file matches no zone-manifest entry — place it in \
+                      analysis/zones.rs (core, periphery, or exempt)"
+                    .to_string(),
+            });
+            // Still scan: the universal rules apply to every zone.
+            Zone::Exempt
+        }
+    };
+    findings.extend(rules::scan_tokens(rel, zone, &lx.toks));
+
+    // Validate directives; invalid ones waive nothing and are findings
+    // themselves.
+    let mut active: Vec<(u32, &Directive)> = Vec::new();
+    for d in &lx.directives {
+        if let Some(msg) = directive_problem(d) {
+            findings.push(Finding {
+                rule: "bad-directive",
+                path: rel.to_string(),
+                line: d.line,
+                msg,
+            });
+            continue;
+        }
+        let target = if d.standalone {
+            lx.toks.iter().find(|t| t.line > d.line).map(|t| t.line)
+        } else {
+            Some(d.line)
+        };
+        if let Some(t) = target {
+            active.push((t, d));
+        }
+    }
+    let before = findings.len();
+    findings.retain(|f| {
+        !(f.waivable()
+            && active
+                .iter()
+                .any(|(t, d)| *t == f.line && d.rules.iter().any(|r| r == f.rule)))
+    });
+    ScanResult {
+        waived: before - findings.len(),
+        findings,
+    }
+}
+
+/// Why this directive is invalid, if it is.
+fn directive_problem(d: &Directive) -> Option<String> {
+    if !d.parse_ok {
+        return Some(
+            "malformed directive — expected `detlint: allow(<rule>[, <rule>]*) — <reason>`"
+                .to_string(),
+        );
+    }
+    if let Some(bad) = d.rules.iter().find(|r| !rules::RULES.contains(&r.as_str())) {
+        return Some(format!(
+            "unknown rule `{bad}` in directive (known: {})",
+            rules::RULES.join(", ")
+        ));
+    }
+    if !d.reason_ok {
+        return Some(
+            "directive is missing its reason — waivers must say *why* the \
+             violation is sound"
+                .to_string(),
+        );
+    }
+    None
+}
+
+/// Lint a tree (or a single `.rs` file): scan every Rust source, then
+/// run the `wire-parity` drift check when the wire protocol is in
+/// scope. Deterministic: files are visited in sorted order and
+/// findings sorted by (path, line, rule).
+pub fn lint_tree(root: &Path) -> anyhow::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        anyhow::bail!("no .rs files under {}", root.display());
+    }
+    let mut rep = Report {
+        files: files.len(),
+        ..Report::default()
+    };
+    let mut protocol: Option<PathBuf> = None;
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = zones::rel_from(&path.to_string_lossy());
+        if rel == "server/protocol.rs" {
+            protocol = Some(path.clone());
+        }
+        let r = scan_source(&rel, &src);
+        rep.findings.extend(r.findings);
+        rep.waived += r.waived;
+    }
+    if let Some(proto) = protocol {
+        rep.findings.extend(wire_parity_for(&proto)?);
+    }
+    rep.findings
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(rep)
+}
+
+/// Run the wire-parity check for a scanned `server/protocol.rs`: the
+/// Python client lives at `<repo>/python/client.py`, where `<repo>` is
+/// four directories above the protocol file (server → src → rust →
+/// repo). A missing client is a finding, not a skip — the drift check
+/// must not rot off.
+fn wire_parity_for(proto: &Path) -> anyhow::Result<Vec<Finding>> {
+    let repo = proto
+        .ancestors()
+        .nth(4)
+        .map(Path::to_path_buf)
+        .unwrap_or_default();
+    let client = repo.join("python/client.py");
+    let proto_src = std::fs::read_to_string(proto)?;
+    let Ok(client_src) = std::fs::read_to_string(&client) else {
+        return Ok(vec![Finding {
+            rule: "wire-parity",
+            path: client.to_string_lossy().into_owned(),
+            line: 1,
+            msg: "python client not found — wire-parity cannot verify the op/error \
+                  registries"
+                .to_string(),
+        }]);
+    };
+    Ok(rules::wire_parity(
+        "server/protocol.rs",
+        &proto_src,
+        &client.to_string_lossy(),
+        &client_src,
+    ))
+}
+
+/// Recursively gather `.rs` files (also accepts a single-file root).
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let entries = std::fs::read_dir(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    for entry in entries {
+        collect_rs(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_lifecycle() {
+        let fired = scan_source("solver/x.rs", "fn f() { let t = Instant::now(); }");
+        assert_eq!(fired.findings.len(), 1);
+        assert_eq!(fired.findings[0].rule, "wall-clock");
+
+        let waived = scan_source(
+            "solver/x.rs",
+            "fn f() { let t = Instant::now(); // detlint: allow(wall-clock) — anchor\n}",
+        );
+        assert!(waived.findings.is_empty(), "{:?}", waived.findings);
+        assert_eq!(waived.waived, 1);
+    }
+
+    #[test]
+    fn reasonless_directive_waives_nothing_and_fires() {
+        let r = scan_source(
+            "solver/x.rs",
+            "fn f() { let t = Instant::now(); // detlint: allow(wall-clock)\n}",
+        );
+        let rules: Vec<&str> = r.findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"wall-clock"), "{rules:?}");
+        assert!(rules.contains(&"bad-directive"), "{rules:?}");
+    }
+
+    #[test]
+    fn unknown_slug_is_a_bad_directive() {
+        let r = scan_source("solver/x.rs", "// detlint: allow(wibble) — because\nfn f() {}");
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "bad-directive");
+    }
+
+    #[test]
+    fn unzoned_file_is_reported() {
+        let r = scan_source("mystery/new.rs", "fn f() {}");
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "no-zone");
+    }
+}

@@ -1,0 +1,111 @@
+//! Rendering for lint results: the human console listing and the
+//! `--json FILE` machine report (same [`crate::util::json::Json`]
+//! envelope the bench artefacts use — BTreeMap-backed, byte-stable).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::rules::Finding;
+
+/// One lint run over a tree: surviving findings plus tallies.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unwaived findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Files scanned.
+    pub files: usize,
+    /// Findings waived by a valid `detlint: allow` directive.
+    pub waived: usize,
+}
+
+impl Report {
+    /// No unwaived findings: the gate passes.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Console listing: one line per finding plus a summary.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "[{}] {}:{} — {}\n",
+                f.rule, f.path, f.line, f.msg
+            ));
+        }
+        out.push_str(&format!(
+            "detlint: {} finding(s), {} file(s) scanned, {} waived\n",
+            self.findings.len(),
+            self.files,
+            self.waived
+        ));
+        out
+    }
+
+    /// Machine report for `--json FILE`.
+    pub fn to_json(&self) -> Json {
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+        for f in &self.findings {
+            *counts.entry(f.rule).or_insert(0) += 1;
+        }
+        let mut by_rule = Json::obj();
+        for (rule, n) in counts {
+            by_rule.set(rule, n);
+        }
+        let mut doc = Json::obj();
+        doc.set("schema", "kube-packd/detlint/v1")
+            .set("files_scanned", self.files as u64)
+            .set("waived", self.waived as u64)
+            .set("clean", self.clean())
+            .set("counts", by_rule)
+            .set(
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            let mut o = Json::obj();
+                            o.set("rule", f.rule)
+                                .set("path", f.path.as_str())
+                                .set("line", f.line as u64)
+                                .set("message", f.msg.as_str());
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_shape() {
+        let rep = Report {
+            findings: vec![Finding {
+                rule: "wall-clock",
+                path: "solver/x.rs".to_string(),
+                line: 3,
+                msg: "boom".to_string(),
+            }],
+            files: 2,
+            waived: 1,
+        };
+        let doc = rep.to_json();
+        assert_eq!(doc.get("clean").and_then(Json::as_bool), Some(false));
+        assert_eq!(doc.get("files_scanned").and_then(Json::as_i64), Some(2));
+        let arr = doc.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("rule").and_then(Json::as_str),
+            Some("wall-clock")
+        );
+        let human = rep.render_human();
+        assert!(human.contains("[wall-clock] solver/x.rs:3"));
+        assert!(human.contains("1 finding(s), 2 file(s) scanned, 1 waived"));
+    }
+}

@@ -1,0 +1,496 @@
+//! The detlint rule set.
+//!
+//! Token-pattern rules over one file's lexed stream, scoped by the
+//! zone manifest ([`super::zones`]), plus the cross-language
+//! `wire-parity` check. Stable slugs (these appear in directives, CI
+//! logs, and the JSON report — never rename, only add):
+//!
+//! | slug                 | scope            | forbids |
+//! |----------------------|------------------|---------|
+//! | `wall-clock`         | core             | `Instant::now()`, `SystemTime` |
+//! | `hash-iter`          | core             | `HashMap` / `HashSet` (iteration order) |
+//! | `float-order`        | every zone       | `partial_cmp().unwrap()`, float sorts without `total_cmp` |
+//! | `panic-on-wire`      | `server/*`       | `unwrap`/`expect`/`panic!` on connection paths |
+//! | `telemetry-feedback` | core             | telemetry read-API calls (observe, never feed back) |
+//! | `wire-parity`        | protocol ⇄ client| op/error-slug drift between Rust and Python |
+//! | `bad-directive`      | everywhere       | malformed / reason-less / unknown-rule waivers |
+//! | `no-zone`            | everywhere       | files the zone manifest doesn't place |
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, match_close, Tok, TokKind};
+use super::zones::Zone;
+
+/// Every rule slug a directive may waive or reference.
+pub const RULES: &[&str] = &[
+    "wall-clock",
+    "hash-iter",
+    "float-order",
+    "panic-on-wire",
+    "telemetry-feedback",
+    "wire-parity",
+    "bad-directive",
+    "no-zone",
+];
+
+/// Telemetry read-API method names: calling any of these outside the
+/// telemetry/periphery zones lets observed data influence behaviour.
+/// (`span`/`add`/`event` are write APIs and stay legal everywhere.)
+const TELEMETRY_READS: &[&str] = &[
+    "export_chrome",
+    "export_prometheus",
+    "histograms",
+    "span_count",
+];
+
+/// Comparator-taking sort/extremum methods checked by `float-order`.
+const SORT_FAMILY: &[&str] = &["sort_by", "sort_unstable_by", "max_by", "min_by"];
+
+/// Callees whose `.expect()` propagates an *existing* panic (lock
+/// poisoning) rather than originating a new one — structurally allowed
+/// under `panic-on-wire`.
+const POISON_SOURCES: &[&str] = &[
+    "lock",
+    "read",
+    "write",
+    "wait",
+    "wait_timeout",
+    "wait_timeout_while",
+    "wait_while",
+];
+
+/// One lint finding, pre- or post-waiver.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Stable slug from [`RULES`].
+    pub rule: &'static str,
+    /// Path as reported (source-root-relative for Rust files).
+    pub path: String,
+    /// 1-based line.
+    pub line: u32,
+    pub msg: String,
+}
+
+impl Finding {
+    fn new(rule: &'static str, path: &str, line: u32, msg: String) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            msg,
+        }
+    }
+
+    /// Inline directives waive token-pattern findings only; manifest
+    /// gaps, malformed directives, and cross-file drift stay fatal.
+    pub fn waivable(&self) -> bool {
+        !matches!(self.rule, "bad-directive" | "no-zone" | "wire-parity")
+    }
+}
+
+/// Run every token-pattern rule over one file.
+pub fn scan_tokens(rel: &str, zone: Zone, toks: &[Tok]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if zone == Zone::Core {
+        wall_clock(rel, toks, &mut out);
+        hash_iter(rel, toks, &mut out);
+        telemetry_feedback(rel, toks, &mut out);
+    }
+    float_order(rel, toks, &mut out);
+    if rel.starts_with("server/") && rel != "server/loadgen.rs" {
+        panic_on_wire(rel, toks, &mut out);
+    }
+    out
+}
+
+fn wall_clock(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        if t.is_ident("Instant")
+            && punct_at(toks, i + 1, ':')
+            && punct_at(toks, i + 2, ':')
+            && ident_at(toks, i + 3, "now")
+        {
+            out.push(Finding::new(
+                "wall-clock",
+                rel,
+                t.line,
+                "Instant::now() in the deterministic core — route time through \
+                 telemetry::clock::Deadline or waive with a reason"
+                    .to_string(),
+            ));
+        }
+        if t.is_ident("SystemTime") {
+            out.push(Finding::new(
+                "wall-clock",
+                rel,
+                t.line,
+                "SystemTime in the deterministic core".to_string(),
+            ));
+        }
+    }
+}
+
+fn hash_iter(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.in_test {
+            continue;
+        }
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            out.push(Finding::new(
+                "hash-iter",
+                rel,
+                t.line,
+                format!(
+                    "{} in the deterministic core — iteration order is seeded per \
+                     process; use BTreeMap/BTreeSet or sorted access",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+fn telemetry_feedback(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test || t.kind != TokKind::Ident {
+            continue;
+        }
+        if TELEMETRY_READS.contains(&t.text.as_str())
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && punct_at(toks, i + 1, '(')
+        {
+            out.push(Finding::new(
+                "telemetry-feedback",
+                rel,
+                t.line,
+                format!(
+                    "telemetry read-API `{}()` in the deterministic core — telemetry \
+                     observes and must never feed back into placement",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+fn float_order(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    // `.partial_cmp(…).unwrap()` / `.expect(…)`: panics the moment a
+    // NaN reaches the comparator.
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test || !t.is_ident("partial_cmp") {
+            continue;
+        }
+        // `fn partial_cmp` (a PartialOrd impl) is not a call site.
+        if i == 0 || !toks[i - 1].is_punct('.') || !punct_at(toks, i + 1, '(') {
+            continue;
+        }
+        if unwrap_follows(toks, i) {
+            out.push(Finding::new(
+                "float-order",
+                rel,
+                t.line,
+                "partial_cmp().unwrap() panics on NaN — use f64::total_cmp".to_string(),
+            ));
+        }
+    }
+    // Comparator regions that order floats without `total_cmp`: even a
+    // non-panicking fallback (`unwrap_or(Equal)`) silently breaks sort
+    // totality when a NaN slips in.
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test || t.kind != TokKind::Ident || !SORT_FAMILY.contains(&t.text.as_str()) {
+            continue;
+        }
+        if !punct_at(toks, i + 1, '(') {
+            continue;
+        }
+        let close = match_close(toks, i + 1, '(', ')');
+        let region = &toks[i + 1..=close.min(toks.len() - 1)];
+        let has_total = region.iter().any(|r| r.is_ident("total_cmp"));
+        let soft_partial = region.iter().enumerate().any(|(j, r)| {
+            r.is_ident("partial_cmp") && !unwrap_follows(region, j)
+        });
+        if soft_partial && !has_total {
+            out.push(Finding::new(
+                "float-order",
+                rel,
+                t.line,
+                format!(
+                    "{}() comparator uses partial_cmp without total_cmp — NaN breaks \
+                     ordering totality",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Does `.unwrap()` / `.expect(…)` follow the call whose callee ident
+/// sits at `i` (skipping its argument parens)?
+fn unwrap_follows(toks: &[Tok], i: usize) -> bool {
+    if !punct_at(toks, i + 1, '(') {
+        return false;
+    }
+    let close = match_close(toks, i + 1, '(', ')');
+    punct_at(toks, close + 1, '.')
+        && (ident_at(toks, close + 2, "unwrap") || ident_at(toks, close + 2, "expect"))
+}
+
+fn panic_on_wire(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        if t.is_ident("panic") && punct_at(toks, i + 1, '!') {
+            out.push(Finding::new(
+                "panic-on-wire",
+                rel,
+                t.line,
+                "panic! on a server path — a panic here drops the client; return a \
+                 structured WireError instead"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && punct_at(toks, i + 1, '(')
+            && !propagates_poison(toks, i - 1)
+        {
+            out.push(Finding::new(
+                "panic-on-wire",
+                rel,
+                t.line,
+                format!(
+                    ".{}() on a server path — a panic here drops the client; handle \
+                     the None/Err arm or waive with a reason",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// `.lock().expect(…)` and friends: the receiver's callee is a
+/// mutex/condvar acquisition whose Err arm *is* an earlier panic
+/// (poisoning). Propagating it does not originate a new failure mode.
+fn propagates_poison(toks: &[Tok], dot_idx: usize) -> bool {
+    if dot_idx == 0 || !toks[dot_idx - 1].is_punct(')') {
+        return false;
+    }
+    // Walk back over the balanced argument list of the receiver call.
+    let mut depth = 0isize;
+    let mut j = dot_idx - 1;
+    loop {
+        if toks[j].is_punct(')') {
+            depth += 1;
+        } else if toks[j].is_punct('(') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j > 0
+        && toks[j - 1].kind == TokKind::Ident
+        && POISON_SOURCES.contains(&toks[j - 1].text.as_str())
+}
+
+fn punct_at(toks: &[Tok], i: usize, ch: char) -> bool {
+    toks.get(i).is_some_and(|t| t.is_punct(ch))
+}
+
+fn ident_at(toks: &[Tok], i: usize, name: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.is_ident(name))
+}
+
+// ---------------------------------------------------------------------------
+// wire-parity: protocol.rs ⇄ client.py drift
+// ---------------------------------------------------------------------------
+
+/// Cross-language drift check. Extracts the wire op names from
+/// `WireOp::name` and the error slugs from `WireError::code` in the
+/// protocol source, and the `WIRE_OPS` / `ERROR_CODES` registries from
+/// the Python client, then requires set equality in both directions.
+/// `proto_path` / `client_path` only label the findings.
+pub fn wire_parity(
+    proto_path: &str,
+    proto_src: &str,
+    client_path: &str,
+    client_src: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = lex(proto_src).toks;
+    let ops = fn_body_strings(&toks, "name");
+    let errs = fn_body_strings(&toks, "code");
+    if ops.is_empty() {
+        out.push(Finding::new(
+            "wire-parity",
+            proto_path,
+            1,
+            "could not extract any op names from `fn name` — the extraction anchor \
+             moved; update analysis/rules.rs"
+                .to_string(),
+        ));
+    }
+    if errs.is_empty() {
+        out.push(Finding::new(
+            "wire-parity",
+            proto_path,
+            1,
+            "could not extract any error slugs from `fn code` — the extraction \
+             anchor moved; update analysis/rules.rs"
+                .to_string(),
+        ));
+    }
+    for (marker, rust_side) in [("WIRE_OPS", &ops), ("ERROR_CODES", &errs)] {
+        check_registry(marker, rust_side, proto_path, client_path, client_src, &mut out);
+    }
+    out
+}
+
+fn check_registry(
+    marker: &str,
+    rust_side: &[(String, u32)],
+    proto_path: &str,
+    client_path: &str,
+    client_src: &str,
+    out: &mut Vec<Finding>,
+) {
+    let Some((py_set, py_line)) = py_registry(client_src, marker) else {
+        out.push(Finding::new(
+            "wire-parity",
+            client_path,
+            1,
+            format!("client defines no `{marker} = frozenset({{…}})` registry"),
+        ));
+        return;
+    };
+    let rust_set: BTreeSet<&str> = rust_side.iter().map(|(s, _)| s.as_str()).collect();
+    for (slug, line) in rust_side {
+        if !py_set.contains(slug) {
+            out.push(Finding::new(
+                "wire-parity",
+                proto_path,
+                *line,
+                format!("`{slug}` is on the Rust wire but missing from {marker} in {client_path}"),
+            ));
+        }
+    }
+    for slug in &py_set {
+        if !rust_set.contains(slug.as_str()) {
+            out.push(Finding::new(
+                "wire-parity",
+                client_path,
+                py_line,
+                format!("`{slug}` is in {marker} but the Rust protocol never speaks it"),
+            ));
+        }
+    }
+}
+
+/// String literals (with lines) inside the body of `fn <name>`,
+/// skipping `#[cfg(test)]` regions.
+fn fn_body_strings(toks: &[Tok], name: &str) -> Vec<(String, u32)> {
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test || !t.is_ident("fn") || !ident_at(toks, i + 1, name) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') {
+            j += 1;
+        }
+        if j >= toks.len() {
+            return Vec::new();
+        }
+        let close = match_close(toks, j, '{', '}');
+        return toks[j..=close]
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| (t.text.clone(), t.line))
+            .collect();
+    }
+    Vec::new()
+}
+
+/// The string members of `MARKER = frozenset({ "…", … })` in Python
+/// source, plus the registry's line.
+fn py_registry(src: &str, marker: &str) -> Option<(BTreeSet<String>, u32)> {
+    let needle = format!("{marker} = frozenset(");
+    let idx = src.find(&needle)?;
+    let line = (src[..idx].matches('\n').count() + 1) as u32;
+    let mut set = BTreeSet::new();
+    let mut cur: Option<String> = None;
+    for c in src[idx + needle.len()..].chars() {
+        match (&mut cur, c) {
+            (Some(s), '"') => {
+                set.insert(std::mem::take(s));
+                cur = None;
+            }
+            (Some(s), _) => s.push(c),
+            (None, '"') => cur = Some(String::new()),
+            (None, '}') => break,
+            (None, _) => {}
+        }
+    }
+    Some((set, line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, zone: Zone, src: &str) -> Vec<Finding> {
+        scan_tokens(rel, zone, &lex(src).toks)
+    }
+
+    #[test]
+    fn poison_propagation_is_allowed() {
+        let src = "fn f(&self) { let q = self.q.lock().expect(\"lock\"); \
+                   let (g, r) = self.cv.wait_timeout_while(q, t, |q| q.is_empty())\
+                   .expect(\"wait\"); }";
+        assert!(scan("server/batcher.rs", Zone::Core, src).is_empty());
+    }
+
+    #[test]
+    fn plain_expect_on_server_path_fires() {
+        let f = scan("server/engine.rs", Zone::Core, "fn f() { x.expect(\"boom\"); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "panic-on-wire");
+    }
+
+    #[test]
+    fn partial_ord_impl_is_not_a_call_site() {
+        let src = "impl PartialOrd for E { fn partial_cmp(&self, o: &Self) -> \
+                   Option<Ordering> { Some(self.cmp(o)) } }";
+        assert!(scan("lifecycle/timeline.rs", Zone::Core, src).is_empty());
+    }
+
+    #[test]
+    fn wire_parity_agrees_and_drifts() {
+        let proto = r#"
+            impl WireOp { pub fn name(&self) -> &'static str { match self {
+                WireOp::Submit(_) => "submit", WireOp::Query { .. } => "query",
+            } } }
+            impl WireError { pub fn code(&self) -> &'static str { match self {
+                WireError::BadJson(_) => "bad-json",
+            } } }
+        "#;
+        let client_ok = "WIRE_OPS = frozenset({\"submit\", \"query\"})\n\
+                         ERROR_CODES = frozenset({\"bad-json\"})\n";
+        assert!(wire_parity("p.rs", proto, "c.py", client_ok).is_empty());
+        let client_drift = "WIRE_OPS = frozenset({\"submit\", \"vanished\"})\n\
+                            ERROR_CODES = frozenset({\"bad-json\"})\n";
+        let f = wire_parity("p.rs", proto, "c.py", client_drift);
+        assert_eq!(f.len(), 2, "{f:?}"); // query missing + vanished extra
+        assert!(f.iter().all(|x| x.rule == "wire-parity"));
+    }
+}

@@ -1,0 +1,151 @@
+//! The determinism-zone manifest.
+//!
+//! Every file under `rust/src` maps to exactly one zone; a file that
+//! matches no manifest entry is itself a finding (`no-zone`), so new
+//! modules cannot silently escape analysis — adding a file forces an
+//! explicit placement decision here.
+//!
+//! * **Core** — the byte-identity boundary: everything whose outputs
+//!   must be reproducible across runs and thread counts (solver,
+//!   optimizer, portfolio, cluster state, lifecycle, autoscaler, and
+//!   the server's batcher/engine/journal/protocol). Wall clocks,
+//!   hash-ordered containers, and telemetry *reads* are forbidden here
+//!   without a reasoned waiver.
+//! * **Periphery** — observers and drivers around the core (telemetry
+//!   itself, the experiment harness, the load generator, the bench
+//!   harness). May read clocks; still subject to the universal rules
+//!   (e.g. `float-order`).
+//! * **Exempt** — everything else: legacy scheduler re-implementation,
+//!   simulator, metrics, workload generation, runtime, utilities, CLI,
+//!   and this analysis pass. Universal rules still apply.
+
+/// Which determinism contract a file lives under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Zone {
+    Core,
+    Periphery,
+    Exempt,
+}
+
+impl Zone {
+    pub fn name(self) -> &'static str {
+        match self {
+            Zone::Core => "core",
+            Zone::Periphery => "periphery",
+            Zone::Exempt => "exempt",
+        }
+    }
+}
+
+/// Directories (top-level under `rust/src`) in the deterministic core.
+pub const CORE_DIRS: &[&str] = &[
+    "autoscaler",
+    "cluster",
+    "lifecycle",
+    "optimizer",
+    "portfolio",
+    "solver",
+];
+
+/// Individual core files (the server splits across zones: the wire
+/// protocol, batcher, engine, and journal are inside the byte-identity
+/// boundary; the accept loop and load generator are not).
+pub const CORE_FILES: &[&str] = &[
+    "server/batcher.rs",
+    "server/engine.rs",
+    "server/journal.rs",
+    "server/protocol.rs",
+];
+
+/// Periphery directories: observers and experiment drivers.
+pub const PERIPHERY_DIRS: &[&str] = &["harness", "telemetry"];
+
+/// Periphery files carved out of otherwise-exempt (or core) parents.
+pub const PERIPHERY_FILES: &[&str] = &["server/loadgen.rs", "util/bench.rs"];
+
+/// Exempt directories (universal rules still apply).
+pub const EXEMPT_DIRS: &[&str] = &[
+    "analysis",
+    "metrics",
+    "runtime",
+    "scheduler",
+    "simulator",
+    "util",
+    "workload",
+];
+
+/// Exempt files at the tree root / in split directories.
+pub const EXEMPT_FILES: &[&str] = &["lib.rs", "main.rs", "server/mod.rs"];
+
+/// Zone of a file given its path relative to the source root (e.g.
+/// `solver/search.rs`). Exact file entries win over directory entries
+/// (`util/bench.rs` is periphery although `util/` is exempt). `None`
+/// means the manifest has no opinion — report it, don't guess.
+pub fn zone_of(rel: &str) -> Option<Zone> {
+    for (files, zone) in [
+        (CORE_FILES, Zone::Core),
+        (PERIPHERY_FILES, Zone::Periphery),
+        (EXEMPT_FILES, Zone::Exempt),
+    ] {
+        if files.contains(&rel) {
+            return Some(zone);
+        }
+    }
+    let (dir, rest) = rel.split_once('/')?;
+    if rest.is_empty() {
+        return None;
+    }
+    for (dirs, zone) in [
+        (CORE_DIRS, Zone::Core),
+        (PERIPHERY_DIRS, Zone::Periphery),
+        (EXEMPT_DIRS, Zone::Exempt),
+    ] {
+        if dirs.contains(&dir) {
+            return Some(zone);
+        }
+    }
+    None
+}
+
+/// Source-root-relative path of `path`: the suffix after the last
+/// `src/` component. Paths with no `src/` component pass through
+/// unchanged (fixture snippets hand relative paths in directly).
+pub fn rel_from(path: &str) -> String {
+    if let Some(idx) = path.rfind("/src/") {
+        return path[idx + "/src/".len()..].to_string();
+    }
+    if let Some(rest) = path.strip_prefix("src/") {
+        return rest.to_string();
+    }
+    path.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_spot_checks() {
+        assert_eq!(zone_of("solver/search.rs"), Some(Zone::Core));
+        assert_eq!(zone_of("server/engine.rs"), Some(Zone::Core));
+        assert_eq!(zone_of("server/mod.rs"), Some(Zone::Exempt));
+        assert_eq!(zone_of("server/loadgen.rs"), Some(Zone::Periphery));
+        assert_eq!(zone_of("util/bench.rs"), Some(Zone::Periphery));
+        assert_eq!(zone_of("util/stats.rs"), Some(Zone::Exempt));
+        assert_eq!(zone_of("telemetry/clock.rs"), Some(Zone::Periphery));
+        assert_eq!(zone_of("main.rs"), Some(Zone::Exempt));
+    }
+
+    #[test]
+    fn unknown_files_have_no_zone() {
+        assert_eq!(zone_of("brand_new_dir/x.rs"), None);
+        assert_eq!(zone_of("stray.rs"), None);
+    }
+
+    #[test]
+    fn rel_path_extraction() {
+        assert_eq!(rel_from("rust/src/solver/search.rs"), "solver/search.rs");
+        assert_eq!(rel_from("/root/repo/rust/src/lib.rs"), "lib.rs");
+        assert_eq!(rel_from("solver/search.rs"), "solver/search.rs");
+    }
+}

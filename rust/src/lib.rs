@@ -54,7 +54,12 @@
 //!                   admission windows over newline-JSON TCP, seq-ordered
 //!                   deterministic replies, graceful drain) and its
 //!                   closed-loop load generator (`serve-bench`).
+//! * [`analysis`]  — detlint, the self-hosted determinism-boundary
+//!                   static pass: a token-level lexer, the zone
+//!                   manifest, rule set, and the Rust ⇄ Python
+//!                   wire-parity drift check, behind `kube-packd lint`.
 
+pub mod analysis;
 pub mod autoscaler;
 pub mod cluster;
 pub mod harness;

@@ -20,6 +20,7 @@
 
 use std::time::Duration;
 
+use kube_packd::analysis;
 use kube_packd::autoscaler::{AutoscaleConfig, NodePool};
 use kube_packd::cluster::{identical_nodes, ClusterState, Pod, PodId, Priority, Resources};
 use kube_packd::harness::figures;
@@ -56,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => serve(&args),
         Some("serve-bench") => serve_bench(&args),
         Some("journal") => journal(&args),
+        Some("lint") => lint(&args),
         Some("fig3") => figure(&args, "fig3"),
         Some("fig4") => figure(&args, "fig4"),
         Some("table1") => figure(&args, "table1"),
@@ -141,6 +143,16 @@ COMMANDS
                            window-close journal (flight-recorder replay)
       --addr HOST:PORT (default 127.0.0.1:7878)
       --since N (default 0) --limit N (page size, default 64) --json
+  lint [PATH]              detlint: determinism-boundary static analysis
+                           over the Rust tree (default PATH rust/src).
+                           Zone manifest + rules wall-clock, hash-iter,
+                           float-order, panic-on-wire, telemetry-feedback
+                           and the Rust<->Python wire-parity drift check;
+                           waivers need an inline
+                           `// detlint: allow(<rule>) — <reason>`.
+                           Exits nonzero on any unwaived finding (the CI
+                           gate). See README \"Static analysis\".
+      --json FILE          machine-readable findings report
   serve-bench              closed-loop load generator: spawns a daemon on
                            loopback, drives seeded churn admissions, and
                            emits sustained admissions/sec + p50/p95/p99
@@ -773,6 +785,23 @@ fn journal(args: &Args) -> anyhow::Result<()> {
         since = next;
     }
     eprintln!("{total} window(s) printed");
+    Ok(())
+}
+
+/// `kube-packd lint [PATH]`: the detlint determinism-boundary static
+/// pass (see `kube_packd::analysis`). Exits 1 on any unwaived finding
+/// so CI can use it as a blocking gate.
+fn lint(args: &Args) -> anyhow::Result<()> {
+    let root = args.positional.first().map_or("rust/src", String::as_str);
+    let report = analysis::lint_tree(std::path::Path::new(root))?;
+    print!("{}", report.render_human());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        eprintln!("machine report written to {path}");
+    }
+    if !report.clean() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

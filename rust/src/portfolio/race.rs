@@ -137,6 +137,8 @@ pub(crate) fn run_race(
                     sp.arg("component", c);
                 }
                 sp.arg("rank", task.rank);
+                // detlint: allow(wall-clock) — per-strategy latency histogram
+                // stamp: pure observability, placement bytes unaffected.
                 let started = std::time::Instant::now();
                 let sol = solve_max_with(
                     task.model,

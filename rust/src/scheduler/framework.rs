@@ -271,15 +271,15 @@ impl Framework {
 
     /// Select the winning node: highest score, ties broken by lowest
     /// `NodeId` — i.e. lexicographically smallest node name (the paper's
-    /// determinism plugin).
+    /// determinism plugin). `total_cmp` keeps the selection total and
+    /// panic-free even if a scoring plugin ever emits NaN (which then
+    /// ranks above every finite score — deterministically).
     pub fn select_host(scores: &[(NodeId, f64)]) -> Option<NodeId> {
         scores
             .iter()
             .copied()
             .max_by(|(na, sa), (nb, sb)| {
-                sa.partial_cmp(sb)
-                    .unwrap()
-                    .then_with(|| nb.cmp(na)) // lower id wins on tie
+                sa.total_cmp(sb).then_with(|| nb.cmp(na)) // lower id wins on tie
             })
             .map(|(n, _)| n)
     }
@@ -316,6 +316,21 @@ mod tests {
         ];
         assert_eq!(Framework::select_host(&scores), Some(NodeId(0)));
         assert_eq!(Framework::select_host(&[]), None);
+    }
+
+    #[test]
+    fn select_host_survives_nan_scores() {
+        // The NaN family PR 4 fixed in util/stats.rs, applied to the
+        // tie-break: a NaN score must never panic the scheduling cycle.
+        // Under total_cmp, NaN ranks above every finite score, and the
+        // winner is independent of input order.
+        let scores = [(NodeId(7), f64::NAN), (NodeId(3), 1.5)];
+        assert_eq!(Framework::select_host(&scores), Some(NodeId(7)));
+        let flipped = [(NodeId(3), 1.5), (NodeId(7), f64::NAN)];
+        assert_eq!(Framework::select_host(&flipped), Some(NodeId(7)));
+        // NaN-NaN ties break like any tie: lowest node id wins.
+        let ties = [(NodeId(9), f64::NAN), (NodeId(2), f64::NAN)];
+        assert_eq!(Framework::select_host(&ties), Some(NodeId(2)));
     }
 
     #[test]

@@ -268,11 +268,15 @@ impl Engine {
             WireOp::Metrics => {
                 let mut o = self.base("metrics", seq, tag);
                 o.set("content_type", "text/plain; version=0.0.4")
+                    // detlint: allow(telemetry-feedback) — export endpoint:
+                    // the bytes leave on the wire, never steer placement.
                     .set("body", self.tel.export_prometheus());
                 Some(o)
             }
             WireOp::TraceExport => {
                 let mut o = self.base("trace_export", seq, tag);
+                // detlint: allow(telemetry-feedback) — export endpoint:
+                // the bytes leave on the wire, never steer placement.
                 o.set("body", self.tel.export_chrome());
                 Some(o)
             }
@@ -302,6 +306,8 @@ impl Engine {
         let sp = self.tel.span("serve_window");
         sp.arg("window", self.windows);
         sp.arg("submits", submits.len());
+        // detlint: allow(wall-clock) — window-solve latency stopwatch:
+        // feeds the histograms only, never the solve.
         let started = Instant::now();
         let report = if self.state.pending_pods().is_empty() {
             None
@@ -477,6 +483,8 @@ impl Engine {
             tag,
             rs_name: rs.name,
             pods,
+            // detlint: allow(wall-clock) — admission-latency stamp
+            // (histogram observability only)
             arrived: Instant::now(),
         });
         None
@@ -495,6 +503,8 @@ impl Engine {
             o.set("deleted", false).set("reason", "retired");
             return o;
         }
+        // detlint: allow(panic-on-wire) — unreachable: the is_retired
+        // guard above already filtered dead pods.
         let node = self.state.terminate(id).expect("live pod terminates");
         o.set("deleted", true);
         match node {
@@ -525,9 +535,11 @@ impl Engine {
                 self.state.join_node_from(&p.node_template_with_capacity(capacity))
             }
             None => {
-                // The protocol layer guarantees both are present.
                 let capacity = Resources::new(
+                    // detlint: allow(panic-on-wire) — the protocol layer
+                    // guarantees presence when no pool is named.
                     cpu_milli.expect("validated cpu"),
+                    // detlint: allow(panic-on-wire) — same guarantee
                     ram_mib.expect("validated ram"),
                 );
                 self.state.join_node(capacity)
@@ -646,6 +658,8 @@ impl Engine {
         if !self.tel.enabled() {
             return Json::Null;
         }
+        // detlint: allow(telemetry-feedback) — opt-in latency summary:
+        // explicitly non-canonical, reply-only, never read by the engine.
         let hists = self.tel.histograms();
         let mut o = Json::obj();
         for (key, metric) in [

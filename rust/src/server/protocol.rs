@@ -692,6 +692,8 @@ pub fn trace_to_windows(trace: &ChurnTrace) -> Vec<(u64, Vec<WireOp>)> {
                      next_ord: &mut BTreeMap<u32, u32>,
                      live: &mut BTreeMap<u32, Vec<Replica>>,
                      completions: &mut BTreeMap<u64, Vec<(u64, String)>>| {
+        // detlint: allow(panic-on-wire) — offline trace expansion, not a
+        // connection path; every spawn references a catalogued ReplicaSet.
         let rs = catalog.get(&rs_id).expect("catalogued rs");
         let ord = next_ord.entry(rs_id).or_insert(0);
         let name = format!("{}-{}", rs.name, *ord);

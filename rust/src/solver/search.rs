@@ -187,6 +187,8 @@ pub fn solve_max_with(
     config: &SolverConfig,
     shared: Option<&SharedIncumbent>,
 ) -> Solution {
+    // detlint: allow(wall-clock) — the solve stopwatch and deadline anchor:
+    // the one sanctioned time source for anytime termination.
     let started = Instant::now();
     let mut stats = SearchStats::default();
 
@@ -382,16 +384,12 @@ impl<'a> Searcher<'a> {
             .iter()
             .map(|g| (!hinted_group(g), difficulty(g)))
             .collect();
-        // NaN-free; hinted first, then difficulty desc (or asc under the
+        // Hinted first, then difficulty desc (or asc under the
         // portfolio's `branch_easiest_first` diversification variant).
         order.sort_by(|&a, &b| {
             let (ha, da) = keys[a as usize];
             let (hb, db) = keys[b as usize];
-            let by_difficulty = if config.branch_easiest_first {
-                da.partial_cmp(&db).unwrap()
-            } else {
-                db.partial_cmp(&da).unwrap()
-            };
+            let by_difficulty = key_order(da, db, config.branch_easiest_first);
             ha.cmp(&hb).then(by_difficulty).then(a.cmp(&b))
         });
         drop(keys);
@@ -474,6 +472,7 @@ impl<'a> Searcher<'a> {
             // First poll early (rate calibration + tiny-window safety);
             // the adaptive schedule takes over from there.
             next_poll: config.check_interval.clamp(1, MIN_POLL_INTERVAL),
+            // detlint: allow(wall-clock) — deadline-poll rate calibration anchor
             last_poll: Instant::now(),
             last_poll_decisions: 0,
             conflicts: 0,
@@ -641,6 +640,7 @@ impl<'a> Searcher<'a> {
             }
             self.floor = self.floor.max(shared.floor());
         }
+        // detlint: allow(wall-clock) — the adaptive deadline poll itself
         let now = Instant::now();
         let remaining = self.deadline.remaining_from(now);
         if remaining.is_zero() {
@@ -764,7 +764,7 @@ impl<'a> Searcher<'a> {
                 .iter()
                 .map(|&v| (!hinted(v), self.best_fit_key(v), v))
                 .collect();
-            keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()).then(a.2.cmp(&b.2)));
+            keyed.sort_by(|a, b| a.0.cmp(&b.0).then(key_order(a.1, b.1, true)).then(a.2.cmp(&b.2)));
             cands = keyed.into_iter().map(|(_, _, v)| v).collect();
         } else if self.config.use_hints {
             cands.sort_by_key(|&v| (!hinted(v), v));
@@ -843,12 +843,53 @@ impl<'a> Searcher<'a> {
     }
 }
 
+/// Total order over float branching keys: ascending when `ascending`,
+/// descending otherwise. `f64::total_cmp`, not `partial_cmp().unwrap()`:
+/// a NaN key — impossible today, every difficulty/best-fit denominator
+/// is clamped ≥ 1 — would still yield one deterministic branching order
+/// instead of a panic mid-search (the NaN family PR 4 fixed in
+/// `util/stats.rs`).
+fn key_order(a: f64, b: f64, ascending: bool) -> std::cmp::Ordering {
+    if ascending {
+        a.total_cmp(&b)
+    } else {
+        b.total_cmp(&a)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn cfg() -> SolverConfig {
         SolverConfig::default()
+    }
+
+    #[test]
+    fn branching_key_order_is_total_under_nan() {
+        use std::cmp::Ordering::{Equal, Greater, Less};
+        // Ascending: NaN ranks above every finite/infinite value.
+        assert_eq!(key_order(f64::NAN, f64::INFINITY, true), Greater);
+        assert_eq!(key_order(1.0, f64::NAN, true), Less);
+        assert_eq!(key_order(f64::NAN, f64::NAN, true), Equal);
+        // Descending flips consistently.
+        assert_eq!(key_order(f64::NAN, 1.0, false), Less);
+        assert_eq!(key_order(2.0, 1.0, false), Less);
+        assert_eq!(key_order(1.0, 2.0, false), Greater);
+    }
+
+    #[test]
+    fn nan_keys_sort_without_panicking() {
+        // The regression PR 4's stats.rs fix guards against, applied to
+        // the branching comparators: a NaN among the keys must produce
+        // a deterministic order, never a panic.
+        let mut keys = vec![1.0, f64::NAN, 0.5, f64::INFINITY, -0.0, 0.0, f64::NAN];
+        keys.sort_by(|a, b| key_order(*a, *b, true));
+        assert_eq!(keys[0], -0.0);
+        assert!(keys[5].is_nan() && keys[6].is_nan());
+        keys.sort_by(|a, b| key_order(*a, *b, false));
+        assert!(keys[0].is_nan() && keys[1].is_nan());
+        assert_eq!(keys[6], -0.0);
     }
 
     /// max x + y + z  s.t.  x+y<=1  → 2

@@ -1,0 +1,278 @@
+//! Fixture corpus for the detlint static pass (`kube_packd::analysis`).
+//!
+//! Per rule: one snippet that must fire and one clean twin that must
+//! not; plus the directive lifecycle (honored with a reason, rejected
+//! without), the zone-manifest totality pin (every file under
+//! `rust/src` maps to exactly one zone — new files can't silently
+//! escape analysis), the wire-parity drift fixtures, and the
+//! acceptance gate itself: the committed tree lints clean.
+
+use std::path::{Path, PathBuf};
+
+use kube_packd::analysis::{lint_tree, rules, scan_source, zones};
+
+/// Rule slugs fired by a snippet placed at `rel`.
+fn fired(rel: &str, src: &str) -> Vec<&'static str> {
+    scan_source(rel, src).findings.iter().map(|f| f.rule).collect()
+}
+
+// -- wall-clock -------------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_in_core() {
+    let f = fired("solver/x.rs", "fn f() { let t = Instant::now(); }");
+    assert_eq!(f, vec!["wall-clock"]);
+    let f = fired("cluster/x.rs", "fn f() -> SystemTime { SystemTime::now() }");
+    assert!(f.contains(&"wall-clock"), "{f:?}");
+}
+
+#[test]
+fn wall_clock_clean_twins() {
+    // Periphery may read clocks…
+    assert!(fired("telemetry/x.rs", "fn f() { let t = Instant::now(); }").is_empty());
+    // …and deadline-based core code never touches Instant::now.
+    let clean = "fn f(d: Deadline) -> bool { d.expired() }";
+    assert!(fired("solver/x.rs", clean).is_empty());
+    // Mentions in comments and strings don't count.
+    let hidden = "// Instant::now()\nfn f() { let s = \"Instant::now()\"; }";
+    assert!(fired("solver/x.rs", hidden).is_empty());
+}
+
+// -- hash-iter --------------------------------------------------------------
+
+#[test]
+fn hash_iter_fires_in_core() {
+    let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = \
+               HashMap::new(); }";
+    let f = fired("optimizer/x.rs", src);
+    assert!(f.iter().all(|r| *r == "hash-iter"), "{f:?}");
+    assert!(!f.is_empty());
+}
+
+#[test]
+fn hash_iter_clean_twin() {
+    let src = "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32> = \
+               BTreeMap::new(); }";
+    assert!(fired("optimizer/x.rs", src).is_empty());
+    // Exempt zones may hash.
+    let hashed = "use std::collections::HashMap;\nfn f() {}";
+    assert!(fired("metrics/x.rs", hashed).is_empty());
+}
+
+// -- float-order ------------------------------------------------------------
+
+#[test]
+fn float_order_fires_in_every_zone() {
+    let src = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+    // Exempt zone: the rule is universal (NaN panics are bad everywhere).
+    let f = fired("scheduler/x.rs", src);
+    assert_eq!(f, vec!["float-order"]);
+}
+
+#[test]
+fn float_order_catches_soft_fallbacks_too() {
+    // `unwrap_or(Equal)` avoids the panic but silently breaks sort
+    // totality under NaN: still a finding.
+    let src = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| \
+               a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)); }";
+    assert_eq!(fired("scheduler/x.rs", src), vec!["float-order"]);
+}
+
+#[test]
+fn float_order_clean_twins() {
+    let total = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }";
+    assert!(fired("scheduler/x.rs", total).is_empty());
+    // A PartialOrd impl is a definition, not a call site.
+    let ord_impl = "impl PartialOrd for E { fn partial_cmp(&self, o: &Self) -> \
+                    Option<Ordering> { Some(self.cmp(o)) } }";
+    assert!(fired("lifecycle/x.rs", ord_impl).is_empty());
+    // Integer comparators are untouched.
+    let ints = "fn f(v: &mut Vec<i64>) { v.sort_by(|a, b| b.cmp(a)); }";
+    assert!(fired("solver/x.rs", ints).is_empty());
+}
+
+// -- panic-on-wire ----------------------------------------------------------
+
+#[test]
+fn panic_on_wire_fires_on_server_paths() {
+    let f = fired("server/engine.rs", "fn f(x: Option<u32>) { x.unwrap(); }");
+    assert_eq!(f, vec!["panic-on-wire"]);
+    let f = fired("server/protocol.rs", "fn f() { panic!(\"boom\") }");
+    assert_eq!(f, vec!["panic-on-wire"]);
+}
+
+#[test]
+fn panic_on_wire_clean_twins() {
+    // Lock poisoning propagation is structurally allowed…
+    let poison = "fn f(&self) { let q = self.q.lock().expect(\"poisoned\"); }";
+    assert!(fired("server/batcher.rs", poison).is_empty());
+    // …the load generator is out of scope…
+    let loadgen = "fn f(x: Option<u32>) { x.unwrap(); }";
+    assert!(fired("server/loadgen.rs", loadgen).is_empty());
+    // …and so is non-server code (other rules permitting).
+    assert!(fired("workload/x.rs", loadgen).is_empty());
+}
+
+#[test]
+fn panic_on_wire_skips_test_modules() {
+    let src = "fn live() -> bool { true }\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+               fn t() { panic!(\"fixtures may panic\") }\n}\n";
+    assert!(fired("server/engine.rs", src).is_empty());
+}
+
+// -- telemetry-feedback -----------------------------------------------------
+
+#[test]
+fn telemetry_feedback_fires_in_core() {
+    let src = "fn f(&self) { let m = self.tel.export_prometheus(); }";
+    assert_eq!(fired("solver/x.rs", src), vec!["telemetry-feedback"]);
+    let src = "fn f(&self) { if self.tel.span_count() > 0 { tighten(); } }";
+    assert_eq!(fired("portfolio/x.rs", src), vec!["telemetry-feedback"]);
+}
+
+#[test]
+fn telemetry_feedback_clean_twins() {
+    // Write-path APIs stay legal in the core…
+    let writes = "fn f(&self) { let sp = self.tel.span(\"solve\"); sp.arg(\"n\", 1); }";
+    assert!(fired("solver/x.rs", writes).is_empty());
+    // …and reads are fine outside it (the exporter CLI, telemetry itself).
+    let reads = "fn f(&self) { let m = self.tel.export_prometheus(); }";
+    assert!(fired("telemetry/x.rs", reads).is_empty());
+    assert!(fired("server/mod.rs", reads).is_empty());
+}
+
+// -- directives -------------------------------------------------------------
+
+#[test]
+fn directive_with_reason_is_honored() {
+    let src = "fn f() { let t = Instant::now(); // detlint: allow(wall-clock) — anchor\n}";
+    let r = scan_source("solver/x.rs", src);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.waived, 1);
+}
+
+#[test]
+fn standalone_directive_covers_next_line() {
+    let src = "// detlint: allow(wall-clock) — calibration anchor\n\
+               fn f() { let t = Instant::now(); }\n";
+    let r = scan_source("solver/x.rs", src);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.waived, 1);
+}
+
+#[test]
+fn directive_without_reason_is_rejected() {
+    let src = "fn f() { let t = Instant::now(); // detlint: allow(wall-clock)\n}";
+    let r = scan_source("solver/x.rs", src);
+    let rules: Vec<&str> = r.findings.iter().map(|f| f.rule).collect();
+    // The waiver is void (the wall-clock finding stays) and the
+    // directive itself is a finding.
+    assert!(rules.contains(&"wall-clock"), "{rules:?}");
+    assert!(rules.contains(&"bad-directive"), "{rules:?}");
+    assert_eq!(r.waived, 0);
+}
+
+#[test]
+fn directive_with_unknown_rule_is_rejected() {
+    let src = "// detlint: allow(wall-clok) — typo\nfn f() { let t = Instant::now(); }";
+    let r = scan_source("solver/x.rs", src);
+    let rules: Vec<&str> = r.findings.iter().map(|f| f.rule).collect();
+    assert!(rules.contains(&"bad-directive"), "{rules:?}");
+    assert!(rules.contains(&"wall-clock"), "{rules:?}");
+}
+
+// -- zone manifest ----------------------------------------------------------
+
+#[test]
+fn every_src_file_maps_to_exactly_one_zone() {
+    let mut files = Vec::new();
+    walk(Path::new("rust/src"), &mut files);
+    assert!(files.len() > 50, "walk found only {} files", files.len());
+    for path in files {
+        let rel = zones::rel_from(&path.to_string_lossy());
+        assert!(
+            zones::zone_of(&rel).is_some(),
+            "{rel} matches no zone-manifest entry — place it in analysis/zones.rs"
+        );
+    }
+}
+
+#[test]
+fn unzoned_files_are_findings() {
+    let r = scan_source("freshly_added/module.rs", "fn f() {}");
+    assert_eq!(r.findings.len(), 1);
+    assert_eq!(r.findings[0].rule, "no-zone");
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("readable source tree") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            walk(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+// -- wire-parity ------------------------------------------------------------
+
+const PROTO_FIXTURE: &str = r#"
+    impl WireOp {
+        pub fn name(&self) -> &'static str {
+            match self {
+                WireOp::Submit(_) => "submit",
+                WireOp::Query { .. } => "query",
+            }
+        }
+    }
+    impl WireError {
+        pub fn code(&self) -> &'static str {
+            match self {
+                WireError::BadJson(_) => "bad-json",
+            }
+        }
+    }
+"#;
+
+#[test]
+fn wire_parity_accepts_matching_registries() {
+    let client = "WIRE_OPS = frozenset({\"submit\", \"query\"})\n\
+                  ERROR_CODES = frozenset({\"bad-json\"})\n";
+    assert!(rules::wire_parity("p.rs", PROTO_FIXTURE, "c.py", client).is_empty());
+}
+
+#[test]
+fn wire_parity_flags_drift_in_both_directions() {
+    // `query` dropped from the client, `phantom` invented there.
+    let client = "WIRE_OPS = frozenset({\"submit\", \"phantom\"})\n\
+                  ERROR_CODES = frozenset({\"bad-json\"})\n";
+    let f = rules::wire_parity("p.rs", PROTO_FIXTURE, "c.py", client);
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("`query`") && x.path == "p.rs"));
+    assert!(f.iter().any(|x| x.msg.contains("`phantom`") && x.path == "c.py"));
+}
+
+#[test]
+fn wire_parity_flags_a_missing_registry() {
+    let f = rules::wire_parity("p.rs", PROTO_FIXTURE, "c.py", "# no registries here\n");
+    assert_eq!(f.len(), 2, "{f:?}"); // WIRE_OPS and ERROR_CODES both absent
+    assert!(f.iter().all(|x| x.rule == "wire-parity"));
+}
+
+// -- the acceptance gate ----------------------------------------------------
+
+#[test]
+fn committed_tree_lints_clean() {
+    // The same invariant CI enforces with `kube-packd lint rust/src`:
+    // every remaining violation in the tree carries a reasoned waiver,
+    // and the Python client's registries match the Rust wire protocol.
+    let report = lint_tree(Path::new("rust/src")).expect("lint runs");
+    assert!(
+        report.clean(),
+        "unwaived findings on the committed tree:\n{}",
+        report.render_human()
+    );
+    assert!(report.waived > 0, "the known waiver sites disappeared?");
+    assert!(report.files > 50, "scanned only {} files", report.files);
+}
