@@ -1,0 +1,133 @@
+//! Bench: solve-forensics overhead — the full optimiser on the same
+//! instances with the probe off and armed. Arming must be close to
+//! free (it only counts work the search already does), and the armed
+//! pass additionally reports the attributed-effort ledger: how many
+//! conflicts/propagations landed on a provenance slug, gap-timeline
+//! samples, and folded-stack lines per scenario.
+//!
+//! Emits machine-readable `BENCH_forensics.json` in the working
+//! directory: one cell per scenario with off/armed timings and the
+//! attribution totals — the seed of the forensics trajectory.
+
+use std::time::Duration;
+
+use kube_packd::cluster::ClusterState;
+use kube_packd::optimizer::algorithm::{optimize, optimize_probed, OptimizerConfig};
+use kube_packd::simulator::KwokSimulator;
+use kube_packd::solver::Probe;
+use kube_packd::telemetry::Telemetry;
+use kube_packd::util::bench::{black_box, Bencher};
+use kube_packd::util::json::Json;
+use kube_packd::workload::{ConstraintProfile, GenParams, Instance};
+
+fn main() {
+    let b = Bencher::new(0, 3, Duration::from_secs(45));
+    let timeout_s = 1.0; // the paper's headline window
+    let scenarios = [
+        ("plain", ConstraintProfile::None),
+        ("taints", ConstraintProfile::Taints),
+        ("mixed", ConstraintProfile::Mixed),
+    ];
+
+    let mut cells: Vec<Json> = Vec::new();
+    for (name, profile) in scenarios {
+        let insts = Instance::generate_challenging_constrained(
+            GenParams {
+                nodes: 8,
+                pods_per_node: 4,
+                priority_tiers: 2,
+                usage: 1.0,
+            },
+            2,
+            0xF04E,
+            300,
+            profile,
+        );
+        if insts.is_empty() {
+            println!("scenario {name}: no challenging instances; skipped");
+            continue;
+        }
+        let states: Vec<(u32, ClusterState)> = insts
+            .iter()
+            .map(|inst| {
+                let mut sim = KwokSimulator::new(inst.params.p_max());
+                let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+                (inst.params.p_max(), state)
+            })
+            .collect();
+
+        let cfg = OptimizerConfig::with_timeout(timeout_s);
+        let m_off = b.run(&format!("forensics/{name}-off"), || {
+            for (p_max, state) in &states {
+                black_box(optimize(state, *p_max, &cfg));
+            }
+        });
+
+        // Armed pass: fresh probe per instance (the serve daemon's
+        // per-window discipline); the ledger is summed across them.
+        let mut effort: Vec<(String, &'static str, u64)> = Vec::new();
+        let mut gap_samples = 0usize;
+        let mut folded_lines = 0usize;
+        let m_armed = b.run(&format!("forensics/{name}-armed"), || {
+            effort.clear();
+            gap_samples = 0;
+            folded_lines = 0;
+            for (p_max, state) in &states {
+                let prof = Probe::armed();
+                black_box(optimize_probed(state, *p_max, &cfg, None, &Telemetry::off(), &prof));
+                for (slug, kind, n) in prof.module_effort() {
+                    match effort.iter().position(|(s, k, _)| *s == slug && *k == kind) {
+                        Some(i) => effort[i].2 += n,
+                        None => effort.push((slug, kind, n)),
+                    }
+                }
+                gap_samples += prof.gap_samples().len();
+                folded_lines += prof.export_folded().lines().count();
+            }
+        });
+
+        let total = |kind: &str| -> u64 {
+            effort.iter().filter(|(_, k, _)| *k == kind).map(|r| r.2).sum()
+        };
+        let conflicts = total("conflicts");
+        let propagations = total("propagations");
+        println!(
+            "  -> module-rows={} conflicts={conflicts} propagations={propagations} \
+             gap-samples={gap_samples} folded-lines={folded_lines}",
+            effort.len()
+        );
+
+        let mut cell = Json::obj();
+        cell.set("scenario", name)
+            .set("instances", states.len())
+            .set("off_mean_s", m_off.mean_s)
+            .set("armed_mean_s", m_armed.mean_s)
+            .set(
+                "overhead_pct",
+                if m_off.mean_s > 0.0 {
+                    (m_armed.mean_s / m_off.mean_s - 1.0) * 100.0
+                } else {
+                    0.0
+                },
+            )
+            .set("module_rows", effort.len())
+            .set("attributed_conflicts", conflicts)
+            .set("attributed_propagations", propagations)
+            .set("gap_samples", gap_samples)
+            .set("folded_lines", folded_lines);
+        cells.push(cell);
+    }
+
+    let mut doc = Json::obj();
+    doc.set("bench", "forensics")
+        .set("schema", 1u64)
+        .set(
+            "host_threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+        .set("timeout_s", timeout_s)
+        .set("cells", Json::Arr(cells));
+    std::fs::write("BENCH_forensics.json", doc.to_string_pretty())
+        .expect("write BENCH_forensics.json");
+    println!("wrote BENCH_forensics.json");
+}

@@ -37,8 +37,14 @@ import sys
 #: slug added on one side only fails CI instead of drifting silently.
 WIRE_OPS = frozenset({
     "submit", "delete", "join", "drain", "remove", "query", "health",
-    "metrics", "trace_export", "journal", "watch", "explain", "shutdown",
+    "metrics", "trace_export", "journal", "watch", "explain", "profile",
+    "shutdown",
 })
+
+#: Schema tag of the solve-forensics document the ``profile`` op (and
+#: ``solve --profile``) emits, mirror of ``PROFILE_SCHEMA`` in
+#: ``rust/src/solver/probe.rs``.
+PROFILE_SCHEMA = "kube-packd/profile/v1"
 
 #: Structured error slugs (``reply["error"]["code"]``), the mirror of
 #: ``WireError::code`` — same wire-parity contract as ``WIRE_OPS``.
@@ -163,6 +169,21 @@ class ServeClient:
             raise RuntimeError(f"explain rejected: {reply['error']}")
         return reply
 
+    def profile(self) -> dict:
+        """Solve forensics of the daemon's most recent solve window:
+        the ``kube-packd/profile/v1`` document (per-constraint-module
+        effort, decision-indexed gap timeline, folded stacks), parsed
+        and schema-checked. The window it profiles rides along under
+        ``"window"`` (``None`` until the first solver invocation)."""
+        reply = self.request("profile")
+        if "error" in reply:
+            raise RuntimeError(f"profile rejected: {reply['error']}")
+        doc = json.loads(reply["body"])
+        if doc.get("schema") != PROFILE_SCHEMA:
+            raise ValueError(f"unexpected profile schema {doc.get('schema')!r}")
+        doc["window"] = reply.get("window")
+        return doc
+
     def close(self) -> None:
         try:
             self._rfile.close()
@@ -215,6 +236,35 @@ def validate_histograms(metrics: str) -> int:
         if sum_name not in scalars:
             raise ValueError(f"missing {sum_name}")
     return len(buckets)
+
+
+def validate_profile(doc: dict) -> int:
+    """Validate a ``kube-packd/profile/v1`` document: the schema tag,
+    well-formed effort/module/gap entries, and the flamegraph.pl folded
+    grammar (``stack;frames count``, every stack rooted at ``solve``).
+    Returns the number of folded lines checked; raises ``ValueError``
+    on any violation."""
+    if doc.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(f"bad profile schema {doc.get('schema')!r}")
+    for key in ("effort", "modules", "gap", "folded"):
+        if not isinstance(doc.get(key), list):
+            raise ValueError(f"profile key {key!r} missing or not an array")
+    for m in doc["modules"]:
+        if not m.get("slug") or not m.get("kind") or int(m["count"]) <= 0:
+            raise ValueError(f"malformed module row {m}")
+    for e in doc["effort"]:
+        if not e.get("context") or not e.get("slug") or int(e["count"]) <= 0:
+            raise ValueError(f"malformed effort row {e}")
+    for s in doc["gap"]:
+        if int(s["bound"]) < int(s["incumbent"]):
+            raise ValueError(f"inadmissible gap sample {s}")
+    for line in doc["folded"]:
+        stack, _, count = line.rpartition(" ")
+        if not stack or not count.isdigit() or int(count) <= 0:
+            raise ValueError(f"malformed folded line {line!r}")
+        if stack.split(";")[0] != "solve":
+            raise ValueError(f"folded stack not rooted at solve: {line!r}")
+    return len(doc["folded"])
 
 
 def run_figure1(client: ServeClient) -> dict:
@@ -287,6 +337,13 @@ def main() -> int:
                 return 1
             print(f"journal replay: {len(journal)} window(s), last certificate "
                   f"{journal[-1]['certificate']!r}")
+            prof = client.profile()
+            nfolded = validate_profile(prof)
+            if prof["window"] is None or not prof["modules"]:
+                print(f"profile carries no solve forensics: {prof}", file=sys.stderr)
+                return 1
+            print(f"profile: window {prof['window']}, {len(prof['modules'])} "
+                  f"module rows, {nfolded} folded lines")
             if args.watch_one:
                 frame = client.next_frame()
                 if frame.get("frame") != "delta":

@@ -11,7 +11,7 @@
 //! | `hash-iter`          | core             | `HashMap` / `HashSet` (iteration order) |
 //! | `float-order`        | every zone       | `partial_cmp().unwrap()`, float sorts without `total_cmp` |
 //! | `panic-on-wire`      | `server/*`       | `unwrap`/`expect`/`panic!` on connection paths |
-//! | `telemetry-feedback` | core             | telemetry read-API calls (observe, never feed back) |
+//! | `telemetry-feedback` | core             | telemetry/probe read-API calls (observe, never feed back) |
 //! | `wire-parity`        | protocol ⇄ client| op/error-slug drift between Rust and Python |
 //! | `bad-directive`      | everywhere       | malformed / reason-less / unknown-rule waivers |
 //! | `no-zone`            | everywhere       | files the zone manifest doesn't place |
@@ -36,11 +36,19 @@ pub const RULES: &[&str] = &[
 /// Telemetry read-API method names: calling any of these outside the
 /// telemetry/periphery zones lets observed data influence behaviour.
 /// (`span`/`add`/`event` are write APIs and stay legal everywhere.)
+/// The solve-forensics [`Probe`](crate::solver::Probe) read/export
+/// surface rides the same contract: the probe records search effort,
+/// and reading it back inside the core would let forensics steer
+/// placement.
 const TELEMETRY_READS: &[&str] = &[
     "export_chrome",
     "export_prometheus",
     "histograms",
     "span_count",
+    "export_profile_json",
+    "export_folded",
+    "module_effort",
+    "gap_samples",
 ];
 
 /// Comparator-taking sort/extremum methods checked by `float-order`.

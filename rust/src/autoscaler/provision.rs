@@ -303,11 +303,13 @@ pub fn plan_provisioning(
     // rather than one `=` row: the at-most-one half is what the search
     // engine detects as a branchable group (pick one bin or none), and
     // the coverage half forces the "one".
+    let from = m.next_constraint_index();
     for row in &x {
         let e = LinearExpr::of(row.iter().flatten().map(|&v| (v, 1)));
         m.add_le(e.clone(), 1);
         m.add_ge(e, 1);
     }
+    m.tag_constraints(from, "placement");
     // Per-bin knapsacks on every demanded dimension.
     for (b, bin) in bins.iter().enumerate() {
         let node = &bin_nodes[b];
@@ -332,9 +334,11 @@ pub fn plan_provisioning(
         }
         if !cpu.terms.is_empty() {
             m.add_le(cpu, free_cpu);
+            m.tag_constraint(m.next_constraint_index() - 1, "capacity:cpu");
         }
         if !ram.terms.is_empty() {
             m.add_le(ram, free_ram);
+            m.tag_constraint(m.next_constraint_index() - 1, "capacity:ram");
         }
         for dim in &dims {
             let cap = match bin {
@@ -363,6 +367,7 @@ pub fn plan_provisioning(
                 e.add(z_of(b), cap);
             }
             m.add_le(e, cap);
+            m.tag_constraint(m.next_constraint_index() - 1, &format!("capacity:{dim}"));
         }
         // A shut-off candidate takes no pods at all (covers zero-request
         // pods the knapsack rows cannot exclude). Coefficient 2 on
@@ -373,16 +378,19 @@ pub fn plan_provisioning(
         // x↔z coupling (the same idiom as the packing model's
         // PodAntiAffinity rows).
         if is_candidate {
+            let from = m.next_constraint_index();
             for row in &x {
                 if let Some(v) = row[b] {
                     m.add_le(LinearExpr::of([(v, 2), (z_of(b), 2)]), 2);
                 }
             }
+            m.tag_constraints(from, "provisioning-coupling");
         }
     }
     // Pairwise anti-affinity among the pending pods on shared bins
     // (coefficient 2 — the same symmetry-safety idiom as the packing
     // model's PodAntiAffinity module).
+    let from = m.next_constraint_index();
     for i in 0..pods.len() {
         for k in i + 1..pods.len() {
             let (a, b) = (state.pod(pods[i]), state.pod(pods[k]));
@@ -396,8 +404,10 @@ pub fn plan_provisioning(
             }
         }
     }
+    m.tag_constraints(from, "anti-affinity");
     // Per-pool prefix symmetry: provisioned candidates are ordinals
     // 0..count (z non-decreasing in the ordinal): z_k − z_{k+1} ≤ 0.
+    let from = m.next_constraint_index();
     for p in 0..pools.len() {
         for k in 0..per_pool_candidates.saturating_sub(1) {
             let a = z[p * per_pool_candidates + k];
@@ -405,6 +415,7 @@ pub fn plan_provisioning(
             m.add_le(LinearExpr::of([(a, 1), (b, -1)]), 0);
         }
     }
+    m.tag_constraints(from, "provisioning-coupling");
     // Warm hint: provision nothing (steers the search toward cheap
     // fleets first; never assumed valid).
     for &zv in &z {

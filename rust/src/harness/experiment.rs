@@ -9,13 +9,13 @@
 
 use crate::metrics::categories::{classify, Outcome};
 use crate::metrics::utilization_delta;
-use crate::optimizer::algorithm::{optimize_traced, OptimizerConfig};
+use crate::optimizer::algorithm::{optimize_probed, OptimizerConfig};
 use crate::optimizer::plan::MovePlan;
 use crate::optimizer::session::SolveSession;
 use crate::optimizer::TierReport;
 use crate::portfolio::{PortfolioConfig, PortfolioStats};
 use crate::simulator::KwokSimulator;
-use crate::solver::SolverConfig;
+use crate::solver::{Probe, SolverConfig};
 use crate::telemetry::{Stopwatch, Telemetry};
 use crate::workload::Instance;
 
@@ -91,6 +91,30 @@ pub fn run_instance_traced(
     session: Option<&mut SolveSession>,
     tel: &Telemetry,
 ) -> InstanceRun {
+    run_instance_probed(
+        inst,
+        timeout_s,
+        solver,
+        portfolio,
+        session,
+        tel,
+        &Probe::off(),
+    )
+}
+
+/// [`run_instance_traced`] with a solve-forensics [`Probe`] (the
+/// `solve --profile` path): the optimiser records per-constraint search
+/// effort and gap timelines onto it. Like telemetry, the probe observes
+/// only — the measurement is byte-identical armed or off.
+pub fn run_instance_probed(
+    inst: &Instance,
+    timeout_s: f64,
+    solver: &SolverConfig,
+    portfolio: &PortfolioConfig,
+    session: Option<&mut SolveSession>,
+    tel: &Telemetry,
+    prof: &Probe,
+) -> InstanceRun {
     let sp = tel.span("instance");
     sp.arg("pods", inst.pods.len());
     sp.arg("nodes", inst.nodes.len());
@@ -129,8 +153,8 @@ pub fn run_instance_traced(
     };
     let sw = Stopwatch::start();
     let result = match session {
-        Some(sess) => sess.solve_traced(&state, p_max, &cfg, tel),
-        None => optimize_traced(&state, p_max, &cfg, None, tel),
+        Some(sess) => sess.solve_probed(&state, p_max, &cfg, tel, prof),
+        None => optimize_probed(&state, p_max, &cfg, None, tel, prof),
     };
     let solver_duration_s = sw.elapsed_secs();
 

@@ -19,6 +19,7 @@ pub mod report;
 
 pub use churn::churn_report;
 pub use experiment::{
-    run_instance, run_instance_session, run_instance_traced, run_instance_with, InstanceRun,
+    run_instance, run_instance_probed, run_instance_session, run_instance_traced,
+    run_instance_with, InstanceRun,
 };
 pub use grid::{CellKey, CellResult, GridConfig};

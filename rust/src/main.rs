@@ -38,7 +38,7 @@ use kube_packd::server::engine::EngineConfig;
 use kube_packd::server::loadgen;
 use kube_packd::server::protocol::{WireOp, WireRequest};
 use kube_packd::server::{ServeConfig, ServeHandle};
-use kube_packd::solver::{SolveStatus, SolverConfig};
+use kube_packd::solver::{Probe, SolveStatus, SolverConfig, PROFILE_SCHEMA};
 use kube_packd::telemetry::{Telemetry, Verbosity};
 use kube_packd::util::cli::Args;
 use kube_packd::util::json::Json;
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         Some("demo") => demo(),
         Some("generate") => generate(&args),
         Some("solve") => solve(&args),
+        Some("profile") => profile_report(&args),
         Some("churn") => churn(&args),
         Some("autoscale") => autoscale(&args),
         Some("serve") => serve(&args),
@@ -95,6 +96,16 @@ COMMANDS
                            (constraint profiles travel with the dataset)
       --dataset FILE --timeout SECS --threads N --json FILE --incremental
       --trace FILE --metrics FILE --verbosity off|info|debug|trace
+      --profile FILE       solve forensics: per-constraint-module search
+                           effort (propagations/conflicts/prunes
+                           attributed to capacity:cpu, anti-affinity, …)
+                           and decision-indexed optimality-gap timelines,
+                           as a kube-packd/profile/v1 JSON document.
+                           Deterministic: byte-identical across --threads
+                           whenever every racer finishes in-window, and
+                           arming it never changes any answer
+      --folded FILE        the same effort as flamegraph.pl-compatible
+                           folded stacks (`frame;frame;slug;kind count`)
       --explain            per still-pending pod, print the per-node
                            rejection census (taint/selector/capacity/
                            anti-affinity tallies over all ready nodes)
@@ -143,6 +154,10 @@ COMMANDS
                            window-close journal (flight-recorder replay)
       --addr HOST:PORT (default 127.0.0.1:7878)
       --since N (default 0) --limit N (page size, default 64) --json
+  profile FILE             pretty-print a solve --profile document:
+                           per-module effort table, optimality-gap
+                           timeline, LNS round/improvement accounting
+      --folded FILE        re-export the folded stacks from the document
   lint [PATH]              detlint: determinism-boundary static analysis
                            over the Rust tree (default PATH rust/src).
                            Zone manifest + rules wall-clock, hash-iter,
@@ -363,16 +378,30 @@ fn solve(args: &Args) -> anyhow::Result<()> {
         "instance       outcome          solver(s)  kwok-placed -> opt-placed   moves  certificate"
     );
     let json_out = args.get("json");
+    // Solve forensics: --profile/--folded arm the search profiler. Like
+    // telemetry it observes only — answers are byte-identical armed or
+    // off (proptest-pinned).
+    let prof = if args.get("profile").is_some() || args.get("folded").is_some() {
+        Probe::armed()
+    } else {
+        Probe::off()
+    };
     let mut rows = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
-        let run = kube_packd::harness::run_instance_traced(
-            inst,
-            timeout,
-            &SolverConfig::default(),
-            &portfolio,
-            session.as_mut(),
-            &tel,
-        );
+        let run = {
+            // One context frame per instance keeps dataset profiles
+            // separable (solve;i3;t0.p1;exact;…).
+            let _pf = prof.frame(&format!("i{i}"));
+            kube_packd::harness::run_instance_probed(
+                inst,
+                timeout,
+                &SolverConfig::default(),
+                &portfolio,
+                session.as_mut(),
+                &tel,
+                &prof,
+            )
+        };
         println!(
             "{:>3} {:>14} {:>16} {:>9.2}  {:?} -> {:?}  {:>5}  {}",
             i,
@@ -413,7 +442,117 @@ fn solve(args: &Args) -> anyhow::Result<()> {
         std::fs::write(out, doc.to_string_pretty())?;
         eprintln!("json report written to {out}");
     }
+    if let Some(out) = args.get("profile") {
+        std::fs::write(out, prof.export_profile_json())?;
+        eprintln!("solve profile written to {out} (schema {PROFILE_SCHEMA})");
+    }
+    if let Some(out) = args.get("folded") {
+        std::fs::write(out, prof.export_folded())?;
+        eprintln!("folded stacks written to {out} (flamegraph.pl-compatible)");
+    }
+    // Per-module effort doubles as Prometheus counter families in the
+    // --metrics exposition.
+    if prof.enabled() && tel.enabled() {
+        for (slug, kind, count) in prof.module_effort() {
+            tel.add(
+                "forensics_effort_total",
+                &format!("module=\"{slug}\",kind=\"{kind}\""),
+                count,
+            );
+        }
+    }
     write_telemetry(args, &tel)?;
+    Ok(())
+}
+
+/// `kube-packd profile FILE`: pretty-print a `solve --profile` document
+/// — per-module effort table, optimality-gap timeline, and LNS
+/// round/improvement accounting.
+fn profile_report(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("in"))
+        .unwrap_or("profile.json");
+    let raw = std::fs::read_to_string(path)?;
+    let doc = kube_packd::util::json::parse(&raw)
+        .ok_or_else(|| anyhow::anyhow!("{path}: not valid JSON"))?;
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("?");
+    if schema != PROFILE_SCHEMA {
+        anyhow::bail!("{path}: schema {schema:?}, want {PROFILE_SCHEMA:?}");
+    }
+    println!("solve profile — {path} ({schema})");
+
+    let modules = doc.get("modules").and_then(Json::as_arr).unwrap_or(&[]);
+    println!("\nper-module search effort (summed across contexts)");
+    println!("{:<28} {:<14} {:>14}", "module", "kind", "count");
+    let mut total = 0i64;
+    for m in modules {
+        let slug = m.get("slug").and_then(Json::as_str).unwrap_or("?");
+        let kind = m.get("kind").and_then(Json::as_str).unwrap_or("?");
+        let count = m.get("count").and_then(Json::as_i64).unwrap_or(0);
+        total += count;
+        println!("{slug:<28} {kind:<14} {count:>14}");
+    }
+    println!("{:<28} {:<14} {:>14}", "(total)", "", total);
+
+    let gap = doc.get("gap").and_then(Json::as_arr).unwrap_or(&[]);
+    println!("\noptimality-gap timeline (decision-indexed)");
+    if gap.is_empty() {
+        println!("  no incumbents recorded");
+    } else {
+        println!(
+            "{:<34} {:>12} {:>12} {:>10} {:>8}",
+            "context", "decisions", "incumbent", "bound", "gap"
+        );
+        for s in gap {
+            let incumbent = s.get("incumbent").and_then(Json::as_i64).unwrap_or(0);
+            let bound = s.get("bound").and_then(Json::as_i64).unwrap_or(0);
+            println!(
+                "{:<34} {:>12} {:>12} {:>10} {:>8}",
+                s.get("context").and_then(Json::as_str).unwrap_or("?"),
+                s.get("decisions").and_then(Json::as_i64).unwrap_or(0),
+                incumbent,
+                bound,
+                bound - incumbent,
+            );
+        }
+    }
+
+    // LNS accounting: search rounds/improvements recorded under any
+    // context frame ending in `lns`.
+    let effort = doc.get("effort").and_then(Json::as_arr).unwrap_or(&[]);
+    let lns_sum = |kind: &str| -> i64 {
+        effort
+            .iter()
+            .filter(|e| {
+                e.get("context")
+                    .and_then(Json::as_str)
+                    .map_or(false, |c| c.ends_with(";lns") || c.contains(";lns;"))
+                    && e.get("kind").and_then(Json::as_str) == Some(kind)
+            })
+            .filter_map(|e| e.get("count").and_then(Json::as_i64))
+            .sum()
+    };
+    println!(
+        "\nLNS: {} round(s), {} improvement(s)",
+        lns_sum("rounds"),
+        lns_sum("improvements")
+    );
+
+    if let Some(out) = args.get("folded") {
+        let folded = doc.get("folded").and_then(Json::as_arr).unwrap_or(&[]);
+        let mut text = String::new();
+        for line in folded {
+            if let Some(l) = line.as_str() {
+                text.push_str(l);
+                text.push('\n');
+            }
+        }
+        std::fs::write(out, text)?;
+        eprintln!("folded stacks re-exported to {out}");
+    }
     Ok(())
 }
 
@@ -491,6 +630,17 @@ fn instance_json(index: usize, inst: &Instance, run: &InstanceRun) -> Json {
             .set("phase2_bound", t.phase2_bound)
             .set("phase1_cache_hit", t.phase1_cache_hit)
             .set("phase2_cache_hit", t.phase2_cache_hit);
+        // Per-tier search effort (phase 1 + phase 2 combined): offline
+        // forensics without re-running the solve.
+        let mut sj = Json::obj();
+        sj.set("decisions", t.search.decisions)
+            .set("propagations", t.search.propagations)
+            .set("conflicts", t.search.conflicts)
+            .set("bound_prunes", t.search.bound_prunes)
+            .set("floor_prunes", t.search.floor_prunes)
+            .set("symmetry_skips", t.search.symmetry_skips)
+            .set("lns_rounds", t.search.lns_rounds);
+        tj.set("search", sj);
         tiers.push(tj);
     }
     let mut strategy_wins = Json::obj();

@@ -26,8 +26,8 @@ use std::time::Duration;
 
 use crate::autoscaler::AutoscaleConfig;
 use crate::cluster::{ClusterState, NodeId, PodId};
-use crate::portfolio::{solve_portfolio_traced, PortfolioConfig, PortfolioStats, SolveCache};
-use crate::solver::{CmpOp, LinearExpr, Model, SearchStats, SolveStatus, SolverConfig};
+use crate::portfolio::{solve_portfolio_probed, PortfolioConfig, PortfolioStats, SolveCache};
+use crate::solver::{CmpOp, LinearExpr, Model, Probe, SearchStats, SolveStatus, SolverConfig};
 use crate::telemetry::{clock::TimeBudget, Deadline, Stopwatch, Telemetry, Verbosity};
 
 use super::builder::{PackingModelBuilder, VarTable};
@@ -150,6 +150,12 @@ pub struct TierReport {
     pub phase2_cache_hit: bool,
     pub phase1_time: Duration,
     pub phase2_time: Duration,
+    /// Search-effort counters of this tier's phase-1 + phase-2 solves
+    /// combined (decisions, propagations, conflicts, prunes, symmetry
+    /// skips, LNS rounds). Previously these only reached telemetry
+    /// counters; surfacing them here lets `solve --json` report search
+    /// effort per tier offline.
+    pub search: SearchStats,
 }
 
 /// Result of the full Algorithm 1 loop.
@@ -197,10 +203,14 @@ fn build_model(
     modules: &ModuleRegistry,
 ) -> (Model, VarTable) {
     let (mut m, table) = PackingModelBuilder::new(state, pr, modules).build();
+    let from = m.next_constraint_index();
     for lock in locks {
         let expr = metric_expr(state, &table, &lock.metric);
         m.add_constraint(expr, lock.op, lock.value);
     }
+    // Solve forensics: phase-lock rows get their own provenance bucket —
+    // they are Algorithm 1's rows, not any constraint module's.
+    m.tag_constraints(from, "lock");
     (m, table)
 }
 
@@ -314,8 +324,25 @@ pub fn optimize_traced(
     state: &ClusterState,
     p_max: u32,
     cfg: &OptimizerConfig,
+    cache: Option<&mut SolveCache>,
+    tel: &Telemetry,
+) -> Option<OptimizeResult> {
+    optimize_probed(state, p_max, cfg, cache, tel, &Probe::off())
+}
+
+/// [`optimize_traced`] with a solve-forensics [`Probe`]. Each phase
+/// solve runs under a `t{tier}.p{phase}` context frame, so the profile's
+/// folded stacks and gap timelines separate per tier per phase. The
+/// probe only ever *observes* the canonical exact-search lane (see
+/// [`crate::portfolio::solve_portfolio_probed`]); arming it changes no
+/// result.
+pub fn optimize_probed(
+    state: &ClusterState,
+    p_max: u32,
+    cfg: &OptimizerConfig,
     mut cache: Option<&mut SolveCache>,
     tel: &Telemetry,
+    prof: &Probe,
 ) -> Option<OptimizeResult> {
     let sw = Stopwatch::start();
     let mut budget = TimeBudget::new(cfg.total_timeout, cfg.alpha, p_max + 1);
@@ -338,7 +365,8 @@ pub fn optimize_traced(
         let t = Stopwatch::start();
         let sp1 = tel.span("phase1");
         sp1.arg("tier", pr);
-        let out1 = solve_portfolio_traced(
+        let pf1 = prof.frame(&format!("t{pr}.p1"));
+        let out1 = solve_portfolio_probed(
             &m,
             &metric1,
             Deadline::after(grant).min(overall),
@@ -346,7 +374,9 @@ pub fn optimize_traced(
             &cfg.portfolio,
             cache.as_deref_mut(),
             tel,
+            prof,
         );
+        drop(pf1);
         sp1.arg("status", out1.solution.status.label());
         sp1.arg("objective", out1.solution.objective);
         drop(sp1);
@@ -405,7 +435,8 @@ pub fn optimize_traced(
         let t2 = Stopwatch::start();
         let sp2 = tel.span("phase2");
         sp2.arg("tier", pr);
-        let out2 = solve_portfolio_traced(
+        let pf2 = prof.frame(&format!("t{pr}.p2"));
+        let out2 = solve_portfolio_probed(
             &m2,
             &metric2,
             Deadline::after(grant2).min(overall),
@@ -413,7 +444,9 @@ pub fn optimize_traced(
             &cfg.portfolio,
             cache.as_deref_mut(),
             tel,
+            prof,
         );
+        drop(pf2);
         sp2.arg("status", out2.solution.status.label());
         sp2.arg("objective", out2.solution.objective);
         drop(sp2);
@@ -447,6 +480,8 @@ pub fn optimize_traced(
             (sol2.status, 0)
         };
 
+        let mut tier_search = sol1.stats.clone();
+        tier_search.merge(&sol2.stats);
         tiers.push(TierReport {
             priority: pr,
             phase1_status: sol1.status,
@@ -461,6 +496,7 @@ pub fn optimize_traced(
             phase2_cache_hit,
             phase1_time,
             phase2_time,
+            search: tier_search,
         });
     }
 

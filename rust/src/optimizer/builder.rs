@@ -109,9 +109,43 @@ impl<'a> PackingModelBuilder<'a> {
             table: &table,
         };
         for module in self.registry.modules() {
+            let from = m.next_constraint_index();
             module.emit(&ctx, &mut m);
+            // Solve forensics: every emitted row carries its module's
+            // provenance slug, so solver effort maps back to semantics.
+            m.tag_constraints(from, provenance_slug(module.name()));
+        }
+        // Refine capacity rows per declared resource dimension: the
+        // profiler reports capacity:cpu vs capacity:ram, not one
+        // undifferentiated capacity bucket.
+        let refinements: Vec<(String, Vec<u32>)> = m
+            .resource_classes
+            .iter()
+            .filter(|c| !c.name.is_empty())
+            .map(|c| (format!("capacity:{}", c.name), c.cons.clone()))
+            .collect();
+        for (slug, cons) in refinements {
+            for ci in cons {
+                m.tag_constraint(ci as usize, &slug);
+            }
         }
         (m, table)
+    }
+}
+
+/// Provenance slug for a constraint module — the stable labels the
+/// solve-forensics profiler attributes effort under. Built-in modules
+/// get the short names the paper uses; custom modules fall back to
+/// their registered name verbatim.
+fn provenance_slug(module: &str) -> &str {
+    match module {
+        "AtMostOnePlacement" => "placement",
+        "NodeCapacity" => "capacity",
+        "NodeSelector" => "selector",
+        "TaintsTolerations" => "taints",
+        "PodAntiAffinity" => "anti-affinity",
+        "TopologySpread" => "spread",
+        other => other,
     }
 }
 
@@ -144,6 +178,27 @@ mod tests {
         assert_eq!(table.var(0, 0), None);
         assert!(table.var(0, 1).is_some());
         assert_eq!(m.num_vars(), 1);
+    }
+
+    #[test]
+    fn emitted_rows_carry_module_provenance() {
+        let nodes = identical_nodes(2, Resources::new(1000, 1000));
+        let pods = vec![
+            Pod::new(0, "a", Resources::new(100, 100), Priority(0)),
+            Pod::new(1, "b", Resources::new(100, 100), Priority(0)),
+        ];
+        let st = ClusterState::new(nodes, pods);
+        let reg = ModuleRegistry::standard();
+        let (m, _) = PackingModelBuilder::new(&st, 0, &reg).build();
+        let slugs: Vec<&str> = (0..m.constraints.len())
+            .map(|ci| m.constraint_provenance(ci))
+            .collect();
+        assert!(slugs.contains(&"placement"));
+        // Capacity rows refined per declared dimension.
+        assert!(slugs.contains(&"capacity:cpu"));
+        assert!(slugs.contains(&"capacity:ram"));
+        // Nothing left untagged in a builder-produced model.
+        assert!(!slugs.contains(&crate::solver::UNTAGGED_PROVENANCE));
     }
 
     #[test]

@@ -95,7 +95,8 @@ pub mod plugin;
 pub mod session;
 
 pub use algorithm::{
-    optimize, optimize_session, optimize_traced, OptimizeResult, OptimizerConfig, TierReport,
+    optimize, optimize_probed, optimize_session, optimize_traced, OptimizeResult, OptimizerConfig,
+    TierReport,
 };
 pub use builder::{ModelCtx, PackingModelBuilder, VarTable};
 pub use constraints::{

@@ -33,7 +33,9 @@ use crate::scheduler::framework::{
 use crate::scheduler::DefaultScheduler;
 use crate::telemetry::{Deadline, Stopwatch, Telemetry};
 
-use super::algorithm::{optimize_traced, OptimizeResult, OptimizerConfig};
+use crate::solver::Probe;
+
+use super::algorithm::{optimize_probed, OptimizeResult, OptimizerConfig};
 use super::plan::MovePlan;
 use super::session::SolveSession;
 
@@ -270,6 +272,20 @@ impl OptimizingScheduler {
         session: Option<&mut SolveSession>,
         tel: &Telemetry,
     ) -> RunReport {
+        self.run_with_session_probed(state, session, tel, &Probe::off())
+    }
+
+    /// [`run_with_session_traced`](OptimizingScheduler::run_with_session_traced)
+    /// with a solve-forensics [`Probe`] threaded into the fallback solve
+    /// (the serve daemon's `profile` op). The probe observes only — the
+    /// pass is byte-identical armed or off.
+    pub fn run_with_session_probed(
+        &mut self,
+        state: &mut ClusterState,
+        session: Option<&mut SolveSession>,
+        tel: &Telemetry,
+        prof: &Probe,
+    ) -> RunReport {
         self.scheduler.enqueue_pending(state);
         let default_stats = self.scheduler.run_queue(state);
         let placed_before = state.placed_per_priority(self.p_max);
@@ -299,8 +315,8 @@ impl OptimizingScheduler {
         let sp = tel.span("fallback");
         sp.arg("pending", self.scheduler.queue.unschedulable_len());
         let result = match session {
-            Some(sess) => sess.solve_traced(state, self.p_max, &self.cfg, tel),
-            None => optimize_traced(state, self.p_max, &self.cfg, None, tel),
+            Some(sess) => sess.solve_probed(state, self.p_max, &self.cfg, tel, prof),
+            None => optimize_probed(state, self.p_max, &self.cfg, None, tel, prof),
         };
         drop(sp);
         let solver_wall = sw.elapsed();

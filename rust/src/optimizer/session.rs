@@ -55,11 +55,11 @@
 
 use crate::cluster::{ClusterState, Event, NodeStatus, TaintEffect};
 use crate::portfolio::{CacheStats, SolveCache};
-use crate::solver::SolveStatus;
+use crate::solver::{Probe, SolveStatus};
 use crate::telemetry::Telemetry;
 use crate::util::fingerprint::Fnv64;
 
-use super::algorithm::{optimize_traced, OptimizeResult, OptimizerConfig};
+use super::algorithm::{optimize_probed, OptimizeResult, OptimizerConfig};
 
 /// Cluster mutations observed between two session solves. Maintained by
 /// scanning the state's event-log suffix (plus pod/node table growth),
@@ -164,6 +164,21 @@ impl SolveSession {
         cfg: &OptimizerConfig,
         tel: &Telemetry,
     ) -> Option<OptimizeResult> {
+        self.solve_probed(state, p_max, cfg, tel, &Probe::off())
+    }
+
+    /// [`solve_traced`](Self::solve_traced) with a solve-forensics
+    /// [`Probe`]. A full-state replay answers without touching the
+    /// solver, so it contributes nothing to the profile (by design: the
+    /// profile reports *search* effort, and a replay performs none).
+    pub fn solve_probed(
+        &mut self,
+        state: &ClusterState,
+        p_max: u32,
+        cfg: &OptimizerConfig,
+        tel: &Telemetry,
+        prof: &Probe,
+    ) -> Option<OptimizeResult> {
         let sp = tel.span("session");
         self.stats.solves += 1;
         tel.add("session_solves_total", "", 1);
@@ -194,7 +209,7 @@ impl SolveSession {
 
         self.stats.optimizer_runs += 1;
         tel.add("session_optimizer_runs_total", "", 1);
-        let res = optimize_traced(state, p_max, cfg, Some(&mut self.cache), tel);
+        let res = optimize_probed(state, p_max, cfg, Some(&mut self.cache), tel, prof);
         // Arm the full-state replay only with a fully certified run: an
         // anytime (deadline-truncated) result is not a pure function of
         // the state, so replaying it could diverge from a cold solve.

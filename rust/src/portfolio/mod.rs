@@ -67,8 +67,8 @@ pub use decompose::{component_count, decompose, Component, Decomposition};
 pub use strategy::{roster, MAX_STRATEGIES};
 
 use crate::solver::{
-    solve_max, solve_max_with, LinearExpr, Model, SearchStats, SharedIncumbent, SolveStatus,
-    Solution, SolverConfig,
+    solve_max, solve_max_probed, solve_max_with, LinearExpr, Model, Probe, SearchStats,
+    SharedIncumbent, SolveStatus, Solution, SolverConfig,
 };
 use crate::telemetry::{clock::Deadline, Telemetry};
 
@@ -296,8 +296,41 @@ pub fn solve_portfolio_traced(
     deadline: Deadline,
     solver: &SolverConfig,
     cfg: &PortfolioConfig,
+    session: Option<&mut SolveCache>,
+    tel: &Telemetry,
+) -> PortfolioOutcome {
+    solve_portfolio_probed(
+        model,
+        objective,
+        deadline,
+        solver,
+        cfg,
+        session,
+        tel,
+        &Probe::off(),
+    )
+}
+
+/// [`solve_portfolio_traced`] with a solve-forensics [`Probe`]. The
+/// probe records only the **canonical exact lane** — the legacy solve at
+/// one thread, the floor-detached whole-model anchor otherwise — so the
+/// profile is byte-identical across thread counts on solves the deadline
+/// does not truncate. At `threads > 1` on a single-component model the
+/// armed probe inserts an extra anchor task whose result never reaches
+/// the winner selection and is excluded from the merged search stats:
+/// arming observes, it never changes the outcome. One caveat: a
+/// warm-seeded session floors only the legacy lane, so cross-thread
+/// profile identity is guaranteed for sessionless solves.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_portfolio_probed(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    solver: &SolverConfig,
+    cfg: &PortfolioConfig,
     mut session: Option<&mut SolveCache>,
     tel: &Telemetry,
+    prof: &Probe,
 ) -> PortfolioOutcome {
     let fp = session
         .as_deref()
@@ -314,9 +347,9 @@ pub fn solve_portfolio_traced(
     let outcome = match hit {
         Some(hit) => replay_solve(hit),
         None if cfg.threads <= 1 => {
-            solve_legacy(model, objective, deadline, solver, session, fp, tel)
+            solve_legacy(model, objective, deadline, solver, session, fp, tel, prof)
         }
-        None => solve_parallel(model, objective, deadline, solver, cfg, session, fp, tel),
+        None => solve_parallel(model, objective, deadline, solver, cfg, session, fp, tel, prof),
     };
     outcome.stats.record(tel);
     outcome
@@ -356,7 +389,9 @@ fn hint_floor(model: &Model, objective: &LinearExpr) -> Option<i64> {
 }
 
 /// The single-threaded path, session-aware: seed the projected-hint
-/// floor (pure acceleration) and store proven certificates.
+/// floor (pure acceleration) and store proven certificates. This *is*
+/// the canonical exact lane — the probe records it under frame `exact`.
+#[allow(clippy::too_many_arguments)]
 fn solve_legacy(
     model: &Model,
     objective: &LinearExpr,
@@ -365,6 +400,7 @@ fn solve_legacy(
     session: Option<&mut SolveCache>,
     fp: Option<u64>,
     tel: &Telemetry,
+    prof: &Probe,
 ) -> PortfolioOutcome {
     let mut stats = PortfolioStats {
         legacy_solves: 1,
@@ -373,7 +409,8 @@ fn solve_legacy(
     let solution = match session {
         None => {
             let _sp = tel.span("solve");
-            let solution = solve_max(model, objective, deadline, solver);
+            let _pf = prof.frame("exact");
+            let solution = solve_max_probed(model, objective, deadline, solver, None, prof);
             solution.stats.record(tel, "strategy=\"legacy\"");
             solution
         }
@@ -389,7 +426,10 @@ fn solve_legacy(
             }
             let sp = tel.span("solve");
             sp.arg("warm", shared.is_some());
-            let solution = solve_max_with(model, objective, deadline, solver, shared.as_ref());
+            let pf = prof.frame("exact");
+            let solution =
+                solve_max_probed(model, objective, deadline, solver, shared.as_ref(), prof);
+            drop(pf);
             drop(sp);
             solution.stats.record(tel, "strategy=\"legacy\"");
             if solution.status.has_solution() && floor == Some(solution.objective) {
@@ -419,6 +459,7 @@ fn solve_legacy(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn solve_parallel(
     model: &Model,
     objective: &LinearExpr,
@@ -428,6 +469,7 @@ fn solve_parallel(
     mut session: Option<&mut SolveCache>,
     fp: Option<u64>,
     tel: &Telemetry,
+    prof: &Probe,
 ) -> PortfolioOutcome {
     let started = crate::telemetry::Stopwatch::start();
     let mut stats = PortfolioStats {
@@ -461,9 +503,12 @@ fn solve_parallel(
         };
     }
     if ncomp == 0 {
-        // Variable-free model: the solver answers trivially.
+        // Variable-free model: the solver answers trivially. Probed so
+        // the trivial profile matches the `threads = 1` lane byte for
+        // byte.
+        let _pf = prof.frame("exact");
         return PortfolioOutcome {
-            solution: solve_max(model, objective, deadline, solver),
+            solution: solve_max_probed(model, objective, deadline, solver, None, prof),
             components: Vec::new(),
             stats,
         };
@@ -474,23 +519,36 @@ fn solve_parallel(
     if ncomp == 1 {
         // Single component: race the strategies on the *original* model
         // references — no anchor, no sub-model clone. Rank 0 is the
-        // exact single-threaded solve and wins all ties.
-        let tasks: Vec<Task<'_>> = roster
-            .iter()
-            .enumerate()
-            .map(|(rank, &(label, ref strat))| {
-                let mut config = strat.clone();
-                config.seed = strategy::task_seed(solver.seed, 0, rank);
-                Task {
-                    component: Some(0),
-                    rank: rank as u32,
-                    label,
-                    model,
-                    objective,
-                    config,
-                }
-            })
-            .collect();
+        // exact single-threaded solve and wins all ties. An armed probe
+        // inserts a canonical forensic lane: the exact solve at the
+        // original seed (matching the `threads = 1` path), whose result
+        // never reaches `pick_winner` (component `None`) and is skipped
+        // when merging search stats — observation only.
+        let probe_anchor = prof.enabled();
+        let mut tasks: Vec<Task<'_>> =
+            Vec::with_capacity(roster.len() + usize::from(probe_anchor));
+        if probe_anchor {
+            tasks.push(Task {
+                component: None,
+                rank: 0,
+                label: "exact",
+                model,
+                objective,
+                config: solver.clone(),
+            });
+        }
+        tasks.extend(roster.iter().enumerate().map(|(rank, &(label, ref strat))| {
+            let mut config = strat.clone();
+            config.seed = strategy::task_seed(solver.seed, 0, rank);
+            Task {
+                component: Some(0),
+                rank: rank as u32,
+                label,
+                model,
+                objective,
+                config,
+            }
+        }));
         let warm = session.as_deref().map(|_| {
             let _sp = tel.span("warm-start");
             WarmSeeds {
@@ -505,12 +563,16 @@ fn solve_parallel(
         let (mut results, cancelled) = {
             let sp = tel.span("strategy-race");
             sp.arg("tasks", tasks.len());
-            run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel)
+            run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel, prof)
         };
         stats.tasks_cancelled = cancelled;
-        stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
+        // The forensic anchor (slot 0 when armed) is not a racer: skip
+        // it in `tasks_run` and the merged stats so `solve --json`
+        // output is identical armed or off.
+        let skip = usize::from(probe_anchor);
+        stats.tasks_run = results.iter().skip(skip).filter(|r| r.is_some()).count() as u64;
         let mut merged_stats = SearchStats::default();
-        for sol in results.iter().flatten() {
+        for sol in results.iter().skip(skip).flatten() {
             merged_stats.merge(&sol.stats);
         }
         let (report, winner) = pick_winner(
@@ -647,7 +709,7 @@ fn solve_parallel(
     let (mut results, cancelled) = {
         let sp = tel.span("strategy-race");
         sp.arg("tasks", tasks.len());
-        run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel)
+        run_race(&tasks, deadline, cfg.threads, warm.as_ref(), tel, prof)
     };
     stats.tasks_cancelled = cancelled;
     stats.tasks_run = results.iter().filter(|r| r.is_some()).count() as u64;
@@ -1087,6 +1149,44 @@ mod tests {
             &cfg(4),
         );
         assert_eq!(out.solution.objective, with.solution.objective);
+    }
+
+    #[test]
+    fn armed_probe_never_changes_answers_and_profiles_identically() {
+        // The forensic probe observes only: answers are byte-identical
+        // armed vs off at every thread count, and the profile itself is
+        // byte-identical across thread counts (canonical lane only).
+        for (m, obj) in [figure1(), two_pools()] {
+            let mut profiles = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let off = solve_portfolio(
+                    &m,
+                    &obj,
+                    Deadline::unlimited(),
+                    &SolverConfig::default(),
+                    &cfg(threads),
+                );
+                let prof = Probe::armed();
+                let armed = solve_portfolio_probed(
+                    &m,
+                    &obj,
+                    Deadline::unlimited(),
+                    &SolverConfig::default(),
+                    &cfg(threads),
+                    None,
+                    &Telemetry::off(),
+                    &prof,
+                );
+                assert_eq!(armed.solution.status, off.solution.status);
+                assert_eq!(armed.solution.objective, off.solution.objective);
+                assert_eq!(armed.solution.values, off.solution.values);
+                assert_eq!(armed.solution.bound, off.solution.bound);
+                profiles.push(prof.export_profile_json());
+            }
+            assert_eq!(profiles[0], profiles[1], "threads 1 vs 2 profile");
+            assert_eq!(profiles[1], profiles[2], "threads 2 vs 8 profile");
+            assert!(profiles[0].contains("exact"), "canonical lane recorded");
+        }
     }
 
     #[test]

@@ -17,7 +17,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::solver::{
-    solve_max_with, LinearExpr, Model, SharedIncumbent, SolveStatus, Solution, SolverConfig,
+    solve_max_probed, solve_max_with, LinearExpr, Model, Probe, SharedIncumbent, SolveStatus,
+    Solution, SolverConfig,
 };
 use crate::telemetry::{clock::Deadline, Telemetry};
 
@@ -63,12 +64,19 @@ impl WarmSeeds {
 /// in task order (before any worker spawns) and absorbed back in task
 /// order after the scope — the merged record is a pure function of the
 /// task list, whatever the thread interleaving did.
+///
+/// Forensics: an armed [`Probe`] records exactly one task — the first
+/// with `component == None` (the whole-model anchor / forensic lane) —
+/// through a [`Probe::child`] handle created before any worker spawns
+/// and absorbed once after the scope. One lane, one absorb: the profile
+/// is a pure function of that task's deterministic search.
 pub(crate) fn run_race(
     tasks: &[Task<'_>],
     deadline: Deadline,
     threads: usize,
     warm: Option<&WarmSeeds>,
     tel: &Telemetry,
+    prof: &Probe,
 ) -> (Vec<Option<Solution>>, u64) {
     let n = tasks.len();
     if n == 0 {
@@ -107,6 +115,13 @@ pub(crate) fn run_race(
     let results: Vec<Mutex<Option<Solution>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let workers = threads.clamp(1, n);
 
+    // The canonical forensic lane: the first component-`None` task, if
+    // any. Its child probe inherits the caller's context frames; workers
+    // push `exact` on top so the folded paths match the `threads = 1`
+    // legacy lane byte for byte.
+    let canonical = tasks.iter().position(|t| t.component.is_none());
+    let prof_lane: Mutex<Probe> = Mutex::new(prof.child());
+
     // One telemetry lane per task, allocated here on the owning thread
     // so lane numbering is deterministic. Off handles cost nothing.
     let lanes: Vec<Mutex<Telemetry>> = tasks
@@ -140,13 +155,26 @@ pub(crate) fn run_race(
                 // detlint: allow(wall-clock) — per-strategy latency histogram
                 // stamp: pure observability, placement bytes unaffected.
                 let started = std::time::Instant::now();
-                let sol = solve_max_with(
-                    task.model,
-                    task.objective,
-                    deadline,
-                    &task.config,
-                    handles[i].as_ref(),
-                );
+                let sol = if Some(i) == canonical {
+                    let probe = prof_lane.lock().expect("probe lane poisoned");
+                    let _pf = probe.frame("exact");
+                    solve_max_probed(
+                        task.model,
+                        task.objective,
+                        deadline,
+                        &task.config,
+                        handles[i].as_ref(),
+                        &probe,
+                    )
+                } else {
+                    solve_max_with(
+                        task.model,
+                        task.objective,
+                        deadline,
+                        &task.config,
+                        handles[i].as_ref(),
+                    )
+                };
                 sp.arg("status", sol.status.label());
                 if lane.enabled() {
                     sol.stats
@@ -185,6 +213,7 @@ pub(crate) fn run_race(
     for lane in lanes {
         tel.absorb(lane.into_inner().expect("telemetry lane poisoned"));
     }
+    prof.absorb(prof_lane.into_inner().expect("probe lane poisoned"));
 
     let mut out = Vec::with_capacity(n);
     let mut cancelled = 0u64;
@@ -251,7 +280,17 @@ mod tests {
         };
         let runs: Vec<_> = [1usize, 2, 8]
             .iter()
-            .map(|&t| run_race(&mk_tasks(), Deadline::unlimited(), t, None, &Telemetry::off()).0)
+            .map(|&t| {
+                run_race(
+                    &mk_tasks(),
+                    Deadline::unlimited(),
+                    t,
+                    None,
+                    &Telemetry::off(),
+                    &Probe::off(),
+                )
+                .0
+            })
             .collect();
         for run in &runs {
             // rank 0 always runs (never cancelled by construction)
@@ -297,8 +336,14 @@ mod tests {
                 config: SolverConfig::default(),
             },
         ];
-        let (results, cancelled) =
-            run_race(&tasks, Deadline::unlimited(), 1, None, &Telemetry::off());
+        let (results, cancelled) = run_race(
+            &tasks,
+            Deadline::unlimited(),
+            1,
+            None,
+            &Telemetry::off(),
+            &Probe::off(),
+        );
         assert!(results[0].is_some());
         assert!(results[1].is_none());
         assert_eq!(cancelled, 1);
@@ -320,17 +365,88 @@ mod tests {
                 config: SolverConfig::default(),
             }]
         };
-        let cold = run_race(&mk_tasks(), Deadline::unlimited(), 2, None, &Telemetry::off()).0;
+        let cold = run_race(
+            &mk_tasks(),
+            Deadline::unlimited(),
+            2,
+            None,
+            &Telemetry::off(),
+            &Probe::off(),
+        )
+        .0;
         let seeds = WarmSeeds {
             whole: None,
             per_component: vec![Some(3)],
         };
         assert_eq!(seeds.count(), 1);
-        let warm = run_race(&mk_tasks(), Deadline::unlimited(), 2, Some(&seeds), &Telemetry::off()).0;
+        let warm = run_race(
+            &mk_tasks(),
+            Deadline::unlimited(),
+            2,
+            Some(&seeds),
+            &Telemetry::off(),
+            &Probe::off(),
+        )
+        .0;
         let c = cold[0].as_ref().expect("cold racer ran");
         let w = warm[0].as_ref().expect("warm racer ran");
         assert_eq!(w.status, SolveStatus::Optimal);
         assert_eq!(w.objective, c.objective);
         assert_eq!(w.values, c.values);
+    }
+
+    #[test]
+    fn armed_probe_records_only_the_canonical_lane() {
+        // Anchor (component None) plus one component racer: the probe
+        // must capture the anchor's search under `exact` and record
+        // nothing from the racer, whatever the worker count.
+        let (m, obj) = model();
+        let mk_tasks = || {
+            vec![
+                Task {
+                    component: None,
+                    rank: 0,
+                    label: "whole-model",
+                    model: &m,
+                    objective: &obj,
+                    config: SolverConfig::default(),
+                },
+                Task {
+                    component: Some(0),
+                    rank: 0,
+                    label: "default",
+                    model: &m,
+                    objective: &obj,
+                    config: SolverConfig::default(),
+                },
+            ]
+        };
+        let folded: Vec<String> = [1usize, 4]
+            .iter()
+            .map(|&t| {
+                let prof = Probe::armed();
+                let (results, _) = run_race(
+                    &mk_tasks(),
+                    Deadline::unlimited(),
+                    t,
+                    None,
+                    &Telemetry::off(),
+                    &prof,
+                );
+                let anchor = results[0].as_ref().expect("anchor ran");
+                let decisions: u64 = prof
+                    .module_effort()
+                    .iter()
+                    .filter(|(_, kind, _)| *kind == "decisions")
+                    .map(|&(_, _, n)| n)
+                    .sum();
+                // exactly one lane recorded: the anchor's own decisions
+                assert_eq!(decisions, anchor.stats.decisions);
+                prof.export_folded()
+            })
+            .collect();
+        assert!(folded[0].contains("solve;exact;"));
+        // deterministic forensics: identical profile at 1 and 4 workers
+        assert_eq!(folded[0], folded[1]);
     }
 }

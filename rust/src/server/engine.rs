@@ -35,6 +35,7 @@ use crate::optimizer::plugin::RunReport;
 use crate::optimizer::session::{fingerprint_state, SolveSession};
 use crate::optimizer::OptimizingScheduler;
 use crate::portfolio::PortfolioConfig;
+use crate::solver::Probe;
 use crate::telemetry::Telemetry;
 use crate::util::json::Json;
 
@@ -127,6 +128,13 @@ pub struct Engine {
     win_seq: Option<(u64, u64)>,
     /// Certificate of the most recently closed window (for `explain`).
     last_certificate: Option<String>,
+    /// Solve-forensics probe of the most recent window that invoked the
+    /// solver — rearmed fresh per solve window so the `profile` reply
+    /// never grows with daemon uptime. Like telemetry, it observes
+    /// only: placements are byte-identical armed or off.
+    last_prof: Probe,
+    /// Window id `last_prof` recorded (None until the first solve).
+    last_prof_window: Option<u64>,
     /// Delta frame built at the last close, until the serve loop claims
     /// it for watch fan-out.
     last_frame: Option<Json>,
@@ -161,6 +169,8 @@ impl Engine {
             ctr: CounterSnapshot::default(),
             win_seq: None,
             last_certificate: None,
+            last_prof: Probe::armed(),
+            last_prof_window: None,
             last_frame: None,
             cfg,
         }
@@ -280,6 +290,17 @@ impl Engine {
                 o.set("body", self.tel.export_chrome());
                 Some(o)
             }
+            WireOp::Profile => {
+                let mut o = self.base("profile", seq, tag);
+                match self.last_prof_window {
+                    Some(w) => o.set("window", w),
+                    None => o.set("window", Json::Null),
+                };
+                // detlint: allow(telemetry-feedback) — export endpoint:
+                // the bytes leave on the wire, never steer placement.
+                o.set("body", self.last_prof.export_profile_json());
+                Some(o)
+            }
             WireOp::Shutdown => {
                 self.draining = true;
                 let mut o = self.base("shutdown", seq, tag);
@@ -312,7 +333,11 @@ impl Engine {
         let report = if self.state.pending_pods().is_empty() {
             None
         } else {
-            Some(self.round())
+            let prof = Probe::armed();
+            let report = self.round(&prof);
+            self.last_prof = prof;
+            self.last_prof_window = Some(self.windows);
+            Some(report)
         };
         let wall_us = started.elapsed().as_micros() as u64;
         drop(sp);
@@ -722,7 +747,7 @@ impl Engine {
     /// One fallback scheduling round — the churn runner's
     /// `schedule_round` arm, verbatim: rebuild the scheduler, carry the
     /// session and the provision memo.
-    fn round(&mut self) -> RunReport {
+    fn round(&mut self, prof: &Probe) -> RunReport {
         let mut osched = OptimizingScheduler::new(
             self.cfg.p_max,
             OptimizerConfig {
@@ -733,7 +758,12 @@ impl Engine {
             },
         );
         osched.set_provision_memo(self.provision_memo.take());
-        let report = osched.run_with_session_traced(&mut self.state, self.session.as_mut(), &self.tel);
+        let report = osched.run_with_session_probed(
+            &mut self.state,
+            self.session.as_mut(),
+            &self.tel,
+            prof,
+        );
         self.provision_memo = osched.take_provision_memo();
         if report.solver_invoked {
             self.ctr.solver_invocations += 1;
@@ -893,6 +923,39 @@ mod tests {
         assert_eq!(got[0].get("window").and_then(Json::as_i64), Some(1));
         assert_eq!(page.get("next").and_then(Json::as_i64), Some(2));
         assert!(!page.to_string_compact().contains("wall_us"));
+    }
+
+    #[test]
+    fn profile_op_exports_the_last_solve_windows_forensics() {
+        let mut e = engine();
+        // Before any solve: a schema-valid empty document, null window.
+        let empty = e.apply(1, None, &WireOp::Profile).expect("immediate");
+        assert_eq!(empty.get("window"), Some(&Json::Null));
+        let body = empty.get("body").and_then(Json::as_str).expect("body");
+        assert!(body.contains(crate::solver::PROFILE_SCHEMA));
+        // A window that strands a pod invokes the solver and records.
+        e.run_window(
+            1_000,
+            &[
+                WireOp::Submit(SubmitSpec::basic("web", 2, 100, 2048, 0)),
+                WireOp::Submit(SubmitSpec::basic("db", 1, 100, 3072, 0)),
+            ],
+        );
+        let r = e.apply(2, None, &WireOp::Profile).expect("immediate");
+        assert_eq!(r.get("window").and_then(Json::as_i64), Some(0));
+        let body = r.get("body").and_then(Json::as_str).expect("body");
+        let doc = parse(body).expect("profile document parses");
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(crate::solver::PROFILE_SCHEMA)
+        );
+        let modules = doc.get("modules").and_then(Json::as_arr).expect("modules");
+        assert!(!modules.is_empty(), "solve must attribute effort");
+        // A later timer-only window (no pending pods) keeps the last
+        // solve's profile instead of blanking it.
+        e.run_window(2_000, &[]);
+        let again = e.apply(3, None, &WireOp::Profile).expect("immediate");
+        assert_eq!(again.get("window").and_then(Json::as_i64), Some(0));
     }
 
     #[test]

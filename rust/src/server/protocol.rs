@@ -17,7 +17,7 @@
 //! {"op":"join","cpu_milli":4000,"ram_mib":4096}            // or {"op":"join","pool":"large",...}
 //! {"op":"drain","node":0}
 //! {"op":"remove","node":0}
-//! {"op":"query"} {"op":"health"} {"op":"metrics"} {"op":"trace_export"} {"op":"shutdown"}
+//! {"op":"query"} {"op":"health"} {"op":"metrics"} {"op":"trace_export"} {"op":"profile"} {"op":"shutdown"}
 //! ```
 //!
 //! Every request may carry `"tag": N` — an opaque client correlation id
@@ -240,6 +240,11 @@ pub enum WireOp {
     /// tally across the constraint modules, plus the latest window
     /// certificate.
     Explain { pod: String },
+    /// Solve forensics for the most recent solve window: the
+    /// `kube-packd/profile/v1` document (per-constraint-module effort,
+    /// decision-indexed gap timeline, folded stacks) plus the window id
+    /// it profiles. Deterministic — nothing wall-clock-indexed.
+    Profile,
     /// Begin graceful drain: finish the in-flight window, answer every
     /// already-enqueued request, flush telemetry exports, exit 0.
     Shutdown,
@@ -261,6 +266,7 @@ impl WireOp {
             WireOp::Journal { .. } => "journal",
             WireOp::Watch => "watch",
             WireOp::Explain { .. } => "explain",
+            WireOp::Profile => "profile",
             WireOp::Shutdown => "shutdown",
         }
     }
@@ -352,7 +358,11 @@ impl WireOp {
                     o.set("latency", true);
                 }
             }
-            WireOp::Metrics | WireOp::TraceExport | WireOp::Watch | WireOp::Shutdown => {}
+            WireOp::Metrics
+            | WireOp::TraceExport
+            | WireOp::Watch
+            | WireOp::Profile
+            | WireOp::Shutdown => {}
         }
         o
     }
@@ -411,6 +421,7 @@ impl WireOp {
             "explain" => Ok(WireOp::Explain {
                 pod: req_str(j, "pod")?,
             }),
+            "profile" => Ok(WireOp::Profile),
             "shutdown" => Ok(WireOp::Shutdown),
             other => Err(WireError::UnknownOp(other.to_string())),
         }

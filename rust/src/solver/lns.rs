@@ -12,12 +12,21 @@ use crate::util::rng::Rng;
 
 use super::model::{Model, VarId};
 use super::presolve::Structure;
+use super::probe::Probe;
 use super::search::{Searcher, SharedIncumbent, SolverConfig};
 use super::solution::SearchStats;
 
 /// Ruin-and-recreate loop. Returns the (possibly improved) incumbent.
 /// In a portfolio race, `shared` propagates improvements to the other
 /// racers and lets a cancellation end the polish early.
+///
+/// Forensics: LNS only engages on solves the DFS could *not* certify, so
+/// its wall-clock-sliced rounds sit outside the profiler's cross-thread
+/// identity claim. Move accounting (rounds, improvements, the gap
+/// samples of improving rounds) is recorded under an `lns` context
+/// frame; the sub-searchers themselves run with the probe off — their
+/// slice boundaries are wall-clock-dependent, and attributing their
+/// effort would leak that nondeterminism into the per-module table.
 #[allow(clippy::too_many_arguments)]
 pub fn lns_polish(
     model: &Model,
@@ -25,9 +34,11 @@ pub fn lns_polish(
     obj: &[i64],
     mut best: Vec<bool>,
     mut best_val: i64,
+    root_ub: i64,
     deadline: Deadline,
     config: &SolverConfig,
     shared: Option<&SharedIncumbent>,
+    probe: &Probe,
     stats: &mut SearchStats,
 ) -> (Vec<bool>, i64) {
     let mut rng = Rng::new(config.seed);
@@ -35,6 +46,8 @@ pub fn lns_polish(
     if ng == 0 {
         return (best, best_val);
     }
+    let _lns_frame = probe.frame("lns");
+    let off = Probe::off();
     // Neighbourhood size: a few groups; grows slowly when stuck.
     let mut ruin_size = 4.min(ng).max(1);
 
@@ -67,7 +80,7 @@ pub fn lns_polish(
             use_lns: false,
             ..config.clone()
         };
-        if let Some(mut s) = Searcher::new(model, structure, obj, slice, &sub_cfg, shared) {
+        if let Some(mut s) = Searcher::new(model, structure, obj, slice, &sub_cfg, shared, &off) {
             if s.preassign(&fixes) {
                 s.dfs(0, 0);
                 s.drain_stats(stats);
@@ -76,6 +89,9 @@ pub fn lns_polish(
                         best_val = s.best_val;
                         best = vals;
                         stats.lns_improvements += 1;
+                        probe.attr("search", "improvements", 1);
+                        // Gap sample indexed by LNS round, not wall clock.
+                        probe.gap(stats.lns_rounds, best_val, root_ub);
                         ruin_size = 4.min(ng).max(1); // reset on success
                         continue;
                     }
@@ -85,6 +101,7 @@ pub fn lns_polish(
         // No improvement: widen the neighbourhood a little.
         ruin_size = (ruin_size + 1).min(ng.min(12));
     }
+    probe.attr("search", "rounds", stats.lns_rounds);
     (best, best_val)
 }
 
@@ -124,15 +141,18 @@ mod tests {
         // incumbent: nothing placed (feasible, value 0)
         let incumbent = vec![false; m.num_vars()];
         let mut stats = SearchStats::default();
+        let probe = Probe::armed();
         let (vals, val) = lns_polish(
             &m,
             &structure,
             &obj,
             incumbent,
             0,
+            demands.len() as i64,
             Deadline::after(Duration::from_millis(150)),
             &SolverConfig::default(),
             None,
+            &probe,
             &mut stats,
         );
         assert!(val >= 0);
@@ -140,6 +160,21 @@ mod tests {
         assert!(stats.lns_rounds > 0);
         // with 150ms on a toy model, LNS should strictly improve over "place nothing"
         assert!(val > 0, "LNS failed to improve an empty incumbent");
+        // Move accounting lands under the `lns` frame.
+        let eff = probe.module_effort();
+        let rounds: u64 = eff
+            .iter()
+            .filter(|(s, k, _)| s == "search" && *k == "rounds")
+            .map(|&(_, _, n)| n)
+            .sum();
+        assert_eq!(rounds, stats.lns_rounds);
+        assert!(probe.export_folded().contains("solve;lns;search;rounds"));
+        let improvements: u64 = eff
+            .iter()
+            .filter(|(s, k, _)| s == "search" && *k == "improvements")
+            .map(|&(_, _, n)| n)
+            .sum();
+        assert_eq!(improvements, stats.lns_improvements);
     }
 
     /// End-to-end: a model solved with a starving DFS deadline still comes

@@ -27,7 +27,10 @@
 //!   (`crate::portfolio`) share a global incumbent floor and cooperative
 //!   cancellation without giving up determinism;
 //! * [`lns`] optionally polishes a feasible incumbent with randomised
-//!   ruin-and-recreate when time remains but optimality wasn't proven.
+//!   ruin-and-recreate when time remains but optimality wasn't proven;
+//! * [`probe`] optionally records solve forensics — per-constraint
+//!   effort attribution and decision-indexed optimality-gap timelines —
+//!   at zero overhead when off.
 //!
 //! All components are toggleable via [`SolverConfig`] — the ablation
 //! bench (`benches/ablation.rs`) measures each one's contribution.
@@ -36,10 +39,12 @@ pub mod bound;
 pub mod lns;
 pub mod model;
 pub mod presolve;
+pub mod probe;
 pub mod propagate;
 pub mod search;
 pub mod solution;
 
-pub use model::{CmpOp, LinearExpr, Model, ResourceClass, VarId};
-pub use search::{solve_max, solve_max_with, SharedIncumbent, SolverConfig};
+pub use model::{CmpOp, LinearExpr, Model, ResourceClass, VarId, UNTAGGED_PROVENANCE};
+pub use probe::{GapSample, Probe, PROFILE_SCHEMA};
+pub use search::{solve_max, solve_max_probed, solve_max_with, SharedIncumbent, SolverConfig};
 pub use solution::{SearchStats, SolveStatus, Solution};

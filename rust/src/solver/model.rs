@@ -99,6 +99,11 @@ pub struct ResourceClass {
     pub cons: Vec<u32>,
 }
 
+/// Default provenance bucket for rows no builder tagged (hand-built
+/// models, lock rows before tagging, …). The solve-forensics profiler
+/// reports untagged effort here, never silently.
+pub const UNTAGGED_PROVENANCE: &str = "search:other";
+
 /// The model: a bag of variables, constraints, and optional hints.
 /// Mirrors CP-SAT's `CpModel`: grow-only; re-solve after mutation.
 #[derive(Clone, Debug, Default)]
@@ -115,6 +120,14 @@ pub struct Model {
     /// knapsack constraints share items. Purely an optimisation: solvers
     /// ignore unknown classes, correctness never depends on them.
     pub resource_classes: Vec<ResourceClass>,
+    /// Constraint provenance for solve forensics: one label id per
+    /// constraint (possibly shorter than `constraints` — untagged tail
+    /// rows report [`UNTAGGED_PROVENANCE`]). Id 0 is the untagged
+    /// sentinel; id k ≥ 1 indexes `provenance_labels[k - 1]`. Metadata
+    /// only: solvers never branch on it and the cache fingerprint
+    /// ignores it.
+    provenance: Vec<u16>,
+    provenance_labels: Vec<String>,
 }
 
 impl Model {
@@ -181,6 +194,44 @@ impl Model {
         self.constraints.len()
     }
 
+    /// Tag constraint `ci` with a provenance slug (solve forensics).
+    /// Later tags overwrite earlier ones — the builder tags a module's
+    /// whole emission range, then refines capacity rows per dimension.
+    pub fn tag_constraint(&mut self, ci: usize, slug: &str) {
+        if ci >= self.constraints.len() {
+            return;
+        }
+        let id = match self.provenance_labels.iter().position(|l| l == slug) {
+            Some(i) => (i + 1) as u16,
+            None => {
+                self.provenance_labels.push(slug.to_string());
+                self.provenance_labels.len() as u16
+            }
+        };
+        if self.provenance.len() <= ci {
+            self.provenance.resize(ci + 1, 0);
+        }
+        self.provenance[ci] = id;
+    }
+
+    /// Tag every constraint from index `from` (inclusive) to the current
+    /// end with a provenance slug — the builder brackets each module's
+    /// `emit` with `next_constraint_index` / `tag_constraints`.
+    pub fn tag_constraints(&mut self, from: usize, slug: &str) {
+        for ci in from..self.constraints.len() {
+            self.tag_constraint(ci, slug);
+        }
+    }
+
+    /// Provenance slug of constraint `ci` ([`UNTAGGED_PROVENANCE`] when
+    /// never tagged).
+    pub fn constraint_provenance(&self, ci: usize) -> &str {
+        match self.provenance.get(ci) {
+            Some(&id) if id > 0 => &self.provenance_labels[(id - 1) as usize],
+            _ => UNTAGGED_PROVENANCE,
+        }
+    }
+
     /// Set a warm-start hint for one variable.
     pub fn hint(&mut self, var: VarId, value: bool) {
         self.hints[var.idx()] = Some(value);
@@ -227,6 +278,28 @@ mod tests {
         m.add_eq(LinearExpr::of([(b, 1)]), 0);
         assert!(m.feasible(&[true, false]));
         assert!(!m.feasible(&[true, true]));
+    }
+
+    #[test]
+    fn provenance_tags_round_trip_and_default() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_le(LinearExpr::of([(a, 1)]), 1);
+        assert_eq!(m.constraint_provenance(0), UNTAGGED_PROVENANCE);
+        let from = m.next_constraint_index();
+        m.add_le(LinearExpr::of([(b, 1)]), 1);
+        m.add_le(LinearExpr::of([(a, 1), (b, 1)]), 1);
+        m.tag_constraints(from, "capacity");
+        m.tag_constraint(2, "anti-affinity");
+        assert_eq!(m.constraint_provenance(0), UNTAGGED_PROVENANCE);
+        assert_eq!(m.constraint_provenance(1), "capacity");
+        assert_eq!(m.constraint_provenance(2), "anti-affinity");
+        // out of range: default, no panic
+        assert_eq!(m.constraint_provenance(99), UNTAGGED_PROVENANCE);
+        // tags survive Clone
+        let c = m.clone();
+        assert_eq!(c.constraint_provenance(1), "capacity");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! groups, so the search remains complete for arbitrary models.
 
 use super::model::{CmpOp, Model, VarId};
+use super::probe::Probe;
 
 /// A branchable group: choose at most one of `options` to set true.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,6 +65,20 @@ pub fn detect_structure(model: &Model) -> Structure {
     Structure { groups, var_group }
 }
 
+/// [`detect_structure`] plus solve forensics: records how presolve
+/// carved the model — branchable multi-option groups versus singleton
+/// fallbacks — so a profile shows whether group branching (the engine's
+/// main structural lever) engaged at all.
+pub fn detect_structure_probed(model: &Model, probe: &Probe) -> Structure {
+    let s = detect_structure(model);
+    if probe.enabled() {
+        let singletons = s.groups.iter().filter(|g| g.options.len() == 1).count() as u64;
+        probe.attr("search:presolve", "groups", s.groups.len() as u64 - singletons);
+        probe.attr("search:presolve", "singletons", singletons);
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +125,26 @@ mod tests {
         assert_eq!(s.groups[0].options, vec![a, b]);
         // c fell back to a singleton
         assert!(s.groups.iter().any(|g| g.options == vec![c]));
+    }
+
+    #[test]
+    fn probed_detection_counts_groups_and_singletons() {
+        let mut m = Model::new();
+        let xs = m.new_vars(3);
+        let y = m.new_var();
+        m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        m.add_le(LinearExpr::of([(xs[0], 2), (y, 1)]), 2);
+        let probe = Probe::armed();
+        let s = detect_structure_probed(&m, &probe);
+        assert_eq!(s.groups.len(), 2); // one real group + y singleton
+        let eff = probe.module_effort();
+        assert!(eff.contains(&("search:presolve".to_string(), "groups", 1)));
+        assert!(eff.contains(&("search:presolve".to_string(), "singletons", 1)));
+        // Off probe: same structure, nothing recorded.
+        let off = Probe::off();
+        let s2 = detect_structure_probed(&m, &off);
+        assert_eq!(s2.groups.len(), s.groups.len());
+        assert!(off.module_effort().is_empty());
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Solve forensics: a deterministic search profiler with per-constraint
+//! attribution and optimality-gap timelines.
+//!
+//! A [`Probe`] is the forensic counterpart of
+//! [`Telemetry`](crate::telemetry::Telemetry): an optional recorder
+//! threaded through the solver core that is a zero-overhead no-op when
+//! off ([`Probe::off`]) and, when armed, attributes search effort —
+//! propagation work, conflicts, bound/floor prunes, symmetry skips — to
+//! **constraint provenance** slugs
+//! ([`Model::constraint_provenance`](super::model::Model)) so the
+//! numbers map back to model semantics (capacity:cpu, anti-affinity,
+//! lock, …), not row indices. It also records **optimality-gap
+//! timelines** as `(decisions, incumbent, bound)` samples.
+//!
+//! # Determinism contract
+//!
+//! Everything a probe records is indexed by *decision count*, never wall
+//! clock, and the portfolio arms it only on the canonical exact-search
+//! lane (the legacy solve at one thread; the floor-detached whole-model
+//! anchor otherwise). On solves the deadline does not truncate, the
+//! profile is therefore **byte-identical across thread counts**, and
+//! arming the probe never changes plans, objective vectors, or
+//! certificates (pinned by `rust/tests/proptests.rs`). The profiler
+//! lives in the detlint *core* zone on purpose: it must stay inside the
+//! determinism boundary, and core code can never read a profile back
+//! into decisions (the `telemetry-feedback` rule covers the read APIs).
+//!
+//! # Context frames
+//!
+//! Effort is recorded under a stack of context frames pushed by the
+//! layers above (`t0.p1` per tier/phase from the optimiser, `exact` for
+//! the canonical lane, `lns` inside the polish). The folded-stack export
+//! renders one `frame;frame;slug;kind count` line per entry — directly
+//! consumable by flamegraph.pl.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Schema identifier embedded in every profile JSON document.
+pub const PROFILE_SCHEMA: &str = "kube-packd/profile/v1";
+
+/// Root frame of every folded stack (so single-level records still form
+/// a valid stack).
+const ROOT_FRAME: &str = "solve";
+
+/// One optimality-gap sample: the incumbent improved to `incumbent` at
+/// `decisions` decisions, against admissible bound `bound`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GapSample {
+    /// Context path at recording time (`;`-joined frames).
+    pub context: String,
+    pub decisions: u64,
+    pub incumbent: i64,
+    pub bound: i64,
+}
+
+#[derive(Debug, Default)]
+struct Recorder {
+    /// Current context-frame stack.
+    stack: Vec<String>,
+    /// (context path, provenance slug, effort kind) → count.
+    effort: BTreeMap<(String, String, &'static str), u64>,
+    gap: Vec<GapSample>,
+}
+
+impl Recorder {
+    fn path(&self) -> String {
+        if self.stack.is_empty() {
+            ROOT_FRAME.to_string()
+        } else {
+            let mut p = ROOT_FRAME.to_string();
+            for f in &self.stack {
+                p.push(';');
+                p.push_str(f);
+            }
+            p
+        }
+    }
+}
+
+/// The forensics handle. `Probe::off()` (the default) is a no-op shell —
+/// every method early-returns without allocating.
+#[derive(Debug, Default)]
+pub struct Probe {
+    inner: Option<RefCell<Recorder>>,
+}
+
+impl Probe {
+    /// Disabled handle — all operations are no-ops.
+    pub fn off() -> Probe {
+        Probe { inner: None }
+    }
+
+    /// Enabled handle that records search forensics.
+    pub fn armed() -> Probe {
+        Probe {
+            inner: Some(RefCell::new(Recorder::default())),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Push a context frame; the returned guard pops it on drop.
+    pub fn frame(&self, label: &str) -> FrameGuard<'_> {
+        if let Some(cell) = &self.inner {
+            cell.borrow_mut().stack.push(label.to_string());
+        }
+        FrameGuard { probe: self }
+    }
+
+    /// Attribute `count` units of effort `kind` to provenance `slug`
+    /// under the current context. Zero counts are dropped so profiles
+    /// list only observed effort.
+    pub fn attr(&self, slug: &str, kind: &'static str, count: u64) {
+        if count == 0 {
+            return;
+        }
+        if let Some(cell) = &self.inner {
+            let mut r = cell.borrow_mut();
+            let path = r.path();
+            *r.effort.entry((path, slug.to_string(), kind)).or_insert(0) += count;
+        }
+    }
+
+    /// Record an optimality-gap sample (decision-indexed, never wall
+    /// clock — the determinism boundary).
+    pub fn gap(&self, decisions: u64, incumbent: i64, bound: i64) {
+        if let Some(cell) = &self.inner {
+            let mut r = cell.borrow_mut();
+            let context = r.path();
+            r.gap.push(GapSample {
+                context,
+                decisions,
+                incumbent,
+                bound,
+            });
+        }
+    }
+
+    /// Spawn a handle for a portfolio race lane, inheriting the current
+    /// context frames. Create on the owning thread before workers spawn;
+    /// hand back via [`absorb`](Self::absorb) — exactly the
+    /// `Telemetry::child` discipline.
+    pub fn child(&self) -> Probe {
+        match &self.inner {
+            None => Probe::off(),
+            Some(cell) => Probe {
+                inner: Some(RefCell::new(Recorder {
+                    stack: cell.borrow().stack.clone(),
+                    effort: BTreeMap::new(),
+                    gap: Vec::new(),
+                })),
+            },
+        }
+    }
+
+    /// Merge a child handle's record into this one. Deterministic when
+    /// callers absorb in a deterministic order; the race absorbs its one
+    /// canonical lane after the thread scope ends.
+    pub fn absorb(&self, child: Probe) {
+        let cell = match &self.inner {
+            Some(c) => c,
+            None => return,
+        };
+        let ccell = match child.inner {
+            Some(c) => c,
+            None => return,
+        };
+        let c = ccell.into_inner();
+        let mut r = cell.borrow_mut();
+        for (key, n) in c.effort {
+            *r.effort.entry(key).or_insert(0) += n;
+        }
+        r.gap.extend(c.gap);
+    }
+
+    /// Per-slug effort rollup, summed across contexts: sorted
+    /// `(slug, kind, count)` triples. Read API — core code must not call
+    /// this (detlint `telemetry-feedback`).
+    pub fn module_effort(&self) -> Vec<(String, &'static str, u64)> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(cell) => rollup(&cell.borrow()),
+        }
+    }
+
+    /// All recorded gap samples, in recording order. Read API — core
+    /// code must not call this (detlint `telemetry-feedback`).
+    pub fn gap_samples(&self) -> Vec<GapSample> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(cell) => cell.borrow().gap.clone(),
+        }
+    }
+
+    /// flamegraph.pl-compatible folded stacks: one
+    /// `frame;frame;slug;kind count` line per effort entry, sorted.
+    /// Read API — core code must not call this (detlint
+    /// `telemetry-feedback`).
+    pub fn export_folded(&self) -> String {
+        match &self.inner {
+            None => String::new(),
+            Some(cell) => render_folded(&cell.borrow()),
+        }
+    }
+
+    /// The complete profile document (`kube-packd/profile/v1`): effort
+    /// table, per-slug rollup, gap timeline, folded stacks. Read API —
+    /// core code must not call this (detlint `telemetry-feedback`).
+    pub fn export_profile_json(&self) -> String {
+        match &self.inner {
+            None => render_profile(&Recorder::default()),
+            Some(cell) => render_profile(&cell.borrow()),
+        }
+    }
+}
+
+/// RAII context-frame guard from [`Probe::frame`].
+pub struct FrameGuard<'a> {
+    probe: &'a Probe,
+}
+
+impl Drop for FrameGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(cell) = &self.probe.inner {
+            cell.borrow_mut().stack.pop();
+        }
+    }
+}
+
+fn rollup(rec: &Recorder) -> Vec<(String, &'static str, u64)> {
+    let mut sums: BTreeMap<(String, &'static str), u64> = BTreeMap::new();
+    for ((_, slug, kind), &n) in &rec.effort {
+        *sums.entry((slug.clone(), kind)).or_insert(0) += n;
+    }
+    sums.into_iter().map(|((s, k), n)| (s, k, n)).collect()
+}
+
+fn render_folded(rec: &Recorder) -> String {
+    let mut out = String::new();
+    for ((path, slug, kind), n) in &rec.effort {
+        out.push_str(path);
+        out.push(';');
+        out.push_str(slug);
+        out.push(';');
+        out.push_str(kind);
+        out.push(' ');
+        out.push_str(&n.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn render_profile(rec: &Recorder) -> String {
+    let mut doc = Json::obj();
+    doc.set("schema", PROFILE_SCHEMA);
+
+    let effort: Vec<Json> = rec
+        .effort
+        .iter()
+        .map(|((path, slug, kind), &n)| {
+            let mut e = Json::obj();
+            e.set("context", path.as_str())
+                .set("slug", slug.as_str())
+                .set("kind", *kind)
+                .set("count", n);
+            e
+        })
+        .collect();
+    doc.set("effort", Json::Arr(effort));
+
+    let modules: Vec<Json> = rollup(rec)
+        .into_iter()
+        .map(|(slug, kind, n)| {
+            let mut e = Json::obj();
+            e.set("slug", slug).set("kind", kind).set("count", n);
+            e
+        })
+        .collect();
+    doc.set("modules", Json::Arr(modules));
+
+    let gap: Vec<Json> = rec
+        .gap
+        .iter()
+        .map(|s| {
+            let mut e = Json::obj();
+            e.set("context", s.context.as_str())
+                .set("decisions", s.decisions)
+                .set("incumbent", s.incumbent)
+                .set("bound", s.bound);
+            e
+        })
+        .collect();
+    doc.set("gap", Json::Arr(gap));
+
+    let folded: Vec<Json> = render_folded(rec)
+        .lines()
+        .map(Json::from)
+        .collect();
+    doc.set("folded", Json::Arr(folded));
+
+    doc.to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn off_handle_is_inert() {
+        let p = Probe::off();
+        assert!(!p.enabled());
+        {
+            let _f = p.frame("t0.p1");
+            p.attr("capacity:cpu", "propagations", 10);
+            p.gap(1, 2, 3);
+        }
+        assert!(p.module_effort().is_empty());
+        assert!(p.gap_samples().is_empty());
+        assert_eq!(p.export_folded(), "");
+        let doc = json::parse(&p.export_profile_json()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(PROFILE_SCHEMA));
+        assert!(doc.get("effort").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn frames_nest_into_folded_paths() {
+        let p = Probe::armed();
+        {
+            let _t = p.frame("t0.p1");
+            let _e = p.frame("exact");
+            p.attr("capacity:cpu", "propagations", 7);
+            p.attr("capacity:cpu", "propagations", 3);
+        }
+        p.attr("search", "decisions", 5);
+        let folded = p.export_folded();
+        assert!(folded.contains("solve;t0.p1;exact;capacity:cpu;propagations 10"));
+        assert!(folded.contains("solve;search;decisions 5"));
+        // every folded line obeys the `stack;frames count` grammar
+        for line in folded.lines() {
+            let (stack, count) = line.rsplit_once(' ').unwrap();
+            assert!(stack.split(';').count() >= 3, "{line}");
+            count.parse::<u64>().unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_counts_are_dropped() {
+        let p = Probe::armed();
+        p.attr("spread", "conflicts", 0);
+        assert!(p.module_effort().is_empty());
+    }
+
+    #[test]
+    fn child_inherits_frames_and_absorbs_in_order() {
+        let p = Probe::armed();
+        let _t = p.frame("t1.p2");
+        let c = p.child();
+        {
+            let _e = c.frame("exact");
+            c.attr("anti-affinity", "conflicts", 4);
+            c.gap(12, 3, 5);
+        }
+        p.absorb(c);
+        let folded = p.export_folded();
+        assert!(folded.contains("solve;t1.p2;exact;anti-affinity;conflicts 4"));
+        let gaps = p.gap_samples();
+        assert_eq!(gaps.len(), 1);
+        assert_eq!(gaps[0].context, "solve;t1.p2;exact");
+        assert_eq!(gaps[0].decisions, 12);
+    }
+
+    #[test]
+    fn rollup_sums_across_contexts() {
+        let p = Probe::armed();
+        {
+            let _a = p.frame("t0.p1");
+            p.attr("capacity:ram", "propagations", 6);
+        }
+        {
+            let _b = p.frame("t1.p1");
+            p.attr("capacity:ram", "propagations", 4);
+        }
+        assert_eq!(
+            p.module_effort(),
+            vec![("capacity:ram".to_string(), "propagations", 10)]
+        );
+    }
+
+    #[test]
+    fn profile_json_is_schema_stable_and_byte_stable() {
+        let p = Probe::armed();
+        {
+            let _t = p.frame("t0.p1");
+            p.attr("lock", "conflicts", 2);
+            p.gap(9, 1, 3);
+        }
+        let a = p.export_profile_json();
+        assert_eq!(a, p.export_profile_json());
+        let doc = json::parse(&a).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(PROFILE_SCHEMA));
+        let eff = doc.get("effort").unwrap().as_arr().unwrap();
+        assert_eq!(eff.len(), 1);
+        assert_eq!(eff[0].get("slug").unwrap().as_str(), Some("lock"));
+        assert_eq!(eff[0].get("count").unwrap().as_i64(), Some(2));
+        let gap = doc.get("gap").unwrap().as_arr().unwrap();
+        assert_eq!(gap[0].get("decisions").unwrap().as_i64(), Some(9));
+        assert_eq!(gap[0].get("incumbent").unwrap().as_i64(), Some(1));
+        assert_eq!(gap[0].get("bound").unwrap().as_i64(), Some(3));
+        let folded = doc.get("folded").unwrap().as_arr().unwrap();
+        assert_eq!(
+            folded[0].as_str(),
+            Some("solve;t0.p1;lock;conflicts 2")
+        );
+    }
+}

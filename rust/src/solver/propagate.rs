@@ -51,12 +51,28 @@ pub struct Propagator {
     scratch: Vec<u32>,
     /// Number of propagations performed (stats).
     pub propagations: u64,
+    /// Per-constraint propagation counts (solve forensics). `None`
+    /// unless built via [`new_probed`](Self::new_probed) with the probe
+    /// armed — the off path pays one predictable branch, no allocation.
+    per_cons: Option<Vec<u64>>,
+    /// Constraint index behind the most recent conflict (forensics).
+    /// Cleared at each `decide`; `None` when the conflict had no
+    /// constraint (e.g. an assignment contradicting the trail).
+    last_conflict: Option<u32>,
 }
 
 impl Propagator {
     /// Build from a model and run root propagation. `None` = infeasible
     /// at the root.
     pub fn new(model: &Model) -> Option<Propagator> {
+        Self::new_probed(model, false)
+    }
+
+    /// Like [`new`](Self::new), but when `probed` also records
+    /// per-constraint propagation counts (including the root wave, which
+    /// runs after the counters are armed) and conflict attribution for
+    /// the solve-forensics profiler.
+    pub fn new_probed(model: &Model, probed: bool) -> Option<Propagator> {
         let nv = model.num_vars();
         let nc = model.constraints.len();
         let mut occurs: Vec<Vec<(u32, i64)>> = vec![Vec::new(); nv];
@@ -99,6 +115,8 @@ impl Propagator {
             on_queue: vec![false; nc],
             scratch: Vec::with_capacity(nc),
             propagations: 0,
+            per_cons: if probed { Some(vec![0; nc]) } else { None },
+            last_conflict: None,
         };
         // Root propagation over all constraints.
         p.on_queue.iter_mut().for_each(|f| *f = true);
@@ -161,6 +179,7 @@ impl Propagator {
     /// Assign `v := val` and propagate to fixpoint. Returns `false` on
     /// conflict (caller must `pop_level`).
     pub fn decide(&mut self, v: VarId, val: bool) -> bool {
+        self.last_conflict = None;
         let mut queue = std::mem::take(&mut self.scratch);
         queue.clear();
         if !self.enqueue_assign(v, val, &mut queue) {
@@ -215,6 +234,9 @@ impl Propagator {
         while let Some(ci) = queue.pop() {
             self.propagations += 1;
             let c = ci as usize;
+            if let Some(pc) = &mut self.per_cons {
+                pc[c] += 1;
+            }
             self.on_queue[c] = false;
             let rhs = self.cons_rhs[c];
             let min = self.fixed[c] + self.neg_open[c];
@@ -225,9 +247,11 @@ impl Propagator {
             let check_ge = matches!(op, CmpOp::Ge | CmpOp::Eq);
 
             if check_le && min > rhs {
+                self.last_conflict = Some(ci);
                 return false;
             }
             if check_ge && max < rhs {
+                self.last_conflict = Some(ci);
                 return false;
             }
 
@@ -265,12 +289,14 @@ impl Propagator {
                 if check_le {
                     if coef > 0 && min + coef > rhs {
                         if !self.enqueue_assign(var, false, queue) {
+                            self.last_conflict = Some(ci);
                             return false;
                         }
                         continue;
                     }
                     if coef < 0 && min - coef > rhs {
                         if !self.enqueue_assign(var, true, queue) {
+                            self.last_conflict = Some(ci);
                             return false;
                         }
                         continue;
@@ -279,12 +305,14 @@ impl Propagator {
                 if check_ge {
                     if coef > 0 && max - coef < rhs {
                         if !self.enqueue_assign(var, true, queue) {
+                            self.last_conflict = Some(ci);
                             return false;
                         }
                         continue;
                     }
                     if coef < 0 && max + coef < rhs {
                         if !self.enqueue_assign(var, false, queue) {
+                            self.last_conflict = Some(ci);
                             return false;
                         }
                     }
@@ -314,6 +342,18 @@ impl Propagator {
     #[inline]
     pub fn trail_since(&self, from: usize) -> &[u32] {
         &self.trail[from..]
+    }
+
+    /// Constraint behind the most recent conflict, if any was recorded
+    /// (solve forensics — valid until the next `decide`).
+    #[inline]
+    pub fn last_conflict(&self) -> Option<usize> {
+        self.last_conflict.map(|ci| ci as usize)
+    }
+
+    /// Per-constraint propagation counts (`None` unless probed).
+    pub fn per_cons_propagations(&self) -> Option<&[u64]> {
+        self.per_cons.as_deref()
     }
 
     /// Snapshot the current (possibly partial) assignment as booleans,
@@ -408,6 +448,52 @@ mod tests {
         p.push_level();
         assert!(p.decide(a, false));
         assert!(!p.decide(b, false)); // both false violates ≥1
+    }
+
+    #[test]
+    fn probed_counts_and_conflict_attribution() {
+        let mut m = Model::new();
+        let a = m.new_var();
+        let b = m.new_var();
+        m.add_le(LinearExpr::of([(a, 1), (b, 1)]), 1); // ci 0
+        m.add_ge(LinearExpr::of([(a, 1), (b, 1)]), 1); // ci 1
+        let mut p = Propagator::new_probed(&m, true).unwrap();
+        // Root wave counted per constraint.
+        let pc = p.per_cons_propagations().unwrap();
+        assert_eq!(pc.len(), 2);
+        assert!(pc.iter().sum::<u64>() >= 2);
+        assert_eq!(pc.iter().sum::<u64>(), p.propagations);
+        p.push_level();
+        assert!(p.decide(a, false));
+        assert_eq!(p.value(b), Some(true)); // ≥1 forces b
+        p.pop_level();
+        p.push_level();
+        assert!(p.decide(a, true)); // ≤1 forces ¬b
+        assert!(!p.decide(b, true)); // contradicts trail: no constraint
+        assert_eq!(p.last_conflict(), None);
+        p.pop_level();
+        // A propagation-detected conflict names its constraint.
+        let mut m2 = Model::new();
+        let x = m2.new_var();
+        let y = m2.new_var();
+        m2.add_le(LinearExpr::of([(x, 1), (y, 1)]), 1); // ci 0
+        m2.add_ge(LinearExpr::of([(x, 1), (y, 1)]), 2); // ci 1: needs both
+        // ≥2 forces both true at the root, then ≤1 conflicts: root-infeasible.
+        assert!(Propagator::new_probed(&m2, true).is_none());
+        let mut m3 = Model::new();
+        let u = m3.new_var();
+        let v = m3.new_var();
+        let w = m3.new_var();
+        m3.add_le(LinearExpr::of([(u, 1), (v, 1), (w, 1)]), 1); // ci 0
+        m3.add_ge(LinearExpr::of([(v, 1), (w, 1)]), 1); // ci 1
+        let mut q = Propagator::new_probed(&m3, true).unwrap();
+        q.push_level();
+        // u true: ≤1 forces ¬v, ¬w, which violates ci 1.
+        assert!(!q.decide(u, true));
+        assert!(q.last_conflict().is_some());
+        // Unprobed propagator allocates no per-constraint counters.
+        let plain = Propagator::new(&m3).unwrap();
+        assert!(plain.per_cons_propagations().is_none());
     }
 
     #[test]

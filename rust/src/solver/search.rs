@@ -25,8 +25,9 @@ use crate::telemetry::clock::Deadline;
 
 use super::bound::upper_bound;
 use super::lns::lns_polish;
-use super::model::{CmpOp, LinearExpr, Model, VarId};
-use super::presolve::{detect_structure, Structure};
+use super::model::{CmpOp, LinearExpr, Model, VarId, UNTAGGED_PROVENANCE};
+use super::presolve::{detect_structure_probed, Structure};
+use super::probe::Probe;
 use super::propagate::Propagator;
 use super::solution::{SearchStats, SolveStatus, Solution};
 
@@ -187,12 +188,32 @@ pub fn solve_max_with(
     config: &SolverConfig,
     shared: Option<&SharedIncumbent>,
 ) -> Solution {
+    solve_max_probed(model, objective, deadline, config, shared, &Probe::off())
+}
+
+/// [`solve_max_with`] plus solve forensics: when `probe` is armed,
+/// propagation work and conflicts are attributed to constraint
+/// provenance ([`Model::constraint_provenance`]), search-level effort
+/// (decisions, bound/floor prunes, symmetry skips) lands in the
+/// `search:*` buckets, and every incumbent improvement appends a
+/// decision-indexed optimality-gap sample. Arming the probe never
+/// changes the search: value ordering, pruning, and the returned
+/// solution are bit-for-bit those of the unprobed solve
+/// (`rust/tests/proptests.rs` pins this).
+pub fn solve_max_probed(
+    model: &Model,
+    objective: &LinearExpr,
+    deadline: Deadline,
+    config: &SolverConfig,
+    shared: Option<&SharedIncumbent>,
+    probe: &Probe,
+) -> Solution {
     // detlint: allow(wall-clock) — the solve stopwatch and deadline anchor:
     // the one sanctioned time source for anytime termination.
     let started = Instant::now();
     let mut stats = SearchStats::default();
 
-    let structure = detect_structure(model);
+    let structure = detect_structure_probed(model, probe);
     let mut obj = vec![0i64; model.num_vars()];
     for &(v, c) in &objective.clone().normalized().terms {
         obj[v.idx()] = c;
@@ -204,15 +225,17 @@ pub fn solve_max_with(
         deadline
     };
 
-    let mut searcher = match Searcher::new(model, &structure, &obj, dfs_deadline, config, shared) {
-        Some(s) => s,
-        None => {
-            stats.solve_time_s = started.elapsed().as_secs_f64();
-            return Solution::infeasible(stats);
-        }
-    };
+    let mut searcher =
+        match Searcher::new(model, &structure, &obj, dfs_deadline, config, shared, probe) {
+            Some(s) => s,
+            None => {
+                stats.solve_time_s = started.elapsed().as_secs_f64();
+                return Solution::infeasible(stats);
+            }
+        };
     searcher.dfs(0, 0);
     searcher.drain_stats(&mut stats);
+    searcher.flush_probe();
 
     let complete = !searcher.timed_out;
     let root_ub = searcher.root_ub;
@@ -230,9 +253,11 @@ pub fn solve_max_with(
             &obj,
             best.clone().unwrap(),
             best_val,
+            root_ub,
             deadline,
             config,
             shared,
+            probe,
             &mut stats,
         );
         best = Some(nb);
@@ -324,6 +349,13 @@ pub(super) struct Searcher<'a> {
     floor_prunes: u64,
     symmetry_skips: u64,
     max_depth: u32,
+    /// Solve-forensics handle ([`Probe::off`] outside profiled solves).
+    probe: &'a Probe,
+    /// Per-constraint conflict counts (probe armed only).
+    conflict_attr: Option<Vec<u64>>,
+    /// Conflicts the propagator could not pin to a constraint (e.g. an
+    /// assignment contradicting the trail directly).
+    unattributed_conflicts: u64,
 }
 
 impl<'a> Searcher<'a> {
@@ -335,8 +367,9 @@ impl<'a> Searcher<'a> {
         deadline: Deadline,
         config: &'a SolverConfig,
         shared: Option<&'a SharedIncumbent>,
+        probe: &'a Probe,
     ) -> Option<Self> {
-        let prop = Propagator::new(model)?;
+        let prop = Propagator::new_probed(model, probe.enabled())?;
         let nv = model.num_vars();
         let ng = structure.groups.len();
 
@@ -480,6 +513,13 @@ impl<'a> Searcher<'a> {
             floor_prunes: 0,
             symmetry_skips: 0,
             max_depth: 0,
+            probe,
+            conflict_attr: if probe.enabled() {
+                Some(vec![0; model.constraints.len()])
+            } else {
+                None
+            },
+            unattributed_conflicts: 0,
         };
 
         // Root propagation may already have fixed vars: sync from scratch.
@@ -673,6 +713,22 @@ impl<'a> Searcher<'a> {
             if let Some(shared) = self.shared {
                 shared.publish(val);
             }
+            // Optimality-gap timeline: decision-indexed (never wall
+            // clock), so a completing search yields the same samples on
+            // every run regardless of thread count or machine speed.
+            self.probe.gap(self.decisions, val, self.root_ub);
+        }
+    }
+
+    /// Attribute the conflict just returned by the propagator (no-op
+    /// when the probe is off).
+    #[inline]
+    fn note_conflict(&mut self) {
+        if let Some(attr) = &mut self.conflict_attr {
+            match self.prop.last_conflict() {
+                Some(ci) => attr[ci] += 1,
+                None => self.unattributed_conflicts += 1,
+            }
         }
     }
 
@@ -797,6 +853,7 @@ impl<'a> Searcher<'a> {
                 self.undo_to(mark);
             } else {
                 self.conflicts += 1;
+                self.note_conflict();
                 self.prop.pop_level();
             }
             if self.best_val >= self.root_ub && self.best.is_some() {
@@ -828,8 +885,38 @@ impl<'a> Searcher<'a> {
             self.undo_to(mark);
         } else {
             self.conflicts += 1;
+            self.note_conflict();
             self.prop.pop_level();
         }
+    }
+
+    /// Flush accumulated effort to the probe, mapping constraint indices
+    /// to provenance slugs. Call once per solve, after the DFS; a no-op
+    /// when the probe is off (every `attr` drops zero counts too, so
+    /// untouched buckets never appear in the profile).
+    pub(super) fn flush_probe(&self) {
+        if !self.probe.enabled() {
+            return;
+        }
+        if let Some(per) = self.prop.per_cons_propagations() {
+            for (ci, &n) in per.iter().enumerate() {
+                self.probe
+                    .attr(self.model.constraint_provenance(ci), "propagations", n);
+            }
+        }
+        if let Some(attr) = &self.conflict_attr {
+            for (ci, &n) in attr.iter().enumerate() {
+                self.probe
+                    .attr(self.model.constraint_provenance(ci), "conflicts", n);
+            }
+        }
+        self.probe
+            .attr(UNTAGGED_PROVENANCE, "conflicts", self.unattributed_conflicts);
+        self.probe.attr("search", "decisions", self.decisions);
+        self.probe.attr("search:bound", "prunes", self.bound_prunes);
+        self.probe.attr("search:floor", "prunes", self.floor_prunes);
+        self.probe
+            .attr("search:symmetry", "skips", self.symmetry_skips);
     }
 
     pub(super) fn drain_stats(&self, stats: &mut SearchStats) {
@@ -1113,6 +1200,63 @@ mod tests {
         if sol.status.has_solution() {
             assert!(m.feasible(&sol.values));
         }
+    }
+
+    #[test]
+    fn probe_is_invisible_to_the_search_and_attributes_all_effort() {
+        // A mixed instance with tagged provenance: figure-1 packing with
+        // the rows labelled the way PackingModelBuilder labels them.
+        let mut m = Model::new();
+        let pods = [2048i64, 2048, 3072];
+        let mut vars = Vec::new();
+        for _ in &pods {
+            let from = m.next_constraint_index();
+            let xs = m.new_vars(2);
+            m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+            m.tag_constraints(from, "placement");
+            vars.push(xs);
+        }
+        let from = m.next_constraint_index();
+        for node in 0..2 {
+            m.add_le(
+                LinearExpr::of(vars.iter().zip(&pods).map(|(xs, &r)| (xs[node], r))),
+                4096,
+            );
+        }
+        m.tag_constraints(from, "capacity:ram");
+        let obj = LinearExpr::of(vars.iter().flatten().map(|&v| (v, 1)));
+
+        let off = solve_max(&m, &obj, Deadline::unlimited(), &cfg());
+        let probe = Probe::armed();
+        let probed =
+            solve_max_probed(&m, &obj, Deadline::unlimited(), &cfg(), None, &probe);
+
+        // Identical answer AND identical search trajectory.
+        assert_eq!(probed.status, off.status);
+        assert_eq!(probed.objective, off.objective);
+        assert_eq!(probed.values, off.values);
+        assert_eq!(probed.bound, off.bound);
+        assert_eq!(probed.stats.decisions, off.stats.decisions);
+        assert_eq!(probed.stats.propagations, off.stats.propagations);
+        assert_eq!(probed.stats.conflicts, off.stats.conflicts);
+
+        // Every propagation/conflict/decision lands in some bucket.
+        let eff = probe.module_effort();
+        let sum = |kind: &str| -> u64 {
+            eff.iter().filter(|(_, k, _)| *k == kind).map(|&(_, _, n)| n).sum()
+        };
+        assert_eq!(sum("propagations"), probed.stats.propagations);
+        assert_eq!(sum("conflicts"), probed.stats.conflicts);
+        assert_eq!(sum("decisions"), probed.stats.decisions);
+        // Attribution reaches the provenance slugs, not just search:*.
+        assert!(eff.iter().any(|(s, k, _)| s == "placement" && *k == "propagations"));
+        assert!(eff.iter().any(|(s, k, _)| s == "capacity:ram" && *k == "propagations"));
+        // Optimal solve: the gap timeline ends with incumbent == bound.
+        let gaps = probe.gap_samples();
+        assert!(!gaps.is_empty());
+        let last = gaps.last().unwrap();
+        assert_eq!(last.incumbent, probed.objective);
+        assert!(last.incumbent <= last.bound);
     }
 
     #[test]

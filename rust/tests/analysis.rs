@@ -141,6 +141,39 @@ fn telemetry_feedback_clean_twins() {
     assert!(fired("server/mod.rs", reads).is_empty());
 }
 
+#[test]
+fn telemetry_feedback_covers_the_probe_read_surface() {
+    // Reading solve forensics back inside the core would let the
+    // profiler steer placement — every Probe read/export API fires.
+    for read in [
+        "self.prof.export_profile_json()",
+        "self.prof.export_folded()",
+        "self.prof.module_effort()",
+        "self.prof.gap_samples()",
+    ] {
+        let src = format!("fn f(&self) {{ let x = {read}; }}");
+        assert_eq!(
+            fired("solver/x.rs", &src),
+            vec!["telemetry-feedback"],
+            "{read}"
+        );
+    }
+}
+
+#[test]
+fn telemetry_feedback_probe_clean_twins() {
+    // The probe's write path (frames, attribution, gap samples, child
+    // absorption) is the recording contract — legal everywhere.
+    let writes = "fn f(&self, prof: &Probe) { let _pf = prof.frame(\"exact\"); \
+                  prof.attr(\"capacity:cpu\", \"propagations\", 3); \
+                  prof.gap(10, 4, 7); prof.absorb(prof.child()); }";
+    assert!(fired("solver/x.rs", writes).is_empty());
+    // Reads are fine outside the core: the CLI report printer lives in
+    // the exempt zone.
+    let reads = "fn f(prof: &Probe) { let doc = prof.export_profile_json(); }";
+    assert!(fired("main.rs", reads).is_empty());
+}
+
 // -- directives -------------------------------------------------------------
 
 #[test]

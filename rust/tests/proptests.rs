@@ -6,11 +6,14 @@
 use kube_packd::cluster::{ClusterState, NodeId, Pod, PodId, Priority, Resources};
 use kube_packd::lifecycle::{run_churn, ChurnConfig, Policy};
 use kube_packd::metrics::lex_better;
-use kube_packd::optimizer::algorithm::{optimize, OptimizerConfig};
+use kube_packd::optimizer::algorithm::{optimize, optimize_probed, OptimizerConfig};
 use kube_packd::optimizer::plan::MovePlan;
+use kube_packd::portfolio::PortfolioConfig;
 use kube_packd::simulator::KwokSimulator;
-use kube_packd::solver::{solve_max, LinearExpr, Model, SolveStatus, SolverConfig};
-use kube_packd::telemetry::Deadline;
+use kube_packd::solver::{
+    solve_max, solve_max_probed, LinearExpr, Model, Probe, SolveStatus, SolverConfig,
+};
+use kube_packd::telemetry::{Deadline, Telemetry};
 use kube_packd::util::prop::check;
 use kube_packd::util::rng::Rng;
 use kube_packd::workload::churn::{ChurnParams, ChurnTraceGenerator};
@@ -28,23 +31,29 @@ fn random_packing(rng: &mut Rng) -> (Model, LinearExpr, usize, usize) {
         .collect();
     for _ in 0..pods {
         let xs = m.new_vars(nodes);
+        let ci = m.next_constraint_index();
         m.add_le(LinearExpr::of(xs.iter().map(|&v| (v, 1))), 1);
+        m.tag_constraint(ci, "placement");
         vars.push(xs);
     }
     let cap = rng.range_i64(300, 1500);
     let mut cpu_class = Vec::new();
     let mut ram_class = Vec::new();
     for j in 0..nodes {
-        cpu_class.push(m.next_constraint_index());
+        let ci = m.next_constraint_index();
+        cpu_class.push(ci);
         m.add_le(
             LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(c, _))| (xs[j], c))),
             cap,
         );
-        ram_class.push(m.next_constraint_index());
+        m.tag_constraint(ci, "capacity:cpu");
+        let ci = m.next_constraint_index();
+        ram_class.push(ci);
         m.add_le(
             LinearExpr::of(vars.iter().zip(&demands).map(|(xs, &(_, r))| (xs[j], r))),
             cap,
         );
+        m.tag_constraint(ci, "capacity:ram");
     }
     m.add_resource_class(cpu_class);
     m.add_resource_class(ram_class);
@@ -417,6 +426,180 @@ fn prop_churn_timeline_replay_is_byte_identical() {
             }
             if r1.final_placed != r2.final_placed || r1.evictions != r2.evictions {
                 return Err("end metrics diverged on replay".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_armed_probe_is_invisible_and_attributes_all_effort() {
+    // Arming the forensics probe must never change a solution, and every
+    // unit of recorded effort must land on a provenance slug — conflicts
+    // and propagations sum exactly to the search counters, with nothing
+    // outside the tagged modules and the explicit `search:*` buckets.
+    check(
+        "probe_invisible_and_attributed",
+        0x9B0E,
+        25,
+        random_packing,
+        |(m, obj, _, _)| {
+            let cfg = SolverConfig::default();
+            let off = solve_max(m, obj, Deadline::unlimited(), &cfg);
+            let prof = Probe::armed();
+            let armed = solve_max_probed(m, obj, Deadline::unlimited(), &cfg, None, &prof);
+            if (&armed.values, armed.objective, armed.status, armed.bound)
+                != (&off.values, off.objective, off.status, off.bound)
+            {
+                return Err(format!(
+                    "arming the probe changed the answer: {:?}/{} vs {:?}/{}",
+                    armed.status, armed.objective, off.status, off.objective
+                ));
+            }
+            let eff = prof.module_effort();
+            let total = |kind: &str| -> u64 {
+                eff.iter()
+                    .filter(|(_, k, _)| *k == kind)
+                    .map(|&(_, _, n)| n)
+                    .sum()
+            };
+            let bucket = |slug: &str, kind: &str| -> u64 {
+                eff.iter()
+                    .find(|(s, k, _)| s == slug && *k == kind)
+                    .map(|&(_, _, n)| n)
+                    .unwrap_or(0)
+            };
+            if total("conflicts") != armed.stats.conflicts {
+                return Err(format!(
+                    "conflicts escaped attribution: {} profiled vs {} counted",
+                    total("conflicts"),
+                    armed.stats.conflicts
+                ));
+            }
+            if total("propagations") != armed.stats.propagations {
+                return Err(format!(
+                    "propagations escaped attribution: {} profiled vs {} counted",
+                    total("propagations"),
+                    armed.stats.propagations
+                ));
+            }
+            for (slug, kind, want) in [
+                ("search", "decisions", armed.stats.decisions),
+                ("search:bound", "prunes", armed.stats.bound_prunes),
+                ("search:floor", "prunes", armed.stats.floor_prunes),
+                ("search:symmetry", "skips", armed.stats.symmetry_skips),
+            ] {
+                if bucket(slug, kind) != want {
+                    return Err(format!(
+                        "{slug}/{kind}: profiled {} vs counted {want}",
+                        bucket(slug, kind)
+                    ));
+                }
+            }
+            // Every slug is either a tagged module or an explicit
+            // search-level bucket — nothing anonymous.
+            for (slug, _, _) in &eff {
+                let known = slug == "placement"
+                    || slug.starts_with("capacity:")
+                    || slug == "search"
+                    || slug.starts_with("search:");
+                if !known {
+                    return Err(format!("effort on unknown provenance slug {slug:?}"));
+                }
+            }
+            // Gap samples stay admissible and decision-indexed.
+            let gaps = prof.gap_samples();
+            for w in gaps.windows(2) {
+                if w[1].decisions < w[0].decisions {
+                    return Err("gap timeline not decision-monotone".into());
+                }
+            }
+            for g in &gaps {
+                if g.bound < g.incumbent {
+                    return Err(format!(
+                        "inadmissible gap sample: incumbent {} above bound {}",
+                        g.incumbent, g.bound
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_probe_is_invisible_through_the_optimizer_across_threads() {
+    // End to end: plans (targets), objective vectors, and certificates
+    // are byte-identical with the probe armed vs off at 1 and 8 threads,
+    // and the armed profile itself is identical across thread counts.
+    // Deadline-truncated (uncertified) solves are skipped — truncation
+    // points are wall-clock artifacts, which is exactly why the probe
+    // only pins profiles for completing solves.
+    check(
+        "probe_invisible_through_optimizer",
+        0x9B0F,
+        6,
+        |rng| {
+            let params = GenParams {
+                nodes: rng.range_usize(2, 5),
+                pods_per_node: rng.range_usize(2, 4),
+                priority_tiers: rng.range_usize(1, 3) as u32,
+                usage: 0.95 + rng.f64() * 0.10,
+            };
+            Instance::generate(params, rng.next_u64())
+        },
+        |inst| {
+            let p_max = inst.params.p_max();
+            let mut sim = KwokSimulator::new(p_max);
+            let (state, _) = sim.run(inst.nodes.clone(), inst.pods.clone());
+            let cfg = |threads: usize| OptimizerConfig {
+                portfolio: PortfolioConfig::with_threads(threads),
+                ..OptimizerConfig::with_timeout(5.0)
+            };
+            let Some(off) = optimize(&state, p_max, &cfg(1)) else {
+                return Ok(());
+            };
+            if !off.proved_optimal {
+                return Ok(()); // truncated — not the property under test
+            }
+            let mut profiles = Vec::new();
+            for threads in [1usize, 8] {
+                let prof = Probe::armed();
+                let Some(armed) = optimize_probed(
+                    &state,
+                    p_max,
+                    &cfg(threads),
+                    None,
+                    &Telemetry::off(),
+                    &prof,
+                ) else {
+                    return Err(format!("armed solve at {threads} threads failed"));
+                };
+                if armed.target != off.target {
+                    return Err(format!("plan drifted at {threads} threads (armed vs off)"));
+                }
+                if armed.placed_per_priority != off.placed_per_priority {
+                    return Err(format!("objective vector drifted at {threads} threads"));
+                }
+                if armed.proved_optimal != off.proved_optimal {
+                    return Err(format!("certificate drifted at {threads} threads"));
+                }
+                for (a, o) in armed.tiers.iter().zip(&off.tiers) {
+                    if (a.phase1_status, a.phase1_placed, a.phase1_bound)
+                        != (o.phase1_status, o.phase1_placed, o.phase1_bound)
+                        || (a.phase2_status, a.phase2_metric, a.phase2_bound)
+                            != (o.phase2_status, o.phase2_metric, o.phase2_bound)
+                    {
+                        return Err(format!(
+                            "tier certificate drifted at {threads} threads (tier {})",
+                            a.priority
+                        ));
+                    }
+                }
+                profiles.push(prof.export_profile_json());
+            }
+            if profiles[0] != profiles[1] {
+                return Err("profile differs across thread counts".into());
             }
             Ok(())
         },

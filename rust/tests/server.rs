@@ -175,6 +175,7 @@ fn every_op() -> Vec<WireOp> {
         WireOp::Explain {
             pod: "web-0".to_string(),
         },
+        WireOp::Profile,
         WireOp::Shutdown,
     ]
 }
